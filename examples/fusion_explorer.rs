@@ -1,0 +1,73 @@
+//! Fusion explorer: sweep sequence lengths and models, mapping how the
+//! best fusion strategy shifts between decode-dominated and
+//! prefill-dominated regimes (the crossover structure behind paper
+//! Figure 12), and run the taxonomy over Mamba-2 and a Transformer to
+//! show the framework is workload-generic (Table II's "TA+").
+//!
+//! Run: `cargo run --release --example fusion_explorer`
+
+use mambalaya::arch::ArchSpec;
+use mambalaya::cascade::{mamba1, mamba2, transformer, ModelConfig};
+use mambalaya::fusion::{stitch, FusionVariant};
+use mambalaya::model::{evaluate, ExecOptions};
+
+fn main() {
+    let arch = ArchSpec::mambalaya();
+    let opts = ExecOptions::default();
+
+    println!("== best variant vs sequence length (mamba-370m, batch 16) ==");
+    println!("{:<10} {:>12} {:>14} {:>10}", "seq", "unfused(ms)", "best", "speedup");
+    for exp in [0u32, 2, 4, 6, 8, 10, 12, 14] {
+        let seq = 1u64 << exp;
+        let c = mamba1::build(&ModelConfig::mamba_370m(), seq, 16);
+        let base = evaluate(&c, &stitch(&c, FusionVariant::Unfused), &arch, &opts);
+        let (best_v, best) = FusionVariant::fused()
+            .into_iter()
+            .map(|v| (v, evaluate(&c, &stitch(&c, v), &arch, &opts)))
+            .min_by_key(|(_, c)| c.latency)
+            .unwrap();
+        println!(
+            "{:<10} {:>12.3} {:>14} {:>9.2}x",
+            seq,
+            base.latency_secs(&arch) * 1e3,
+            best_v.name(),
+            base.latency as f64 / best.latency as f64
+        );
+    }
+
+    println!("\n== taxonomy generality: group counts per workload ==");
+    for (name, cascade) in [
+        ("mamba1/370m", mamba1::build(&ModelConfig::mamba_370m(), 1024, 1)),
+        ("mamba2/370m", mamba2::build(&ModelConfig::mamba_370m(), 1024, 1)),
+        ("mamba1/2.8b", mamba1::build(&ModelConfig::mamba_2_8b(), 1024, 1)),
+        (
+            "transformer",
+            transformer::build(&transformer::TransformerConfig::medium(1024)),
+        ),
+    ] {
+        print!("{name:<14}");
+        for v in FusionVariant::all() {
+            print!(" {}={:<3}", v.name(), stitch(&cascade, v).groups.len());
+        }
+        println!();
+    }
+
+    println!("\n== model-size scaling (fully-fused speedup over unfused, prefill 16384) ==");
+    for cfg in [
+        ModelConfig::mamba_130m(),
+        ModelConfig::mamba_370m(),
+        ModelConfig::mamba_1_4b(),
+        ModelConfig::mamba_2_8b(),
+    ] {
+        let c = mamba1::build(&cfg, 16384, 1);
+        let base = evaluate(&c, &stitch(&c, FusionVariant::Unfused), &arch, &opts);
+        let ff = evaluate(&c, &stitch(&c, FusionVariant::FullyFused), &arch, &opts);
+        println!(
+            "{:<12} {:>5.2}x  (layer: {:.3} ms -> {:.3} ms)",
+            cfg.name,
+            base.latency as f64 / ff.latency as f64,
+            base.latency_secs(&arch) * 1e3,
+            ff.latency_secs(&arch) * 1e3
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Builds the paper's Mamba-1 cascade, classifies a fusion pair, runs
+//! greedy stitching for every variant, and evaluates the layer on the
+//! Mambalaya architecture model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mambalaya::arch::ArchSpec;
+use mambalaya::cascade::{mamba1, ModelConfig};
+use mambalaya::fusion::{classify_pair, stitch, FusionVariant};
+use mambalaya::model::{evaluate, ExecOptions};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build the 24-Einsum Mamba-1 cascade (paper Figure 1) for
+    //    mamba-370m at a 4096-token prefill.
+    let cfg = ModelConfig::mamba_370m();
+    let cascade = mamba1::build(&cfg, 4096, 1);
+    cascade.validate()?;
+    println!(
+        "cascade: {} einsums, {} GEMM-like, {} intermediates\n",
+        cascade.len(),
+        cascade.gemm_count(),
+        cascade.intermediate_tensors().len()
+    );
+
+    // 2. Classify one producer→consumer pair (paper §III-C).
+    let up = cascade.by_id(21).unwrap(); // S  = Σ_n C·H
+    let down = cascade.by_id(22).unwrap(); // SD = S + D⊙LEX
+    let pair = classify_pair(up, down).unwrap();
+    println!(
+        "pair #21→#22 via {}: class {} (stationary {})\n",
+        pair.intermediate, pair.class, pair.stationary
+    );
+
+    // 3. Greedy stitching (paper Algorithm 1) under each variant.
+    for v in FusionVariant::all() {
+        let plan = stitch(&cascade, v);
+        println!("{:<12} → {:>2} fusion groups", v.name(), plan.groups.len());
+    }
+    println!("(paper Figure 9: 24 → 12 → 8 → 3 → 1)\n");
+
+    // 4. Evaluate on the Mambalaya architecture (paper Table III).
+    let arch = ArchSpec::mambalaya();
+    let opts = ExecOptions::default();
+    let base = evaluate(&cascade, &stitch(&cascade, FusionVariant::Unfused), &arch, &opts);
+    for v in FusionVariant::fused() {
+        let cost = evaluate(&cascade, &stitch(&cascade, v), &arch, &opts);
+        println!(
+            "{:<12} layer latency {:>8.3} ms  speedup {:>5.2}×  DRAM {:>6} MiB",
+            v.name(),
+            cost.latency_secs(&arch) * 1e3,
+            base.latency as f64 / cost.latency as f64,
+            cost.traffic.total() >> 20
+        );
+    }
+    Ok(())
+}

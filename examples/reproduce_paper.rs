@@ -1,0 +1,48 @@
+//! Reproduce every table and figure of the paper's evaluation in one
+//! run, writing CSVs to `results/` and a summary to stdout.
+//!
+//! Run: `cargo run --release --example reproduce_paper [-- --model 370m --out-dir results]`
+//!
+//! The paper-vs-measured record derived from this output lives in
+//! EXPERIMENTS.md.
+
+use std::io::Write as _;
+
+use mambalaya::cascade::ModelConfig;
+use mambalaya::report;
+use mambalaya::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = ModelConfig::by_name(args.get_or("model", "370m"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let out_dir = args.get_or("out-dir", "results").to_string();
+    let seq = args.get_u64("seq", 16384);
+    let batch = args.get_u64("batch", 64);
+    std::fs::create_dir_all(&out_dir)?;
+
+    let experiments: Vec<(&str, Box<dyn Fn() -> (String, String)>)> = vec![
+        ("table1", Box::new(|| report::table1_report(&cfg, seq, batch))),
+        ("table2", Box::new(report::table2_report)),
+        ("table3", Box::new(report::table3_report)),
+        ("fig2", Box::new(|| report::fig2_report(&cfg, seq, batch))),
+        ("fig9", Box::new(|| report::fig9_report(&cfg, seq))),
+        ("fig10", Box::new(|| report::fig10_report(&cfg, seq, batch))),
+        ("fig12", Box::new(|| report::fig12_report(&cfg))),
+        ("fig13", Box::new(|| report::fig13_report(&cfg))),
+        ("fig14", Box::new(|| report::fig14_report(&cfg, seq, batch))),
+        ("fig15", Box::new(|| report::fig15_report(&cfg, seq, batch))),
+    ];
+
+    for (name, run) in experiments {
+        let t0 = std::time::Instant::now();
+        let (text, csv) = run();
+        println!("{text}");
+        let path = format!("{out_dir}/{name}.csv");
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(csv.as_bytes())?;
+        println!("  → {path} ({:.2}s)\n{}", t0.elapsed().as_secs_f64(), "=".repeat(78));
+    }
+    println!("all experiments regenerated into {out_dir}/");
+    Ok(())
+}

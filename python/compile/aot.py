@@ -1,0 +1,146 @@
+"""AOT entry point: lower the L2 model to HLO *text* artifacts for the
+Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted into ``artifacts/``:
+  mamba_tiny_prefill_b{B}.hlo.txt   B in {1,2,4}, L fixed
+  mamba_tiny_decode_b{B}.hlo.txt    B in {1,2,4,8}
+  scan_kernel.hlo.txt               standalone fused-scan kernel
+  manifest.json                     shapes/dims for the Rust side
+  golden.json                       input/output exemplars for the Rust
+                                    runtime integration test
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` from python/
+(the Makefile does this).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.selective_scan import selective_scan
+from .model import MambaConfig, decode_step, init_params, prefill
+
+PREFILL_BATCHES = (1, 2, 4)
+DECODE_BATCHES = (1, 2, 4, 8)
+PREFILL_LEN = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer elides big
+    # literals as ``constant({...})``, which would silently zero the
+    # model weights after the text round-trip into the Rust runtime.
+    return comp.as_hlo_text(True)
+
+
+def lower_prefill(params, cfg, batch):
+    fn = lambda tokens: prefill(params, cfg, tokens)
+    spec = jax.ShapeDtypeStruct((batch, PREFILL_LEN), jnp.int32)
+    return jax.jit(fn).lower(spec)
+
+
+def lower_decode(params, cfg, batch):
+    fn = lambda token, conv, ssm: decode_step(params, token, conv, ssm)
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    conv = jax.ShapeDtypeStruct(
+        (cfg.n_layer, batch, cfg.d_inner, cfg.d_conv - 1), jnp.float32)
+    ssm = jax.ShapeDtypeStruct(
+        (cfg.n_layer, batch, cfg.d_inner, cfg.d_state), jnp.float32)
+    return jax.jit(fn).lower(tok, conv, ssm)
+
+
+def lower_scan_kernel(cfg, L=64):
+    """Standalone fused-scan artifact (kernel-level Rust benching)."""
+    D, N = cfg.d_inner, cfg.d_state
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    fn = lambda u, dt, A, B, C, Dw, z: selective_scan(u, dt, A, B, C, Dw, z)
+    return jax.jit(fn).lower(f32(L, D), f32(L, D), f32(D, N), f32(L, N),
+                             f32(L, N), f32(D), f32(L, D))
+
+
+def golden_vectors(params, cfg):
+    """Exemplar I/O for the Rust runtime integration test."""
+    rng = np.random.default_rng(1234)
+    tokens = rng.integers(0, cfg.vocab, size=(2, PREFILL_LEN),
+                          dtype=np.int32)
+    logits, conv, ssm = prefill(params, cfg, jnp.asarray(tokens))
+    tok2 = rng.integers(0, cfg.vocab, size=(2,), dtype=np.int32)
+    logits2, conv2, ssm2 = decode_step(params, jnp.asarray(tok2), conv, ssm)
+    return {
+        "prefill_tokens": tokens.flatten().tolist(),
+        "prefill_logits_sample": np.asarray(logits)[:, :8].flatten().tolist(),
+        "prefill_logits_argmax": np.asarray(logits).argmax(-1).tolist(),
+        "decode_token": tok2.tolist(),
+        "decode_logits_sample": np.asarray(logits2)[:, :8].flatten().tolist(),
+        "decode_logits_argmax": np.asarray(logits2).argmax(-1).tolist(),
+        "ssm_state_sum": float(np.asarray(ssm2).sum()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = MambaConfig()
+    params = init_params(cfg, args.seed)
+
+    written = {}
+    for b in PREFILL_BATCHES:
+        path = os.path.join(args.out_dir, f"mamba_tiny_prefill_b{b}.hlo.txt")
+        text = to_hlo_text(lower_prefill(params, cfg, b))
+        open(path, "w").write(text)
+        written[f"prefill_b{b}"] = os.path.basename(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    for b in DECODE_BATCHES:
+        path = os.path.join(args.out_dir, f"mamba_tiny_decode_b{b}.hlo.txt")
+        text = to_hlo_text(lower_decode(params, cfg, b))
+        open(path, "w").write(text)
+        written[f"decode_b{b}"] = os.path.basename(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    path = os.path.join(args.out_dir, "scan_kernel.hlo.txt")
+    text = to_hlo_text(lower_scan_kernel(cfg))
+    open(path, "w").write(text)
+    written["scan_kernel"] = os.path.basename(path)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "model": "mamba-tiny",
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "d_inner": cfg.d_inner,
+        "d_state": cfg.d_state,
+        "d_conv": cfg.d_conv,
+        "n_layer": cfg.n_layer,
+        "prefill_len": PREFILL_LEN,
+        "prefill_batches": list(PREFILL_BATCHES),
+        "decode_batches": list(DECODE_BATCHES),
+        "scan_kernel_len": 64,
+        "seed": args.seed,
+        "artifacts": written,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden_vectors(params, cfg), f, indent=2)
+    print("wrote manifest.json, golden.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""L1: the paper's compute hot-spot as a Pallas kernel.
+
+The *fully-fused SSM region* (paper Einsums 16-23) in one kernel:
+discretization (exp), the recurrent state update, the N-reduction
+readout, the skip connection and the SiLU gate all happen per sequence
+step with the hidden state resident in VMEM scratch - the paper's
+"minimum intermediate tensor footprint" discipline realized on a
+TPU-style memory hierarchy (DESIGN.md section "Hardware adaptation").
+
+TPU adaptation notes
+--------------------
+* The GPU implementations the paper compares against tile the scan over
+  threadblocks with the state in shared memory; here the analogue is a
+  grid over ``D`` blocks with the ``(block_d, N)`` state tile in a VMEM
+  scratch ref, sequential over ``L`` inside the kernel.
+* The scan itself is VPU-shaped (elementwise/broadcast over N=16); the
+  MXU only sees the surrounding projections, which stay in plain-XLA
+  land (python/compile/model.py).
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+  Mosaic custom-calls; numerics are validated through the interpreter
+  and the same HLO runs from Rust.
+
+VMEM budget per program instance (fp32):
+  state tile  block_d*N
+  + streams   L*(3*block_d + 2*N) read tiles
+which for the AOT'd tiny model (block_d=64, N=16, L<=64) is ~64 KiB,
+far under the ~16 MiB/core VMEM of a real TPU; on larger models the
+same BlockSpec scales block_d down (see DESIGN.md "Perf").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, dw_ref, z_ref, h0_ref,
+                 y_ref, hout_ref):
+    """One grid step: full L scan for one block of D channels. The state
+    tile lives in the fori_loop carry (registers/VMEM under Mosaic; a
+    numpy temporary under the interpreter)."""
+    L = u_ref.shape[0]
+    a = a_ref[...]                        # [block_d, N]
+    dw = dw_ref[...]                      # [block_d]
+
+    def body(l, h):
+        u_l = u_ref[l, :]                 # [block_d]
+        dt_l = dt_ref[l, :]               # [block_d]
+        b_l = b_ref[l, :]                 # [N]
+        c_l = c_ref[l, :]                 # [N]
+        z_l = z_ref[l, :]                 # [block_d]
+        abar = jnp.exp(dt_l[:, None] * a)                     # 16
+        bx = (dt_l * u_l)[:, None] * b_l[None, :]             # 17-18
+        h = abar * h + bx                                     # 19-20
+        s = jnp.sum(h * c_l[None, :], axis=1)                 # 21
+        sd = s + dw * u_l                                     # 22
+        y_ref[l, :] = sd * (z_l * jax.nn.sigmoid(z_l))        # 23
+        return h
+
+    hout_ref[...] = jax.lax.fori_loop(0, L, body, h0_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def selective_scan(u, delta, A, B, C, D, z, h0=None, *, block_d=None):
+    """Fused selective scan via Pallas (interpret mode).
+
+    Shapes as in :func:`..kernels.ref.selective_scan_ref`; returns
+    ``(y [L, D], h_last [D, N])``.
+    """
+    u, delta, B, C, z = (x.astype(jnp.float32) for x in (u, delta, B, C, z))
+    A = A.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    L, d_inner = u.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((d_inner, n), jnp.float32)
+    if block_d is None:
+        block_d = min(d_inner, 128)
+    assert d_inner % block_d == 0, (d_inner, block_d)
+    grid = (d_inner // block_d,)
+
+    y, h_last = pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, block_d), lambda i: (0, i)),   # u
+            pl.BlockSpec((L, block_d), lambda i: (0, i)),   # delta
+            pl.BlockSpec((block_d, n), lambda i: (i, 0)),   # A
+            pl.BlockSpec((L, n), lambda i: (0, 0)),         # B
+            pl.BlockSpec((L, n), lambda i: (0, 0)),         # C
+            pl.BlockSpec((block_d,), lambda i: (i,)),       # D skip
+            pl.BlockSpec((L, block_d), lambda i: (0, i)),   # z
+            pl.BlockSpec((block_d, n), lambda i: (i, 0)),   # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((L, block_d), lambda i: (0, i)),   # y
+            pl.BlockSpec((block_d, n), lambda i: (i, 0)),   # h_last
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, d_inner), jnp.float32),
+            jax.ShapeDtypeStruct((d_inner, n), jnp.float32),
+        ],
+        interpret=True,
+    )(u, delta, A, B, C, D, z, h0)
+    return y, h_last
+
+
+def selective_scan_batched(u, delta, A, B, C, D, z, h0=None, *, block_d=None):
+    """vmap over a leading batch dimension."""
+    if h0 is None:
+        h0 = jnp.zeros((u.shape[0], u.shape[2], A.shape[1]), jnp.float32)
+    fn = lambda u_, dt_, b_, c_, z_, h_: selective_scan(
+        u_, dt_, A, b_, c_, D, z_, h_, block_d=block_d)
+    return jax.vmap(fn)(u, delta, B, C, z, h0)
+
+
+def vmem_report(L, d_inner, n, block_d):
+    """Estimated VMEM footprint (bytes, fp32) per program instance -
+    used by DESIGN.md/EXPERIMENTS.md perf accounting."""
+    state = block_d * n * 4
+    streams = L * (3 * block_d + 2 * n) * 4 + block_d * n * 4 + block_d * 4
+    out = L * block_d * 4 + block_d * n * 4
+    return {"state": state, "streams": streams, "out": out,
+            "total": state + streams + out}

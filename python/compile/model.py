@@ -1,0 +1,162 @@
+"""L2: the Mamba model in JAX (build-time only; never on the request
+path).
+
+The block follows the paper's Figure 1 cascade exactly (module comments
+carry the Einsum numbers); the SSM hot-spot (Einsums 16-23) is the
+Pallas kernel from ``kernels.selective_scan``, so it lowers into the
+same HLO as the surrounding projections and ships to Rust as one
+artifact.
+
+Two entry points are AOT-lowered per batch size (see ``aot.py``):
+
+* ``prefill(params, tokens[B, L])`` ->
+      (logits[B, V], conv_state[layers, B, D, J-1], ssm_state[layers, B, D, N])
+* ``decode_step(params, token[B], conv_state, ssm_state)`` ->
+      (logits[B, V], conv_state', ssm_state')
+
+The recurrent states are explicit inputs/outputs - they are the "H-state
+cache" the Rust coordinator manages per sequence (Mamba's analogue of a
+KV cache).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.selective_scan import selective_scan_batched
+from .kernels.ref import silu
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Model dimensions (mirrors rust/src/cascade/config.rs)."""
+    vocab: int = 256
+    d_model: int = 64     # E
+    n_layer: int = 2
+    d_state: int = 16     # N
+    d_conv: int = 4       # J
+    expand: int = 2
+
+    @property
+    def d_inner(self):    # D
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self):    # R
+        return max(1, self.d_model // 16)
+
+
+def init_params(cfg: MambaConfig, seed: int = 0):
+    """Deterministic synthetic weights (the modeling study needs shapes,
+    not trained weights; serving correctness is vs the jnp oracle)."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 64))
+    k = lambda: next(keys)
+    E, D, N, R, J = (cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank,
+                     cfg.d_conv)
+    init = lambda shape, scale: (jax.random.normal(k(), shape, jnp.float32)
+                                 * scale)
+    layers = []
+    for _ in range(cfg.n_layer):
+        layers.append({
+            "norm_g": jnp.ones((E,), jnp.float32),
+            "w_in_x": init((E, D), E ** -0.5),          # Einsum 7 (TX)
+            "w_in_z": init((E, D), E ** -0.5),          # Einsum 8 (RX)
+            "w_conv": init((D, J), 0.3),                # Einsum 9
+            "b_conv": jnp.zeros((D,), jnp.float32),
+            "w_xb": init((D, N), D ** -0.5),            # Einsum 11
+            "w_xc": init((D, N), D ** -0.5),            # Einsum 12
+            "w_xdt": init((D, R), D ** -0.5),           # Einsum 13
+            "w_dt": init((R, D), R ** -0.5),            # Einsum 14
+            "b_dt": jnp.full((D,), -2.0, jnp.float32),  # softplus ~ 0.12
+            "a_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                      (D, 1))),         # Einsum 16 (A)
+            "d_skip": jnp.ones((D,), jnp.float32),      # Einsum 22
+            "w_out": init((D, E), D ** -0.5),           # Einsum 24
+        })
+    return {
+        "embed": init((cfg.vocab, E), 0.02),
+        "norm_f": jnp.ones((E,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def rmsnorm(x, g, eps=1e-5):
+    """Einsums 2-6: SQ, NUM, ISR, NEX, GX."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)   # 2-3
+    return x * jax.lax.rsqrt(var + eps) * g                 # 4-6
+
+
+def causal_conv(x, w, b, state=None):
+    """Einsum 9 (TTX): depthwise causal conv along L.
+
+    x: [B, L, D]; w: [D, J]; state: [B, D, J-1] trailing context.
+    Returns (y [B, L, D], new_state [B, D, J-1]).
+    """
+    B, L, D = x.shape
+    J = w.shape[1]
+    if state is None:
+        state = jnp.zeros((B, D, J - 1), x.dtype)
+    # Prepend the carried context, slide the window.
+    ext = jnp.concatenate([jnp.swapaxes(state, 1, 2), x], axis=1)  # [B, L+J-1, D]
+    y = jnp.zeros((B, L, D), x.dtype)
+    for j in range(J):
+        y = y + ext[:, j:j + L, :] * w[None, None, :, j]
+    new_state = jnp.swapaxes(ext[:, L:, :], 1, 2)  # last J-1 inputs
+    return y + b[None, None, :], new_state
+
+
+def block(params, x, conv_state, ssm_state):
+    """One Mamba block over [B, L, E]. Returns (y, conv_state', h')."""
+    B, L, E = x.shape
+    gx = rmsnorm(x, params["norm_g"])                        # 1-6
+    tx = gx @ params["w_in_x"]                               # 7
+    rx = gx @ params["w_in_z"]                               # 8
+    ttx, conv_state = causal_conv(tx, params["w_conv"],
+                                  params["b_conv"], conv_state)  # 9
+    lex = silu(ttx)                                          # 10
+    xb = lex @ params["w_xb"]                                # 11
+    xc = lex @ params["w_xc"]                                # 12
+    ttd = lex @ params["w_xdt"]                              # 13
+    dt = ttd @ params["w_dt"] + params["b_dt"]               # 14
+    dl = jax.nn.softplus(dt)                                 # 15
+    a = -jnp.exp(params["a_log"])                            # A (negative)
+    # Einsums 16-23, fused (Pallas kernel):
+    y, h_last = selective_scan_batched(
+        lex, dl, a, xb, xc, params["d_skip"], rx, ssm_state)
+    out = y @ params["w_out"]                                # 24
+    return x + out, conv_state, h_last
+
+
+def forward(params, tokens, conv_states, ssm_states):
+    """Full stack over [B, L] tokens. Returns (last-position logits,
+    conv_states', ssm_states')."""
+    x = params["embed"][tokens]                              # [B, L, E]
+    new_conv, new_ssm = [], []
+    for li, lp in enumerate(params["layers"]):
+        x, cs, hs = block(lp, x, conv_states[li], ssm_states[li])
+        new_conv.append(cs)
+        new_ssm.append(hs)
+    x = rmsnorm(x, params["norm_f"])
+    logits = x[:, -1, :] @ params["embed"].T                 # tied head
+    return logits, jnp.stack(new_conv), jnp.stack(new_ssm)
+
+
+def zero_states(cfg: MambaConfig, batch: int):
+    conv = jnp.zeros((cfg.n_layer, batch, cfg.d_inner, cfg.d_conv - 1),
+                     jnp.float32)
+    ssm = jnp.zeros((cfg.n_layer, batch, cfg.d_inner, cfg.d_state),
+                    jnp.float32)
+    return conv, ssm
+
+
+def prefill(params, cfg: MambaConfig, tokens):
+    """Prefill from empty state. tokens: [B, L] int32."""
+    conv, ssm = zero_states(cfg, tokens.shape[0])
+    return forward(params, tokens, conv, ssm)
+
+
+def decode_step(params, token, conv_states, ssm_states):
+    """One generation step. token: [B] int32."""
+    return forward(params, token[:, None], conv_states, ssm_states)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest runs from python/ or the repo
+# root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,156 @@
+"""L1 correctness: the Pallas fused-scan kernel vs the pure-jnp oracle.
+
+This is the core numeric signal of the three-layer stack: the kernel
+that ships (inside the AOT'd HLO) must match the reference cascade
+bit-for-tolerance across shapes, dtypes, and state handoffs.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import selective_scan_ref, selective_scan_ref_batched
+from compile.kernels.selective_scan import (
+    selective_scan,
+    selective_scan_batched,
+    vmem_report,
+)
+
+RTOL = ATOL = 3e-5
+
+
+def make_inputs(rng, L, D, N, dtype=np.float32):
+    u, dt, z = (rng.standard_normal((L, D)).astype(dtype) for _ in range(3))
+    A = -np.abs(rng.standard_normal((D, N))).astype(dtype)
+    B, C = (rng.standard_normal((L, N)).astype(dtype) for _ in range(2))
+    Dw = rng.standard_normal(D).astype(dtype)
+    dt = np.log1p(np.exp(dt))  # positive timesteps
+    return u, dt, A, B, C, Dw, z
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    args = make_inputs(rng, 32, 64, 16)
+    y1, h1 = selective_scan(*args)
+    y2, h2 = selective_scan_ref(*args)
+    np.testing.assert_allclose(y1, y2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(h1, h2, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    L=st.integers(1, 48),
+    log_d=st.integers(2, 7),
+    log_n=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_shape_sweep(L, log_d, log_n, seed):
+    """Hypothesis sweep over (L, D, N): the kernel must agree with the
+    oracle for any power-of-two D (BlockSpec divisibility) and any N."""
+    D, N = 2 ** log_d, 2 ** log_n
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, L, D, N)
+    block = min(D, 32)
+    y1, h1 = selective_scan(*args, block_d=block)
+    y2, h2 = selective_scan_ref(*args)
+    np.testing.assert_allclose(y1, y2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(h1, h2, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), block_pow=st.integers(0, 6))
+def test_block_size_invariance(seed, block_pow):
+    """The D-tiling (BlockSpec) must not change the numerics."""
+    rng = np.random.default_rng(seed)
+    D = 64
+    args = make_inputs(rng, 16, D, 8)
+    block = 2 ** block_pow
+    y1, h1 = selective_scan(*args, block_d=block)
+    y2, h2 = selective_scan(*args, block_d=D)
+    np.testing.assert_allclose(y1, y2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(h1, h2, rtol=RTOL, atol=ATOL)
+
+
+def test_dtype_inputs_f16_upcast():
+    """fp16 inputs upcast to an fp32 datapath (paper: fp16 data, fp32
+    accumulate)."""
+    rng = np.random.default_rng(3)
+    args = make_inputs(rng, 8, 16, 4, dtype=np.float16)
+    y1, h1 = selective_scan(*args)
+    y2, h2 = selective_scan_ref(*args)
+    assert y1.dtype == jnp.float32
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(h1, h2, rtol=1e-3, atol=1e-3)
+
+
+def test_state_handoff_equals_full_scan():
+    """Splitting a sequence and carrying h0 must equal one long scan -
+    the invariant the serving coordinator relies on (prefill -> decode)."""
+    rng = np.random.default_rng(7)
+    L, D, N = 24, 32, 8
+    u, dt, A, B, C, Dw, z = make_inputs(rng, L, D, N)
+    y_full, h_full = selective_scan(u, dt, A, B, C, Dw, z)
+    cut = 13
+    y1, h1 = selective_scan(u[:cut], dt[:cut], A, B[:cut], C[:cut], Dw, z[:cut])
+    y2, h2 = selective_scan(u[cut:], dt[cut:], A, B[cut:], C[cut:], Dw,
+                            z[cut:], h0=h1)
+    np.testing.assert_allclose(np.concatenate([y1, y2]), y_full,
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(h2, h_full, rtol=RTOL, atol=ATOL)
+
+
+def test_batched_matches_loop():
+    rng = np.random.default_rng(11)
+    Bsz, L, D, N = 3, 12, 32, 8
+    u, dt, z = (rng.standard_normal((Bsz, L, D)).astype(np.float32)
+                for _ in range(3))
+    A = -np.abs(rng.standard_normal((D, N))).astype(np.float32)
+    Bm, Cm = (rng.standard_normal((Bsz, L, N)).astype(np.float32)
+              for _ in range(2))
+    Dw = rng.standard_normal(D).astype(np.float32)
+    dt = np.log1p(np.exp(dt))
+    yb, hb = selective_scan_batched(u, dt, A, Bm, Cm, Dw, z)
+    yr, hr = selective_scan_ref_batched(u, dt, A, Bm, Cm, Dw, z)
+    np.testing.assert_allclose(yb, yr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(hb, hr, rtol=RTOL, atol=ATOL)
+
+
+def test_zero_delta_keeps_state():
+    """Delta=0 => Abar=1, Bbar=0: the state passes through unchanged - a
+    discretization sanity check."""
+    rng = np.random.default_rng(5)
+    L, D, N = 4, 8, 4
+    u, _, A, B, C, Dw, z = make_inputs(rng, L, D, N)
+    dt = np.zeros((L, D), np.float32)
+    h0 = rng.standard_normal((D, N)).astype(np.float32)
+    y, h = selective_scan(u, dt, A, B, C, Dw, z, h0=h0)
+    np.testing.assert_allclose(h, h0, rtol=RTOL, atol=ATOL)
+
+
+def test_vmem_report_scales():
+    small = vmem_report(32, 128, 16, 32)
+    big = vmem_report(32, 128, 16, 128)
+    assert big["state"] == 4 * small["state"]
+    assert big["total"] < (16 << 20), "must fit one TPU core's VMEM"
+
+
+def test_unit_length_sequence():
+    """L=1 (a decode step) is the degenerate scan."""
+    rng = np.random.default_rng(9)
+    args = make_inputs(rng, 1, 16, 8)
+    y1, h1 = selective_scan(*args)
+    y2, h2 = selective_scan_ref(*args)
+    np.testing.assert_allclose(y1, y2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(h1, h2, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("L,D,N", [(8, 16, 4), (16, 64, 16), (5, 32, 2)])
+def test_parametrized_shapes(L, D, N):
+    rng = np.random.default_rng(L * 100 + D + N)
+    args = make_inputs(rng, L, D, N)
+    block = min(D, 16)
+    y1, h1 = selective_scan(*args, block_d=block)
+    y2, h2 = selective_scan_ref(*args)
+    np.testing.assert_allclose(y1, y2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(h1, h2, rtol=RTOL, atol=ATOL)

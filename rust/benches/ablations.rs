@@ -1,0 +1,101 @@
+//! `cargo bench` target: ablation studies over the design choices
+//! DESIGN.md calls out — the trade-off spaces the paper's §III-B
+//! describes but does not plot:
+//!
+//! 1. buffer-capacity sweep through the mapper: "on-chip inter-Einsum
+//!    storage reduces the available space for intra-Einsum storage";
+//! 2. PE-array capacity sweep: where Mamba stops being compute-bound;
+//! 3. state-size (N) sweep: how the SSM intermediates scale the fusion
+//!    win;
+//! 4. shared-input merging on/off: what the §IV pre-transform buys;
+//! 5. per-tensor traffic attribution per variant (Figure 14 drill-down).
+
+use mambalaya::arch::ArchSpec;
+use mambalaya::cascade::{mamba1, ModelConfig};
+use mambalaya::fusion::{stitch, FusionVariant};
+use mambalaya::model::{evaluate, map_search, ExecOptions, MapperOptions};
+use mambalaya::traffic::breakdown;
+
+fn main() {
+    let cfg = ModelConfig::mamba_370m();
+    let arch = ArchSpec::mambalaya();
+    let opts = ExecOptions::default();
+
+    // 1. Buffer sweep: per-Einsum mapper traffic for the in-proj GEMM
+    //    (#7) and the SSM readout (#21) as the buffer shrinks.
+    println!("== ablation 1: mapper traffic vs buffer budget (I=4096) ==");
+    let c = mamba1::build(&cfg, 4096, 1);
+    for id in [7usize, 21] {
+        let e = c.by_id(id).unwrap();
+        print!("einsum #{id:<2} ({}):", e.name);
+        for shift in [25u32, 23, 21, 19, 17] {
+            let budget = 1u64 << shift;
+            match map_search(e, &MapperOptions { buffer_budget: budget, ..Default::default() })
+            {
+                Some(m) => print!(
+                    "  {}MiB→{:.2}×",
+                    budget >> 20,
+                    m.dram_bytes as f64
+                        / mambalaya::model::unfused_traffic(&c, e).total() as f64
+                ),
+                None => print!("  {}MiB→∞", budget >> 20),
+            }
+        }
+        println!();
+    }
+
+    // 2. PE sweep: fully-fused prefill latency as the 2D array scales.
+    println!("\n== ablation 2: fully-fused prefill latency vs 2D-array size ==");
+    let c = mamba1::build(&cfg, 16384, 64);
+    let plan = stitch(&c, FusionVariant::FullyFused);
+    for dim in [64u64, 128, 256, 512] {
+        let mut a = arch.clone();
+        a.pe_2d_rows = dim;
+        a.pe_2d_cols = dim;
+        let cost = evaluate(&c, &plan, &a, &opts);
+        println!(
+            "  {dim:>3}×{dim:<3} → {:>9.3} ms  (OI {:.0}, balance {:.0})",
+            cost.latency_secs(&a) * 1e3,
+            cost.intensity(),
+            a.machine_balance()
+        );
+    }
+
+    // 3. N sweep: the fusion win vs the SSM state size.
+    println!("\n== ablation 3: unfused→fully-fused speedup vs d_state N ==");
+    for n in [8u64, 16, 32, 64, 128] {
+        let mut cfg_n = cfg.clone();
+        cfg_n.d_state = n;
+        let c = mamba1::build(&cfg_n, 4096, 16);
+        let base = evaluate(&c, &stitch(&c, FusionVariant::Unfused), &arch, &opts);
+        let ff = evaluate(&c, &stitch(&c, FusionVariant::FullyFused), &arch, &opts);
+        println!("  N={n:<4} speedup {:.2}×", base.latency as f64 / ff.latency as f64);
+    }
+
+    // 4. Shared-input merging ablation: group counts with the merge
+    //    pre-transform disabled (stitch the raw cascade per-Einsum).
+    println!("\n== ablation 4: shared-input merging (paper §IV pre-transform) ==");
+    {
+        use mambalaya::fusion::merge::{find_shared_input_merges, to_units};
+        let c = mamba1::build(&cfg, 1024, 1);
+        let merges = find_shared_input_merges(&c);
+        let merged_units = to_units(&c, &merges).len();
+        let unmerged_units = to_units(&c, &[]).len();
+        println!(
+            "  stitching units: {merged_units} (merged) vs {unmerged_units} (unmerged); merge sets: {merges:?}"
+        );
+        for v in [FusionVariant::RIOnly, FusionVariant::RIRSbRSp] {
+            let with = stitch(&c, v).groups.len();
+            println!("  {v}: {with} groups with merging");
+        }
+    }
+
+    // 5. Per-tensor traffic attribution (Figure 14 drill-down).
+    println!("\n== ablation 5: hottest tensors per variant (I=4096, top 6) ==");
+    let c = mamba1::build(&cfg, 4096, 1);
+    for v in [FusionVariant::Unfused, FusionVariant::RIOnly, FusionVariant::FullyFused] {
+        let bd = breakdown(&c, &stitch(&c, v));
+        println!("--- {v} (total {} MiB)", bd.total() >> 20);
+        print!("{}", bd.report(6));
+    }
+}

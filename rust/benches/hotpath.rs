@@ -1,0 +1,100 @@
+//! `cargo bench` target: microbenchmarks of the library's hot paths —
+//! the inputs to the §Perf optimization pass (EXPERIMENTS.md §Perf).
+//!
+//! * cascade construction + validation
+//! * pairwise classification over all pairs
+//! * greedy stitching (all variants)
+//! * analytical evaluation (the DSE inner loop)
+//! * pass analysis
+//! * coordinator: state gather/scatter, mock decode step, full serve
+//! * util: JSON parse (manifest-sized doc)
+
+use std::time::Duration;
+
+use mambalaya::arch::ArchSpec;
+use mambalaya::bench_util::{bench_config, black_box, BenchResult};
+use mambalaya::cascade::{mamba1, ModelConfig};
+use mambalaya::coordinator::{serve_all, BatchPolicy, StateManager, WorkloadGen};
+use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
+use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
+use mambalaya::runtime::{Executor, MockEngine};
+use mambalaya::util::JsonValue;
+
+fn b<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_config(name, 3, 20, Duration::from_millis(200), &mut f)
+}
+
+fn main() {
+    let cfg = ModelConfig::mamba_2_8b();
+    let arch = ArchSpec::mambalaya();
+    let c = mamba1::build(&cfg, 16384, 64);
+    let plans: Vec<_> =
+        FusionVariant::all().iter().map(|&v| stitch(&c, v)).collect();
+    let opts = ExecOptions::default();
+
+    let mut results = Vec::new();
+    results.push(b("cascade: build+validate mamba1/2.8b", || {
+        let c = mamba1::build(&cfg, 16384, 64);
+        black_box(c.validate().unwrap());
+    }));
+    results.push(b("fusion: classify all pairs", || {
+        black_box(classify_cascade(&c));
+    }));
+    for v in FusionVariant::all() {
+        results.push(b(&format!("fusion: stitch {}", v.name()), || {
+            black_box(stitch(&c, v));
+        }));
+    }
+    results.push(b("model: evaluate all 5 variants (DSE step)", || {
+        for p in &plans {
+            black_box(evaluate(&c, p, &arch, &opts));
+        }
+    }));
+    results.push(b("model: pass analysis (full scope)", || {
+        black_box(analyze_scope(&c, &(1..=24).collect::<Vec<_>>()));
+    }));
+
+    // Coordinator hot paths (mock engine → measures coordination
+    // overhead, not model math).
+    let mock = MockEngine::new();
+    let m = mock.manifest().clone();
+    let mut sm = StateManager::new(m.n_layer, m.d_inner * (m.d_conv - 1), m.d_inner * m.d_state);
+    let conv = vec![0.5f32; 8 * m.conv_state_elems()];
+    let ssm = vec![0.25f32; 8 * m.ssm_state_elems()];
+    for s in 0..8u64 {
+        sm.install_from_batch(s, 8, s as usize, &conv, &ssm);
+    }
+    let ids: Vec<u64> = (0..8).collect();
+    results.push(b("coordinator: state gather+scatter b=8", || {
+        let (c8, s8) = sm.gather(&ids, 8);
+        sm.scatter(&ids, 8, &c8, &s8);
+        black_box(());
+    }));
+    let probe = MockEngine::new();
+    let (conv0, ssm0) = {
+        let toks: Vec<i32> = (0..8 * m.prefill_len as i32).collect();
+        let out = probe.prefill(8, &toks).unwrap();
+        (out.conv_state, out.ssm_state)
+    };
+    results.push(b("coordinator: mock decode step b=8", || {
+        black_box(probe.decode(8, &[1, 2, 3, 4, 5, 6, 7, 8], &conv0, &ssm0).unwrap());
+    }));
+    results.push(b("coordinator: serve 16 requests (mock)", || {
+        let mut gen = WorkloadGen::new(3, m.vocab, m.prefill_len, 4, 4);
+        let reqs = (0..16).map(|_| gen.next_request()).collect();
+        black_box(serve_all(|| Ok(MockEngine::new()), BatchPolicy::default(), reqs).unwrap());
+    }));
+
+    // Util.
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
+        r#"{"a":[1,2,3],"b":{"c":1.5},"d":"xyz"}"#.repeat(1).to_string()
+    });
+    results.push(b("util: JSON parse (manifest)", || {
+        black_box(JsonValue::parse(&manifest_text).unwrap());
+    }));
+
+    println!("== hot-path microbenchmarks ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

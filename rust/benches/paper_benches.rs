@@ -1,0 +1,66 @@
+//! `cargo bench` target: regenerate every paper table/figure and time
+//! each regeneration (the benches double as the experiment harness —
+//! DESIGN.md §6 maps each entry to its table/figure).
+//!
+//! Absolute paper numbers come from a Timeloop-modeled DSA; per the
+//! reproduction brief we check *shape* (who wins, rough factors,
+//! crossovers). EXPERIMENTS.md records paper-vs-measured.
+
+use mambalaya::bench_util::{bench, black_box};
+use mambalaya::cascade::ModelConfig;
+use mambalaya::report;
+
+fn main() {
+    let cfg = ModelConfig::mamba_370m();
+    let seq = 16384;
+    let batch = 64;
+
+    println!("== paper experiment regeneration (mamba-370m, I=16384×64) ==\n");
+
+    let results = vec![
+        bench("table1: best-unfused traffic breakdown", || {
+            black_box(report::table1_report(&cfg, seq, batch));
+        }),
+        bench("table2: fusion taxonomy matrix", || {
+            black_box(report::table2_report());
+        }),
+        bench("table3: architecture configuration", || {
+            black_box(report::table3_report());
+        }),
+        bench("fig2: roofline unfused vs ideal", || {
+            black_box(report::fig2_report(&cfg, seq, batch));
+        }),
+        bench("fig9: fusion groups per variant", || {
+            black_box(report::fig9_report(&cfg, seq));
+        }),
+        bench("fig10: utilization timeline per variant", || {
+            black_box(report::fig10_report(&cfg, seq, batch));
+        }),
+        bench("fig12: end-to-end scenario sweep", || {
+            black_box(report::fig12_report(&cfg));
+        }),
+        bench("fig13: vs MARCA-like / Geens-like", || {
+            black_box(report::fig13_report(&cfg));
+        }),
+        bench("fig14: inter/intra traffic per variant", || {
+            black_box(report::fig14_report(&cfg, seq, batch));
+        }),
+        bench("fig15: baseline utilization timelines", || {
+            black_box(report::fig15_report(&cfg, seq, batch));
+        }),
+    ];
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    // Headline numbers, printed for the record.
+    println!("\n== headline check ==");
+    let (t13, _) = report::fig13_report(&cfg);
+    for line in t13.lines().filter(|l| l.contains("geomean") || l.contains("summarize")) {
+        println!("{line}");
+    }
+    let (t2, _) = report::fig2_report(&cfg, seq, batch);
+    for line in t2.lines().filter(|l| l.contains("ideal-fusion")) {
+        println!("{line}");
+    }
+}

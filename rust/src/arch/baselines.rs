@@ -1,0 +1,175 @@
+//! Prior state-of-the-art baselines (paper §VI-B).
+//!
+//! For an apples-to-apples comparison the paper gives both baselines the
+//! benefit of the doubt: best-case unfused Einsums with algorithmic
+//! minimum traffic, plus rank-isomorphic fusion applied to the SSM
+//! region only (Einsums 16–21 for Mamba-1), bound onto the Mambalaya
+//! architecture. The two differ in how they stage the SSM intermediates:
+//!
+//! * **MARCA-like** — operation-level fusion with *non-unit* intermediate
+//!   tiles: the fused SSM intermediates are staged at full sequence
+//!   extent ("brittle to changes in on-chip buffer sizes", Table II), so
+//!   once `I·D·N` tiles exceed the buffer, they spill to DRAM.
+//! * **Geens-like** — fine-grained, memory-aware fusion: intermediates
+//!   partitioned to unit size along `I` (further tiled along D/N when
+//!   needed), so the SSM intermediates never spill.
+
+use crate::cascade::mamba1::SSM_REGION;
+use crate::einsum::Cascade;
+use crate::fusion::{classify_pair, FusionGroup, FusionPlan, JoinRecord};
+
+/// How a baseline stages intermediates inside its fused group(s).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Staging {
+    /// Unit-size tiles along the generational rank — never spills
+    /// (Geens-like, and Mambalaya's own strategy).
+    UnitTile,
+    /// Full-extent staging of intermediates — spills once the tensor
+    /// exceeds its share of the buffer (MARCA-like).
+    FullExtent,
+}
+
+/// A named baseline design point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// Best-case unfused (Table I / Figure 2 reference).
+    BestUnfused,
+    /// MARCA-like: RI fusion of the SSM region, full-extent staging.
+    MarcaLike,
+    /// Geens-like: RI fusion of the SSM region, unit-tile staging.
+    GeensLike,
+}
+
+impl Baseline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::BestUnfused => "best-unfused",
+            Baseline::MarcaLike => "marca-like",
+            Baseline::GeensLike => "geens-like",
+        }
+    }
+
+    pub fn staging(&self) -> Staging {
+        match self {
+            Baseline::MarcaLike => Staging::FullExtent,
+            _ => Staging::UnitTile,
+        }
+    }
+}
+
+/// Build the fusion plan a baseline uses on the Mamba-1 cascade:
+/// every Einsum its own group except the SSM region (16–21), which is
+/// one RI-fused group (for MARCA-like / Geens-like).
+pub fn baseline_plan(c: &Cascade, b: Baseline) -> FusionPlan {
+    if b == Baseline::BestUnfused {
+        return crate::fusion::unfused_plan(c);
+    }
+    let mut groups: Vec<FusionGroup> = Vec::new();
+    let mut ssm_group: Option<FusionGroup> = None;
+    for e in c.einsums() {
+        if SSM_REGION.contains(&e.id) {
+            let g = ssm_group.get_or_insert_with(|| FusionGroup {
+                einsums: vec![],
+                joins: vec![],
+                stationary: e.iteration_space(),
+                internal_tensors: vec![],
+                rd_bridged: false,
+            });
+            // Link provenance: classify against the in-group producer.
+            let via = g
+                .einsums
+                .iter()
+                .rev()
+                .find_map(|&pid| {
+                    let p = c.by_id(pid)?;
+                    e.operand(&p.output.name).map(|_| p)
+                })
+                .map(|p| (p.id, classify_pair(p, e)));
+            g.einsums.push(e.id);
+            g.joins.push(match via {
+                Some((pid, Some(pf))) => JoinRecord {
+                    einsum: e.id,
+                    via: Some(pid),
+                    class: Some(pf.class),
+                    tensor: Some(pf.intermediate),
+                },
+                _ => JoinRecord { einsum: e.id, via: None, class: None, tensor: None },
+            });
+            g.stationary = g.stationary.intersect(&e.iteration_space());
+            // Flush once the region is complete.
+            if e.id == *SSM_REGION.last().unwrap() {
+                groups.push(ssm_group.take().unwrap());
+            }
+        } else {
+            groups.push(FusionGroup {
+                einsums: vec![e.id],
+                joins: vec![JoinRecord { einsum: e.id, via: None, class: None, tensor: None }],
+                stationary: e.iteration_space(),
+                internal_tensors: vec![],
+                rd_bridged: false,
+            });
+        }
+    }
+    let mut plan = FusionPlan {
+        cascade_name: c.name.clone(),
+        variant_name: b.name().to_string(),
+        groups,
+    };
+    // Mark internal tensors of the SSM group.
+    let consumers = c.consumers();
+    for g in &mut plan.groups {
+        let mut internal = Vec::new();
+        for &id in &g.einsums {
+            let e = c.by_id(id).unwrap();
+            if let Some(cs) = consumers.get(e.output.name.as_str()) {
+                if !cs.is_empty() && cs.iter().all(|cid| g.einsums.contains(cid)) {
+                    internal.push(e.output.name.clone());
+                }
+            }
+        }
+        g.internal_tensors = internal;
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+
+    #[test]
+    fn marca_like_has_19_groups() {
+        // 24 Einsums − 6 (SSM fused to 1) = 19 groups.
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = baseline_plan(&c, Baseline::MarcaLike);
+        plan.validate(&c).unwrap();
+        assert_eq!(plan.groups.len(), 19);
+        let ssm = plan.groups.iter().find(|g| g.einsums.len() > 1).unwrap();
+        assert_eq!(ssm.einsums, vec![16, 17, 18, 19, 20, 21]);
+    }
+
+    #[test]
+    fn ssm_internals_stay_on_chip_structurally() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = baseline_plan(&c, Baseline::GeensLike);
+        let ssm = plan.groups.iter().find(|g| g.einsums.len() > 1).unwrap();
+        // AB, BB, BX, HH, H die inside the region; S leaves it.
+        for t in ["AB", "BB", "BX", "HH"] {
+            assert!(ssm.internal_tensors.iter().any(|x| x == t), "{t}");
+        }
+        assert!(!ssm.internal_tensors.iter().any(|x| x == "S"));
+    }
+
+    #[test]
+    fn best_unfused_is_unfused() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = baseline_plan(&c, Baseline::BestUnfused);
+        assert_eq!(plan.groups.len(), 24);
+    }
+
+    #[test]
+    fn staging_assignments() {
+        assert_eq!(Baseline::MarcaLike.staging(), Staging::FullExtent);
+        assert_eq!(Baseline::GeensLike.staging(), Staging::UnitTile);
+    }
+}

@@ -1,0 +1,135 @@
+//! Mambalaya binding rules (paper §V-B): which compute structure each
+//! Einsum of a fusion group runs on, per fusion variant.
+//!
+//! * **RI-only**: elementwise-only groups → the 2D array in 1D mode
+//!   (8192 PEs); GEMMs (and their groups) → 2D mode.
+//! * **RI+RSb**: groups are "elementwise" or "GEMM → elementwise"; the
+//!   elementwise tail stays on the 2D array (its data is already
+//!   there).
+//! * **RI+RSb+RSp / Fully-Fused**: elementwise ops *preceding* a GEMM in
+//!   their group are bound to the small 1D array (256 PEs) and broadcast
+//!   into the 2D array; elementwise ops *after* a GEMM run in 2D mode.
+
+use crate::einsum::{Cascade, Intensity};
+use crate::fusion::{FusionGroup, FusionPlan};
+
+use super::spec::Binding;
+
+/// Binding decision for one Einsum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BindingChoice {
+    pub einsum: usize,
+    pub binding: Binding,
+}
+
+/// Bind every Einsum of a fusion group per §V-B.
+pub fn bind_group(c: &Cascade, g: &FusionGroup) -> Vec<BindingChoice> {
+    let members: Vec<_> = g.einsums.iter().map(|&id| c.by_id(id).expect("member")).collect();
+    let gemm_positions: Vec<usize> = members
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.intensity() == Intensity::High)
+        .map(|(i, _)| i)
+        .collect();
+
+    members
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let binding = if e.intensity() == Intensity::High {
+                Binding::Mode2D
+            } else if gemm_positions.is_empty() {
+                // Low-intensity-only group: full 1D mode of the 2D array.
+                Binding::Wide1D
+            } else if gemm_positions.iter().any(|&gp| gp < i) {
+                // Follows a GEMM in this group: its data is already
+                // resident on the 2D array — stay in 2D mode ("any
+                // elementwise Einsum that follows a GEMM will execute in
+                // 2D mode", §V-B).
+                Binding::Mode2D
+            } else {
+                // Precedes every GEMM of the group: the small 1D array,
+                // broadcasting its result into the 2D array.
+                Binding::Small1D
+            };
+            BindingChoice { einsum: e.id, binding }
+        })
+        .collect()
+}
+
+/// Bind a whole plan. Returns choices in cascade order.
+pub fn bind_plan(c: &Cascade, plan: &FusionPlan) -> Vec<BindingChoice> {
+    let mut out: Vec<BindingChoice> =
+        plan.groups.iter().flat_map(|g| bind_group(c, g)).collect();
+    out.sort_by_key(|b| b.einsum);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+    use crate::fusion::{stitch, FusionVariant};
+
+    fn bindings(variant: FusionVariant) -> Vec<BindingChoice> {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = stitch(&c, variant);
+        bind_plan(&c, &plan)
+    }
+
+    fn binding_of(bs: &[BindingChoice], id: usize) -> Binding {
+        bs.iter().find(|b| b.einsum == id).unwrap().binding
+    }
+
+    #[test]
+    fn ri_only_norm_runs_wide() {
+        // §VI-C: under RI-only, the normalization steps bind to the 8192
+        // PE 1D mode (no GEMM shares their groups).
+        let bs = bindings(FusionVariant::RIOnly);
+        for id in [1, 2, 3] {
+            assert_eq!(binding_of(&bs, id), Binding::Wide1D, "einsum {id}");
+        }
+        // GEMMs are 2D.
+        for id in [7, 8, 24] {
+            assert_eq!(binding_of(&bs, id), Binding::Mode2D, "einsum {id}");
+        }
+        // The SSM group (16–21) is elementwise-only → wide 1D.
+        for id in 16..=21 {
+            assert_eq!(binding_of(&bs, id), Binding::Wide1D, "einsum {id}");
+        }
+    }
+
+    #[test]
+    fn rsp_norm_runs_small() {
+        // §V-B: with RSp stitching, Einsums 1–6 precede the in-proj GEMM
+        // in their group → bound to the 256-PE 1D array.
+        let bs = bindings(FusionVariant::RIRSbRSp);
+        for id in 1..=6 {
+            assert_eq!(binding_of(&bs, id), Binding::Small1D, "einsum {id}");
+        }
+        // Post-GEMM elementwise (the SSM region follows dt-proj GEMM in
+        // group 3) runs in 2D mode.
+        for id in [15, 16, 19, 20] {
+            assert_eq!(binding_of(&bs, id), Binding::Mode2D, "einsum {id}");
+        }
+    }
+
+    #[test]
+    fn ri_rsb_gemm_tail_stays_2d() {
+        // §V-B RI+RSb: GEMM (14) followed by elementwise (15) — the
+        // elementwise op remains on the 2D array.
+        let bs = bindings(FusionVariant::RIRSb);
+        assert_eq!(binding_of(&bs, 14), Binding::Mode2D);
+        assert_eq!(binding_of(&bs, 15), Binding::Mode2D);
+    }
+
+    #[test]
+    fn every_einsum_bound_exactly_once() {
+        for v in FusionVariant::all() {
+            let bs = bindings(v);
+            let mut ids: Vec<usize> = bs.iter().map(|b| b.einsum).collect();
+            ids.dedup();
+            assert_eq!(ids, (1..=24).collect::<Vec<_>>(), "variant {v}");
+        }
+    }
+}

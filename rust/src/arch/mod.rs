@@ -1,0 +1,15 @@
+//! Architecture specifications and binding (paper §V, Table III).
+//!
+//! * [`spec`] — the Mambalaya configuration and derived rates;
+//! * [`mambalaya`] — §V-B binding rules (which structure runs what);
+//! * [`baselines`] — MARCA-like / Geens-like / Best-Unfused (§VI-B).
+
+pub mod baselines;
+pub mod energy;
+pub mod mambalaya;
+pub mod spec;
+
+pub use baselines::{baseline_plan, Baseline, Staging};
+pub use energy::{EnergyCost, EnergyModel};
+pub use mambalaya::{bind_group, bind_plan, BindingChoice};
+pub use spec::{ArchSpec, Binding};

@@ -1,0 +1,128 @@
+//! Architecture specifications (paper §V, Table III).
+
+use std::fmt;
+
+/// Which compute structure an Einsum is bound to (paper §V-A/B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Binding {
+    /// The 256×256 2D PE array in systolic (2D) mode — GEMMs and
+    /// elementwise ops that follow a GEMM inside a fusion group.
+    Mode2D,
+    /// The 2D array reconfigured to 1D mode: 8192 PEs directly connected
+    /// to the global buffer — elementwise-only fusion groups.
+    Wide1D,
+    /// The separate low-intensity 1D array (256 PEs) feeding the 2D
+    /// array — elementwise ops that precede a GEMM in their group.
+    Small1D,
+}
+
+impl fmt::Display for Binding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Binding::Mode2D => "2D(256x256)",
+            Binding::Wide1D => "1D-wide(8192)",
+            Binding::Small1D => "1D-small(256)",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// An accelerator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchSpec {
+    pub name: String,
+    /// 2D array rows/cols (256×256 = 65 536 PEs).
+    pub pe_2d_rows: u64,
+    pub pe_2d_cols: u64,
+    /// PEs exposed in the 2D array's 1D mode.
+    pub pe_1d_wide: u64,
+    /// PEs in the standalone low-intensity 1D array.
+    pub pe_1d_small: u64,
+    /// Clock (GHz).
+    pub freq_ghz: f64,
+    /// DRAM bandwidth (GB/s).
+    pub dram_gbps: f64,
+    /// Global on-chip buffer (bytes).
+    pub buffer_bytes: u64,
+    /// Total register capacity (bytes) — per-PE accumulators.
+    pub reg_bytes: u64,
+}
+
+impl ArchSpec {
+    /// Mambalaya, configured per Table III (iso-parameter with an H100:
+    /// 1.75 GHz, 2039 GB/s, 32 MB global buffer, 4.25 MB registers;
+    /// 65 536 + 256 PEs).
+    pub fn mambalaya() -> Self {
+        ArchSpec {
+            name: "mambalaya".into(),
+            pe_2d_rows: 256,
+            pe_2d_cols: 256,
+            pe_1d_wide: 8192,
+            pe_1d_small: 256,
+            freq_ghz: 1.75,
+            dram_gbps: 2039.0,
+            buffer_bytes: 32 << 20,
+            reg_bytes: (4 << 20) + (256 << 10), // 4.25 MB
+        }
+    }
+
+    /// PE count for a binding.
+    pub fn pes(&self, b: Binding) -> u64 {
+        match b {
+            Binding::Mode2D => self.pe_2d_rows * self.pe_2d_cols,
+            Binding::Wide1D => self.pe_1d_wide,
+            Binding::Small1D => self.pe_1d_small,
+        }
+    }
+
+    /// Cycles per second.
+    pub fn cycles_per_sec(&self) -> f64 {
+        self.freq_ghz * 1e9
+    }
+
+    /// DRAM bytes transferable per cycle.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.dram_gbps * 1e9 / self.cycles_per_sec()
+    }
+
+    /// Peak FLOP/s of a binding (each PE: 1 MAC = 2 FLOP per cycle).
+    pub fn peak_flops(&self, b: Binding) -> f64 {
+        self.pes(b) as f64 * 2.0 * self.cycles_per_sec()
+    }
+
+    /// Machine balance (FLOP/byte) at the 2D-mode peak — the roofline
+    /// knee used in Figures 2/10/15.
+    pub fn machine_balance(&self) -> f64 {
+        self.peak_flops(Binding::Mode2D) / (self.dram_gbps * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values() {
+        let a = ArchSpec::mambalaya();
+        assert_eq!(a.pes(Binding::Mode2D), 65_536);
+        assert_eq!(a.pes(Binding::Wide1D), 8_192);
+        assert_eq!(a.pes(Binding::Small1D), 256);
+        assert_eq!(a.buffer_bytes, 32 << 20);
+        assert!((a.freq_ghz - 1.75).abs() < 1e-9);
+        assert!((a.dram_gbps - 2039.0).abs() < 1e-9);
+        // Register file 4.25 MB.
+        assert_eq!(a.reg_bytes, 4_456_448);
+    }
+
+    #[test]
+    fn derived_rates() {
+        let a = ArchSpec::mambalaya();
+        // 65536 PEs × 2 flop × 1.75 GHz ≈ 229 Tflop/s.
+        let peak = a.peak_flops(Binding::Mode2D);
+        assert!((peak / 1e12 - 229.376).abs() < 0.01, "peak = {peak}");
+        // ~1165 B/cycle at 2039 GB/s / 1.75 GHz.
+        assert!((a.bytes_per_cycle() - 2039.0 / 1.75).abs() < 1.0);
+        // Roofline knee ≈ 112 flop/byte.
+        assert!((a.machine_balance() - 112.5).abs() < 0.5);
+    }
+}

@@ -1,0 +1,83 @@
+//! Mini benchmark harness (no criterion in the vendored crate set):
+//! warmup + timed iterations with mean / p50 / p95 and a throughput
+//! hook. Used by `cargo bench` targets (harness = false).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.iters
+        )
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and `min_time`.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_config(name, 3, 10, Duration::from_millis(300), &mut f)
+}
+
+/// Fully-parameterized variant.
+pub fn bench_config<F: FnMut()>(
+    name: &str,
+    warmup: u32,
+    min_iters: u32,
+    min_time: Duration,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let started = Instant::now();
+    while samples.len() < min_iters as usize || started.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let mean = total / samples.len() as u32;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u32,
+        mean,
+        p50: p(0.5),
+        p95: p(0.95),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_percentiles() {
+        let r = bench_config("noop", 1, 5, Duration::from_millis(1), &mut || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.p50 <= r.p95);
+        assert!(r.report().contains("noop"));
+    }
+}

@@ -1,0 +1,173 @@
+//! Workload configurations: model dimensions for the Mamba family.
+//!
+//! Dims follow the released state-spaces checkpoints: `d_inner = 2·d_model`,
+//! `d_state = 16` (Mamba-1), `dt_rank = ceil(d_model/16)`, conv kernel 4.
+//! The paper evaluates mamba-370m and mamba-2.8b (§VI-A); the tiny config
+//! is the functional serving model (examples/serve_mamba).
+
+/// Model dimensions for one Mamba model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// `E`: embedding / d_model.
+    pub d_model: u64,
+    /// `D`: inner dimension (2·E for Mamba).
+    pub d_inner: u64,
+    /// `N`: SSM state size (16 for Mamba-1).
+    pub d_state: u64,
+    /// `R`: low-rank Δ projection dimension.
+    pub dt_rank: u64,
+    /// `J`: causal-conv kernel width.
+    pub d_conv: u64,
+    /// Number of layers.
+    pub layers: u64,
+    /// Vocabulary size (used by the functional serving model).
+    pub vocab: u64,
+}
+
+impl ModelConfig {
+    fn new(name: &str, d_model: u64, layers: u64) -> Self {
+        ModelConfig {
+            name: name.to_string(),
+            d_model,
+            d_inner: 2 * d_model,
+            d_state: 16,
+            dt_rank: d_model.div_ceil(16),
+            d_conv: 4,
+            layers,
+            vocab: 50280,
+        }
+    }
+
+    /// mamba-130m: E=768, 24 layers.
+    pub fn mamba_130m() -> Self {
+        Self::new("mamba-130m", 768, 24)
+    }
+
+    /// mamba-370m: E=1024, 48 layers (paper's primary model).
+    pub fn mamba_370m() -> Self {
+        Self::new("mamba-370m", 1024, 48)
+    }
+
+    /// mamba-1.4b: E=2048, 48 layers.
+    pub fn mamba_1_4b() -> Self {
+        Self::new("mamba-1.4b", 2048, 48)
+    }
+
+    /// mamba-2.8b: E=2560, 64 layers ("more than doubles the E and D
+    /// ranks and uses 64 layers", paper §VI-A).
+    pub fn mamba_2_8b() -> Self {
+        Self::new("mamba-2.8b", 2560, 64)
+    }
+
+    /// Tiny functional model for end-to-end serving on CPU PJRT:
+    /// E=64, 2 layers, small vocab. Exercises the same cascade shape.
+    pub fn tiny() -> Self {
+        let mut c = Self::new("mamba-tiny", 64, 2);
+        c.vocab = 256;
+        c
+    }
+
+    /// Look up by name (CLI).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "mamba-130m" | "130m" => Some(Self::mamba_130m()),
+            "mamba-370m" | "370m" => Some(Self::mamba_370m()),
+            "mamba-1.4b" | "1.4b" => Some(Self::mamba_1_4b()),
+            "mamba-2.8b" | "2.8b" => Some(Self::mamba_2_8b()),
+            "tiny" | "mamba-tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Per-layer weight parameter count (Mamba-1 block):
+    /// in-proj (E·2D) + conv (D·J + D) + x-proj (D·(2N+R)) +
+    /// dt-proj (R·D + D) + A (D·N) + D-skip (D) + out-proj (D·E) + norm (E).
+    pub fn layer_params(&self) -> u64 {
+        let (e, d, n, r, j) =
+            (self.d_model, self.d_inner, self.d_state, self.dt_rank, self.d_conv);
+        e * 2 * d + d * j + d + d * (2 * n + r) + r * d + d + d * n + d + d * e + e
+    }
+
+    /// Total parameters (layers + embedding + lm head tied).
+    pub fn total_params(&self) -> u64 {
+        self.layers * self.layer_params() + self.vocab * self.d_model
+    }
+}
+
+/// A serving/analysis scenario: batch and phase lengths (paper §VI-C:
+/// "each bar grouping is a specific ratio of context length to token
+/// generation length").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    pub name: String,
+    pub batch: u64,
+    /// Prefill (context) length.
+    pub prefill: u64,
+    /// Decode (generation) length.
+    pub decode: u64,
+}
+
+impl Scenario {
+    pub fn new(name: &str, batch: u64, prefill: u64, decode: u64) -> Self {
+        Scenario { name: name.to_string(), batch, prefill, decode }
+    }
+
+    /// The paper's three scenario families (Fig 12): small context /
+    /// long generation, balanced, large context / short generation.
+    pub fn paper_suite() -> Vec<Scenario> {
+        vec![
+            Scenario::new("ctx:gen=1:64 (explain)", 64, 64, 4096),
+            Scenario::new("ctx:gen=1:1 (edit)", 64, 1024, 1024),
+            Scenario::new("ctx:gen=64:1 (summarize)", 64, 16384, 256),
+        ]
+    }
+
+    /// Ratio of prefill to decode length.
+    pub fn ratio(&self) -> f64 {
+        self.prefill as f64 / self.decode.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dims() {
+        let m = ModelConfig::mamba_370m();
+        assert_eq!(m.d_model, 1024);
+        assert_eq!(m.d_inner, 2048);
+        assert_eq!(m.d_state, 16);
+        assert_eq!(m.dt_rank, 64);
+        assert_eq!(m.layers, 48);
+
+        let big = ModelConfig::mamba_2_8b();
+        // "more than doubles the E and D ranks and uses 64 layers"
+        assert!(big.d_model >= 2 * m.d_model);
+        assert_eq!(big.layers, 64);
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // mamba-370m should land near 370M params (±25%).
+        let p = ModelConfig::mamba_370m().total_params() as f64;
+        assert!(p > 0.75 * 370e6 && p < 1.25 * 370e6, "params = {p}");
+        let p = ModelConfig::mamba_2_8b().total_params() as f64;
+        assert!(p > 0.75 * 2.8e9 && p < 1.25 * 2.8e9, "params = {p}");
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(ModelConfig::by_name("370m").is_some());
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scenarios() {
+        let suite = Scenario::paper_suite();
+        assert_eq!(suite.len(), 3);
+        assert!(suite[0].ratio() < 1.0);
+        assert!(suite[2].ratio() > 1.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Pedagogical cascades from the paper's Figures 4–8: the canonical
+//! two-Einsum pattern for each fusion class, and the five-Einsum
+//! greedy-stitching example of Figure 8. Used by tests, the quickstart
+//! example, and the fusion-classifier unit tests.
+
+use crate::einsum::{
+    Cascade, DType, EinsumSpec, Operand, OpKind, Rank, TensorClass, TensorSpec, UnaryFn,
+};
+
+fn t(name: &str, ranks: &[&Rank], class: TensorClass) -> TensorSpec {
+    TensorSpec::new(name, ranks.iter().map(|r| (*r).clone()).collect(), DType::F16, class)
+}
+
+/// Figure 4 — RI: elementwise (`Z = A·B`) → reduce... the paper's RI
+/// figure fuses two Einsums with the *same* iteration space {M,K}:
+/// `Z[m,k] = A[m,k]·B[m,k]`, then `Y[m] = Σ_k Z[m,k]` shares {M,K}.
+pub fn fig4_ri(m: u64, k: u64) -> Cascade {
+    let rm = Rank::new("M", m);
+    let rk = Rank::new("K", k);
+    let a = t("A", &[&rm, &rk], TensorClass::Input);
+    let b = t("B", &[&rm, &rk], TensorClass::Input);
+    let z = t("Z", &[&rm, &rk], TensorClass::Intermediate);
+    let y = t("Y", &[&rm], TensorClass::Output);
+    let p = Operand::plain;
+    Cascade::new(
+        "fig4-ri",
+        vec![
+            EinsumSpec::new(1, "Z", z.clone(), vec![p(a), p(b)], vec![], OpKind::Mul),
+            EinsumSpec::new(2, "Y", y, vec![p(z)], vec![rk], OpKind::MulAcc),
+        ],
+    )
+}
+
+/// Figure 5 — RSb: matrix-vector (`Z[m] = Σ_k A[m,k]·B[k]`) followed by
+/// an elementwise op (`Y[m] = f(Z[m])`): upstream {M,K} ⊃ downstream {M}.
+pub fn fig5_rsb(m: u64, k: u64) -> Cascade {
+    let rm = Rank::new("M", m);
+    let rk = Rank::new("K", k);
+    let a = t("A", &[&rm, &rk], TensorClass::Input);
+    let b = t("B", &[&rk], TensorClass::Input);
+    let z = t("Z", &[&rm], TensorClass::Intermediate);
+    let y = t("Y", &[&rm], TensorClass::Output);
+    let p = Operand::plain;
+    Cascade::new(
+        "fig5-rsb",
+        vec![
+            EinsumSpec::new(1, "Z", z.clone(), vec![p(a), p(b)], vec![rk], OpKind::MulAcc),
+            EinsumSpec::new(2, "Y", y, vec![p(z)], vec![], OpKind::Unary(UnaryFn::Exp)),
+        ],
+    )
+}
+
+/// Figure 6 — RSp: broadcast (`Z[m] = f(A[m])`) followed by matrix
+/// multiply that broadcasts Z over a new rank:
+/// `Y[m,p] = Σ_n Z[m]·C[n,p]·B[m,n]` — modeled minimally as upstream {M}
+/// ⊂ downstream {M,N,P}.
+pub fn fig6_rsp(m: u64, n: u64, p_: u64) -> Cascade {
+    let rm = Rank::new("M", m);
+    let rn = Rank::new("N", n);
+    let rp = Rank::new("P", p_);
+    let a = t("A", &[&rm], TensorClass::Input);
+    let c = t("C", &[&rn, &rp], TensorClass::Input);
+    let z = t("Z", &[&rm], TensorClass::Intermediate);
+    let y = t("Y", &[&rm, &rp], TensorClass::Output);
+    let pl = Operand::plain;
+    Cascade::new(
+        "fig6-rsp",
+        vec![
+            EinsumSpec::new(1, "Z", z.clone(), vec![pl(a)], vec![], OpKind::Unary(UnaryFn::Exp)),
+            EinsumSpec::new(2, "Y", y, vec![pl(z), pl(c)], vec![rn], OpKind::MulAcc),
+        ],
+    )
+}
+
+/// Figure 7 — RD: back-to-back matmuls `Z[m,n] = Σ_k A·B` then
+/// `Y[m,p] = Σ_n Z·C`: upstream {M,N,K} ⊥ downstream {M,N,P}.
+pub fn fig7_rd(m: u64, n: u64, k: u64, p_: u64) -> Cascade {
+    let rm = Rank::new("M", m);
+    let rn = Rank::new("N", n);
+    let rk = Rank::new("K", k);
+    let rp = Rank::new("P", p_);
+    let a = t("A", &[&rm, &rk], TensorClass::Input);
+    let b = t("B", &[&rk, &rn], TensorClass::Input);
+    let c = t("C", &[&rn, &rp], TensorClass::Input);
+    let z = t("Z", &[&rm, &rn], TensorClass::Intermediate);
+    let y = t("Y", &[&rm, &rp], TensorClass::Output);
+    let pl = Operand::plain;
+    Cascade::new(
+        "fig7-rd",
+        vec![
+            EinsumSpec::new(1, "Z", z.clone(), vec![pl(a), pl(b)], vec![rk], OpKind::MulAcc),
+            EinsumSpec::new(2, "Y", y, vec![pl(z), pl(c)], vec![rn], OpKind::MulAcc),
+        ],
+    )
+}
+
+/// Figure 8 — the five-Einsum greedy-stitching example:
+/// E1 `Z[m,n] = Σ_k A[m,k]·B[k,n]`       IS₁ = {M,N,K}
+/// E2 `Y[m,n,p] = Z[m,n]·C[p]`           IS₂ = {M,N,P}
+/// E3 `X[m,n,q] = Σ_p Y[m,n,p]·W[q]`     IS₃ = {M,N,P,Q}
+/// E4 `V[n] = Σ_{m,q} X[m,n,q]·D[q]`     IS₄ = {M,N,Q}
+/// E5 `U[n] = f(V[n])`                   IS₅ = {N}
+/// Greedy stitching yields groups {E1,E2,E3} and {E4,E5}.
+pub fn fig8_five(m: u64, n: u64, k: u64, p_: u64, q: u64) -> Cascade {
+    let rm = Rank::new("M", m);
+    let rn = Rank::new("N", n);
+    let rk = Rank::new("K", k);
+    let rp = Rank::new("P", p_);
+    let rq = Rank::new("Q", q);
+    let a = t("A", &[&rm, &rk], TensorClass::Input);
+    let b = t("B", &[&rk, &rn], TensorClass::Input);
+    let c = t("C", &[&rp], TensorClass::Input);
+    let w = t("W", &[&rq], TensorClass::Input);
+    let d = t("D", &[&rq], TensorClass::Input);
+    let z = t("Z", &[&rm, &rn], TensorClass::Intermediate);
+    let y = t("Y", &[&rm, &rn, &rp], TensorClass::Intermediate);
+    let x = t("X", &[&rm, &rn, &rq], TensorClass::Intermediate);
+    let v = t("V", &[&rn], TensorClass::Intermediate);
+    let u = t("U", &[&rn], TensorClass::Output);
+    let pl = Operand::plain;
+    Cascade::new(
+        "fig8-five",
+        vec![
+            EinsumSpec::new(1, "Z", z.clone(), vec![pl(a), pl(b)], vec![rk], OpKind::MulAcc),
+            EinsumSpec::new(2, "Y", y.clone(), vec![pl(z), pl(c)], vec![], OpKind::Mul),
+            EinsumSpec::new(3, "X", x.clone(), vec![pl(y), pl(w)], vec![rp], OpKind::MulAcc),
+            EinsumSpec::new(
+                4,
+                "V",
+                v.clone(),
+                vec![pl(x), pl(d)],
+                vec![rm.clone(), rq],
+                OpKind::MulAcc,
+            ),
+            EinsumSpec::new(5, "U", u, vec![pl(v)], vec![], OpKind::Unary(UnaryFn::Exp)),
+        ],
+    )
+}
+
+/// The generational-rank example of paper Eq. (1):
+/// `Z[i+1] = A[i] · Z[i]` over `i ≤ K`.
+pub fn eq1_generational(k: u64) -> Cascade {
+    let ri = Rank::generational("I", k);
+    let a = t("A", &[&ri], TensorClass::Input);
+    let z = t("Z", &[&ri], TensorClass::Recurrent);
+    Cascade::new(
+        "eq1-generational",
+        vec![EinsumSpec::new(
+            1,
+            "Z",
+            z.clone(),
+            vec![
+                Operand::plain(a),
+                Operand::with_access(z.clone(), "I", crate::einsum::RankAccess::Lagged { offset: 1 }),
+            ],
+            vec![],
+            OpKind::Mul,
+        )],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::SpaceRelation;
+
+    #[test]
+    fn all_examples_validate() {
+        fig4_ri(8, 4).validate().unwrap();
+        fig5_rsb(8, 4).validate().unwrap();
+        fig6_rsp(8, 4, 2).validate().unwrap();
+        fig7_rd(8, 4, 6, 2).validate().unwrap();
+        fig8_five(4, 5, 6, 3, 2).validate().unwrap();
+        eq1_generational(10).validate().unwrap();
+    }
+
+    #[test]
+    fn example_relations_match_figures() {
+        let rel = |c: &Cascade| {
+            let up = c.einsums()[0].iteration_space();
+            let dn = c.einsums()[1].iteration_space();
+            up.relation(&dn)
+        };
+        assert_eq!(rel(&fig4_ri(8, 4)), SpaceRelation::Equal);
+        assert_eq!(rel(&fig5_rsb(8, 4)), SpaceRelation::Superset);
+        assert_eq!(rel(&fig6_rsp(8, 4, 2)), SpaceRelation::Subset);
+        assert_eq!(rel(&fig7_rd(8, 4, 6, 2)), SpaceRelation::Disjoint);
+    }
+
+    #[test]
+    fn fig8_iteration_spaces() {
+        let c = fig8_five(4, 5, 6, 3, 2);
+        let spaces: Vec<Vec<String>> = c
+            .einsums()
+            .iter()
+            .map(|e| {
+                e.iteration_space().rank_names().iter().map(|s| s.to_string()).collect()
+            })
+            .collect();
+        assert_eq!(spaces[0], vec!["K", "M", "N"]);
+        assert_eq!(spaces[1], vec!["M", "N", "P"]);
+        assert_eq!(spaces[2], vec!["M", "N", "P", "Q"]);
+        assert_eq!(spaces[3], vec!["M", "N", "Q"]);
+        assert_eq!(spaces[4], vec!["N"]);
+    }
+}

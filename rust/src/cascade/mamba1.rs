@@ -1,0 +1,393 @@
+//! The Mamba-1 layer as a 24-Einsum extended cascade (paper Figure 1).
+//!
+//! Rank key: `I` = token position (generational), `E` = d_model,
+//! `D` = d_inner, `N` = d_state, `R` = dt_rank, `J` = conv kernel.
+//! Batch is folded into the `I` extent (tokens are what flow through a
+//! layer; weights are shared across them), matching the per-layer
+//! analysis of the paper.
+//!
+//! Einsum numbering preserves every anchor the paper's prose uses:
+//! NUM at #3 (reduces over E), NEX at #5, TX/RX at #7–8 (shared-input),
+//! the conv `TX→TTX` non-unit-step access at #9, LEX at #10 (two-pass),
+//! skinny x-proj GEMMs at #11–13, dt GEMM+softplus at #14–15,
+//! discretization at #16–17 (shared-input from Δ), the SSM region at
+//! #16–21, post-processing → Y at #22–23, out-proj at #24. See
+//! DESIGN.md §2 for the full table and the paper's (internally
+//! inconsistent) alternate numberings.
+
+use crate::einsum::{
+    Cascade, DType, EinsumSpec, Operand, OpKind, Rank, RankAccess, TensorClass, TensorSpec,
+    UnaryFn,
+};
+
+/// Names of the Einsums in the SSM region (paper: Einsums 16–21).
+pub const SSM_REGION: [usize; 6] = [16, 17, 18, 19, 20, 21];
+
+/// Build the Mamba-1 single-layer cascade.
+///
+/// * `cfg` — model dimensions;
+/// * `seqlen` — tokens along the generational `I` rank (1 = decode step);
+/// * `batch` — batch size, folded into the `I` extent.
+pub fn build(cfg: &super::config::ModelConfig, seqlen: u64, batch: u64) -> Cascade {
+    let tokens = seqlen.max(1) * batch.max(1);
+    let i = Rank::generational("I", tokens);
+    let e = Rank::new("E", cfg.d_model);
+    let d = Rank::new("D", cfg.d_inner);
+    let n = Rank::new("N", cfg.d_state);
+    let r = Rank::new("R", cfg.dt_rank);
+    let j = Rank::new("J", cfg.d_conv);
+
+    let dt = DType::F16;
+    use TensorClass::*;
+
+    // --- tensor shorthands -------------------------------------------------
+    let t = |name: &str, ranks: &[&Rank], class: TensorClass| {
+        TensorSpec::new(name, ranks.iter().map(|r| (*r).clone()).collect(), dt, class)
+    };
+
+    // External inputs.
+    let t_in = t("In", &[&i, &e], Input);
+    let t_res = t("Res", &[&i, &e], Input);
+
+    // Weights.
+    let w_gamma = t("Gamma", &[&e], Weight);
+    let w_beta = t("Beta", &[&e], Weight);
+    let w_tx = t("Wtx", &[&e, &d], Weight);
+    let w_rx = t("Wrx", &[&e, &d], Weight);
+    let w_conv = t("Wconv", &[&d, &j], Weight);
+    let w_cbias = t("Bconv", &[&d], Weight);
+    let w_b = t("Wb", &[&d, &n], Weight);
+    let w_c = t("Wc", &[&d, &n], Weight);
+    let w_dlt = t("Wdlt", &[&d, &r], Weight);
+    let w_dt = t("Wdt", &[&r, &d], Weight);
+    let w_dtb = t("Bdt", &[&d], Weight);
+    let w_a = t("A", &[&d, &n], Weight);
+    let w_skip = t("Dw", &[&d], Weight);
+    let w_o = t("Wo", &[&d, &e], Weight);
+
+    // Intermediates (declared as we produce them).
+    let t_x = t("X", &[&i, &e], Intermediate);
+    let t_sq = t("SQ", &[&i, &e], Intermediate);
+    let t_num = t("NUM", &[&i], Intermediate);
+    let t_isr = t("ISR", &[&i], Intermediate);
+    let t_nex = t("NEX", &[&i, &e], Intermediate);
+    let t_gx = t("GX", &[&i, &e], Intermediate);
+    let t_tx = t("TX", &[&i, &d], Intermediate);
+    let t_rx = t("RX", &[&i, &d], Intermediate);
+    let t_ttx = t("TTX", &[&i, &d], Intermediate);
+    let t_lex = t("LEX", &[&i, &d], Intermediate);
+    let t_xb = t("XB", &[&i, &n], Intermediate);
+    let t_xc = t("XC", &[&i, &n], Intermediate);
+    let t_ttd = t("TTD", &[&i, &r], Intermediate);
+    let t_dt = t("DT", &[&i, &d], Intermediate);
+    let t_dl = t("DL", &[&i, &d], Intermediate);
+    let t_ab = t("AB", &[&i, &d, &n], Intermediate);
+    let t_bb = t("BB", &[&i, &d, &n], Intermediate);
+    let t_bx = t("BX", &[&i, &d, &n], Intermediate);
+    let t_hh = t("HH", &[&i, &d, &n], Intermediate);
+    let t_h = t("H", &[&i, &d, &n], Recurrent);
+    let t_s = t("S", &[&i, &d], Intermediate);
+    let t_sd = t("SD", &[&i, &d], Intermediate);
+    let t_y = t("Y", &[&i, &d], Intermediate);
+    let t_out = t("Out", &[&i, &e], Output);
+
+    let p = Operand::plain;
+
+    let einsums = vec![
+        // 1: residual stream entry — X used at #2, #5 and conceptually by
+        // the next layer; the paper flags X as a two-pass tensor.
+        EinsumSpec::new(1, "X", t_x.clone(), vec![p(t_in), p(t_res)], vec![], OpKind::Add),
+        // 2–6: RMSNorm.
+        EinsumSpec::new(
+            2,
+            "SQ",
+            t_sq.clone(),
+            vec![p(t_x.clone()), p(t_x.clone())],
+            vec![],
+            OpKind::Mul,
+        ),
+        EinsumSpec::new(
+            3,
+            "NUM",
+            t_num.clone(),
+            vec![p(t_sq)],
+            vec![e.clone()],
+            OpKind::MulAcc, // Σ_e SQ·1 — reduction, not GEMM-scale
+        ),
+        EinsumSpec::new(
+            4,
+            "ISR",
+            t_isr.clone(),
+            vec![p(t_num)],
+            vec![],
+            OpKind::Unary(UnaryFn::Rsqrt),
+        ),
+        EinsumSpec::new(
+            5,
+            "NEX",
+            t_nex.clone(),
+            vec![p(t_x.clone()), p(t_isr)],
+            vec![],
+            OpKind::Mul,
+        ),
+        EinsumSpec::new(
+            6,
+            "GX",
+            t_gx.clone(),
+            vec![p(t_nex), p(w_gamma), p(w_beta)],
+            vec![],
+            OpKind::MulAdd,
+        ),
+        // 7–8: in-proj, shared-input GEMM pair.
+        EinsumSpec::new(
+            7,
+            "TX",
+            t_tx.clone(),
+            vec![p(t_gx.clone()), p(w_tx)],
+            vec![e.clone()],
+            OpKind::MulAcc,
+        ),
+        EinsumSpec::new(
+            8,
+            "RX",
+            t_rx.clone(),
+            vec![p(t_gx), p(w_rx)],
+            vec![e.clone()],
+            OpKind::MulAcc,
+        ),
+        // 9: causal depthwise conv — windowed access along I.
+        EinsumSpec::new(
+            9,
+            "TTX",
+            t_ttx.clone(),
+            vec![
+                Operand::with_access(t_tx, "I", RankAccess::Windowed { window: cfg.d_conv }),
+                p(w_conv),
+            ],
+            vec![j],
+            OpKind::MulAcc,
+        ),
+        // 10: SiLU — LEX, the cascade's most-consumed (two-pass) tensor.
+        EinsumSpec::new(
+            10,
+            "LEX",
+            t_lex.clone(),
+            vec![p(t_ttx), p(w_cbias)],
+            vec![],
+            OpKind::Unary(UnaryFn::SiLU),
+        ),
+        // 11–13: x-proj, shared-input skinny GEMMs (non-ideal aspect).
+        EinsumSpec::new(
+            11,
+            "XB",
+            t_xb.clone(),
+            vec![p(t_lex.clone()), p(w_b)],
+            vec![d.clone()],
+            OpKind::MulAcc,
+        ),
+        EinsumSpec::new(
+            12,
+            "XC",
+            t_xc.clone(),
+            vec![p(t_lex.clone()), p(w_c)],
+            vec![d.clone()],
+            OpKind::MulAcc,
+        ),
+        EinsumSpec::new(
+            13,
+            "TTD",
+            t_ttd.clone(),
+            vec![p(t_lex.clone()), p(w_dlt)],
+            vec![d.clone()],
+            OpKind::MulAcc,
+        ),
+        // 14–15: dt-proj GEMM + softplus.
+        EinsumSpec::new(
+            14,
+            "DT",
+            t_dt.clone(),
+            vec![p(t_ttd), p(w_dt)],
+            vec![r],
+            OpKind::MulAcc,
+        ),
+        EinsumSpec::new(
+            15,
+            "DL",
+            t_dl.clone(),
+            vec![p(t_dt), p(w_dtb)],
+            vec![],
+            OpKind::Unary(UnaryFn::Softplus),
+        ),
+        // 16–17: discretization (shared-input pair from Δ).
+        EinsumSpec::new(
+            16,
+            "AB",
+            t_ab.clone(),
+            vec![p(t_dl.clone()), p(w_a)],
+            vec![],
+            OpKind::MulUnary(UnaryFn::Exp), // exp(Δ ⊗ A)
+        ),
+        EinsumSpec::new(
+            17,
+            "BB",
+            t_bb.clone(),
+            vec![p(t_dl), p(t_xb)],
+            vec![],
+            OpKind::Mul, // Δ ⊗ B (broadcast outer product)
+        ),
+        // 18: input scaling B̄ · x.
+        EinsumSpec::new(
+            18,
+            "BX",
+            t_bx.clone(),
+            vec![p(t_bb), p(t_lex.clone())],
+            vec![],
+            OpKind::Mul,
+        ),
+        // 19–20: the recurrence.
+        EinsumSpec::new(
+            19,
+            "HH",
+            t_hh.clone(),
+            vec![
+                p(t_ab),
+                Operand::with_access(t_h.clone(), "I", RankAccess::Lagged { offset: 1 }),
+            ],
+            vec![],
+            OpKind::Mul,
+        ),
+        EinsumSpec::new(20, "H", t_h.clone(), vec![p(t_hh), p(t_bx)], vec![], OpKind::Add),
+        // 21: readout S = Σ_n C · H.
+        EinsumSpec::new(
+            21,
+            "S",
+            t_s.clone(),
+            vec![p(t_xc), p(t_h)],
+            vec![n],
+            OpKind::MulAcc,
+        ),
+        // 22–23: skip + gate.
+        EinsumSpec::new(
+            22,
+            "SD",
+            t_sd.clone(),
+            vec![p(t_s), p(w_skip), p(t_lex)],
+            vec![],
+            OpKind::MulAdd,
+        ),
+        EinsumSpec::new(
+            23,
+            "Y",
+            t_y.clone(),
+            vec![p(t_sd), p(t_rx)],
+            vec![],
+            OpKind::MulUnary(UnaryFn::SiLU), // SD · SiLU(RX)
+        ),
+        // 24: out-proj.
+        EinsumSpec::new(24, "Out", t_out, vec![p(t_y), p(w_o)], vec![d], OpKind::MulAcc),
+    ];
+
+    Cascade::new(format!("mamba1/{}/I={}", cfg.name, tokens), einsums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::config::ModelConfig;
+    use crate::einsum::SpaceRelation;
+
+    fn c370(seq: u64) -> Cascade {
+        build(&ModelConfig::mamba_370m(), seq, 1)
+    }
+
+    #[test]
+    fn has_24_einsums_and_validates() {
+        let c = c370(512);
+        assert_eq!(c.len(), 24);
+        c.validate().expect("cascade must validate");
+    }
+
+    #[test]
+    fn seven_gemm_like() {
+        // Paper §II: "7 of those 24 are GEMM-like".
+        let c = c370(512);
+        let gemms: Vec<usize> =
+            c.einsums().iter().filter(|e| e.is_gemm_like()).map(|e| e.id).collect();
+        assert_eq!(gemms, vec![7, 8, 11, 12, 13, 14, 24]);
+        assert_eq!(c.gemm_count(), 7);
+    }
+
+    #[test]
+    fn paper_anchor_einsums() {
+        let c = c370(64);
+        assert_eq!(c.by_id(3).unwrap().name, "NUM");
+        assert_eq!(c.by_id(5).unwrap().name, "NEX");
+        assert_eq!(c.by_id(7).unwrap().name, "TX");
+        assert_eq!(c.by_id(8).unwrap().name, "RX");
+        assert_eq!(c.by_id(10).unwrap().name, "LEX");
+        assert_eq!(c.by_id(21).unwrap().name, "S");
+        assert_eq!(c.by_id(24).unwrap().name, "Out");
+    }
+
+    #[test]
+    fn recurrent_edges_exist() {
+        let c = c370(64);
+        let edges = c.edges();
+        // H[i-1] read by HH (#19): a dashed recurrent edge from 20 → 19.
+        assert!(edges.iter().any(|e| e.tensor == "H" && e.to == 19 && e.recurrent));
+        // TX windowed by conv (#9).
+        assert!(c.by_id(9).unwrap().is_recurrent());
+    }
+
+    #[test]
+    fn rx_has_long_liveness() {
+        // Paper: RX "has a long dependency chain: it is not needed again
+        // until Einsum 22/23".
+        let c = c370(64);
+        let live = c.liveness();
+        let rx = live.iter().find(|(n, _, _)| n == "RX").unwrap();
+        assert_eq!(rx.1, 8);
+        assert_eq!(rx.2, 23);
+        assert!(rx.2 - rx.1 >= 15);
+    }
+
+    #[test]
+    fn lex_is_multiconsumer() {
+        let c = c370(64);
+        let consumers = c.consumers();
+        let lex = consumers.get("LEX").unwrap();
+        // LEX feeds x-proj (11,12,13), BX (18), and skip (22).
+        assert_eq!(lex, &vec![11, 12, 13, 18, 22]);
+    }
+
+    #[test]
+    fn ssm_region_relations() {
+        // Inside the SSM region (16–21): 16→19 equal spaces, 20→21 is a
+        // reduction boundary (superset).
+        let c = c370(64);
+        let ab = c.by_id(16).unwrap().iteration_space();
+        let hh = c.by_id(19).unwrap().iteration_space();
+        assert_eq!(ab.relation(&hh), SpaceRelation::Equal);
+        let s = c.by_id(21).unwrap().iteration_space();
+        let h = c.by_id(20).unwrap().iteration_space();
+        // S iterates {I,D,N} too (N is reduced) → equal rank sets.
+        assert_eq!(h.relation(&s), SpaceRelation::Equal);
+        // But S's *output* drops N: downstream of S sees {I,D}.
+        let sd = c.by_id(22).unwrap().iteration_space();
+        assert_eq!(s.relation(&sd), SpaceRelation::Superset);
+    }
+
+    #[test]
+    fn decode_cascade_has_unit_i() {
+        let c = build(&ModelConfig::mamba_370m(), 1, 1);
+        let e = c.by_id(19).unwrap();
+        let is = e.iteration_space();
+        assert_eq!(is.rank("I").unwrap().extent, 1);
+    }
+
+    #[test]
+    fn batch_folds_into_i() {
+        let c = build(&ModelConfig::mamba_370m(), 1, 64);
+        assert_eq!(c.by_id(1).unwrap().output.ranks[0].extent, 64);
+    }
+}

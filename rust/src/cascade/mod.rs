@@ -1,0 +1,15 @@
+//! Concrete workload cascades.
+//!
+//! * [`mamba1`] — the paper's 24-Einsum Mamba-1 layer (Figure 1);
+//! * [`mamba2`] — the Mamba-2 / SSD variant (Table II "Mamba-1/2");
+//! * [`transformer`] — the 8-Einsum Transformer foil (FuseMax);
+//! * [`examples`] — the pedagogical cascades of Figures 4–8 and Eq. (1);
+//! * [`config`] — model dimension configs and serving scenarios.
+
+pub mod config;
+pub mod examples;
+pub mod mamba1;
+pub mod mamba2;
+pub mod transformer;
+
+pub use config::{ModelConfig, Scenario};

@@ -1,0 +1,216 @@
+//! Dynamic batching policy: decides, each scheduler tick, whether to
+//! run a prefill batch (admitting waiting requests) or a decode step
+//! (advancing running sequences) — the classic continuous-batching
+//! trade-off, specialized to Mamba's fixed-size state (admission is
+//! never blocked by state growth, only by slot count).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Tunable policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Compiled prefill batch sizes (ascending).
+    pub prefill_sizes: Vec<usize>,
+    /// Compiled decode batch sizes (ascending).
+    pub decode_sizes: Vec<usize>,
+    /// Admit a partial prefill batch after this long.
+    pub max_prefill_wait: Duration,
+    /// Max concurrently running sequences (state slots).
+    pub max_running: usize,
+    /// Prefer decode once at least this many sequences are running
+    /// (anti-starvation for in-flight requests).
+    pub decode_priority_threshold: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            prefill_sizes: vec![1, 2, 4],
+            decode_sizes: vec![1, 2, 4, 8],
+            max_prefill_wait: Duration::from_millis(4),
+            max_running: 8,
+            decode_priority_threshold: 8,
+        }
+    }
+}
+
+/// What the scheduler should do next.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Admit these many waiting requests as one prefill batch of the
+    /// given compiled size (`admit ≤ size`).
+    Prefill { admit: usize, size: usize },
+    /// Run one decode step over all running sequences, padded to the
+    /// given compiled size.
+    Decode { size: usize },
+    /// Nothing to do.
+    Idle,
+}
+
+/// The batcher: tracks waiting counts and decides scheduling actions.
+/// (Queues of actual requests live in the scheduler; the batcher is a
+/// pure policy object, which keeps it unit-testable.)
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    oldest_waiting: Option<Instant>,
+    waiting: VecDeque<u64>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, oldest_waiting: None, waiting: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn enqueue(&mut self, id: u64) {
+        if self.waiting.is_empty() {
+            self.oldest_waiting = Some(Instant::now());
+        }
+        self.waiting.push_back(id);
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Pop the ids admitted by a `Prefill` action.
+    pub fn admit(&mut self, n: usize) -> Vec<u64> {
+        let out: Vec<u64> = (0..n).filter_map(|_| self.waiting.pop_front()).collect();
+        if self.waiting.is_empty() {
+            self.oldest_waiting = None;
+        } else {
+            self.oldest_waiting = Some(Instant::now());
+        }
+        out
+    }
+
+    fn fit(sizes: &[usize], n: usize) -> Option<usize> {
+        sizes.iter().copied().filter(|&s| s >= n).min()
+    }
+
+    fn largest(sizes: &[usize]) -> usize {
+        sizes.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Decide the next action given the number of running sequences.
+    pub fn next_action(&self, running: usize, now: Instant) -> Action {
+        let p = &self.policy;
+        let slots_free = p.max_running.saturating_sub(running);
+        let max_prefill = Self::largest(&p.prefill_sizes).min(slots_free);
+        let can_prefill = !self.waiting.is_empty() && max_prefill > 0;
+
+        // Anti-starvation: with a full complement of running sequences,
+        // keep decoding.
+        if running >= p.decode_priority_threshold && running > 0 {
+            return Action::Decode { size: Self::fit(&p.decode_sizes, running).unwrap_or(running) };
+        }
+
+        if can_prefill {
+            let waited = self
+                .oldest_waiting
+                .map(|t| now.duration_since(t))
+                .unwrap_or(Duration::ZERO);
+            let enough_for_full_batch = self.waiting.len() >= max_prefill;
+            // Admit when a full batch is ready, when requests have aged,
+            // or when nothing is running anyway.
+            if enough_for_full_batch || waited >= p.max_prefill_wait || running == 0 {
+                let admit = self.waiting.len().min(max_prefill);
+                if let Some(size) = Self::fit(&p.prefill_sizes, admit) {
+                    return Action::Prefill { admit, size };
+                }
+            }
+        }
+
+        if running > 0 {
+            if let Some(size) = Self::fit(&p.decode_sizes, running) {
+                return Action::Decode { size };
+            }
+            // More running sequences than the largest compiled batch:
+            // decode in chunks of the largest size.
+            return Action::Decode { size: Self::largest(&p.decode_sizes) };
+        }
+
+        Action::Idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        Batcher::new(BatchPolicy {
+            prefill_sizes: vec![1, 2, 4],
+            decode_sizes: vec![1, 2, 4, 8],
+            max_prefill_wait: Duration::from_millis(2),
+            max_running: 8,
+            decode_priority_threshold: 6,
+        })
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let b = batcher();
+        assert_eq!(b.next_action(0, Instant::now()), Action::Idle);
+    }
+
+    #[test]
+    fn immediate_prefill_when_nothing_running() {
+        let mut b = batcher();
+        b.enqueue(1);
+        assert_eq!(b.next_action(0, Instant::now()), Action::Prefill { admit: 1, size: 1 });
+    }
+
+    #[test]
+    fn full_batch_admits_at_compiled_size() {
+        let mut b = batcher();
+        for i in 0..5 {
+            b.enqueue(i);
+        }
+        // 5 waiting, cap 4 → admit 4 as a b=4 prefill.
+        assert_eq!(b.next_action(1, Instant::now()), Action::Prefill { admit: 4, size: 4 });
+        assert_eq!(b.admit(4), vec![0, 1, 2, 3]);
+        assert_eq!(b.waiting(), 1);
+    }
+
+    #[test]
+    fn partial_batch_waits_then_ages_out() {
+        let mut b = batcher();
+        b.enqueue(1);
+        // One waiting, one running, not aged → decode wins.
+        let now = Instant::now();
+        assert_eq!(b.next_action(1, now), Action::Decode { size: 1 });
+        // After the wait expires, the partial prefill is admitted.
+        let later = now + Duration::from_millis(50);
+        assert_eq!(b.next_action(1, later), Action::Prefill { admit: 1, size: 1 });
+    }
+
+    #[test]
+    fn decode_priority_when_saturated() {
+        let mut b = batcher();
+        for i in 0..4 {
+            b.enqueue(i);
+        }
+        assert_eq!(b.next_action(6, Instant::now()), Action::Decode { size: 8 });
+    }
+
+    #[test]
+    fn padding_picks_next_compiled_size() {
+        let b = batcher();
+        assert_eq!(b.next_action(3, Instant::now()), Action::Decode { size: 4 });
+        assert_eq!(b.next_action(5, Instant::now()), Action::Decode { size: 8 });
+    }
+
+    #[test]
+    fn slot_limit_blocks_prefill() {
+        let mut b = batcher();
+        b.enqueue(1);
+        // max_running = 8, all slots taken → decode only.
+        assert_eq!(b.next_action(8, Instant::now()), Action::Decode { size: 8 });
+    }
+}

@@ -1,0 +1,126 @@
+//! Serving metrics: latency percentiles, throughput, batch occupancy.
+
+use std::time::Instant;
+
+/// Online metrics collector (single scheduler thread, no locking).
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_batches: u64,
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    /// Sum of (active / padded) per decode step, for mean occupancy.
+    occupancy_sum: f64,
+    ttft: Vec<f64>,
+    total: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            requests_completed: 0,
+            tokens_generated: 0,
+            prefill_batches: 0,
+            prefill_tokens: 0,
+            decode_steps: 0,
+            occupancy_sum: 0.0,
+            ttft: Vec::new(),
+            total: Vec::new(),
+        }
+    }
+
+    pub fn record_prefill(&mut self, admitted: usize, tokens: usize) {
+        self.prefill_batches += 1;
+        self.prefill_tokens += tokens as u64;
+        let _ = admitted;
+    }
+
+    pub fn record_decode(&mut self, active: usize, padded: usize) {
+        self.decode_steps += 1;
+        self.tokens_generated += active as u64;
+        self.occupancy_sum += active as f64 / padded.max(1) as f64;
+    }
+
+    pub fn record_completion(&mut self, ttft: f64, total: f64) {
+        self.requests_completed += 1;
+        self.ttft.push(ttft);
+        self.total.push(total);
+    }
+
+    fn pct(sorted: &[f64], p: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Snapshot as a human-readable report.
+    pub fn report(&self) -> String {
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        let mut ttft = self.ttft.clone();
+        let mut total = self.total.clone();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        total.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        format!(
+            "requests={} tokens={} ({:.1} tok/s) prefill_batches={} decode_steps={} \
+             occupancy={:.2} ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
+            self.requests_completed,
+            self.tokens_generated,
+            self.tokens_generated as f64 / elapsed,
+            self.prefill_batches,
+            self.decode_steps,
+            self.occupancy_sum / self.decode_steps.max(1) as f64,
+            Self::pct(&ttft, 0.5) * 1e3,
+            Self::pct(&ttft, 0.99) * 1e3,
+            Self::pct(&total, 0.5) * 1e3,
+            Self::pct(&total, 0.99) * 1e3,
+        )
+    }
+
+    /// Mean decode-batch occupancy (active/padded).
+    pub fn mean_occupancy(&self) -> f64 {
+        self.occupancy_sum / self.decode_steps.max(1) as f64
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.tokens_generated as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.record_prefill(2, 64);
+        m.record_decode(2, 4);
+        m.record_decode(4, 4);
+        m.record_completion(0.001, 0.010);
+        assert_eq!(m.tokens_generated, 6);
+        assert_eq!(m.decode_steps, 2);
+        assert!((m.mean_occupancy() - 0.75).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("requests=1"));
+    }
+
+    #[test]
+    fn percentiles() {
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let p50 = Metrics::pct(&v, 0.5);
+        assert!((50.0..=51.0).contains(&p50), "p50 = {p50}");
+        assert_eq!(Metrics::pct(&v, 0.99), 99.0);
+        assert_eq!(Metrics::pct(&[], 0.5), 0.0);
+    }
+}

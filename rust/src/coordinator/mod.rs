@@ -1,0 +1,18 @@
+//! The L3 serving coordinator: request router, dynamic batcher,
+//! prefill/decode scheduler, and the recurrent-state manager (Mamba's
+//! fixed-size analogue of a KV-cache manager). Python never runs here —
+//! the engine executes AOT-compiled HLO artifacts via PJRT.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod state;
+
+pub use batcher::{Action, Batcher, BatchPolicy};
+pub use metrics::Metrics;
+pub use request::{Request, Response, WorkloadGen};
+pub use scheduler::Scheduler;
+pub use server::{serve_all, Server};
+pub use state::StateManager;

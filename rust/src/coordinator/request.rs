@@ -1,0 +1,126 @@
+//! Request types and the synthetic workload generator.
+
+use std::time::Instant;
+
+use crate::util::XorShift;
+
+/// A generation request entering the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (length must equal the compiled prefill length).
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate.
+    pub max_new_tokens: usize,
+}
+
+/// Completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time from submission to first generated token (seconds).
+    pub ttft: f64,
+    /// Total time from submission to completion (seconds).
+    pub total: f64,
+}
+
+/// Coordinator-internal tracking for an in-flight request.
+#[derive(Debug)]
+pub struct InFlight {
+    pub req: Request,
+    pub submitted: Instant,
+    pub first_token: Option<Instant>,
+    pub generated: Vec<i32>,
+}
+
+impl InFlight {
+    pub fn new(req: Request) -> InFlight {
+        InFlight { req, submitted: Instant::now(), first_token: None, generated: Vec::new() }
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.req.max_new_tokens
+    }
+
+    pub fn finish(&self) -> Response {
+        let now = Instant::now();
+        Response {
+            id: self.req.id,
+            tokens: self.generated.clone(),
+            ttft: self
+                .first_token
+                .map(|t| (t - self.submitted).as_secs_f64())
+                .unwrap_or_default(),
+            total: (now - self.submitted).as_secs_f64(),
+        }
+    }
+}
+
+/// Synthetic workload generator: prompts of the compiled prefill length
+/// with scenario-shaped generation lengths (mirrors paper Figure 12's
+/// context:generation ratios at serving scale).
+#[derive(Debug)]
+pub struct WorkloadGen {
+    rng: XorShift,
+    vocab: u64,
+    prompt_len: usize,
+    gen_lo: usize,
+    gen_hi: usize,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, vocab: usize, prompt_len: usize, gen_lo: usize, gen_hi: usize) -> Self {
+        WorkloadGen {
+            rng: XorShift::new(seed),
+            vocab: vocab as u64,
+            prompt_len,
+            gen_lo,
+            gen_hi: gen_hi.max(gen_lo),
+            next_id: 0,
+        }
+    }
+
+    pub fn next_request(&mut self) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        let prompt =
+            (0..self.prompt_len).map(|_| self.rng.below(self.vocab) as i32).collect();
+        let max_new_tokens = self.rng.range(self.gen_lo as u64, self.gen_hi as u64) as usize;
+        Request { id, prompt, max_new_tokens }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_and_in_range() {
+        let mut g1 = WorkloadGen::new(5, 17, 8, 2, 6);
+        let mut g2 = WorkloadGen::new(5, 17, 8, 2, 6);
+        for _ in 0..50 {
+            let a = g1.next_request();
+            let b = g2.next_request();
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.prompt.len(), 8);
+            assert!(a.prompt.iter().all(|&t| (0..17).contains(&t)));
+            assert!((2..=6).contains(&a.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn inflight_lifecycle() {
+        let mut f = InFlight::new(Request { id: 1, prompt: vec![0], max_new_tokens: 2 });
+        assert!(!f.done());
+        f.generated.push(3);
+        f.first_token = Some(std::time::Instant::now());
+        f.generated.push(4);
+        assert!(f.done());
+        let r = f.finish();
+        assert_eq!(r.tokens, vec![3, 4]);
+        assert!(r.total >= r.ttft);
+    }
+}

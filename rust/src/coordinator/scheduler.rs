@@ -1,0 +1,276 @@
+//! The serving scheduler: drives prefill/decode batches over an
+//! [`Executor`], carrying per-sequence recurrent state between steps.
+//!
+//! One `tick()` = one engine invocation (a prefill batch or a decode
+//! step), chosen by the [`Batcher`] policy. Greedy (argmax) sampling.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::engine::{argmax_rows, Executor};
+
+use super::batcher::{Action, Batcher, BatchPolicy};
+use super::metrics::Metrics;
+use super::request::{InFlight, Request, Response};
+use super::state::StateManager;
+
+/// Single-threaded scheduling core (wrapped by [`super::server::Server`]
+/// for threaded serving).
+pub struct Scheduler<E: Executor> {
+    engine: E,
+    batcher: Batcher,
+    states: StateManager,
+    /// Submitted, awaiting prefill.
+    waiting: BTreeMap<u64, InFlight>,
+    /// Prefilled, generating.
+    running: BTreeMap<u64, InFlight>,
+    metrics: Metrics,
+}
+
+impl<E: Executor> Scheduler<E> {
+    pub fn new(engine: E, policy: BatchPolicy) -> Scheduler<E> {
+        let m = engine.manifest();
+        let states = StateManager::new(
+            m.n_layer,
+            m.d_inner * (m.d_conv - 1),
+            m.d_inner * m.d_state,
+        );
+        Scheduler {
+            engine,
+            batcher: Batcher::new(policy),
+            states,
+            waiting: BTreeMap::new(),
+            running: BTreeMap::new(),
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Accept a request (prompt must match the compiled prefill length).
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        let want = self.engine.manifest().prefill_len;
+        anyhow::ensure!(
+            req.prompt.len() == want,
+            "prompt length {} != compiled prefill length {want}",
+            req.prompt.len()
+        );
+        anyhow::ensure!(req.max_new_tokens >= 1, "must generate at least one token");
+        self.batcher.enqueue(req.id);
+        self.waiting.insert(req.id, InFlight::new(req));
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::artifact::Manifest {
+        self.engine.manifest()
+    }
+
+    /// One scheduling step. Returns completed responses (possibly
+    /// empty). `Ok(false)` means there was nothing to do.
+    pub fn tick(&mut self) -> Result<(Vec<Response>, bool)> {
+        let action = self.batcher.next_action(self.running.len(), Instant::now());
+        match action {
+            Action::Idle => Ok((Vec::new(), false)),
+            Action::Prefill { admit, size } => {
+                let ids = self.batcher.admit(admit);
+                let done = self.do_prefill(&ids, size)?;
+                Ok((done, true))
+            }
+            Action::Decode { size } => {
+                let ids: Vec<u64> = self.running.keys().copied().take(size).collect();
+                let done = self.do_decode(&ids, size)?;
+                Ok((done, true))
+            }
+        }
+    }
+
+    /// Run until every submitted request completes; returns responses in
+    /// completion order.
+    pub fn run_until_drained(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            let (done, progressed) = self.tick()?;
+            out.extend(done);
+            if !progressed && self.pending() > 0 {
+                // Only reachable when requests wait on the age-out timer.
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        Ok(out)
+    }
+
+    fn vocab(&self) -> usize {
+        self.engine.manifest().vocab
+    }
+
+    fn do_prefill(&mut self, ids: &[u64], size: usize) -> Result<Vec<Response>> {
+        assert!(!ids.is_empty() && ids.len() <= size);
+        let plen = self.engine.manifest().prefill_len;
+        let mut tokens = Vec::with_capacity(size * plen);
+        for b in 0..size {
+            let id = ids[b.min(ids.len() - 1)]; // pad by repeating last
+            tokens.extend_from_slice(&self.waiting[&id].req.prompt);
+        }
+        let out = self.engine.prefill(size, &tokens)?;
+        self.metrics.record_prefill(ids.len(), ids.len() * plen);
+        let next = argmax_rows(&out.logits, self.vocab());
+        let now = Instant::now();
+        let mut completed = Vec::new();
+        for (b, &id) in ids.iter().enumerate() {
+            let mut fl = self.waiting.remove(&id).expect("waiting entry");
+            fl.first_token = Some(now);
+            fl.generated.push(next[b]);
+            self.metrics.record_decode(1, 1); // the prefill-produced token
+            if fl.done() {
+                completed.push(fl.finish());
+                self.metrics
+                    .record_completion(completed.last().unwrap().ttft, completed.last().unwrap().total);
+            } else {
+                self.states.install_from_batch(id, size, b, &out.conv_state, &out.ssm_state);
+                self.running.insert(id, fl);
+            }
+        }
+        Ok(completed)
+    }
+
+    fn do_decode(&mut self, ids: &[u64], size: usize) -> Result<Vec<Response>> {
+        assert!(!ids.is_empty() && ids.len() <= size);
+        let tokens: Vec<i32> = (0..size)
+            .map(|b| {
+                let id = ids[b.min(ids.len() - 1)];
+                *self.running[&id].generated.last().expect("running seq has a token")
+            })
+            .collect();
+        let (conv, ssm) = self.states.gather(ids, size);
+        let out = self.engine.decode(size, &tokens, &conv, &ssm)?;
+        self.metrics.record_decode(ids.len(), size);
+        let next = argmax_rows(&out.logits, self.vocab());
+        self.states.scatter(ids, size, &out.conv_state, &out.ssm_state);
+        let mut completed = Vec::new();
+        for (b, &id) in ids.iter().enumerate() {
+            let fl = self.running.get_mut(&id).expect("running entry");
+            fl.generated.push(next[b]);
+            if fl.done() {
+                let fl = self.running.remove(&id).unwrap();
+                self.states.release(id);
+                let resp = fl.finish();
+                self.metrics.record_completion(resp.ttft, resp.total);
+                completed.push(resp);
+            }
+        }
+        Ok(completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::WorkloadGen;
+    use crate::runtime::mock::MockEngine;
+
+    fn sched() -> Scheduler<MockEngine> {
+        Scheduler::new(MockEngine::new(), BatchPolicy::default())
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut s = sched();
+        let m = s.manifest();
+        let (vocab, plen) = (m.vocab, m.prefill_len);
+        let mut gen = WorkloadGen::new(1, vocab, plen, 3, 3);
+        s.submit(gen.next_request()).unwrap();
+        let out = s.run_until_drained().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 3);
+        assert!(out[0].total >= out[0].ttft);
+        assert_eq!(s.metrics().requests_completed, 1);
+    }
+
+    #[test]
+    fn batched_equals_solo_generation() {
+        // The same request must generate the same tokens whether served
+        // alone or dynamically batched with others — state gather/
+        // scatter and padding must not leak across sequences.
+        let m = MockEngine::new();
+        let (vocab, plen) = (m.manifest().vocab, m.manifest().prefill_len);
+        let mut gen = WorkloadGen::new(42, vocab, plen, 4, 4);
+        let reqs: Vec<_> = (0..5).map(|_| gen.next_request()).collect();
+
+        // Solo runs.
+        let mut solo_tokens = Vec::new();
+        for r in &reqs {
+            let mut s = sched();
+            s.submit(r.clone()).unwrap();
+            let out = s.run_until_drained().unwrap();
+            solo_tokens.push(out[0].tokens.clone());
+        }
+
+        // Batched run.
+        let mut s = sched();
+        for r in &reqs {
+            s.submit(r.clone()).unwrap();
+        }
+        let mut out = s.run_until_drained().unwrap();
+        out.sort_by_key(|r| r.id);
+        for (resp, solo) in out.iter().zip(&solo_tokens) {
+            assert_eq!(&resp.tokens, solo, "request {} diverged under batching", resp.id);
+        }
+    }
+
+    #[test]
+    fn staggered_submission_with_varied_lengths() {
+        let mut s = sched();
+        let m = s.manifest();
+        let (vocab, plen) = (m.vocab, m.prefill_len);
+        let mut gen = WorkloadGen::new(7, vocab, plen, 1, 9);
+        let mut expected = 0usize;
+        let mut responses = Vec::new();
+        for wave in 0..4 {
+            for _ in 0..=wave {
+                let r = gen.next_request();
+                expected += 1;
+                s.submit(r).unwrap();
+            }
+            // Interleave some ticks between waves.
+            for _ in 0..3 {
+                let (done, _) = s.tick().unwrap();
+                responses.extend(done);
+            }
+        }
+        responses.extend(s.run_until_drained().unwrap());
+        assert_eq!(responses.len(), expected);
+        for r in &responses {
+            assert!(!r.tokens.is_empty());
+        }
+        // All state slots were released.
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_prompt_length() {
+        let mut s = sched();
+        let bad = Request { id: 1, prompt: vec![0; 3], max_new_tokens: 1 };
+        assert!(s.submit(bad).is_err());
+    }
+
+    #[test]
+    fn metrics_track_tokens() {
+        let mut s = sched();
+        let m = s.manifest();
+        let mut gen = WorkloadGen::new(3, m.vocab, m.prefill_len, 5, 5);
+        for _ in 0..3 {
+            s.submit(gen.next_request()).unwrap();
+        }
+        s.run_until_drained().unwrap();
+        assert_eq!(s.metrics().tokens_generated, 15);
+        assert!(s.metrics().mean_occupancy() > 0.0);
+    }
+}

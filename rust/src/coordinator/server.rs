@@ -1,0 +1,238 @@
+//! Threaded serving front-end: a request router feeding one or more
+//! scheduler workers over channels (std threads — the vendored crate
+//! set has no tokio; see DESIGN.md §4).
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::runtime::engine::Executor;
+
+use super::batcher::BatchPolicy;
+use super::request::{Request, Response};
+use super::scheduler::Scheduler;
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Report(Sender<String>),
+    Shutdown,
+}
+
+/// One worker: a scheduler on its own thread.
+struct Worker {
+    tx: Sender<Msg>,
+    handle: JoinHandle<()>,
+    /// Requests routed to this worker (router-side load estimate).
+    routed: u64,
+}
+
+/// The router/server: owns the workers, routes by least-load.
+pub struct Server {
+    workers: Vec<Worker>,
+}
+
+impl Server {
+    /// Start with one worker per engine *factory*. Each worker
+    /// constructs its engine on its own thread (PJRT handles are not
+    /// `Send`). Multiple workers model the paper's leader/worker split:
+    /// the router is the leader, each PJRT engine a worker.
+    pub fn start<E, F>(factories: Vec<F>, policy: BatchPolicy) -> Server
+    where
+        E: Executor,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        let workers = factories
+            .into_iter()
+            .map(|factory| {
+                let (tx, rx) = channel::<Msg>();
+                let pol = policy.clone();
+                let handle = std::thread::spawn(move || match factory() {
+                    Ok(engine) => worker_loop(engine, pol, rx),
+                    Err(e) => eprintln!("coordinator: engine construction failed: {e}"),
+                });
+                Worker { tx, handle, routed: 0 }
+            })
+            .collect();
+        Server { workers }
+    }
+
+    /// Route a request to the least-loaded worker; returns the response
+    /// channel.
+    pub fn submit(&mut self, req: Request) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let w = self
+            .workers
+            .iter_mut()
+            .min_by_key(|w| w.routed)
+            .expect("at least one worker");
+        w.routed += 1;
+        let _ = w.tx.send(Msg::Submit(req, tx));
+        rx
+    }
+
+    /// Collect metrics reports from all workers.
+    pub fn reports(&self) -> Vec<String> {
+        self.workers
+            .iter()
+            .filter_map(|w| {
+                let (tx, rx) = channel();
+                w.tx.send(Msg::Report(tx)).ok()?;
+                rx.recv().ok()
+            })
+            .collect()
+    }
+
+    /// Graceful shutdown: drains in-flight work first.
+    pub fn shutdown(self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers {
+            let _ = w.handle.join();
+        }
+    }
+}
+
+fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, rx: Receiver<Msg>) {
+    let mut sched = Scheduler::new(engine, policy);
+    let mut sinks: std::collections::BTreeMap<u64, Sender<Response>> =
+        std::collections::BTreeMap::new();
+    let mut shutting_down = false;
+    loop {
+        // Drain the mailbox without blocking while work is in flight.
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Submit(req, sink)) => {
+                    sinks.insert(req.id, sink);
+                    if let Err(e) = sched.submit(req) {
+                        eprintln!("coordinator: rejected request: {e}");
+                    }
+                }
+                Ok(Msg::Report(tx)) => {
+                    let _ = tx.send(sched.metrics().report());
+                }
+                Ok(Msg::Shutdown) => shutting_down = true,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => shutting_down = true,
+            }
+            if shutting_down {
+                break;
+            }
+        }
+        if shutting_down && sched.pending() == 0 {
+            return;
+        }
+
+        match sched.tick() {
+            Ok((done, progressed)) => {
+                for resp in done {
+                    if let Some(sink) = sinks.remove(&resp.id) {
+                        let _ = sink.send(resp);
+                    }
+                }
+                if !progressed {
+                    if shutting_down && sched.pending() == 0 {
+                        return;
+                    }
+                    // Idle: block briefly for new work.
+                    match rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                        Ok(Msg::Submit(req, sink)) => {
+                            sinks.insert(req.id, sink);
+                            if let Err(e) = sched.submit(req) {
+                                eprintln!("coordinator: rejected request: {e}");
+                            }
+                        }
+                        Ok(Msg::Report(tx)) => {
+                            let _ = tx.send(sched.metrics().report());
+                        }
+                        Ok(Msg::Shutdown) => shutting_down = true,
+                        Err(_) => {}
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("coordinator: engine error: {e}");
+                // Fail-stop for this worker: report and exit.
+                return;
+            }
+        }
+    }
+}
+
+/// Convenience: serve a fixed batch of requests to completion on one
+/// executor and return (responses, metrics report).
+pub fn serve_all<E, F>(
+    factory: F,
+    policy: BatchPolicy,
+    reqs: Vec<Request>,
+) -> Result<(Vec<Response>, String)>
+where
+    E: Executor,
+    F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+{
+    let mut server = Server::start(vec![factory], policy);
+    let sinks: Vec<Receiver<Response>> =
+        reqs.into_iter().map(|r| server.submit(r)).collect();
+    let mut responses = Vec::new();
+    for rx in sinks {
+        responses.push(rx.recv()?);
+    }
+    let report = server.reports().join("\n");
+    server.shutdown();
+    Ok((responses, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::WorkloadGen;
+    use crate::runtime::mock::MockEngine;
+
+    #[test]
+    fn serve_all_round_trips() {
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let mut gen = WorkloadGen::new(9, vocab, plen, 2, 5);
+        let reqs: Vec<Request> = (0..10).map(|_| gen.next_request()).collect();
+        let want: Vec<(u64, usize)> =
+            reqs.iter().map(|r| (r.id, r.max_new_tokens)).collect();
+        let (mut resps, report) =
+            serve_all(|| Ok(MockEngine::new()), BatchPolicy::default(), reqs).unwrap();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), want.len());
+        for (resp, (id, n)) in resps.iter().zip(&want) {
+            assert_eq!(resp.id, *id);
+            assert_eq!(resp.tokens.len(), *n);
+        }
+        assert!(report.contains("requests=10"), "{report}");
+    }
+
+    #[test]
+    fn multi_worker_routing_balances() {
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let factories: Vec<fn() -> anyhow::Result<MockEngine>> =
+            vec![|| Ok(MockEngine::new()), || Ok(MockEngine::new())];
+        let mut server = Server::start(factories, BatchPolicy::default());
+        let mut gen = WorkloadGen::new(11, vocab, plen, 2, 2);
+        let rxs: Vec<_> = (0..8).map(|_| server.submit(gen.next_request())).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.tokens.len(), 2);
+        }
+        let reports = server.reports();
+        assert_eq!(reports.len(), 2);
+        // Both workers saw traffic.
+        for r in &reports {
+            assert!(!r.contains("requests=0"), "{r}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_no_work_is_clean() {
+        let server = Server::start(vec![|| Ok(MockEngine::new())], BatchPolicy::default());
+        server.shutdown();
+    }
+}

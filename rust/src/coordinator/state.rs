@@ -1,0 +1,176 @@
+//! Recurrent-state manager: Mamba's analogue of a KV-cache manager.
+//!
+//! Unlike attention's ever-growing KV cache, Mamba's per-sequence state
+//! is *fixed-size* (the paper's "compressed summary": `H` is D×N per
+//! layer plus the J−1 conv tail) — so the manager is a slab of
+//! constant-size slots with gather/scatter into the PJRT batch layout
+//! (`[layers, batch, …]`, layer-major).
+
+use std::collections::BTreeMap;
+
+/// Per-sequence recurrent state, stored per-sequence-major
+/// (`[layers, per_layer]` contiguous).
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
+}
+
+/// Slab of sequence states keyed by sequence id.
+#[derive(Debug)]
+pub struct StateManager {
+    n_layer: usize,
+    conv_per_layer: usize,
+    ssm_per_layer: usize,
+    slots: BTreeMap<u64, SeqState>,
+    /// High-water mark (for metrics / capacity planning).
+    peak: usize,
+}
+
+impl StateManager {
+    pub fn new(n_layer: usize, conv_per_layer: usize, ssm_per_layer: usize) -> StateManager {
+        StateManager { n_layer, conv_per_layer, ssm_per_layer, slots: BTreeMap::new(), peak: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Bytes held per sequence (fixed — the Mamba property).
+    pub fn bytes_per_seq(&self) -> usize {
+        self.n_layer * (self.conv_per_layer + self.ssm_per_layer) * 4
+    }
+
+    pub fn contains(&self, seq: u64) -> bool {
+        self.slots.contains_key(&seq)
+    }
+
+    /// Install a sequence's state from a *packed batch* output at row
+    /// `b` of `batch` (layer-major unpack).
+    pub fn install_from_batch(
+        &mut self,
+        seq: u64,
+        batch: usize,
+        b: usize,
+        conv_batch: &[f32],
+        ssm_batch: &[f32],
+    ) {
+        let (cp, sp) = (self.conv_per_layer, self.ssm_per_layer);
+        let mut conv = Vec::with_capacity(self.n_layer * cp);
+        let mut ssm = Vec::with_capacity(self.n_layer * sp);
+        for l in 0..self.n_layer {
+            conv.extend_from_slice(&conv_batch[(l * batch + b) * cp..(l * batch + b + 1) * cp]);
+            ssm.extend_from_slice(&ssm_batch[(l * batch + b) * sp..(l * batch + b + 1) * sp]);
+        }
+        self.slots.insert(seq, SeqState { conv, ssm });
+        self.peak = self.peak.max(self.slots.len());
+    }
+
+    /// Gather `seqs` (padding the tail by repeating the last sequence up
+    /// to `batch`) into packed layer-major buffers for the engine.
+    ///
+    /// Returns `(conv, ssm)`. Panics if any sequence is missing.
+    pub fn gather(&self, seqs: &[u64], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(!seqs.is_empty() && seqs.len() <= batch);
+        let (cp, sp) = (self.conv_per_layer, self.ssm_per_layer);
+        let mut conv = vec![0f32; self.n_layer * batch * cp];
+        let mut ssm = vec![0f32; self.n_layer * batch * sp];
+        for b in 0..batch {
+            let seq = seqs[b.min(seqs.len() - 1)];
+            let st = self.slots.get(&seq).unwrap_or_else(|| panic!("missing state {seq}"));
+            for l in 0..self.n_layer {
+                conv[(l * batch + b) * cp..(l * batch + b + 1) * cp]
+                    .copy_from_slice(&st.conv[l * cp..(l + 1) * cp]);
+                ssm[(l * batch + b) * sp..(l * batch + b + 1) * sp]
+                    .copy_from_slice(&st.ssm[l * sp..(l + 1) * sp]);
+            }
+        }
+        (conv, ssm)
+    }
+
+    /// Scatter a decode step's packed outputs back into the slots of
+    /// `seqs` (ignoring padded rows).
+    pub fn scatter(&mut self, seqs: &[u64], batch: usize, conv_batch: &[f32], ssm_batch: &[f32]) {
+        for (b, &seq) in seqs.iter().enumerate() {
+            assert!(b < batch);
+            self.install_from_batch(seq, batch, b, conv_batch, ssm_batch);
+        }
+    }
+
+    /// Drop a finished sequence, freeing its slot.
+    pub fn release(&mut self, seq: u64) -> bool {
+        self.slots.remove(&seq).is_some()
+    }
+
+    /// Direct access (tests / debugging).
+    pub fn get(&self, seq: u64) -> Option<&SeqState> {
+        self.slots.get(&seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> StateManager {
+        StateManager::new(2, 3, 4)
+    }
+
+    #[test]
+    fn install_gather_roundtrip() {
+        let mut m = mgr();
+        // Batch of 2 in layer-major layout: layer0[s0,s1], layer1[s0,s1].
+        let conv: Vec<f32> = (0..2 * 2 * 3).map(|x| x as f32).collect();
+        let ssm: Vec<f32> = (100..100 + 2 * 2 * 4).map(|x| x as f32).collect();
+        m.install_from_batch(7, 2, 0, &conv, &ssm);
+        m.install_from_batch(9, 2, 1, &conv, &ssm);
+        assert_eq!(m.len(), 2);
+        let (c2, s2) = m.gather(&[7, 9], 2);
+        assert_eq!(c2, conv);
+        assert_eq!(s2, ssm);
+    }
+
+    #[test]
+    fn gather_pads_with_last_sequence() {
+        let mut m = mgr();
+        let conv: Vec<f32> = (0..6).map(|x| x as f32).collect(); // batch 1
+        let ssm: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        m.install_from_batch(1, 1, 0, &conv, &ssm);
+        let (c, s) = m.gather(&[1], 4);
+        assert_eq!(c.len(), 2 * 4 * 3);
+        // Every row equals sequence 1's state.
+        for b in 0..4 {
+            for l in 0..2 {
+                assert_eq!(&c[(l * 4 + b) * 3..(l * 4 + b + 1) * 3], &conv[(l + b * 0) * 3..][..3]);
+            }
+        }
+        let _ = s;
+    }
+
+    #[test]
+    fn release_frees_slot() {
+        let mut m = mgr();
+        let conv = vec![0f32; 6];
+        let ssm = vec![0f32; 8];
+        m.install_from_batch(5, 1, 0, &conv, &ssm);
+        assert!(m.contains(5));
+        assert!(m.release(5));
+        assert!(!m.release(5));
+        assert!(m.is_empty());
+        assert_eq!(m.peak(), 1);
+    }
+
+    #[test]
+    fn bytes_per_seq_fixed() {
+        let m = mgr();
+        assert_eq!(m.bytes_per_seq(), 2 * (3 + 4) * 4);
+    }
+}

@@ -1,0 +1,387 @@
+//! Cascades: ordered DAGs of extended Einsums connected by
+//! producer→consumer tensor edges (paper Figure 1 / Figure 9).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::spec::EinsumSpec;
+use super::tensor::{TensorClass, TensorSpec};
+
+/// A producer→consumer dependency edge: Einsum `from` produces tensor
+/// `tensor`, Einsum `to` consumes it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    pub tensor: String,
+    /// True when the consumer reads a previous generation (`H[i-1]`) or
+    /// a window — drawn dashed in paper Figure 9.
+    pub recurrent: bool,
+}
+
+/// An ordered cascade of Einsums (a sequential DAG, as Algorithm 1
+/// assumes).
+#[derive(Debug, Clone)]
+pub struct Cascade {
+    pub name: String,
+    einsums: Vec<EinsumSpec>,
+}
+
+impl Cascade {
+    pub fn new(name: impl Into<String>, einsums: Vec<EinsumSpec>) -> Self {
+        Cascade { name: name.into(), einsums }
+    }
+
+    pub fn einsums(&self) -> &[EinsumSpec] {
+        &self.einsums
+    }
+
+    pub fn len(&self) -> usize {
+        self.einsums.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.einsums.is_empty()
+    }
+
+    /// Einsum by cascade id (the paper's yellow number).
+    pub fn by_id(&self, id: usize) -> Option<&EinsumSpec> {
+        self.einsums.iter().find(|e| e.id == id)
+    }
+
+    /// Einsum by output-tensor name.
+    pub fn by_name(&self, name: &str) -> Option<&EinsumSpec> {
+        self.einsums.iter().find(|e| e.name == name)
+    }
+
+    /// Map tensor-name → producing Einsum id.
+    pub fn producers(&self) -> BTreeMap<&str, usize> {
+        self.einsums.iter().map(|e| (e.output.name.as_str(), e.id)).collect()
+    }
+
+    /// Map tensor-name → consuming Einsum ids (in cascade order).
+    pub fn consumers(&self) -> BTreeMap<&str, Vec<usize>> {
+        let mut map: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for e in &self.einsums {
+            for name in e.input_names() {
+                map.entry(name).or_default().push(e.id);
+            }
+        }
+        map
+    }
+
+    /// All producer→consumer edges.
+    pub fn edges(&self) -> Vec<Edge> {
+        let producers = self.producers();
+        let mut edges = Vec::new();
+        for e in &self.einsums {
+            for op in &e.inputs {
+                if let Some(&from) = producers.get(op.tensor.name.as_str()) {
+                    // Recurrent self-edges (H consumed at i-1 by the same
+                    // or an earlier Einsum) are kept: they are the dashed
+                    // edges of Figure 9.
+                    let recurrent = op.is_recurrent();
+                    if from != e.id || recurrent {
+                        edges.push(Edge {
+                            from,
+                            to: e.id,
+                            tensor: op.tensor.name.clone(),
+                            recurrent,
+                        });
+                    }
+                }
+            }
+        }
+        edges
+    }
+
+    /// Tensors read by some Einsum but produced by none, excluding
+    /// weights: the cascade's true inputs (blue in Figure 1).
+    pub fn input_tensors(&self) -> Vec<&TensorSpec> {
+        let produced: BTreeSet<&str> =
+            self.einsums.iter().map(|e| e.output.name.as_str()).collect();
+        let mut seen = BTreeSet::new();
+        let mut out = Vec::new();
+        for e in &self.einsums {
+            for op in &e.inputs {
+                let t = &op.tensor;
+                if !produced.contains(t.name.as_str())
+                    && t.class != TensorClass::Weight
+                    && seen.insert(t.name.as_str())
+                {
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// All weight tensors (deduplicated).
+    pub fn weight_tensors(&self) -> Vec<&TensorSpec> {
+        let mut seen = BTreeSet::new();
+        let mut out = Vec::new();
+        for e in &self.einsums {
+            for op in &e.inputs {
+                if op.tensor.class == TensorClass::Weight && seen.insert(op.tensor.name.as_str())
+                {
+                    out.push(&op.tensor);
+                }
+            }
+        }
+        out
+    }
+
+    /// Intermediate tensors: produced by one Einsum and consumed by at
+    /// least one other.
+    pub fn intermediate_tensors(&self) -> Vec<&TensorSpec> {
+        let consumers = self.consumers();
+        self.einsums
+            .iter()
+            .filter(|e| consumers.contains_key(e.output.name.as_str()))
+            .map(|e| &e.output)
+            .collect()
+    }
+
+    /// Liveness distance of each intermediate: (tensor, producer id,
+    /// last-consumer id). Long distances (e.g. RX: 8 → 23) are the
+    /// fusion-hostile intermediates the paper calls out.
+    pub fn liveness(&self) -> Vec<(String, usize, usize)> {
+        let consumers = self.consumers();
+        let mut out = Vec::new();
+        for e in &self.einsums {
+            if let Some(cs) = consumers.get(e.output.name.as_str()) {
+                if let Some(&last) = cs.iter().max() {
+                    out.push((e.output.name.clone(), e.id, last));
+                }
+            }
+        }
+        out
+    }
+
+    /// Count of GEMM-like Einsums (paper: 7 of 24 for Mamba-1).
+    pub fn gemm_count(&self) -> usize {
+        self.einsums.iter().filter(|e| e.is_gemm_like()).count()
+    }
+
+    /// Validate structural invariants:
+    /// * ids are unique and match cascade order (sequential DAG);
+    /// * every non-recurrent intermediate operand is produced earlier;
+    /// * recurrent operands reference generational ranks only;
+    /// * output names are unique;
+    /// * rank extents agree everywhere a rank name appears.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen_out: BTreeSet<&str> = BTreeSet::new();
+        let mut extents: BTreeMap<&str, u64> = BTreeMap::new();
+        let mut prev_id = 0usize;
+        for e in &self.einsums {
+            if e.id <= prev_id {
+                bail!("einsum ids must be strictly increasing: #{} after #{}", e.id, prev_id);
+            }
+            prev_id = e.id;
+            if !seen_out.insert(e.output.name.as_str()) {
+                bail!("duplicate output tensor {}", e.output.name);
+            }
+            for r in e.output.ranks.iter().chain(e.reduction_ranks.iter()) {
+                if let Some(&ex) = extents.get(r.name.as_str()) {
+                    if ex != r.extent {
+                        bail!("rank {} has conflicting extents {} vs {}", r.name, ex, r.extent);
+                    }
+                } else {
+                    extents.insert(r.name.as_str(), r.extent);
+                }
+            }
+        }
+        // Dataflow: non-recurrent intermediates must be produced by an
+        // earlier Einsum; recurrent reads may reference later producers
+        // (previous-generation values).
+        let producers = self.producers();
+        for e in &self.einsums {
+            for op in &e.inputs {
+                let t = &op.tensor;
+                match producers.get(t.name.as_str()) {
+                    Some(&pid) => {
+                        if pid >= e.id && !op.is_recurrent() {
+                            bail!(
+                                "einsum #{} reads {} produced later (#{}) without recurrence",
+                                e.id,
+                                t.name,
+                                pid
+                            );
+                        }
+                    }
+                    None => {
+                        if t.class == TensorClass::Intermediate {
+                            bail!(
+                                "einsum #{} reads intermediate {} with no producer",
+                                e.id,
+                                t.name
+                            );
+                        }
+                    }
+                }
+                for (rank, acc) in t.ranks.iter().zip(&op.accesses) {
+                    if acc.is_recurrent() && !rank.is_generational() {
+                        bail!(
+                            "einsum #{} has recurrent access on non-generational rank {}",
+                            e.id,
+                            rank.name
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Precomputed lookup structures over a cascade.
+///
+/// `Cascade::producers()`/`consumers()` rebuild maps on every call;
+/// the analytical model's inner loop (one `evaluate` per design point ×
+/// thousands of design points in a DSE sweep) needs them memoized —
+/// build once per cascade and share (§Perf, EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct CascadeIndex {
+    /// tensor name → producing Einsum id.
+    pub producers: BTreeMap<String, usize>,
+    /// tensor name → consuming Einsum ids (cascade order).
+    pub consumers: BTreeMap<String, Vec<usize>>,
+    /// Tensors shared between Einsums (produced in-cascade, or consumed
+    /// by more than one Einsum) — the Table-I "inter-Einsum" set.
+    pub shared: BTreeSet<String>,
+}
+
+impl CascadeIndex {
+    pub fn new(c: &Cascade) -> CascadeIndex {
+        let producers: BTreeMap<String, usize> =
+            c.producers().into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        let consumers: BTreeMap<String, Vec<usize>> =
+            c.consumers().into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        let mut shared: BTreeSet<String> = producers.keys().cloned().collect();
+        for (name, cs) in &consumers {
+            if cs.len() > 1 {
+                shared.insert(name.clone());
+            }
+        }
+        CascadeIndex { producers, consumers, shared }
+    }
+
+    /// Is this tensor inter-Einsum ("shared") in the Table-I sense?
+    pub fn is_shared(&self, name: &str) -> bool {
+        self.shared.contains(name)
+    }
+
+    /// Consumers of a tensor (empty slice when none).
+    pub fn consumers_of(&self, name: &str) -> &[usize] {
+        self.consumers.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+impl fmt::Display for Cascade {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "cascade {} ({} einsums, {} GEMM-like)", self.name, self.len(), self.gemm_count())?;
+        for e in &self.einsums {
+            writeln!(f, "  {e}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::rank::{Rank, RankAccess};
+    use crate::einsum::spec::{OpKind, UnaryFn};
+    use crate::einsum::tensor::{DType, Operand, TensorClass};
+
+    fn tiny_cascade() -> Cascade {
+        let i = Rank::new("I", 8);
+        let k = Rank::new("K", 64);
+        let x = TensorSpec::new("X", vec![i.clone(), k.clone()], DType::F16, TensorClass::Input);
+        let w = TensorSpec::new("W", vec![k.clone()], DType::F16, TensorClass::Weight);
+        let z = TensorSpec::new("Z", vec![i.clone()], DType::F16, TensorClass::Intermediate);
+        let y = TensorSpec::new("Y", vec![i.clone()], DType::F16, TensorClass::Output);
+        let e1 = EinsumSpec::new(
+            1,
+            "Z",
+            z.clone(),
+            vec![Operand::plain(x), Operand::plain(w)],
+            vec![k],
+            OpKind::MulAcc,
+        );
+        let e2 = EinsumSpec::new(
+            2,
+            "Y",
+            y,
+            vec![Operand::plain(z)],
+            vec![],
+            OpKind::Unary(UnaryFn::Exp),
+        );
+        Cascade::new("tiny", vec![e1, e2])
+    }
+
+    #[test]
+    fn edges_and_maps() {
+        let c = tiny_cascade();
+        assert!(c.validate().is_ok());
+        let edges = c.edges();
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].from, 1);
+        assert_eq!(edges[0].to, 2);
+        assert_eq!(edges[0].tensor, "Z");
+        assert_eq!(c.producers().get("Z"), Some(&1));
+        assert_eq!(c.consumers().get("Z"), Some(&vec![2]));
+    }
+
+    #[test]
+    fn classification() {
+        let c = tiny_cascade();
+        assert_eq!(c.gemm_count(), 1);
+        assert_eq!(c.input_tensors().len(), 1);
+        assert_eq!(c.intermediate_tensors().len(), 1);
+        assert_eq!(c.liveness(), vec![("Z".to_string(), 1, 2)]);
+    }
+
+    #[test]
+    fn validation_rejects_missing_producer() {
+        let i = Rank::new("I", 8);
+        let ghost =
+            TensorSpec::new("G", vec![i.clone()], DType::F16, TensorClass::Intermediate);
+        let y = TensorSpec::new("Y", vec![i], DType::F16, TensorClass::Output);
+        let e = EinsumSpec::new(1, "Y", y, vec![Operand::plain(ghost)], vec![], OpKind::Mul);
+        let c = Cascade::new("bad", vec![e]);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_conflicting_extents() {
+        let ia = Rank::new("I", 8);
+        let ib = Rank::new("I", 16);
+        let x = TensorSpec::new("X", vec![ia.clone()], DType::F16, TensorClass::Input);
+        let z = TensorSpec::new("Z", vec![ia], DType::F16, TensorClass::Intermediate);
+        let y = TensorSpec::new("Y", vec![ib], DType::F16, TensorClass::Output);
+        let e1 = EinsumSpec::new(1, "Z", z.clone(), vec![Operand::plain(x)], vec![], OpKind::Mul);
+        let e2 = EinsumSpec::new(2, "Y", y, vec![Operand::plain(z)], vec![], OpKind::Mul);
+        let c = Cascade::new("bad", vec![e1, e2]);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn recurrent_access_needs_generational_rank() {
+        let i = Rank::new("I", 8); // spatial, not generational
+        let h = TensorSpec::new("H", vec![i.clone()], DType::F16, TensorClass::Recurrent);
+        let hh = TensorSpec::new("HH", vec![i], DType::F16, TensorClass::Intermediate);
+        let e = EinsumSpec::new(
+            1,
+            "HH",
+            hh,
+            vec![Operand::with_access(h, "I", RankAccess::Lagged { offset: 1 })],
+            vec![],
+            OpKind::Mul,
+        );
+        let c = Cascade::new("bad", vec![e]);
+        assert!(c.validate().is_err());
+    }
+}

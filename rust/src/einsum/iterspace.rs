@@ -1,0 +1,224 @@
+//! Iteration-space algebra.
+//!
+//! Fusion classification (paper §III-C) is purely a relation between the
+//! upstream and downstream Einsums' iteration spaces:
+//!
+//! * `IS_up ≡ IS_dwn`  → Rank-Isomorphic (RI)
+//! * `IS_up ⊃ IS_dwn`  → Rank-Subsetted (RSb)
+//! * `IS_up ⊂ IS_dwn`  → Rank-Supersetted (RSp)
+//! * otherwise (⊥)      → Rank-Disjointed (RD)
+//!
+//! An iteration space here is the *set of rank names* (with extents)
+//! spanned by an Einsum — output ranks plus reduction ranks. Set
+//! semantics over rank names match the paper's usage ("the downstream
+//! contains a rank (P) absent from the upstream").
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use super::rank::Rank;
+
+/// An iteration space: a set of named ranks.
+///
+/// Internally kept sorted by rank name for canonical comparisons and
+/// deterministic display.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct IterSpace {
+    ranks: Vec<Rank>,
+}
+
+/// Relation between two iteration spaces (paper Figure 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpaceRelation {
+    /// Identical rank sets.
+    Equal,
+    /// `self ⊃ other` (proper superset).
+    Superset,
+    /// `self ⊂ other` (proper subset).
+    Subset,
+    /// Each has ranks absent from the other (the paper writes `⊥`).
+    Disjoint,
+}
+
+impl fmt::Display for SpaceRelation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            SpaceRelation::Equal => "≡",
+            SpaceRelation::Superset => "⊃",
+            SpaceRelation::Subset => "⊂",
+            SpaceRelation::Disjoint => "⊥",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl IterSpace {
+    /// Build from a rank list; deduplicates by name and sorts.
+    pub fn new(mut ranks: Vec<Rank>) -> Self {
+        ranks.sort_by(|a, b| a.name.cmp(&b.name));
+        ranks.dedup_by(|a, b| a.name == b.name);
+        IterSpace { ranks }
+    }
+
+    /// The empty iteration space.
+    pub fn empty() -> Self {
+        IterSpace { ranks: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    /// Ranks, sorted by name.
+    pub fn ranks(&self) -> &[Rank] {
+        &self.ranks
+    }
+
+    /// Sorted rank-name set.
+    pub fn names(&self) -> BTreeSet<&str> {
+        self.ranks.iter().map(|r| r.name.as_str()).collect()
+    }
+
+    /// Rank names as a plain Vec (sorted), convenient for asserts.
+    pub fn rank_names(&self) -> Vec<&str> {
+        self.ranks.iter().map(|r| r.name.as_str()).collect()
+    }
+
+    /// Number of points = product of extents (1 for the empty space).
+    pub fn points(&self) -> u64 {
+        self.ranks.iter().map(|r| r.extent).product()
+    }
+
+    /// Does this space contain the named rank?
+    pub fn contains(&self, name: &str) -> bool {
+        self.ranks.iter().any(|r| r.name == name)
+    }
+
+    /// Look up a rank by name.
+    pub fn rank(&self, name: &str) -> Option<&Rank> {
+        self.ranks.iter().find(|r| r.name == name)
+    }
+
+    /// Set intersection (by rank name; extents taken from `self`).
+    pub fn intersect(&self, other: &IterSpace) -> IterSpace {
+        let theirs = other.names();
+        IterSpace::new(
+            self.ranks.iter().filter(|r| theirs.contains(r.name.as_str())).cloned().collect(),
+        )
+    }
+
+    /// Set union (extents from `self` win on collision).
+    pub fn union(&self, other: &IterSpace) -> IterSpace {
+        let mut ranks = self.ranks.clone();
+        let mine = self.names();
+        for r in &other.ranks {
+            if !mine.contains(r.name.as_str()) {
+                ranks.push(r.clone());
+            }
+        }
+        IterSpace::new(ranks)
+    }
+
+    /// Ranks in `self` but not in `other`.
+    pub fn difference(&self, other: &IterSpace) -> IterSpace {
+        let theirs = other.names();
+        IterSpace::new(
+            self.ranks.iter().filter(|r| !theirs.contains(r.name.as_str())).cloned().collect(),
+        )
+    }
+
+    /// `self ⊆ other` (non-strict).
+    pub fn is_subset_of(&self, other: &IterSpace) -> bool {
+        self.names().is_subset(&other.names())
+    }
+
+    /// `self ⊇ other` (non-strict).
+    pub fn is_superset_of(&self, other: &IterSpace) -> bool {
+        other.is_subset_of(self)
+    }
+
+    /// Classify the relation of `self` (upstream) to `other` (downstream).
+    pub fn relation(&self, other: &IterSpace) -> SpaceRelation {
+        let a = self.names();
+        let b = other.names();
+        if a == b {
+            SpaceRelation::Equal
+        } else if b.is_subset(&a) {
+            SpaceRelation::Superset
+        } else if a.is_subset(&b) {
+            SpaceRelation::Subset
+        } else {
+            SpaceRelation::Disjoint
+        }
+    }
+
+    /// True if any rank is generational.
+    pub fn has_generational(&self) -> bool {
+        self.ranks.iter().any(|r| r.is_generational())
+    }
+}
+
+impl fmt::Display for IterSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names: Vec<String> = self.ranks.iter().map(|r| r.to_string()).collect();
+        write!(f, "{{{}}}", names.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(names: &[(&str, u64)]) -> IterSpace {
+        IterSpace::new(names.iter().map(|(n, e)| Rank::new(*n, *e)).collect())
+    }
+
+    #[test]
+    fn relations_match_paper_figure3() {
+        let mk = sp(&[("M", 4), ("K", 8)]);
+        let m = sp(&[("M", 4)]);
+        let mp = sp(&[("M", 4), ("P", 2)]);
+        // RI: identical
+        assert_eq!(mk.relation(&mk), SpaceRelation::Equal);
+        // RSb: upstream {M,K} ⊃ downstream {M}
+        assert_eq!(mk.relation(&m), SpaceRelation::Superset);
+        // RSp: upstream {M} ⊂ downstream {M,P}
+        assert_eq!(m.relation(&mp), SpaceRelation::Subset);
+        // RD: {M,K} vs {M,P}
+        assert_eq!(mk.relation(&mp), SpaceRelation::Disjoint);
+    }
+
+    #[test]
+    fn intersect_union_difference() {
+        let a = sp(&[("M", 4), ("N", 5), ("K", 8)]);
+        let b = sp(&[("M", 4), ("N", 5), ("P", 3)]);
+        assert_eq!(a.intersect(&b).rank_names(), vec!["M", "N"]);
+        assert_eq!(a.union(&b).rank_names(), vec!["K", "M", "N", "P"]);
+        assert_eq!(a.difference(&b).rank_names(), vec!["K"]);
+        assert_eq!(a.points(), 4 * 5 * 8);
+    }
+
+    #[test]
+    fn dedup_and_canonical_order() {
+        let s = IterSpace::new(vec![Rank::new("B", 2), Rank::new("A", 3), Rank::new("B", 2)]);
+        assert_eq!(s.rank_names(), vec!["A", "B"]);
+    }
+
+    #[test]
+    fn empty_space() {
+        let e = IterSpace::empty();
+        assert!(e.is_empty());
+        assert_eq!(e.points(), 1);
+        let a = sp(&[("M", 4)]);
+        // Empty ⊂ anything non-empty.
+        assert_eq!(e.relation(&a), SpaceRelation::Subset);
+        assert_eq!(a.relation(&e), SpaceRelation::Superset);
+    }
+
+    #[test]
+    fn generational_flag() {
+        let g = IterSpace::new(vec![Rank::generational("I", 7), Rank::new("D", 3)]);
+        assert!(g.has_generational());
+        assert!(!sp(&[("D", 3)]).has_generational());
+    }
+}

@@ -1,0 +1,30 @@
+//! Extended-Einsum intermediate representation (EDGE/TeAAL-style).
+//!
+//! The paper's analysis rests on expressing Mamba as a *cascade of
+//! extended Einsums*: tensor-algebra operations over named ranks, with
+//! EDGE's two extensions — user-defined per-element operations and
+//! generational (iterative) ranks — used to express the SSM recurrence
+//! and the nonlinearities (paper §II-A).
+//!
+//! This module is the IR everything else consumes:
+//! * [`rank`] — named ranks, generational ranks, access patterns;
+//! * [`tensor`] — tensor specs + operand access patterns;
+//! * [`spec`] — one extended Einsum (output, operands, reduction, op);
+//! * [`iterspace`] — iteration-space set algebra (fusion's foundation);
+//! * [`cascade`] — ordered DAGs of Einsums with validation;
+//! * [`display`] — Figure-1-style dumps (table, Graphviz).
+
+pub mod cascade;
+pub mod display;
+pub mod iterspace;
+pub mod parser;
+pub mod rank;
+pub mod spec;
+pub mod tensor;
+
+pub use cascade::{Cascade, Edge};
+pub use iterspace::{IterSpace, SpaceRelation};
+pub use parser::parse_cascade;
+pub use rank::{Rank, RankAccess, RankKind};
+pub use spec::{EinsumSpec, Intensity, OpKind, UnaryFn};
+pub use tensor::{DType, Operand, TensorClass, TensorSpec};

@@ -1,0 +1,317 @@
+//! A small text format for extended-Einsum cascades — lets users apply
+//! the fusion taxonomy to *their own* workloads (Table II's "any
+//! workload expressible as an EDGE cascade"), from the CLI:
+//! `mambalaya fuse --cascade my_workload.einsum`.
+//!
+//! Grammar (one statement per line; `#` comments):
+//!
+//! ```text
+//! rank I* = 1024          # '*' marks a generational rank
+//! rank E  = 512
+//! input  X[I,E]           # workload input tensor
+//! weight W[E,D]
+//! Z[I,D] = X[I,E] * W[E,D] / sum E          # contraction
+//! Y[I,D] = exp(Z[I,D])                      # unary op
+//! H[I,D] = A[I,D] * H[I-1,D]                # lagged (recurrent) access
+//! C[I,D] = T[I-j:4,D] * K[D]                # windowed access (window 4)
+//! ```
+//!
+//! The op between operands is always elementwise multiply-accumulate
+//! semantics: `* ... / sum R1,R2` is a contraction over the listed
+//! ranks; without `/ sum` it is an elementwise/broadcast product; a
+//! single operand wrapped in a function name is a unary op; `+` products
+//! are adds.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::cascade::Cascade;
+use super::rank::{Rank, RankAccess};
+use super::spec::{EinsumSpec, OpKind, UnaryFn};
+use super::tensor::{DType, Operand, TensorClass, TensorSpec};
+
+/// Parse a cascade from the text format.
+pub fn parse_cascade(name: &str, text: &str) -> Result<Cascade> {
+    let mut ranks: BTreeMap<String, Rank> = BTreeMap::new();
+    let mut declared: BTreeMap<String, TensorClass> = BTreeMap::new();
+    let mut produced: BTreeMap<String, TensorSpec> = BTreeMap::new();
+    let mut einsums: Vec<EinsumSpec> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = || format!("line {}: `{}`", lineno + 1, raw.trim());
+
+        if let Some(rest) = line.strip_prefix("rank ") {
+            let (lhs, rhs) = rest.split_once('=').ok_or_else(|| anyhow!("{}: expected `rank NAME = extent`", ctx()))?;
+            let mut rname = lhs.trim().to_string();
+            let generational = rname.ends_with('*');
+            if generational {
+                rname.pop();
+            }
+            let extent: u64 = rhs.trim().parse().with_context(ctx)?;
+            let rank = if generational {
+                Rank::generational(rname.trim(), extent)
+            } else {
+                Rank::new(rname.trim(), extent)
+            };
+            ranks.insert(rank.name.clone(), rank);
+        } else if let Some(rest) = line.strip_prefix("input ") {
+            let t = parse_tensor_decl(rest.trim(), &ranks, TensorClass::Input).with_context(ctx)?;
+            declared.insert(t.name.clone(), TensorClass::Input);
+            produced.insert(t.name.clone(), t);
+        } else if let Some(rest) = line.strip_prefix("weight ") {
+            let t =
+                parse_tensor_decl(rest.trim(), &ranks, TensorClass::Weight).with_context(ctx)?;
+            declared.insert(t.name.clone(), TensorClass::Weight);
+            produced.insert(t.name.clone(), t);
+        } else {
+            // Einsum statement: `Out[ranks] = expr [/ sum R,...]`
+            let (lhs, rhs) =
+                line.split_once('=').ok_or_else(|| anyhow!("{}: expected `=`", ctx()))?;
+            let (expr, sums) = match rhs.split_once("/ sum") {
+                Some((e, s)) => (e.trim(), Some(s.trim())),
+                None => (rhs.trim(), None),
+            };
+            let reduction_ranks: Vec<Rank> = match sums {
+                None => Vec::new(),
+                Some(list) => list
+                    .split(',')
+                    .map(|r| {
+                        ranks
+                            .get(r.trim())
+                            .cloned()
+                            .ok_or_else(|| anyhow!("{}: unknown rank {}", ctx(), r.trim()))
+                    })
+                    .collect::<Result<_>>()?,
+            };
+
+            // Unary form: f(T[...]) ?
+            let (op_kind, operand_texts): (OpKind, Vec<&str>) =
+                if let Some((fname, inner)) = expr.split_once('(') {
+                    let fname = fname.trim();
+                    if !fname.is_empty() && !fname.contains(['[', '*', '+']) {
+                        let inner = inner.trim().strip_suffix(')').ok_or_else(|| {
+                            anyhow!("{}: unterminated function call", ctx())
+                        })?;
+                        (OpKind::Unary(parse_unary(fname).with_context(ctx)?), vec![inner])
+                    } else {
+                        parse_product(expr, !reduction_ranks.is_empty())?
+                    }
+                } else {
+                    parse_product(expr, !reduction_ranks.is_empty())?
+                };
+
+            // Output tensor: ranks from the bracket list.
+            let out_name = lhs.trim();
+            let out = parse_tensor_ref(out_name, &ranks)
+                .with_context(ctx)?
+                .0;
+            let out = TensorSpec::new(
+                out.name.clone(),
+                out.ranks.clone(),
+                DType::F16,
+                TensorClass::Intermediate,
+            );
+
+            let mut inputs = Vec::new();
+            for otext in operand_texts {
+                let (mut t, accesses) = parse_tensor_ref(otext.trim(), &ranks).with_context(ctx)?;
+                // Classification: declared inputs/weights keep their
+                // class; self-reference (recurrent) keeps Recurrent.
+                t.class = if t.name == out.name {
+                    TensorClass::Recurrent
+                } else if let Some(&c) = declared.get(&t.name) {
+                    c
+                } else if produced.contains_key(&t.name) {
+                    TensorClass::Intermediate
+                } else {
+                    bail!("{}: tensor {} neither declared nor produced", ctx(), t.name);
+                };
+                inputs.push(Operand { tensor: t, accesses });
+            }
+            // A self-referential output is a Recurrent tensor.
+            let out_class = if inputs.iter().any(|o| o.tensor.name == out.name) {
+                TensorClass::Recurrent
+            } else {
+                TensorClass::Intermediate
+            };
+            let out = TensorSpec::new(out.name.clone(), out.ranks, DType::F16, out_class);
+
+            produced.insert(out.name.clone(), out.clone());
+            let id = einsums.len() + 1;
+            einsums.push(EinsumSpec::new(
+                id,
+                out.name.clone(),
+                out,
+                inputs,
+                reduction_ranks,
+                op_kind,
+            ));
+        }
+    }
+    let c = Cascade::new(name, einsums);
+    c.validate()?;
+    Ok(c)
+}
+
+fn parse_unary(name: &str) -> Result<UnaryFn> {
+    Ok(match name {
+        "exp" => UnaryFn::Exp,
+        "log" => UnaryFn::Log,
+        "sqrt" => UnaryFn::Sqrt,
+        "rsqrt" => UnaryFn::Rsqrt,
+        "silu" => UnaryFn::SiLU,
+        "softplus" => UnaryFn::Softplus,
+        "sigmoid" => UnaryFn::Sigmoid,
+        "square" => UnaryFn::Square,
+        "recip" => UnaryFn::Recip,
+        "id" => UnaryFn::Identity,
+        other => bail!("unknown unary function {other}"),
+    })
+}
+
+/// Split a product expression into operands; decide the op kind.
+fn parse_product(expr: &str, has_reduction: bool) -> Result<(OpKind, Vec<&str>)> {
+    if expr.contains('+') {
+        let parts: Vec<&str> = expr.split('+').map(|s| s.trim()).collect();
+        return Ok((OpKind::Add, parts));
+    }
+    let parts: Vec<&str> = expr.split('*').map(|s| s.trim()).collect();
+    let kind = if has_reduction { OpKind::MulAcc } else { OpKind::Mul };
+    Ok((kind, parts))
+}
+
+/// Parse `Name[R1,R2-1,R3-j:4]` → (tensor spec, accesses).
+fn parse_tensor_ref(
+    text: &str,
+    ranks: &BTreeMap<String, Rank>,
+) -> Result<(TensorSpec, Vec<RankAccess>)> {
+    let (name, rest) =
+        text.split_once('[').ok_or_else(|| anyhow!("expected `Name[ranks]`, got `{text}`"))?;
+    let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("missing `]` in `{text}`"))?;
+    let mut rlist = Vec::new();
+    let mut accesses = Vec::new();
+    for item in inner.split(',') {
+        let item = item.trim();
+        // Windowed: `R-j:W`; lagged: `R-k`; plain: `R`.
+        if let Some((base, w)) = item.split_once("-j:") {
+            let rank = ranks
+                .get(base.trim())
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown rank {base}"))?;
+            accesses.push(RankAccess::Windowed { window: w.trim().parse()? });
+            rlist.push(rank);
+        } else if let Some((base, k)) = item.split_once('-') {
+            let rank = ranks
+                .get(base.trim())
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown rank {base}"))?;
+            accesses.push(RankAccess::Lagged { offset: k.trim().parse()? });
+            rlist.push(rank);
+        } else {
+            let rank =
+                ranks.get(item).cloned().ok_or_else(|| anyhow!("unknown rank {item}"))?;
+            accesses.push(RankAccess::Current);
+            rlist.push(rank);
+        }
+    }
+    Ok((
+        TensorSpec::new(name.trim(), rlist, DType::F16, TensorClass::Intermediate),
+        accesses,
+    ))
+}
+
+fn parse_tensor_decl(
+    text: &str,
+    ranks: &BTreeMap<String, Rank>,
+    class: TensorClass,
+) -> Result<TensorSpec> {
+    let (mut t, _) = parse_tensor_ref(text, ranks)?;
+    t.class = class;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{stitch, FusionVariant};
+
+    const FIG8: &str = r#"
+# Paper Figure 8, in the text format.
+rank M = 4
+rank N = 5
+rank K = 64
+rank P = 3
+rank Q = 2
+input  A[M,K]
+input  B[K,N]
+input  C[P]
+input  W[Q]
+input  D[Q]
+Z[M,N]   = A[M,K] * B[K,N]    / sum K
+Y[M,N,P] = Z[M,N] * C[P]
+X[M,N,Q] = Y[M,N,P] * W[Q]    / sum P
+V[N]     = X[M,N,Q] * D[Q]    / sum M,Q
+U[N]     = exp(V[N])
+"#;
+
+    #[test]
+    fn parses_figure8_and_stitches_to_two_groups() {
+        let c = parse_cascade("fig8-text", FIG8).unwrap();
+        assert_eq!(c.len(), 5);
+        let plan = stitch(&c, FusionVariant::RIRSbRSp);
+        let groups: Vec<Vec<usize>> = plan.groups.iter().map(|g| g.einsums.clone()).collect();
+        assert_eq!(groups, vec![vec![1, 2, 3], vec![4, 5]]);
+    }
+
+    #[test]
+    fn parses_recurrence_and_window() {
+        let text = r#"
+rank I* = 16
+rank D  = 8
+rank J  = 4
+input  U[I,D]
+weight K[D,J]
+weight A[I,D]
+T[I,D] = U[I-j:4,D] * K[D,J] / sum J
+H[I,D] = A[I,D] * H[I-1,D]
+"#;
+        let c = parse_cascade("rec", text).unwrap();
+        assert!(c.by_id(1).unwrap().is_recurrent()); // windowed conv
+        let h = c.by_id(2).unwrap();
+        assert!(h.is_recurrent());
+        assert_eq!(h.output.class, TensorClass::Recurrent);
+    }
+
+    #[test]
+    fn rejects_undeclared_tensors_and_bad_ranks() {
+        assert!(parse_cascade("bad", "Z[M] = Ghost[M]").is_err());
+        let text = "rank M = 4\nZ[M] = Q[Nope]";
+        assert!(parse_cascade("bad", text).is_err());
+    }
+
+    #[test]
+    fn add_and_unary_ops() {
+        let text = r#"
+rank M = 8
+input A[M]
+input B[M]
+S[M] = A[M] + B[M]
+E[M] = silu(S[M])
+"#;
+        let c = parse_cascade("ops", text).unwrap();
+        assert_eq!(c.by_id(1).unwrap().op, OpKind::Add);
+        assert_eq!(c.by_id(2).unwrap().op, OpKind::Unary(UnaryFn::SiLU));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let text = "# just a comment\n\nrank M = 2\ninput A[M]\nZ[M] = square(A[M])\n";
+        let c = parse_cascade("c", text).unwrap();
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Ranks: named tensor dimensions in the extended-Einsum (EDGE) sense.
+//!
+//! A rank is a named index space (e.g. `I`, `E`, `D`, `N`). Extended
+//! Einsums add *generational* ranks: ranks along which the cascade
+//! iterates, where an Einsum may reference a tensor at a previous point
+//! (`H[i-1]`) or with a non-unit stride window (the causal-conv access
+//! `TX[i-j]`). Those recurrent/windowed accesses are what make the SSM
+//! a recurrence rather than plain tensor algebra (paper §II-A).
+
+use std::fmt;
+
+/// A named rank with a concrete shape (extent).
+///
+/// Shapes are concrete because the analysis in this crate is always run
+/// against a specific workload configuration (a model size and sequence
+/// length); the cascade *builders* in [`crate::cascade`] instantiate the
+/// symbolic paper ranks with real extents.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Rank {
+    /// Rank name, e.g. `"I"`, `"E"`, `"D"`, `"N"`.
+    pub name: String,
+    /// Extent (number of points along this rank).
+    pub extent: u64,
+    /// Kind of rank: spatial (plain) or generational (iterative).
+    pub kind: RankKind,
+}
+
+/// Classification of a rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RankKind {
+    /// An ordinary tensor-algebra rank.
+    #[default]
+    Spatial,
+    /// A generational rank (EDGE): the cascade iterates along it and
+    /// Einsums may access previous generations (e.g. `H[i-1]`).
+    Generational,
+}
+
+impl Rank {
+    /// New spatial rank.
+    pub fn new(name: impl Into<String>, extent: u64) -> Self {
+        Rank { name: name.into(), extent, kind: RankKind::Spatial }
+    }
+
+    /// New generational (iterative) rank.
+    pub fn generational(name: impl Into<String>, extent: u64) -> Self {
+        Rank { name: name.into(), extent, kind: RankKind::Generational }
+    }
+
+    /// True if this rank is generational.
+    pub fn is_generational(&self) -> bool {
+        self.kind == RankKind::Generational
+    }
+}
+
+impl fmt::Display for Rank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            RankKind::Spatial => write!(f, "{}:{}", self.name, self.extent),
+            RankKind::Generational => write!(f, "{}*:{}", self.name, self.extent),
+        }
+    }
+}
+
+/// How an Einsum operand accesses a rank.
+///
+/// Plain accesses read the current point. Generational accesses read a
+/// *previous* generation (`offset` back), and windowed accesses read a
+/// window (`i - j` for `j in 0..window`), which is how the causal conv
+/// (Einsum 9) and the `TX → TTX` non-unit-step pattern are expressed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RankAccess {
+    /// `T[.., i, ..]` — the current point along the rank.
+    #[default]
+    Current,
+    /// `T[.., i - offset, ..]` — a fixed look-back along a generational
+    /// rank (`H[i-1]` has `offset = 1`).
+    Lagged { offset: u64 },
+    /// `T[.., i - j, ..]` for `j in 0..window` — a sliding window along
+    /// a generational rank (causal conv with kernel size `window`).
+    Windowed { window: u64 },
+}
+
+impl RankAccess {
+    /// True for any access that reaches back along a generational rank.
+    pub fn is_recurrent(&self) -> bool {
+        !matches!(self, RankAccess::Current)
+    }
+
+    /// How many previous generations must stay live for this access.
+    pub fn lookback(&self) -> u64 {
+        match self {
+            RankAccess::Current => 0,
+            RankAccess::Lagged { offset } => *offset,
+            RankAccess::Windowed { window } => window.saturating_sub(1),
+        }
+    }
+}
+
+impl fmt::Display for RankAccess {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RankAccess::Current => write!(f, "i"),
+            RankAccess::Lagged { offset } => write!(f, "i-{offset}"),
+            RankAccess::Windowed { window } => write!(f, "i-j[0..{window})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_display() {
+        assert_eq!(Rank::new("E", 1024).to_string(), "E:1024");
+        assert_eq!(Rank::generational("I", 512).to_string(), "I*:512");
+    }
+
+    #[test]
+    fn rank_kinds() {
+        assert!(!Rank::new("E", 8).is_generational());
+        assert!(Rank::generational("I", 8).is_generational());
+    }
+
+    #[test]
+    fn access_lookback() {
+        assert_eq!(RankAccess::Current.lookback(), 0);
+        assert_eq!(RankAccess::Lagged { offset: 1 }.lookback(), 1);
+        assert_eq!(RankAccess::Windowed { window: 4 }.lookback(), 3);
+        assert!(!RankAccess::Current.is_recurrent());
+        assert!(RankAccess::Lagged { offset: 1 }.is_recurrent());
+        assert!(RankAccess::Windowed { window: 4 }.is_recurrent());
+    }
+}

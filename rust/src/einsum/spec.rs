@@ -1,0 +1,281 @@
+//! Einsum specifications: one extended Einsum = output tensor, operand
+//! list, compute kind, and (derived) iteration space.
+//!
+//! The compute kinds mirror the paper's Figure 1 legend: GEMM-like
+//! (green), elementwise/broadcast (light orange), unary nonlinearities
+//! (dark grey), recurrent updates (purple edges).
+
+use std::fmt;
+
+use super::iterspace::IterSpace;
+use super::rank::Rank;
+use super::tensor::{Operand, TensorSpec};
+
+/// The scalar operation applied inside an Einsum.
+///
+/// Extended Einsums (EDGE) allow arbitrary user-defined per-element
+/// functions in addition to the (×, +) semiring; Mamba needs exp, log,
+/// sqrt/rsqrt, SiLU, softplus, sigmoid (paper §II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Multiply-accumulate over reduction ranks (GEMM/GEMV/dot).
+    MulAcc,
+    /// Pure elementwise multiply (Hadamard / broadcast scaling).
+    Mul,
+    /// Elementwise add.
+    Add,
+    /// Fused multiply-add of two operands into the output (`a*b + c`).
+    MulAdd,
+    /// A user-defined unary nonlinearity applied elementwise.
+    Unary(UnaryFn),
+    /// Elementwise multiply followed by a unary on one operand
+    /// (e.g. `SD * SiLU(RX)`), counted as two pipeline ops.
+    MulUnary(UnaryFn),
+}
+
+/// User-defined unary functions used by Mamba (paper §II-A.a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnaryFn {
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    SiLU,
+    Softplus,
+    Sigmoid,
+    Square,
+    Recip,
+    Identity,
+}
+
+impl fmt::Display for UnaryFn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            UnaryFn::Exp => "exp",
+            UnaryFn::Log => "log",
+            UnaryFn::Sqrt => "sqrt",
+            UnaryFn::Rsqrt => "rsqrt",
+            UnaryFn::SiLU => "silu",
+            UnaryFn::Softplus => "softplus",
+            UnaryFn::Sigmoid => "sigmoid",
+            UnaryFn::Square => "square",
+            UnaryFn::Recip => "recip",
+            UnaryFn::Identity => "id",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl OpKind {
+    /// True for GEMM-like Einsums: a MulAcc with at least one
+    /// non-trivial reduction rank (checked at the [`EinsumSpec`] level;
+    /// here we just classify the scalar op).
+    pub fn is_mulacc(&self) -> bool {
+        matches!(self, OpKind::MulAcc)
+    }
+
+    /// Scalar ops per output point contributed by the op itself
+    /// (excluding reduction): used by the cost model for the
+    /// low-intensity functional units.
+    pub fn elementwise_ops(&self) -> u64 {
+        match self {
+            OpKind::MulAcc => 0, // counted via reduction MACs
+            OpKind::Mul | OpKind::Add => 1,
+            OpKind::MulAdd => 2,
+            OpKind::Unary(_) => 1,
+            OpKind::MulUnary(_) => 2,
+        }
+    }
+}
+
+/// Intensity class used for binding decisions (paper §V: PEs contain
+/// both high-intensity MACC units and low-intensity nonlinear units).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Intensity {
+    /// GEMM-like: maps to the 2D systolic mode.
+    High,
+    /// Elementwise / broadcast / unary: maps to 1D modes.
+    Low,
+}
+
+/// One extended Einsum in a cascade.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EinsumSpec {
+    /// Position in the cascade (paper Figure 1 yellow number, 1-based).
+    pub id: usize,
+    /// Human name, e.g. `"TX"` — matches the output tensor name.
+    pub name: String,
+    /// Output tensor.
+    pub output: TensorSpec,
+    /// Operand tensors with access patterns.
+    pub inputs: Vec<Operand>,
+    /// Ranks reduced over (present in inputs, absent from output).
+    pub reduction_ranks: Vec<Rank>,
+    /// Scalar operation.
+    pub op: OpKind,
+}
+
+impl EinsumSpec {
+    pub fn new(
+        id: usize,
+        name: impl Into<String>,
+        output: TensorSpec,
+        inputs: Vec<Operand>,
+        reduction_ranks: Vec<Rank>,
+        op: OpKind,
+    ) -> Self {
+        EinsumSpec { id, name: name.into(), output, inputs, reduction_ranks, op }
+    }
+
+    /// The full iteration space: output ranks ∪ reduction ranks.
+    pub fn iteration_space(&self) -> IterSpace {
+        let mut ranks = self.output.ranks.clone();
+        for r in &self.reduction_ranks {
+            if !ranks.iter().any(|x| x.name == r.name) {
+                ranks.push(r.clone());
+            }
+        }
+        IterSpace::new(ranks)
+    }
+
+    /// Minimum reduction extent for a contraction to count as GEMM-like.
+    /// Smaller reductions (the N=16 SSM readout, the 4-tap conv) never
+    /// reach the compute-bound region and are treated as low-intensity
+    /// work, matching both the paper's "7 of 24 GEMM-like" Mamba count
+    /// and FuseMax's "6 of 8" Transformer count.
+    pub const GEMM_MIN_REDUCTION: u64 = 32;
+
+    /// GEMM-like: a true tensor *contraction* — multiply-accumulate of
+    /// at least two operands over a sufficiently large reduction rank,
+    /// with no recurrent/windowed access.
+    ///
+    /// Excludes single-operand reductions (NUM, Einsum 3), the depthwise
+    /// causal conv (Einsum 9, windowed 4-tap filter) and the skinny N=16
+    /// SSM readout (Einsum 21).
+    pub fn is_gemm_like(&self) -> bool {
+        self.op.is_mulacc()
+            && self.inputs.len() >= 2
+            && self.reduction_ranks.iter().any(|r| r.extent >= Self::GEMM_MIN_REDUCTION)
+            && !self.is_recurrent()
+    }
+
+    /// Intensity class for binding (paper §V).
+    pub fn intensity(&self) -> Intensity {
+        if self.is_gemm_like() { Intensity::High } else { Intensity::Low }
+    }
+
+    /// True if any operand access is recurrent along a generational rank.
+    pub fn is_recurrent(&self) -> bool {
+        self.inputs.iter().any(|o| o.is_recurrent())
+    }
+
+    /// Total scalar operations (for roofline FLOP counts).
+    ///
+    /// GEMM-like: 2 × (points in the full iteration space) — one mul +
+    /// one add per MAC. Elementwise: `elementwise_ops` per output point.
+    /// Nonlinear unaries count 1 op/point (they occupy the pipelined
+    /// functional unit for one issue slot; paper §V-A).
+    pub fn flops(&self) -> u64 {
+        if self.op.is_mulacc() {
+            2 * self.iteration_space().points()
+        } else {
+            self.op.elementwise_ops() * self.output.elements()
+        }
+    }
+
+    /// Names of input tensors (deduplicated, in order).
+    pub fn input_names(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for op in &self.inputs {
+            let n = op.tensor.name.as_str();
+            if !out.contains(&n) {
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// Find an operand by tensor name.
+    pub fn operand(&self, name: &str) -> Option<&Operand> {
+        self.inputs.iter().find(|o| o.tensor.name == name)
+    }
+}
+
+impl fmt::Display for EinsumSpec {
+    /// `#id Out[ranks] = op(inputs) / Σ red-ranks`
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ins: Vec<String> = self.inputs.iter().map(|o| o.to_string()).collect();
+        write!(f, "#{:<2} {} = {:?}({})", self.id, self.output, self.op, ins.join(", "))?;
+        if !self.reduction_ranks.is_empty() {
+            let rr: Vec<&str> = self.reduction_ranks.iter().map(|r| r.name.as_str()).collect();
+            write!(f, "  / Σ {}", rr.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::einsum::rank::Rank;
+    use crate::einsum::tensor::{DType, TensorClass};
+
+    fn gemm() -> EinsumSpec {
+        let i = Rank::new("I", 32);
+        let e = Rank::new("E", 64);
+        let d = Rank::new("D", 128);
+        let out =
+            TensorSpec::new("TX", vec![i.clone(), d.clone()], DType::F16, TensorClass::Intermediate);
+        let a = TensorSpec::new("GX", vec![i, e.clone()], DType::F16, TensorClass::Intermediate);
+        let w = TensorSpec::new("W", vec![e.clone(), d], DType::F16, TensorClass::Weight);
+        EinsumSpec::new(
+            7,
+            "TX",
+            out,
+            vec![Operand::plain(a), Operand::plain(w)],
+            vec![e],
+            OpKind::MulAcc,
+        )
+    }
+
+    #[test]
+    fn gemm_classification() {
+        let e = gemm();
+        assert!(e.is_gemm_like());
+        assert_eq!(e.intensity(), Intensity::High);
+        assert!(!e.is_recurrent());
+    }
+
+    #[test]
+    fn iteration_space_includes_reduction() {
+        let e = gemm();
+        let is = e.iteration_space();
+        // IterSpace is canonically name-sorted.
+        assert_eq!(is.rank_names(), vec!["D", "E", "I"]);
+        assert_eq!(is.points(), 32 * 128 * 64);
+    }
+
+    #[test]
+    fn flop_count() {
+        let e = gemm();
+        assert_eq!(e.flops(), 2 * 32 * 64 * 128);
+    }
+
+    #[test]
+    fn elementwise_flops() {
+        let i = Rank::new("I", 8);
+        let out = TensorSpec::new("Y", vec![i.clone()], DType::F16, TensorClass::Intermediate);
+        let a = TensorSpec::new("A", vec![i], DType::F16, TensorClass::Intermediate);
+        let e = EinsumSpec::new(
+            1,
+            "Y",
+            out,
+            vec![Operand::plain(a)],
+            vec![],
+            OpKind::Unary(UnaryFn::SiLU),
+        );
+        assert!(!e.is_gemm_like());
+        assert_eq!(e.flops(), 8);
+        assert_eq!(e.intensity(), Intensity::Low);
+    }
+}

@@ -1,0 +1,224 @@
+//! Tensor specifications: a named tensor with a rank list, a dtype, and
+//! a class matching the paper's Figure 1 color coding (input / weight /
+//! recurrent / intermediate).
+
+use std::fmt;
+
+use super::rank::{Rank, RankAccess};
+
+/// Element datatype. The paper's datapath is fp16 with fp32 accumulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DType {
+    #[default]
+    F16,
+    BF16,
+    F32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            DType::F16 | DType::BF16 => 2,
+            DType::F32 => 4,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F16 => write!(f, "f16"),
+            DType::BF16 => write!(f, "bf16"),
+            DType::F32 => write!(f, "f32"),
+        }
+    }
+}
+
+/// Tensor class, mirroring the color legend of paper Figure 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorClass {
+    /// Blue: workload input (token embeddings, residual stream).
+    Input,
+    /// Green edge: a trained weight tensor (unique to one Einsum).
+    Weight,
+    /// Purple: tensor with recurrent accesses across the generational
+    /// rank (the hidden state `H`).
+    Recurrent,
+    /// Produced by one Einsum, consumed by other Einsum(s).
+    Intermediate,
+    /// Final output of the cascade.
+    Output,
+}
+
+impl fmt::Display for TensorClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            TensorClass::Input => "input",
+            TensorClass::Weight => "weight",
+            TensorClass::Recurrent => "recurrent",
+            TensorClass::Intermediate => "intermediate",
+            TensorClass::Output => "output",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A tensor specification: name + ordered rank list + dtype + class.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorSpec {
+    pub name: String,
+    pub ranks: Vec<Rank>,
+    pub dtype: DType,
+    pub class: TensorClass,
+}
+
+impl TensorSpec {
+    pub fn new(
+        name: impl Into<String>,
+        ranks: Vec<Rank>,
+        dtype: DType,
+        class: TensorClass,
+    ) -> Self {
+        TensorSpec { name: name.into(), ranks, dtype, class }
+    }
+
+    /// Number of elements (product of rank extents). A scalar (rank-0
+    /// tensor) has one element.
+    pub fn elements(&self) -> u64 {
+        self.ranks.iter().map(|r| r.extent).product()
+    }
+
+    /// Footprint in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.elements() * self.dtype.bytes()
+    }
+
+    /// Footprint in bytes of a single generation (all ranks except the
+    /// named generational rank). This is what must stay live per step of
+    /// the iterative rank — e.g. one `(D, N)` slice of `H`.
+    pub fn generation_bytes(&self, gen_rank: &str) -> u64 {
+        let elems: u64 = self
+            .ranks
+            .iter()
+            .filter(|r| r.name != gen_rank)
+            .map(|r| r.extent)
+            .product();
+        elems * self.dtype.bytes()
+    }
+
+    /// Rank names in order.
+    pub fn rank_names(&self) -> Vec<&str> {
+        self.ranks.iter().map(|r| r.name.as_str()).collect()
+    }
+
+    /// Does this tensor carry the named rank?
+    pub fn has_rank(&self, name: &str) -> bool {
+        self.ranks.iter().any(|r| r.name == name)
+    }
+}
+
+impl fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ranks: Vec<String> = self.ranks.iter().map(|r| r.to_string()).collect();
+        write!(f, "{}[{}]", self.name, ranks.join(","))
+    }
+}
+
+/// An operand: a tensor reference plus per-rank access patterns.
+///
+/// `accesses` is parallel to the tensor's rank list; non-`Current`
+/// entries encode recurrences (`H[i-1]`) and windows (`TX[i-j]`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Operand {
+    pub tensor: TensorSpec,
+    pub accesses: Vec<RankAccess>,
+}
+
+impl Operand {
+    /// Plain operand: every rank accessed at the current point.
+    pub fn plain(tensor: TensorSpec) -> Self {
+        let accesses = vec![RankAccess::Current; tensor.ranks.len()];
+        Operand { tensor, accesses }
+    }
+
+    /// Operand with a custom access on one named rank.
+    pub fn with_access(tensor: TensorSpec, rank: &str, access: RankAccess) -> Self {
+        let accesses = tensor
+            .ranks
+            .iter()
+            .map(|r| if r.name == rank { access } else { RankAccess::Current })
+            .collect();
+        Operand { tensor, accesses }
+    }
+
+    /// True if any rank access is recurrent (lagged or windowed).
+    pub fn is_recurrent(&self) -> bool {
+        self.accesses.iter().any(|a| a.is_recurrent())
+    }
+}
+
+impl fmt::Display for Operand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_recurrent() {
+            let idx: Vec<String> = self
+                .tensor
+                .ranks
+                .iter()
+                .zip(&self.accesses)
+                .map(|(r, a)| match a {
+                    RankAccess::Current => r.name.to_lowercase(),
+                    _ => format!("{a}"),
+                })
+                .collect();
+            write!(f, "{}[{}]", self.tensor.name, idx.join(","))
+        } else {
+            write!(f, "{}", self.tensor)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> TensorSpec {
+        TensorSpec::new(
+            "H",
+            vec![Rank::generational("I", 128), Rank::new("D", 64), Rank::new("N", 16)],
+            DType::F16,
+            TensorClass::Recurrent,
+        )
+    }
+
+    #[test]
+    fn sizes() {
+        let h = t();
+        assert_eq!(h.elements(), 128 * 64 * 16);
+        assert_eq!(h.bytes(), 128 * 64 * 16 * 2);
+        assert_eq!(h.generation_bytes("I"), 64 * 16 * 2);
+    }
+
+    #[test]
+    fn operand_access() {
+        let h = t();
+        let lagged = Operand::with_access(h.clone(), "I", RankAccess::Lagged { offset: 1 });
+        assert!(lagged.is_recurrent());
+        assert!(!Operand::plain(h).is_recurrent());
+    }
+
+    #[test]
+    fn rank_queries() {
+        let h = t();
+        assert!(h.has_rank("D"));
+        assert!(!h.has_rank("Q"));
+        assert_eq!(h.rank_names(), vec!["I", "D", "N"]);
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::BF16.bytes(), 2);
+        assert_eq!(DType::F32.bytes(), 4);
+    }
+}

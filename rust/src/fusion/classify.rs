@@ -1,0 +1,219 @@
+//! Pairwise fusion classification (paper §III-C).
+//!
+//! Given an upstream Einsum whose output feeds a downstream Einsum, the
+//! fusion class is determined by the relation between their iteration
+//! spaces:
+//!
+//! | relation                | class | canonical pattern            |
+//! |-------------------------|-------|------------------------------|
+//! | `IS_up ≡ IS_dwn`        | RI    | elementwise→elementwise/red. |
+//! | `IS_up ⊃ IS_dwn`        | RSb   | reduction→elementwise        |
+//! | `IS_up ⊂ IS_dwn`        | RSp   | elementwise→broadcast/GEMM   |
+//! | `IS_up ⊥ IS_dwn`        | RD    | matmul→matmul                |
+//!
+//! We evaluate the relation *relative to the intermediate tensor*: the
+//! upstream's private ranks are `IS_up \ ranks(T)` (what it reduces away
+//! to produce T) and the downstream's are `IS_dwn \ ranks(T)` (what it
+//! broadcasts T over). This is equivalent to the paper's set relation
+//! whenever rank names don't collide across roles, and resolves the
+//! collision case correctly — e.g. Mamba's `TTD→DT` (Einsums 13→14),
+//! where `D` is Einsum 13's reduction rank *and* Einsum 14's output
+//! rank: a back-to-back matmul, hence RD, even though the raw name sets
+//! are equal.
+//!
+//! Every class guarantees a minimum intermediate-tensor footprint (ITF)
+//! of one element under an upstream-output-stationary /
+//! downstream-input-stationary dataflow; the stationary ranks are the
+//! intersection of the two spaces restricted to the intermediate.
+
+use std::fmt;
+
+use crate::einsum::{EinsumSpec, IterSpace, SpaceRelation};
+
+/// The four fusion classes of the paper's taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FusionClass {
+    /// Rank-Isomorphic: identical iteration spaces.
+    RI,
+    /// Rank-Subsetted: upstream ⊃ downstream (reduction upstream).
+    RSb,
+    /// Rank-Supersetted: upstream ⊂ downstream (broadcast downstream).
+    RSp,
+    /// Rank-Disjointed: both sides have private ranks (reduction *and*
+    /// broadcast on the intermediate).
+    RD,
+}
+
+impl fmt::Display for FusionClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FusionClass::RI => "RI",
+            FusionClass::RSb => "RSb",
+            FusionClass::RSp => "RSp",
+            FusionClass::RD => "RD",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl FusionClass {
+    /// Map an iteration-space relation (upstream vs downstream) to the
+    /// fusion class.
+    pub fn from_relation(rel: SpaceRelation) -> FusionClass {
+        match rel {
+            SpaceRelation::Equal => FusionClass::RI,
+            SpaceRelation::Superset => FusionClass::RSb,
+            SpaceRelation::Subset => FusionClass::RSp,
+            SpaceRelation::Disjoint => FusionClass::RD,
+        }
+    }
+}
+
+/// The result of classifying one producer→consumer pair.
+#[derive(Debug, Clone)]
+pub struct PairFusion {
+    /// Upstream Einsum id.
+    pub up: usize,
+    /// Downstream Einsum id.
+    pub down: usize,
+    /// The shared (intermediate) tensor.
+    pub intermediate: String,
+    /// Fusion class.
+    pub class: FusionClass,
+    /// Ranks that must be stationary (outermost, shared) in the fused
+    /// traversal: `IS_up ∩ IS_dwn`.
+    pub stationary: IterSpace,
+    /// Minimum intermediate-tensor footprint in *elements* under the
+    /// class's dataflow (always 1 per the taxonomy; kept explicit so
+    /// partitioned/tiled variants can report tile sizes).
+    pub min_itf: u64,
+}
+
+/// Classify fusion for a producer→consumer pair.
+///
+/// Preconditions: `up.output` must be an input of `down` (the
+/// *intermediate tensor* requirement at the Einsum level, §III-A).
+/// Returns `None` if the pair shares no output→input tensor.
+pub fn classify_pair(up: &EinsumSpec, down: &EinsumSpec) -> Option<PairFusion> {
+    let shared = down.operand(&up.output.name)?;
+    let t_ranks = IterSpace::new(shared.tensor.ranks.clone());
+    let is_up = up.iteration_space();
+    let is_dwn = down.iteration_space();
+    // Private ranks relative to the intermediate (see module docs).
+    let up_private = !is_up.difference(&t_ranks).is_empty();
+    let down_private = !is_dwn.difference(&t_ranks).is_empty();
+    let class = match (up_private, down_private) {
+        (false, false) => FusionClass::RI,
+        (true, false) => FusionClass::RSb,
+        (false, true) => FusionClass::RSp,
+        (true, true) => FusionClass::RD,
+    };
+    Some(PairFusion {
+        up: up.id,
+        down: down.id,
+        intermediate: shared.tensor.name.clone(),
+        class,
+        stationary: is_up.intersect(&is_dwn).intersect(&t_ranks),
+        min_itf: 1,
+    })
+}
+
+/// Classify *all* producer→consumer pairs in a cascade, in cascade order.
+pub fn classify_cascade(c: &crate::einsum::Cascade) -> Vec<PairFusion> {
+    let mut out = Vec::new();
+    for (ai, up) in c.einsums().iter().enumerate() {
+        for down in &c.einsums()[ai + 1..] {
+            if let Some(p) = classify_pair(up, down) {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::examples;
+
+    fn first_pair(c: &crate::einsum::Cascade) -> PairFusion {
+        classify_pair(&c.einsums()[0], &c.einsums()[1]).unwrap()
+    }
+
+    #[test]
+    fn figure4_is_ri() {
+        let p = first_pair(&examples::fig4_ri(8, 16));
+        assert_eq!(p.class, FusionClass::RI);
+        assert_eq!(p.stationary.rank_names(), vec!["K", "M"]);
+        assert_eq!(p.min_itf, 1);
+    }
+
+    #[test]
+    fn figure5_is_rsb() {
+        let p = first_pair(&examples::fig5_rsb(8, 16));
+        assert_eq!(p.class, FusionClass::RSb);
+        // MK-stationary mapping required: stationary ranks = {M}.
+        assert_eq!(p.stationary.rank_names(), vec!["M"]);
+    }
+
+    #[test]
+    fn figure6_is_rsp() {
+        let p = first_pair(&examples::fig6_rsp(8, 4, 2));
+        assert_eq!(p.class, FusionClass::RSp);
+        assert_eq!(p.stationary.rank_names(), vec!["M"]);
+    }
+
+    #[test]
+    fn figure7_is_rd() {
+        let p = first_pair(&examples::fig7_rd(8, 4, 16, 2));
+        assert_eq!(p.class, FusionClass::RD);
+        // "the mapping must be MN or NM-stationary".
+        assert_eq!(p.stationary.rank_names(), vec!["M", "N"]);
+    }
+
+    #[test]
+    fn non_adjacent_pairs_are_found() {
+        // In Figure 8, X (E3) also feeds E4 directly.
+        let c = examples::fig8_five(4, 5, 6, 3, 2);
+        let all = classify_cascade(&c);
+        assert!(all.iter().any(|p| p.up == 3 && p.down == 4));
+        // And no pair is invented where no tensor flows.
+        assert!(!all.iter().any(|p| p.up == 1 && p.down == 5));
+    }
+
+    #[test]
+    fn mamba_ssm_region_classes() {
+        let c = crate::cascade::mamba1::build(&crate::cascade::ModelConfig::mamba_370m(), 64, 1);
+        let all = classify_cascade(&c);
+        let class_of = |up: usize, down: usize| {
+            all.iter().find(|p| p.up == up && p.down == down).map(|p| p.class)
+        };
+        // 16 (AB{I,D,N}) → 19 (HH{I,D,N}): RI.
+        assert_eq!(class_of(16, 19), Some(FusionClass::RI));
+        // 20 (H{I,D,N}) → 21 (S: {I,D,N} with N reduced): RI (same space).
+        assert_eq!(class_of(20, 21), Some(FusionClass::RI));
+        // 21 (S: {I,D,N}) → 22 (SD: {I,D}): RSb — the paper's
+        // SSM→post-processing handoff enabled by adding RSb.
+        assert_eq!(class_of(21, 22), Some(FusionClass::RSb));
+        // 15 (DL{I,D}) → 16 (AB{I,D,N}): RSp (broadcast over N).
+        assert_eq!(class_of(15, 16), Some(FusionClass::RSp));
+        // 10 (LEX{I,D}) → 11 (XB iterates {I,N,D}: output {I,N} plus
+        // reduction D): RSp — LEX broadcast into the skinny GEMM.
+        assert_eq!(class_of(10, 11), Some(FusionClass::RSp));
+    }
+
+    #[test]
+    fn norm_region_classes() {
+        let c = crate::cascade::mamba1::build(&crate::cascade::ModelConfig::mamba_370m(), 64, 1);
+        let all = classify_cascade(&c);
+        let class_of = |up: usize, down: usize| {
+            all.iter().find(|p| p.up == up && p.down == down).map(|p| p.class)
+        };
+        // NUM (#3, {I,E}) → ISR (#4, {I}): RSb (reduction upstream).
+        assert_eq!(class_of(3, 4), Some(FusionClass::RSb));
+        // ISR (#4, {I}) → NEX (#5, {I,E}): RSp (broadcast downstream).
+        assert_eq!(class_of(4, 5), Some(FusionClass::RSp));
+        // GX (#6, {I,E}) → TX (#7, {I,E,D}): RSp — elementwise feeding a GEMM.
+        assert_eq!(class_of(6, 7), Some(FusionClass::RSp));
+    }
+}

@@ -1,0 +1,152 @@
+//! Fusing with generational ranks (paper §IV-E).
+//!
+//! "If we are I-stationary on H, we must store a B×D×N partition
+//! on-chip. However, if we are B-D-N-stationary, only a unit-sized
+//! element of H stays on-chip with a guarantee that there will be no
+//! spills to main memory. Partitioning along the iterative rank (I) can
+//! aid in keeping larger tiles of the iterative rank on-chip."
+//!
+//! This module computes, for a cascade with a generational rank, the
+//! on-chip footprint required by each stationarity choice and the
+//! largest iterative-rank tile that fits a given buffer — the analysis
+//! Mambalaya's fully-fused binding uses.
+
+use crate::einsum::{Cascade, TensorClass};
+
+/// The on-chip footprint consequences of a stationarity choice for the
+/// recurrent state tensor(s).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerationalAnalysis {
+    /// The generational rank name (e.g. "I").
+    pub rank: String,
+    /// Its extent in this cascade instance.
+    pub extent: u64,
+    /// Bytes that must stay on-chip if the mapping is stationary on the
+    /// generational rank (one full generation of every recurrent
+    /// tensor): the "I-stationary" option.
+    pub gen_stationary_bytes: u64,
+    /// Bytes on-chip if stationary on all *other* ranks: unit element
+    /// per recurrent tensor (the "B-D-N-stationary" option).
+    pub elem_stationary_bytes: u64,
+    /// Maximum lookback window any Einsum needs (1 for `H[i-1]`, J-1
+    /// for the conv): generations that must remain live regardless.
+    pub max_lookback: u64,
+}
+
+impl GenerationalAnalysis {
+    /// Largest tile of the iterative rank whose recurrent state fits in
+    /// `budget_bytes` of on-chip storage. Partitioning along I trades
+    /// buffer space for dataflow freedom (§IV-E).
+    pub fn max_i_tile(&self, budget_bytes: u64) -> u64 {
+        if self.gen_stationary_bytes == 0 {
+            return self.extent;
+        }
+        let per_gen = self.gen_stationary_bytes;
+        (budget_bytes / per_gen).clamp(self.max_lookback.max(1), self.extent.max(1))
+    }
+}
+
+/// Analyze the generational structure of a cascade. Returns `None` when
+/// the cascade has no generational rank in use.
+pub fn analyze(c: &Cascade) -> Option<GenerationalAnalysis> {
+    let mut rank: Option<(String, u64)> = None;
+    let mut gen_bytes = 0u64;
+    let mut elem_bytes = 0u64;
+    let mut max_lookback = 0u64;
+
+    for e in c.einsums() {
+        for op in &e.inputs {
+            for (r, acc) in op.tensor.ranks.iter().zip(&op.accesses) {
+                if acc.is_recurrent() && r.is_generational() {
+                    rank = Some((r.name.clone(), r.extent));
+                    max_lookback = max_lookback.max(acc.lookback());
+                }
+            }
+        }
+    }
+    let (rname, extent) = rank?;
+
+    // Recurrent tensors: class Recurrent, or any tensor read with a
+    // recurrent access (the conv window on TX).
+    let mut counted: Vec<&str> = Vec::new();
+    for e in c.einsums() {
+        for op in &e.inputs {
+            let rec_here = op
+                .tensor
+                .ranks
+                .iter()
+                .zip(&op.accesses)
+                .any(|(r, a)| r.name == rname && a.is_recurrent());
+            let is_state = op.tensor.class == TensorClass::Recurrent || rec_here;
+            if is_state && !counted.contains(&op.tensor.name.as_str()) {
+                counted.push(op.tensor.name.as_str());
+                let per_gen = op.tensor.generation_bytes(&rname);
+                let window = op
+                    .tensor
+                    .ranks
+                    .iter()
+                    .zip(&op.accesses)
+                    .find(|(r, _)| r.name == rname)
+                    .map(|(_, a)| a.lookback() + 1)
+                    .unwrap_or(1);
+                gen_bytes += per_gen * window;
+                elem_bytes += op.tensor.dtype.bytes() * window;
+            }
+        }
+    }
+
+    Some(GenerationalAnalysis {
+        rank: rname,
+        extent,
+        gen_stationary_bytes: gen_bytes,
+        elem_stationary_bytes: elem_bytes,
+        max_lookback,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+
+    #[test]
+    fn mamba_generational_analysis() {
+        let cfg = ModelConfig::mamba_370m();
+        let c = mamba1::build(&cfg, 1024, 1);
+        let ga = analyze(&c).expect("mamba has a generational rank");
+        assert_eq!(ga.rank, "I");
+        assert_eq!(ga.extent, 1024);
+        // H is D×N per generation (f16), window 2 (i and i-1);
+        // TX window is J=4 generations of D.
+        let h_bytes = 2 * cfg.d_inner * cfg.d_state * 2;
+        let tx_bytes = 4 * cfg.d_inner * 2;
+        assert_eq!(ga.gen_stationary_bytes, h_bytes + tx_bytes);
+        assert_eq!(ga.max_lookback, 3); // conv window 4 → lookback 3
+    }
+
+    #[test]
+    fn i_tile_scales_with_budget() {
+        let cfg = ModelConfig::mamba_370m();
+        let c = mamba1::build(&cfg, 1 << 20, 1);
+        let ga = analyze(&c).unwrap();
+        let small = ga.max_i_tile(1 << 20); // 1 MiB
+        let large = ga.max_i_tile(32 << 20); // 32 MiB
+        assert!(large >= small);
+        assert!(small >= ga.max_lookback);
+        assert!(large <= 1 << 20);
+    }
+
+    #[test]
+    fn non_generational_cascade_returns_none() {
+        let c = crate::cascade::examples::fig4_ri(8, 8);
+        assert!(analyze(&c).is_none());
+    }
+
+    #[test]
+    fn unit_elem_footprint_is_tiny() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 1024, 1);
+        let ga = analyze(&c).unwrap();
+        // B-D-N-stationary keeps only a few elements live.
+        assert!(ga.elem_stationary_bytes < 64);
+    }
+}

@@ -1,0 +1,166 @@
+//! Fusion groups: the output of stitching.
+//!
+//! A fusion group is a set of Einsums whose intermediate tensors stay
+//! on-chip (paper §III-D). Each group records which tensors cross its
+//! boundary (must touch the backing store) and which stay internal, plus
+//! the stationarity constraint the group imposes on the mapper.
+
+use std::collections::BTreeSet;
+
+use crate::einsum::{Cascade, IterSpace};
+
+use super::classify::FusionClass;
+
+/// How an Einsum joined its group (provenance for reports/debugging).
+#[derive(Debug, Clone)]
+pub struct JoinRecord {
+    /// The joining Einsum.
+    pub einsum: usize,
+    /// The in-group producer it fused with (None for the group seed).
+    pub via: Option<usize>,
+    /// The fusion class of that link (None for the seed).
+    pub class: Option<FusionClass>,
+    /// The intermediate tensor carried by the link.
+    pub tensor: Option<String>,
+}
+
+/// A fusion group.
+#[derive(Debug, Clone)]
+pub struct FusionGroup {
+    /// Einsum ids, in cascade order.
+    pub einsums: Vec<usize>,
+    /// How each member joined.
+    pub joins: Vec<JoinRecord>,
+    /// Ranks that must sit at stationary (outer) loop levels for the
+    /// whole group: the running pairwise intersection of Algorithm 1.
+    pub stationary: IterSpace,
+    /// Intermediates produced *and fully consumed* inside the group —
+    /// these never touch the backing store.
+    pub internal_tensors: Vec<String>,
+    /// True when an RD link inside this group forces partial-product
+    /// spills (the Fully-Fused strategy, paper §IV-D).
+    pub rd_bridged: bool,
+}
+
+impl FusionGroup {
+    pub fn contains(&self, id: usize) -> bool {
+        self.einsums.contains(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.einsums.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.einsums.is_empty()
+    }
+
+    /// Fusion classes used by this group's internal links.
+    pub fn classes_used(&self) -> BTreeSet<FusionClass> {
+        self.joins.iter().filter_map(|j| j.class).collect()
+    }
+}
+
+/// A complete fusion plan for a cascade.
+#[derive(Debug, Clone)]
+pub struct FusionPlan {
+    pub cascade_name: String,
+    pub variant_name: String,
+    pub groups: Vec<FusionGroup>,
+}
+
+impl FusionPlan {
+    /// Group index containing the given Einsum.
+    pub fn group_of(&self, id: usize) -> Option<usize> {
+        self.groups.iter().position(|g| g.contains(id))
+    }
+
+    /// Are two Einsums co-located in one group?
+    pub fn fused_together(&self, a: usize, b: usize) -> bool {
+        match (self.group_of(a), self.group_of(b)) {
+            (Some(x), Some(y)) => x == y,
+            _ => false,
+        }
+    }
+
+    /// Tensor names that stay on-chip under this plan (internal to some
+    /// group).
+    pub fn internal_tensors(&self) -> BTreeSet<&str> {
+        self.groups
+            .iter()
+            .flat_map(|g| g.internal_tensors.iter().map(|s| s.as_str()))
+            .collect()
+    }
+
+    /// Validate the plan against its cascade: every Einsum in exactly
+    /// one group, groups in cascade order, internal tensors really are
+    /// internal (no consumer outside the group).
+    pub fn validate(&self, c: &Cascade) -> anyhow::Result<()> {
+        let mut seen = BTreeSet::new();
+        let mut last = 0usize;
+        for g in &self.groups {
+            for &id in &g.einsums {
+                if !seen.insert(id) {
+                    anyhow::bail!("einsum #{id} appears in two groups");
+                }
+                if id < last {
+                    anyhow::bail!("groups out of cascade order at #{id}");
+                }
+                last = id;
+            }
+        }
+        for e in c.einsums() {
+            if !seen.contains(&e.id) {
+                anyhow::bail!("einsum #{} not covered by any group", e.id);
+            }
+        }
+        let consumers = c.consumers();
+        for g in &self.groups {
+            for t in &g.internal_tensors {
+                if let Some(cs) = consumers.get(t.as_str()) {
+                    for &cid in cs {
+                        if !g.contains(cid) {
+                            anyhow::bail!(
+                                "tensor {t} marked internal to a group but consumed by #{cid} outside it"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_queries() {
+        let plan = FusionPlan {
+            cascade_name: "x".into(),
+            variant_name: "test".into(),
+            groups: vec![
+                FusionGroup {
+                    einsums: vec![1, 2],
+                    joins: vec![],
+                    stationary: IterSpace::empty(),
+                    internal_tensors: vec!["Z".into()],
+                    rd_bridged: false,
+                },
+                FusionGroup {
+                    einsums: vec![3],
+                    joins: vec![],
+                    stationary: IterSpace::empty(),
+                    internal_tensors: vec![],
+                    rd_bridged: false,
+                },
+            ],
+        };
+        assert_eq!(plan.group_of(2), Some(0));
+        assert!(plan.fused_together(1, 2));
+        assert!(!plan.fused_together(2, 3));
+        assert!(plan.internal_tensors().contains("Z"));
+    }
+}

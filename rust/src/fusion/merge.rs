@@ -1,0 +1,167 @@
+//! Shared-input tensor merging (paper §IV).
+//!
+//! "This is a common optimization strategy often used to pack multiple
+//! GEMM operations into a single, larger GEMM computation. We apply
+//! shared-input merging on (A) NEX to produce both TX and RX
+//! simultaneously (Einsums 7–8), (B) X to produce B, C, and TTΔ
+//! (Einsums 11–13), and (C) Δ to produce Ā and B̄ (Einsums 16–17)."
+//!
+//! A merged unit is a set of Einsums that read the same input tensor and
+//! execute as one packed operation; stitching then operates on units.
+
+use std::collections::BTreeMap;
+
+use crate::einsum::{Cascade, EinsumSpec, IterSpace};
+
+/// A unit of stitching: one Einsum, or several shared-input-merged ones.
+#[derive(Debug, Clone)]
+pub struct Unit {
+    /// Member Einsum ids (cascade order).
+    pub members: Vec<usize>,
+    /// Union of the members' iteration spaces (the packed op iterates
+    /// the concatenated output columns).
+    pub space: IterSpace,
+}
+
+impl Unit {
+    pub fn single(e: &EinsumSpec) -> Self {
+        Unit { members: vec![e.id], space: e.iteration_space() }
+    }
+
+    pub fn is_merged(&self) -> bool {
+        self.members.len() > 1
+    }
+
+    /// Representative (first) member id, used for display.
+    pub fn head(&self) -> usize {
+        self.members[0]
+    }
+}
+
+/// Find shared-input merge sets in a cascade: maximal runs of
+/// *consecutive* Einsums that (a) share an input tensor produced inside
+/// the cascade or given as workload input, and (b) are all GEMM-like
+/// contractions of that tensor with per-Einsum weights (the "packed
+/// GEMM" pattern), or all elementwise ops on it (the Ā/B̄ pattern —
+/// Einsum 16 is `exp(Δ⊗A)` and 17 is `Δ⊗B`, elementwise in Δ).
+///
+/// Returns the merge sets in cascade order.
+pub fn find_shared_input_merges(c: &Cascade) -> Vec<Vec<usize>> {
+    let es = c.einsums();
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    let mut idx = 0;
+    while idx < es.len() {
+        let e = &es[idx];
+        // Candidate shared inputs: non-weight operands.
+        let mut best: Option<(String, usize)> = None; // (tensor, run length)
+        for op in &e.inputs {
+            if op.tensor.class == crate::einsum::TensorClass::Weight {
+                continue;
+            }
+            let name = &op.tensor.name;
+            // Extend the run: consecutive Einsums consuming `name` with
+            // the same broad kind (all GEMM-like or all non-GEMM).
+            let mut len = 1;
+            while idx + len < es.len() {
+                let nxt = &es[idx + len];
+                let consumes = nxt.operand(name).is_some();
+                let same_kind = nxt.is_gemm_like() == e.is_gemm_like();
+                // The packed op must not depend on an earlier member's
+                // output (that would serialize it).
+                let depends = es[idx..idx + len]
+                    .iter()
+                    .any(|m| nxt.operand(&m.output.name).is_some());
+                if consumes && same_kind && !depends {
+                    len += 1;
+                } else {
+                    break;
+                }
+            }
+            if len > 1 && best.as_ref().map(|(_, l)| len > *l).unwrap_or(true) {
+                best = Some((name.clone(), len));
+            }
+        }
+        if let Some((_, len)) = best {
+            out.push(es[idx..idx + len].iter().map(|m| m.id).collect());
+            idx += len;
+        } else {
+            idx += 1;
+        }
+    }
+    out.retain(|s| s.len() > 1);
+    out
+}
+
+/// Partition a cascade into stitching units using the given merge sets.
+/// Einsums not covered by a merge set become singleton units.
+pub fn to_units(c: &Cascade, merges: &[Vec<usize>]) -> Vec<Unit> {
+    let merged_of: BTreeMap<usize, usize> = merges
+        .iter()
+        .enumerate()
+        .flat_map(|(mi, set)| set.iter().map(move |&id| (id, mi)))
+        .collect();
+    let mut units: Vec<Unit> = Vec::new();
+    let mut done: Vec<bool> = vec![false; merges.len()];
+    for e in c.einsums() {
+        match merged_of.get(&e.id) {
+            Some(&mi) => {
+                if !done[mi] {
+                    done[mi] = true;
+                    let members = merges[mi].clone();
+                    let mut space = IterSpace::empty();
+                    for &id in &members {
+                        space = space.union(&c.by_id(id).expect("merge member").iteration_space());
+                    }
+                    units.push(Unit { members, space });
+                }
+            }
+            None => units.push(Unit::single(e)),
+        }
+    }
+    units
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+
+    #[test]
+    fn mamba_merge_sets_match_paper() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let merges = find_shared_input_merges(&c);
+        // Paper §IV: {TX,RX} = 7–8, {XB,XC,TTD} = 11–13, {AB,BB} = 16–17.
+        assert!(merges.contains(&vec![7, 8]), "merges = {merges:?}");
+        assert!(merges.contains(&vec![11, 12, 13]), "merges = {merges:?}");
+        assert!(merges.contains(&vec![16, 17]), "merges = {merges:?}");
+    }
+
+    #[test]
+    fn units_cover_all_einsums_once() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let merges = find_shared_input_merges(&c);
+        let units = to_units(&c, &merges);
+        let mut ids: Vec<usize> = units.iter().flat_map(|u| u.members.clone()).collect();
+        ids.sort();
+        assert_eq!(ids, (1..=24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn merged_unit_space_is_union() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let units = to_units(&c, &find_shared_input_merges(&c));
+        let u78 = units.iter().find(|u| u.members == vec![7, 8]).unwrap();
+        assert_eq!(u78.space.rank_names(), vec!["D", "E", "I"]);
+    }
+
+    #[test]
+    fn dependent_consumers_do_not_merge() {
+        // In the norm chain, SQ (#2) and NEX (#5) both consume X but are
+        // separated by dependent Einsums, so no merge may bridge them.
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let merges = find_shared_input_merges(&c);
+        for m in &merges {
+            assert!(!(m.contains(&2) && m.contains(&5)), "bad merge {m:?}");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Inter-Einsum fusion: the paper's core contribution (§III–§IV).
+//!
+//! * [`classify`] — pairwise RI/RSb/RSp/RD classification;
+//! * [`merge`] — shared-input tensor merging (packed GEMMs);
+//! * [`stitch`] — greedy stitching (Algorithm 1) under variant gates;
+//! * [`group`] — fusion groups and plans;
+//! * [`variant`] — the RI / RI+RSb / RI+RSb+RSp / Fully-Fused strategies;
+//! * [`generational`] — iterative-rank partitioning analysis (§IV-E).
+
+pub mod classify;
+pub mod generational;
+pub mod group;
+pub mod merge;
+pub mod stitch;
+pub mod variant;
+
+pub use classify::{classify_cascade, classify_pair, FusionClass, PairFusion};
+pub use group::{FusionGroup, FusionPlan, JoinRecord};
+pub use stitch::{stitch, unfused_plan};
+pub use variant::FusionVariant;

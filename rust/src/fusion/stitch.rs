@@ -1,0 +1,383 @@
+//! Greedy stitching (paper Algorithm 1 + the §IV variant gates).
+//!
+//! Stitching walks the cascade in order (after shared-input merging,
+//! §IV) and greedily grows a fusion group. A unit joins the current
+//! group iff:
+//!
+//! 1. **Einsum level** — it consumes at least one intermediate tensor
+//!    produced *inside* the group (fusion requires an output→input
+//!    tensor, §III-A). Operands produced outside the group are charged
+//!    as backing-store traffic instead (e.g. LEX's second pass, RX).
+//! 2. **Class gate** — every in-group link's fusion class is allowed by
+//!    the active [`FusionVariant`] (§IV-A..D).
+//! 3. **Algorithm-1 chain** — the pairwise intersection of consecutive
+//!    units' iteration spaces must be equal to, a subset of, or a
+//!    superset of the previous pairwise intersection (lines 10–12):
+//!    ranks surviving intersection must appear at stationary loop
+//!    levels, so the chain must nest.
+//!
+//! Recurrent (generational) self-links such as `H[i-1]` are not
+//! stitching edges: they are handled by partitioning along the iterative
+//! rank (§IV-E, [`super::generational`]).
+//!
+//! The Fully-Fused variant bridges RD boundaries instead of breaking:
+//! partial products of the upstream intermediate spill to main memory
+//! and the downstream Einsum triggers on each *final* write (§IV-D), so
+//! the chain condition is waived across the bridge.
+
+use crate::einsum::{Cascade, IterSpace};
+
+use super::classify::{classify_pair, FusionClass};
+use super::group::{FusionGroup, FusionPlan, JoinRecord};
+use super::merge::{find_shared_input_merges, to_units, Unit};
+use super::variant::FusionVariant;
+
+/// Stitch a cascade under a fusion variant. Shared-input merging is
+/// applied first (for any fused variant), per §IV.
+pub fn stitch(c: &Cascade, variant: FusionVariant) -> FusionPlan {
+    if variant == FusionVariant::Unfused {
+        return unfused_plan(c);
+    }
+    let merges = find_shared_input_merges(c);
+    let units = to_units(c, &merges);
+    stitch_units(c, &units, variant)
+}
+
+/// The Best-Unfused baseline: every Einsum its own group.
+pub fn unfused_plan(c: &Cascade) -> FusionPlan {
+    let groups = c
+        .einsums()
+        .iter()
+        .map(|e| FusionGroup {
+            einsums: vec![e.id],
+            joins: vec![JoinRecord { einsum: e.id, via: None, class: None, tensor: None }],
+            stationary: e.iteration_space(),
+            internal_tensors: vec![],
+            rd_bridged: false,
+        })
+        .collect();
+    FusionPlan {
+        cascade_name: c.name.clone(),
+        variant_name: FusionVariant::Unfused.name().to_string(),
+        groups,
+    }
+}
+
+/// One candidate link from an in-group producer to a joining Einsum.
+#[derive(Debug, Clone)]
+struct Link {
+    via: usize,
+    class: FusionClass,
+    tensor: String,
+}
+
+/// Find all in-group links for a unit: for each member, classify it
+/// against every in-group producer of one of its operands.
+///
+/// True back-edges (producer later in the cascade, i.e. the `H[i-1]`
+/// generational self-loop) are not links; *forward* windowed accesses
+/// (the conv reading `TX[i-j]`, producer #7 → consumer #9) are.
+fn in_group_links(c: &Cascade, group: &[usize], unit: &Unit) -> Vec<(usize, Link)> {
+    let mut links = Vec::new();
+    for &mid in &unit.members {
+        let m = c.by_id(mid).expect("unit member");
+        for op in &m.inputs {
+            if let Some(p) = c.by_name(&op.tensor.name) {
+                if p.id < mid && group.contains(&p.id) {
+                    if let Some(pf) = classify_pair(p, m) {
+                        links.push((
+                            mid,
+                            Link { via: p.id, class: pf.class, tensor: pf.intermediate },
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    links
+}
+
+/// Algorithm-1 chain condition, per variant:
+/// * RI-only: `I_curr == I_prev` (line 12 only, §IV-A);
+/// * RI+RSb: `I_curr ⊆ I_prev` (lines 10 + 12, §IV-B);
+/// * full greedy / fully-fused: subset, superset, or equal (lines
+///   10–12, §III-D).
+fn chain_ok(variant: FusionVariant, prev: &IterSpace, curr: &IterSpace) -> bool {
+    match variant {
+        FusionVariant::Unfused => false,
+        FusionVariant::RIOnly => prev == curr,
+        FusionVariant::RIRSb => curr.is_subset_of(prev),
+        FusionVariant::RIRSbRSp | FusionVariant::FullyFused => {
+            curr.is_subset_of(prev) || curr.is_superset_of(prev) || prev == curr
+        }
+    }
+}
+
+/// Is this variant's *seed pair* unconditional? Algorithm 1 line 2
+/// fuses the first two Einsums of a group outright ("given two Einsums,
+/// fusion is always possible", §III-D.1); the RI-only and RI+RSb modes
+/// restrict every link, including the seed pair (§IV-A/B).
+fn seed_unconditional(variant: FusionVariant) -> bool {
+    matches!(variant, FusionVariant::RIRSbRSp | FusionVariant::FullyFused)
+}
+
+fn stitch_units(c: &Cascade, units: &[Unit], variant: FusionVariant) -> FusionPlan {
+    let mut groups: Vec<FusionGroup> = Vec::new();
+
+    // Group under construction.
+    let mut g_einsums: Vec<usize> = Vec::new();
+    let mut g_joins: Vec<JoinRecord> = Vec::new();
+    let mut g_units: usize = 0;
+    let mut g_station: IterSpace = IterSpace::empty();
+    let mut g_rd = false;
+    // Algorithm-1 chain state: the previous pairwise intersection.
+    let mut i_prev: Option<IterSpace> = None;
+    let mut last_space: Option<IterSpace> = None;
+
+    let mut flush =
+        |einsums: &mut Vec<usize>, joins: &mut Vec<JoinRecord>, station: &mut IterSpace, rd: &mut bool| {
+            if !einsums.is_empty() {
+                groups.push(FusionGroup {
+                    einsums: std::mem::take(einsums),
+                    joins: std::mem::take(joins),
+                    stationary: std::mem::replace(station, IterSpace::empty()),
+                    internal_tensors: vec![],
+                    rd_bridged: std::mem::replace(rd, false),
+                });
+            }
+        };
+
+    for unit in units {
+        let links = in_group_links(c, &g_einsums, unit);
+        let mut bridged = false;
+        let joinable = if g_einsums.is_empty() || links.is_empty() {
+            // Fusion requires an intermediate tensor flowing from the
+            // group into this unit (§III-A).
+            false
+        } else {
+            let is_seed_pair = g_units == 1;
+            let classes_ok = links.iter().all(|(_, l)| variant.allows(l.class));
+            let chain = match (&i_prev, &last_space) {
+                (Some(prev), Some(last)) => {
+                    chain_ok(variant, prev, &last.intersect(&unit.space))
+                }
+                _ => true,
+            };
+            if is_seed_pair && seed_unconditional(variant) {
+                true
+            } else if variant.bridges_rd() {
+                // Fully-fused: always joinable; a link that violates the
+                // class/chain gates becomes an RD-style bridge (partial
+                // products spill, downstream triggers on final writes).
+                bridged = !(classes_ok && chain)
+                    || links.iter().any(|(_, l)| l.class == FusionClass::RD);
+                true
+            } else {
+                classes_ok && chain
+            }
+        };
+
+        if joinable {
+            if bridged || links.iter().any(|(_, l)| l.class == FusionClass::RD) {
+                g_rd = true;
+            }
+            for &mid in &unit.members {
+                g_einsums.push(mid);
+                let best = links.iter().find(|(m, _)| *m == mid);
+                g_joins.push(JoinRecord {
+                    einsum: mid,
+                    via: best.map(|(_, l)| l.via),
+                    class: best.map(|(_, l)| l.class),
+                    tensor: best.map(|(_, l)| l.tensor.clone()),
+                });
+            }
+            if let Some(last) = &last_space {
+                i_prev = Some(last.intersect(&unit.space));
+            }
+            g_station = g_station.intersect(&unit.space);
+            g_units += 1;
+        } else {
+            flush(&mut g_einsums, &mut g_joins, &mut g_station, &mut g_rd);
+            for &mid in &unit.members {
+                g_einsums.push(mid);
+                g_joins.push(JoinRecord { einsum: mid, via: None, class: None, tensor: None });
+            }
+            g_station = unit.space.clone();
+            g_units = 1;
+            i_prev = None;
+        }
+        last_space = Some(unit.space.clone());
+    }
+    flush(&mut g_einsums, &mut g_joins, &mut g_station, &mut g_rd);
+
+    let mut plan = FusionPlan {
+        cascade_name: c.name.clone(),
+        variant_name: variant.name().to_string(),
+        groups,
+    };
+    fill_internal_tensors(c, &mut plan);
+    plan
+}
+
+/// Mark tensors internal to each group: produced by a member, with at
+/// least one consumer, and *all* consumers inside the group.
+fn fill_internal_tensors(c: &Cascade, plan: &mut FusionPlan) {
+    let consumers = c.consumers();
+    for g in &mut plan.groups {
+        let mut internal = Vec::new();
+        for &id in &g.einsums {
+            let e = c.by_id(id).expect("group member");
+            if let Some(cs) = consumers.get(e.output.name.as_str()) {
+                if !cs.is_empty() && cs.iter().all(|cid| g.einsums.contains(cid)) {
+                    internal.push(e.output.name.clone());
+                }
+            }
+        }
+        g.internal_tensors = internal;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{examples, mamba1, transformer, ModelConfig};
+
+    fn mamba_groups(variant: FusionVariant) -> Vec<Vec<usize>> {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = stitch(&c, variant);
+        plan.validate(&c).expect("plan must validate");
+        plan.groups.iter().map(|g| g.einsums.clone()).collect()
+    }
+
+    #[test]
+    fn unfused_is_24_groups() {
+        assert_eq!(mamba_groups(FusionVariant::Unfused).len(), 24);
+    }
+
+    #[test]
+    fn ri_only_is_12_groups() {
+        // Paper §IV-A: "we reduce the number of fusion groups from 24
+        // ... to 12", with the SSM region (16–21) one group.
+        let gs = mamba_groups(FusionVariant::RIOnly);
+        assert_eq!(gs.len(), 12, "groups = {gs:?}");
+        assert!(gs.contains(&vec![16, 17, 18, 19, 20, 21]), "groups = {gs:?}");
+    }
+
+    #[test]
+    fn ri_rsb_is_8_groups() {
+        // Paper §IV-B: "The total number of fusion groups is now eight",
+        // and the SSM passes its output S directly to 22–23.
+        let gs = mamba_groups(FusionVariant::RIRSb);
+        assert_eq!(gs.len(), 8, "groups = {gs:?}");
+        assert!(gs.contains(&vec![16, 17, 18, 19, 20, 21, 22, 23]), "groups = {gs:?}");
+        // "GEMM followed by an elementwise" (14–15) fuse.
+        assert!(gs.contains(&vec![14, 15]), "groups = {gs:?}");
+    }
+
+    #[test]
+    fn ri_rsb_rsp_is_3_groups() {
+        // Paper §IV-C: "Adding RSp reduces the number of fusion groups
+        // to three."
+        let gs = mamba_groups(FusionVariant::RIRSbRSp);
+        assert_eq!(gs.len(), 3, "groups = {gs:?}");
+        assert_eq!(gs[0], (1..=8).collect::<Vec<_>>());
+        assert_eq!(gs[1], (9..=13).collect::<Vec<_>>());
+        assert_eq!(gs[2], (14..=24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fully_fused_is_1_group() {
+        // Paper §IV-D: one fusion group across the entire cascade, with
+        // RD bridges between the three RSp-groups.
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = stitch(&c, FusionVariant::FullyFused);
+        plan.validate(&c).unwrap();
+        assert_eq!(plan.groups.len(), 1, "groups = {:?}", plan.groups);
+        assert!(plan.groups[0].rd_bridged);
+    }
+
+    #[test]
+    fn rd_bridges_are_at_conv_and_dtproj() {
+        // §IV-D: RD opportunities between RSp-groups 1↔2 and 2↔3 —
+        // i.e. at TX→TTX (7→9) and TTD→DT (13→14).
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = stitch(&c, FusionVariant::FullyFused);
+        let joins = &plan.groups[0].joins;
+        let rd_edges: Vec<(usize, usize)> = joins
+            .iter()
+            .filter(|j| j.class == Some(FusionClass::RD))
+            .map(|j| (j.via.unwrap(), j.einsum))
+            .collect();
+        assert!(rd_edges.contains(&(7, 9)), "rd edges = {rd_edges:?}");
+        assert!(rd_edges.contains(&(13, 14)), "rd edges = {rd_edges:?}");
+    }
+
+    #[test]
+    fn figure8_two_groups() {
+        // Paper Figure 8: greedy (full Algorithm 1) over the 5-Einsum
+        // cascade yields groups {E1,E2,E3} and {E4,E5}.
+        let c = examples::fig8_five(4, 5, 6, 3, 2);
+        let plan = stitch(&c, FusionVariant::RIRSbRSp);
+        plan.validate(&c).unwrap();
+        let gs: Vec<Vec<usize>> = plan.groups.iter().map(|g| g.einsums.clone()).collect();
+        assert_eq!(gs, vec![vec![1, 2, 3], vec![4, 5]]);
+        // Group stationarity: N is shared across all Einsums.
+        assert!(plan.groups[0].stationary.contains("N"));
+        assert!(plan.groups[1].stationary.contains("N"));
+    }
+
+    #[test]
+    fn pair_examples_fuse_only_when_variant_allows() {
+        // A lone RD pair: under RI-only/RI+RSb the class gate applies to
+        // the seed pair and splits it; under full Algorithm 1 the seed
+        // pair is unconditional ("given two Einsums, fusion is always
+        // possible", §III-D.1 — exactly how Figure 8 fuses E1–E2).
+        let rd = examples::fig7_rd(8, 4, 16, 2);
+        assert_eq!(stitch(&rd, FusionVariant::RIOnly).groups.len(), 2);
+        assert_eq!(stitch(&rd, FusionVariant::RIRSb).groups.len(), 2);
+        assert_eq!(stitch(&rd, FusionVariant::RIRSbRSp).groups.len(), 1);
+        assert_eq!(stitch(&rd, FusionVariant::FullyFused).groups.len(), 1);
+        let rsb = examples::fig5_rsb(8, 16);
+        assert_eq!(stitch(&rsb, FusionVariant::RIOnly).groups.len(), 2);
+        assert_eq!(stitch(&rsb, FusionVariant::RIRSb).groups.len(), 1);
+    }
+
+    #[test]
+    fn transformer_stitches() {
+        // The Transformer's simpler cascade fuses heavily under full
+        // greedy stitching (QK→softmax→AV chains are RSb/RSp).
+        let c = transformer::build(&transformer::TransformerConfig::medium(256));
+        let plan = stitch(&c, FusionVariant::RIRSbRSp);
+        plan.validate(&c).unwrap();
+        assert!(plan.groups.len() < c.len());
+    }
+
+    #[test]
+    fn internal_tensors_exclude_multi_group_consumers() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let plan = stitch(&c, FusionVariant::RIRSbRSp);
+        // LEX is produced in group 2 but consumed in group 3 (BX, SD) —
+        // never internal. RX is produced in group 1 but consumed at #23.
+        let internal = plan.internal_tensors();
+        assert!(!internal.contains("LEX"));
+        assert!(!internal.contains("RX"));
+        // NEX/SQ/HH live and die inside their group.
+        assert!(internal.contains("SQ"));
+        assert!(internal.contains("HH"));
+    }
+
+    #[test]
+    fn mamba2_group_counts_decrease_monotonically() {
+        let c = crate::cascade::mamba2::build(&ModelConfig::mamba_370m(), 64, 1);
+        let mut counts = Vec::new();
+        for v in FusionVariant::all() {
+            let plan = stitch(&c, v);
+            plan.validate(&c).unwrap();
+            counts.push(plan.groups.len());
+        }
+        for w in counts.windows(2) {
+            assert!(w[1] <= w[0], "counts = {counts:?}");
+        }
+        assert_eq!(counts[0], c.len());
+    }
+}

@@ -1,0 +1,121 @@
+//! The paper's fusion-strategy variants (§IV-A..D, Figures 9/10/12).
+
+use std::fmt;
+
+use super::classify::FusionClass;
+
+/// A fusion strategy: which classes the stitcher may use for links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FusionVariant {
+    /// Every Einsum its own group (the Best-Unfused baseline).
+    Unfused,
+    /// §IV-A: rank-isomorphic links only (24 → 12 groups for Mamba-1).
+    RIOnly,
+    /// §IV-B: RI + rank-subsetted (→ 8 groups).
+    RIRSb,
+    /// §IV-C: RI + RSb + rank-supersetted — the full greedy Algorithm 1
+    /// (→ 3 groups).
+    RIRSbRSp,
+    /// §IV-D: additionally bridge RD boundaries with partial-product
+    /// spill/trigger (→ 1 group, "fully fused").
+    FullyFused,
+}
+
+impl FusionVariant {
+    /// All variants in the paper's presentation order.
+    pub fn all() -> [FusionVariant; 5] {
+        [
+            FusionVariant::Unfused,
+            FusionVariant::RIOnly,
+            FusionVariant::RIRSb,
+            FusionVariant::RIRSbRSp,
+            FusionVariant::FullyFused,
+        ]
+    }
+
+    /// The fused variants (everything but the baseline).
+    pub fn fused() -> [FusionVariant; 4] {
+        [
+            FusionVariant::RIOnly,
+            FusionVariant::RIRSb,
+            FusionVariant::RIRSbRSp,
+            FusionVariant::FullyFused,
+        ]
+    }
+
+    /// May the stitcher use `class` for an in-group link?
+    pub fn allows(&self, class: FusionClass) -> bool {
+        match self {
+            FusionVariant::Unfused => false,
+            FusionVariant::RIOnly => class == FusionClass::RI,
+            FusionVariant::RIRSb => matches!(class, FusionClass::RI | FusionClass::RSb),
+            FusionVariant::RIRSbRSp => {
+                matches!(class, FusionClass::RI | FusionClass::RSb | FusionClass::RSp)
+            }
+            FusionVariant::FullyFused => true,
+        }
+    }
+
+    /// Does this variant bridge RD boundaries by spilling partial
+    /// products (rather than keeping intermediates strictly on-chip)?
+    pub fn bridges_rd(&self) -> bool {
+        matches!(self, FusionVariant::FullyFused)
+    }
+
+    /// CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FusionVariant::Unfused => "unfused",
+            FusionVariant::RIOnly => "ri",
+            FusionVariant::RIRSb => "ri+rsb",
+            FusionVariant::RIRSbRSp => "ri+rsb+rsp",
+            FusionVariant::FullyFused => "fully-fused",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<FusionVariant> {
+        match s.to_ascii_lowercase().as_str() {
+            "unfused" | "none" => Some(FusionVariant::Unfused),
+            "ri" | "ri-only" => Some(FusionVariant::RIOnly),
+            "ri+rsb" | "rsb" => Some(FusionVariant::RIRSb),
+            "ri+rsb+rsp" | "rsp" => Some(FusionVariant::RIRSbRSp),
+            "fully-fused" | "full" | "fused" => Some(FusionVariant::FullyFused),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for FusionVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowance_lattice() {
+        use FusionClass::*;
+        assert!(FusionVariant::RIOnly.allows(RI));
+        assert!(!FusionVariant::RIOnly.allows(RSb));
+        assert!(FusionVariant::RIRSb.allows(RSb));
+        assert!(!FusionVariant::RIRSb.allows(RSp));
+        assert!(FusionVariant::RIRSbRSp.allows(RSp));
+        assert!(!FusionVariant::RIRSbRSp.allows(RD));
+        assert!(FusionVariant::FullyFused.allows(RD));
+        for c in [RI, RSb, RSp, RD] {
+            assert!(!FusionVariant::Unfused.allows(c));
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for v in FusionVariant::all() {
+            assert_eq!(FusionVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(FusionVariant::parse("bogus"), None);
+    }
+}

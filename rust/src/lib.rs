@@ -1,0 +1,37 @@
+//! # Mambalaya
+//!
+//! A from-scratch reproduction of *"Mambalaya: Einsum-Based Fusion
+//! Optimizations on State-Space Models"* (CS.AR 2026): the
+//! extended-Einsum formulation of Mamba, the RI/RSb/RSp/RD fusion
+//! taxonomy with greedy stitching, an analytical accelerator model of
+//! the Mambalaya architecture and its baselines, and a functional
+//! three-layer Rust + JAX + Pallas serving stack (AOT via xla/PJRT).
+//!
+//! Layer map (see `DESIGN.md` for the full inventory):
+//! * [`einsum`] / [`cascade`] — the extended-Einsum IR and the concrete
+//!   Mamba-1/Mamba-2/Transformer cascades;
+//! * [`fusion`] — classification + greedy stitching (the paper's core);
+//! * [`arch`] / [`model`] / [`traffic`] / [`roofline`] / [`workload`] —
+//!   the analytical accelerator substrate (Timeloop substitute);
+//! * [`report`] — regenerates every paper table and figure;
+//! * [`runtime`] / [`coordinator`] — the PJRT serving stack (python
+//!   never runs on the request path);
+//! * [`util`] / [`prop`] / [`bench_util`] — offline-build stand-ins for
+//!   clap/serde/proptest/criterion.
+//!
+//! `EXPERIMENTS.md` records paper-vs-measured for every experiment.
+
+pub mod arch;
+pub mod bench_util;
+pub mod cascade;
+pub mod coordinator;
+pub mod einsum;
+pub mod fusion;
+pub mod model;
+pub mod prop;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod traffic;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,297 @@
+//! `mambalaya` — CLI for the Mambalaya reproduction.
+//!
+//! Subcommands:
+//!   cascade    dump the Mamba cascade (table or Graphviz dot)
+//!   fuse       show fusion groups per variant
+//!   analyze    evaluate a layer under a variant on the Mambalaya model
+//!   reproduce  regenerate a paper table/figure (--exp table1|...|fig15|all)
+//!   serve      run the serving coordinator on the AOT artifacts
+//!   help       this text
+
+use std::io::Write as _;
+
+use mambalaya::arch::ArchSpec;
+use mambalaya::cascade::{mamba1, mamba2, ModelConfig};
+use mambalaya::coordinator::{serve_all, BatchPolicy, WorkloadGen};
+use mambalaya::einsum::display::{cascade_dot, cascade_table};
+use mambalaya::fusion::{stitch, FusionVariant};
+use mambalaya::model::{evaluate, ExecOptions};
+use mambalaya::report;
+use mambalaya::roofline::{ascii_chart, timeline};
+use mambalaya::runtime::MambaEngine;
+use mambalaya::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("cascade") => cmd_cascade(&args),
+        Some("fuse") => cmd_fuse(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+mambalaya — einsum-based fusion optimizations on state-space models (reproduction)
+
+USAGE: mambalaya <SUBCOMMAND> [OPTIONS]
+
+  cascade   --model 370m|2.8b|tiny [--seq N] [--mamba2] [--dot]
+  fuse      --model 370m [--seq N] [--variant V] [--cascade FILE.einsum]
+  analyze   --model 370m [--seq N] [--batch B] [--variant V] [--pipelined] [--chart]
+  reproduce --exp table1|table2|table3|fig2|fig9|fig10|fig12|fig13|fig14|fig15|all
+            [--model 370m] [--seq N] [--batch B] [--out-dir results]
+  serve     [--artifacts DIR] [--requests N] [--gen-lo N] [--gen-hi N] [--workers W]
+";
+
+fn model(args: &Args) -> ModelConfig {
+    ModelConfig::by_name(args.get_or("model", "370m")).unwrap_or_else(|| {
+        eprintln!("unknown model; use 130m|370m|1.4b|2.8b|tiny");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_cascade(args: &Args) -> i32 {
+    let cfg = model(args);
+    let seq = args.get_u64("seq", 1024);
+    let c = if args.flag("mamba2") {
+        mamba2::build(&cfg, seq, 1)
+    } else {
+        mamba1::build(&cfg, seq, 1)
+    };
+    if let Err(e) = c.validate() {
+        eprintln!("cascade invalid: {e}");
+        return 1;
+    }
+    if args.flag("dot") {
+        print!("{}", cascade_dot(&c));
+    } else {
+        print!("{}", cascade_table(&c));
+    }
+    0
+}
+
+fn cmd_fuse(args: &Args) -> i32 {
+    // `--cascade FILE` applies the taxonomy to a user-supplied EDGE
+    // cascade (see einsum::parser for the format); default is Mamba-1.
+    let c = if let Some(path) = args.get("cascade") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("reading {path}: {e}");
+                return 1;
+            }
+        };
+        match mambalaya::einsum::parse_cascade(path, &text) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("parsing {path}: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        let cfg = model(args);
+        let seq = args.get_u64("seq", 1024);
+        mamba1::build(&cfg, seq, 1)
+    };
+    let variants: Vec<FusionVariant> = match args.get("variant") {
+        Some(v) => match FusionVariant::parse(v) {
+            Some(v) => vec![v],
+            None => {
+                eprintln!("unknown variant {v}");
+                return 2;
+            }
+        },
+        None => FusionVariant::all().to_vec(),
+    };
+    for v in variants {
+        let plan = stitch(&c, v);
+        println!("{:<12} {} groups", v.name(), plan.groups.len());
+        for g in &plan.groups {
+            let ids: Vec<String> = g.einsums.iter().map(|i| i.to_string()).collect();
+            let classes: Vec<String> =
+                g.classes_used().iter().map(|c| c.to_string()).collect();
+            println!(
+                "  [{}] stationary {} classes {{{}}}{}",
+                ids.join(","),
+                g.stationary,
+                classes.join(","),
+                if g.rd_bridged { " (RD-bridged)" } else { "" }
+            );
+        }
+    }
+    0
+}
+
+fn cmd_analyze(args: &Args) -> i32 {
+    let cfg = model(args);
+    let seq = args.get_u64("seq", 4096);
+    let batch = args.get_u64("batch", 1);
+    let arch = ArchSpec::mambalaya();
+    let c = mamba1::build(&cfg, seq, batch);
+    let variants: Vec<FusionVariant> = match args.get("variant") {
+        Some(v) => vec![FusionVariant::parse(v).expect("variant")],
+        None => FusionVariant::all().to_vec(),
+    };
+    let opts = ExecOptions { pipelined: args.flag("pipelined"), ..Default::default() };
+    let base = evaluate(&c, &stitch(&c, FusionVariant::Unfused), &arch, &opts);
+    println!(
+        "{} seq={seq} batch={batch} | machine balance {:.1} flop/B",
+        cfg.name,
+        arch.machine_balance()
+    );
+    for v in variants {
+        let cost = evaluate(&c, &stitch(&c, v), &arch, &opts);
+        println!(
+            "{:<12} latency {:>12} cyc ({:.3} ms) speedup {:>5.2}x  OI {:>6.1}  traffic {:>8} MiB (inter {} MiB)",
+            v.name(),
+            cost.latency,
+            cost.latency_secs(&arch) * 1e3,
+            base.latency as f64 / cost.latency as f64,
+            cost.intensity(),
+            cost.traffic.total() >> 20,
+            cost.traffic.inter() >> 20,
+        );
+        if args.flag("chart") {
+            print!("{}", ascii_chart(&timeline(&cost, &arch), 72));
+        }
+    }
+    0
+}
+
+fn cmd_reproduce(args: &Args) -> i32 {
+    let cfg = model(args);
+    let seq = args.get_u64("seq", 16384);
+    let batch = args.get_u64("batch", 64);
+    let exp = args.get_or("exp", "all");
+    let out_dir = args.get("out-dir").map(|s| s.to_string());
+    let mut outputs: Vec<(&str, String, String)> = Vec::new();
+
+    let run = |name: &str| exp == "all" || exp == name;
+    if run("table1") {
+        let (t, c) = report::table1_report(&cfg, seq, batch);
+        outputs.push(("table1", t, c));
+    }
+    if run("table2") {
+        let (t, c) = report::table2_report();
+        outputs.push(("table2", t, c));
+    }
+    if run("table3") {
+        let (t, c) = report::table3_report();
+        outputs.push(("table3", t, c));
+    }
+    if run("fig2") {
+        let (t, c) = report::fig2_report(&cfg, seq, batch);
+        outputs.push(("fig2", t, c));
+    }
+    if run("fig9") {
+        let (t, c) = report::fig9_report(&cfg, seq);
+        outputs.push(("fig9", t, c));
+    }
+    if run("fig10") {
+        let (t, c) = report::fig10_report(&cfg, seq, batch);
+        outputs.push(("fig10", t, c));
+    }
+    if run("fig12") {
+        let (t, c) = report::fig12_report(&cfg);
+        outputs.push(("fig12", t, c));
+    }
+    if run("fig13") {
+        let (t, c) = report::fig13_report(&cfg);
+        outputs.push(("fig13", t, c));
+    }
+    if run("fig14") {
+        let (t, c) = report::fig14_report(&cfg, seq, batch);
+        outputs.push(("fig14", t, c));
+    }
+    if run("fig15") {
+        let (t, c) = report::fig15_report(&cfg, seq, batch);
+        outputs.push(("fig15", t, c));
+    }
+    if outputs.is_empty() {
+        eprintln!("unknown experiment {exp}");
+        return 2;
+    }
+    for (name, text, csv) in &outputs {
+        println!("{text}");
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir).expect("mkdir");
+            let path = format!("{dir}/{name}.csv");
+            let mut f = std::fs::File::create(&path).expect("create");
+            f.write_all(csv.as_bytes()).expect("write");
+            println!("  → wrote {path}");
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let n = args.get_u64("requests", 16) as usize;
+    let gen_lo = args.get_u64("gen-lo", 4) as usize;
+    let gen_hi = args.get_u64("gen-hi", 16) as usize;
+    let workers = args.get_u64("workers", 1) as usize;
+
+    let manifest = match mambalaya::runtime::Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "serving {} ({} layers, E={}, vocab={}) from {dir} with {workers} worker(s)",
+        manifest.model, manifest.n_layer, manifest.d_model, manifest.vocab
+    );
+    let mut gen =
+        WorkloadGen::new(2024, manifest.vocab, manifest.prefill_len, gen_lo, gen_hi);
+    let reqs: Vec<_> = (0..n).map(|_| gen.next_request()).collect();
+
+    if workers <= 1 {
+        let dir2 = dir.clone();
+        match serve_all(move || MambaEngine::load(&dir2), BatchPolicy::default(), reqs) {
+            Ok((resps, reportline)) => {
+                let total_tokens: usize = resps.iter().map(|r| r.tokens.len()).sum();
+                println!("completed {} requests, {} tokens", resps.len(), total_tokens);
+                println!("{reportline}");
+                0
+            }
+            Err(e) => {
+                eprintln!("serve failed: {e:#}");
+                1
+            }
+        }
+    } else {
+        let factories: Vec<_> = (0..workers)
+            .map(|_| {
+                let d = dir.clone();
+                move || MambaEngine::load(&d)
+            })
+            .collect();
+        let mut server =
+            mambalaya::coordinator::Server::start(factories, BatchPolicy::default());
+        let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+        let mut total_tokens = 0;
+        for rx in rxs {
+            match rx.recv() {
+                Ok(resp) => total_tokens += resp.tokens.len(),
+                Err(e) => {
+                    eprintln!("response lost: {e}");
+                    return 1;
+                }
+            }
+        }
+        println!("completed {n} requests, {total_tokens} tokens");
+        for r in server.reports() {
+            println!("{r}");
+        }
+        server.shutdown();
+        0
+    }
+}

@@ -1,0 +1,192 @@
+//! Per-Einsum analytical costs: compute cycles under a binding, and
+//! DRAM traffic under the algorithmic-minimum assumption the paper
+//! states for its Timeloop runs ("sufficient buffering to achieve
+//! perfect data reuse within each Einsum").
+
+use crate::arch::{ArchSpec, Binding};
+use crate::einsum::cascade::CascadeIndex;
+use crate::einsum::{Cascade, EinsumSpec, TensorClass};
+
+/// Traffic for one Einsum, split the way Table I / Figure 14 report it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    /// Bytes read for tensors shared with other Einsums (intermediates).
+    pub inter_read: u64,
+    /// Bytes written for tensors shared with other Einsums.
+    pub inter_write: u64,
+    /// Bytes read for tensors unique to this Einsum (weights, true
+    /// inputs).
+    pub intra_read: u64,
+    /// Bytes written for tensors unique to this Einsum (final outputs,
+    /// spilled partial products).
+    pub intra_write: u64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> u64 {
+        self.inter_read + self.inter_write + self.intra_read + self.intra_write
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.inter_read + self.intra_read
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.inter_write + self.intra_write
+    }
+
+    pub fn inter(&self) -> u64 {
+        self.inter_read + self.inter_write
+    }
+
+    pub fn intra(&self) -> u64 {
+        self.intra_read + self.intra_write
+    }
+
+    pub fn add(&mut self, other: &Traffic) {
+        self.inter_read += other.inter_read;
+        self.inter_write += other.inter_write;
+        self.intra_read += other.intra_read;
+        self.intra_write += other.intra_write;
+    }
+}
+
+/// Compute cycles for an Einsum bound to `binding` on `arch`.
+///
+/// Model: each PE retires one MAC (or one low-intensity op) per cycle
+/// through its 6-stage pipelined functional unit (paper §V-A). The
+/// mapper is assumed to find a near-optimal spatial mapping (K-splitting
+/// and output tiling are both available on the store-and-forward array),
+/// so utilization is limited only by the total work vs the PE count and
+/// by the array fill latency.
+pub fn compute_cycles(e: &EinsumSpec, arch: &ArchSpec, binding: Binding) -> u64 {
+    let pes = arch.pes(binding);
+    let work = if e.op.is_mulacc() {
+        // MACs = points of the full iteration space.
+        e.iteration_space().points()
+    } else {
+        e.op.elementwise_ops() * e.output.elements()
+    };
+    // Array fill/drain: one pass through the systolic dimension for 2D
+    // mode, pipeline depth for the 1D arrays.
+    let fill = match binding {
+        Binding::Mode2D => arch.pe_2d_rows + arch.pe_2d_cols,
+        Binding::Wide1D | Binding::Small1D => 6,
+    };
+    work.div_ceil(pes) + fill
+}
+
+/// Is a tensor "shared" (inter-Einsum) in the Table-I sense: produced by
+/// some Einsum in the cascade, or consumed by more than one?
+pub fn is_shared(c: &Cascade, name: &str) -> bool {
+    if c.producers().contains_key(name) {
+        return true;
+    }
+    c.consumers().get(name).map(|v| v.len() > 1).unwrap_or(false)
+}
+
+/// Algorithmic-minimum traffic for one Einsum executed *unfused*: every
+/// input read once from DRAM, the output written once.
+pub fn unfused_traffic(c: &Cascade, e: &EinsumSpec) -> Traffic {
+    unfused_traffic_with(&CascadeIndex::new(c), e)
+}
+
+/// [`unfused_traffic`] with a prebuilt index (DSE hot path, §Perf).
+pub fn unfused_traffic_with(idx: &CascadeIndex, e: &EinsumSpec) -> Traffic {
+    let mut t = Traffic::default();
+    // Inputs, deduplicated by tensor name (X·X reads X once).
+    let mut seen: Vec<&str> = Vec::new();
+    for op in &e.inputs {
+        if seen.contains(&op.tensor.name.as_str()) {
+            continue;
+        }
+        seen.push(&op.tensor.name);
+        let bytes = op.tensor.bytes();
+        if idx.is_shared(&op.tensor.name) {
+            t.inter_read += bytes;
+        } else {
+            t.intra_read += bytes;
+        }
+    }
+    let out_bytes = e.output.bytes();
+    if idx.is_shared(&e.output.name) {
+        t.inter_write += out_bytes;
+    } else {
+        t.intra_write += out_bytes;
+    }
+    t
+}
+
+/// Bytes of weights an Einsum reads (resident working set for buffer
+/// booking).
+pub fn weight_bytes(e: &EinsumSpec) -> u64 {
+    let mut seen: Vec<&str> = Vec::new();
+    let mut total = 0;
+    for op in &e.inputs {
+        if op.tensor.class == TensorClass::Weight && !seen.contains(&op.tensor.name.as_str()) {
+            seen.push(&op.tensor.name);
+            total += op.tensor.bytes();
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+
+    #[test]
+    fn gemm_cycles_scale_with_pes() {
+        let cfg = ModelConfig::mamba_370m();
+        let c = mamba1::build(&cfg, 256, 1);
+        let arch = ArchSpec::mambalaya();
+        let tx = c.by_id(7).unwrap(); // I×E×D GEMM
+        let macs = 256 * 1024 * 2048;
+        let cy2d = compute_cycles(tx, &arch, Binding::Mode2D);
+        assert_eq!(cy2d, macs / 65_536 + 512);
+        let cy1d = compute_cycles(tx, &arch, Binding::Small1D);
+        assert!(cy1d > cy2d * 100);
+    }
+
+    #[test]
+    fn elementwise_cycles() {
+        let cfg = ModelConfig::mamba_370m();
+        let c = mamba1::build(&cfg, 64, 1);
+        let arch = ArchSpec::mambalaya();
+        let sq = c.by_id(2).unwrap(); // I×E elementwise
+        let cy = compute_cycles(sq, &arch, Binding::Wide1D);
+        assert_eq!(cy, (64u64 * 1024).div_ceil(8192) + 6);
+    }
+
+    #[test]
+    fn unfused_traffic_classifies_inter_vs_intra() {
+        let cfg = ModelConfig::mamba_370m();
+        let c = mamba1::build(&cfg, 64, 1);
+        let tx = c.by_id(7).unwrap();
+        let t = unfused_traffic(&c, tx);
+        // GX (intermediate) is inter; Wtx (weight) is intra.
+        assert_eq!(t.inter_read, 64 * 1024 * 2);
+        assert_eq!(t.intra_read, 1024 * 2048 * 2);
+        // TX output is consumed later → inter write.
+        assert_eq!(t.inter_write, 64 * 2048 * 2);
+        assert_eq!(t.intra_write, 0);
+    }
+
+    #[test]
+    fn duplicate_operand_reads_once() {
+        let cfg = ModelConfig::mamba_370m();
+        let c = mamba1::build(&cfg, 64, 1);
+        let sq = c.by_id(2).unwrap(); // SQ = X·X
+        let t = unfused_traffic(&c, sq);
+        assert_eq!(t.inter_read, 64 * 1024 * 2); // X once, not twice
+    }
+
+    #[test]
+    fn weight_bytes_of_inproj() {
+        let cfg = ModelConfig::mamba_370m();
+        let c = mamba1::build(&cfg, 64, 1);
+        assert_eq!(weight_bytes(c.by_id(7).unwrap()), 1024 * 2048 * 2);
+        assert_eq!(weight_bytes(c.by_id(2).unwrap()), 0);
+    }
+}

@@ -1,0 +1,486 @@
+//! Cascade execution model: evaluates a fusion plan on an architecture
+//! into a per-phase timeline (the paper's Figures 2/10/15) and totals
+//! (Figures 12/13/14, Table I).
+//!
+//! Modeling assumptions (DESIGN.md §7):
+//! * per-Einsum compute = work / bound-PE count + fill (pseudo-optimal
+//!   intra-Einsum mapping, as the paper grants Timeloop);
+//! * per-group memory = algorithmic-minimum DRAM traffic with fusion
+//!   exceptions (pass reloads, staging spills, RD-bridge partials);
+//! * the 2D array and its 1D-wide mode are the *same silicon* —
+//!   members bound to either serialize; the small 1D array overlaps
+//!   (it pipelines into the 2D array, §V-A);
+//! * group latency = max(compute, memory) — fused traversals overlap
+//!   compute with DRAM streaming; groups execute back-to-back unless
+//!   `pipelined` (then compute and memory overlap across groups too).
+
+use crate::arch::{bind_group, ArchSpec, Binding, Staging};
+use crate::einsum::cascade::CascadeIndex;
+use crate::einsum::Cascade;
+use crate::fusion::{FusionGroup, FusionPlan};
+
+use super::cost::{compute_cycles, unfused_traffic_with, weight_bytes, Traffic};
+use super::passes::analyze_scope_with;
+
+/// Evaluation options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    /// Intermediate staging discipline (MARCA-like = FullExtent).
+    pub staging: Staging,
+    /// Overlap compute and memory *across* fusion groups (the paper's
+    /// "with parallel pipelining" results, §VI-C.1).
+    pub pipelined: bool,
+    /// Charge per-invocation recurrent-state load/store (token
+    /// generation: H and the conv window enter/leave the chip each
+    /// step).
+    pub decode_state_io: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { staging: Staging::UnitTile, pipelined: false, decode_state_io: false }
+    }
+}
+
+/// Cost of one phase (= one fusion group).
+#[derive(Debug, Clone)]
+pub struct PhaseCost {
+    pub einsums: Vec<usize>,
+    /// Compute cycles on the 2D array (2D + wide-1D modes serialize).
+    pub cycles_2d: u64,
+    /// Compute cycles on the small 1D array (overlaps the 2D array).
+    pub cycles_small: u64,
+    /// DRAM traffic of the phase.
+    pub traffic: Traffic,
+    /// Memory cycles implied by the traffic.
+    pub mem_cycles: u64,
+    /// Phase latency (cycles).
+    pub latency: u64,
+    /// Total FLOPs executed in the phase.
+    pub flops: u64,
+}
+
+impl PhaseCost {
+    /// Achieved compute throughput as a fraction of the 2D-mode peak.
+    /// Clamped to 1.0: work retired on the overlapping small 1D array
+    /// can push raw throughput marginally past the 2D-mode peak.
+    pub fn utilization(&self, arch: &ArchSpec) -> f64 {
+        if self.latency == 0 {
+            return 0.0;
+        }
+        let peak_per_cycle = arch.pes(Binding::Mode2D) as f64 * 2.0;
+        (self.flops as f64 / (self.latency as f64 * peak_per_cycle)).min(1.0)
+    }
+
+    /// Operational intensity (FLOP / DRAM byte).
+    pub fn intensity(&self) -> f64 {
+        let b = self.traffic.total();
+        if b == 0 {
+            f64::INFINITY
+        } else {
+            self.flops as f64 / b as f64
+        }
+    }
+}
+
+/// Cost of a full single-layer cascade under a plan.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    pub cascade_name: String,
+    pub variant_name: String,
+    pub phases: Vec<PhaseCost>,
+    /// End-to-end latency in cycles (respecting `pipelined`).
+    pub latency: u64,
+    pub flops: u64,
+    pub traffic: Traffic,
+}
+
+impl LayerCost {
+    pub fn latency_secs(&self, arch: &ArchSpec) -> f64 {
+        self.latency as f64 / arch.cycles_per_sec()
+    }
+
+    pub fn intensity(&self) -> f64 {
+        let b = self.traffic.total();
+        if b == 0 {
+            f64::INFINITY
+        } else {
+            self.flops as f64 / b as f64
+        }
+    }
+}
+
+/// Evaluate one fusion group.
+fn eval_group(
+    c: &Cascade,
+    idx: &CascadeIndex,
+    g: &FusionGroup,
+    arch: &ArchSpec,
+    opts: &ExecOptions,
+) -> PhaseCost {
+    let bindings = bind_group(c, g);
+    let binding_of = |id: usize| {
+        bindings.iter().find(|b| b.einsum == id).map(|b| b.binding).unwrap_or(Binding::Wide1D)
+    };
+    let passes = analyze_scope_with(c, idx, &g.einsums);
+    let internal: Vec<&str> = g.internal_tensors.iter().map(|s| s.as_str()).collect();
+
+    let mut cycles_2d = 0u64;
+    let mut cycles_small = 0u64;
+    let mut flops = 0u64;
+    let mut traffic = Traffic::default();
+    // Tensors already charged in this group (first consumer pays; later
+    // consumers ride the same pass unless pass analysis says otherwise).
+    let mut charged: Vec<&str> = Vec::new();
+
+    let singleton = g.einsums.len() == 1;
+
+    for &id in &g.einsums {
+        let e = c.by_id(id).expect("group member");
+        flops += e.flops();
+        match binding_of(id) {
+            Binding::Small1D => cycles_small += compute_cycles(e, arch, Binding::Small1D),
+            b => cycles_2d += compute_cycles(e, arch, b),
+        }
+
+        if singleton {
+            // Best-unfused accounting: all inputs in, output out.
+            traffic.add(&unfused_traffic_with(idx, e));
+            continue;
+        }
+
+        // Fused accounting: inputs.
+        for op in &e.inputs {
+            let name = op.tensor.name.as_str();
+            if internal.contains(&name) {
+                continue; // stays on-chip
+            }
+            let n_passes = passes.passes_of(name) as u64;
+            if let Some(pos) = charged.iter().position(|&t| t == name) {
+                let _ = pos; // already charged (with its pass count)
+                continue;
+            }
+            charged.push(name);
+            let bytes = op.tensor.bytes() * n_passes;
+            if idx.is_shared(name) {
+                traffic.inter_read += bytes;
+            } else {
+                traffic.intra_read += bytes;
+            }
+        }
+        // Output: written iff it leaves the group — or if it needs
+        // multiple passes even *inside* the group (X and LEX, paper
+        // §VI-C.1: a pass boundary forces a spill and per-pass reloads;
+        // "loaded multiple times").
+        let out_name = e.output.name.as_str();
+        let bytes = e.output.bytes();
+        if !internal.contains(&out_name) {
+            if idx.is_shared(out_name) {
+                traffic.inter_write += bytes;
+            } else {
+                traffic.intra_write += bytes;
+            }
+        } else {
+            let n_passes = passes.passes_of(out_name) as u64;
+            if n_passes > 1 {
+                traffic.inter_write += bytes;
+                traffic.inter_read += bytes * (n_passes - 1);
+            }
+        }
+    }
+
+    if !singleton {
+        apply_staging_spills(c, idx, g, arch, opts, &mut traffic);
+        if g.rd_bridged {
+            apply_rd_bridge_costs(c, g, &mut traffic);
+        }
+    }
+    if opts.decode_state_io {
+        apply_state_io(c, g, &mut traffic);
+    }
+
+    let mem_cycles = (traffic.total() as f64 / arch.bytes_per_cycle()).ceil() as u64;
+    let latency = cycles_2d.max(cycles_small).max(mem_cycles);
+    PhaseCost {
+        einsums: g.einsums.clone(),
+        cycles_2d,
+        cycles_small,
+        traffic,
+        mem_cycles,
+        latency,
+        flops,
+    }
+}
+
+/// MARCA-like full-extent staging: internal tensors staged at full
+/// sequence extent spill to DRAM once the live set exceeds the buffer
+/// (minus the resident weight working set). Spilled tensors pay a write
+/// and a read of their full size (inter-Einsum traffic — they are
+/// shared tensors).
+fn apply_staging_spills(
+    c: &Cascade,
+    idx: &CascadeIndex,
+    g: &FusionGroup,
+    arch: &ArchSpec,
+    opts: &ExecOptions,
+    traffic: &mut Traffic,
+) {
+    if opts.staging != Staging::FullExtent {
+        return;
+    }
+    let weights: u64 = g.einsums.iter().map(|&id| weight_bytes(c.by_id(id).unwrap())).sum();
+    let budget = arch.buffer_bytes.saturating_sub(weights);
+    // Walk members in order, tracking the live full-extent intermediates.
+    let mut live: Vec<(&str, u64, usize)> = Vec::new(); // (name, bytes, last consumer)
+    for &id in &g.einsums {
+        let e = c.by_id(id).unwrap();
+        live.retain(|(_, _, last)| *last >= id);
+        if g.internal_tensors.iter().any(|t| t == &e.output.name) {
+            let last = idx.consumers_of(&e.output.name).iter().max().copied().unwrap_or(id);
+            live.push((e.output.name.as_str(), e.output.bytes(), last));
+        }
+        let occupancy: u64 = live.iter().map(|(_, b, _)| *b).sum();
+        if occupancy > budget {
+            // Spill the largest live tensor (write now, read back at its
+            // consumer) until we fit.
+            live.sort_by_key(|(_, b, _)| std::cmp::Reverse(*b));
+            while live.iter().map(|(_, b, _)| *b).sum::<u64>() > budget && !live.is_empty() {
+                let (_, bytes, _) = live.remove(0);
+                traffic.inter_write += bytes;
+                traffic.inter_read += bytes;
+            }
+        }
+    }
+}
+
+/// Fully-fused RD bridges (§IV-D): partial products of the upstream
+/// intermediate write to main memory and the downstream Einsum triggers
+/// on final writes — the intermediate round-trips DRAM once. The
+/// I-stationary streaming the bridge forces also constrains every
+/// in-group GEMM's dataflow, spilling K-partial output tiles (the
+/// "comparatively worse intra-Einsum traffic" of Figure 14).
+fn apply_rd_bridge_costs(c: &Cascade, g: &FusionGroup, traffic: &mut Traffic) {
+    use crate::fusion::FusionClass;
+    for j in &g.joins {
+        if j.class == Some(FusionClass::RD) {
+            if let Some(up) = j.via.and_then(|via| c.by_id(via)) {
+                let bytes = up.output.bytes();
+                traffic.inter_write += bytes;
+                traffic.inter_read += bytes;
+            }
+        }
+    }
+    for &id in &g.einsums {
+        let e = c.by_id(id).unwrap();
+        if e.is_gemm_like() {
+            let bytes = e.output.bytes();
+            traffic.intra_write += bytes;
+            traffic.intra_read += bytes;
+        }
+    }
+}
+
+/// Decode-step state I/O: every recurrent/windowed tensor's live window
+/// is loaded at step start and stored at step end (`H` and the conv tail
+/// of `TX` are Mamba's "KV cache").
+fn apply_state_io(c: &Cascade, g: &FusionGroup, traffic: &mut Traffic) {
+    let mut seen: Vec<&str> = Vec::new();
+    for &id in &g.einsums {
+        let e = c.by_id(id).unwrap();
+        for op in &e.inputs {
+            if !op.is_recurrent() || seen.contains(&op.tensor.name.as_str()) {
+                continue;
+            }
+            seen.push(&op.tensor.name);
+            for (rank, acc) in op.tensor.ranks.iter().zip(&op.accesses) {
+                if acc.is_recurrent() && rank.is_generational() {
+                    // One generation of state per token in flight: the I
+                    // extent of a decode cascade *is* the batch size.
+                    let window = acc.lookback();
+                    let per_gen = op.tensor.generation_bytes(&rank.name);
+                    let bytes = per_gen * window * rank.extent;
+                    traffic.inter_read += bytes;
+                    traffic.inter_write += bytes;
+                }
+            }
+        }
+    }
+}
+
+/// Evaluate a full plan.
+pub fn evaluate(
+    c: &Cascade,
+    plan: &FusionPlan,
+    arch: &ArchSpec,
+    opts: &ExecOptions,
+) -> LayerCost {
+    // Build the lookup index once; eval_group is the DSE inner loop.
+    let idx = CascadeIndex::new(c);
+    let phases: Vec<PhaseCost> =
+        plan.groups.iter().map(|g| eval_group(c, &idx, g, arch, opts)).collect();
+    let mut traffic = Traffic::default();
+    let mut flops = 0u64;
+    for p in &phases {
+        traffic.add(&p.traffic);
+        flops += p.flops;
+    }
+    let latency = if opts.pipelined {
+        // Compute and memory streams overlap across group boundaries;
+        // the small 1D array overlaps the 2D array throughout.
+        let c2d: u64 = phases.iter().map(|p| p.cycles_2d).sum();
+        let csm: u64 = phases.iter().map(|p| p.cycles_small).sum();
+        let mem: u64 = phases.iter().map(|p| p.mem_cycles).sum();
+        c2d.max(csm).max(mem)
+    } else {
+        phases.iter().map(|p| p.latency).sum()
+    };
+    LayerCost {
+        cascade_name: c.name.clone(),
+        variant_name: plan.variant_name.clone(),
+        phases,
+        latency,
+        flops,
+        traffic,
+    }
+}
+
+/// The *ideal* cost for a plan: all inter-Einsum traffic removed, intra
+/// kept (paper Figure 2 bottom / Figure 12 red line).
+pub fn ideal_cost(c: &Cascade, plan: &FusionPlan, arch: &ArchSpec, opts: &ExecOptions) -> LayerCost {
+    let mut cost = evaluate(c, plan, arch, opts);
+    let mut traffic = Traffic::default();
+    let mut flops = 0u64;
+    for p in &mut cost.phases {
+        p.traffic.inter_read = 0;
+        p.traffic.inter_write = 0;
+        p.mem_cycles = (p.traffic.total() as f64 / arch.bytes_per_cycle()).ceil() as u64;
+        p.latency = p.cycles_2d.max(p.cycles_small).max(p.mem_cycles);
+        traffic.add(&p.traffic);
+        flops += p.flops;
+    }
+    cost.latency = if opts.pipelined {
+        let c2d: u64 = cost.phases.iter().map(|p| p.cycles_2d).sum();
+        let csm: u64 = cost.phases.iter().map(|p| p.cycles_small).sum();
+        let mem: u64 = cost.phases.iter().map(|p| p.mem_cycles).sum();
+        c2d.max(csm).max(mem)
+    } else {
+        cost.phases.iter().map(|p| p.latency).sum()
+    };
+    cost.traffic = traffic;
+    cost.flops = flops;
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{baseline_plan, Baseline};
+    use crate::cascade::{mamba1, ModelConfig};
+    use crate::fusion::{stitch, FusionVariant};
+
+    fn prefill(seq: u64, v: FusionVariant) -> LayerCost {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), seq, 1);
+        let plan = stitch(&c, v);
+        evaluate(&c, &plan, &ArchSpec::mambalaya(), &ExecOptions::default())
+    }
+
+    #[test]
+    fn unfused_prefill_is_memory_bound_overall() {
+        // Paper Fig 2a: unfused Mamba is fundamentally memory-bound.
+        let cost = prefill(4096, FusionVariant::Unfused);
+        let arch = ArchSpec::mambalaya();
+        assert!(cost.intensity() < arch.machine_balance(), "oi = {}", cost.intensity());
+    }
+
+    #[test]
+    fn fusion_strictly_reduces_inter_traffic() {
+        let mut prev = u64::MAX;
+        for v in FusionVariant::all() {
+            let t = prefill(4096, v).traffic.inter();
+            if v != FusionVariant::FullyFused {
+                // Monotone through RI → RSb → RSp (fully-fused trades
+                // some traffic back for single-group smoothness).
+                assert!(t <= prev, "{v}: {t} > {prev}");
+            }
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn fused_variants_speed_up_prefill() {
+        let base = prefill(4096, FusionVariant::Unfused).latency as f64;
+        let ri = prefill(4096, FusionVariant::RIOnly).latency as f64;
+        let rsb = prefill(4096, FusionVariant::RIRSb).latency as f64;
+        let rsp = prefill(4096, FusionVariant::RIRSbRSp).latency as f64;
+        let ff = prefill(4096, FusionVariant::FullyFused).latency as f64;
+        assert!(base / ri > 1.5, "RI speedup {}", base / ri);
+        assert!(rsb <= ri);
+        assert!(rsp <= rsb);
+        // Fully fused is the best prefill strategy (paper Fig 12).
+        assert!(ff <= rsp, "ff {ff} vs rsp {rsp}");
+    }
+
+    #[test]
+    fn marca_like_spills_ssm_intermediates_on_long_prefill() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 16384, 1);
+        let arch = ArchSpec::mambalaya();
+        let marca = evaluate(
+            &c,
+            &baseline_plan(&c, Baseline::MarcaLike),
+            &arch,
+            &ExecOptions { staging: Staging::FullExtent, ..Default::default() },
+        );
+        let geens = evaluate(
+            &c,
+            &baseline_plan(&c, Baseline::GeensLike),
+            &arch,
+            &ExecOptions::default(),
+        );
+        // Fine-grained staging strictly beats full-extent staging.
+        assert!(geens.latency < marca.latency);
+        assert!(geens.traffic.inter() < marca.traffic.inter());
+    }
+
+    #[test]
+    fn pipelining_improves_or_matches() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 4096, 1);
+        let arch = ArchSpec::mambalaya();
+        for v in FusionVariant::fused() {
+            let plan = stitch(&c, v);
+            let seq = evaluate(&c, &plan, &arch, &ExecOptions::default());
+            let pipe = evaluate(
+                &c,
+                &plan,
+                &arch,
+                &ExecOptions { pipelined: true, ..Default::default() },
+            );
+            assert!(pipe.latency <= seq.latency, "{v}");
+        }
+    }
+
+    #[test]
+    fn ideal_cost_drops_inter_traffic() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 4096, 1);
+        let plan = stitch(&c, FusionVariant::Unfused);
+        let arch = ArchSpec::mambalaya();
+        let ideal = ideal_cost(&c, &plan, &arch, &ExecOptions::default());
+        assert_eq!(ideal.traffic.inter(), 0);
+        let real = evaluate(&c, &plan, &arch, &ExecOptions::default());
+        assert!(ideal.latency < real.latency);
+    }
+
+    #[test]
+    fn decode_state_io_is_charged() {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 1, 64);
+        let plan = stitch(&c, FusionVariant::RIOnly);
+        let arch = ArchSpec::mambalaya();
+        let without = evaluate(&c, &plan, &arch, &ExecOptions::default());
+        let with = evaluate(
+            &c,
+            &plan,
+            &arch,
+            &ExecOptions { decode_state_io: true, ..Default::default() },
+        );
+        assert!(with.traffic.total() > without.traffic.total());
+    }
+}

@@ -1,0 +1,279 @@
+//! The mapper: search the (loop order × tiling) space for the
+//! DRAM-traffic-minimal mapping of one Einsum under a buffer budget and
+//! the stationarity constraints fusion imposes — the role Timeloop's
+//! mapper plays in the paper's methodology (§VI-A: "we specify the
+//! mapping constraints imposed by Algorithm 1 and feed said constraints
+//! into the Timeloop mapper for each individual Einsum").
+//!
+//! Search space: permutations of the Einsum's ranks as the outer loop
+//! order (≤ 5 ranks ⇒ ≤ 120 orders) × power-of-two tile sizes per rank.
+//! Constraints:
+//! * buffer: the resident tile set must fit the budget;
+//! * stationarity: ranks in `stationary` (the fusion group's surviving
+//!   intersection, paper §III-D) must occupy the *outermost* loop
+//!   positions — they are the ranks the fused traversal shares, so a
+//!   tile of them is processed to completion before moving on.
+
+use crate::einsum::{EinsumSpec, IterSpace};
+
+use super::mapping::{LoopLevel, Mapping};
+
+/// Mapper result: the chosen mapping and its cost.
+#[derive(Debug, Clone)]
+pub struct Mapped {
+    pub mapping: Mapping,
+    pub dram_bytes: u64,
+    pub buffer_bytes: u64,
+}
+
+/// Search options.
+#[derive(Debug, Clone)]
+pub struct MapperOptions {
+    /// On-chip buffer budget (bytes) for this Einsum's tiles.
+    pub buffer_budget: u64,
+    /// Ranks that must sit outermost (fusion stationarity); empty for
+    /// an unfused Einsum.
+    pub stationary: IterSpace,
+    /// Cap on tile-size choices per rank (powers of two enumerated up
+    /// to the extent; the cap bounds the search).
+    pub max_tile_choices: usize,
+}
+
+impl Default for MapperOptions {
+    fn default() -> Self {
+        MapperOptions {
+            buffer_budget: u64::MAX,
+            stationary: IterSpace::empty(),
+            max_tile_choices: 12,
+        }
+    }
+}
+
+/// Tile-size candidates for a rank: powers of two up to the extent
+/// (including the extent itself), newest-first capped.
+fn tile_choices(extent: u64, cap: usize) -> Vec<u64> {
+    let mut out = vec![extent];
+    let mut t = 1;
+    while t < extent && out.len() < cap {
+        out.push(t);
+        t *= 2;
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Exhaustively search loop orders × tilings for the minimum-traffic
+/// mapping. Returns `None` when even the smallest tiling overflows the
+/// budget (the Einsum cannot execute without spilling below algorithmic
+/// assumptions — callers fall back to unit tiles).
+pub fn search(e: &EinsumSpec, opts: &MapperOptions) -> Option<Mapped> {
+    let space = e.iteration_space();
+    let ranks: Vec<(String, u64)> =
+        space.ranks().iter().map(|r| (r.name.clone(), r.extent)).collect();
+    let n = ranks.len();
+
+    // Enumerate tilings: cartesian product of per-rank tile choices.
+    let choices: Vec<Vec<u64>> =
+        ranks.iter().map(|(_, ext)| tile_choices(*ext, opts.max_tile_choices)).collect();
+
+    let mut best: Option<Mapped> = None;
+    let mut tile_idx = vec![0usize; n];
+    'tiles: loop {
+        // Build the tile map for this combination.
+        let tiles: std::collections::BTreeMap<String, u64> = ranks
+            .iter()
+            .zip(&tile_idx)
+            .map(|((name, _), &ci)| (name.clone(), choices[ranks.iter().position(|(r, _)| r == name).unwrap()][ci]))
+            .collect();
+
+        // Outer loops = ranks with >1 trip.
+        let tiled: Vec<(String, u64)> = ranks
+            .iter()
+            .filter_map(|(name, ext)| {
+                let t = tiles[name];
+                let trips = ext.div_ceil(t);
+                (trips > 1).then(|| (name.clone(), trips))
+            })
+            .collect();
+
+        // Permute the outer loops; stationary ranks must be outermost,
+        // so permute stationary and free ranks separately and
+        // concatenate.
+        let (stat, free): (Vec<_>, Vec<_>) =
+            tiled.iter().cloned().partition(|(r, _)| opts.stationary.contains(r));
+        for stat_perm in permutations(&stat) {
+            for free_perm in permutations(&free) {
+                let outer: Vec<LoopLevel> = stat_perm
+                    .iter()
+                    .chain(free_perm.iter())
+                    .map(|(rank, trips)| LoopLevel { rank: rank.clone(), trips: *trips })
+                    .collect();
+                let m = Mapping { outer, tiles: tiles.clone() };
+                let buf = m.buffer_bytes(e);
+                if buf > opts.buffer_budget {
+                    continue;
+                }
+                let traffic = m.dram_traffic(e);
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        traffic < b.dram_bytes
+                            || (traffic == b.dram_bytes && buf < b.buffer_bytes)
+                    }
+                };
+                if better {
+                    best = Some(Mapped { mapping: m, dram_bytes: traffic, buffer_bytes: buf });
+                }
+            }
+        }
+
+        // Advance the tiling odometer.
+        for i in 0..=n {
+            if i == n {
+                break 'tiles;
+            }
+            tile_idx[i] += 1;
+            if tile_idx[i] < choices[i].len() {
+                break;
+            }
+            tile_idx[i] = 0;
+        }
+        if n == 0 {
+            break;
+        }
+    }
+    best
+}
+
+/// All permutations of a small slice (≤ 5 elements in practice).
+fn permutations<T: Clone>(xs: &[T]) -> Vec<Vec<T>> {
+    if xs.is_empty() {
+        return vec![Vec::new()];
+    }
+    let mut out = Vec::new();
+    for i in 0..xs.len() {
+        let mut rest = xs.to_vec();
+        let x = rest.remove(i);
+        for mut p in permutations(&rest) {
+            p.insert(0, x.clone());
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Map every Einsum of a cascade independently (the paper's per-Einsum
+/// Timeloop runs), under a shared buffer budget. Returns (einsum id,
+/// Mapped) pairs.
+pub fn map_cascade(
+    c: &crate::einsum::Cascade,
+    buffer_budget: u64,
+) -> Vec<(usize, Option<Mapped>)> {
+    c.einsums()
+        .iter()
+        .map(|e| {
+            let opts = MapperOptions { buffer_budget, ..Default::default() };
+            (e.id, search(e, &opts))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+    use crate::model::cost::unfused_traffic;
+
+    fn cascade() -> crate::einsum::Cascade {
+        mamba1::build(&ModelConfig::mamba_370m(), 256, 1)
+    }
+
+    #[test]
+    fn infinite_buffer_reaches_algorithmic_minimum() {
+        // With an unconstrained buffer the mapper must find the
+        // untiled mapping: each tensor touched exactly once — the
+        // "Best Unfused" assumption of Table I.
+        let c = cascade();
+        for e in c.einsums() {
+            let mapped = search(e, &MapperOptions::default()).expect("mappable");
+            let min = unfused_traffic(&c, e).total();
+            assert_eq!(mapped.dram_bytes, min, "einsum #{}", e.id);
+        }
+    }
+
+    #[test]
+    fn tight_buffer_increases_traffic_monotonically() {
+        let c = cascade();
+        let e = c.by_id(7).unwrap(); // the big in-proj GEMM
+        let budgets = [u64::MAX, 8 << 20, 2 << 20, 256 << 10];
+        let mut last = 0u64;
+        for b in budgets {
+            let mapped = search(e, &MapperOptions { buffer_budget: b, ..Default::default() })
+                .expect("mappable");
+            assert!(mapped.buffer_bytes <= b);
+            assert!(
+                mapped.dram_bytes >= last,
+                "traffic must grow as the buffer shrinks: {} < {last} at {b}",
+                mapped.dram_bytes
+            );
+            last = mapped.dram_bytes;
+        }
+        // The smallest budget really forces extra traffic.
+        let tight = search(
+            e,
+            &MapperOptions { buffer_budget: 256 << 10, ..Default::default() },
+        )
+        .unwrap();
+        assert!(tight.dram_bytes > unfused_traffic(&c, e).total());
+    }
+
+    #[test]
+    fn stationarity_constraint_is_respected() {
+        let c = cascade();
+        let e = c.by_id(7).unwrap();
+        let mut stat_ranks = crate::einsum::IterSpace::empty();
+        stat_ranks = stat_ranks.union(&crate::einsum::IterSpace::new(vec![
+            crate::einsum::Rank::generational("I", 256),
+        ]));
+        let opts = MapperOptions {
+            buffer_budget: 1 << 20, // force tiling
+            stationary: stat_ranks,
+            ..Default::default()
+        };
+        let mapped = search(e, &opts).expect("mappable");
+        // If I appears among the outer loops, it must be outermost.
+        if let Some(pos) = mapped.mapping.outer.iter().position(|l| l.rank == "I") {
+            for (i, l) in mapped.mapping.outer.iter().enumerate() {
+                if i < pos {
+                    assert_eq!(l.rank, "I", "non-stationary rank {} outside I", l.rank);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mapper_prefers_output_stationary_gemm() {
+        // For a GEMM under moderate pressure the best mapping keeps the
+        // reduction innermost (no partial-sum spills) — the upstream-
+        // output-stationary dataflow the fusion classes require.
+        let c = cascade();
+        let e = c.by_id(24).unwrap(); // out-proj
+        let mapped = search(
+            e,
+            &MapperOptions { buffer_budget: 4 << 20, ..Default::default() },
+        )
+        .unwrap();
+        assert!(mapped.mapping.output_stationary(e), "{}", mapped.mapping);
+    }
+
+    #[test]
+    fn whole_cascade_maps_under_table3_buffer() {
+        let c = cascade();
+        let arch = crate::arch::ArchSpec::mambalaya();
+        for (id, mapped) in map_cascade(&c, arch.buffer_bytes) {
+            let m = mapped.unwrap_or_else(|| panic!("einsum #{id} unmappable"));
+            assert!(m.buffer_bytes <= arch.buffer_bytes);
+        }
+    }
+}

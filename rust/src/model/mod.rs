@@ -1,0 +1,18 @@
+//! Analytical accelerator model — the Timeloop-replacement substrate
+//! (see DESIGN.md §4 for the substitution rationale).
+//!
+//! * [`cost`] — per-Einsum compute cycles and algorithmic-minimum traffic;
+//! * [`passes`] — FuseMax-style pass analysis (why X/LEX reload);
+//! * [`exec`] — group/layer evaluation into phase timelines.
+
+pub mod cost;
+pub mod exec;
+pub mod mapper;
+pub mod mapping;
+pub mod passes;
+
+pub use cost::{compute_cycles, unfused_traffic, Traffic};
+pub use exec::{evaluate, ideal_cost, ExecOptions, LayerCost, PhaseCost};
+pub use mapper::{map_cascade, search as map_search, Mapped, MapperOptions};
+pub use mapping::{LoopLevel, Mapping};
+pub use passes::{analyze_scope, analyze_scope_with, PassAnalysis};

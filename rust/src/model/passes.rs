@@ -1,0 +1,178 @@
+//! Pass analysis (after FuseMax): how many times a fused mapping must
+//! stream a tensor through the datapath.
+//!
+//! Inside a fusion group, a consumer of tensor `T` needs a *fresh pass*
+//! over `T` when it transitively depends on the output of an earlier
+//! consumer of `T` through an Einsum that **reduces over one of `T`'s
+//! ranks**: the reduction is a synchronization barrier — its result only
+//! exists after the full extent of that rank of `T` has streamed by, so
+//! the later consumer cannot share the earlier consumer's pass.
+//!
+//! In Mamba this is exactly why `X` (Einsum 1) and `LEX` (Einsum 10)
+//! need two passes (paper §VI-C.1): `NEX = X·rsqrt(Σ_e X²)` makes the
+//! second consumer of `X` depend on the `E`-reduction of `X`, and the
+//! SSM's consumption of `LEX` depends on `Δ`, which is computed by
+//! `D`-reductions of `LEX` itself.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::einsum::cascade::CascadeIndex;
+use crate::einsum::Cascade;
+
+/// Per-tensor pass counts within a fused scope.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassAnalysis {
+    /// tensor name → number of passes (≥ 1). Tensors not present need
+    /// a single pass.
+    pub passes: BTreeMap<String, u32>,
+}
+
+impl PassAnalysis {
+    pub fn passes_of(&self, tensor: &str) -> u32 {
+        self.passes.get(tensor).copied().unwrap_or(1)
+    }
+}
+
+/// Does Einsum `to` transitively depend on the output of Einsum `from`
+/// via a path that contains an Einsum reducing over any rank in
+/// `barrier_ranks`? Paths are forward dataflow edges restricted to
+/// `scope` (the fusion group's members).
+fn depends_via_reduction(
+    c: &Cascade,
+    idx: &CascadeIndex,
+    scope: &BTreeSet<usize>,
+    from: usize,
+    to: usize,
+    barrier_ranks: &BTreeSet<&str>,
+) -> bool {
+    // DFS over (einsum, crossed_barrier) states.
+    let mut stack = vec![(from, reduces_barrier(c, from, barrier_ranks))];
+    let mut seen = BTreeSet::new();
+    while let Some((id, crossed)) = stack.pop() {
+        if !seen.insert((id, crossed)) {
+            continue;
+        }
+        let e = match c.by_id(id) {
+            Some(e) => e,
+            None => continue,
+        };
+        {
+            for &nid in idx.consumers_of(&e.output.name) {
+                if nid <= id || !scope.contains(&nid) {
+                    continue; // forward edges inside the scope only
+                }
+                if nid == to {
+                    // The destination's own reduction is not a barrier:
+                    // it consumes T elementwise *while* reducing. Only
+                    // reductions strictly between the consumers (or at
+                    // the source) serialize passes.
+                    if crossed {
+                        return true;
+                    }
+                    continue;
+                }
+                let crossed_here = crossed || reduces_barrier(c, nid, barrier_ranks);
+                stack.push((nid, crossed_here));
+            }
+        }
+    }
+    false
+}
+
+/// Does Einsum `id` reduce over any of the barrier ranks?
+fn reduces_barrier(c: &Cascade, id: usize, barrier_ranks: &BTreeSet<&str>) -> bool {
+    c.by_id(id)
+        .map(|e| e.reduction_ranks.iter().any(|r| barrier_ranks.contains(r.name.as_str())))
+        .unwrap_or(false)
+}
+
+/// Analyze pass counts for every multi-consumer tensor within a fused
+/// scope (a fusion group's Einsum ids).
+pub fn analyze_scope(c: &Cascade, scope_ids: &[usize]) -> PassAnalysis {
+    analyze_scope_with(c, &CascadeIndex::new(c), scope_ids)
+}
+
+/// [`analyze_scope`] with a prebuilt index (the DSE hot path — avoids
+/// rebuilding the consumer maps per fusion group; §Perf).
+pub fn analyze_scope_with(
+    c: &Cascade,
+    idx: &CascadeIndex,
+    scope_ids: &[usize],
+) -> PassAnalysis {
+    let scope: BTreeSet<usize> = scope_ids.iter().copied().collect();
+    let mut passes = BTreeMap::new();
+
+    for e in c.einsums() {
+        let t = &e.output;
+        let cs: Vec<usize> = {
+            let all = idx.consumers_of(&t.name);
+            if all.is_empty() { continue; }
+            all.iter().copied().filter(|id| scope.contains(id)).collect()
+        };
+        if cs.len() < 2 {
+            continue;
+        }
+        let barrier: BTreeSet<&str> = t.ranks.iter().map(|r| r.name.as_str()).collect();
+        // Wave (level) assignment: consumer `cid` belongs to wave
+        // `1 + max(wave(prev))` over all earlier consumers `prev` it
+        // depends on through a barrier reduction, else wave 0.
+        let mut wave_of: BTreeMap<usize, u32> = BTreeMap::new();
+        for &cid in &cs {
+            let mut w = 0;
+            for (&prev, &pw) in wave_of.iter() {
+                if depends_via_reduction(c, idx, &scope, prev, cid, &barrier) {
+                    w = w.max(pw + 1);
+                }
+            }
+            wave_of.insert(cid, w);
+        }
+        let nwaves = wave_of.values().copied().max().unwrap_or(0) + 1;
+        if nwaves > 1 {
+            passes.insert(t.name.clone(), nwaves);
+        }
+    }
+    PassAnalysis { passes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+
+    fn full_scope() -> (Cascade, Vec<usize>) {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1);
+        let ids: Vec<usize> = (1..=24).collect();
+        (c, ids)
+    }
+
+    #[test]
+    fn x_and_lex_need_two_passes() {
+        // Paper §VI-C.1: "tensors X and LEX (Einsums 1 and 10) need two
+        // passes and thus must be loaded multiple times."
+        let (c, ids) = full_scope();
+        let pa = analyze_scope(&c, &ids);
+        assert_eq!(pa.passes_of("X"), 2, "passes = {:?}", pa.passes);
+        assert_eq!(pa.passes_of("LEX"), 2, "passes = {:?}", pa.passes);
+    }
+
+    #[test]
+    fn other_tensors_are_single_pass() {
+        let (c, ids) = full_scope();
+        let pa = analyze_scope(&c, &ids);
+        for t in ["TX", "DL", "H", "SD", "GX"] {
+            assert_eq!(pa.passes_of(t), 1, "{t}: {:?}", pa.passes);
+        }
+    }
+
+    #[test]
+    fn scope_restriction_limits_passes() {
+        // If the scope covers only the norm front-end (1–6), X still
+        // needs 2 passes (the NUM reduction sits between its consumers).
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 64, 1).clone();
+        let pa = analyze_scope(&c, &(1..=6).collect::<Vec<_>>());
+        assert_eq!(pa.passes_of("X"), 2);
+        // A scope without both consumers ⇒ single pass.
+        let pa = analyze_scope(&c, &(1..=3).collect::<Vec<_>>());
+        assert_eq!(pa.passes_of("X"), 1);
+    }
+}

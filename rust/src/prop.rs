@@ -1,0 +1,70 @@
+//! Mini property-testing harness (no proptest in the vendored crate
+//! set): run a closure over many seeded random cases; on failure,
+//! report the seed so the case replays deterministically.
+
+use crate::util::XorShift;
+
+/// Run `cases` property checks. The closure receives a fresh
+/// deterministic RNG per case and returns `Err(msg)` on violation.
+///
+/// Panics with the failing seed embedded, so
+/// `check_one(seed, f)` replays it.
+pub fn check<F>(name: &str, cases: u32, mut f: F)
+where
+    F: FnMut(&mut XorShift) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64 ^ (case as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        let mut rng = XorShift::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (debugging aid).
+pub fn check_one<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut XorShift) -> Result<(), String>,
+{
+    let mut rng = XorShift::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property failed on replay (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |rng| {
+            count += 1;
+            let x = rng.range(0, 10);
+            if x <= 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_reports_seed() {
+        check("fails", 5, |rng| Err(format!("x = {}", rng.range(0, 1000))));
+    }
+}

@@ -1,0 +1,384 @@
+//! Figure emitters: each function regenerates the data series of one
+//! paper figure (text + CSV), using the analytical model.
+
+use std::fmt::Write as _;
+
+use crate::arch::{ArchSpec, Baseline};
+use crate::cascade::{mamba1, ModelConfig, Scenario};
+use crate::fusion::{stitch, FusionVariant};
+use crate::roofline::{ascii_chart, timeline};
+use crate::util::CsvWriter;
+use crate::workload::{
+    decode_layer, ideal_layer, prefill_layer, scenario_cost, DesignPoint,
+};
+
+/// Figure 2 — overall roofline + unfused-vs-ideal utilization over time
+/// for prefill and generation.
+pub fn fig2_report(cfg: &ModelConfig, seq: u64, batch: u64) -> (String, String) {
+    let arch = ArchSpec::mambalaya();
+    let mut s = String::new();
+    let mut csv = CsvWriter::new();
+    csv.header(&["phase", "design", "latency_cycles", "flops", "bytes", "intensity", "speedup_vs_unfused"]);
+
+    let _ = writeln!(s, "Figure 2 — roofline: unfused vs ideal fusion ({})", cfg.name);
+    for (phase, seqlen, b, decode) in
+        [("prefill", seq, batch, false), ("generate", 1, batch, true)]
+    {
+        let point = DesignPoint::Variant(FusionVariant::Unfused);
+        let unf = if decode {
+            decode_layer(cfg, b, point, &arch)
+        } else {
+            prefill_layer(cfg, seqlen, b, point, &arch, false)
+        };
+        let ideal = ideal_layer(cfg, seqlen, b, &arch, decode);
+        let speedup = unf.latency as f64 / ideal.latency.max(1) as f64;
+        let _ = writeln!(
+            s,
+            "  {phase}: unfused OI = {:.1} flop/B (machine balance {:.1}) → memory-bound: {}",
+            unf.intensity(),
+            arch.machine_balance(),
+            unf.intensity() < arch.machine_balance(),
+        );
+        let _ = writeln!(
+            s,
+            "  {phase}: ideal-fusion speedup = {speedup:.2}× (paper: {} )",
+            if decode { "3.8×" } else { "5.79×" }
+        );
+        for (design, cost) in [("unfused", &unf), ("ideal", &ideal)] {
+            csv.row([
+                phase.to_string(),
+                design.to_string(),
+                cost.latency.to_string(),
+                cost.flops.to_string(),
+                cost.traffic.total().to_string(),
+                format!("{:.3}", cost.intensity()),
+                format!("{:.3}", unf.latency as f64 / cost.latency.max(1) as f64),
+            ]);
+        }
+        let _ = writeln!(s, "{}", ascii_chart(&timeline(&unf, &arch), 72));
+    }
+    (s, csv.finish())
+}
+
+/// Figure 9 — fusion-group structure per variant (group count and
+/// membership).
+pub fn fig9_report(cfg: &ModelConfig, seq: u64) -> (String, String) {
+    let c = mamba1::build(cfg, seq, 1);
+    let mut s = String::new();
+    let mut csv = CsvWriter::new();
+    csv.header(&["variant", "groups", "membership"]);
+    let _ = writeln!(s, "Figure 9 — fusion groups per variant ({})", cfg.name);
+    for v in FusionVariant::all() {
+        let plan = stitch(&c, v);
+        let groups: Vec<String> = plan
+            .groups
+            .iter()
+            .map(|g| {
+                let ids: Vec<String> = g.einsums.iter().map(|i| i.to_string()).collect();
+                format!("[{}]", ids.join(","))
+            })
+            .collect();
+        let _ = writeln!(s, "  {:<12} {:>2} groups: {}", v.name(), plan.groups.len(), groups.join(" "));
+        csv.row([v.name().to_string(), plan.groups.len().to_string(), groups.join(" ")]);
+    }
+    let _ = writeln!(s, "  (paper: 24 → 12 → 8 → 3 → 1)");
+    (s, csv.finish())
+}
+
+/// Figure 10 — utilization-over-time per fusion variant, one prefill
+/// layer.
+pub fn fig10_report(cfg: &ModelConfig, seq: u64, batch: u64) -> (String, String) {
+    let arch = ArchSpec::mambalaya();
+    let mut s = String::new();
+    let mut csv = CsvWriter::new();
+    csv.header(&["variant", "phase_start", "phase_end", "utilization", "intensity", "memory_bound", "einsums"]);
+    let _ = writeln!(s, "Figure 10 — utilization over time per variant ({}, I={}×{})", cfg.name, seq, batch);
+    for v in [FusionVariant::RIOnly, FusionVariant::RIRSb, FusionVariant::RIRSbRSp, FusionVariant::FullyFused] {
+        let cost = prefill_layer(cfg, seq, batch, DesignPoint::Variant(v), &arch, false);
+        let tl = timeline(&cost, &arch);
+        let _ = writeln!(s, "{}", ascii_chart(&tl, 72));
+        for span in &tl.spans {
+            csv.row([
+                v.name().to_string(),
+                span.start.to_string(),
+                span.end.to_string(),
+                format!("{:.4}", span.utilization),
+                format!("{:.3}", span.intensity),
+                span.memory_bound.to_string(),
+                span.einsums.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(" "),
+            ]);
+        }
+    }
+    (s, csv.finish())
+}
+
+/// Figure 12 — end-to-end performance across context:generation ratios,
+/// all variants, with and without parallel pipelining, plus the ideal.
+pub fn fig12_report(cfg: &ModelConfig) -> (String, String) {
+    let arch = ArchSpec::mambalaya();
+    let mut s = String::new();
+    let mut csv = CsvWriter::new();
+    csv.header(&["scenario", "design", "pipelined", "total_cycles", "speedup_vs_unfused"]);
+    let _ = writeln!(s, "Figure 12 — end-to-end performance ({})", cfg.name);
+    for sc in Scenario::paper_suite() {
+        let base = scenario_cost(cfg, &sc, DesignPoint::Variant(FusionVariant::Unfused), &arch, false);
+        let _ = writeln!(s, "  scenario {} (prefill {} decode {}):", sc.name, sc.prefill, sc.decode);
+        for v in FusionVariant::all() {
+            for pipelined in [false, true] {
+                let cost = scenario_cost(cfg, &sc, DesignPoint::Variant(v), &arch, pipelined);
+                let speedup = base.total_cycles() as f64 / cost.total_cycles() as f64;
+                if !pipelined {
+                    let _ = writeln!(s, "    {:<12} {speedup:.2}×", v.name());
+                } else {
+                    let _ = writeln!(s, "    {:<12} {speedup:.2}× (pipelined)", v.name());
+                }
+                csv.row([
+                    sc.name.clone(),
+                    v.name().to_string(),
+                    pipelined.to_string(),
+                    cost.total_cycles().to_string(),
+                    format!("{:.3}", speedup),
+                ]);
+            }
+        }
+        // Ideal red line: per-phase algorithmic minimum.
+        let ideal_pf = ideal_layer(cfg, sc.prefill, sc.batch, &arch, false);
+        let ideal_dc = ideal_layer(cfg, 1, sc.batch, &arch, true);
+        let ideal_total = ideal_pf.latency * cfg.layers + ideal_dc.latency * cfg.layers * sc.decode;
+        let _ = writeln!(
+            s,
+            "    {:<12} {:.2}× (red line)",
+            "ideal",
+            base.total_cycles() as f64 / ideal_total as f64
+        );
+        csv.row([
+            sc.name.clone(),
+            "ideal".to_string(),
+            "true".to_string(),
+            ideal_total.to_string(),
+            format!("{:.3}", base.total_cycles() as f64 / ideal_total as f64),
+        ]);
+    }
+    let _ = writeln!(s, "  (paper prefill-heavy: RI 2.72×, +RSb 2.99×, +RSp 3.35×, fully-fused 4.9×;");
+    let _ = writeln!(s, "   pipelined: 3.9×, 4.7×, 5.9×, 6×; decode-heavy: RI best at 2.23×)");
+    (s, csv.finish())
+}
+
+/// Figure 13 — best Mambalaya variant vs MARCA-like and Geens-like.
+pub fn fig13_report(cfg: &ModelConfig) -> (String, String) {
+    let arch = ArchSpec::mambalaya();
+    let mut s = String::new();
+    let mut csv = CsvWriter::new();
+    csv.header(&["scenario", "design", "total_cycles", "speedup_vs_unfused"]);
+    let _ = writeln!(s, "Figure 13 — Mambalaya vs prior state of the art ({})", cfg.name);
+    let mut geo_marca = 1.0f64;
+    let mut geo_geens = 1.0f64;
+    let mut n = 0u32;
+    for sc in Scenario::paper_suite() {
+        let base =
+            scenario_cost(cfg, &sc, DesignPoint::Variant(FusionVariant::Unfused), &arch, false);
+        // "Best Mambalaya variant": min over fused variants.
+        let best = FusionVariant::fused()
+            .into_iter()
+            .map(|v| scenario_cost(cfg, &sc, DesignPoint::Variant(v), &arch, false))
+            .min_by_key(|c| c.total_cycles())
+            .unwrap();
+        let marca = scenario_cost(cfg, &sc, DesignPoint::Baseline(Baseline::MarcaLike), &arch, false);
+        let geens = scenario_cost(cfg, &sc, DesignPoint::Baseline(Baseline::GeensLike), &arch, false);
+        let _ = writeln!(
+            s,
+            "  {}: best-Mambalaya {:.2}× | MARCA-like {:.2}× | Geens-like {:.2}× (vs unfused)",
+            sc.name,
+            base.total_cycles() as f64 / best.total_cycles() as f64,
+            base.total_cycles() as f64 / marca.total_cycles() as f64,
+            base.total_cycles() as f64 / geens.total_cycles() as f64,
+        );
+        for (d, cost) in [("best-mambalaya", &best), ("marca-like", &marca), ("geens-like", &geens)] {
+            csv.row([
+                sc.name.clone(),
+                d.to_string(),
+                cost.total_cycles().to_string(),
+                format!("{:.3}", base.total_cycles() as f64 / cost.total_cycles() as f64),
+            ]);
+        }
+        geo_marca *= marca.total_cycles() as f64 / best.total_cycles() as f64;
+        geo_geens *= geens.total_cycles() as f64 / best.total_cycles() as f64;
+        n += 1;
+    }
+    let _ = writeln!(
+        s,
+        "  geomean speedup: {:.2}× vs MARCA-like (paper 3×), {:.2}× vs Geens-like (paper 1.3×)",
+        geo_marca.powf(1.0 / n as f64),
+        geo_geens.powf(1.0 / n as f64)
+    );
+    (s, csv.finish())
+}
+
+/// Figure 14 — inter-/intra-Einsum traffic per variant, prefill and
+/// decode, with the RI best-case as the baselines' ideal.
+pub fn fig14_report(cfg: &ModelConfig, seq: u64, batch: u64) -> (String, String) {
+    let arch = ArchSpec::mambalaya();
+    let mut s = String::new();
+    let mut csv = CsvWriter::new();
+    csv.header(&["phase", "design", "inter_bytes", "intra_bytes"]);
+    let _ = writeln!(s, "Figure 14 — inter/intra-Einsum traffic per variant ({})", cfg.name);
+    let mut points: Vec<DesignPoint> = vec![
+        DesignPoint::Baseline(Baseline::MarcaLike),
+        DesignPoint::Baseline(Baseline::GeensLike),
+    ];
+    points.extend(FusionVariant::all().into_iter().map(DesignPoint::Variant));
+    for (phase, decode) in [("prefill", false), ("decode", true)] {
+        let _ = writeln!(s, "  {phase}:");
+        let mut unfused_inter = 0u64;
+        for p in &points {
+            let cost = if decode {
+                decode_layer(cfg, batch, *p, &arch)
+            } else {
+                prefill_layer(cfg, seq, batch, *p, &arch, false)
+            };
+            if p == &DesignPoint::Variant(FusionVariant::Unfused) {
+                unfused_inter = cost.traffic.inter();
+            }
+            let _ = writeln!(
+                s,
+                "    {:<14} inter {:>12} B  intra {:>12} B",
+                p.name(),
+                cost.traffic.inter(),
+                cost.traffic.intra()
+            );
+            csv.row([
+                phase.to_string(),
+                p.name(),
+                cost.traffic.inter().to_string(),
+                cost.traffic.intra().to_string(),
+            ]);
+        }
+        // Paper: fused variants reduce inter traffic by 4×–34×.
+        let best_inter = points
+            .iter()
+            .filter(|p| !matches!(p, DesignPoint::Variant(FusionVariant::Unfused)))
+            .map(|p| {
+                let cost = if decode {
+                    decode_layer(cfg, batch, *p, &arch)
+                } else {
+                    prefill_layer(cfg, seq, batch, *p, &arch, false)
+                };
+                cost.traffic.inter().max(1)
+            })
+            .min()
+            .unwrap_or(1);
+        let _ = writeln!(
+            s,
+            "    inter-traffic reduction range up to {:.1}× (paper: 4×–34×)",
+            unfused_inter as f64 / best_inter as f64
+        );
+    }
+    (s, csv.finish())
+}
+
+/// Figure 15 — roofline-utilization over time for baselines + variants,
+/// prefill and generation, with speedups vs MARCA-like.
+pub fn fig15_report(cfg: &ModelConfig, seq: u64, batch: u64) -> (String, String) {
+    let arch = ArchSpec::mambalaya();
+    let mut s = String::new();
+    let mut csv = CsvWriter::new();
+    csv.header(&["phase", "design", "latency_cycles", "speedup_vs_marca"]);
+    let _ = writeln!(s, "Figure 15 — utilization over time, baselines vs variants ({})", cfg.name);
+    let mut points: Vec<DesignPoint> = vec![
+        DesignPoint::Baseline(Baseline::MarcaLike),
+        DesignPoint::Baseline(Baseline::GeensLike),
+    ];
+    points.extend(FusionVariant::fused().into_iter().map(DesignPoint::Variant));
+    for (phase, decode) in [("prefill", false), ("generate", true)] {
+        let marca = if decode {
+            decode_layer(cfg, batch, DesignPoint::Baseline(Baseline::MarcaLike), &arch)
+        } else {
+            prefill_layer(cfg, seq, batch, DesignPoint::Baseline(Baseline::MarcaLike), &arch, false)
+        };
+        let _ = writeln!(s, "  {phase} (speedups vs MARCA-like):");
+        for p in &points {
+            let cost = if decode {
+                decode_layer(cfg, batch, *p, &arch)
+            } else {
+                prefill_layer(cfg, seq, batch, *p, &arch, false)
+            };
+            let speedup = marca.latency as f64 / cost.latency as f64;
+            let _ = writeln!(s, "    {:<14} {speedup:.2}×", p.name());
+            csv.row([
+                phase.to_string(),
+                p.name(),
+                cost.latency.to_string(),
+                format!("{:.3}", speedup),
+            ]);
+            if !decode {
+                let _ = writeln!(s, "{}", ascii_chart(&timeline(&cost, &arch), 72));
+            }
+        }
+    }
+    let _ = writeln!(s, "  (paper prefill: Geens-like 3.35×, +RSp 4.76×, fully-fused 4.89× vs MARCA-like)");
+    (s, csv.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::mamba_130m() // smaller = faster tests
+    }
+
+    #[test]
+    fn fig2_reports_memory_bound_unfused() {
+        let (text, csv) = fig2_report(&cfg(), 1024, 4);
+        assert!(text.contains("memory-bound: true"));
+        assert!(csv.lines().count() >= 5);
+    }
+
+    #[test]
+    fn fig9_counts() {
+        let (text, _) = fig9_report(&ModelConfig::mamba_370m(), 1024);
+        assert!(text.contains("24 groups") || text.contains("24 "));
+        assert!(text.contains(" 1 groups") || text.contains("1 group"));
+    }
+
+    #[test]
+    fn fig12_has_all_variants_and_scenarios() {
+        let (_, csv) = fig12_report(&cfg());
+        // 3 scenarios × (5 variants × 2 pipelining + ideal) = 33 rows + header.
+        assert_eq!(csv.lines().count(), 1 + 3 * 11);
+    }
+
+    #[test]
+    fn fig13_mambalaya_beats_baselines() {
+        let (text, csv) = fig13_report(&cfg());
+        assert!(text.contains("geomean"));
+        // Best Mambalaya ≥ baselines in the prefill-heavy scenario.
+        let lines: Vec<&str> = csv.lines().collect();
+        let val = |design: &str, scenario_frag: &str| -> f64 {
+            lines
+                .iter()
+                .find(|l| l.contains(design) && l.contains(scenario_frag))
+                .and_then(|l| l.rsplit(',').next())
+                .and_then(|v| v.parse().ok())
+                .unwrap()
+        };
+        let best = val("best-mambalaya", "summarize");
+        let marca = val("marca-like", "summarize");
+        let geens = val("geens-like", "summarize");
+        assert!(best > marca, "best {best} vs marca {marca}");
+        assert!(best > geens, "best {best} vs geens {geens}");
+    }
+
+    #[test]
+    fn fig14_traffic_reduction_in_paper_band() {
+        let (text, _) = fig14_report(&ModelConfig::mamba_370m(), 4096, 1);
+        assert!(text.contains("inter-traffic reduction"));
+    }
+
+    #[test]
+    fn fig15_runs() {
+        let (text, csv) = fig15_report(&cfg(), 1024, 4);
+        assert!(text.contains("vs MARCA-like"));
+        assert!(csv.lines().count() > 8);
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment report emitters: one function per paper table/figure (see
+//! DESIGN.md §6 for the index). Each returns (human text, CSV).
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{
+    fig10_report, fig12_report, fig13_report, fig14_report, fig15_report, fig2_report,
+    fig9_report,
+};
+pub use tables::{table1, table1_report, table2_report, table3_report};

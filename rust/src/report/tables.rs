@@ -1,0 +1,195 @@
+//! Table emitters: Table I (Best-Unfused traffic breakdown), Table II
+//! (fusion taxonomy of related work), Table III (configuration).
+
+use std::fmt::Write as _;
+
+use crate::arch::{ArchSpec, Binding};
+use crate::cascade::{mamba1, ModelConfig};
+use crate::fusion::{stitch, FusionVariant};
+use crate::model::{evaluate, ExecOptions};
+use crate::util::CsvWriter;
+
+/// Table I result: traffic breakdowns of the Best-Unfused design.
+#[derive(Debug, Clone, Copy)]
+pub struct Table1 {
+    pub read_pct: f64,
+    pub write_pct: f64,
+    pub inter_pct: f64,
+    pub intra_pct: f64,
+}
+
+/// Compute Table I for one layer of Best-Unfused at the given sequence
+/// length.
+pub fn table1(cfg: &ModelConfig, seq: u64, batch: u64) -> Table1 {
+    let c = mamba1::build(cfg, seq, batch);
+    let arch = ArchSpec::mambalaya();
+    let cost =
+        evaluate(&c, &stitch(&c, FusionVariant::Unfused), &arch, &ExecOptions::default());
+    let t = cost.traffic;
+    let total = t.total().max(1) as f64;
+    Table1 {
+        read_pct: 100.0 * t.reads() as f64 / total,
+        write_pct: 100.0 * t.writes() as f64 / total,
+        inter_pct: 100.0 * t.inter() as f64 / total,
+        intra_pct: 100.0 * t.intra() as f64 / total,
+    }
+}
+
+/// Render Table I as text + CSV.
+pub fn table1_report(cfg: &ModelConfig, seq: u64, batch: u64) -> (String, String) {
+    let t = table1(cfg, seq, batch);
+    let mut s = String::new();
+    let _ = writeln!(s, "Table I — Best-Unfused traffic breakdown ({}, I={}×{})", cfg.name, seq, batch);
+    let _ = writeln!(s, "  Read Traffic  {:>6.1}%   Inter-Einsum {:>6.1}%", t.read_pct, t.inter_pct);
+    let _ = writeln!(s, "  Write Traffic {:>6.1}%   Intra-Einsum {:>6.1}%", t.write_pct, t.intra_pct);
+    let _ = writeln!(s, "  (paper: reads 99.3%, writes 0.7%; inter 99.1%, intra 0.9%)");
+    let mut csv = CsvWriter::new();
+    csv.header(&["metric", "percent"])
+        .row(["read", &format!("{:.2}", t.read_pct)])
+        .row(["write", &format!("{:.2}", t.write_pct)])
+        .row(["inter", &format!("{:.2}", t.inter_pct)])
+        .row(["intra", &format!("{:.2}", t.intra_pct)]);
+    (s, csv.finish())
+}
+
+/// Table II: which fusion classes each related work supports. The rows
+/// for prior work are capability summaries taken from the paper; the
+/// Mambalaya row is *derived* by probing our own stitcher with the four
+/// canonical pair cascades (Figures 4–7).
+pub fn table2_report() -> (String, String) {
+    // Derive this work's supported classes by classification probes.
+    use crate::cascade::examples;
+    use crate::fusion::{classify_pair, FusionClass};
+    let probes = [
+        (examples::fig4_ri(8, 64), FusionClass::RI),
+        (examples::fig5_rsb(8, 64), FusionClass::RSb),
+        (examples::fig6_rsp(8, 64, 4), FusionClass::RSp),
+        (examples::fig7_rd(8, 4, 64, 4), FusionClass::RD),
+    ];
+    let mut ours = Vec::new();
+    for (c, expect) in &probes {
+        let p = classify_pair(&c.einsums()[0], &c.einsums()[1]).unwrap();
+        assert_eq!(p.class, *expect);
+        ours.push(p.class);
+    }
+    let yes = |b: bool| if b { "yes" } else { "-" };
+
+    // (work, ri, rsb, rsp, rd, stitching, min-ITF, workloads)
+    let rows: Vec<(&str, bool, bool, bool, bool, &str, &str, &str)> = vec![
+        ("XLA-like", true, false, false, false, "RI", "unit", "DL"),
+        ("TVM/AStitch", true, false, true, false, "RI", "unit,tile", "DL"),
+        ("PyTorch-like", true, true, true, false, "RI+RSb+RSp", "unit,tile", "DL"),
+        ("APOLLO", true, true, true, true, "RI+RSb+RSp", "unit,tile", "DL"),
+        ("CNN DSAs", true, false, true, false, "RI+RSp,recompute", "tile", "CNN"),
+        ("TileFlow", true, true, true, false, "RI+RSb+RSp,recompute", "tile", "DL"),
+        ("LoopTree", true, true, true, true, "RI,recompute", "tile", "DL,TA"),
+        ("MARCA", true, false, false, false, "RI", "tile", "Mamba-1"),
+        ("Geens et al.", true, false, false, false, "RI", "unit,tile", "Mamba-1"),
+        (
+            "Mambalaya (derived)",
+            ours.contains(&FusionClass::RI),
+            ours.contains(&FusionClass::RSb),
+            ours.contains(&FusionClass::RSp),
+            ours.contains(&FusionClass::RD),
+            "all combos",
+            "unit,tile(RD)",
+            "Mamba-1/2,TA+",
+        ),
+    ];
+
+    let mut s = String::new();
+    let _ = writeln!(s, "Table II — fusion support matrix");
+    let _ = writeln!(
+        s,
+        "{:<22} {:<4} {:<4} {:<4} {:<4} {:<22} {:<14} {}",
+        "work", "RI", "RSb", "RSp", "RD", "stitching", "min ITF", "workloads"
+    );
+    let mut csv = CsvWriter::new();
+    csv.header(&["work", "ri", "rsb", "rsp", "rd", "stitching", "min_itf", "workloads"]);
+    for (w, ri, rsb, rsp, rd, st, itf, wl) in rows {
+        let _ = writeln!(
+            s,
+            "{:<22} {:<4} {:<4} {:<4} {:<4} {:<22} {:<14} {}",
+            w,
+            yes(ri),
+            yes(rsb),
+            yes(rsp),
+            yes(rd),
+            st,
+            itf,
+            wl
+        );
+        csv.row([w, yes(ri), yes(rsb), yes(rsp), yes(rd), st, itf, wl]);
+    }
+    (s, csv.finish())
+}
+
+/// Table III: Mambalaya configuration vs the H100 reference.
+pub fn table3_report() -> (String, String) {
+    let a = ArchSpec::mambalaya();
+    let mut s = String::new();
+    let _ = writeln!(s, "Table III — configuration (vs H100 reference)");
+    let _ = writeln!(s, "{:<28} {:<14} {}", "feature", "H100", "Mambalaya");
+    let rows: Vec<(&str, String, String)> = vec![
+        ("FP16 CUDA cores", "14592".into(), "-".into()),
+        ("Tensor cores", "456".into(), "-".into()),
+        (
+            "Total PEs",
+            "-".into(),
+            format!("{} + {}", a.pes(Binding::Mode2D), a.pes(Binding::Small1D)),
+        ),
+        ("1D PE config (of 2D)", "-".into(), format!("{}x1", a.pe_1d_wide)),
+        ("2D PE config", "-".into(), format!("{}x{}", a.pe_2d_rows, a.pe_2d_cols)),
+        ("Clock (GHz)", format!("{}", a.freq_ghz), format!("{}", a.freq_ghz)),
+        ("Memory BW (GB/s)", format!("{}", a.dram_gbps), format!("{}", a.dram_gbps)),
+        ("L2 / global buffer (MB)", "50".into(), format!("{}", a.buffer_bytes >> 20)),
+        (
+            "Register file (MB)",
+            "~33".into(),
+            format!("{:.2}", a.reg_bytes as f64 / (1 << 20) as f64),
+        ),
+    ];
+    let mut csv = CsvWriter::new();
+    csv.header(&["feature", "h100", "mambalaya"]);
+    for (f, h, m) in rows {
+        let _ = writeln!(s, "{:<28} {:<14} {}", f, h, m);
+        csv.row([f.to_string(), h, m]);
+    }
+    (s, csv.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_shape() {
+        // Paper Table I: inter 99.1%, intra 0.9% — intermediates dwarf
+        // weights once sequence-scaled activations dominate. We
+        // reproduce that split. (The paper's read/write split of
+        // 99.3%/0.7% is not derivable from a consistent unfused
+        // accounting — every written intermediate is read back at least
+        // once, bounding reads below ~75% — so we assert only that
+        // reads exceed writes; see EXPERIMENTS.md.)
+        let t = table1(&ModelConfig::mamba_370m(), 2048, 1);
+        assert!(t.read_pct > 50.0, "read {}", t.read_pct);
+        assert!(t.inter_pct > 90.0, "inter {}", t.inter_pct);
+        assert!((t.read_pct + t.write_pct - 100.0).abs() < 1e-6);
+        assert!((t.inter_pct + t.intra_pct - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table2_mambalaya_row_supports_all() {
+        let (text, csv) = table2_report();
+        assert!(text.contains("Mambalaya"));
+        let row = csv.lines().find(|l| l.contains("Mambalaya")).unwrap();
+        assert_eq!(row.matches("yes").count(), 4);
+    }
+
+    #[test]
+    fn table3_renders() {
+        let (text, csv) = table3_report();
+        assert!(text.contains("65536 + 256"));
+        assert!(csv.contains("256x256"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Roofline analysis and utilization-over-time series (paper Figures 2,
+//! 10 and 15).
+//!
+//! A roofline point is (operational intensity, achieved throughput);
+//! the utilization-over-time view plots each phase of a [`LayerCost`]
+//! as a span whose height is the phase's achieved fraction of peak and
+//! whose shading splits compute-bound from memory-bound phases.
+
+use std::fmt::Write as _;
+
+use crate::arch::{ArchSpec, Binding};
+use crate::model::LayerCost;
+
+/// One span of the utilization-over-time series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Einsums active in this phase.
+    pub einsums: Vec<usize>,
+    /// Start/end time in cycles.
+    pub start: u64,
+    pub end: u64,
+    /// Achieved compute throughput / 2D-mode peak ∈ [0,1].
+    pub utilization: f64,
+    /// Operational intensity (FLOP/byte) of the phase.
+    pub intensity: f64,
+    /// Memory-bound (true) vs compute-bound (false).
+    pub memory_bound: bool,
+}
+
+/// The full utilization timeline of a layer.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub name: String,
+    pub spans: Vec<Span>,
+    pub total_cycles: u64,
+}
+
+/// Build the timeline from a layer cost.
+pub fn timeline(cost: &LayerCost, arch: &ArchSpec) -> Timeline {
+    let mut spans = Vec::new();
+    let mut t = 0u64;
+    for p in &cost.phases {
+        let end = t + p.latency;
+        spans.push(Span {
+            einsums: p.einsums.clone(),
+            start: t,
+            end,
+            utilization: p.utilization(arch),
+            intensity: p.intensity(),
+            memory_bound: p.mem_cycles >= p.cycles_2d.max(p.cycles_small),
+        });
+        t = end;
+    }
+    Timeline {
+        name: format!("{}/{}", cost.cascade_name, cost.variant_name),
+        spans,
+        total_cycles: t,
+    }
+}
+
+/// Roofline-attainable throughput fraction at a given intensity.
+pub fn attainable_fraction(arch: &ArchSpec, intensity: f64) -> f64 {
+    let peak = arch.peak_flops(Binding::Mode2D);
+    let bw = arch.dram_gbps * 1e9;
+    ((intensity * bw) / peak).min(1.0)
+}
+
+/// Render the timeline as an ASCII utilization-over-time chart, the
+/// textual analogue of Figures 2(b,c)/10/15. `width` = chart columns.
+pub fn ascii_chart(tl: &Timeline, width: usize) -> String {
+    const ROWS: usize = 8;
+    let mut out = String::new();
+    let _ = writeln!(out, "{} — {} cycles", tl.name, tl.total_cycles);
+    if tl.total_cycles == 0 || tl.spans.is_empty() {
+        return out;
+    }
+    // Column → utilization (sample by time).
+    let mut cols = vec![(0.0f64, false); width];
+    for (ci, col) in cols.iter_mut().enumerate() {
+        let t = (ci as u64 * tl.total_cycles) / width as u64;
+        if let Some(s) = tl.spans.iter().find(|s| s.start <= t && t < s.end) {
+            *col = (s.utilization, s.memory_bound);
+        }
+    }
+    for row in (0..ROWS).rev() {
+        let thresh = (row as f64 + 0.5) / ROWS as f64;
+        let mut line = String::new();
+        for &(u, mb) in &cols {
+            if u >= thresh {
+                line.push(if mb { '░' } else { '█' });
+            } else {
+                line.push(' ');
+            }
+        }
+        let _ = writeln!(out, "{:>4.0}% |{}|", (row as f64 + 1.0) / ROWS as f64 * 100.0, line);
+    }
+    let _ = writeln!(out, "      +{}+  █ compute-bound  ░ memory-bound", "-".repeat(width));
+    // Phase labels.
+    let mut labels = String::from("       ");
+    for s in &tl.spans {
+        let c0 = (s.start as usize * width) / tl.total_cycles as usize;
+        let label = format!("{}", s.einsums.first().unwrap_or(&0));
+        while labels.len() < 7 + c0 {
+            labels.push(' ');
+        }
+        labels.push_str(&label);
+    }
+    let _ = writeln!(out, "{labels}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cascade::{mamba1, ModelConfig};
+    use crate::fusion::{stitch, FusionVariant};
+    use crate::model::{evaluate, ExecOptions};
+
+    fn tl(v: FusionVariant) -> (Timeline, ArchSpec) {
+        let c = mamba1::build(&ModelConfig::mamba_370m(), 4096, 1);
+        let arch = ArchSpec::mambalaya();
+        let cost = evaluate(&c, &stitch(&c, v), &arch, &ExecOptions::default());
+        (timeline(&cost, &arch), arch)
+    }
+
+    #[test]
+    fn spans_are_contiguous_and_cover_total() {
+        let (t, _) = tl(FusionVariant::Unfused);
+        assert_eq!(t.spans.len(), 24);
+        let mut prev = 0;
+        for s in &t.spans {
+            assert_eq!(s.start, prev);
+            assert!(s.end >= s.start);
+            prev = s.end;
+        }
+        assert_eq!(prev, t.total_cycles);
+    }
+
+    #[test]
+    fn unfused_prefill_alternates_boundness() {
+        // Paper Fig 2b: unfused prefill alternates between compute-bound
+        // (GEMMs) and memory-bound Einsums.
+        let (t, _) = tl(FusionVariant::Unfused);
+        let bound: Vec<bool> = t.spans.iter().map(|s| s.memory_bound).collect();
+        assert!(bound.iter().any(|&b| b));
+        assert!(bound.iter().any(|&b| !b));
+    }
+
+    #[test]
+    fn fused_prefill_raises_utilization() {
+        let (unf, arch) = tl(FusionVariant::Unfused);
+        let (ff, _) = tl(FusionVariant::FullyFused);
+        let avg = |t: &Timeline| {
+            t.spans
+                .iter()
+                .map(|s| s.utilization * (s.end - s.start) as f64)
+                .sum::<f64>()
+                / t.total_cycles.max(1) as f64
+        };
+        assert!(avg(&ff) > avg(&unf));
+        let _ = arch;
+    }
+
+    #[test]
+    fn roofline_attainable() {
+        let arch = ArchSpec::mambalaya();
+        assert!(attainable_fraction(&arch, 1.0) < 0.01);
+        assert_eq!(attainable_fraction(&arch, 1e6), 1.0);
+        let knee = arch.machine_balance();
+        assert!((attainable_fraction(&arch, knee) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let (t, _) = tl(FusionVariant::RIOnly);
+        let chart = ascii_chart(&t, 72);
+        assert!(chart.contains('%'));
+        assert!(chart.lines().count() >= 10);
+    }
+}

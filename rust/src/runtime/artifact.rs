@@ -1,0 +1,166 @@
+//! Artifact manifest: what `make artifacts` (python/compile/aot.py)
+//! produced and how to drive it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::JsonValue;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_inner: usize,
+    pub d_state: usize,
+    pub d_conv: usize,
+    pub n_layer: usize,
+    pub prefill_len: usize,
+    pub prefill_batches: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = JsonValue::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_i64())
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let get_vec = |k: &str| -> Result<Vec<usize>> {
+            Ok(v.get(k)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("manifest missing {k}"))?
+                .iter()
+                .filter_map(|x| x.as_i64())
+                .map(|x| x as usize)
+                .collect())
+        };
+        Ok(Manifest {
+            model: v
+                .get("model")
+                .and_then(|x| x.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab: get_usize("vocab")?,
+            d_model: get_usize("d_model")?,
+            d_inner: get_usize("d_inner")?,
+            d_state: get_usize("d_state")?,
+            d_conv: get_usize("d_conv")?,
+            n_layer: get_usize("n_layer")?,
+            prefill_len: get_usize("prefill_len")?,
+            prefill_batches: get_vec("prefill_batches")?,
+            decode_batches: get_vec("decode_batches")?,
+            dir,
+        })
+    }
+
+    /// Path of the prefill HLO for a batch size.
+    pub fn prefill_path(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("mamba_tiny_prefill_b{batch}.hlo.txt"))
+    }
+
+    /// Path of the decode HLO for a batch size.
+    pub fn decode_path(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("mamba_tiny_decode_b{batch}.hlo.txt"))
+    }
+
+    /// Elements in one sequence's conv state (layers × D × (J−1)).
+    pub fn conv_state_elems(&self) -> usize {
+        self.n_layer * self.d_inner * (self.d_conv - 1)
+    }
+
+    /// Elements in one sequence's SSM state (layers × D × N).
+    pub fn ssm_state_elems(&self) -> usize {
+        self.n_layer * self.d_inner * self.d_state
+    }
+}
+
+/// Golden test vectors exported by aot.py (used by the runtime
+/// integration test).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prefill_tokens: Vec<i32>,
+    pub prefill_logits_sample: Vec<f32>,
+    pub prefill_logits_argmax: Vec<i64>,
+    pub decode_token: Vec<i32>,
+    pub decode_logits_sample: Vec<f32>,
+    pub decode_logits_argmax: Vec<i64>,
+    pub ssm_state_sum: f64,
+}
+
+impl Golden {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Golden> {
+        let path = dir.as_ref().join("golden.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = JsonValue::parse(&text).map_err(|e| anyhow!("golden parse: {e}"))?;
+        let ints = |k: &str| -> Vec<i64> {
+            v.get(k)
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_i64()).collect())
+                .unwrap_or_default()
+        };
+        let floats = |k: &str| -> Vec<f32> {
+            v.get(k)
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|f| f as f32).collect())
+                .unwrap_or_default()
+        };
+        Ok(Golden {
+            prefill_tokens: ints("prefill_tokens").iter().map(|&x| x as i32).collect(),
+            prefill_logits_sample: floats("prefill_logits_sample"),
+            prefill_logits_argmax: ints("prefill_logits_argmax"),
+            decode_token: ints("decode_token").iter().map(|&x| x as i32).collect(),
+            decode_logits_sample: floats("decode_logits_sample"),
+            decode_logits_argmax: ints("decode_logits_argmax"),
+            ssm_state_sum: v.get("ssm_state_sum").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.d_conv, 4);
+        assert!(m.prefill_batches.contains(&1));
+        assert!(m.prefill_path(1).exists());
+        assert!(m.decode_path(1).exists());
+        assert_eq!(m.ssm_state_elems(), m.n_layer * m.d_inner * m.d_state);
+    }
+
+    #[test]
+    fn golden_loads_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("golden.json").exists() {
+            return;
+        }
+        let g = Golden::load(&dir).unwrap();
+        assert_eq!(g.prefill_logits_argmax.len(), 2);
+        assert_eq!(g.decode_token.len(), 2);
+        assert!(!g.prefill_logits_sample.is_empty());
+    }
+}

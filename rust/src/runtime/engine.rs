@@ -1,0 +1,184 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts, compiles
+//! them once per batch size, and serves prefill/decode calls from the
+//! coordinator's hot path. Python is never involved at runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::Manifest;
+
+/// Raw per-call outputs: last-position logits plus the packed recurrent
+/// states (the coordinator scatters them back into per-sequence slots).
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// `[batch, vocab]`, row-major.
+    pub logits: Vec<f32>,
+    /// `[layers, batch, D, J-1]`, row-major.
+    pub conv_state: Vec<f32>,
+    /// `[layers, batch, D, N]`, row-major.
+    pub ssm_state: Vec<f32>,
+}
+
+/// Abstracts the model executor so the coordinator can be tested
+/// without PJRT (see [`super::mock::MockEngine`]). Not `Send`: PJRT
+/// handles hold raw pointers, so each server worker *constructs its own
+/// engine* on its thread (see [`crate::coordinator::server::Server`]).
+pub trait Executor {
+    fn manifest(&self) -> &Manifest;
+
+    /// Prefill a batch of `batch × prefill_len` tokens from zero state.
+    fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput>;
+
+    /// One decode step for `batch` sequences with packed states.
+    fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<StepOutput>;
+}
+
+/// The real PJRT-backed engine.
+pub struct MambaEngine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl MambaEngine {
+    /// Load and compile every artifact listed in the manifest.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<MambaEngine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+        };
+        let mut prefill_exes = BTreeMap::new();
+        for &b in &manifest.prefill_batches {
+            prefill_exes.insert(b, compile(&manifest.prefill_path(b))?);
+        }
+        let mut decode_exes = BTreeMap::new();
+        for &b in &manifest.decode_batches {
+            decode_exes.insert(b, compile(&manifest.decode_path(b))?);
+        }
+        Ok(MambaEngine { manifest, client, prefill_exes, decode_exes })
+    }
+
+    /// The PJRT platform backing this engine (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest compiled batch size ≥ `n` (requests are padded up).
+    pub fn fit_batch(sizes: &[usize], n: usize) -> Option<usize> {
+        sizes.iter().copied().filter(|&b| b >= n).min()
+    }
+
+    fn unpack(result: xla::Literal) -> Result<StepOutput> {
+        let parts = result.to_tuple()?;
+        if parts.len() != 3 {
+            anyhow::bail!("expected 3 outputs, got {}", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        let conv_state = it.next().unwrap().to_vec::<f32>()?;
+        let ssm_state = it.next().unwrap().to_vec::<f32>()?;
+        Ok(StepOutput { logits, conv_state, ssm_state })
+    }
+}
+
+impl Executor for MambaEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
+        let exe = self
+            .prefill_exes
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no prefill executable for batch {batch}"))?;
+        let expect = batch * self.manifest.prefill_len;
+        if tokens.len() != expect {
+            anyhow::bail!("prefill tokens: got {}, want {}", tokens.len(), expect);
+        }
+        let toks = xla::Literal::vec1(tokens)
+            .reshape(&[batch as i64, self.manifest.prefill_len as i64])?;
+        let result = exe.execute::<xla::Literal>(&[toks])?[0][0].to_literal_sync()?;
+        Self::unpack(result)
+    }
+
+    fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<StepOutput> {
+        let exe = self
+            .decode_exes
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode executable for batch {batch}"))?;
+        if tokens.len() != batch {
+            anyhow::bail!("decode tokens: got {}, want {batch}", tokens.len());
+        }
+        let m = &self.manifest;
+        let conv = xla::Literal::vec1(conv_state).reshape(&[
+            m.n_layer as i64,
+            batch as i64,
+            m.d_inner as i64,
+            (m.d_conv - 1) as i64,
+        ])?;
+        let ssm = xla::Literal::vec1(ssm_state).reshape(&[
+            m.n_layer as i64,
+            batch as i64,
+            m.d_inner as i64,
+            m.d_state as i64,
+        ])?;
+        let toks = xla::Literal::vec1(tokens);
+        let result = exe.execute::<xla::Literal>(&[toks, conv, ssm])?[0][0].to_literal_sync()?;
+        Self::unpack(result)
+    }
+}
+
+/// Argmax over each row of a `[batch, vocab]` logits buffer.
+pub fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<i32> {
+    logits
+        .chunks_exact(vocab)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_batch_picks_smallest_fit() {
+        let sizes = [1, 2, 4, 8];
+        assert_eq!(MambaEngine::fit_batch(&sizes, 1), Some(1));
+        assert_eq!(MambaEngine::fit_batch(&sizes, 3), Some(4));
+        assert_eq!(MambaEngine::fit_batch(&sizes, 8), Some(8));
+        assert_eq!(MambaEngine::fit_batch(&sizes, 9), None);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let logits = [0.1, 0.9, 0.0, 7.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+}

@@ -1,0 +1,178 @@
+//! A deterministic pure-Rust mock executor with the same interface,
+//! state layout (`[layers, batch, …]`, layer-major) and state-carrying
+//! semantics as the PJRT engine. Lets the coordinator's batching,
+//! scheduling and state-management logic be tested hermetically (no
+//! artifacts, no PJRT), including the recurrence-consistency invariant:
+//! prefill(t[..k]) + decode over t[k..] ≡ prefill(t).
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+use super::engine::{Executor, StepOutput};
+
+/// Mock model: per-layer decaying recurrences over tiny state vectors;
+/// logits depend on the whole history through the states.
+pub struct MockEngine {
+    manifest: Manifest,
+}
+
+impl MockEngine {
+    pub fn new() -> MockEngine {
+        MockEngine {
+            manifest: Manifest {
+                model: "mock".into(),
+                vocab: 17,
+                d_model: 4,
+                d_inner: 8,
+                d_state: 2,
+                d_conv: 4,
+                n_layer: 2,
+                prefill_len: 8,
+                prefill_batches: vec![1, 2, 4],
+                decode_batches: vec![1, 2, 4, 8],
+                dir: std::path::PathBuf::from("/nonexistent"),
+            },
+        }
+    }
+
+    /// Conv-state elements per (layer, sequence).
+    fn conv_per_layer(&self) -> usize {
+        self.manifest.d_inner * (self.manifest.d_conv - 1)
+    }
+
+    /// SSM-state elements per (layer, sequence).
+    fn ssm_per_layer(&self) -> usize {
+        self.manifest.d_inner * self.manifest.d_state
+    }
+
+    /// Advance one token for sequence `b` of `batch`, updating the
+    /// layer-major state buffers in place. Returns the logits row.
+    fn step_one(
+        &self,
+        batch: usize,
+        b: usize,
+        token: i32,
+        conv: &mut [f32],
+        ssm: &mut [f32],
+    ) -> Vec<f32> {
+        let t = token as f32;
+        let (cp, sp) = (self.conv_per_layer(), self.ssm_per_layer());
+        let mut summary = 0f32;
+        for l in 0..self.manifest.n_layer {
+            let c = &mut conv[(l * batch + b) * cp..(l * batch + b + 1) * cp];
+            c.rotate_left(1);
+            c[cp - 1] = (t * 0.01 + l as f32).sin();
+            summary += c.iter().sum::<f32>();
+            let s = &mut ssm[(l * batch + b) * sp..(l * batch + b + 1) * sp];
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = 0.5 * *x + ((t + i as f32 + l as f32) * 0.1).cos();
+            }
+            summary += s.iter().sum::<f32>();
+        }
+        (0..self.manifest.vocab)
+            .map(|v| ((v as f32) * 0.3 + summary + t * 0.07).sin())
+            .collect()
+    }
+}
+
+impl Default for MockEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Executor for MockEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
+        let l = self.manifest.prefill_len;
+        anyhow::ensure!(tokens.len() == batch * l, "token shape");
+        let mut conv = vec![0f32; batch * self.manifest.conv_state_elems()];
+        let mut ssm = vec![0f32; batch * self.manifest.ssm_state_elems()];
+        let mut logits = Vec::with_capacity(batch * self.manifest.vocab);
+        for b in 0..batch {
+            let mut last = Vec::new();
+            for &t in &tokens[b * l..(b + 1) * l] {
+                last = self.step_one(batch, b, t, &mut conv, &mut ssm);
+            }
+            logits.extend(last);
+        }
+        Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
+    }
+
+    fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<StepOutput> {
+        anyhow::ensure!(tokens.len() == batch, "token shape");
+        let mut conv = conv_state.to_vec();
+        let mut ssm = ssm_state.to_vec();
+        let mut logits = Vec::with_capacity(batch * self.manifest.vocab);
+        for b in 0..batch {
+            logits.extend(self.step_one(batch, b, tokens[b], &mut conv, &mut ssm));
+        }
+        Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::argmax_rows;
+
+    #[test]
+    fn prefill_then_decode_matches_manual_stepping() {
+        let e = MockEngine::new();
+        let l = e.manifest().prefill_len;
+        let tokens: Vec<i32> = (0..l as i32).collect();
+        let out = e.prefill(1, &tokens).unwrap();
+        let out2 = e.decode(1, &[99], &out.conv_state, &out.ssm_state).unwrap();
+
+        let mut conv = vec![0f32; e.manifest().conv_state_elems()];
+        let mut ssm = vec![0f32; e.manifest().ssm_state_elems()];
+        let mut logits = Vec::new();
+        for &t in tokens.iter().chain([99].iter()) {
+            logits = e.step_one(1, 0, t, &mut conv, &mut ssm);
+        }
+        assert_eq!(out2.logits, logits);
+        assert_eq!(out2.ssm_state, ssm);
+    }
+
+    #[test]
+    fn batch_rows_independent() {
+        // Sequence 0's outputs/states must not depend on sequence 1.
+        let e = MockEngine::new();
+        let l = e.manifest().prefill_len;
+        let t1: Vec<i32> = (0..l as i32).collect();
+        let t2: Vec<i32> = (10..10 + l as i32).collect();
+        let solo = e.prefill(1, &t1).unwrap();
+        let both = e.prefill(2, &[t1.clone(), t2].concat()).unwrap();
+        assert_eq!(&both.logits[..e.manifest().vocab], &solo.logits[..]);
+        // Layer-major: sequence 0 of layer l sits at offset l*2*per.
+        let sp = e.ssm_per_layer();
+        for l in 0..e.manifest().n_layer {
+            assert_eq!(
+                &both.ssm_state[l * 2 * sp..l * 2 * sp + sp],
+                &solo.ssm_state[l * sp..(l + 1) * sp],
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_argmax() {
+        let e = MockEngine::new();
+        let l = e.manifest().prefill_len;
+        let t: Vec<i32> = (3..3 + l as i32).collect();
+        let a = e.prefill(1, &t).unwrap();
+        let b = e.prefill(1, &t).unwrap();
+        assert_eq!(
+            argmax_rows(&a.logits, e.manifest().vocab),
+            argmax_rows(&b.logits, e.manifest().vocab)
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on
+//! the request path (adapting /opt/xla-example/load_hlo).
+
+pub mod artifact;
+pub mod engine;
+pub mod mock;
+
+pub use artifact::{Golden, Manifest};
+pub use engine::{argmax_rows, Executor, MambaEngine, StepOutput};
+pub use mock::MockEngine;

@@ -1,0 +1,82 @@
+//! Minimal CSV writer (RFC-4180-ish quoting) for figure/table exports.
+
+use std::fmt::Write as _;
+
+/// Builds CSV text in memory; callers persist it with `std::fs::write`.
+#[derive(Debug, Default, Clone)]
+pub struct CsvWriter {
+    buf: String,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the header row; fixes the column count.
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        assert!(self.buf.is_empty(), "header must come first");
+        self.cols = cols.len();
+        self.raw_row(cols.iter().map(|s| s.to_string()));
+        self
+    }
+
+    /// Write a data row (must match the header width if one was set).
+    pub fn row<I, S>(&mut self, cells: I) -> &mut Self
+    where
+        I: IntoIterator<Item = S>,
+        S: ToString,
+    {
+        let cells: Vec<String> = cells.into_iter().map(|c| c.to_string()).collect();
+        if self.cols > 0 {
+            assert_eq!(cells.len(), self.cols, "row width mismatch");
+        }
+        self.raw_row(cells.into_iter());
+        self
+    }
+
+    fn raw_row<I: Iterator<Item = String>>(&mut self, cells: I) {
+        let quoted: Vec<String> = cells.map(|c| Self::quote(&c)).collect();
+        let _ = writeln!(self.buf, "{}", quoted.join(","));
+    }
+
+    fn quote(s: &str) -> String {
+        if s.contains([',', '"', '\n']) {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    }
+
+    pub fn finish(&self) -> String {
+        self.buf.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_rows() {
+        let mut w = CsvWriter::new();
+        w.header(&["a", "b"]).row(["1", "2"]).row(["x,y", "q\"z"]);
+        let out = w.finish();
+        assert_eq!(out, "a,b\n1,2\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut w = CsvWriter::new();
+        w.header(&["a", "b"]).row(["only-one"]);
+    }
+
+    #[test]
+    fn numeric_cells() {
+        let mut w = CsvWriter::new();
+        w.header(&["n", "f"]).row([format!("{}", 3), format!("{:.2}", 1.5)]);
+        assert!(w.finish().contains("3,1.50"));
+    }
+}

@@ -1,0 +1,386 @@
+//! Minimal JSON emitter (no serde in the vendored crate set). Supports
+//! exactly what the report/metrics paths need: objects, arrays, strings,
+//! numbers, bools.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    pub fn obj() -> Self {
+        JsonValue::Obj(BTreeMap::new())
+    }
+
+    /// Insert into an object (panics on non-objects).
+    pub fn set(&mut self, key: &str, value: impl Into<JsonValue>) -> &mut Self {
+        match self {
+            JsonValue::Obj(m) => {
+                m.insert(key.to_string(), value.into());
+            }
+            _ => panic!("set() on non-object"),
+        }
+        self
+    }
+
+    /// Push into an array (panics on non-arrays).
+    pub fn push(&mut self, value: impl Into<JsonValue>) -> &mut Self {
+        match self {
+            JsonValue::Arr(v) => v.push(value.into()),
+            _ => panic!("push() on non-array"),
+        };
+        self
+    }
+
+    fn escape(s: &str, out: &mut String) {
+        out.push('"');
+        for ch in s.chars() {
+            match ch {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonValue::Int(i) => out.push_str(&format!("{i}")),
+            JsonValue::Str(s) => Self::escape(s, out),
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::escape(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl JsonValue {
+    /// Parse JSON text (strict enough for our own artifacts).
+    pub fn parse(s: &str) -> Result<JsonValue, String> {
+        let bytes = s.as_bytes();
+        let mut pos = 0usize;
+        let v = Self::parse_value(bytes, &mut pos)?;
+        Self::skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing data at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+            *pos += 1;
+        }
+    }
+
+    fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+        Self::skip_ws(b, pos);
+        match b.get(*pos) {
+            None => Err("unexpected end".into()),
+            Some(b'{') => {
+                *pos += 1;
+                let mut map = BTreeMap::new();
+                Self::skip_ws(b, pos);
+                if b.get(*pos) == Some(&b'}') {
+                    *pos += 1;
+                    return Ok(JsonValue::Obj(map));
+                }
+                loop {
+                    Self::skip_ws(b, pos);
+                    let key = match Self::parse_value(b, pos)? {
+                        JsonValue::Str(s) => s,
+                        _ => return Err("object key must be a string".into()),
+                    };
+                    Self::skip_ws(b, pos);
+                    if b.get(*pos) != Some(&b':') {
+                        return Err(format!("expected ':' at byte {pos}"));
+                    }
+                    *pos += 1;
+                    let val = Self::parse_value(b, pos)?;
+                    map.insert(key, val);
+                    Self::skip_ws(b, pos);
+                    match b.get(*pos) {
+                        Some(b',') => *pos += 1,
+                        Some(b'}') => {
+                            *pos += 1;
+                            return Ok(JsonValue::Obj(map));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                *pos += 1;
+                let mut items = Vec::new();
+                Self::skip_ws(b, pos);
+                if b.get(*pos) == Some(&b']') {
+                    *pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                loop {
+                    items.push(Self::parse_value(b, pos)?);
+                    Self::skip_ws(b, pos);
+                    match b.get(*pos) {
+                        Some(b',') => *pos += 1,
+                        Some(b']') => {
+                            *pos += 1;
+                            return Ok(JsonValue::Arr(items));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                    }
+                }
+            }
+            Some(b'"') => {
+                *pos += 1;
+                let mut out = String::new();
+                while let Some(&c) = b.get(*pos) {
+                    match c {
+                        b'"' => {
+                            *pos += 1;
+                            return Ok(JsonValue::Str(out));
+                        }
+                        b'\\' => {
+                            *pos += 1;
+                            match b.get(*pos) {
+                                Some(b'n') => out.push('\n'),
+                                Some(b't') => out.push('\t'),
+                                Some(b'r') => out.push('\r'),
+                                Some(b'"') => out.push('"'),
+                                Some(b'\\') => out.push('\\'),
+                                Some(b'/') => out.push('/'),
+                                Some(b'u') => {
+                                    let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                                        .map_err(|e| e.to_string())?;
+                                    let cp = u32::from_str_radix(hex, 16)
+                                        .map_err(|e| e.to_string())?;
+                                    out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                                    *pos += 4;
+                                }
+                                other => return Err(format!("bad escape {other:?}")),
+                            }
+                            *pos += 1;
+                        }
+                        _ => {
+                            // Copy one UTF-8 scalar.
+                            let start = *pos;
+                            let len = match c {
+                                0x00..=0x7F => 1,
+                                0xC0..=0xDF => 2,
+                                0xE0..=0xEF => 3,
+                                _ => 4,
+                            };
+                            out.push_str(
+                                std::str::from_utf8(&b[start..start + len])
+                                    .map_err(|e| e.to_string())?,
+                            );
+                            *pos += len;
+                        }
+                    }
+                }
+                Err("unterminated string".into())
+            }
+            Some(b't') if b[*pos..].starts_with(b"true") => {
+                *pos += 4;
+                Ok(JsonValue::Bool(true))
+            }
+            Some(b'f') if b[*pos..].starts_with(b"false") => {
+                *pos += 5;
+                Ok(JsonValue::Bool(false))
+            }
+            Some(b'n') if b[*pos..].starts_with(b"null") => {
+                *pos += 4;
+                Ok(JsonValue::Null)
+            }
+            Some(_) => {
+                let start = *pos;
+                while *pos < b.len()
+                    && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    *pos += 1;
+                }
+                let text = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+                if text.contains(['.', 'e', 'E']) {
+                    text.parse::<f64>().map(JsonValue::Num).map_err(|e| e.to_string())
+                } else {
+                    text.parse::<i64>().map(JsonValue::Int).map_err(|e| e.to_string())
+                }
+            }
+        }
+    }
+
+    /// Accessors for parsed documents.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            JsonValue::Int(i) => Some(*i),
+            JsonValue::Num(n) => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            JsonValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for JsonValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        write!(f, "{s}")
+    }
+}
+
+impl From<&str> for JsonValue {
+    fn from(s: &str) -> Self {
+        JsonValue::Str(s.to_string())
+    }
+}
+impl From<String> for JsonValue {
+    fn from(s: String) -> Self {
+        JsonValue::Str(s)
+    }
+}
+impl From<f64> for JsonValue {
+    fn from(n: f64) -> Self {
+        JsonValue::Num(n)
+    }
+}
+impl From<u64> for JsonValue {
+    fn from(n: u64) -> Self {
+        JsonValue::Int(n as i64)
+    }
+}
+impl From<usize> for JsonValue {
+    fn from(n: usize) -> Self {
+        JsonValue::Int(n as i64)
+    }
+}
+impl From<i64> for JsonValue {
+    fn from(n: i64) -> Self {
+        JsonValue::Int(n)
+    }
+}
+impl From<bool> for JsonValue {
+    fn from(b: bool) -> Self {
+        JsonValue::Bool(b)
+    }
+}
+impl From<Vec<JsonValue>> for JsonValue {
+    fn from(v: Vec<JsonValue>) -> Self {
+        JsonValue::Arr(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested() {
+        let mut o = JsonValue::obj();
+        o.set("name", "mambalaya").set("n", 3u64).set("ok", true);
+        let mut arr = JsonValue::Arr(vec![]);
+        arr.push(1.5f64).push("x");
+        o.set("xs", arr);
+        assert_eq!(o.to_string(), r#"{"n":3,"name":"mambalaya","ok":true,"xs":[1.5,"x"]}"#);
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let v = JsonValue::from("a\"b\\c\nd");
+        assert_eq!(v.to_string(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = r#"{"a": [1, 2.5, "x"], "b": {"c": true, "d": null}, "e": -3}"#;
+        let v = JsonValue::parse(text).unwrap();
+        assert_eq!(v.get("e").unwrap().as_i64(), Some(-3));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(v.get("b").unwrap().get("c"), Some(&JsonValue::Bool(true)));
+        // Emit → parse → emit is stable.
+        let emitted = v.to_string();
+        assert_eq!(JsonValue::parse(&emitted).unwrap().to_string(), emitted);
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let v = JsonValue::parse(r#""a\nAé""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\nAé"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(JsonValue::parse("{").is_err());
+        assert!(JsonValue::parse("[1,]").is_err());
+        assert!(JsonValue::parse("12 34").is_err());
+    }
+}

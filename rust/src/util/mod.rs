@@ -1,0 +1,12 @@
+//! Small utilities hand-rolled for the offline build environment (no
+//! clap / serde / rand in the vendored crate set — see DESIGN.md §4).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+
+pub use cli::Args;
+pub use csv::CsvWriter;
+pub use json::JsonValue;
+pub use rng::XorShift;

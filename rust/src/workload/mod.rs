@@ -1,0 +1,202 @@
+//! End-to-end workload evaluation: combine per-layer prefill and decode
+//! costs into full-scenario latencies (paper Figure 12/13: context
+//! length : generation length ratios).
+
+use crate::arch::{baseline_plan, ArchSpec, Baseline, Staging};
+use crate::cascade::{mamba1, ModelConfig, Scenario};
+use crate::fusion::{stitch, FusionVariant};
+use crate::model::{evaluate, ideal_cost, ExecOptions, LayerCost, Traffic};
+
+/// A design point: a fusion variant on Mambalaya, or a baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignPoint {
+    Variant(FusionVariant),
+    Baseline(Baseline),
+}
+
+impl DesignPoint {
+    pub fn name(&self) -> String {
+        match self {
+            DesignPoint::Variant(v) => v.name().to_string(),
+            DesignPoint::Baseline(b) => b.name().to_string(),
+        }
+    }
+
+    /// All points compared in Figures 12–15.
+    pub fn all() -> Vec<DesignPoint> {
+        let mut v: Vec<DesignPoint> =
+            FusionVariant::all().into_iter().map(DesignPoint::Variant).collect();
+        v.push(DesignPoint::Baseline(Baseline::MarcaLike));
+        v.push(DesignPoint::Baseline(Baseline::GeensLike));
+        v
+    }
+
+    fn staging(&self) -> Staging {
+        match self {
+            DesignPoint::Baseline(b) => b.staging(),
+            _ => Staging::UnitTile,
+        }
+    }
+}
+
+/// End-to-end cost of a scenario at a design point.
+#[derive(Debug, Clone)]
+pub struct ScenarioCost {
+    pub scenario: String,
+    pub design: String,
+    /// Prefill cycles (all layers, whole context).
+    pub prefill_cycles: u64,
+    /// Decode cycles (all layers × generated tokens).
+    pub decode_cycles: u64,
+    pub prefill_traffic: Traffic,
+    pub decode_traffic: Traffic,
+}
+
+impl ScenarioCost {
+    pub fn total_cycles(&self) -> u64 {
+        self.prefill_cycles + self.decode_cycles
+    }
+
+    pub fn total_secs(&self, arch: &ArchSpec) -> f64 {
+        self.total_cycles() as f64 / arch.cycles_per_sec()
+    }
+}
+
+/// Evaluate one layer in prefill mode at a design point.
+pub fn prefill_layer(
+    cfg: &ModelConfig,
+    seq: u64,
+    batch: u64,
+    point: DesignPoint,
+    arch: &ArchSpec,
+    pipelined: bool,
+) -> LayerCost {
+    let c = mamba1::build(cfg, seq, batch);
+    let plan = match point {
+        DesignPoint::Variant(v) => stitch(&c, v),
+        DesignPoint::Baseline(b) => baseline_plan(&c, b),
+    };
+    let opts =
+        ExecOptions { staging: point.staging(), pipelined, decode_state_io: false };
+    evaluate(&c, &plan, arch, &opts)
+}
+
+/// Evaluate one layer in decode mode (single step, batch tokens).
+pub fn decode_layer(
+    cfg: &ModelConfig,
+    batch: u64,
+    point: DesignPoint,
+    arch: &ArchSpec,
+) -> LayerCost {
+    let c = mamba1::build(cfg, 1, batch);
+    let plan = match point {
+        DesignPoint::Variant(v) => stitch(&c, v),
+        DesignPoint::Baseline(b) => baseline_plan(&c, b),
+    };
+    let opts =
+        ExecOptions { staging: point.staging(), pipelined: false, decode_state_io: true };
+    evaluate(&c, &plan, arch, &opts)
+}
+
+/// The ideal (algorithmic-minimum, zero inter-Einsum traffic) layer
+/// costs — the red line of Figure 12.
+pub fn ideal_layer(
+    cfg: &ModelConfig,
+    seq: u64,
+    batch: u64,
+    arch: &ArchSpec,
+    decode: bool,
+) -> LayerCost {
+    let c = mamba1::build(cfg, seq, batch);
+    let plan = stitch(&c, FusionVariant::FullyFused);
+    let opts = ExecOptions {
+        staging: Staging::UnitTile,
+        pipelined: true,
+        decode_state_io: decode,
+    };
+    ideal_cost(&c, &plan, arch, &opts)
+}
+
+/// Evaluate a full scenario: prefill once over the context, then
+/// `decode` steps of generation, across all layers.
+pub fn scenario_cost(
+    cfg: &ModelConfig,
+    s: &Scenario,
+    point: DesignPoint,
+    arch: &ArchSpec,
+    pipelined: bool,
+) -> ScenarioCost {
+    let pf = prefill_layer(cfg, s.prefill, s.batch, point, arch, pipelined);
+    let dc = decode_layer(cfg, s.batch, point, arch);
+    ScenarioCost {
+        scenario: s.name.clone(),
+        design: point.name(),
+        prefill_cycles: pf.latency * cfg.layers,
+        decode_cycles: dc.latency * cfg.layers * s.decode,
+        prefill_traffic: pf.traffic,
+        decode_traffic: dc.traffic,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_dominated_scenario_prefers_ri_over_fully_fused() {
+        // Paper Fig 12: "for relatively large decode length, RI fusion
+        // performs the best" among... (we require at least: RI beats the
+        // unfused baseline and fully-fused doesn't win decode-heavy).
+        let cfg = ModelConfig::mamba_370m();
+        let arch = ArchSpec::mambalaya();
+        let s = Scenario::new("decode-heavy", 64, 64, 4096);
+        let unf = scenario_cost(&cfg, &s, DesignPoint::Variant(FusionVariant::Unfused), &arch, false);
+        let ri = scenario_cost(&cfg, &s, DesignPoint::Variant(FusionVariant::RIOnly), &arch, false);
+        assert!(unf.total_cycles() as f64 / ri.total_cycles() as f64 > 1.5);
+    }
+
+    #[test]
+    fn prefill_dominated_scenario_prefers_fully_fused() {
+        let cfg = ModelConfig::mamba_370m();
+        let arch = ArchSpec::mambalaya();
+        let s = Scenario::new("prefill-heavy", 64, 16384, 256);
+        let ff =
+            scenario_cost(&cfg, &s, DesignPoint::Variant(FusionVariant::FullyFused), &arch, false);
+        for v in [FusionVariant::Unfused, FusionVariant::RIOnly, FusionVariant::RIRSb] {
+            let other = scenario_cost(&cfg, &s, DesignPoint::Variant(v), &arch, false);
+            assert!(
+                ff.total_cycles() <= other.total_cycles(),
+                "fully-fused loses to {v} in prefill-heavy"
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_suite_evaluates_everywhere() {
+        let cfg = ModelConfig::mamba_130m();
+        let arch = ArchSpec::mambalaya();
+        for s in Scenario::paper_suite() {
+            for p in DesignPoint::all() {
+                let c = scenario_cost(&cfg, &s, p, &arch, false);
+                assert!(c.total_cycles() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn ideal_bounds_everything() {
+        let cfg = ModelConfig::mamba_370m();
+        let arch = ArchSpec::mambalaya();
+        let ideal = ideal_layer(&cfg, 4096, 1, &arch, false);
+        for p in DesignPoint::all() {
+            let real = prefill_layer(&cfg, 4096, 1, p, &arch, false);
+            assert!(
+                real.latency >= ideal.latency,
+                "{} beats ideal: {} < {}",
+                p.name(),
+                real.latency,
+                ideal.latency
+            );
+        }
+    }
+}

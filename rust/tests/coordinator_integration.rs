@@ -1,0 +1,153 @@
+//! Coordinator integration tests on the mock engine: batching
+//! invariance under randomized workloads, failure injection, and
+//! policy edge cases.
+
+use std::time::Duration;
+
+use mambalaya::coordinator::{serve_all, BatchPolicy, Request, Scheduler, WorkloadGen};
+use mambalaya::prop::check;
+use mambalaya::runtime::engine::{Executor, StepOutput};
+use mambalaya::runtime::MockEngine;
+
+#[test]
+fn prop_generation_invariant_under_policy() {
+    // The generated tokens for a request must not depend on the batching
+    // policy (batch sizes, wait times, admission order of others).
+    check("policy invariance", 12, |rng| {
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let mut gen = WorkloadGen::new(rng.next_u64(), vocab, plen, 1, 6);
+        let reqs: Vec<Request> = (0..rng.range(1, 9)).map(|_| gen.next_request()).collect();
+
+        let policies = [
+            BatchPolicy::default(),
+            BatchPolicy {
+                prefill_sizes: vec![1],
+                decode_sizes: vec![1],
+                max_prefill_wait: Duration::from_millis(0),
+                max_running: 2,
+                decode_priority_threshold: 1,
+            },
+            BatchPolicy {
+                prefill_sizes: vec![1, 2, 4],
+                decode_sizes: vec![2, 8],
+                max_prefill_wait: Duration::from_millis(1),
+                max_running: 4,
+                decode_priority_threshold: 3,
+            },
+        ];
+        let mut reference: Option<Vec<Vec<i32>>> = None;
+        for policy in policies {
+            let (mut resps, _) =
+                serve_all(|| Ok(MockEngine::new()), policy, reqs.clone()).unwrap();
+            resps.sort_by_key(|r| r.id);
+            let tokens: Vec<Vec<i32>> = resps.into_iter().map(|r| r.tokens).collect();
+            match &reference {
+                None => reference = Some(tokens),
+                Some(want) => {
+                    if want != &tokens {
+                        return Err("tokens depend on batch policy".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// An engine that fails every Nth decode call — exercises the worker's
+/// fail-stop path without hanging clients.
+struct FlakyEngine {
+    inner: MockEngine,
+    calls: std::cell::Cell<u32>,
+    fail_every: u32,
+}
+
+impl Executor for FlakyEngine {
+    fn manifest(&self) -> &mambalaya::runtime::Manifest {
+        self.inner.manifest()
+    }
+
+    fn prefill(&self, batch: usize, tokens: &[i32]) -> anyhow::Result<StepOutput> {
+        self.inner.prefill(batch, tokens)
+    }
+
+    fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        conv: &[f32],
+        ssm: &[f32],
+    ) -> anyhow::Result<StepOutput> {
+        let n = self.calls.get() + 1;
+        self.calls.set(n);
+        if n % self.fail_every == 0 {
+            anyhow::bail!("injected decode failure #{n}");
+        }
+        self.inner.decode(batch, tokens, conv, ssm)
+    }
+}
+
+#[test]
+fn scheduler_surfaces_engine_errors() {
+    let engine =
+        FlakyEngine { inner: MockEngine::new(), calls: Default::default(), fail_every: 3 };
+    let (vocab, plen) = (engine.manifest().vocab, engine.manifest().prefill_len);
+    let mut s = Scheduler::new(engine, BatchPolicy::default());
+    let mut gen = WorkloadGen::new(1, vocab, plen, 8, 8);
+    s.submit(gen.next_request()).unwrap();
+    // Ticking must eventually return the injected error, not panic or
+    // silently drop the request.
+    let mut saw_error = false;
+    for _ in 0..64 {
+        match s.tick() {
+            Err(e) => {
+                assert!(e.to_string().contains("injected decode failure"));
+                saw_error = true;
+                break;
+            }
+            Ok(_) => {}
+        }
+    }
+    assert!(saw_error, "error was swallowed");
+}
+
+#[test]
+fn zero_max_new_tokens_is_rejected() {
+    let mut s = Scheduler::new(MockEngine::new(), BatchPolicy::default());
+    let plen = s.manifest().prefill_len;
+    let req = Request { id: 1, prompt: vec![0; plen], max_new_tokens: 0 };
+    assert!(s.submit(req).is_err());
+}
+
+#[test]
+fn many_more_requests_than_slots_all_complete() {
+    let probe = MockEngine::new();
+    let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+    let policy = BatchPolicy { max_running: 3, ..Default::default() };
+    let mut gen = WorkloadGen::new(4, vocab, plen, 2, 7);
+    let reqs: Vec<Request> = (0..40).map(|_| gen.next_request()).collect();
+    let want: Vec<usize> = reqs.iter().map(|r| r.max_new_tokens).collect();
+    let (mut resps, report) = serve_all(|| Ok(MockEngine::new()), policy, reqs).unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 40);
+    for (r, n) in resps.iter().zip(want) {
+        assert_eq!(r.tokens.len(), n);
+    }
+    assert!(report.contains("requests=40"));
+}
+
+#[test]
+fn single_token_requests_complete_at_prefill() {
+    // max_new_tokens = 1 finishes during the prefill batch (no decode
+    // round-trip, no state slot ever allocated).
+    let probe = MockEngine::new();
+    let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+    let mut gen = WorkloadGen::new(5, vocab, plen, 1, 1);
+    let reqs: Vec<Request> = (0..4).map(|_| gen.next_request()).collect();
+    let (resps, _) =
+        serve_all(|| Ok(MockEngine::new()), BatchPolicy::default(), reqs).unwrap();
+    for r in resps {
+        assert_eq!(r.tokens.len(), 1);
+    }
+}

@@ -1,0 +1,221 @@
+//! Property-based tests of the fusion machinery over *random cascades*:
+//! the invariants hold for any Einsum DAG, not just Mamba (the paper's
+//! "TA+" claim in Table II).
+
+use mambalaya::cascade::{mamba1, mamba2, ModelConfig};
+use mambalaya::einsum::{
+    Cascade, DType, EinsumSpec, IterSpace, OpKind, Operand, Rank, TensorClass, TensorSpec,
+    UnaryFn,
+};
+use mambalaya::fusion::{classify_pair, stitch, FusionClass, FusionVariant};
+use mambalaya::prop::check;
+use mambalaya::util::XorShift;
+
+/// Generate a random, valid, sequential cascade: each Einsum consumes
+/// the previous output (and sometimes an older one), with random rank
+/// structure drawn from a small rank universe.
+fn random_cascade(rng: &mut XorShift) -> Cascade {
+    let universe: Vec<Rank> = ["M", "N", "K", "P", "Q", "R"]
+        .iter()
+        .map(|n| Rank::new(*n, 1 << rng.range(2, 6)))
+        .collect();
+    let n_einsums = rng.range(2, 10) as usize;
+
+    let pick_ranks = |rng: &mut XorShift, min: u64| -> Vec<Rank> {
+        let k = rng.range(min, 3.max(min));
+        let mut out: Vec<Rank> = Vec::new();
+        while (out.len() as u64) < k {
+            let r = rng.pick(&universe).clone();
+            if !out.iter().any(|x| x.name == r.name) {
+                out.push(r);
+            }
+        }
+        out
+    };
+
+    let mut einsums: Vec<EinsumSpec> = Vec::new();
+    let in0 = TensorSpec::new("T0", pick_ranks(rng, 1), DType::F16, TensorClass::Input);
+    let mut prev = in0.clone();
+    for i in 1..=n_einsums {
+        let out_ranks = pick_ranks(rng, 1);
+        let out = TensorSpec::new(
+            format!("T{i}"),
+            out_ranks.clone(),
+            DType::F16,
+            if i == n_einsums { TensorClass::Output } else { TensorClass::Intermediate },
+        );
+        // Reduction ranks: ranks of prev not in the output.
+        let reduction: Vec<Rank> = prev
+            .ranks
+            .iter()
+            .filter(|r| !out_ranks.iter().any(|o| o.name == r.name))
+            .cloned()
+            .collect();
+        let mut inputs = vec![Operand::plain(prev.clone())];
+        // Occasionally read an older intermediate too.
+        if i >= 2 && rng.below(3) == 0 {
+            let older = einsums[rng.below(einsums.len() as u64) as usize].output.clone();
+            if older.name != prev.name {
+                inputs.push(Operand::plain(older));
+            }
+        }
+        let op = match rng.below(4) {
+            0 => OpKind::MulAcc,
+            1 => OpKind::Mul,
+            2 => OpKind::Add,
+            _ => OpKind::Unary(UnaryFn::Exp),
+        };
+        // Give contractions a weight operand spanning their space.
+        if matches!(op, OpKind::MulAcc) {
+            let w_ranks: Vec<Rank> =
+                reduction.iter().chain(out_ranks.iter()).cloned().collect();
+            if !w_ranks.is_empty() {
+                inputs.push(Operand::plain(TensorSpec::new(
+                    format!("W{i}"),
+                    w_ranks,
+                    DType::F16,
+                    TensorClass::Weight,
+                )));
+            }
+        }
+        einsums.push(EinsumSpec::new(i, format!("T{i}"), out.clone(), inputs, reduction, op));
+        prev = out;
+    }
+    Cascade::new("random", einsums)
+}
+
+#[test]
+fn prop_random_cascades_validate() {
+    check("random cascades validate", 200, |rng| {
+        let c = random_cascade(rng);
+        c.validate().map_err(|e| format!("{e}"))
+    });
+}
+
+#[test]
+fn prop_plans_partition_the_cascade() {
+    check("plans partition", 200, |rng| {
+        let c = random_cascade(rng);
+        for v in FusionVariant::all() {
+            let plan = stitch(&c, v);
+            plan.validate(&c).map_err(|e| format!("{v}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_counts_monotone_in_variant_power() {
+    // More permissive variants never produce *more* groups.
+    check("group counts monotone", 200, |rng| {
+        let c = random_cascade(rng);
+        let counts: Vec<usize> =
+            FusionVariant::all().iter().map(|&v| stitch(&c, v).groups.len()).collect();
+        for w in counts.windows(2) {
+            if w[1] > w[0] {
+                return Err(format!("counts not monotone: {counts:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_classification_consistent_with_privates() {
+    // The class must agree with the private-rank structure relative to
+    // the intermediate (the paper's Figure 3 semantics).
+    check("classification consistency", 300, |rng| {
+        let c = random_cascade(rng);
+        for (i, up) in c.einsums().iter().enumerate() {
+            for down in &c.einsums()[i + 1..] {
+                if let Some(p) = classify_pair(up, down) {
+                    let t = down.operand(&p.intermediate).unwrap().tensor.clone();
+                    let t_space = IterSpace::new(t.ranks.clone());
+                    let up_priv = !up.iteration_space().difference(&t_space).is_empty();
+                    let dn_priv = !down.iteration_space().difference(&t_space).is_empty();
+                    let want = match (up_priv, dn_priv) {
+                        (false, false) => FusionClass::RI,
+                        (true, false) => FusionClass::RSb,
+                        (false, true) => FusionClass::RSp,
+                        (true, true) => FusionClass::RD,
+                    };
+                    if p.class != want {
+                        return Err(format!("{}→{}: {} vs {}", up.id, down.id, p.class, want));
+                    }
+                    // Stationary ranks always lie inside the intermediate.
+                    if !p.stationary.is_subset_of(&t_space) {
+                        return Err(format!(
+                            "stationary {} escapes intermediate {}",
+                            p.stationary, t_space
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_internal_tensors_never_escape() {
+    check("internal tensors stay internal", 200, |rng| {
+        let c = random_cascade(rng);
+        let consumers = c.consumers();
+        for v in FusionVariant::fused() {
+            let plan = stitch(&c, v);
+            for g in &plan.groups {
+                for t in &g.internal_tensors {
+                    if let Some(cs) = consumers.get(t.as_str()) {
+                        for cid in cs {
+                            if !g.einsums.contains(cid) {
+                                return Err(format!("{v}: {t} consumed outside its group"));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fully_fused_never_more_groups_than_rsp() {
+    check("fully-fused ≤ rsp groups", 150, |rng| {
+        let c = random_cascade(rng);
+        let rsp = stitch(&c, FusionVariant::RIRSbRSp).groups.len();
+        let ff = stitch(&c, FusionVariant::FullyFused).groups.len();
+        if ff > rsp {
+            return Err(format!("ff {ff} > rsp {rsp}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mamba_cascades_satisfy_all_properties_at_many_sizes() {
+    // Determinized sweep over real cascade families and sizes.
+    for cfg in [ModelConfig::mamba_130m(), ModelConfig::mamba_370m(), ModelConfig::mamba_2_8b()]
+    {
+        for seq in [1u64, 2, 64, 4096] {
+            for batch in [1u64, 64] {
+                let c1 = mamba1::build(&cfg, seq, batch);
+                c1.validate().unwrap();
+                let c2 = mamba2::build(&cfg, seq, batch);
+                c2.validate().unwrap();
+                for v in FusionVariant::all() {
+                    stitch(&c1, v).validate(&c1).unwrap();
+                    stitch(&c2, v).validate(&c2).unwrap();
+                }
+                // Group structure is size-independent (fusion classes
+                // depend on rank *names*, not extents).
+                let g_small = stitch(&mamba1::build(&cfg, 1, 1), FusionVariant::RIRSbRSp);
+                let g_here = stitch(&c1, FusionVariant::RIRSbRSp);
+                assert_eq!(
+                    g_small.groups.iter().map(|g| g.einsums.clone()).collect::<Vec<_>>(),
+                    g_here.groups.iter().map(|g| g.einsums.clone()).collect::<Vec<_>>(),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Property tests on the analytical model: conservation, bounds, and
+//! monotonicity invariants the cost model must obey for any workload
+//! configuration.
+
+use mambalaya::arch::{baseline_plan, ArchSpec, Baseline, Binding, Staging};
+use mambalaya::cascade::{mamba1, ModelConfig};
+use mambalaya::fusion::{stitch, FusionVariant};
+use mambalaya::model::{evaluate, ideal_cost, ExecOptions};
+use mambalaya::prop::check;
+use mambalaya::util::XorShift;
+
+fn random_workload(rng: &mut XorShift) -> (ModelConfig, u64, u64) {
+    let cfg = match rng.below(4) {
+        0 => ModelConfig::mamba_130m(),
+        1 => ModelConfig::mamba_370m(),
+        2 => ModelConfig::mamba_1_4b(),
+        _ => ModelConfig::mamba_2_8b(),
+    };
+    let seq = 1u64 << rng.range(0, 14);
+    let batch = 1u64 << rng.range(0, 6);
+    (cfg, seq, batch)
+}
+
+#[test]
+fn prop_flops_invariant_under_fusion() {
+    // Fusion moves data, not math: total FLOPs must be identical across
+    // all variants for the same workload.
+    check("flops invariant", 40, |rng| {
+        let (cfg, seq, batch) = random_workload(rng);
+        let c = mamba1::build(&cfg, seq, batch);
+        let arch = ArchSpec::mambalaya();
+        let opts = ExecOptions::default();
+        let base = evaluate(&c, &stitch(&c, FusionVariant::Unfused), &arch, &opts).flops;
+        for v in FusionVariant::fused() {
+            let f = evaluate(&c, &stitch(&c, v), &arch, &opts).flops;
+            if f != base {
+                return Err(format!("{v}: flops {f} != {base}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_bounded_by_compute_and_memory() {
+    // Latency ≥ both the pure-compute and pure-memory lower bounds, and
+    // ≤ their sum per phase (the max/overlap model).
+    check("latency bounds", 40, |rng| {
+        let (cfg, seq, batch) = random_workload(rng);
+        let c = mamba1::build(&cfg, seq, batch);
+        let arch = ArchSpec::mambalaya();
+        for v in FusionVariant::all() {
+            let cost = evaluate(&c, &stitch(&c, v), &arch, &ExecOptions::default());
+            for p in &cost.phases {
+                let lower = p.cycles_2d.max(p.cycles_small).max(p.mem_cycles);
+                let upper = p.cycles_2d + p.cycles_small + p.mem_cycles;
+                if p.latency < lower || p.latency > upper {
+                    return Err(format!(
+                        "{v}: phase latency {} outside [{lower},{upper}]",
+                        p.latency
+                    ));
+                }
+            }
+            let sum: u64 = cost.phases.iter().map(|p| p.latency).sum();
+            if cost.latency != sum {
+                return Err(format!("{v}: layer latency {} != Σ phases {sum}", cost.latency));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ideal_never_slower() {
+    check("ideal is a lower bound", 30, |rng| {
+        let (cfg, seq, batch) = random_workload(rng);
+        let c = mamba1::build(&cfg, seq, batch);
+        let arch = ArchSpec::mambalaya();
+        let opts = ExecOptions::default();
+        for v in FusionVariant::all() {
+            let plan = stitch(&c, v);
+            let real = evaluate(&c, &plan, &arch, &opts);
+            let ideal = ideal_cost(&c, &plan, &arch, &opts);
+            if ideal.latency > real.latency {
+                return Err(format!("{v}: ideal {} > real {}", ideal.latency, real.latency));
+            }
+            if ideal.traffic.inter() != 0 {
+                return Err(format!("{v}: ideal keeps inter traffic"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelining_never_hurts() {
+    check("pipelining helps", 30, |rng| {
+        let (cfg, seq, batch) = random_workload(rng);
+        let c = mamba1::build(&cfg, seq, batch);
+        let arch = ArchSpec::mambalaya();
+        for v in FusionVariant::all() {
+            let plan = stitch(&c, v);
+            let seqv = evaluate(&c, &plan, &arch, &ExecOptions::default());
+            let pipe = evaluate(
+                &c,
+                &plan,
+                &arch,
+                &ExecOptions { pipelined: true, ..Default::default() },
+            );
+            if pipe.latency > seqv.latency {
+                return Err(format!("{v}: pipelined {} > {}", pipe.latency, seqv.latency));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_traffic_scales_with_sequence() {
+    // Longer sequences never reduce traffic (same variant, same model).
+    check("traffic monotone in seq", 25, |rng| {
+        let cfg = ModelConfig::mamba_370m();
+        let s1 = 1u64 << rng.range(1, 8);
+        let s2 = s1 * 2;
+        let arch = ArchSpec::mambalaya();
+        for v in FusionVariant::all() {
+            let c1 = mamba1::build(&cfg, s1, 1);
+            let c2 = mamba1::build(&cfg, s2, 1);
+            let t1 = evaluate(&c1, &stitch(&c1, v), &arch, &ExecOptions::default()).traffic;
+            let t2 = evaluate(&c2, &stitch(&c2, v), &arch, &ExecOptions::default()).traffic;
+            if t2.total() < t1.total() {
+                return Err(format!("{v}: traffic shrank {} → {}", t1.total(), t2.total()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_geens_never_slower_than_marca() {
+    // Unit-tile staging dominates full-extent staging at any size.
+    check("geens ≤ marca", 25, |rng| {
+        let (cfg, seq, batch) = random_workload(rng);
+        let c = mamba1::build(&cfg, seq, batch);
+        let arch = ArchSpec::mambalaya();
+        let marca = evaluate(
+            &c,
+            &baseline_plan(&c, Baseline::MarcaLike),
+            &arch,
+            &ExecOptions { staging: Staging::FullExtent, ..Default::default() },
+        );
+        let geens = evaluate(
+            &c,
+            &baseline_plan(&c, Baseline::GeensLike),
+            &arch,
+            &ExecOptions::default(),
+        );
+        if geens.latency > marca.latency {
+            return Err(format!("geens {} > marca {}", geens.latency, marca.latency));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_utilization_in_unit_interval() {
+    check("utilization ∈ [0,1]", 30, |rng| {
+        let (cfg, seq, batch) = random_workload(rng);
+        let c = mamba1::build(&cfg, seq, batch);
+        let arch = ArchSpec::mambalaya();
+        for v in FusionVariant::all() {
+            let cost = evaluate(&c, &stitch(&c, v), &arch, &ExecOptions::default());
+            for p in &cost.phases {
+                let u = p.utilization(&arch);
+                if !(0.0..=1.0 + 1e-9).contains(&u) {
+                    return Err(format!("{v}: utilization {u}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arch_bindings_are_consistent() {
+    // Sanity over the Table III spec used throughout.
+    let a = ArchSpec::mambalaya();
+    assert!(a.pes(Binding::Mode2D) > a.pes(Binding::Wide1D));
+    assert!(a.pes(Binding::Wide1D) > a.pes(Binding::Small1D));
+    assert!(a.machine_balance() > 1.0);
+}

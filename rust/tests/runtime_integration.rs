@@ -1,0 +1,116 @@
+//! Integration: the real PJRT engine must load the AOT artifacts,
+//! execute them, and reproduce the golden vectors exported by
+//! python/compile/aot.py — proving the three layers compose with
+//! python absent at runtime.
+//!
+//! Skipped (with a note) when `artifacts/` has not been built.
+
+use std::path::PathBuf;
+
+use mambalaya::coordinator::{serve_all, BatchPolicy, WorkloadGen};
+use mambalaya::runtime::{argmax_rows, Executor, Golden, MambaEngine, Manifest};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn engine_reproduces_golden_prefill_and_decode() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let engine = MambaEngine::load(&dir).expect("engine load");
+    let golden = Golden::load(&dir).expect("golden load");
+    let m = engine.manifest().clone();
+
+    // Prefill the golden 2×L prompt batch.
+    let out = engine.prefill(2, &golden.prefill_tokens).expect("prefill");
+    assert_eq!(out.logits.len(), 2 * m.vocab);
+    // Logits sample (first 8 per row).
+    for row in 0..2 {
+        for k in 0..8 {
+            let got = out.logits[row * m.vocab + k];
+            let want = golden.prefill_logits_sample[row * 8 + k];
+            assert!(
+                (got - want).abs() < 1e-3 + want.abs() * 1e-3,
+                "prefill logits[{row},{k}]: got {got}, want {want}"
+            );
+        }
+    }
+    // Argmax agreement.
+    let am = argmax_rows(&out.logits, m.vocab);
+    assert_eq!(
+        am.iter().map(|&x| x as i64).collect::<Vec<_>>(),
+        golden.prefill_logits_argmax
+    );
+
+    // Decode one golden step from the prefilled state.
+    let out2 = engine
+        .decode(2, &golden.decode_token, &out.conv_state, &out.ssm_state)
+        .expect("decode");
+    for row in 0..2 {
+        for k in 0..8 {
+            let got = out2.logits[row * m.vocab + k];
+            let want = golden.decode_logits_sample[row * 8 + k];
+            assert!(
+                (got - want).abs() < 1e-3 + want.abs() * 1e-3,
+                "decode logits[{row},{k}]: got {got}, want {want}"
+            );
+        }
+    }
+    let am2 = argmax_rows(&out2.logits, m.vocab);
+    assert_eq!(
+        am2.iter().map(|&x| x as i64).collect::<Vec<_>>(),
+        golden.decode_logits_argmax
+    );
+    // State checksum.
+    let sum: f64 = out2.ssm_state.iter().map(|&x| x as f64).sum();
+    assert!(
+        (sum - golden.ssm_state_sum).abs() < 1e-2 + golden.ssm_state_sum.abs() * 1e-4,
+        "ssm state sum: got {sum}, want {}",
+        golden.ssm_state_sum
+    );
+}
+
+#[test]
+fn serving_through_real_engine_is_batch_invariant() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let (vocab, plen) = (manifest.vocab, manifest.prefill_len);
+    let mut gen = WorkloadGen::new(77, vocab, plen, 3, 3);
+    let reqs: Vec<_> = (0..3).map(|_| gen.next_request()).collect();
+
+    // Solo generation per request.
+    let mut solo = Vec::new();
+    for r in &reqs {
+        let (resp, _) = serve_all(
+            || MambaEngine::load(artifacts_dir()),
+            BatchPolicy::default(),
+            vec![r.clone()],
+        )
+        .unwrap();
+        solo.push(resp[0].tokens.clone());
+    }
+
+    // Batched generation.
+    let (mut batched, report) = serve_all(
+        || MambaEngine::load(artifacts_dir()),
+        BatchPolicy::default(),
+        reqs,
+    )
+    .unwrap();
+    batched.sort_by_key(|r| r.id);
+    for (resp, want) in batched.iter().zip(&solo) {
+        assert_eq!(&resp.tokens, want, "request {} diverged under batching", resp.id);
+    }
+    assert!(report.contains("requests=3"), "{report}");
+}
