@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# CI gate for the Mambalaya reproduction.
+#
+#   ./ci.sh          # tier-1 gate + smoke-compile of benches/examples
+#   ./ci.sh --fast   # tier-1 gate only
+#
+# Tier-1 (must stay green): cargo build --release && cargo test -q
+# Smoke: benches and examples must *compile* (they are not run here —
+# paper benches are long, and the PJRT example needs `make artifacts`).
+# Python AOT-layer tests run only if a jax-capable interpreter exists,
+# and are non-gating (the serving stack is pure Rust).
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+# The fusion golden snapshot blesses itself on the very first run in a
+# fresh checkout (the file cannot be generated without a toolchain, so
+# it may not be in the tree yet). Re-run the golden test so this
+# invocation always performs a real byte comparison, and insist the
+# blessed file gets committed.
+echo "== fusion golden: compare pass =="
+cargo test -q --test fusion_golden
+if [ -n "$(git status --porcelain -- rust/tests/golden 2>/dev/null)" ]; then
+    echo "ERROR: rust/tests/golden changed/untracked — commit the blessed snapshot" >&2
+    git status --short -- rust/tests/golden >&2
+    exit 1
+fi
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== smoke: benches + examples compile =="
+    cargo check --release --benches --examples
+
+    if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
+        echo "== python AOT-layer tests (non-gating) =="
+        python -m pytest -q python/tests || echo "WARNING: python tests failed (non-gating)"
+    else
+        echo "== python AOT-layer tests skipped (no jax) =="
+    fi
+fi
+
+echo "ci.sh: all gates passed"

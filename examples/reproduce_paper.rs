@@ -21,7 +21,9 @@ fn main() -> anyhow::Result<()> {
     let batch = args.get_u64("batch", 64);
     std::fs::create_dir_all(&out_dir)?;
 
-    let experiments: Vec<(&str, Box<dyn Fn() -> (String, String)>)> = vec![
+    // `+ '_`: the closures borrow the local `cfg`, so the trait objects
+    // must not default to 'static.
+    let experiments: Vec<(&str, Box<dyn Fn() -> (String, String) + '_>)> = vec![
         ("table1", Box::new(|| report::table1_report(&cfg, seq, batch))),
         ("table2", Box::new(report::table2_report)),
         ("table3", Box::new(report::table3_report)),

@@ -1,23 +1,106 @@
-//! End-to-end serving driver (the brief's required E2E validation):
-//! load the AOT-compiled tiny Mamba model, serve batched generation
-//! requests through the Rust coordinator (router → dynamic batcher →
-//! prefill/decode scheduler → recurrent-state manager → PJRT engine),
+//! End-to-end serving driver: serve batched generation requests
+//! through the Rust coordinator (router → continuous batcher →
+//! mixed prefill/decode scheduler → recurrent-state manager → engine)
 //! and report latency/throughput. Python is not involved.
 //!
-//! Prereq: `make artifacts`
-//! Run:    `cargo run --release --example serve_mamba [-- --requests 32]`
+//! ## The continuous-batching tick loop
+//!
+//! Every scheduler tick is **one mixed engine invocation**: all running
+//! sequences advance by one decode token, and waiting prompts
+//! contribute *prefill chunks*, under a per-tick token budget. Two
+//! knobs shape the loop:
+//!
+//! * `--chunk-tokens N` — max prompt tokens per chunk row (`0` =
+//!   monolithic whole-prompt prefill). Small chunks bound how much
+//!   prefill work rides in any one tick, so a long prompt cannot stall
+//!   decoding sequences; the prompt's partial state is carried in the
+//!   state manager across as many ticks as it needs.
+//! * `--token-budget N` — total per-tick token cost (each decode row
+//!   costs 1, each chunk its length). This caps tick latency and
+//!   therefore the inter-token gap decoding requests observe.
+//!
+//! ## Modes
+//!
+//! * `--mock` — serve on the deterministic in-process mock engine
+//!   (no artifacts needed); demonstrates chunked prefill with a mixed
+//!   long/short-prompt workload.
+//! * default — load the AOT artifacts and serve via PJRT.
+//!   Prereq: `make artifacts` (and a real `xla` binding crate — the
+//!   vendored stub fails at load with a pointer here).
+//!
+//! Run: `cargo run --release --example serve_mamba -- --mock [--requests 32]`
 
 use std::time::Instant;
 
-use mambalaya::coordinator::{BatchPolicy, Server, WorkloadGen};
-use mambalaya::runtime::{Executor, Golden, MambaEngine, Manifest};
+use mambalaya::coordinator::{BatchPolicy, Request, Server, WorkloadGen};
+use mambalaya::runtime::{Executor, Golden, MambaEngine, Manifest, MockEngine};
 use mambalaya::util::Args;
+
+/// Serve `reqs` through a one-worker server and print the outcome.
+fn drive<E, F>(factory: F, policy: BatchPolicy, reqs: Vec<Request>) -> anyhow::Result<()>
+where
+    E: Executor,
+    F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+{
+    let n_requests = reqs.len();
+    let expected_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+    let t0 = Instant::now();
+    let mut server = Server::start(vec![factory], policy);
+    let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let mut total_tokens = 0usize;
+    let mut worst_latency = 0f64;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        total_tokens += resp.tokens.len();
+        worst_latency = worst_latency.max(resp.total);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    for r in server.reports() {
+        println!("{r}");
+    }
+    server.shutdown();
+
+    println!(
+        "\nserved {n_requests} requests / {total_tokens} tokens in {wall:.2}s \
+         ({:.1} tok/s end-to-end, worst request {worst_latency:.3}s)",
+        total_tokens as f64 / wall
+    );
+    anyhow::ensure!(total_tokens == expected_tokens, "token count mismatch");
+    println!("serve_mamba OK");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let dir = args.get_or("artifacts", "artifacts").to_string();
     let n_requests = args.get_u64("requests", 24) as usize;
+    let policy = BatchPolicy::from_args(&args);
 
+    if args.flag("mock") {
+        // Mixed traffic on the mock engine: mostly short prompts, with
+        // every fourth request a long prompt that spans many chunk
+        // ticks — decode keeps advancing throughout (watch
+        // max_tick_tokens vs the token budget in the report line).
+        let probe = MockEngine::new();
+        let vocab = probe.manifest().vocab;
+        println!(
+            "mock serving: chunk_tokens={} token_budget={}",
+            policy.chunk_tokens, policy.token_budget
+        );
+        let mut short = WorkloadGen::new(7, vocab, 6, 2, 24).with_prompt_range(2, 12);
+        let reqs: Vec<Request> = (0..n_requests)
+            .map(|i| {
+                let mut r = short.next_request();
+                if i % 4 == 3 {
+                    // A long prompt: 10+ chunks at the default size.
+                    r.prompt = (0..48).map(|x| (x + i as i32) % vocab as i32).collect();
+                }
+                r
+            })
+            .collect();
+        return drive(|| Ok(MockEngine::new()), policy, reqs);
+    }
+
+    let dir = args.get_or("artifacts", "artifacts").to_string();
     let manifest = Manifest::load(&dir)?;
     println!(
         "model {}: {} layers, E={}, D={}, N={}, vocab={}, prefill_len={}",
@@ -44,34 +127,11 @@ fn main() -> anyhow::Result<()> {
         println!("golden check: OK (platform {})", engine.platform());
     }
 
-    // Serve a mixed workload: some short generations, some long.
-    let mut gen = WorkloadGen::new(7, manifest.vocab, manifest.prefill_len, 2, 24);
-    let reqs: Vec<_> = (0..n_requests).map(|_| gen.next_request()).collect();
-    let expected_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
-
-    let policy = BatchPolicy::default();
-    let t0 = Instant::now();
-    let mut server = Server::start(vec![move || MambaEngine::load(&dir)], policy);
-    let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
-    let mut total_tokens = 0usize;
-    let mut worst_latency = 0f64;
-    for rx in rxs {
-        let resp = rx.recv()?;
-        total_tokens += resp.tokens.len();
-        worst_latency = worst_latency.max(resp.total);
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    for r in server.reports() {
-        println!("{r}");
-    }
-    server.shutdown();
-
-    println!(
-        "\nserved {n_requests} requests / {total_tokens} tokens in {wall:.2}s \
-         ({:.1} tok/s end-to-end, worst request {worst_latency:.3}s)",
-        total_tokens as f64 / wall
-    );
-    anyhow::ensure!(total_tokens == expected_tokens, "token count mismatch");
-    println!("serve_mamba OK");
-    Ok(())
+    // Serve a mixed workload: prompts up to 2× the compiled prefill
+    // length (the chunked scheduler handles any length), generations
+    // short and long.
+    let mut gen = WorkloadGen::new(7, manifest.vocab, manifest.prefill_len, 2, 24)
+        .with_prompt_range(1, 2 * manifest.prefill_len);
+    let reqs: Vec<Request> = (0..n_requests).map(|_| gen.next_request()).collect();
+    drive(move || MambaEngine::load(&dir), policy, reqs)
 }

@@ -1,141 +1,226 @@
-//! Dynamic batching policy: decides, each scheduler tick, whether to
-//! run a prefill batch (admitting waiting requests) or a decode step
-//! (advancing running sequences) — the classic continuous-batching
-//! trade-off, specialized to Mamba's fixed-size state (admission is
-//! never blocked by state growth, only by slot count).
+//! Continuous-batching policy with **chunked prefill**: every scheduler
+//! tick is one *mixed* engine invocation that advances all running
+//! (decoding) sequences by one token *and* admits prefill chunks from
+//! waiting prompts, under a per-tick token budget. Splitting prompts
+//! into fixed-size chunks bounds the work co-scheduled with decode, so
+//! a long prompt can no longer stall generation for entire ticks — the
+//! prefill/decode interference that all-or-nothing prefill batching
+//! suffers from (and that MARCA-style accelerators attack in hardware).
+//!
+//! Specialized to Mamba's fixed-size state: admission is never blocked
+//! by state growth, only by the slot count (`max_running`), and a
+//! sequence mid-prefill holds exactly one slot for its partial state.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
 
 /// Tunable policy knobs.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
-    /// Compiled prefill batch sizes (ascending).
-    pub prefill_sizes: Vec<usize>,
-    /// Compiled decode batch sizes (ascending).
-    pub decode_sizes: Vec<usize>,
-    /// Admit a partial prefill batch after this long.
-    pub max_prefill_wait: Duration,
-    /// Max concurrently running sequences (state slots).
+    /// Max prompt tokens admitted per chunk row. `0` means monolithic:
+    /// a prompt is admitted whole (still clipped by `token_budget`).
+    pub chunk_tokens: usize,
+    /// Per-tick token budget: each decode row costs 1, each prefill
+    /// chunk costs its length. Bounds the latency of one engine call.
+    pub token_budget: usize,
+    /// Max prefill-chunk rows per tick (caps the varlen batch width).
+    pub max_chunk_rows: usize,
+    /// Max sequences holding a state slot (running + mid-prefill).
     pub max_running: usize,
-    /// Prefer decode once at least this many sequences are running
-    /// (anti-starvation for in-flight requests).
+    /// Once at least this many sequences are running, ticks are pure
+    /// decode (anti-starvation for in-flight requests).
     pub decode_priority_threshold: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
         BatchPolicy {
-            prefill_sizes: vec![1, 2, 4],
-            decode_sizes: vec![1, 2, 4, 8],
-            max_prefill_wait: Duration::from_millis(4),
+            chunk_tokens: 4,
+            token_budget: 16,
+            max_chunk_rows: 4,
             max_running: 8,
             decode_priority_threshold: 8,
         }
     }
 }
 
+impl BatchPolicy {
+    /// Clamp degenerate knob values that could stall the scheduler
+    /// (zero budget / zero slots / a zero decode-priority threshold
+    /// would admit nothing forever).
+    pub fn normalized(mut self) -> BatchPolicy {
+        self.token_budget = self.token_budget.max(1);
+        self.max_chunk_rows = self.max_chunk_rows.max(1);
+        self.max_running = self.max_running.max(1);
+        self.decode_priority_threshold = self.decode_priority_threshold.max(1);
+        self
+    }
+
+    /// Build a policy from CLI args (shared by `mambalaya serve` and
+    /// the `serve_mamba` example, so the knob names and defaults can't
+    /// drift): `--chunk-tokens --token-budget --max-chunk-rows
+    /// --max-running --decode-priority`.
+    pub fn from_args(args: &crate::util::Args) -> BatchPolicy {
+        let d = BatchPolicy::default();
+        BatchPolicy {
+            chunk_tokens: args.get_u64("chunk-tokens", d.chunk_tokens as u64) as usize,
+            token_budget: args.get_u64("token-budget", d.token_budget as u64) as usize,
+            max_chunk_rows: args.get_u64("max-chunk-rows", d.max_chunk_rows as u64) as usize,
+            max_running: args.get_u64("max-running", d.max_running as u64) as usize,
+            decode_priority_threshold: args
+                .get_u64("decode-priority", d.decode_priority_threshold as u64)
+                as usize,
+        }
+    }
+
+    /// Effective chunk cap for a prompt of `total` tokens.
+    fn chunk_cap(&self, total: usize) -> usize {
+        if self.chunk_tokens == 0 {
+            total
+        } else {
+            self.chunk_tokens
+        }
+    }
+}
+
+/// One prefill chunk scheduled for this tick.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// Sequence id.
+    pub id: u64,
+    /// Prompt offset this chunk starts at (== the sequence's cursor).
+    pub start: usize,
+    /// Tokens in this chunk (≥ 1).
+    pub len: usize,
+    /// True when this chunk completes the prompt (the scheduler samples
+    /// the first token from its logits).
+    pub last: bool,
+}
+
 /// What the scheduler should do next.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Action {
-    /// Admit these many waiting requests as one prefill batch of the
-    /// given compiled size (`admit ≤ size`).
-    Prefill { admit: usize, size: usize },
-    /// Run one decode step over all running sequences, padded to the
-    /// given compiled size.
-    Decode { size: usize },
+    /// One mixed engine invocation: advance the first `decode` running
+    /// sequences by one token and run these prefill chunks.
+    Mixed { chunks: Vec<ChunkPlan>, decode: usize },
     /// Nothing to do.
     Idle,
 }
 
-/// The batcher: tracks waiting counts and decides scheduling actions.
-/// (Queues of actual requests live in the scheduler; the batcher is a
-/// pure policy object, which keeps it unit-testable.)
+/// A waiting prompt and its prefill cursor.
+#[derive(Debug, Clone)]
+struct PrefillJob {
+    id: u64,
+    /// Total prompt tokens.
+    total: usize,
+    /// Tokens already prefilled (advanced by [`Batcher::commit`]).
+    pos: usize,
+}
+
+/// The batcher: tracks waiting prompts (FIFO) with per-sequence prefill
+/// cursors and decides the per-tick mixed batch. (Queues of actual
+/// requests live in the scheduler; the batcher is a pure policy object,
+/// which keeps it unit-testable.)
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    oldest_waiting: Option<Instant>,
-    waiting: VecDeque<u64>,
+    jobs: VecDeque<PrefillJob>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
-        Batcher { policy, oldest_waiting: None, waiting: VecDeque::new() }
+        Batcher { policy: policy.normalized(), jobs: VecDeque::new() }
     }
 
     pub fn policy(&self) -> &BatchPolicy {
         &self.policy
     }
 
-    pub fn enqueue(&mut self, id: u64) {
-        if self.waiting.is_empty() {
-            self.oldest_waiting = Some(Instant::now());
-        }
-        self.waiting.push_back(id);
+    /// Enqueue a prompt of `prompt_tokens` tokens for prefill.
+    pub fn enqueue(&mut self, id: u64, prompt_tokens: usize) {
+        self.jobs.push_back(PrefillJob { id, total: prompt_tokens, pos: 0 });
     }
 
+    /// Prompts not yet fully prefilled.
     pub fn waiting(&self) -> usize {
-        self.waiting.len()
+        self.jobs.len()
     }
 
-    /// Pop the ids admitted by a `Prefill` action.
-    pub fn admit(&mut self, n: usize) -> Vec<u64> {
-        let out: Vec<u64> = (0..n).filter_map(|_| self.waiting.pop_front()).collect();
-        if self.waiting.is_empty() {
-            self.oldest_waiting = None;
-        } else {
-            self.oldest_waiting = Some(Instant::now());
-        }
-        out
+    /// A sequence's prefill cursor (tests/metrics).
+    pub fn cursor(&self, id: u64) -> Option<usize> {
+        self.jobs.iter().find(|j| j.id == id).map(|j| j.pos)
     }
 
-    fn fit(sizes: &[usize], n: usize) -> Option<usize> {
-        sizes.iter().copied().filter(|&s| s >= n).min()
-    }
-
-    fn largest(sizes: &[usize]) -> usize {
-        sizes.iter().copied().max().unwrap_or(1)
+    /// Sequences that have started but not finished prefill (they hold
+    /// a state slot for their partial state).
+    pub fn mid_prefill(&self) -> usize {
+        self.jobs.iter().filter(|j| j.pos > 0).count()
     }
 
     /// Decide the next action given the number of running sequences.
-    pub fn next_action(&self, running: usize, now: Instant) -> Action {
+    ///
+    /// Invariants (property-tested): the total token cost (decode rows
+    /// + chunk lengths) never exceeds `token_budget`; chunks admit in
+    /// strict FIFO order (always a prefix of the waiting queue); at
+    /// most one chunk per sequence per tick; a fresh sequence is only
+    /// admitted when a state slot is free.
+    pub fn next_action(&self, running: usize) -> Action {
         let p = &self.policy;
-        let slots_free = p.max_running.saturating_sub(running);
-        let max_prefill = Self::largest(&p.prefill_sizes).min(slots_free);
-        let can_prefill = !self.waiting.is_empty() && max_prefill > 0;
+        let budget_total = p.token_budget;
+        let decode = running.min(budget_total);
+        let mut budget = budget_total - decode;
+        let mut slots_free =
+            p.max_running.saturating_sub(running + self.mid_prefill());
 
-        // Anti-starvation: with a full complement of running sequences,
-        // keep decoding.
-        if running >= p.decode_priority_threshold && running > 0 {
-            return Action::Decode { size: Self::fit(&p.decode_sizes, running).unwrap_or(running) };
-        }
-
-        if can_prefill {
-            let waited = self
-                .oldest_waiting
-                .map(|t| now.duration_since(t))
-                .unwrap_or(Duration::ZERO);
-            let enough_for_full_batch = self.waiting.len() >= max_prefill;
-            // Admit when a full batch is ready, when requests have aged,
-            // or when nothing is running anyway.
-            if enough_for_full_batch || waited >= p.max_prefill_wait || running == 0 {
-                let admit = self.waiting.len().min(max_prefill);
-                if let Some(size) = Self::fit(&p.prefill_sizes, admit) {
-                    return Action::Prefill { admit, size };
+        let mut chunks = Vec::new();
+        if running < p.decode_priority_threshold {
+            for job in self.jobs.iter() {
+                if chunks.len() >= p.max_chunk_rows || budget == 0 {
+                    break;
+                }
+                // Strict FIFO: if the head job can't start, nothing
+                // behind it may overtake.
+                if job.pos == 0 && slots_free == 0 {
+                    break;
+                }
+                let len = (job.total - job.pos).min(p.chunk_cap(job.total)).min(budget);
+                if len == 0 {
+                    break;
+                }
+                chunks.push(ChunkPlan {
+                    id: job.id,
+                    start: job.pos,
+                    len,
+                    last: job.pos + len == job.total,
+                });
+                budget -= len;
+                if job.pos == 0 {
+                    slots_free -= 1;
                 }
             }
         }
 
-        if running > 0 {
-            if let Some(size) = Self::fit(&p.decode_sizes, running) {
-                return Action::Decode { size };
-            }
-            // More running sequences than the largest compiled batch:
-            // decode in chunks of the largest size.
-            return Action::Decode { size: Self::largest(&p.decode_sizes) };
+        if chunks.is_empty() && decode == 0 {
+            Action::Idle
+        } else {
+            Action::Mixed { chunks, decode }
         }
+    }
 
-        Action::Idle
+    /// Record that the chunks of an executed action ran: advance each
+    /// sequence's prefill cursor and retire completed jobs. Call after
+    /// the engine invocation succeeds (fail-stop keeps cursors honest).
+    pub fn commit(&mut self, chunks: &[ChunkPlan]) {
+        for ch in chunks {
+            let job = self
+                .jobs
+                .iter_mut()
+                .find(|j| j.id == ch.id)
+                .expect("committed chunk for unknown job");
+            assert_eq!(job.pos, ch.start, "chunk start != cursor for seq {}", ch.id);
+            job.pos += ch.len;
+            assert!(job.pos <= job.total, "cursor past prompt end for seq {}", ch.id);
+        }
+        self.jobs.retain(|j| j.pos < j.total);
     }
 }
 
@@ -145,72 +230,177 @@ mod tests {
 
     fn batcher() -> Batcher {
         Batcher::new(BatchPolicy {
-            prefill_sizes: vec![1, 2, 4],
-            decode_sizes: vec![1, 2, 4, 8],
-            max_prefill_wait: Duration::from_millis(2),
+            chunk_tokens: 4,
+            token_budget: 16,
+            max_chunk_rows: 4,
             max_running: 8,
             decode_priority_threshold: 6,
         })
     }
 
+    fn chunks_of(a: &Action) -> Vec<ChunkPlan> {
+        match a {
+            Action::Mixed { chunks, .. } => chunks.clone(),
+            Action::Idle => Vec::new(),
+        }
+    }
+
     #[test]
     fn idle_when_empty() {
         let b = batcher();
-        assert_eq!(b.next_action(0, Instant::now()), Action::Idle);
+        assert_eq!(b.next_action(0), Action::Idle);
     }
 
     #[test]
-    fn immediate_prefill_when_nothing_running() {
+    fn short_prompt_admits_whole_as_one_chunk() {
         let mut b = batcher();
-        b.enqueue(1);
-        assert_eq!(b.next_action(0, Instant::now()), Action::Prefill { admit: 1, size: 1 });
+        b.enqueue(1, 3);
+        assert_eq!(
+            b.next_action(0),
+            Action::Mixed {
+                chunks: vec![ChunkPlan { id: 1, start: 0, len: 3, last: true }],
+                decode: 0
+            }
+        );
     }
 
     #[test]
-    fn full_batch_admits_at_compiled_size() {
+    fn long_prompt_is_chunked_across_ticks() {
         let mut b = batcher();
-        for i in 0..5 {
-            b.enqueue(i);
+        b.enqueue(1, 10);
+        let a1 = chunks_of(&b.next_action(0));
+        assert_eq!(a1, vec![ChunkPlan { id: 1, start: 0, len: 4, last: false }]);
+        b.commit(&a1);
+        assert_eq!(b.cursor(1), Some(4));
+        assert_eq!(b.mid_prefill(), 1);
+        let a2 = chunks_of(&b.next_action(0));
+        assert_eq!(a2, vec![ChunkPlan { id: 1, start: 4, len: 4, last: false }]);
+        b.commit(&a2);
+        let a3 = chunks_of(&b.next_action(0));
+        assert_eq!(a3, vec![ChunkPlan { id: 1, start: 8, len: 2, last: true }]);
+        b.commit(&a3);
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn decode_rides_along_and_budget_caps_chunks() {
+        let mut b = batcher();
+        b.enqueue(1, 100);
+        b.enqueue(2, 100);
+        // 5 running → decode 5 costs 5, leaving 11 tokens: two chunks of
+        // 4 fit (FIFO: seq 1 then seq 2), then max_chunk_rows/budget
+        // stop further admission at 3 remaining... chunk cap is 4, so
+        // the third chunk would need another job — there is none.
+        match b.next_action(5) {
+            Action::Mixed { chunks, decode } => {
+                assert_eq!(decode, 5);
+                assert_eq!(chunks.len(), 2);
+                assert_eq!(chunks[0], ChunkPlan { id: 1, start: 0, len: 4, last: false });
+                assert_eq!(chunks[1], ChunkPlan { id: 2, start: 0, len: 4, last: false });
+                let cost: usize = decode + chunks.iter().map(|c| c.len).sum::<usize>();
+                assert!(cost <= b.policy().token_budget);
+            }
+            a => panic!("unexpected action {a:?}"),
         }
-        // 5 waiting, cap 4 → admit 4 as a b=4 prefill.
-        assert_eq!(b.next_action(1, Instant::now()), Action::Prefill { admit: 4, size: 4 });
-        assert_eq!(b.admit(4), vec![0, 1, 2, 3]);
-        assert_eq!(b.waiting(), 1);
     }
 
     #[test]
-    fn partial_batch_waits_then_ages_out() {
+    fn budget_clips_final_chunk() {
+        let mut b = Batcher::new(BatchPolicy {
+            chunk_tokens: 8,
+            token_budget: 10,
+            ..BatchPolicy::default()
+        });
+        b.enqueue(1, 20);
+        // 4 running → budget left 6 < chunk 8: the chunk is clipped.
+        let chunks = chunks_of(&b.next_action(4));
+        assert_eq!(chunks, vec![ChunkPlan { id: 1, start: 0, len: 6, last: false }]);
+    }
+
+    #[test]
+    fn decode_priority_threshold_blocks_admission() {
         let mut b = batcher();
-        b.enqueue(1);
-        // One waiting, one running, not aged → decode wins.
-        let now = Instant::now();
-        assert_eq!(b.next_action(1, now), Action::Decode { size: 1 });
-        // After the wait expires, the partial prefill is admitted.
-        let later = now + Duration::from_millis(50);
-        assert_eq!(b.next_action(1, later), Action::Prefill { admit: 1, size: 1 });
+        b.enqueue(1, 4);
+        assert_eq!(b.next_action(6), Action::Mixed { chunks: vec![], decode: 6 });
     }
 
     #[test]
-    fn decode_priority_when_saturated() {
+    fn slot_limit_blocks_fresh_sequences_fifo() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_running: 2,
+            decode_priority_threshold: 8,
+            ..BatchPolicy::default()
+        });
+        b.enqueue(1, 4);
+        b.enqueue(2, 4);
+        // 2 running fill both slots: no admission, decode only.
+        assert_eq!(b.next_action(2), Action::Mixed { chunks: vec![], decode: 2 });
+        // One slot free: only the head job starts (strict FIFO).
+        let chunks = chunks_of(&b.next_action(1));
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].id, 1);
+    }
+
+    #[test]
+    fn mid_prefill_sequences_keep_their_slot() {
+        let mut b = Batcher::new(BatchPolicy {
+            chunk_tokens: 2,
+            token_budget: 2,
+            max_running: 1,
+            ..BatchPolicy::default()
+        });
+        b.enqueue(1, 6);
+        b.enqueue(2, 2);
+        let a = chunks_of(&b.next_action(0));
+        assert_eq!(a, vec![ChunkPlan { id: 1, start: 0, len: 2, last: false }]);
+        b.commit(&a);
+        // Seq 1 mid-prefill holds the only slot; seq 2 cannot start,
+        // and seq 1 keeps progressing.
+        let a2 = chunks_of(&b.next_action(0));
+        assert_eq!(a2, vec![ChunkPlan { id: 1, start: 2, len: 2, last: false }]);
+    }
+
+    #[test]
+    fn monolithic_mode_admits_whole_prompt() {
+        let mut b = Batcher::new(BatchPolicy {
+            chunk_tokens: 0,
+            token_budget: 1 << 20,
+            ..BatchPolicy::default()
+        });
+        b.enqueue(1, 999);
+        let chunks = chunks_of(&b.next_action(0));
+        assert_eq!(chunks, vec![ChunkPlan { id: 1, start: 0, len: 999, last: true }]);
+    }
+
+    #[test]
+    fn degenerate_policy_is_normalized_and_makes_progress() {
+        // decode_priority_threshold = 0 (or zero budget/slots) must not
+        // livelock the scheduler: normalized() clamps all of them.
+        let mut b = Batcher::new(BatchPolicy {
+            chunk_tokens: 2,
+            token_budget: 0,
+            max_chunk_rows: 0,
+            max_running: 0,
+            decode_priority_threshold: 0,
+        });
+        assert_eq!(b.policy().token_budget, 1);
+        assert_eq!(b.policy().max_chunk_rows, 1);
+        assert_eq!(b.policy().max_running, 1);
+        assert_eq!(b.policy().decode_priority_threshold, 1);
+        b.enqueue(1, 4);
+        // Nothing running → the head job still gets a (budget-clipped)
+        // chunk, so the queue drains.
+        let chunks = chunks_of(&b.next_action(0));
+        assert_eq!(chunks, vec![ChunkPlan { id: 1, start: 0, len: 1, last: false }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk start != cursor")]
+    fn commit_rejects_stale_chunks() {
         let mut b = batcher();
-        for i in 0..4 {
-            b.enqueue(i);
-        }
-        assert_eq!(b.next_action(6, Instant::now()), Action::Decode { size: 8 });
-    }
-
-    #[test]
-    fn padding_picks_next_compiled_size() {
-        let b = batcher();
-        assert_eq!(b.next_action(3, Instant::now()), Action::Decode { size: 4 });
-        assert_eq!(b.next_action(5, Instant::now()), Action::Decode { size: 8 });
-    }
-
-    #[test]
-    fn slot_limit_blocks_prefill() {
-        let mut b = batcher();
-        b.enqueue(1);
-        // max_running = 8, all slots taken → decode only.
-        assert_eq!(b.next_action(8, Instant::now()), Action::Decode { size: 8 });
+        b.enqueue(1, 10);
+        let a = chunks_of(&b.next_action(0));
+        b.commit(&a);
+        b.commit(&a); // same chunks again: cursor already advanced
     }
 }

@@ -1,4 +1,7 @@
-//! Serving metrics: latency percentiles, throughput, batch occupancy.
+//! Serving metrics: latency percentiles, throughput, batch occupancy,
+//! and continuous-batching health (chunk counts, per-tick token cost,
+//! prefill queue depth). All counters are monotone non-decreasing —
+//! tests rely on that to detect double-counting.
 
 use std::time::Instant;
 
@@ -8,11 +11,26 @@ pub struct Metrics {
     started: Instant,
     pub requests_completed: u64,
     pub tokens_generated: u64,
+    /// Ticks that admitted at least one prefill chunk.
     pub prefill_batches: u64,
+    /// Prefill chunk rows admitted (≥ `prefill_batches`).
+    pub prefill_chunks: u64,
+    /// Prompt tokens prefilled.
     pub prefill_tokens: u64,
     pub decode_steps: u64,
-    /// Sum of (active / padded) per decode step, for mean occupancy.
+    /// Mixed engine invocations.
+    pub ticks: u64,
+    /// Largest token cost (chunk tokens + decode rows) of any tick —
+    /// bounded by the policy's `token_budget`, which is what keeps long
+    /// prompts from stalling decode for whole ticks.
+    pub max_tick_tokens: u64,
+    /// Sum of (tick tokens / token budget) per tick, for mean budget
+    /// utilization. (Engine-level padding to compiled batch sizes
+    /// happens inside `step_mixed` and is not visible here.)
     occupancy_sum: f64,
+    /// Prefill queue depth sampled each tick.
+    queue_depth_sum: f64,
+    queue_samples: u64,
     ttft: Vec<f64>,
     total: Vec<f64>,
 }
@@ -24,24 +42,42 @@ impl Metrics {
             requests_completed: 0,
             tokens_generated: 0,
             prefill_batches: 0,
+            prefill_chunks: 0,
             prefill_tokens: 0,
             decode_steps: 0,
+            ticks: 0,
+            max_tick_tokens: 0,
             occupancy_sum: 0.0,
+            queue_depth_sum: 0.0,
+            queue_samples: 0,
             ttft: Vec::new(),
             total: Vec::new(),
         }
     }
 
-    pub fn record_prefill(&mut self, admitted: usize, tokens: usize) {
+    /// Record the prefill side of a tick: `chunks` chunk rows totalling
+    /// `tokens` prompt tokens.
+    pub fn record_prefill(&mut self, chunks: usize, tokens: usize) {
         self.prefill_batches += 1;
+        self.prefill_chunks += chunks as u64;
         self.prefill_tokens += tokens as u64;
-        let _ = admitted;
     }
 
-    pub fn record_decode(&mut self, active: usize, padded: usize) {
+    /// Record sampled tokens: one call per tick that ran decode rows
+    /// (`active` = rows), plus one per prefill-completing chunk.
+    pub fn record_decode(&mut self, active: usize) {
         self.decode_steps += 1;
         self.tokens_generated += active as u64;
-        self.occupancy_sum += active as f64 / padded.max(1) as f64;
+    }
+
+    /// Record per-tick health: total token cost vs the policy budget,
+    /// and the prefill queue depth.
+    pub fn record_tick(&mut self, tick_tokens: usize, token_budget: usize, queue_depth: usize) {
+        self.ticks += 1;
+        self.max_tick_tokens = self.max_tick_tokens.max(tick_tokens as u64);
+        self.occupancy_sum += tick_tokens as f64 / token_budget.max(1) as f64;
+        self.queue_depth_sum += queue_depth as f64;
+        self.queue_samples += 1;
     }
 
     pub fn record_completion(&mut self, ttft: f64, total: f64) {
@@ -58,6 +94,18 @@ impl Metrics {
         sorted[idx.min(sorted.len() - 1)]
     }
 
+    /// TTFT percentile over completed requests (`p` in [0, 1]).
+    pub fn ttft_pct(&self, p: f64) -> f64 {
+        let mut v = self.ttft.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self::pct(&v, p)
+    }
+
+    /// Completed requests with a recorded TTFT (monotone).
+    pub fn ttft_count(&self) -> usize {
+        self.ttft.len()
+    }
+
     /// Snapshot as a human-readable report.
     pub fn report(&self) -> String {
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -66,14 +114,19 @@ impl Metrics {
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
         total.sort_by(|a, b| a.partial_cmp(b).unwrap());
         format!(
-            "requests={} tokens={} ({:.1} tok/s) prefill_batches={} decode_steps={} \
-             occupancy={:.2} ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
+            "requests={} tokens={} ({:.1} tok/s) chunks={} prefill_tokens={} decode_steps={} \
+             ticks={} max_tick_tokens={} queue={:.1} budget_use={:.2} \
+             ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_generated as f64 / elapsed,
-            self.prefill_batches,
+            self.prefill_chunks,
+            self.prefill_tokens,
             self.decode_steps,
-            self.occupancy_sum / self.decode_steps.max(1) as f64,
+            self.ticks,
+            self.max_tick_tokens,
+            self.mean_queue_depth(),
+            self.mean_occupancy(),
             Self::pct(&ttft, 0.5) * 1e3,
             Self::pct(&ttft, 0.99) * 1e3,
             Self::pct(&total, 0.5) * 1e3,
@@ -81,9 +134,14 @@ impl Metrics {
         )
     }
 
-    /// Mean decode-batch occupancy (active/padded).
+    /// Mean fraction of the per-tick token budget actually used.
     pub fn mean_occupancy(&self) -> f64 {
-        self.occupancy_sum / self.decode_steps.max(1) as f64
+        self.occupancy_sum / self.ticks.max(1) as f64
+    }
+
+    /// Mean prefill queue depth over tick samples.
+    pub fn mean_queue_depth(&self) -> f64 {
+        self.queue_depth_sum / self.queue_samples.max(1) as f64
     }
 
     pub fn throughput(&self) -> f64 {
@@ -105,14 +163,24 @@ mod tests {
     fn counters_accumulate() {
         let mut m = Metrics::new();
         m.record_prefill(2, 64);
-        m.record_decode(2, 4);
-        m.record_decode(4, 4);
+        m.record_decode(2);
+        m.record_decode(4);
+        m.record_tick(66, 88, 3);
+        m.record_tick(5, 10, 1);
         m.record_completion(0.001, 0.010);
         assert_eq!(m.tokens_generated, 6);
         assert_eq!(m.decode_steps, 2);
-        assert!((m.mean_occupancy() - 0.75).abs() < 1e-9);
+        assert_eq!(m.prefill_chunks, 2);
+        assert_eq!(m.prefill_tokens, 64);
+        assert_eq!(m.ticks, 2);
+        assert_eq!(m.max_tick_tokens, 66);
+        assert!((m.mean_queue_depth() - 2.0).abs() < 1e-9);
+        // (66/88 + 5/10) / 2 ticks
+        assert!((m.mean_occupancy() - 0.625).abs() < 1e-9);
+        assert_eq!(m.ttft_count(), 1);
         let r = m.report();
         assert!(r.contains("requests=1"));
+        assert!(r.contains("max_tick_tokens=66"));
     }
 
     #[test]
@@ -122,5 +190,9 @@ mod tests {
         assert!((50.0..=51.0).contains(&p50), "p50 = {p50}");
         assert_eq!(Metrics::pct(&v, 0.99), 99.0);
         assert_eq!(Metrics::pct(&[], 0.5), 0.0);
+        let mut m = Metrics::new();
+        m.record_completion(0.002, 0.01);
+        m.record_completion(0.004, 0.02);
+        assert!(m.ttft_pct(0.99) >= m.ttft_pct(0.0));
     }
 }

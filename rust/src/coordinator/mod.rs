@@ -1,7 +1,8 @@
-//! The L3 serving coordinator: request router, dynamic batcher,
-//! prefill/decode scheduler, and the recurrent-state manager (Mamba's
-//! fixed-size analogue of a KV-cache manager). Python never runs here —
-//! the engine executes AOT-compiled HLO artifacts via PJRT.
+//! The L3 serving coordinator: request router, continuous batcher with
+//! chunked prefill, mixed prefill/decode scheduler, and the
+//! recurrent-state manager (Mamba's fixed-size analogue of a KV-cache
+//! manager). Python never runs here — the engine executes AOT-compiled
+//! HLO artifacts via PJRT.
 
 pub mod batcher;
 pub mod metrics;
@@ -10,7 +11,7 @@ pub mod scheduler;
 pub mod server;
 pub mod state;
 
-pub use batcher::{Action, Batcher, BatchPolicy};
+pub use batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 pub use metrics::Metrics;
 pub use request::{Request, Response, WorkloadGen};
 pub use scheduler::Scheduler;

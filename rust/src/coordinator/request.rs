@@ -32,11 +32,21 @@ pub struct InFlight {
     pub submitted: Instant,
     pub first_token: Option<Instant>,
     pub generated: Vec<i32>,
+    /// Prompt tokens already prefilled (the chunked-prefill cursor);
+    /// the request starts generating once this reaches the prompt
+    /// length. Mirrors the batcher's per-job cursor.
+    pub prefill_pos: usize,
 }
 
 impl InFlight {
     pub fn new(req: Request) -> InFlight {
-        InFlight { req, submitted: Instant::now(), first_token: None, generated: Vec::new() }
+        InFlight {
+            req,
+            submitted: Instant::now(),
+            first_token: None,
+            generated: Vec::new(),
+            prefill_pos: 0,
+        }
     }
 
     pub fn done(&self) -> bool {
@@ -57,14 +67,17 @@ impl InFlight {
     }
 }
 
-/// Synthetic workload generator: prompts of the compiled prefill length
-/// with scenario-shaped generation lengths (mirrors paper Figure 12's
-/// context:generation ratios at serving scale).
+/// Synthetic workload generator: prompts with scenario-shaped prompt
+/// and generation lengths (mirrors paper Figure 12's context:generation
+/// ratios at serving scale). Defaults to fixed-length prompts of
+/// `prompt_len`; [`WorkloadGen::with_prompt_range`] draws varied prompt
+/// lengths for chunked-prefill workloads.
 #[derive(Debug)]
 pub struct WorkloadGen {
     rng: XorShift,
     vocab: u64,
-    prompt_len: usize,
+    prompt_lo: usize,
+    prompt_hi: usize,
     gen_lo: usize,
     gen_hi: usize,
     next_id: u64,
@@ -75,18 +88,26 @@ impl WorkloadGen {
         WorkloadGen {
             rng: XorShift::new(seed),
             vocab: vocab as u64,
-            prompt_len,
+            prompt_lo: prompt_len,
+            prompt_hi: prompt_len,
             gen_lo,
             gen_hi: gen_hi.max(gen_lo),
             next_id: 0,
         }
     }
 
+    /// Draw prompt lengths uniformly in `[lo, hi]` (lo ≥ 1).
+    pub fn with_prompt_range(mut self, lo: usize, hi: usize) -> Self {
+        self.prompt_lo = lo.max(1);
+        self.prompt_hi = hi.max(self.prompt_lo);
+        self
+    }
+
     pub fn next_request(&mut self) -> Request {
         let id = self.next_id;
         self.next_id += 1;
-        let prompt =
-            (0..self.prompt_len).map(|_| self.rng.below(self.vocab) as i32).collect();
+        let plen = self.rng.range(self.prompt_lo as u64, self.prompt_hi as u64) as usize;
+        let prompt = (0..plen).map(|_| self.rng.below(self.vocab) as i32).collect();
         let max_new_tokens = self.rng.range(self.gen_lo as u64, self.gen_hi as u64) as usize;
         Request { id, prompt, max_new_tokens }
     }
@@ -109,6 +130,18 @@ mod tests {
             assert!(a.prompt.iter().all(|&t| (0..17).contains(&t)));
             assert!((2..=6).contains(&a.max_new_tokens));
         }
+    }
+
+    #[test]
+    fn prompt_range_draws_varied_lengths() {
+        let mut g = WorkloadGen::new(6, 17, 8, 1, 1).with_prompt_range(2, 31);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            let r = g.next_request();
+            assert!((2..=31).contains(&r.prompt.len()));
+            seen.insert(r.prompt.len());
+        }
+        assert!(seen.len() > 5, "lengths barely vary: {seen:?}");
     }
 
     #[test]

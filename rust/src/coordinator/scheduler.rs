@@ -1,8 +1,14 @@
-//! The serving scheduler: drives prefill/decode batches over an
-//! [`Executor`], carrying per-sequence recurrent state between steps.
+//! The serving scheduler: drives **continuous batching with chunked
+//! prefill** over an [`Executor`], carrying per-sequence recurrent
+//! state between steps.
 //!
-//! One `tick()` = one engine invocation (a prefill batch or a decode
-//! step), chosen by the [`Batcher`] policy. Greedy (argmax) sampling.
+//! One `tick()` = one *mixed* engine invocation ([`Action::Mixed`],
+//! chosen by the [`Batcher`] policy): every running sequence advances
+//! one decode token, and waiting prompts contribute prefill chunks up
+//! to the per-tick token budget. A sequence's prompt may span many
+//! ticks before its first sampled token; its partial prefill state
+//! lives in the [`StateManager`] between chunks. Greedy (argmax)
+//! sampling.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -11,7 +17,7 @@ use anyhow::Result;
 
 use crate::runtime::engine::{argmax_rows, Executor};
 
-use super::batcher::{Action, Batcher, BatchPolicy};
+use super::batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
 use super::state::StateManager;
@@ -22,10 +28,14 @@ pub struct Scheduler<E: Executor> {
     engine: E,
     batcher: Batcher,
     states: StateManager,
-    /// Submitted, awaiting prefill.
+    /// Submitted, prompt not fully prefilled (prefill cursor < prompt
+    /// length; partial state in `states` once the first chunk ran).
     waiting: BTreeMap<u64, InFlight>,
     /// Prefilled, generating.
     running: BTreeMap<u64, InFlight>,
+    /// Round-robin cursor over running sequences, for ticks whose token
+    /// budget covers only part of the decode set.
+    decode_rr: usize,
     metrics: Metrics,
 }
 
@@ -43,26 +53,33 @@ impl<E: Executor> Scheduler<E> {
             states,
             waiting: BTreeMap::new(),
             running: BTreeMap::new(),
+            decode_rr: 0,
             metrics: Metrics::new(),
         }
     }
 
-    /// Accept a request (prompt must match the compiled prefill length).
+    /// Accept a request. Any non-empty prompt length is served — the
+    /// batcher splits it into chunks of at most `chunk_tokens`.
     pub fn submit(&mut self, req: Request) -> Result<()> {
-        let want = self.engine.manifest().prefill_len;
-        anyhow::ensure!(
-            req.prompt.len() == want,
-            "prompt length {} != compiled prefill length {want}",
-            req.prompt.len()
-        );
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
         anyhow::ensure!(req.max_new_tokens >= 1, "must generate at least one token");
-        self.batcher.enqueue(req.id);
+        self.batcher.enqueue(req.id, req.prompt.len());
         self.waiting.insert(req.id, InFlight::new(req));
         Ok(())
     }
 
     pub fn pending(&self) -> usize {
         self.waiting.len() + self.running.len()
+    }
+
+    /// Sequences currently generating.
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Sequences whose prompt is not fully prefilled yet.
+    pub fn waiting(&self) -> usize {
+        self.waiting.len()
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -76,17 +93,14 @@ impl<E: Executor> Scheduler<E> {
     /// One scheduling step. Returns completed responses (possibly
     /// empty). `Ok(false)` means there was nothing to do.
     pub fn tick(&mut self) -> Result<(Vec<Response>, bool)> {
-        let action = self.batcher.next_action(self.running.len(), Instant::now());
-        match action {
+        match self.batcher.next_action(self.running.len()) {
             Action::Idle => Ok((Vec::new(), false)),
-            Action::Prefill { admit, size } => {
-                let ids = self.batcher.admit(admit);
-                let done = self.do_prefill(&ids, size)?;
-                Ok((done, true))
-            }
-            Action::Decode { size } => {
-                let ids: Vec<u64> = self.running.keys().copied().take(size).collect();
-                let done = self.do_decode(&ids, size)?;
+            Action::Mixed { chunks, decode } => {
+                let decode_ids = self.pick_decode_rows(decode);
+                let done = self.do_mixed(&chunks, &decode_ids)?;
+                // Cursors advance only after the engine call succeeds
+                // (fail-stop keeps batcher and scheduler consistent).
+                self.batcher.commit(&chunks);
                 Ok((done, true))
             }
         }
@@ -100,7 +114,9 @@ impl<E: Executor> Scheduler<E> {
             let (done, progressed) = self.tick()?;
             out.extend(done);
             if !progressed && self.pending() > 0 {
-                // Only reachable when requests wait on the age-out timer.
+                // Unreachable with a normalized policy (budget ≥ 1 and
+                // at least one slot always lets the queue head move);
+                // kept as a guard against pathological custom policies.
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
         }
@@ -111,51 +127,93 @@ impl<E: Executor> Scheduler<E> {
         self.engine.manifest().vocab
     }
 
-    fn do_prefill(&mut self, ids: &[u64], size: usize) -> Result<Vec<Response>> {
-        assert!(!ids.is_empty() && ids.len() <= size);
-        let plen = self.engine.manifest().prefill_len;
-        let mut tokens = Vec::with_capacity(size * plen);
-        for b in 0..size {
-            let id = ids[b.min(ids.len() - 1)]; // pad by repeating last
-            tokens.extend_from_slice(&self.waiting[&id].req.prompt);
+    /// The next `n` running sequences in round-robin order, so a token
+    /// budget smaller than the running set still reaches every sequence
+    /// across consecutive ticks.
+    fn pick_decode_rows(&mut self, n: usize) -> Vec<u64> {
+        let keys: Vec<u64> = self.running.keys().copied().collect();
+        if keys.is_empty() || n == 0 {
+            return Vec::new();
         }
-        let out = self.engine.prefill(size, &tokens)?;
-        self.metrics.record_prefill(ids.len(), ids.len() * plen);
+        let n = n.min(keys.len());
+        let start = self.decode_rr % keys.len();
+        let ids = (0..n).map(|i| keys[(start + i) % keys.len()]).collect();
+        self.decode_rr = (start + n) % keys.len();
+        ids
+    }
+
+    /// One mixed engine invocation: `chunks` prefill-chunk rows followed
+    /// by one decode row per id in `decode_ids`.
+    fn do_mixed(&mut self, chunks: &[ChunkPlan], decode_ids: &[u64]) -> Result<Vec<Response>> {
+        let batch = chunks.len() + decode_ids.len();
+        assert!(batch > 0, "empty mixed action");
+        let mut lens = Vec::with_capacity(batch);
+        let mut tokens = Vec::new();
+        // Per-row state source: None = fresh (zero state).
+        let mut row_state: Vec<Option<u64>> = Vec::with_capacity(batch);
+        for ch in chunks {
+            let fl = self.waiting.get(&ch.id).expect("waiting entry for chunk");
+            assert_eq!(fl.prefill_pos, ch.start, "scheduler cursor mismatch for seq {}", ch.id);
+            tokens.extend_from_slice(&fl.req.prompt[ch.start..ch.start + ch.len]);
+            lens.push(ch.len);
+            row_state.push(if ch.start == 0 { None } else { Some(ch.id) });
+        }
+        for &id in decode_ids {
+            tokens.push(*self.running[&id].generated.last().expect("running seq has a token"));
+            lens.push(1);
+            row_state.push(Some(id));
+        }
+
+        let (conv, ssm) = self.states.gather_rows(&row_state);
+        let out = self.engine.step_mixed(&lens, &tokens, &conv, &ssm)?;
+
+        let chunk_tokens: usize = chunks.iter().map(|c| c.len).sum();
+        if !chunks.is_empty() {
+            self.metrics.record_prefill(chunks.len(), chunk_tokens);
+        }
+        if !decode_ids.is_empty() {
+            self.metrics.record_decode(decode_ids.len());
+        }
+        self.metrics.record_tick(
+            chunk_tokens + decode_ids.len(),
+            self.batcher.policy().token_budget,
+            self.waiting.len(),
+        );
+
         let next = argmax_rows(&out.logits, self.vocab());
         let now = Instant::now();
         let mut completed = Vec::new();
-        for (b, &id) in ids.iter().enumerate() {
-            let mut fl = self.waiting.remove(&id).expect("waiting entry");
-            fl.first_token = Some(now);
-            fl.generated.push(next[b]);
-            self.metrics.record_decode(1, 1); // the prefill-produced token
-            if fl.done() {
-                completed.push(fl.finish());
-                self.metrics
-                    .record_completion(completed.last().unwrap().ttft, completed.last().unwrap().total);
+
+        // Prefill-chunk rows: carry partial state, or sample the first
+        // token when the chunk completes the prompt.
+        for (b, ch) in chunks.iter().enumerate() {
+            if ch.last {
+                let mut fl = self.waiting.remove(&ch.id).expect("waiting entry");
+                fl.prefill_pos += ch.len;
+                fl.first_token = Some(now);
+                fl.generated.push(next[b]);
+                self.metrics.record_decode(1); // the prefill-produced token
+                if fl.done() {
+                    self.states.release(ch.id); // drop any partial state
+                    let resp = fl.finish();
+                    self.metrics.record_completion(resp.ttft, resp.total);
+                    completed.push(resp);
+                } else {
+                    self.states
+                        .install_from_batch(ch.id, batch, b, &out.conv_state, &out.ssm_state);
+                    self.running.insert(ch.id, fl);
+                }
             } else {
-                self.states.install_from_batch(id, size, b, &out.conv_state, &out.ssm_state);
-                self.running.insert(id, fl);
+                let fl = self.waiting.get_mut(&ch.id).expect("waiting entry");
+                fl.prefill_pos += ch.len;
+                self.states
+                    .install_from_batch(ch.id, batch, b, &out.conv_state, &out.ssm_state);
             }
         }
-        Ok(completed)
-    }
 
-    fn do_decode(&mut self, ids: &[u64], size: usize) -> Result<Vec<Response>> {
-        assert!(!ids.is_empty() && ids.len() <= size);
-        let tokens: Vec<i32> = (0..size)
-            .map(|b| {
-                let id = ids[b.min(ids.len() - 1)];
-                *self.running[&id].generated.last().expect("running seq has a token")
-            })
-            .collect();
-        let (conv, ssm) = self.states.gather(ids, size);
-        let out = self.engine.decode(size, &tokens, &conv, &ssm)?;
-        self.metrics.record_decode(ids.len(), size);
-        let next = argmax_rows(&out.logits, self.vocab());
-        self.states.scatter(ids, size, &out.conv_state, &out.ssm_state);
-        let mut completed = Vec::new();
-        for (b, &id) in ids.iter().enumerate() {
+        // Decode rows.
+        for (i, &id) in decode_ids.iter().enumerate() {
+            let b = chunks.len() + i;
             let fl = self.running.get_mut(&id).expect("running entry");
             fl.generated.push(next[b]);
             if fl.done() {
@@ -164,6 +222,8 @@ impl<E: Executor> Scheduler<E> {
                 let resp = fl.finish();
                 self.metrics.record_completion(resp.ttft, resp.total);
                 completed.push(resp);
+            } else {
+                self.states.install_from_batch(id, batch, b, &out.conv_state, &out.ssm_state);
             }
         }
         Ok(completed)
@@ -197,11 +257,12 @@ mod tests {
     #[test]
     fn batched_equals_solo_generation() {
         // The same request must generate the same tokens whether served
-        // alone or dynamically batched with others — state gather/
-        // scatter and padding must not leak across sequences.
+        // alone or continuously batched with others — state gather/
+        // scatter, chunk boundaries and mixed rows must not leak across
+        // sequences.
         let m = MockEngine::new();
         let (vocab, plen) = (m.manifest().vocab, m.manifest().prefill_len);
-        let mut gen = WorkloadGen::new(42, vocab, plen, 4, 4);
+        let mut gen = WorkloadGen::new(42, vocab, plen, 4, 4).with_prompt_range(1, 3 * plen);
         let reqs: Vec<_> = (0..5).map(|_| gen.next_request()).collect();
 
         // Solo runs.
@@ -230,7 +291,7 @@ mod tests {
         let mut s = sched();
         let m = s.manifest();
         let (vocab, plen) = (m.vocab, m.prefill_len);
-        let mut gen = WorkloadGen::new(7, vocab, plen, 1, 9);
+        let mut gen = WorkloadGen::new(7, vocab, plen, 1, 9).with_prompt_range(1, 2 * plen);
         let mut expected = 0usize;
         let mut responses = Vec::new();
         for wave in 0..4 {
@@ -255,9 +316,11 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_prompt_length() {
+    fn rejects_empty_prompt_and_zero_generation() {
         let mut s = sched();
-        let bad = Request { id: 1, prompt: vec![0; 3], max_new_tokens: 1 };
+        let bad = Request { id: 1, prompt: vec![], max_new_tokens: 1 };
+        assert!(s.submit(bad).is_err());
+        let bad = Request { id: 2, prompt: vec![0; 4], max_new_tokens: 0 };
         assert!(s.submit(bad).is_err());
     }
 
@@ -272,5 +335,63 @@ mod tests {
         s.run_until_drained().unwrap();
         assert_eq!(s.metrics().tokens_generated, 15);
         assert!(s.metrics().mean_occupancy() > 0.0);
+    }
+
+    #[test]
+    fn long_prompt_spans_many_ticks_before_first_token() {
+        // chunk_tokens=4, token_budget=8: a 32-token prompt needs 8
+        // chunk ticks before its first sampled token, and the prefill
+        // cursor advances monotonically through them.
+        let policy = BatchPolicy {
+            chunk_tokens: 4,
+            token_budget: 8,
+            ..BatchPolicy::default()
+        };
+        let mut s = Scheduler::new(MockEngine::new(), policy);
+        let prompt: Vec<i32> = (0..32).map(|x| x % 17).collect();
+        s.submit(Request { id: 9, prompt, max_new_tokens: 2 }).unwrap();
+        let mut prefill_ticks = 0;
+        while s.metrics().requests_completed == 0 {
+            let before = s.metrics().prefill_tokens;
+            s.tick().unwrap();
+            if s.metrics().prefill_tokens > before {
+                prefill_ticks += 1;
+            }
+        }
+        assert_eq!(prefill_ticks, 8);
+        assert_eq!(s.metrics().prefill_tokens, 32);
+        assert_eq!(s.metrics().max_tick_tokens, 4);
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_with_decode() {
+        // While a long prompt is mid-prefill, already-running sequences
+        // keep decoding every tick — no full-tick stalls.
+        let policy = BatchPolicy {
+            chunk_tokens: 4,
+            token_budget: 8,
+            ..BatchPolicy::default()
+        };
+        let m = MockEngine::new();
+        let vocab = m.manifest().vocab;
+        let mut s = Scheduler::new(m, policy);
+        // A short prompt that finishes prefill immediately and then
+        // decodes for a long time.
+        s.submit(Request { id: 1, prompt: vec![3, 1, 4], max_new_tokens: 40 }).unwrap();
+        s.tick().unwrap(); // seq 1 prefills and starts running
+        // Now a long prompt floods in.
+        let prompt: Vec<i32> = (0..48).map(|x| x % vocab as i32).collect();
+        s.submit(Request { id: 2, prompt, max_new_tokens: 1 }).unwrap();
+        // Every subsequent tick must advance seq 1 by exactly one token
+        // while seq 2's prefill progresses.
+        for _ in 0..12 {
+            let gen_before = s.metrics().tokens_generated;
+            let pre_before = s.metrics().prefill_tokens;
+            s.tick().unwrap();
+            assert!(s.metrics().tokens_generated > gen_before, "decode stalled");
+            if s.metrics().requests_completed == 0 {
+                assert!(s.metrics().prefill_tokens > pre_before, "prefill stalled");
+            }
+        }
     }
 }

@@ -1,6 +1,9 @@
 //! Threaded serving front-end: a request router feeding one or more
 //! scheduler workers over channels (std threads — the vendored crate
-//! set has no tokio; see DESIGN.md §4).
+//! set has no tokio; see DESIGN.md §4). Each worker runs the
+//! continuous-batching tick loop ([`Scheduler::tick`]): one mixed
+//! engine call per tick, decode rows plus prefill chunks under the
+//! policy's token budget.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;

@@ -8,6 +8,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::runtime::engine::copy_state_row;
+
 /// Per-sequence recurrent state, stored per-sequence-major
 /// (`[layers, per_layer]` contiguous).
 #[derive(Debug, Clone)]
@@ -96,6 +98,29 @@ impl StateManager {
         (conv, ssm)
     }
 
+    /// Gather the rows of a *mixed* batch: `Some(seq)` rows copy the
+    /// stored state (partial-prefill or decoding), `None` rows are
+    /// fresh sequences and stay zero. No padding — the varlen mixed
+    /// call takes exactly `rows.len()` rows.
+    ///
+    /// Panics if a `Some` sequence has no stored state.
+    pub fn gather_rows(&self, rows: &[Option<u64>]) -> (Vec<f32>, Vec<f32>) {
+        let batch = rows.len();
+        let (cp, sp) = (self.conv_per_layer, self.ssm_per_layer);
+        let mut conv = vec![0f32; self.n_layer * batch * cp];
+        let mut ssm = vec![0f32; self.n_layer * batch * sp];
+        for (b, row) in rows.iter().enumerate() {
+            if let Some(seq) = row {
+                let st =
+                    self.slots.get(seq).unwrap_or_else(|| panic!("missing state {seq}"));
+                // A slot is a [layers, per] buffer, i.e. batch-1 packed.
+                copy_state_row(self.n_layer, cp, &st.conv, 1, 0, &mut conv, batch, b);
+                copy_state_row(self.n_layer, sp, &st.ssm, 1, 0, &mut ssm, batch, b);
+            }
+        }
+        (conv, ssm)
+    }
+
     /// Scatter a decode step's packed outputs back into the slots of
     /// `seqs` (ignoring padded rows).
     pub fn scatter(&mut self, seqs: &[u64], batch: usize, conv_batch: &[f32], ssm_batch: &[f32]) {
@@ -153,6 +178,24 @@ mod tests {
             }
         }
         let _ = s;
+    }
+
+    #[test]
+    fn gather_rows_mixes_stored_and_fresh() {
+        let mut m = mgr();
+        let conv: Vec<f32> = (0..2 * 3).map(|x| x as f32 + 1.0).collect();
+        let ssm: Vec<f32> = (0..2 * 4).map(|x| x as f32 + 50.0).collect();
+        m.install_from_batch(7, 1, 0, &conv, &ssm);
+        let (c, s) = m.gather_rows(&[None, Some(7), None]);
+        assert_eq!(c.len(), 2 * 3 * 3);
+        assert_eq!(s.len(), 2 * 3 * 4);
+        for l in 0..2 {
+            // Fresh rows 0 and 2 are zero; row 1 carries seq 7's state.
+            assert!(c[(l * 3) * 3..(l * 3 + 1) * 3].iter().all(|&x| x == 0.0));
+            assert!(c[(l * 3 + 2) * 3..(l * 3 + 3) * 3].iter().all(|&x| x == 0.0));
+            assert_eq!(&c[(l * 3 + 1) * 3..(l * 3 + 2) * 3], &conv[l * 3..(l + 1) * 3]);
+            assert_eq!(&s[(l * 3 + 1) * 4..(l * 3 + 2) * 4], &ssm[l * 4..(l + 1) * 4]);
+        }
     }
 
     #[test]

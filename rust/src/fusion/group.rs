@@ -6,6 +6,7 @@
 //! the stationarity constraint the group imposes on the mapper.
 
 use std::collections::BTreeSet;
+use std::fmt;
 
 use crate::einsum::{Cascade, IterSpace};
 
@@ -132,9 +133,60 @@ impl FusionPlan {
     }
 }
 
+/// Canonical plan rendering (used by the `fusion_golden` snapshot
+/// test): deterministic line-per-group, so any change to stitching,
+/// class assignment or internal-tensor analysis shows up as a diff.
+impl fmt::Display for FusionPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "plan {} / {}: {} groups",
+            self.cascade_name,
+            self.variant_name,
+            self.groups.len()
+        )?;
+        for (i, g) in self.groups.iter().enumerate() {
+            let ids: Vec<String> = g.einsums.iter().map(|x| x.to_string()).collect();
+            let classes: Vec<String> =
+                g.classes_used().iter().map(|c| c.to_string()).collect();
+            writeln!(
+                f,
+                "  group {i}: [{}] stationary {} classes {{{}}} internal [{}]{}",
+                ids.join(","),
+                g.stationary,
+                classes.join(","),
+                g.internal_tensors.join(","),
+                if g.rd_bridged { " (RD-bridged)" } else { "" }
+            )?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn plan_display_is_deterministic_and_complete() {
+        let plan = FusionPlan {
+            cascade_name: "c".into(),
+            variant_name: "v".into(),
+            groups: vec![FusionGroup {
+                einsums: vec![1, 2],
+                joins: vec![],
+                stationary: IterSpace::empty(),
+                internal_tensors: vec!["Z".into()],
+                rd_bridged: true,
+            }],
+        };
+        let a = plan.to_string();
+        assert_eq!(a, plan.to_string());
+        assert!(a.contains("plan c / v: 1 groups"));
+        assert!(a.contains("[1,2]"));
+        assert!(a.contains("internal [Z]"));
+        assert!(a.contains("(RD-bridged)"));
+    }
 
     #[test]
     fn plan_queries() {

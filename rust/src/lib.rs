@@ -14,10 +14,21 @@
 //! * [`arch`] / [`model`] / [`traffic`] / [`roofline`] / [`workload`] —
 //!   the analytical accelerator substrate (Timeloop substitute);
 //! * [`report`] — regenerates every paper table and figure;
-//! * [`runtime`] / [`coordinator`] — the PJRT serving stack (python
-//!   never runs on the request path);
+//! * [`runtime`] / [`coordinator`] — the serving stack (python never
+//!   runs on the request path). The runtime's [`runtime::Executor`]
+//!   exposes prefill, decode, and the varlen `step_mixed` call; the
+//!   coordinator drives **continuous batching with chunked prefill**:
+//!   each [`coordinator::Scheduler`] tick is one mixed engine
+//!   invocation combining one decode token per running sequence with
+//!   prefill chunks from waiting prompts, bounded by the
+//!   [`coordinator::BatchPolicy`] knobs `chunk_tokens` (chunk size; 0 =
+//!   monolithic) and `token_budget` (per-tick token cost cap). Partial
+//!   prefill state lives in [`coordinator::StateManager`] between
+//!   chunks, so a prompt may span many ticks before its first sampled
+//!   token while decode never stalls;
 //! * [`util`] / [`prop`] / [`bench_util`] — offline-build stand-ins for
-//!   clap/serde/proptest/criterion.
+//!   clap/serde/proptest/criterion (plus vendored `anyhow`/`xla` shims
+//!   under `rust/vendor/`).
 //!
 //! `EXPERIMENTS.md` records paper-vs-measured for every experiment.
 

@@ -48,6 +48,8 @@ USAGE: mambalaya <SUBCOMMAND> [OPTIONS]
   reproduce --exp table1|table2|table3|fig2|fig9|fig10|fig12|fig13|fig14|fig15|all
             [--model 370m] [--seq N] [--batch B] [--out-dir results]
   serve     [--artifacts DIR] [--requests N] [--gen-lo N] [--gen-hi N] [--workers W]
+            [--chunk-tokens N] [--token-budget N]   (continuous-batching knobs;
+            chunk-tokens 0 = monolithic prefill)
 ";
 
 fn model(args: &Args) -> ModelConfig {
@@ -237,6 +239,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let gen_lo = args.get_u64("gen-lo", 4) as usize;
     let gen_hi = args.get_u64("gen-hi", 16) as usize;
     let workers = args.get_u64("workers", 1) as usize;
+    let policy = BatchPolicy::from_args(args);
 
     let manifest = match mambalaya::runtime::Manifest::load(&dir) {
         Ok(m) => m,
@@ -255,7 +258,7 @@ fn cmd_serve(args: &Args) -> i32 {
 
     if workers <= 1 {
         let dir2 = dir.clone();
-        match serve_all(move || MambaEngine::load(&dir2), BatchPolicy::default(), reqs) {
+        match serve_all(move || MambaEngine::load(&dir2), policy, reqs) {
             Ok((resps, reportline)) => {
                 let total_tokens: usize = resps.iter().map(|r| r.tokens.len()).sum();
                 println!("completed {} requests, {} tokens", resps.len(), total_tokens);
@@ -274,8 +277,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 move || MambaEngine::load(&d)
             })
             .collect();
-        let mut server =
-            mambalaya::coordinator::Server::start(factories, BatchPolicy::default());
+        let mut server = mambalaya::coordinator::Server::start(factories, policy);
         let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
         let mut total_tokens = 0;
         for rx in rxs {

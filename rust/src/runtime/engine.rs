@@ -39,6 +39,221 @@ pub trait Executor {
         conv_state: &[f32],
         ssm_state: &[f32],
     ) -> Result<StepOutput>;
+
+    /// One **mixed** invocation: a varlen batch where row `b` consumes
+    /// `lens[b]` tokens from the flat `tokens` buffer, starting from
+    /// the packed per-row states (`[layers, batch, …]`, layer-major;
+    /// zero rows mean "fresh sequence"). Returns the *last-position*
+    /// logits per row plus the final packed states — so a row with
+    /// `lens[b] == 1` is a decode step, a row with `lens[b] > 1` is a
+    /// prefill chunk, and the coordinator can schedule both in the same
+    /// engine call (continuous batching with chunked prefill).
+    ///
+    /// The default implementation decomposes the batch onto the
+    /// compiled `prefill`/`decode` entry points — single-token rows run
+    /// as padded compiled-decode batches, full-`prefill_len` rows with
+    /// zero state run through the compiled prefill, and everything else
+    /// (mid-prompt chunks) advances in lockstep through compiled decode
+    /// batches, one call per token *position* shared across rows. That
+    /// is correct for any engine; engines with a fused varlen kernel
+    /// override it (see [`super::mock::MockEngine`], whose override is
+    /// verified bit-identical to this default).
+    fn step_mixed(
+        &self,
+        lens: &[usize],
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<StepOutput> {
+        let m = self.manifest();
+        let batch = lens.len();
+        let (nl, vocab, plen) = (m.n_layer, m.vocab, m.prefill_len);
+        let cp = m.d_inner * (m.d_conv - 1);
+        let sp = m.d_inner * m.d_state;
+        anyhow::ensure!(batch > 0, "empty mixed batch");
+        anyhow::ensure!(lens.iter().all(|&l| l >= 1), "zero-length mixed row");
+        let total: usize = lens.iter().sum();
+        anyhow::ensure!(tokens.len() == total, "mixed tokens: got {}, want {total}", tokens.len());
+        anyhow::ensure!(
+            conv_state.len() == nl * batch * cp,
+            "mixed conv state: got {}, want {}",
+            conv_state.len(),
+            nl * batch * cp
+        );
+        anyhow::ensure!(
+            ssm_state.len() == nl * batch * sp,
+            "mixed ssm state: got {}, want {}",
+            ssm_state.len(),
+            nl * batch * sp
+        );
+
+        // Flat-token offset of each row.
+        let mut offs = Vec::with_capacity(batch);
+        let mut o = 0usize;
+        for &l in lens {
+            offs.push(o);
+            o += l;
+        }
+
+        let mut logits = vec![0f32; batch * vocab];
+        let mut conv_out = vec![0f32; nl * batch * cp];
+        let mut ssm_out = vec![0f32; nl * batch * sp];
+
+        let zero_state = |b: usize| {
+            (0..nl).all(|l| {
+                conv_state[(l * batch + b) * cp..(l * batch + b + 1) * cp]
+                    .iter()
+                    .all(|&x| x == 0.0)
+                    && ssm_state[(l * batch + b) * sp..(l * batch + b + 1) * sp]
+                        .iter()
+                        .all(|&x| x == 0.0)
+            })
+        };
+
+        // Bucket rows by which compiled entry point serves them.
+        let mut decode_rows: Vec<usize> = Vec::new();
+        let mut prefill_rows: Vec<usize> = Vec::new();
+        let mut scan_rows: Vec<usize> = Vec::new();
+        for b in 0..batch {
+            if lens[b] == 1 {
+                decode_rows.push(b);
+            } else if lens[b] == plen && zero_state(b) {
+                prefill_rows.push(b);
+            } else {
+                scan_rows.push(b);
+            }
+        }
+
+        // 1. Single-token rows → compiled decode batches, padded to a
+        //    compiled size by repeating the last row (groups of at most
+        //    the largest compiled size).
+        if !decode_rows.is_empty() {
+            let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
+            let mut i = 0usize;
+            while i < decode_rows.len() {
+                let n = (decode_rows.len() - i).min(largest);
+                let group = &decode_rows[i..i + n];
+                let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
+                let mut toks = Vec::with_capacity(size);
+                let mut c = vec![0f32; nl * size * cp];
+                let mut s = vec![0f32; nl * size * sp];
+                for j in 0..size {
+                    let b = group[j.min(n - 1)];
+                    toks.push(tokens[offs[b]]);
+                    copy_state_row(nl, cp, conv_state, batch, b, &mut c, size, j);
+                    copy_state_row(nl, sp, ssm_state, batch, b, &mut s, size, j);
+                }
+                let out = self.decode(size, &toks, &c, &s)?;
+                for (j, &b) in group.iter().enumerate() {
+                    logits[b * vocab..(b + 1) * vocab]
+                        .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
+                    copy_state_row(nl, cp, &out.conv_state, size, j, &mut conv_out, batch, b);
+                    copy_state_row(nl, sp, &out.ssm_state, size, j, &mut ssm_out, batch, b);
+                }
+                i += n;
+            }
+        }
+
+        // 2. Full-length fresh rows → the compiled prefill path.
+        if !prefill_rows.is_empty() {
+            let largest = m.prefill_batches.iter().copied().max().unwrap_or(1);
+            let mut i = 0usize;
+            while i < prefill_rows.len() {
+                let n = (prefill_rows.len() - i).min(largest);
+                let group = &prefill_rows[i..i + n];
+                let size = MambaEngine::fit_batch(&m.prefill_batches, n).unwrap_or(n);
+                let mut toks = Vec::with_capacity(size * plen);
+                for j in 0..size {
+                    let b = group[j.min(n - 1)];
+                    toks.extend_from_slice(&tokens[offs[b]..offs[b] + plen]);
+                }
+                let out = self.prefill(size, &toks)?;
+                for (j, &b) in group.iter().enumerate() {
+                    logits[b * vocab..(b + 1) * vocab]
+                        .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
+                    copy_state_row(nl, cp, &out.conv_state, size, j, &mut conv_out, batch, b);
+                    copy_state_row(nl, sp, &out.ssm_state, size, j, &mut ssm_out, batch, b);
+                }
+                i += n;
+            }
+        }
+
+        // 3. Everything else (mid-prompt chunks, odd lengths) advances
+        //    in *lockstep* through compiled decode batches: one decode
+        //    call per token position shared across all scan rows, so a
+        //    tick's chunk cost is max(chunk lens) device calls, not
+        //    sum(chunk lens). (A compiled varlen chunk kernel — i.e. an
+        //    overridden step_mixed — is still the real fix for
+        //    production engines.)
+        if !scan_rows.is_empty() {
+            let k = scan_rows.len();
+            let max_len = scan_rows.iter().map(|&b| lens[b]).max().unwrap();
+            let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
+            // Working states, packed [layers, k, per] in scan-row order.
+            let mut c = vec![0f32; nl * k * cp];
+            let mut s = vec![0f32; nl * k * sp];
+            for (j, &b) in scan_rows.iter().enumerate() {
+                copy_state_row(nl, cp, conv_state, batch, b, &mut c, k, j);
+                copy_state_row(nl, sp, ssm_state, batch, b, &mut s, k, j);
+            }
+            for t in 0..max_len {
+                // Scan-row indices still holding a token at position t.
+                let active: Vec<usize> =
+                    (0..k).filter(|&j| t < lens[scan_rows[j]]).collect();
+                let mut i = 0usize;
+                while i < active.len() {
+                    let n = (active.len() - i).min(largest);
+                    let group = &active[i..i + n];
+                    let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
+                    let mut toks = Vec::with_capacity(size);
+                    let mut gc = vec![0f32; nl * size * cp];
+                    let mut gs = vec![0f32; nl * size * sp];
+                    for jj in 0..size {
+                        let j = group[jj.min(n - 1)];
+                        toks.push(tokens[offs[scan_rows[j]] + t]);
+                        copy_state_row(nl, cp, &c, k, j, &mut gc, size, jj);
+                        copy_state_row(nl, sp, &s, k, j, &mut gs, size, jj);
+                    }
+                    let out = self.decode(size, &toks, &gc, &gs)?;
+                    for (jj, &j) in group.iter().enumerate() {
+                        copy_state_row(nl, cp, &out.conv_state, size, jj, &mut c, k, j);
+                        copy_state_row(nl, sp, &out.ssm_state, size, jj, &mut s, k, j);
+                        if t + 1 == lens[scan_rows[j]] {
+                            let b = scan_rows[j];
+                            logits[b * vocab..(b + 1) * vocab]
+                                .copy_from_slice(&out.logits[jj * vocab..(jj + 1) * vocab]);
+                        }
+                    }
+                    i += n;
+                }
+            }
+            for (j, &b) in scan_rows.iter().enumerate() {
+                copy_state_row(nl, cp, &c, k, j, &mut conv_out, batch, b);
+                copy_state_row(nl, sp, &s, k, j, &mut ssm_out, batch, b);
+            }
+        }
+
+        Ok(StepOutput { logits, conv_state: conv_out, ssm_state: ssm_out })
+    }
+}
+
+/// Copy one sequence's per-layer state row between packed layer-major
+/// buffers of (possibly) different batch widths.
+pub(crate) fn copy_state_row(
+    n_layer: usize,
+    per: usize,
+    src: &[f32],
+    src_batch: usize,
+    sb: usize,
+    dst: &mut [f32],
+    dst_batch: usize,
+    db: usize,
+) {
+    for l in 0..n_layer {
+        let s0 = (l * src_batch + sb) * per;
+        let d0 = (l * dst_batch + db) * per;
+        dst[d0..d0 + per].copy_from_slice(&src[s0..s0 + per]);
+    }
 }
 
 /// The real PJRT-backed engine.

@@ -118,6 +118,41 @@ impl Executor for MockEngine {
         }
         Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
     }
+
+    /// Native varlen mixed batch: one scan over all rows, no padding
+    /// and no decomposition — the "fused kernel" the default trait
+    /// implementation emulates (tests pin the two bit-identical).
+    fn step_mixed(
+        &self,
+        lens: &[usize],
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<StepOutput> {
+        let batch = lens.len();
+        let vocab = self.manifest.vocab;
+        anyhow::ensure!(batch > 0, "empty mixed batch");
+        anyhow::ensure!(lens.iter().all(|&l| l >= 1), "zero-length mixed row");
+        anyhow::ensure!(tokens.len() == lens.iter().sum::<usize>(), "token shape");
+        anyhow::ensure!(
+            conv_state.len() == batch * self.manifest.conv_state_elems()
+                && ssm_state.len() == batch * self.manifest.ssm_state_elems(),
+            "state shape"
+        );
+        let mut conv = conv_state.to_vec();
+        let mut ssm = ssm_state.to_vec();
+        let mut logits = vec![0f32; batch * vocab];
+        let mut off = 0usize;
+        for (b, &len) in lens.iter().enumerate() {
+            let mut last = Vec::new();
+            for &t in &tokens[off..off + len] {
+                last = self.step_one(batch, b, t, &mut conv, &mut ssm);
+            }
+            logits[b * vocab..(b + 1) * vocab].copy_from_slice(&last);
+            off += len;
+        }
+        Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
+    }
 }
 
 #[cfg(test)]
@@ -174,5 +209,118 @@ mod tests {
             argmax_rows(&a.logits, e.manifest().vocab),
             argmax_rows(&b.logits, e.manifest().vocab)
         );
+    }
+
+    #[test]
+    fn step_mixed_fresh_full_rows_equal_prefill() {
+        // A mixed batch of full-length zero-state rows IS a prefill.
+        let e = MockEngine::new();
+        let l = e.manifest().prefill_len;
+        let toks: Vec<i32> = (0..2 * l as i32).collect();
+        let zeros_c = vec![0f32; 2 * e.manifest().conv_state_elems()];
+        let zeros_s = vec![0f32; 2 * e.manifest().ssm_state_elems()];
+        let mixed = e.step_mixed(&[l, l], &toks, &zeros_c, &zeros_s).unwrap();
+        let pre = e.prefill(2, &toks).unwrap();
+        assert_eq!(mixed.logits, pre.logits);
+        assert_eq!(mixed.conv_state, pre.conv_state);
+        assert_eq!(mixed.ssm_state, pre.ssm_state);
+    }
+
+    #[test]
+    fn chunked_scan_carries_state_exactly() {
+        // Splitting a prompt into chunks, carrying the packed state
+        // between step_mixed calls, lands bit-identical to one
+        // monolithic pass — the recurrence-consistency invariant the
+        // chunked-prefill scheduler depends on.
+        let e = MockEngine::new();
+        let l = e.manifest().prefill_len;
+        let toks: Vec<i32> = (5..5 + l as i32).collect();
+        let mono = e.prefill(1, &toks).unwrap();
+
+        let mut conv = vec![0f32; e.manifest().conv_state_elems()];
+        let mut ssm = vec![0f32; e.manifest().ssm_state_elems()];
+        let mut last = StepOutput { logits: vec![], conv_state: vec![], ssm_state: vec![] };
+        for chunk in toks.chunks(3) {
+            last = e.step_mixed(&[chunk.len()], chunk, &conv, &ssm).unwrap();
+            conv = last.conv_state.clone();
+            ssm = last.ssm_state.clone();
+        }
+        assert_eq!(last.logits, mono.logits);
+        assert_eq!(last.conv_state, mono.conv_state);
+        assert_eq!(last.ssm_state, mono.ssm_state);
+    }
+
+    /// Delegates everything except `step_mixed`, so calls fall through
+    /// to the Executor trait's default decomposition.
+    struct DefaultMixed(MockEngine);
+
+    impl Executor for DefaultMixed {
+        fn manifest(&self) -> &Manifest {
+            self.0.manifest()
+        }
+        fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
+            self.0.prefill(batch, tokens)
+        }
+        fn decode(
+            &self,
+            batch: usize,
+            tokens: &[i32],
+            conv: &[f32],
+            ssm: &[f32],
+        ) -> Result<StepOutput> {
+            self.0.decode(batch, tokens, conv, ssm)
+        }
+    }
+
+    #[test]
+    fn default_step_mixed_matches_native_override() {
+        // The trait's default decomposition (compiled prefill/decode
+        // calls) and the mock's fused varlen override must agree
+        // bit-exactly on a batch mixing every row kind: a fresh
+        // full-length prefill, a mid-prompt chunk with carried state,
+        // and two decode rows.
+        let native = MockEngine::new();
+        let deflt = DefaultMixed(MockEngine::new());
+        let m = native.manifest().clone();
+        let l = m.prefill_len;
+        let (cp, sp) = (m.conv_state_elems() / m.n_layer, m.ssm_state_elems() / m.n_layer);
+
+        // Build carried states for three sequences via a prefill.
+        let seed_toks: Vec<i32> = (0..3 * l as i32).collect();
+        let seeded = native.prefill(3, &seed_toks).unwrap();
+
+        // Mixed batch rows: [full fresh (l), chunk of 3 carried, decode, decode].
+        let lens = [l, 3, 1, 1];
+        let mut tokens: Vec<i32> = (40..40 + l as i32).collect();
+        tokens.extend_from_slice(&[7, 8, 9]); // chunk row
+        tokens.extend_from_slice(&[1, 2]); // decode rows
+        let batch = lens.len();
+        let mut conv = vec![0f32; m.n_layer * batch * cp];
+        let mut ssm = vec![0f32; m.n_layer * batch * sp];
+        // Row 0 stays zero (fresh); rows 1..4 carry seeded states 0..3.
+        for (row, src) in [(1usize, 0usize), (2, 1), (3, 2)] {
+            crate::runtime::engine::copy_state_row(
+                m.n_layer, cp, &seeded.conv_state, 3, src, &mut conv, batch, row,
+            );
+            crate::runtime::engine::copy_state_row(
+                m.n_layer, sp, &seeded.ssm_state, 3, src, &mut ssm, batch, row,
+            );
+        }
+
+        let a = native.step_mixed(&lens, &tokens, &conv, &ssm).unwrap();
+        let b = deflt.step_mixed(&lens, &tokens, &conv, &ssm).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.conv_state, b.conv_state);
+        assert_eq!(a.ssm_state, b.ssm_state);
+    }
+
+    #[test]
+    fn step_mixed_rejects_bad_shapes() {
+        let e = MockEngine::new();
+        let zeros_c = vec![0f32; e.manifest().conv_state_elems()];
+        let zeros_s = vec![0f32; e.manifest().ssm_state_elems()];
+        assert!(e.step_mixed(&[], &[], &[], &[]).is_err());
+        assert!(e.step_mixed(&[0], &[], &zeros_c, &zeros_s).is_err());
+        assert!(e.step_mixed(&[2], &[1], &zeros_c, &zeros_s).is_err());
     }
 }

@@ -2,8 +2,6 @@
 //! invariance under randomized workloads, failure injection, and
 //! policy edge cases.
 
-use std::time::Duration;
-
 use mambalaya::coordinator::{serve_all, BatchPolicy, Request, Scheduler, WorkloadGen};
 use mambalaya::prop::check;
 use mambalaya::runtime::engine::{Executor, StepOutput};
@@ -12,28 +10,38 @@ use mambalaya::runtime::MockEngine;
 #[test]
 fn prop_generation_invariant_under_policy() {
     // The generated tokens for a request must not depend on the batching
-    // policy (batch sizes, wait times, admission order of others).
+    // policy (chunk size, token budget, slot count, admission order of
+    // others) — chunked and monolithic prefill included.
     check("policy invariance", 12, |rng| {
         let probe = MockEngine::new();
         let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
-        let mut gen = WorkloadGen::new(rng.next_u64(), vocab, plen, 1, 6);
+        let mut gen = WorkloadGen::new(rng.next_u64(), vocab, plen, 1, 6)
+            .with_prompt_range(1, 2 * plen);
         let reqs: Vec<Request> = (0..rng.range(1, 9)).map(|_| gen.next_request()).collect();
 
         let policies = [
             BatchPolicy::default(),
+            // Tiny everything: serializes requests almost completely.
             BatchPolicy {
-                prefill_sizes: vec![1],
-                decode_sizes: vec![1],
-                max_prefill_wait: Duration::from_millis(0),
+                chunk_tokens: 1,
+                token_budget: 2,
+                max_chunk_rows: 1,
                 max_running: 2,
                 decode_priority_threshold: 1,
             },
+            // Mid-size chunks, modest budget.
             BatchPolicy {
-                prefill_sizes: vec![1, 2, 4],
-                decode_sizes: vec![2, 8],
-                max_prefill_wait: Duration::from_millis(1),
+                chunk_tokens: 3,
+                token_budget: 8,
+                max_chunk_rows: 2,
                 max_running: 4,
                 decode_priority_threshold: 3,
+            },
+            // Monolithic prefill (whole prompt as one chunk).
+            BatchPolicy {
+                chunk_tokens: 0,
+                token_budget: 1 << 20,
+                ..BatchPolicy::default()
             },
         ];
         let mut reference: Option<Vec<Vec<i32>>> = None;
@@ -121,6 +129,23 @@ fn zero_max_new_tokens_is_rejected() {
 }
 
 #[test]
+fn arbitrary_prompt_lengths_are_served() {
+    // Chunked prefill frees the coordinator from the compiled prefill
+    // length: 1-token, odd-length and multi-chunk prompts all serve.
+    let mut s = Scheduler::new(MockEngine::new(), BatchPolicy::default());
+    for (id, plen) in [(1u64, 1usize), (2, 5), (3, 23)] {
+        let req = Request { id, prompt: vec![2; plen], max_new_tokens: 2 };
+        s.submit(req).unwrap();
+    }
+    let out = s.run_until_drained().unwrap();
+    assert_eq!(out.len(), 3);
+    for r in &out {
+        assert_eq!(r.tokens.len(), 2);
+    }
+    assert_eq!(s.metrics().prefill_tokens, 1 + 5 + 23);
+}
+
+#[test]
 fn many_more_requests_than_slots_all_complete() {
     let probe = MockEngine::new();
     let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
@@ -139,8 +164,8 @@ fn many_more_requests_than_slots_all_complete() {
 
 #[test]
 fn single_token_requests_complete_at_prefill() {
-    // max_new_tokens = 1 finishes during the prefill batch (no decode
-    // round-trip, no state slot ever allocated).
+    // max_new_tokens = 1 finishes on the prompt's final chunk (no
+    // decode round-trip; any partial-prefill state is released).
     let probe = MockEngine::new();
     let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
     let mut gen = WorkloadGen::new(5, vocab, plen, 1, 1);

@@ -1,0 +1,86 @@
+//! Golden snapshot of the `fusion::stitch` plans for the Mamba-1
+//! prefill and generation cascades — the paper-reproduction path the
+//! coordinator work must not disturb.
+//!
+//! The canonical [`FusionPlan`] rendering (its `Display` impl) for
+//! every fusion variant is compared byte-for-byte against
+//! `rust/tests/golden/mamba1_fusion_plans.txt`. On the first run (or
+//! with `UPDATE_GOLDEN=1`) the snapshot is (re)blessed; afterwards any
+//! change to stitching, class assignment, stationarity or
+//! internal-tensor analysis fails with a diff hint. Structural facts
+//! from the paper (§IV group counts 24/12/8/3/1) are asserted
+//! unconditionally so the test has teeth even while blessing.
+
+use std::path::PathBuf;
+
+use mambalaya::cascade::{mamba1, ModelConfig};
+use mambalaya::fusion::{stitch, FusionVariant};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/mamba1_fusion_plans.txt")
+}
+
+/// Render every (cascade, variant) plan deterministically.
+fn render_all() -> String {
+    let cfg = ModelConfig::mamba_370m();
+    let mut out = String::new();
+    // Prefill (long sequence) and generation (seq 1, batched) — the
+    // paper's two serving regimes (Figure 12).
+    for (label, seq, batch) in [("prefill", 4096u64, 1u64), ("generation", 1, 64)] {
+        let c = mamba1::build(&cfg, seq, batch);
+        out.push_str(&format!("== mamba1/{label} seq={seq} batch={batch} ==\n"));
+        for v in FusionVariant::all() {
+            let plan = stitch(&c, v);
+            plan.validate(&c).expect("plan must validate");
+            out.push_str(&plan.to_string());
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn mamba1_plan_group_counts_match_paper() {
+    // §IV: 24 (unfused) → 12 (RI) → 8 (RI+RSb) → 3 (RI+RSb+RSp) → 1
+    // (fully fused), for the prefill cascade.
+    let c = mamba1::build(&ModelConfig::mamba_370m(), 4096, 1);
+    let counts: Vec<usize> =
+        FusionVariant::all().iter().map(|&v| stitch(&c, v).groups.len()).collect();
+    assert_eq!(counts, vec![24, 12, 8, 3, 1]);
+}
+
+#[test]
+fn mamba1_fusion_plans_are_byte_stable() {
+    let rendered = render_all();
+    let path = golden_path();
+    let bless = std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden");
+        std::fs::write(&path, &rendered).expect("write golden");
+        eprintln!(
+            "blessed golden snapshot at {} — COMMIT this file; ci.sh re-runs this test \
+             and fails while it is untracked",
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    if rendered != want {
+        // Point at the first diverging line for a usable failure.
+        for (i, (a, b)) in rendered.lines().zip(want.lines()).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "fusion plan drifted at line {} of {} (rerun with UPDATE_GOLDEN=1 to rebless)",
+                i + 1,
+                path.display()
+            );
+        }
+        panic!(
+            "fusion plan length drifted: {} vs {} lines (rerun with UPDATE_GOLDEN=1 to rebless)",
+            rendered.lines().count(),
+            want.lines().count()
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Stub of the xla/PJRT binding surface used by `runtime::engine`.
+//!
+//! The offline build environment does not ship the PJRT runtime, so
+//! this crate keeps the engine *compiling* while failing cleanly (and
+//! loudly) at **load** time: `PjRtClient::cpu()` returns an error, so a
+//! `MambaEngine` can never be constructed against the stub — the
+//! coordinator falls back to `runtime::mock::MockEngine` (tests,
+//! benches, `--mock` serving) which exercises the identical interface.
+//!
+//! To enable the real backend, replace the `xla = { path = ... }`
+//! dependency in the root `Cargo.toml` with the real xla/PJRT binding
+//! crate; `runtime::engine` is written against this exact surface.
+
+use std::fmt;
+
+/// Error type for every stubbed entry point.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT runtime unavailable (built against the vendored xla stub; \
+             swap rust/vendor/xla for the real binding to enable it)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (tokens, packed states). Construction and reshape
+/// are pure bookkeeping and work; device execution does not.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: usize,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(data: &[T]) -> Literal {
+        Literal { elems: data.len(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape, validating the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.elems {
+            return Err(Error(format!(
+                "reshape: {} elements into {:?}",
+                self.elems, dims
+            )));
+        }
+        Ok(Literal { elems: self.elems, dims: dims.to_vec() })
+    }
+
+    /// Literal shape (diagnostics).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Split a tuple literal — never reachable against the stub.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a host vector — never reachable against the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a proto.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device-resident buffer returned by execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; shape matches the real
+    /// binding: one result vector per device, one buffer per output.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client. The stub cannot construct one — `cpu()` errors, which
+/// is the single choke point that keeps all other stubbed methods
+/// unreachable in practice.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_path_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn literal_bookkeeping_works() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+}
