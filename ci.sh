@@ -36,6 +36,20 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== smoke: benches + examples compile =="
     cargo check --release --benches --examples
 
+    # Perf trajectory gate: the hotpath bench's --quick mode runs the
+    # deterministic mixed-traffic interference scenario and asserts the
+    # resident state path moves >= 10x fewer state bytes than the
+    # gather/scatter reference. The gate is on *counters* (same
+    # workload, same bytes, every run), never on wall time, and the
+    # machine-readable BENCH_hotpath.json records the trajectory.
+    echo "== hotpath bench: quick traffic-counter gate =="
+    cargo bench --bench hotpath -- --quick
+    if [ ! -s BENCH_hotpath.json ]; then
+        echo "ERROR: BENCH_hotpath.json missing or empty" >&2
+        exit 1
+    fi
+    echo "   BENCH_hotpath.json written"
+
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="
         python -m pytest -q python/tests || echo "WARNING: python tests failed (non-gating)"

@@ -58,6 +58,14 @@ where
     for r in server.reports() {
         println!("{r}");
     }
+    // Deterministic state-traffic accounting (also embedded in each
+    // report line next to budget_use): zero gathered/scattered on a
+    // fused engine in steady state — state lives resident in the arena.
+    let t = server.traffic();
+    println!(
+        "state traffic: gathered={}B scattered={}B resident={}B padded_rows={}",
+        t.bytes_gathered, t.bytes_scattered, t.state_bytes_resident, t.padded_rows
+    );
     server.shutdown();
 
     println!(

@@ -6,10 +6,20 @@
 //! * greedy stitching (all variants)
 //! * analytical evaluation (the DSE inner loop)
 //! * pass analysis
-//! * coordinator: state gather/scatter, mock decode step, full serve
+//! * coordinator: reference gather+install vs resident in-place step,
+//!   mock decode step, full serve
 //! * coordinator: long-prompt interference, chunked vs monolithic
-//!   prefill (p99 TTFT and per-tick token cost under mixed traffic)
+//!   prefill, resident vs reference state path — with the
+//!   deterministic state-traffic counters gating the perf trajectory
 //! * util: JSON parse (manifest-sized doc)
+//!
+//! Modes:
+//! * default — full microbench suite + interference scenario;
+//! * `-- --quick` — interference scenario only (deterministic, fast):
+//!   the CI gate. Both modes write machine-readable
+//!   `BENCH_hotpath.json` (ticks/sec plus the traffic counters) and
+//!   assert the resident path moves ≥ 10× fewer state bytes than the
+//!   reference path — a counter gate, not a wall-time gate.
 
 use std::time::{Duration, Instant};
 
@@ -17,103 +27,187 @@ use mambalaya::arch::ArchSpec;
 use mambalaya::bench_util::{bench_config, black_box, BenchResult};
 use mambalaya::cascade::{mamba1, ModelConfig};
 use mambalaya::coordinator::{
-    serve_all, BatchPolicy, Request, Scheduler, StateManager, WorkloadGen,
+    serve_all, BatchPolicy, Request, Scheduler, StateArena, StatePath, TrafficSnapshot,
+    WorkloadGen,
 };
 use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
 use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
-use mambalaya::runtime::{Executor, MockEngine};
-use mambalaya::util::JsonValue;
+use mambalaya::runtime::{Executor, MockEngine, Workspace};
+use mambalaya::util::{Args, JsonValue};
 
 fn b<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     bench_config(name, 3, 20, Duration::from_millis(200), &mut f)
 }
 
+/// One interference run: six short-prompt decoders ride along while a
+/// 512-token prompt prefills. Returns the scheduler's outcome for the
+/// JSON report and the gate assertions.
+struct InterferenceOutcome {
+    name: &'static str,
+    ticks: u64,
+    max_tick_tokens: u64,
+    ttft_p99_ms: f64,
+    short_latency_max_ms: f64,
+    wall: Duration,
+    ticks_per_sec: f64,
+    traffic: TrafficSnapshot,
+    tokens: Vec<Vec<i32>>,
+}
+
+fn interference(name: &'static str, policy: BatchPolicy, path: StatePath) -> InterferenceOutcome {
+    let vocab = MockEngine::new().manifest().vocab;
+    let mut reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![(i % 7) as i32 + 1; 4],
+            max_new_tokens: 64,
+        })
+        .collect();
+    reqs.push(Request {
+        id: 99,
+        prompt: (0..512).map(|x| x % vocab as i32).collect(),
+        max_new_tokens: 4,
+    });
+
+    let t0 = Instant::now();
+    let mut s = Scheduler::with_path(MockEngine::new(), policy, path);
+    for r in reqs {
+        s.submit(r).unwrap();
+    }
+    let mut resps = s.run_until_drained().unwrap();
+    let wall = t0.elapsed();
+    resps.sort_by_key(|r| r.id);
+    let short_max: f64 = resps
+        .iter()
+        .filter(|r| r.id != 99)
+        .map(|r| r.total)
+        .fold(0.0, f64::max);
+    let tokens = resps.iter().map(|r| r.tokens.clone()).collect();
+    let met = s.metrics();
+    InterferenceOutcome {
+        name,
+        ticks: met.ticks,
+        max_tick_tokens: met.max_tick_tokens,
+        ttft_p99_ms: met.ttft_pct(0.99) * 1e3,
+        short_latency_max_ms: short_max * 1e3,
+        wall,
+        ticks_per_sec: met.ticks as f64 / wall.as_secs_f64().max(1e-9),
+        traffic: met.traffic_snapshot(),
+        tokens,
+    }
+}
+
+fn outcome_json(o: &InterferenceOutcome) -> JsonValue {
+    let mut j = JsonValue::obj();
+    j.set("name", o.name)
+        .set("ticks", o.ticks)
+        .set("ticks_per_sec", (o.ticks_per_sec * 10.0).round() / 10.0)
+        .set("max_tick_tokens", o.max_tick_tokens)
+        .set("ttft_p99_ms", (o.ttft_p99_ms * 1e3).round() / 1e3)
+        .set("bytes_gathered", o.traffic.bytes_gathered)
+        .set("bytes_scattered", o.traffic.bytes_scattered)
+        .set("padded_rows", o.traffic.padded_rows);
+    j
+}
+
 fn main() {
-    let cfg = ModelConfig::mamba_2_8b();
-    let arch = ArchSpec::mambalaya();
-    let c = mamba1::build(&cfg, 16384, 64);
-    let plans: Vec<_> =
-        FusionVariant::all().iter().map(|&v| stitch(&c, v)).collect();
-    let opts = ExecOptions::default();
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.flag("quick");
 
     let mut results = Vec::new();
-    results.push(b("cascade: build+validate mamba1/2.8b", || {
+    if !quick {
+        let cfg = ModelConfig::mamba_2_8b();
+        let arch = ArchSpec::mambalaya();
         let c = mamba1::build(&cfg, 16384, 64);
-        black_box(c.validate().unwrap());
-    }));
-    results.push(b("fusion: classify all pairs", || {
-        black_box(classify_cascade(&c));
-    }));
-    for v in FusionVariant::all() {
-        results.push(b(&format!("fusion: stitch {}", v.name()), || {
-            black_box(stitch(&c, v));
+        let plans: Vec<_> =
+            FusionVariant::all().iter().map(|&v| stitch(&c, v)).collect();
+        let opts = ExecOptions::default();
+
+        results.push(b("cascade: build+validate mamba1/2.8b", || {
+            let c = mamba1::build(&cfg, 16384, 64);
+            black_box(c.validate().unwrap());
+        }));
+        results.push(b("fusion: classify all pairs", || {
+            black_box(classify_cascade(&c));
+        }));
+        for v in FusionVariant::all() {
+            results.push(b(&format!("fusion: stitch {}", v.name()), || {
+                black_box(stitch(&c, v));
+            }));
+        }
+        results.push(b("model: evaluate all 5 variants (DSE step)", || {
+            for p in &plans {
+                black_box(evaluate(&c, p, &arch, &opts));
+            }
+        }));
+        results.push(b("model: pass analysis (full scope)", || {
+            black_box(analyze_scope(&c, &(1..=24).collect::<Vec<_>>()));
+        }));
+
+        // Coordinator hot paths (mock engine → measures coordination
+        // overhead, not model math). The pair below is the refactor's
+        // before/after: the reference path packs fresh buffers per tick
+        // (gather + engine copies + install), the resident path hands
+        // the arena slab to the engine and copies nothing.
+        let mock = MockEngine::new();
+        let m = mock.manifest().clone();
+        let (cp, sp) = (m.d_inner * (m.d_conv - 1), m.d_inner * m.d_state);
+        let mut arena = StateArena::new(m.n_layer, cp, sp, 8);
+        let seed = {
+            let toks: Vec<i32> = (0..8 * m.prefill_len as i32).collect();
+            mock.prefill(8, &toks).unwrap()
+        };
+        for s in 0..8u64 {
+            arena.install_from_batch(s, 8, s as usize, &seed.conv_state, &seed.ssm_state);
+        }
+        let some_ids: Vec<Option<u64>> = (0..8).map(Some).collect();
+        let decode_toks: Vec<i32> = (1..=8).collect();
+        let lens = [1usize; 8];
+        results.push(b("coordinator: reference gather+step+install b=8", || {
+            let (c8, s8) = arena.gather_rows(&some_ids);
+            let out = mock.step_mixed(&lens, &decode_toks, &c8, &s8).unwrap();
+            for s in 0..8u64 {
+                arena.install_from_batch(s, 8, s as usize, &out.conv_state, &out.ssm_state);
+            }
+            black_box(());
+        }));
+        let rows: Vec<usize> = (0..8).map(|s| arena.row_of(s).unwrap()).collect();
+        let mut ws = Workspace::new();
+        results.push(b("coordinator: resident step_mixed_into b=8", || {
+            let (conv, ssm, stride) = arena.slab_mut();
+            mock.step_mixed_into(&lens, &decode_toks, &rows, conv, ssm, stride, &mut ws)
+                .unwrap();
+            black_box(ws.logits.len());
+        }));
+        let probe = MockEngine::new();
+        let (conv0, ssm0) = (seed.conv_state.clone(), seed.ssm_state.clone());
+        results.push(b("coordinator: mock decode step b=8", || {
+            black_box(probe.decode(8, &decode_toks, &conv0, &ssm0).unwrap());
+        }));
+        results.push(b("coordinator: serve 16 requests (mock)", || {
+            let mut gen = WorkloadGen::new(3, m.vocab, m.prefill_len, 4, 4);
+            let reqs = (0..16).map(|_| gen.next_request()).collect();
+            black_box(serve_all(|| Ok(MockEngine::new()), BatchPolicy::default(), reqs).unwrap());
+        }));
+
+        // Util.
+        let manifest_text =
+            std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
+                r#"{"a":[1,2,3],"b":{"c":1.5},"d":"xyz"}"#.repeat(1).to_string()
+            });
+        results.push(b("util: JSON parse (manifest)", || {
+            black_box(JsonValue::parse(&manifest_text).unwrap());
         }));
     }
-    results.push(b("model: evaluate all 5 variants (DSE step)", || {
-        for p in &plans {
-            black_box(evaluate(&c, p, &arch, &opts));
-        }
-    }));
-    results.push(b("model: pass analysis (full scope)", || {
-        black_box(analyze_scope(&c, &(1..=24).collect::<Vec<_>>()));
-    }));
-
-    // Coordinator hot paths (mock engine → measures coordination
-    // overhead, not model math).
-    let mock = MockEngine::new();
-    let m = mock.manifest().clone();
-    let mut sm = StateManager::new(m.n_layer, m.d_inner * (m.d_conv - 1), m.d_inner * m.d_state);
-    let conv = vec![0.5f32; 8 * m.conv_state_elems()];
-    let ssm = vec![0.25f32; 8 * m.ssm_state_elems()];
-    for s in 0..8u64 {
-        sm.install_from_batch(s, 8, s as usize, &conv, &ssm);
-    }
-    let ids: Vec<u64> = (0..8).collect();
-    results.push(b("coordinator: state gather+scatter b=8", || {
-        let (c8, s8) = sm.gather(&ids, 8);
-        sm.scatter(&ids, 8, &c8, &s8);
-        black_box(());
-    }));
-    let probe = MockEngine::new();
-    let (conv0, ssm0) = {
-        let toks: Vec<i32> = (0..8 * m.prefill_len as i32).collect();
-        let out = probe.prefill(8, &toks).unwrap();
-        (out.conv_state, out.ssm_state)
-    };
-    results.push(b("coordinator: mock decode step b=8", || {
-        black_box(probe.decode(8, &[1, 2, 3, 4, 5, 6, 7, 8], &conv0, &ssm0).unwrap());
-    }));
-    results.push(b("coordinator: serve 16 requests (mock)", || {
-        let mut gen = WorkloadGen::new(3, m.vocab, m.prefill_len, 4, 4);
-        let reqs = (0..16).map(|_| gen.next_request()).collect();
-        black_box(serve_all(|| Ok(MockEngine::new()), BatchPolicy::default(), reqs).unwrap());
-    }));
 
     // Mixed-traffic interference: six short-prompt sequences decode
     // while one 512-token prompt prefills. Chunked prefill bounds the
-    // per-tick token cost to the budget, so the decoders' inter-token
-    // gap stays bounded; monolithic prefill admits the whole prompt
-    // into a single tick (max_tick_tokens ≥ 512) — the full-tick stall
-    // the chunked scheduler exists to remove. TTFT p99 is dominated by
-    // the long prompt in both modes; the stall shows up in the tick
-    // span and the short requests' completion latency.
-    println!("\n== mixed-traffic interference (mock engine) ==");
-    let vocab = m.vocab;
-    let mk_reqs = || {
-        let mut reqs: Vec<Request> = (0..6)
-            .map(|i| Request {
-                id: i,
-                prompt: vec![(i % 7) as i32 + 1; 4],
-                max_new_tokens: 64,
-            })
-            .collect();
-        reqs.push(Request {
-            id: 99,
-            prompt: (0..512).map(|x| x % vocab as i32).collect(),
-            max_new_tokens: 4,
-        });
-        reqs
-    };
+    // per-tick token cost to the budget (monolithic provably stalls a
+    // full tick on the long prompt), and the resident state path
+    // eliminates the per-tick gather/scatter traffic the reference
+    // path pays. The counters are deterministic — same workload, same
+    // bytes — so CI gates on them rather than on wall time.
+    println!("== mixed-traffic interference (mock engine) ==");
     let chunked = BatchPolicy {
         chunk_tokens: 16,
         token_budget: 32,
@@ -122,49 +216,74 @@ fn main() {
         decode_priority_threshold: 8,
     };
     let monolithic = BatchPolicy { chunk_tokens: 0, token_budget: 1 << 20, ..chunked.clone() };
-    let mut tick_spans = Vec::new();
-    for (name, policy) in [("chunked 16/32", chunked), ("monolithic", monolithic)] {
-        let t0 = Instant::now();
-        let mut s = Scheduler::new(MockEngine::new(), policy);
-        for r in mk_reqs() {
-            s.submit(r).unwrap();
-        }
-        let mut resps = s.run_until_drained().unwrap();
-        resps.sort_by_key(|r| r.id);
-        let short_p99: f64 = resps
-            .iter()
-            .filter(|r| r.id != 99)
-            .map(|r| r.total)
-            .fold(0.0, f64::max);
-        let met = s.metrics();
+    let runs = [
+        interference("chunked_resident", chunked.clone(), StatePath::Resident),
+        interference("chunked_reference", chunked, StatePath::Reference),
+        interference("monolithic_resident", monolithic, StatePath::Resident),
+    ];
+    for o in &runs {
         println!(
-            "  {:<14} ticks={:<4} max_tick_tokens={:<4} ttft_p99={:>8.3}ms \
-             short_latency_max={:>8.3}ms wall={:>9.3?}",
-            name,
-            met.ticks,
-            met.max_tick_tokens,
-            met.ttft_pct(0.99) * 1e3,
-            short_p99 * 1e3,
-            t0.elapsed()
+            "  {:<20} ticks={:<4} max_tick_tokens={:<6} ttft_p99={:>8.3}ms \
+             short_latency_max={:>8.3}ms gathered={:<8} scattered={:<8} padded={:<4} wall={:>9.3?}",
+            o.name,
+            o.ticks,
+            o.max_tick_tokens,
+            o.ttft_p99_ms,
+            o.short_latency_max_ms,
+            o.traffic.bytes_gathered,
+            o.traffic.bytes_scattered,
+            o.traffic.padded_rows,
+            o.wall,
         );
-        tick_spans.push(met.max_tick_tokens);
     }
-    // The acceptance invariant: decode never shares a tick with more
-    // prefill work than the budget allows under chunking, while the
-    // monolithic policy provably stalls a full tick on the long prompt.
-    assert!(tick_spans[0] <= 32, "chunked tick span {} > budget", tick_spans[0]);
-    assert!(tick_spans[1] >= 512, "monolithic did not admit the whole prompt");
 
-    // Util.
-    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
-        r#"{"a":[1,2,3],"b":{"c":1.5},"d":"xyz"}"#.repeat(1).to_string()
-    });
-    results.push(b("util: JSON parse (manifest)", || {
-        black_box(JsonValue::parse(&manifest_text).unwrap());
-    }));
+    // Gate 1 (scheduling): chunked prefill respects the token budget;
+    // monolithic admits the whole prompt into one tick.
+    assert!(
+        runs[0].max_tick_tokens <= 32,
+        "chunked tick span {} > budget",
+        runs[0].max_tick_tokens
+    );
+    assert!(
+        runs[2].max_tick_tokens >= 512,
+        "monolithic did not admit the whole prompt"
+    );
+    // Gate 2 (equivalence): residency changes no output.
+    assert_eq!(
+        runs[0].tokens, runs[1].tokens,
+        "resident and reference paths diverged"
+    );
+    // Gate 3 (the perf acceptance bar): the resident path moves ≥ 10×
+    // fewer state bytes than the pre-refactor reference — measured on
+    // deterministic counters, not wall time.
+    let resident_total = runs[0].traffic.bytes_gathered + runs[0].traffic.bytes_scattered;
+    let reference_total = runs[1].traffic.bytes_gathered + runs[1].traffic.bytes_scattered;
+    let ratio_floor = 10 * resident_total.max(1);
+    assert!(
+        reference_total >= ratio_floor,
+        "traffic gate failed: reference {reference_total}B < 10x resident {resident_total}B"
+    );
 
-    println!("== hot-path microbenchmarks ==");
-    for r in &results {
-        println!("{}", r.report());
+    // Machine-readable output for CI and trend tracking.
+    let mut gate = JsonValue::obj();
+    gate.set("traffic_ratio_min", 10u64)
+        .set("resident_bytes_total", resident_total)
+        .set("reference_bytes_total", reference_total)
+        .set("pass", true);
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "hotpath")
+        .set("mode", if quick { "quick" } else { "full" })
+        .set("interference", JsonValue::Arr(runs.iter().map(outcome_json).collect()))
+        .set("gate", gate)
+        .set("micro", JsonValue::Arr(results.iter().map(|r| r.json()).collect()));
+    std::fs::write("BENCH_hotpath.json", doc.to_string())
+        .expect("writing BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json (traffic gate: PASS)");
+
+    if !quick {
+        println!("\n== hot-path microbenchmarks ==");
+        for r in &results {
+            println!("{}", r.report());
+        }
     }
 }

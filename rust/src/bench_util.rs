@@ -21,6 +21,18 @@ impl BenchResult {
             self.name, self.mean, self.p50, self.p95, self.iters
         )
     }
+
+    /// Machine-readable JSON object for `BENCH_*.json` outputs
+    /// (rendered by the in-tree [`crate::util::JsonValue`] emitter).
+    pub fn json(&self) -> crate::util::JsonValue {
+        let mut o = crate::util::JsonValue::obj();
+        o.set("name", self.name.as_str())
+            .set("iters", self.iters as u64)
+            .set("mean_ns", self.mean.as_nanos() as u64)
+            .set("p50_ns", self.p50.as_nanos() as u64)
+            .set("p95_ns", self.p95.as_nanos() as u64);
+        o
+    }
 }
 
 /// Time `f` for at least `min_iters` iterations and `min_time`.
@@ -79,5 +91,10 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.p50 <= r.p95);
         assert!(r.report().contains("noop"));
+        // JSON output round-trips through the in-tree parser.
+        let j = r.json().to_string();
+        let parsed = crate::util::JsonValue::parse(&j).unwrap();
+        assert_eq!(parsed.get("name").and_then(|v| v.as_str()), Some("noop"));
+        assert!(parsed.get("mean_ns").and_then(|v| v.as_i64()).is_some());
     }
 }

@@ -167,35 +167,46 @@ impl Batcher {
         let p = &self.policy;
         let budget_total = p.token_budget;
         let decode = running.min(budget_total);
+
+        // Steady-state fast path: no waiting prompts (or pure-decode
+        // priority) means the action is decode-only and this call
+        // performs no heap allocation (`Vec::new` is allocation-free
+        // until pushed) — part of the zero-alloc tick contract.
+        if self.jobs.is_empty() || running >= p.decode_priority_threshold {
+            return if decode == 0 {
+                Action::Idle
+            } else {
+                Action::Mixed { chunks: Vec::new(), decode }
+            };
+        }
+
         let mut budget = budget_total - decode;
         let mut slots_free =
             p.max_running.saturating_sub(running + self.mid_prefill());
 
         let mut chunks = Vec::new();
-        if running < p.decode_priority_threshold {
-            for job in self.jobs.iter() {
-                if chunks.len() >= p.max_chunk_rows || budget == 0 {
-                    break;
-                }
-                // Strict FIFO: if the head job can't start, nothing
-                // behind it may overtake.
-                if job.pos == 0 && slots_free == 0 {
-                    break;
-                }
-                let len = (job.total - job.pos).min(p.chunk_cap(job.total)).min(budget);
-                if len == 0 {
-                    break;
-                }
-                chunks.push(ChunkPlan {
-                    id: job.id,
-                    start: job.pos,
-                    len,
-                    last: job.pos + len == job.total,
-                });
-                budget -= len;
-                if job.pos == 0 {
-                    slots_free -= 1;
-                }
+        for job in self.jobs.iter() {
+            if chunks.len() >= p.max_chunk_rows || budget == 0 {
+                break;
+            }
+            // Strict FIFO: if the head job can't start, nothing
+            // behind it may overtake.
+            if job.pos == 0 && slots_free == 0 {
+                break;
+            }
+            let len = (job.total - job.pos).min(p.chunk_cap(job.total)).min(budget);
+            if len == 0 {
+                break;
+            }
+            chunks.push(ChunkPlan {
+                id: job.id,
+                start: job.pos,
+                len,
+                last: job.pos + len == job.total,
+            });
+            budget -= len;
+            if job.pos == 0 {
+                slots_free -= 1;
             }
         }
 

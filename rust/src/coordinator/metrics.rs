@@ -1,9 +1,28 @@
 //! Serving metrics: latency percentiles, throughput, batch occupancy,
-//! and continuous-batching health (chunk counts, per-tick token cost,
-//! prefill queue depth). All counters are monotone non-decreasing —
-//! tests rely on that to detect double-counting.
+//! continuous-batching health (chunk counts, per-tick token cost,
+//! prefill queue depth), and **state-traffic accounting**
+//! (bytes gathered/scattered, padded decode rows — the host-side
+//! analogue of the paper's inter-operator memory-traffic numbers).
+//! All counters are monotone non-decreasing — tests rely on that to
+//! detect double-counting. `state_bytes_resident` is the one gauge.
 
 use std::time::Instant;
+
+use crate::runtime::engine::TrafficCounters;
+
+/// A machine-readable snapshot of the state-traffic counters, for
+/// aggregation across workers and for the bench JSON output.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrafficSnapshot {
+    /// State bytes copied out of resident storage / between staging.
+    pub bytes_gathered: u64,
+    /// State bytes copied into resident storage.
+    pub bytes_scattered: u64,
+    /// Gauge: bytes of recurrent state currently resident.
+    pub state_bytes_resident: u64,
+    /// Padded rows shipped to compiled decode batches.
+    pub padded_rows: u64,
+}
 
 /// Online metrics collector (single scheduler thread, no locking).
 #[derive(Debug)]
@@ -24,9 +43,20 @@ pub struct Metrics {
     /// bounded by the policy's `token_budget`, which is what keeps long
     /// prompts from stalling decode for whole ticks.
     pub max_tick_tokens: u64,
+    /// State bytes copied out of resident storage (or between staging
+    /// buffers) — zero on the resident path with a fused engine.
+    pub bytes_gathered: u64,
+    /// State bytes copied back into resident storage.
+    pub bytes_scattered: u64,
+    /// Gauge (not monotone): bytes of recurrent state resident in the
+    /// arena after the most recent tick.
+    pub state_bytes_resident: u64,
+    /// Padded rows shipped to compiled decode batches by the default
+    /// engine decomposition (a fused engine pads nothing).
+    pub padded_rows: u64,
     /// Sum of (tick tokens / token budget) per tick, for mean budget
     /// utilization. (Engine-level padding to compiled batch sizes
-    /// happens inside `step_mixed` and is not visible here.)
+    /// happens inside `step_mixed_into` and surfaces as `padded_rows`.)
     occupancy_sum: f64,
     /// Prefill queue depth sampled each tick.
     queue_depth_sum: f64,
@@ -47,6 +77,10 @@ impl Metrics {
             decode_steps: 0,
             ticks: 0,
             max_tick_tokens: 0,
+            bytes_gathered: 0,
+            bytes_scattered: 0,
+            state_bytes_resident: 0,
+            padded_rows: 0,
             occupancy_sum: 0.0,
             queue_depth_sum: 0.0,
             queue_samples: 0,
@@ -78,6 +112,26 @@ impl Metrics {
         self.occupancy_sum += tick_tokens as f64 / token_budget.max(1) as f64;
         self.queue_depth_sum += queue_depth as f64;
         self.queue_samples += 1;
+    }
+
+    /// Record one tick's state traffic: the bytes actually copied
+    /// (counter deltas drained from the arena and workspace), the
+    /// current resident-state gauge, and padded decode rows.
+    pub fn record_traffic(&mut self, traffic: TrafficCounters, resident: u64, padded: u64) {
+        self.bytes_gathered += traffic.bytes_gathered;
+        self.bytes_scattered += traffic.bytes_scattered;
+        self.state_bytes_resident = resident;
+        self.padded_rows += padded;
+    }
+
+    /// Snapshot of the traffic counters (aggregation / bench JSON).
+    pub fn traffic_snapshot(&self) -> TrafficSnapshot {
+        TrafficSnapshot {
+            bytes_gathered: self.bytes_gathered,
+            bytes_scattered: self.bytes_scattered,
+            state_bytes_resident: self.state_bytes_resident,
+            padded_rows: self.padded_rows,
+        }
     }
 
     pub fn record_completion(&mut self, ttft: f64, total: f64) {
@@ -116,6 +170,7 @@ impl Metrics {
         format!(
             "requests={} tokens={} ({:.1} tok/s) chunks={} prefill_tokens={} decode_steps={} \
              ticks={} max_tick_tokens={} queue={:.1} budget_use={:.2} \
+             gathered={}B scattered={}B resident={}B padded_rows={} \
              ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
@@ -127,6 +182,10 @@ impl Metrics {
             self.max_tick_tokens,
             self.mean_queue_depth(),
             self.mean_occupancy(),
+            self.bytes_gathered,
+            self.bytes_scattered,
+            self.state_bytes_resident,
+            self.padded_rows,
             Self::pct(&ttft, 0.5) * 1e3,
             Self::pct(&ttft, 0.99) * 1e3,
             Self::pct(&total, 0.5) * 1e3,
@@ -167,6 +226,16 @@ mod tests {
         m.record_decode(4);
         m.record_tick(66, 88, 3);
         m.record_tick(5, 10, 1);
+        m.record_traffic(
+            TrafficCounters { bytes_gathered: 100, bytes_scattered: 60 },
+            512,
+            2,
+        );
+        m.record_traffic(
+            TrafficCounters { bytes_gathered: 40, bytes_scattered: 0 },
+            256,
+            0,
+        );
         m.record_completion(0.001, 0.010);
         assert_eq!(m.tokens_generated, 6);
         assert_eq!(m.decode_steps, 2);
@@ -178,9 +247,22 @@ mod tests {
         // (66/88 + 5/10) / 2 ticks
         assert!((m.mean_occupancy() - 0.625).abs() < 1e-9);
         assert_eq!(m.ttft_count(), 1);
+        // Traffic: counters accumulate, the resident gauge tracks the
+        // latest sample.
+        assert_eq!(m.bytes_gathered, 140);
+        assert_eq!(m.bytes_scattered, 60);
+        assert_eq!(m.state_bytes_resident, 256);
+        assert_eq!(m.padded_rows, 2);
+        let snap = m.traffic_snapshot();
+        assert_eq!(snap.bytes_gathered, 140);
+        assert_eq!(snap.state_bytes_resident, 256);
         let r = m.report();
         assert!(r.contains("requests=1"));
         assert!(r.contains("max_tick_tokens=66"));
+        assert!(r.contains("gathered=140B"));
+        assert!(r.contains("scattered=60B"));
+        assert!(r.contains("resident=256B"));
+        assert!(r.contains("padded_rows=2"));
     }
 
     #[test]

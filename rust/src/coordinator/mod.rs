@@ -1,8 +1,9 @@
 //! The L3 serving coordinator: request router, continuous batcher with
 //! chunked prefill, mixed prefill/decode scheduler, and the
-//! recurrent-state manager (Mamba's fixed-size analogue of a KV-cache
-//! manager). Python never runs here — the engine executes AOT-compiled
-//! HLO artifacts via PJRT.
+//! recurrent-state **arena** (Mamba's fixed-size analogue of a KV-cache
+//! manager, kept resident in engine layout so the steady-state decode
+//! tick moves zero state bytes). Python never runs here — the engine
+//! executes AOT-compiled HLO artifacts via PJRT.
 
 pub mod batcher;
 pub mod metrics;
@@ -12,8 +13,8 @@ pub mod server;
 pub mod state;
 
 pub use batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, TrafficSnapshot};
 pub use request::{Request, Response, WorkloadGen};
-pub use scheduler::Scheduler;
+pub use scheduler::{Scheduler, StatePath};
 pub use server::{serve_all, Server};
-pub use state::StateManager;
+pub use state::StateArena;

@@ -40,11 +40,17 @@ pub struct InFlight {
 
 impl InFlight {
     pub fn new(req: Request) -> InFlight {
+        // Preallocate the generation buffer at admission, so the
+        // per-token push on the scheduler's hot path never reallocates
+        // for reasonably sized requests. Clamped: max_new_tokens is
+        // caller-supplied, and a hostile value must not become a huge
+        // allocation before a single token is generated.
+        let generated = Vec::with_capacity(req.max_new_tokens.min(4096));
         InFlight {
             req,
             submitted: Instant::now(),
             first_token: None,
-            generated: Vec::new(),
+            generated,
             prefill_pos: 0,
         }
     }

@@ -1,60 +1,131 @@
 //! The serving scheduler: drives **continuous batching with chunked
-//! prefill** over an [`Executor`], carrying per-sequence recurrent
-//! state between steps.
+//! prefill** over an [`Executor`], keeping per-sequence recurrent state
+//! **resident in engine layout** between steps.
 //!
 //! One `tick()` = one *mixed* engine invocation ([`Action::Mixed`],
 //! chosen by the [`Batcher`] policy): every running sequence advances
 //! one decode token, and waiting prompts contribute prefill chunks up
 //! to the per-tick token budget. A sequence's prompt may span many
 //! ticks before its first sampled token; its partial prefill state
-//! lives in the [`StateManager`] between chunks. Greedy (argmax)
+//! lives in the [`StateArena`] between chunks. Greedy (argmax)
 //! sampling.
+//!
+//! ## Hot-path memory discipline
+//!
+//! The default path ([`StatePath::Resident`]) admits each sequence to a
+//! stable arena row once and then hands the arena's slabs plus a
+//! per-tick row plan straight to [`Executor::step_mixed_into`], which
+//! advances every row in place and writes logits into a persistent
+//! [`Workspace`]. All per-tick staging (`lens`, tokens, row plan,
+//! sampled tokens, round-robin scratch) lives in buffers retained
+//! across ticks, so a steady-state decode tick — unchanged batch
+//! membership — performs **zero gather/scatter copies and zero heap
+//! allocation** on a fused engine. Membership changes touch only the
+//! affected rows (a zeroing admit or a free-list release).
+//!
+//! [`StatePath::Reference`] keeps the pre-residency data path —
+//! gather packed copies, call the allocating [`Executor::step_mixed`],
+//! install the outputs back — bit-identical in tokens and counters,
+//! as the equivalence baseline for tests and for the deterministic
+//! traffic-counter comparison (`bytes_gathered` / `bytes_scattered`
+//! in [`Metrics`]).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::engine::{argmax_rows, Executor};
+use crate::runtime::engine::{argmax_rows_into, Executor, Workspace};
 
 use super::batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
-use super::state::StateManager;
+use super::state::StateArena;
+
+/// How the scheduler moves recurrent state between ticks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatePath {
+    /// Zero-copy (default): state stays resident in the arena and the
+    /// engine advances arena rows in place via `step_mixed_into`.
+    Resident,
+    /// Pre-residency baseline: gather packed copies per tick, call the
+    /// allocating `step_mixed`, install the outputs back. Kept for
+    /// equivalence tests and as the traffic-counter reference.
+    Reference,
+}
 
 /// Single-threaded scheduling core (wrapped by [`super::server::Server`]
 /// for threaded serving).
 pub struct Scheduler<E: Executor> {
     engine: E,
     batcher: Batcher,
-    states: StateManager,
+    states: StateArena,
+    path: StatePath,
+    /// Persistent engine workspace: logits surface + staging buffers +
+    /// traffic counters, reused every tick.
+    ws: Workspace,
     /// Submitted, prompt not fully prefilled (prefill cursor < prompt
-    /// length; partial state in `states` once the first chunk ran).
+    /// length; partial state resident in `states` once the first chunk
+    /// ran).
     waiting: BTreeMap<u64, InFlight>,
     /// Prefilled, generating.
     running: BTreeMap<u64, InFlight>,
     /// Round-robin cursor over running sequences, for ticks whose token
     /// budget covers only part of the decode set.
     decode_rr: usize,
+    /// Set after an engine error. The resident path advances arena rows
+    /// *in place*, so a failed tick may leave state partially ahead of
+    /// the batcher cursors — retrying would silently corrupt outputs.
+    /// Once poisoned, every tick fails fast; the worker must be
+    /// discarded (see `server::worker_loop`, which exits on tick error).
+    poisoned: bool,
     metrics: Metrics,
+    // Per-tick staging, retained across ticks so the steady-state
+    // decode tick allocates nothing.
+    lens_buf: Vec<usize>,
+    tokens_buf: Vec<i32>,
+    rows_buf: Vec<usize>,
+    row_state_buf: Vec<Option<u64>>,
+    next_buf: Vec<i32>,
+    rr_scratch: Vec<u64>,
+    decode_ids_buf: Vec<u64>,
 }
 
 impl<E: Executor> Scheduler<E> {
     pub fn new(engine: E, policy: BatchPolicy) -> Scheduler<E> {
+        Scheduler::with_path(engine, policy, StatePath::Resident)
+    }
+
+    /// Construct with an explicit state path (tests / benchmarks).
+    pub fn with_path(engine: E, policy: BatchPolicy, path: StatePath) -> Scheduler<E> {
         let m = engine.manifest();
-        let states = StateManager::new(
+        let batcher = Batcher::new(policy);
+        // The batcher admits at most `max_running` state-holding
+        // sequences, so the arena never grows on the hot path.
+        let states = StateArena::new(
             m.n_layer,
             m.d_inner * (m.d_conv - 1),
             m.d_inner * m.d_state,
+            batcher.policy().max_running,
         );
         Scheduler {
             engine,
-            batcher: Batcher::new(policy),
+            batcher,
             states,
+            path,
+            ws: Workspace::new(),
             waiting: BTreeMap::new(),
             running: BTreeMap::new(),
             decode_rr: 0,
+            poisoned: false,
             metrics: Metrics::new(),
+            lens_buf: Vec::new(),
+            tokens_buf: Vec::new(),
+            rows_buf: Vec::new(),
+            row_state_buf: Vec::new(),
+            next_buf: Vec::new(),
+            rr_scratch: Vec::new(),
+            decode_ids_buf: Vec::new(),
         }
     }
 
@@ -86,6 +157,16 @@ impl<E: Executor> Scheduler<E> {
         &self.metrics
     }
 
+    /// Which state path this scheduler runs.
+    pub fn path(&self) -> StatePath {
+        self.path
+    }
+
+    /// The resident-state arena (tests / diagnostics).
+    pub fn state_arena(&self) -> &StateArena {
+        &self.states
+    }
+
     pub fn manifest(&self) -> &crate::runtime::artifact::Manifest {
         self.engine.manifest()
     }
@@ -93,13 +174,37 @@ impl<E: Executor> Scheduler<E> {
     /// One scheduling step. Returns completed responses (possibly
     /// empty). `Ok(false)` means there was nothing to do.
     pub fn tick(&mut self) -> Result<(Vec<Response>, bool)> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "scheduler poisoned by a prior engine error (resident state may \
+             be partially advanced); discard this scheduler"
+        );
         match self.batcher.next_action(self.running.len()) {
             Action::Idle => Ok((Vec::new(), false)),
             Action::Mixed { chunks, decode } => {
-                let decode_ids = self.pick_decode_rows(decode);
-                let done = self.do_mixed(&chunks, &decode_ids)?;
-                // Cursors advance only after the engine call succeeds
-                // (fail-stop keeps batcher and scheduler consistent).
+                self.pick_decode_rows(decode);
+                // Temporarily move the id buffer out so `do_mixed` can
+                // borrow the rest of `self` (restored below; the empty
+                // stand-in does not allocate).
+                let decode_ids = std::mem::take(&mut self.decode_ids_buf);
+                let result = self.do_mixed(&chunks, &decode_ids);
+                self.decode_ids_buf = decode_ids;
+                let done = match result {
+                    Ok(done) => done,
+                    Err(e) => {
+                        // The engine may have advanced some arena rows
+                        // in place before failing; nothing here can be
+                        // retried. Poison the scheduler so no caller
+                        // feeds already-consumed tokens to
+                        // already-advanced state.
+                        self.poisoned = true;
+                        return Err(e);
+                    }
+                };
+                // Cursors advance only after the engine call succeeds,
+                // so batcher and scheduler stay consistent on success —
+                // and a failure poisons the scheduler (above) rather
+                // than pretending the tick is retryable.
                 self.batcher.commit(&chunks);
                 Ok((done, true))
             }
@@ -127,19 +232,24 @@ impl<E: Executor> Scheduler<E> {
         self.engine.manifest().vocab
     }
 
-    /// The next `n` running sequences in round-robin order, so a token
-    /// budget smaller than the running set still reaches every sequence
-    /// across consecutive ticks.
-    fn pick_decode_rows(&mut self, n: usize) -> Vec<u64> {
-        let keys: Vec<u64> = self.running.keys().copied().collect();
-        if keys.is_empty() || n == 0 {
-            return Vec::new();
+    /// Fill `decode_ids_buf` with the next `n` running sequences in
+    /// round-robin order, so a token budget smaller than the running
+    /// set still reaches every sequence across consecutive ticks.
+    /// Allocation-free once the scratch buffers are warm.
+    fn pick_decode_rows(&mut self, n: usize) {
+        self.decode_ids_buf.clear();
+        if n == 0 || self.running.is_empty() {
+            return;
         }
-        let n = n.min(keys.len());
-        let start = self.decode_rr % keys.len();
-        let ids = (0..n).map(|i| keys[(start + i) % keys.len()]).collect();
-        self.decode_rr = (start + n) % keys.len();
-        ids
+        self.rr_scratch.clear();
+        self.rr_scratch.extend(self.running.keys());
+        let k = self.rr_scratch.len();
+        let n = n.min(k);
+        let start = self.decode_rr % k;
+        for i in 0..n {
+            self.decode_ids_buf.push(self.rr_scratch[(start + i) % k]);
+        }
+        self.decode_rr = (start + n) % k;
     }
 
     /// One mixed engine invocation: `chunks` prefill-chunk rows followed
@@ -147,25 +257,86 @@ impl<E: Executor> Scheduler<E> {
     fn do_mixed(&mut self, chunks: &[ChunkPlan], decode_ids: &[u64]) -> Result<Vec<Response>> {
         let batch = chunks.len() + decode_ids.len();
         assert!(batch > 0, "empty mixed action");
-        let mut lens = Vec::with_capacity(batch);
-        let mut tokens = Vec::new();
-        // Per-row state source: None = fresh (zero state).
-        let mut row_state: Vec<Option<u64>> = Vec::with_capacity(batch);
+        self.lens_buf.clear();
+        self.tokens_buf.clear();
+        self.rows_buf.clear();
         for ch in chunks {
             let fl = self.waiting.get(&ch.id).expect("waiting entry for chunk");
             assert_eq!(fl.prefill_pos, ch.start, "scheduler cursor mismatch for seq {}", ch.id);
-            tokens.extend_from_slice(&fl.req.prompt[ch.start..ch.start + ch.len]);
-            lens.push(ch.len);
-            row_state.push(if ch.start == 0 { None } else { Some(ch.id) });
+            self.tokens_buf.extend_from_slice(&fl.req.prompt[ch.start..ch.start + ch.len]);
+            self.lens_buf.push(ch.len);
         }
         for &id in decode_ids {
-            tokens.push(*self.running[&id].generated.last().expect("running seq has a token"));
-            lens.push(1);
-            row_state.push(Some(id));
+            self.tokens_buf
+                .push(*self.running[&id].generated.last().expect("running seq has a token"));
+            self.lens_buf.push(1);
         }
 
-        let (conv, ssm) = self.states.gather_rows(&row_state);
-        let out = self.engine.step_mixed(&lens, &tokens, &conv, &ssm)?;
+        let vocab = self.vocab();
+        // Reference path only: the freshly gathered packed state
+        // buffers to install back from after the call. The resident
+        // path leaves this `None` — the engine already advanced the
+        // arena rows in place.
+        let mut ref_out: Option<(Vec<f32>, Vec<f32>)> = None;
+        match self.path {
+            StatePath::Resident => {
+                // Row plan: fresh rows are admitted (zeroed, free-list)
+                // up front; everything else is already resident, so an
+                // unchanged batch membership rebuilds the same plan with
+                // zero copies.
+                for ch in chunks {
+                    let row = if ch.start == 0 {
+                        self.states.admit(ch.id)
+                    } else {
+                        self.states
+                            .row_of(ch.id)
+                            .expect("mid-prefill chunk has resident state")
+                    };
+                    self.rows_buf.push(row);
+                }
+                for &id in decode_ids {
+                    self.rows_buf
+                        .push(self.states.row_of(id).expect("decode row has resident state"));
+                }
+                let (conv, ssm, stride) = self.states.slab_mut();
+                self.engine.step_mixed_into(
+                    &self.lens_buf,
+                    &self.tokens_buf,
+                    &self.rows_buf,
+                    conv,
+                    ssm,
+                    stride,
+                    &mut self.ws,
+                )?;
+            }
+            StatePath::Reference => {
+                // Pre-residency data path: gather packed per-tick
+                // copies (counted by the arena), run the engine on
+                // them with an identity row plan, install back below.
+                // Routes through the same persistent workspace so the
+                // engine's own staging traffic is counted too.
+                self.row_state_buf.clear();
+                for ch in chunks {
+                    self.row_state_buf.push(if ch.start == 0 { None } else { Some(ch.id) });
+                }
+                for &id in decode_ids {
+                    self.row_state_buf.push(Some(id));
+                }
+                let (mut conv, mut ssm) = self.states.gather_rows(&self.row_state_buf);
+                self.rows_buf.extend(0..batch);
+                self.engine.step_mixed_into(
+                    &self.lens_buf,
+                    &self.tokens_buf,
+                    &self.rows_buf,
+                    &mut conv,
+                    &mut ssm,
+                    batch,
+                    &mut self.ws,
+                )?;
+                ref_out = Some((conv, ssm));
+            }
+        }
+        argmax_rows_into(&self.ws.logits, vocab, &mut self.next_buf);
 
         let chunk_tokens: usize = chunks.iter().map(|c| c.len).sum();
         if !chunks.is_empty() {
@@ -180,7 +351,6 @@ impl<E: Executor> Scheduler<E> {
             self.waiting.len(),
         );
 
-        let next = argmax_rows(&out.logits, self.vocab());
         let now = Instant::now();
         let mut completed = Vec::new();
 
@@ -191,23 +361,25 @@ impl<E: Executor> Scheduler<E> {
                 let mut fl = self.waiting.remove(&ch.id).expect("waiting entry");
                 fl.prefill_pos += ch.len;
                 fl.first_token = Some(now);
-                fl.generated.push(next[b]);
+                fl.generated.push(self.next_buf[b]);
                 self.metrics.record_decode(1); // the prefill-produced token
                 if fl.done() {
-                    self.states.release(ch.id); // drop any partial state
+                    self.states.release(ch.id); // free the slot
                     let resp = fl.finish();
                     self.metrics.record_completion(resp.ttft, resp.total);
                     completed.push(resp);
                 } else {
-                    self.states
-                        .install_from_batch(ch.id, batch, b, &out.conv_state, &out.ssm_state);
+                    if let Some((conv, ssm)) = &ref_out {
+                        self.states.install_from_batch(ch.id, batch, b, conv, ssm);
+                    }
                     self.running.insert(ch.id, fl);
                 }
             } else {
                 let fl = self.waiting.get_mut(&ch.id).expect("waiting entry");
                 fl.prefill_pos += ch.len;
-                self.states
-                    .install_from_batch(ch.id, batch, b, &out.conv_state, &out.ssm_state);
+                if let Some((conv, ssm)) = &ref_out {
+                    self.states.install_from_batch(ch.id, batch, b, conv, ssm);
+                }
             }
         }
 
@@ -215,17 +387,27 @@ impl<E: Executor> Scheduler<E> {
         for (i, &id) in decode_ids.iter().enumerate() {
             let b = chunks.len() + i;
             let fl = self.running.get_mut(&id).expect("running entry");
-            fl.generated.push(next[b]);
+            fl.generated.push(self.next_buf[b]);
             if fl.done() {
                 let fl = self.running.remove(&id).unwrap();
                 self.states.release(id);
                 let resp = fl.finish();
                 self.metrics.record_completion(resp.ttft, resp.total);
                 completed.push(resp);
-            } else {
-                self.states.install_from_batch(id, batch, b, &out.conv_state, &out.ssm_state);
+            } else if let Some((conv, ssm)) = &ref_out {
+                self.states.install_from_batch(id, batch, b, conv, ssm);
             }
         }
+
+        // Deterministic traffic accounting: everything the arena copied
+        // (reference gather/install, relocation) plus everything the
+        // engine staged through the workspace (default decomposition,
+        // padding). Zero on the resident path with a fused engine.
+        let mut traffic = self.states.take_traffic();
+        traffic.merge(self.ws.take_traffic());
+        let padded = self.ws.take_padded_rows();
+        self.metrics.record_traffic(traffic, self.states.resident_bytes(), padded);
+
         Ok(completed)
     }
 }
@@ -257,8 +439,8 @@ mod tests {
     #[test]
     fn batched_equals_solo_generation() {
         // The same request must generate the same tokens whether served
-        // alone or continuously batched with others — state gather/
-        // scatter, chunk boundaries and mixed rows must not leak across
+        // alone or continuously batched with others — resident rows,
+        // chunk boundaries and mixed rows must not leak across
         // sequences.
         let m = MockEngine::new();
         let (vocab, plen) = (m.manifest().vocab, m.manifest().prefill_len);
@@ -313,6 +495,7 @@ mod tests {
         }
         // All state slots were released.
         assert_eq!(s.pending(), 0);
+        assert!(s.state_arena().is_empty());
     }
 
     #[test]
@@ -335,6 +518,41 @@ mod tests {
         s.run_until_drained().unwrap();
         assert_eq!(s.metrics().tokens_generated, 15);
         assert!(s.metrics().mean_occupancy() > 0.0);
+    }
+
+    #[test]
+    fn resident_path_moves_no_state_bytes_on_mock() {
+        // The whole point of the refactor: on a fused engine, serving
+        // an entire workload gathers and scatters nothing.
+        let mut s = sched();
+        assert_eq!(s.path(), StatePath::Resident);
+        let m = s.manifest();
+        let mut gen =
+            WorkloadGen::new(11, m.vocab, m.prefill_len, 2, 6).with_prompt_range(1, 20);
+        for _ in 0..6 {
+            s.submit(gen.next_request()).unwrap();
+        }
+        s.run_until_drained().unwrap();
+        assert_eq!(s.metrics().bytes_gathered, 0);
+        assert_eq!(s.metrics().bytes_scattered, 0);
+        assert_eq!(s.metrics().padded_rows, 0);
+    }
+
+    #[test]
+    fn reference_path_counts_traffic() {
+        let mut s = Scheduler::with_path(
+            MockEngine::new(),
+            BatchPolicy::default(),
+            StatePath::Reference,
+        );
+        let m = s.manifest();
+        let mut gen = WorkloadGen::new(11, m.vocab, m.prefill_len, 4, 6);
+        for _ in 0..4 {
+            s.submit(gen.next_request()).unwrap();
+        }
+        s.run_until_drained().unwrap();
+        assert!(s.metrics().bytes_gathered > 0, "reference path must gather");
+        assert!(s.metrics().bytes_scattered > 0, "reference path must scatter");
     }
 
     #[test]

@@ -13,12 +13,14 @@ use anyhow::Result;
 use crate::runtime::engine::Executor;
 
 use super::batcher::BatchPolicy;
+use super::metrics::TrafficSnapshot;
 use super::request::{Request, Response};
 use super::scheduler::Scheduler;
 
 enum Msg {
     Submit(Request, Sender<Response>),
     Report(Sender<String>),
+    Traffic(Sender<TrafficSnapshot>),
     Shutdown,
 }
 
@@ -86,6 +88,26 @@ impl Server {
             .collect()
     }
 
+    /// Aggregate the state-traffic counters across all workers
+    /// (counters sum; the resident gauge sums over workers too, since
+    /// each worker owns its own arena).
+    pub fn traffic(&self) -> TrafficSnapshot {
+        let mut total = TrafficSnapshot::default();
+        for w in &self.workers {
+            let (tx, rx) = channel();
+            if w.tx.send(Msg::Traffic(tx)).is_err() {
+                continue;
+            }
+            if let Ok(t) = rx.recv() {
+                total.bytes_gathered += t.bytes_gathered;
+                total.bytes_scattered += t.bytes_scattered;
+                total.state_bytes_resident += t.state_bytes_resident;
+                total.padded_rows += t.padded_rows;
+            }
+        }
+        total
+    }
+
     /// Graceful shutdown: drains in-flight work first.
     pub fn shutdown(self) {
         for w in &self.workers {
@@ -114,6 +136,9 @@ fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, rx: Receiver<Msg>) {
                 }
                 Ok(Msg::Report(tx)) => {
                     let _ = tx.send(sched.metrics().report());
+                }
+                Ok(Msg::Traffic(tx)) => {
+                    let _ = tx.send(sched.metrics().traffic_snapshot());
                 }
                 Ok(Msg::Shutdown) => shutting_down = true,
                 Err(TryRecvError::Empty) => break,
@@ -148,6 +173,9 @@ fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, rx: Receiver<Msg>) {
                         }
                         Ok(Msg::Report(tx)) => {
                             let _ = tx.send(sched.metrics().report());
+                        }
+                        Ok(Msg::Traffic(tx)) => {
+                            let _ = tx.send(sched.metrics().traffic_snapshot());
                         }
                         Ok(Msg::Shutdown) => shutting_down = true,
                         Err(_) => {}
@@ -236,6 +264,28 @@ mod tests {
     #[test]
     fn shutdown_with_no_work_is_clean() {
         let server = Server::start(vec![|| Ok(MockEngine::new())], BatchPolicy::default());
+        server.shutdown();
+    }
+
+    #[test]
+    fn traffic_aggregates_across_workers_and_is_zero_on_mock() {
+        // The mock engine is fused, so the resident hot path moves no
+        // state bytes no matter how many workers serve the load.
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let factories: Vec<fn() -> anyhow::Result<MockEngine>> =
+            vec![|| Ok(MockEngine::new()), || Ok(MockEngine::new())];
+        let mut server = Server::start(factories, BatchPolicy::default());
+        let mut gen = WorkloadGen::new(5, vocab, plen, 2, 3);
+        let rxs: Vec<_> = (0..6).map(|_| server.submit(gen.next_request())).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let t = server.traffic();
+        assert_eq!(t.bytes_gathered, 0);
+        assert_eq!(t.bytes_scattered, 0);
+        assert_eq!(t.padded_rows, 0);
+        assert_eq!(t.state_bytes_resident, 0, "all slots released after drain");
         server.shutdown();
     }
 }

@@ -16,16 +16,22 @@
 //! * [`report`] — regenerates every paper table and figure;
 //! * [`runtime`] / [`coordinator`] — the serving stack (python never
 //!   runs on the request path). The runtime's [`runtime::Executor`]
-//!   exposes prefill, decode, and the varlen `step_mixed` call; the
-//!   coordinator drives **continuous batching with chunked prefill**:
-//!   each [`coordinator::Scheduler`] tick is one mixed engine
-//!   invocation combining one decode token per running sequence with
-//!   prefill chunks from waiting prompts, bounded by the
+//!   exposes prefill, decode, and the varlen mixed call in two forms:
+//!   allocating `step_mixed`, and the zero-copy `step_mixed_into`
+//!   which advances caller-owned state slabs **in place** through a
+//!   per-tick row plan and reusable [`runtime::Workspace`] buffers.
+//!   The coordinator drives **continuous batching with chunked
+//!   prefill**: each [`coordinator::Scheduler`] tick is one mixed
+//!   engine invocation combining one decode token per running sequence
+//!   with prefill chunks from waiting prompts, bounded by the
 //!   [`coordinator::BatchPolicy`] knobs `chunk_tokens` (chunk size; 0 =
-//!   monolithic) and `token_budget` (per-tick token cost cap). Partial
-//!   prefill state lives in [`coordinator::StateManager`] between
-//!   chunks, so a prompt may span many ticks before its first sampled
-//!   token while decode never stalls;
+//!   monolithic) and `token_budget` (per-tick token cost cap). All
+//!   recurrent state lives resident in the [`coordinator::StateArena`]
+//!   (stable free-list rows, engine layout), so a prompt may span many
+//!   ticks before its first sampled token while decode never stalls,
+//!   and a steady-state decode tick moves zero state bytes — the
+//!   deterministic `bytes_gathered`/`bytes_scattered` counters in
+//!   [`coordinator::Metrics`] prove it per run;
 //! * [`util`] / [`prop`] / [`bench_util`] — offline-build stand-ins for
 //!   clap/serde/proptest/criterion (plus vendored `anyhow`/`xla` shims
 //!   under `rust/vendor/`).

@@ -21,6 +21,100 @@ pub struct StepOutput {
     pub ssm_state: Vec<f32>,
 }
 
+/// Deterministic state-traffic accounting, mirroring the paper's
+/// inter-operator memory-traffic bookkeeping at the host level: every
+/// byte of recurrent state that is *copied* (rather than staying
+/// resident) is counted exactly once.
+///
+/// Convention: a copy whose **destination is a staging buffer**
+/// (resident slab → staging, staging → staging, engine output →
+/// staging) counts as `bytes_gathered`; a copy whose **destination is
+/// resident storage** (staging or engine output → slab, arena
+/// relocation on growth) counts as `bytes_scattered`. A steady-state
+/// decode tick on a fused engine moves zero bytes on both counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficCounters {
+    pub bytes_gathered: u64,
+    pub bytes_scattered: u64,
+}
+
+impl TrafficCounters {
+    /// Gathered + scattered.
+    pub fn total(&self) -> u64 {
+        self.bytes_gathered + self.bytes_scattered
+    }
+
+    /// Accumulate another counter set into this one.
+    pub fn merge(&mut self, other: TrafficCounters) {
+        self.bytes_gathered += other.bytes_gathered;
+        self.bytes_scattered += other.bytes_scattered;
+    }
+}
+
+/// Caller-owned reusable buffers for [`Executor::step_mixed_into`].
+///
+/// The scheduler holds one `Workspace` for its whole lifetime, so the
+/// per-tick hot path performs no heap allocation once the buffers have
+/// grown to the workload's steady-state sizes: `logits` is the output
+/// surface, the private staging buffers serve the default
+/// prefill/decode decomposition (reused across every lockstep-scan
+/// position rather than reallocated per position), and `traffic` /
+/// `padded_rows` record exactly how many state bytes the call copied
+/// and how many padded rows it shipped to compiled decode batches.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// `[batch, vocab]` last-position logits of the most recent call.
+    pub logits: Vec<f32>,
+    traffic: TrafficCounters,
+    padded_rows: u64,
+    // Staging for the default compiled-entry-point decomposition.
+    toks: Vec<i32>,
+    offs: Vec<usize>,
+    decode_rows: Vec<usize>,
+    prefill_rows: Vec<usize>,
+    scan_rows: Vec<usize>,
+    active: Vec<usize>,
+    scan_conv: Vec<f32>,
+    scan_ssm: Vec<f32>,
+    group_conv: Vec<f32>,
+    group_ssm: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Size `logits` for a `batch × vocab` call, zero-filled. Reuses
+    /// the existing capacity (no allocation once warm).
+    pub fn reset_logits(&mut self, batch: usize, vocab: usize) {
+        self.logits.clear();
+        self.logits.resize(batch * vocab, 0.0);
+    }
+
+    /// State bytes copied by calls through this workspace since the
+    /// last [`Workspace::take_traffic`].
+    pub fn traffic(&self) -> TrafficCounters {
+        self.traffic
+    }
+
+    /// Drain the traffic counters (returns the counts, resets to zero).
+    pub fn take_traffic(&mut self) -> TrafficCounters {
+        std::mem::take(&mut self.traffic)
+    }
+
+    /// Padded rows shipped to compiled decode batches since the last
+    /// [`Workspace::take_padded_rows`].
+    pub fn padded_rows(&self) -> u64 {
+        self.padded_rows
+    }
+
+    /// Drain the padded-row counter.
+    pub fn take_padded_rows(&mut self) -> u64 {
+        std::mem::take(&mut self.padded_rows)
+    }
+}
+
 /// Abstracts the model executor so the coordinator can be tested
 /// without PJRT (see [`super::mock::MockEngine`]). Not `Send`: PJRT
 /// handles hold raw pointers, so each server worker *constructs its own
@@ -49,15 +143,12 @@ pub trait Executor {
     /// prefill chunk, and the coordinator can schedule both in the same
     /// engine call (continuous batching with chunked prefill).
     ///
-    /// The default implementation decomposes the batch onto the
-    /// compiled `prefill`/`decode` entry points — single-token rows run
-    /// as padded compiled-decode batches, full-`prefill_len` rows with
-    /// zero state run through the compiled prefill, and everything else
-    /// (mid-prompt chunks) advances in lockstep through compiled decode
-    /// batches, one call per token *position* shared across rows. That
-    /// is correct for any engine; engines with a fused varlen kernel
-    /// override it (see [`super::mock::MockEngine`], whose override is
-    /// verified bit-identical to this default).
+    /// Allocating convenience wrapper around
+    /// [`Executor::step_mixed_into`]: copies the packed input states,
+    /// runs the call against a throwaway [`Workspace`], and returns a
+    /// fresh [`StepOutput`]. Kept for callers that want value semantics
+    /// (tests, one-shot tools, the scheduler's reference path); the
+    /// serving hot path uses `step_mixed_into` directly.
     fn step_mixed(
         &self,
         lens: &[usize],
@@ -65,115 +156,182 @@ pub trait Executor {
         conv_state: &[f32],
         ssm_state: &[f32],
     ) -> Result<StepOutput> {
+        let batch = lens.len();
+        anyhow::ensure!(batch > 0, "empty mixed batch");
+        let mut conv = conv_state.to_vec();
+        let mut ssm = ssm_state.to_vec();
+        let rows: Vec<usize> = (0..batch).collect();
+        let mut ws = Workspace::new();
+        self.step_mixed_into(lens, tokens, &rows, &mut conv, &mut ssm, batch, &mut ws)?;
+        Ok(StepOutput {
+            logits: std::mem::take(&mut ws.logits),
+            conv_state: conv,
+            ssm_state: ssm,
+        })
+    }
+
+    /// One mixed invocation writing into **caller-owned storage** — the
+    /// zero-copy hot-path entry point.
+    ///
+    /// `conv`/`ssm` are layer-major slabs of `stride` rows per layer
+    /// (`[layers, stride, …]`); batch row `b` reads its state from slab
+    /// row `rows[b]` and the final state is written back **in place** at
+    /// the same row. Last-position logits land in `ws.logits`
+    /// (`[batch, vocab]`). The coordinator's `StateArena` passes its
+    /// resident slabs straight in, so gather/scatter disappear for
+    /// ticks whose batch membership is unchanged; row indices must be
+    /// distinct (aliasing two batch rows onto one slab row is a caller
+    /// bug).
+    ///
+    /// Every state byte the call *does* copy (staging for compiled
+    /// prefill/decode entry points, padding rows) is recorded in `ws`'s
+    /// [`TrafficCounters`], so the serving metrics can report
+    /// deterministic bytes-moved numbers.
+    ///
+    /// The default implementation decomposes the batch onto the
+    /// compiled `prefill`/`decode` entry points — single-token rows run
+    /// as padded compiled-decode batches, full-`prefill_len` rows with
+    /// zero state run through the compiled prefill, and everything else
+    /// (mid-prompt chunks) advances in lockstep through compiled decode
+    /// batches, one call per token *position* shared across rows —
+    /// staging through `ws`'s reusable buffers (one set per group,
+    /// reused across every lockstep position, never reallocated per
+    /// position). That is correct for any engine; engines with a fused
+    /// varlen kernel override it (see [`super::mock::MockEngine`],
+    /// whose allocation-free override is verified bit-identical to this
+    /// default).
+    fn step_mixed_into(
+        &self,
+        lens: &[usize],
+        tokens: &[i32],
+        rows: &[usize],
+        conv: &mut [f32],
+        ssm: &mut [f32],
+        stride: usize,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         let m = self.manifest();
         let batch = lens.len();
         let (nl, vocab, plen) = (m.n_layer, m.vocab, m.prefill_len);
         let cp = m.d_inner * (m.d_conv - 1);
         let sp = m.d_inner * m.d_state;
         anyhow::ensure!(batch > 0, "empty mixed batch");
+        anyhow::ensure!(rows.len() == batch, "row plan: got {}, want {batch}", rows.len());
         anyhow::ensure!(lens.iter().all(|&l| l >= 1), "zero-length mixed row");
+        anyhow::ensure!(rows.iter().all(|&r| r < stride), "row index past stride {stride}");
         let total: usize = lens.iter().sum();
         anyhow::ensure!(tokens.len() == total, "mixed tokens: got {}, want {total}", tokens.len());
         anyhow::ensure!(
-            conv_state.len() == nl * batch * cp,
-            "mixed conv state: got {}, want {}",
-            conv_state.len(),
-            nl * batch * cp
+            conv.len() == nl * stride * cp,
+            "mixed conv slab: got {}, want {}",
+            conv.len(),
+            nl * stride * cp
         );
         anyhow::ensure!(
-            ssm_state.len() == nl * batch * sp,
-            "mixed ssm state: got {}, want {}",
-            ssm_state.len(),
-            nl * batch * sp
+            ssm.len() == nl * stride * sp,
+            "mixed ssm slab: got {}, want {}",
+            ssm.len(),
+            nl * stride * sp
         );
 
+        ws.reset_logits(batch, vocab);
+
         // Flat-token offset of each row.
-        let mut offs = Vec::with_capacity(batch);
+        ws.offs.clear();
         let mut o = 0usize;
         for &l in lens {
-            offs.push(o);
+            ws.offs.push(o);
             o += l;
         }
 
-        let mut logits = vec![0f32; batch * vocab];
-        let mut conv_out = vec![0f32; nl * batch * cp];
-        let mut ssm_out = vec![0f32; nl * batch * sp];
-
-        let zero_state = |b: usize| {
-            (0..nl).all(|l| {
-                conv_state[(l * batch + b) * cp..(l * batch + b + 1) * cp]
-                    .iter()
-                    .all(|&x| x == 0.0)
-                    && ssm_state[(l * batch + b) * sp..(l * batch + b + 1) * sp]
+        // Bucket rows by which compiled entry point serves them
+        // (reading the slab before any staging mutates it).
+        ws.decode_rows.clear();
+        ws.prefill_rows.clear();
+        ws.scan_rows.clear();
+        {
+            let zero_state = |b: usize| {
+                let r = rows[b];
+                (0..nl).all(|l| {
+                    conv[(l * stride + r) * cp..(l * stride + r + 1) * cp]
                         .iter()
                         .all(|&x| x == 0.0)
-            })
-        };
-
-        // Bucket rows by which compiled entry point serves them.
-        let mut decode_rows: Vec<usize> = Vec::new();
-        let mut prefill_rows: Vec<usize> = Vec::new();
-        let mut scan_rows: Vec<usize> = Vec::new();
-        for b in 0..batch {
-            if lens[b] == 1 {
-                decode_rows.push(b);
-            } else if lens[b] == plen && zero_state(b) {
-                prefill_rows.push(b);
-            } else {
-                scan_rows.push(b);
+                        && ssm[(l * stride + r) * sp..(l * stride + r + 1) * sp]
+                            .iter()
+                            .all(|&x| x == 0.0)
+                })
+            };
+            for b in 0..batch {
+                if lens[b] == 1 {
+                    ws.decode_rows.push(b);
+                } else if lens[b] == plen && zero_state(b) {
+                    ws.prefill_rows.push(b);
+                } else {
+                    ws.scan_rows.push(b);
+                }
             }
         }
+
+        let row_bytes = ((cp + sp) * nl * 4) as u64;
 
         // 1. Single-token rows → compiled decode batches, padded to a
         //    compiled size by repeating the last row (groups of at most
         //    the largest compiled size).
-        if !decode_rows.is_empty() {
+        if !ws.decode_rows.is_empty() {
             let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
             let mut i = 0usize;
-            while i < decode_rows.len() {
-                let n = (decode_rows.len() - i).min(largest);
-                let group = &decode_rows[i..i + n];
+            while i < ws.decode_rows.len() {
+                let n = (ws.decode_rows.len() - i).min(largest);
                 let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
-                let mut toks = Vec::with_capacity(size);
-                let mut c = vec![0f32; nl * size * cp];
-                let mut s = vec![0f32; nl * size * sp];
+                ws.toks.clear();
+                ws.group_conv.clear();
+                ws.group_conv.resize(nl * size * cp, 0.0);
+                ws.group_ssm.clear();
+                ws.group_ssm.resize(nl * size * sp, 0.0);
                 for j in 0..size {
-                    let b = group[j.min(n - 1)];
-                    toks.push(tokens[offs[b]]);
-                    copy_state_row(nl, cp, conv_state, batch, b, &mut c, size, j);
-                    copy_state_row(nl, sp, ssm_state, batch, b, &mut s, size, j);
+                    let b = ws.decode_rows[i + j.min(n - 1)];
+                    ws.toks.push(tokens[ws.offs[b]]);
+                    copy_state_row(nl, cp, conv, stride, rows[b], &mut ws.group_conv, size, j);
+                    copy_state_row(nl, sp, ssm, stride, rows[b], &mut ws.group_ssm, size, j);
                 }
-                let out = self.decode(size, &toks, &c, &s)?;
-                for (j, &b) in group.iter().enumerate() {
-                    logits[b * vocab..(b + 1) * vocab]
+                ws.traffic.bytes_gathered += size as u64 * row_bytes;
+                ws.padded_rows += (size - n) as u64;
+                let out = self.decode(size, &ws.toks, &ws.group_conv, &ws.group_ssm)?;
+                for j in 0..n {
+                    let b = ws.decode_rows[i + j];
+                    ws.logits[b * vocab..(b + 1) * vocab]
                         .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
-                    copy_state_row(nl, cp, &out.conv_state, size, j, &mut conv_out, batch, b);
-                    copy_state_row(nl, sp, &out.ssm_state, size, j, &mut ssm_out, batch, b);
+                    copy_state_row(nl, cp, &out.conv_state, size, j, conv, stride, rows[b]);
+                    copy_state_row(nl, sp, &out.ssm_state, size, j, ssm, stride, rows[b]);
                 }
+                ws.traffic.bytes_scattered += n as u64 * row_bytes;
                 i += n;
             }
         }
 
-        // 2. Full-length fresh rows → the compiled prefill path.
-        if !prefill_rows.is_empty() {
+        // 2. Full-length fresh rows → the compiled prefill path (no
+        //    state gather: fresh rows start from zero inside the
+        //    compiled kernel).
+        if !ws.prefill_rows.is_empty() {
             let largest = m.prefill_batches.iter().copied().max().unwrap_or(1);
             let mut i = 0usize;
-            while i < prefill_rows.len() {
-                let n = (prefill_rows.len() - i).min(largest);
-                let group = &prefill_rows[i..i + n];
+            while i < ws.prefill_rows.len() {
+                let n = (ws.prefill_rows.len() - i).min(largest);
                 let size = MambaEngine::fit_batch(&m.prefill_batches, n).unwrap_or(n);
-                let mut toks = Vec::with_capacity(size * plen);
+                ws.toks.clear();
                 for j in 0..size {
-                    let b = group[j.min(n - 1)];
-                    toks.extend_from_slice(&tokens[offs[b]..offs[b] + plen]);
+                    let b = ws.prefill_rows[i + j.min(n - 1)];
+                    ws.toks.extend_from_slice(&tokens[ws.offs[b]..ws.offs[b] + plen]);
                 }
-                let out = self.prefill(size, &toks)?;
-                for (j, &b) in group.iter().enumerate() {
-                    logits[b * vocab..(b + 1) * vocab]
+                let out = self.prefill(size, &ws.toks)?;
+                for j in 0..n {
+                    let b = ws.prefill_rows[i + j];
+                    ws.logits[b * vocab..(b + 1) * vocab]
                         .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
-                    copy_state_row(nl, cp, &out.conv_state, size, j, &mut conv_out, batch, b);
-                    copy_state_row(nl, sp, &out.ssm_state, size, j, &mut ssm_out, batch, b);
+                    copy_state_row(nl, cp, &out.conv_state, size, j, conv, stride, rows[b]);
+                    copy_state_row(nl, sp, &out.ssm_state, size, j, ssm, stride, rows[b]);
                 }
+                ws.traffic.bytes_scattered += n as u64 * row_bytes;
                 i += n;
             }
         }
@@ -182,58 +340,77 @@ pub trait Executor {
         //    in *lockstep* through compiled decode batches: one decode
         //    call per token position shared across all scan rows, so a
         //    tick's chunk cost is max(chunk lens) device calls, not
-        //    sum(chunk lens). (A compiled varlen chunk kernel — i.e. an
-        //    overridden step_mixed — is still the real fix for
+        //    sum(chunk lens). The scan working set and the per-group
+        //    staging buffers live in `ws` and are reused across every
+        //    position. (A compiled varlen chunk kernel — i.e. an
+        //    overridden step_mixed_into — is still the real fix for
         //    production engines.)
-        if !scan_rows.is_empty() {
-            let k = scan_rows.len();
-            let max_len = scan_rows.iter().map(|&b| lens[b]).max().unwrap();
+        if !ws.scan_rows.is_empty() {
+            let k = ws.scan_rows.len();
+            let max_len = ws.scan_rows.iter().map(|&b| lens[b]).max().unwrap();
             let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
-            // Working states, packed [layers, k, per] in scan-row order.
-            let mut c = vec![0f32; nl * k * cp];
-            let mut s = vec![0f32; nl * k * sp];
-            for (j, &b) in scan_rows.iter().enumerate() {
-                copy_state_row(nl, cp, conv_state, batch, b, &mut c, k, j);
-                copy_state_row(nl, sp, ssm_state, batch, b, &mut s, k, j);
+            // Working states, packed [layers, k, per] in scan-row
+            // order, staged out of the slab once (not per position).
+            ws.scan_conv.clear();
+            ws.scan_conv.resize(nl * k * cp, 0.0);
+            ws.scan_ssm.clear();
+            ws.scan_ssm.resize(nl * k * sp, 0.0);
+            for j in 0..k {
+                let b = ws.scan_rows[j];
+                copy_state_row(nl, cp, conv, stride, rows[b], &mut ws.scan_conv, k, j);
+                copy_state_row(nl, sp, ssm, stride, rows[b], &mut ws.scan_ssm, k, j);
             }
+            ws.traffic.bytes_gathered += k as u64 * row_bytes;
             for t in 0..max_len {
                 // Scan-row indices still holding a token at position t.
-                let active: Vec<usize> =
-                    (0..k).filter(|&j| t < lens[scan_rows[j]]).collect();
-                let mut i = 0usize;
-                while i < active.len() {
-                    let n = (active.len() - i).min(largest);
-                    let group = &active[i..i + n];
-                    let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
-                    let mut toks = Vec::with_capacity(size);
-                    let mut gc = vec![0f32; nl * size * cp];
-                    let mut gs = vec![0f32; nl * size * sp];
-                    for jj in 0..size {
-                        let j = group[jj.min(n - 1)];
-                        toks.push(tokens[offs[scan_rows[j]] + t]);
-                        copy_state_row(nl, cp, &c, k, j, &mut gc, size, jj);
-                        copy_state_row(nl, sp, &s, k, j, &mut gs, size, jj);
+                ws.active.clear();
+                for j in 0..k {
+                    if t < lens[ws.scan_rows[j]] {
+                        ws.active.push(j);
                     }
-                    let out = self.decode(size, &toks, &gc, &gs)?;
-                    for (jj, &j) in group.iter().enumerate() {
-                        copy_state_row(nl, cp, &out.conv_state, size, jj, &mut c, k, j);
-                        copy_state_row(nl, sp, &out.ssm_state, size, jj, &mut s, k, j);
-                        if t + 1 == lens[scan_rows[j]] {
-                            let b = scan_rows[j];
-                            logits[b * vocab..(b + 1) * vocab]
+                }
+                let mut i = 0usize;
+                while i < ws.active.len() {
+                    let n = (ws.active.len() - i).min(largest);
+                    let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
+                    ws.toks.clear();
+                    ws.group_conv.clear();
+                    ws.group_conv.resize(nl * size * cp, 0.0);
+                    ws.group_ssm.clear();
+                    ws.group_ssm.resize(nl * size * sp, 0.0);
+                    for jj in 0..size {
+                        let j = ws.active[i + jj.min(n - 1)];
+                        ws.toks.push(tokens[ws.offs[ws.scan_rows[j]] + t]);
+                        copy_state_row(nl, cp, &ws.scan_conv, k, j, &mut ws.group_conv, size, jj);
+                        copy_state_row(nl, sp, &ws.scan_ssm, k, j, &mut ws.group_ssm, size, jj);
+                    }
+                    ws.traffic.bytes_gathered += size as u64 * row_bytes;
+                    ws.padded_rows += (size - n) as u64;
+                    let out = self.decode(size, &ws.toks, &ws.group_conv, &ws.group_ssm)?;
+                    for jj in 0..n {
+                        let j = ws.active[i + jj];
+                        copy_state_row(nl, cp, &out.conv_state, size, jj, &mut ws.scan_conv, k, j);
+                        copy_state_row(nl, sp, &out.ssm_state, size, jj, &mut ws.scan_ssm, k, j);
+                        if t + 1 == lens[ws.scan_rows[j]] {
+                            let b = ws.scan_rows[j];
+                            ws.logits[b * vocab..(b + 1) * vocab]
                                 .copy_from_slice(&out.logits[jj * vocab..(jj + 1) * vocab]);
                         }
                     }
+                    // Engine output → scan working set (staging).
+                    ws.traffic.bytes_gathered += n as u64 * row_bytes;
                     i += n;
                 }
             }
-            for (j, &b) in scan_rows.iter().enumerate() {
-                copy_state_row(nl, cp, &c, k, j, &mut conv_out, batch, b);
-                copy_state_row(nl, sp, &s, k, j, &mut ssm_out, batch, b);
+            for j in 0..k {
+                let b = ws.scan_rows[j];
+                copy_state_row(nl, cp, &ws.scan_conv, k, j, conv, stride, rows[b]);
+                copy_state_row(nl, sp, &ws.scan_ssm, k, j, ssm, stride, rows[b]);
             }
+            ws.traffic.bytes_scattered += k as u64 * row_bytes;
         }
 
-        Ok(StepOutput { logits, conv_state: conv_out, ssm_state: ssm_out })
+        Ok(())
     }
 }
 
@@ -364,18 +541,25 @@ impl Executor for MambaEngine {
     }
 }
 
+/// Argmax over each row of a `[batch, vocab]` logits buffer, written
+/// into a caller-owned vector (cleared first; reuses its capacity so
+/// the scheduler's sampling step allocates nothing once warm).
+pub fn argmax_rows_into(logits: &[f32], vocab: usize, out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(logits.chunks_exact(vocab).map(|row| {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }));
+}
+
 /// Argmax over each row of a `[batch, vocab]` logits buffer.
 pub fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<i32> {
-    logits
-        .chunks_exact(vocab)
-        .map(|row| {
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(i, _)| i as i32)
-                .unwrap_or(0)
-        })
-        .collect()
+    let mut out = Vec::new();
+    argmax_rows_into(logits, vocab, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -395,5 +579,52 @@ mod tests {
     fn argmax_rows_basic() {
         let logits = [0.1, 0.9, 0.0, 7.0, -1.0, 2.0];
         assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_rows_into_reuses_buffer() {
+        let logits = [0.1, 0.9, 0.0, 7.0, -1.0, 2.0];
+        let mut out = Vec::with_capacity(8);
+        argmax_rows_into(&logits, 3, &mut out);
+        assert_eq!(out, vec![1, 0]);
+        let cap = out.capacity();
+        argmax_rows_into(&logits[..3], 3, &mut out);
+        assert_eq!(out, vec![1]);
+        assert_eq!(out.capacity(), cap, "buffer must be reused, not reallocated");
+    }
+
+    #[test]
+    fn traffic_counters_merge_and_total() {
+        let mut a = TrafficCounters { bytes_gathered: 3, bytes_scattered: 5 };
+        a.merge(TrafficCounters { bytes_gathered: 10, bytes_scattered: 20 });
+        assert_eq!(a.bytes_gathered, 13);
+        assert_eq!(a.bytes_scattered, 25);
+        assert_eq!(a.total(), 38);
+    }
+
+    #[test]
+    fn workspace_reset_logits_reuses_capacity() {
+        let mut ws = Workspace::new();
+        ws.reset_logits(4, 10);
+        assert_eq!(ws.logits.len(), 40);
+        ws.logits[7] = 3.5;
+        let cap = ws.logits.capacity();
+        ws.reset_logits(2, 10);
+        assert_eq!(ws.logits.len(), 20);
+        assert!(ws.logits.iter().all(|&x| x == 0.0), "stale logits must be cleared");
+        assert_eq!(ws.logits.capacity(), cap);
+    }
+
+    #[test]
+    fn workspace_take_drains_counters() {
+        let mut ws = Workspace::new();
+        ws.traffic.bytes_gathered = 8;
+        ws.traffic.bytes_scattered = 4;
+        ws.padded_rows = 2;
+        let t = ws.take_traffic();
+        assert_eq!(t.total(), 12);
+        assert_eq!(ws.traffic(), TrafficCounters::default());
+        assert_eq!(ws.take_padded_rows(), 2);
+        assert_eq!(ws.padded_rows(), 0);
     }
 }

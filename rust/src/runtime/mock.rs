@@ -4,11 +4,19 @@
 //! scheduling and state-management logic be tested hermetically (no
 //! artifacts, no PJRT), including the recurrence-consistency invariant:
 //! prefill(t[..k]) + decode over t[k..] ≡ prefill(t).
+//!
+//! The mock plays the role of a **fused varlen kernel**: its
+//! [`Executor::step_mixed_into`] override advances every row in place
+//! inside the caller's state slab, computes logits only for each row's
+//! *final* position, and performs **zero heap allocation** — the
+//! behaviour a real fused engine (and the paper's resident-intermediate
+//! fusion) provides, which the default trait decomposition merely
+//! emulates through compiled prefill/decode staging.
 
 use anyhow::Result;
 
 use super::artifact::Manifest;
-use super::engine::{Executor, StepOutput};
+use super::engine::{Executor, StepOutput, Workspace};
 
 /// Mock model: per-layer decaying recurrences over tiny state vectors;
 /// logits depend on the whole history through the states.
@@ -45,33 +53,43 @@ impl MockEngine {
         self.manifest.d_inner * self.manifest.d_state
     }
 
-    /// Advance one token for sequence `b` of `batch`, updating the
-    /// layer-major state buffers in place. Returns the logits row.
-    fn step_one(
+    /// Advance one token for slab row `row` of layer-major state
+    /// buffers with `stride` rows per layer, updating the state in
+    /// place. Returns the state summary the logits depend on — no
+    /// allocation, no logits work (callers materialize logits only for
+    /// final positions via [`MockEngine::logits_into`]).
+    fn advance(
         &self,
-        batch: usize,
-        b: usize,
+        stride: usize,
+        row: usize,
         token: i32,
         conv: &mut [f32],
         ssm: &mut [f32],
-    ) -> Vec<f32> {
+    ) -> f32 {
         let t = token as f32;
         let (cp, sp) = (self.conv_per_layer(), self.ssm_per_layer());
         let mut summary = 0f32;
         for l in 0..self.manifest.n_layer {
-            let c = &mut conv[(l * batch + b) * cp..(l * batch + b + 1) * cp];
+            let c = &mut conv[(l * stride + row) * cp..(l * stride + row + 1) * cp];
             c.rotate_left(1);
             c[cp - 1] = (t * 0.01 + l as f32).sin();
             summary += c.iter().sum::<f32>();
-            let s = &mut ssm[(l * batch + b) * sp..(l * batch + b + 1) * sp];
+            let s = &mut ssm[(l * stride + row) * sp..(l * stride + row + 1) * sp];
             for (i, x) in s.iter_mut().enumerate() {
                 *x = 0.5 * *x + ((t + i as f32 + l as f32) * 0.1).cos();
             }
             summary += s.iter().sum::<f32>();
         }
-        (0..self.manifest.vocab)
-            .map(|v| ((v as f32) * 0.3 + summary + t * 0.07).sin())
-            .collect()
+        summary
+    }
+
+    /// Write the logits row for a position whose post-update state
+    /// summary is `summary` and whose input token was `token`.
+    fn logits_into(&self, summary: f32, token: i32, out: &mut [f32]) {
+        let t = token as f32;
+        for (v, x) in out.iter_mut().enumerate() {
+            *x = ((v as f32) * 0.3 + summary + t * 0.07).sin();
+        }
     }
 }
 
@@ -89,15 +107,20 @@ impl Executor for MockEngine {
     fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
         let l = self.manifest.prefill_len;
         anyhow::ensure!(tokens.len() == batch * l, "token shape");
+        let vocab = self.manifest.vocab;
         let mut conv = vec![0f32; batch * self.manifest.conv_state_elems()];
         let mut ssm = vec![0f32; batch * self.manifest.ssm_state_elems()];
-        let mut logits = Vec::with_capacity(batch * self.manifest.vocab);
+        let mut logits = vec![0f32; batch * vocab];
         for b in 0..batch {
-            let mut last = Vec::new();
-            for &t in &tokens[b * l..(b + 1) * l] {
-                last = self.step_one(batch, b, t, &mut conv, &mut ssm);
+            let row = &tokens[b * l..(b + 1) * l];
+            let mut summary = 0f32;
+            for &t in row {
+                summary = self.advance(batch, b, t, &mut conv, &mut ssm);
             }
-            logits.extend(last);
+            // Only the last position's logits are observable — earlier
+            // positions advance state without materializing a row.
+            let last = *row.last().expect("prefill_len >= 1");
+            self.logits_into(summary, last, &mut logits[b * vocab..(b + 1) * vocab]);
         }
         Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
     }
@@ -110,48 +133,59 @@ impl Executor for MockEngine {
         ssm_state: &[f32],
     ) -> Result<StepOutput> {
         anyhow::ensure!(tokens.len() == batch, "token shape");
+        let vocab = self.manifest.vocab;
         let mut conv = conv_state.to_vec();
         let mut ssm = ssm_state.to_vec();
-        let mut logits = Vec::with_capacity(batch * self.manifest.vocab);
+        let mut logits = vec![0f32; batch * vocab];
         for b in 0..batch {
-            logits.extend(self.step_one(batch, b, tokens[b], &mut conv, &mut ssm));
+            let summary = self.advance(batch, b, tokens[b], &mut conv, &mut ssm);
+            self.logits_into(summary, tokens[b], &mut logits[b * vocab..(b + 1) * vocab]);
         }
         Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
     }
 
-    /// Native varlen mixed batch: one scan over all rows, no padding
-    /// and no decomposition — the "fused kernel" the default trait
-    /// implementation emulates (tests pin the two bit-identical).
-    fn step_mixed(
+    /// Native fused varlen batch over caller-owned state slabs: one
+    /// scan over all rows, advancing each row **in place** at
+    /// `rows[b]`, logits computed only for final positions, zero heap
+    /// allocation — the fused kernel the default trait decomposition
+    /// emulates (tests pin the two bit-identical).
+    fn step_mixed_into(
         &self,
         lens: &[usize],
         tokens: &[i32],
-        conv_state: &[f32],
-        ssm_state: &[f32],
-    ) -> Result<StepOutput> {
+        rows: &[usize],
+        conv: &mut [f32],
+        ssm: &mut [f32],
+        stride: usize,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         let batch = lens.len();
         let vocab = self.manifest.vocab;
+        let (nl, cp, sp) =
+            (self.manifest.n_layer, self.conv_per_layer(), self.ssm_per_layer());
         anyhow::ensure!(batch > 0, "empty mixed batch");
+        anyhow::ensure!(rows.len() == batch, "row plan shape");
         anyhow::ensure!(lens.iter().all(|&l| l >= 1), "zero-length mixed row");
+        anyhow::ensure!(rows.iter().all(|&r| r < stride), "row index past stride {stride}");
         anyhow::ensure!(tokens.len() == lens.iter().sum::<usize>(), "token shape");
         anyhow::ensure!(
-            conv_state.len() == batch * self.manifest.conv_state_elems()
-                && ssm_state.len() == batch * self.manifest.ssm_state_elems(),
-            "state shape"
+            conv.len() == nl * stride * cp && ssm.len() == nl * stride * sp,
+            "state slab shape"
         );
-        let mut conv = conv_state.to_vec();
-        let mut ssm = ssm_state.to_vec();
-        let mut logits = vec![0f32; batch * vocab];
+        ws.reset_logits(batch, vocab);
         let mut off = 0usize;
         for (b, &len) in lens.iter().enumerate() {
-            let mut last = Vec::new();
+            let row = rows[b];
+            let mut summary = 0f32;
+            let mut last = 0i32;
             for &t in &tokens[off..off + len] {
-                last = self.step_one(batch, b, t, &mut conv, &mut ssm);
+                summary = self.advance(stride, row, t, conv, ssm);
+                last = t;
             }
-            logits[b * vocab..(b + 1) * vocab].copy_from_slice(&last);
+            self.logits_into(summary, last, &mut ws.logits[b * vocab..(b + 1) * vocab]);
             off += len;
         }
-        Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
+        Ok(())
     }
 }
 
@@ -170,10 +204,14 @@ mod tests {
 
         let mut conv = vec![0f32; e.manifest().conv_state_elems()];
         let mut ssm = vec![0f32; e.manifest().ssm_state_elems()];
-        let mut logits = Vec::new();
+        let mut summary = 0f32;
+        let mut last = 0i32;
         for &t in tokens.iter().chain([99].iter()) {
-            logits = e.step_one(1, 0, t, &mut conv, &mut ssm);
+            summary = e.advance(1, 0, t, &mut conv, &mut ssm);
+            last = t;
         }
+        let mut logits = vec![0f32; e.manifest().vocab];
+        e.logits_into(summary, last, &mut logits);
         assert_eq!(out2.logits, logits);
         assert_eq!(out2.ssm_state, ssm);
     }
@@ -250,8 +288,72 @@ mod tests {
         assert_eq!(last.ssm_state, mono.ssm_state);
     }
 
-    /// Delegates everything except `step_mixed`, so calls fall through
-    /// to the Executor trait's default decomposition.
+    #[test]
+    fn step_mixed_into_respects_row_plan_and_stride() {
+        // The resident-slab call with a sparse row plan (stride wider
+        // than the batch, rows out of order) must agree bit-exactly
+        // with the packed step_mixed wrapper, touch exactly the planned
+        // rows, and leave every other slab row untouched.
+        let e = MockEngine::new();
+        let m = e.manifest().clone();
+        let (cp, sp) = (e.conv_per_layer(), e.ssm_per_layer());
+        let (nl, stride) = (m.n_layer, 5usize);
+        let lens = [3usize, 1, 2];
+        let tokens = [4i32, 5, 6, 7, 8, 9];
+        let rows = [4usize, 0, 2];
+
+        // Seed distinct states for the three sequences via prefill.
+        let seed_toks: Vec<i32> = (0..3 * m.prefill_len as i32).collect();
+        let seeded = e.prefill(3, &seed_toks).unwrap();
+
+        // Packed reference.
+        let want = e
+            .step_mixed(&lens, &tokens, &seeded.conv_state[..], &seeded.ssm_state[..])
+            .unwrap();
+
+        // Slab layout: scatter seeded rows 0..3 to slab rows 4, 0, 2;
+        // poison the unused rows so silent clobbering is caught.
+        let mut conv = vec![-9.0f32; nl * stride * cp];
+        let mut ssm = vec![-9.0f32; nl * stride * sp];
+        for (src, &row) in rows.iter().enumerate() {
+            crate::runtime::engine::copy_state_row(
+                nl, cp, &seeded.conv_state, 3, src, &mut conv, stride, row,
+            );
+            crate::runtime::engine::copy_state_row(
+                nl, sp, &seeded.ssm_state, 3, src, &mut ssm, stride, row,
+            );
+        }
+        let mut ws = Workspace::new();
+        e.step_mixed_into(&lens, &tokens, &rows, &mut conv, &mut ssm, stride, &mut ws)
+            .unwrap();
+        assert_eq!(ws.logits, want.logits);
+        // Planned rows carry the final states; unused rows keep poison.
+        for (src, &row) in rows.iter().enumerate() {
+            for l in 0..nl {
+                assert_eq!(
+                    &conv[(l * stride + row) * cp..(l * stride + row + 1) * cp],
+                    &want.conv_state[(l * 3 + src) * cp..(l * 3 + src + 1) * cp],
+                );
+                assert_eq!(
+                    &ssm[(l * stride + row) * sp..(l * stride + row + 1) * sp],
+                    &want.ssm_state[(l * 3 + src) * sp..(l * 3 + src + 1) * sp],
+                );
+            }
+        }
+        for untouched in [1usize, 3] {
+            for l in 0..nl {
+                assert!(conv[(l * stride + untouched) * cp..(l * stride + untouched + 1) * cp]
+                    .iter()
+                    .all(|&x| x == -9.0));
+            }
+        }
+        // The fused override stages nothing: zero bytes moved.
+        assert_eq!(ws.traffic().total(), 0);
+        assert_eq!(ws.padded_rows(), 0);
+    }
+
+    /// Delegates everything except `step_mixed_into`, so calls fall
+    /// through to the Executor trait's default decomposition.
     struct DefaultMixed(MockEngine);
 
     impl Executor for DefaultMixed {
@@ -315,6 +417,45 @@ mod tests {
     }
 
     #[test]
+    fn default_decomposition_counts_staging_traffic() {
+        // The default path stages through compiled entry points, so its
+        // traffic counters must be non-zero for a batch that carries
+        // state — the quantity the resident hot path eliminates.
+        let deflt = DefaultMixed(MockEngine::new());
+        let m = deflt.manifest().clone();
+        let (cp, sp) = (m.conv_state_elems() / m.n_layer, m.ssm_state_elems() / m.n_layer);
+        let batch = 2usize;
+        let seeded = deflt.0.prefill(2, &(0..2 * m.prefill_len as i32).collect::<Vec<_>>()).unwrap();
+        let mut conv = seeded.conv_state.clone();
+        let mut ssm = seeded.ssm_state.clone();
+        let rows: Vec<usize> = (0..batch).collect();
+        let mut ws = Workspace::new();
+        deflt
+            .step_mixed_into(&[1, 1], &[3, 4], &rows, &mut conv, &mut ssm, batch, &mut ws)
+            .unwrap();
+        let t = ws.traffic();
+        // Two decode rows fit a compiled batch of 2: gather 2 rows in,
+        // scatter 2 rows out.
+        let row_bytes = (m.n_layer * (cp + sp) * 4) as u64;
+        assert_eq!(t.bytes_gathered, 2 * row_bytes);
+        assert_eq!(t.bytes_scattered, 2 * row_bytes);
+        assert_eq!(ws.padded_rows(), 0);
+
+        // Three decode rows pad up to the compiled batch of 4.
+        let seeded3 = deflt.0.prefill(3, &(0..3 * m.prefill_len as i32).collect::<Vec<_>>()).unwrap();
+        let mut conv3 = seeded3.conv_state.clone();
+        let mut ssm3 = seeded3.ssm_state.clone();
+        let rows3: Vec<usize> = (0..3).collect();
+        let mut ws3 = Workspace::new();
+        deflt
+            .step_mixed_into(&[1, 1, 1], &[3, 4, 5], &rows3, &mut conv3, &mut ssm3, 3, &mut ws3)
+            .unwrap();
+        assert_eq!(ws3.padded_rows(), 1);
+        assert_eq!(ws3.traffic().bytes_gathered, 4 * row_bytes);
+        assert_eq!(ws3.traffic().bytes_scattered, 3 * row_bytes);
+    }
+
+    #[test]
     fn step_mixed_rejects_bad_shapes() {
         let e = MockEngine::new();
         let zeros_c = vec![0f32; e.manifest().conv_state_elems()];
@@ -322,5 +463,11 @@ mod tests {
         assert!(e.step_mixed(&[], &[], &[], &[]).is_err());
         assert!(e.step_mixed(&[0], &[], &zeros_c, &zeros_s).is_err());
         assert!(e.step_mixed(&[2], &[1], &zeros_c, &zeros_s).is_err());
+        // Row plan out of range / wrong length.
+        let mut ws = Workspace::new();
+        let mut c = zeros_c.clone();
+        let mut s = zeros_s.clone();
+        assert!(e.step_mixed_into(&[1], &[1], &[1], &mut c, &mut s, 1, &mut ws).is_err());
+        assert!(e.step_mixed_into(&[1], &[1], &[], &mut c, &mut s, 1, &mut ws).is_err());
     }
 }

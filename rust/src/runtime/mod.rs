@@ -6,5 +6,7 @@ pub mod engine;
 pub mod mock;
 
 pub use artifact::{Golden, Manifest};
-pub use engine::{argmax_rows, Executor, MambaEngine, StepOutput};
+pub use engine::{
+    argmax_rows, argmax_rows_into, Executor, MambaEngine, StepOutput, TrafficCounters, Workspace,
+};
 pub use mock::MockEngine;

@@ -118,6 +118,12 @@ fn scheduler_surfaces_engine_errors() {
         }
     }
     assert!(saw_error, "error was swallowed");
+    // After an engine error the scheduler is poisoned: the resident
+    // path may have advanced arena rows in place, so a retried tick
+    // would feed consumed tokens to already-advanced state. It must
+    // refuse to run instead.
+    let err = s.tick().expect_err("poisoned scheduler must not tick again");
+    assert!(err.to_string().contains("poisoned"), "unexpected error: {err}");
 }
 
 #[test]
