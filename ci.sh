@@ -36,19 +36,40 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== smoke: benches + examples compile =="
     cargo check --release --benches --examples
 
-    # Perf trajectory gate: the hotpath bench's --quick mode runs the
-    # deterministic mixed-traffic interference scenario and asserts the
-    # resident state path moves >= 10x fewer state bytes than the
-    # gather/scatter reference. The gate is on *counters* (same
-    # workload, same bytes, every run), never on wall time, and the
-    # machine-readable BENCH_hotpath.json records the trajectory.
-    echo "== hotpath bench: quick traffic-counter gate =="
+    # Offline plan autotune: the coarse grid must sweep cleanly and
+    # produce a loadable PlanTable artifact (the serving fast path).
+    # The quick grid itself is pinned byte-for-byte by the golden
+    # snapshot in rust/tests/golden/plan_table_quick.json.
+    echo "== planner autotune: quick grid =="
+    cargo run --release --bin mambalaya -- autotune --quick --out PLAN_TABLE.json
+    if [ ! -s PLAN_TABLE.json ]; then
+        echo "ERROR: PLAN_TABLE.json missing or empty" >&2
+        exit 1
+    fi
+    echo "   PLAN_TABLE.json written"
+
+    # Perf trajectory gates: the hotpath bench's --quick mode runs
+    # (1) the deterministic mixed-traffic interference scenario and
+    # asserts the resident state path moves >= 10x fewer state bytes
+    # than the gather/scatter reference, and (2) the adaptive-vs-static
+    # plan-selection comparison on the bundled scenarios, asserting the
+    # adaptive planner is never worse than the best static plan, its
+    # predictor stays within 2x of the mock's modeled cost, and it
+    # picks different plans for prefill-heavy vs decode-heavy traffic.
+    # All gates are on *counters* (same workload, same numbers, every
+    # run), never on wall time; BENCH_hotpath.json and
+    # BENCH_planner.json record the trajectory.
+    echo "== hotpath bench: quick counter gates (traffic + planner) =="
     cargo bench --bench hotpath -- --quick
     if [ ! -s BENCH_hotpath.json ]; then
         echo "ERROR: BENCH_hotpath.json missing or empty" >&2
         exit 1
     fi
-    echo "   BENCH_hotpath.json written"
+    if [ ! -s BENCH_planner.json ]; then
+        echo "ERROR: BENCH_planner.json missing or empty" >&2
+        exit 1
+    fi
+    echo "   BENCH_hotpath.json + BENCH_planner.json written"
 
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="

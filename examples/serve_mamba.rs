@@ -19,6 +19,16 @@
 //!   costs 1, each chunk its length). This caps tick latency and
 //!   therefore the inter-token gap decoding requests observe.
 //!
+//! ## Plan selection
+//!
+//! `--plan {static:<name>|adaptive|table:<path>}` picks the fusion-plan
+//! policy (default `adaptive`): the planner matches each tick's
+//! prefill/decode mix to the analytically best fusion variant (or a
+//! fixed plan, or an autotuned `PlanTable` from `mambalaya autotune`).
+//! The per-run summary prints the switch count, the dwell-time
+//! histogram and per-plan tick counts next to the `state traffic:`
+//! line.
+//!
 //! ## Modes
 //!
 //! * `--mock` — serve on the deterministic in-process mock engine
@@ -32,20 +42,28 @@
 
 use std::time::Instant;
 
+use mambalaya::bench_util::ServeScenario;
 use mambalaya::coordinator::{BatchPolicy, Request, Server, WorkloadGen};
+use mambalaya::planner::PlanSpec;
 use mambalaya::runtime::{Executor, Golden, MambaEngine, Manifest, MockEngine};
 use mambalaya::util::Args;
 
 /// Serve `reqs` through a one-worker server and print the outcome.
-fn drive<E, F>(factory: F, policy: BatchPolicy, reqs: Vec<Request>) -> anyhow::Result<()>
+fn drive<E, F>(
+    factory: F,
+    policy: BatchPolicy,
+    spec: PlanSpec,
+    reqs: Vec<Request>,
+) -> anyhow::Result<()>
 where
     E: Executor,
     F: FnOnce() -> anyhow::Result<E> + Send + 'static,
 {
     let n_requests = reqs.len();
     let expected_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+    let spec_name = spec.name();
     let t0 = Instant::now();
-    let mut server = Server::start(vec![factory], policy);
+    let mut server = Server::start_planned(vec![factory], policy, spec);
     let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
     let mut total_tokens = 0usize;
     let mut worst_latency = 0f64;
@@ -62,6 +80,18 @@ where
     // report line next to budget_use): zero gathered/scattered on a
     // fused engine in steady state — state lives resident in the arena.
     let t = server.traffic();
+    // Plan-selection summary: which fusion plans the ticks ran under,
+    // how often the planner switched, and how long plans dwelt.
+    let dwell: Vec<String> = t.plan_dwell_hist.iter().map(|d| d.to_string()).collect();
+    println!(
+        "plan: spec={spec_name} switches={} ticks=[{}] dwell_hist=[{}] predicted={}cyc modeled={}cyc err={:.2}x",
+        t.plan_switches,
+        t.plans_summary(),
+        dwell.join(","),
+        t.predicted_cycles,
+        t.modeled_cycles,
+        t.prediction_error(),
+    );
     println!(
         "state traffic: gathered={}B scattered={}B resident={}B padded_rows={}",
         t.bytes_gathered, t.bytes_scattered, t.state_bytes_resident, t.padded_rows
@@ -82,30 +112,24 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_requests = args.get_u64("requests", 24) as usize;
     let policy = BatchPolicy::from_args(&args);
+    let spec = PlanSpec::parse(args.get_or("plan", "adaptive"))?;
 
     if args.flag("mock") {
-        // Mixed traffic on the mock engine: mostly short prompts, with
-        // every fourth request a long prompt that spans many chunk
-        // ticks — decode keeps advancing throughout (watch
-        // max_tick_tokens vs the token budget in the report line).
+        // Mixed traffic on the mock engine (the shared scenario
+        // builder): mostly short prompts, with every fourth request a
+        // long prompt that spans many chunk ticks — decode keeps
+        // advancing throughout (watch max_tick_tokens vs the token
+        // budget in the report line).
         let probe = MockEngine::new();
         let vocab = probe.manifest().vocab;
         println!(
-            "mock serving: chunk_tokens={} token_budget={}",
-            policy.chunk_tokens, policy.token_budget
+            "mock serving: chunk_tokens={} token_budget={} plan={}",
+            policy.chunk_tokens,
+            policy.token_budget,
+            spec.name()
         );
-        let mut short = WorkloadGen::new(7, vocab, 6, 2, 24).with_prompt_range(2, 12);
-        let reqs: Vec<Request> = (0..n_requests)
-            .map(|i| {
-                let mut r = short.next_request();
-                if i % 4 == 3 {
-                    // A long prompt: 10+ chunks at the default size.
-                    r.prompt = (0..48).map(|x| (x + i as i32) % vocab as i32).collect();
-                }
-                r
-            })
-            .collect();
-        return drive(|| Ok(MockEngine::new()), policy, reqs);
+        let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
+        return drive(|| Ok(MockEngine::new()), policy, spec, reqs);
     }
 
     let dir = args.get_or("artifacts", "artifacts").to_string();
@@ -141,5 +165,5 @@ fn main() -> anyhow::Result<()> {
     let mut gen = WorkloadGen::new(7, manifest.vocab, manifest.prefill_len, 2, 24)
         .with_prompt_range(1, 2 * manifest.prefill_len);
     let reqs: Vec<Request> = (0..n_requests).map(|_| gen.next_request()).collect();
-    drive(move || MambaEngine::load(&dir), policy, reqs)
+    drive(move || MambaEngine::load(&dir), policy, spec, reqs)
 }

@@ -24,14 +24,14 @@
 use std::time::{Duration, Instant};
 
 use mambalaya::arch::ArchSpec;
-use mambalaya::bench_util::{bench_config, black_box, BenchResult};
+use mambalaya::bench_util::{bench_config, black_box, BenchResult, ServeScenario};
 use mambalaya::cascade::{mamba1, ModelConfig};
 use mambalaya::coordinator::{
-    serve_all, BatchPolicy, Request, Scheduler, StateArena, StatePath, TrafficSnapshot,
-    WorkloadGen,
+    serve_all, BatchPolicy, Scheduler, StateArena, StatePath, TrafficSnapshot, WorkloadGen,
 };
 use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
 use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
+use mambalaya::planner::{PlanChoice, Planner, PlanSpec};
 use mambalaya::runtime::{Executor, MockEngine, Workspace};
 use mambalaya::util::{Args, JsonValue};
 
@@ -40,8 +40,9 @@ fn b<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
 }
 
 /// One interference run: six short-prompt decoders ride along while a
-/// 512-token prompt prefills. Returns the scheduler's outcome for the
-/// JSON report and the gate assertions.
+/// 512-token prompt prefills (the shared `ServeScenario::interference`
+/// mix). Returns the scheduler's outcome for the JSON report and the
+/// gate assertions.
 struct InterferenceOutcome {
     name: &'static str,
     ticks: u64,
@@ -56,18 +57,7 @@ struct InterferenceOutcome {
 
 fn interference(name: &'static str, policy: BatchPolicy, path: StatePath) -> InterferenceOutcome {
     let vocab = MockEngine::new().manifest().vocab;
-    let mut reqs: Vec<Request> = (0..6)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![(i % 7) as i32 + 1; 4],
-            max_new_tokens: 64,
-        })
-        .collect();
-    reqs.push(Request {
-        id: 99,
-        prompt: (0..512).map(|x| x % vocab as i32).collect(),
-        max_new_tokens: 4,
-    });
+    let reqs = ServeScenario::interference().requests(vocab);
 
     let t0 = Instant::now();
     let mut s = Scheduler::with_path(MockEngine::new(), policy, path);
@@ -208,13 +198,7 @@ fn main() {
     // path pays. The counters are deterministic — same workload, same
     // bytes — so CI gates on them rather than on wall time.
     println!("== mixed-traffic interference (mock engine) ==");
-    let chunked = BatchPolicy {
-        chunk_tokens: 16,
-        token_budget: 32,
-        max_chunk_rows: 2,
-        max_running: 8,
-        decode_priority_threshold: 8,
-    };
+    let chunked = ServeScenario::interference().policy;
     let monolithic = BatchPolicy { chunk_tokens: 0, token_budget: 1 << 20, ..chunked.clone() };
     let runs = [
         interference("chunked_resident", chunked.clone(), StatePath::Resident),
@@ -280,10 +264,155 @@ fn main() {
         .expect("writing BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json (traffic gate: PASS)");
 
+    planner_gate();
+
     if !quick {
         println!("\n== hot-path microbenchmarks ==");
         for r in &results {
             println!("{}", r.report());
         }
     }
+}
+
+/// One scheduler run of a bundled scenario under a plan spec. The
+/// adaptive runs use dwell 1 (pure per-bucket argmin), which is the
+/// configuration the counter gate is exact for: the per-tick argmin of
+/// the modeled cost can never exceed any fixed plan's cost on the same
+/// ticks.
+fn planner_run(sc: &ServeScenario, planner: Planner) -> (Vec<Vec<i32>>, TrafficSnapshot) {
+    let vocab = MockEngine::new().manifest().vocab;
+    let mut s = Scheduler::with_planner(
+        MockEngine::new(),
+        sc.policy.clone(),
+        StatePath::Resident,
+        planner,
+    );
+    for r in sc.requests(vocab) {
+        s.submit(r).unwrap();
+    }
+    let mut resps = s.run_until_drained().unwrap();
+    resps.sort_by_key(|r| r.id);
+    let tokens = resps.into_iter().map(|r| r.tokens).collect();
+    (tokens, s.metrics().traffic_snapshot())
+}
+
+/// Adaptive-vs-static plan selection on the bundled scenarios, gated on
+/// the deterministic modeled-cost counters (never wall time):
+///
+/// * token outputs are bit-identical across every plan choice;
+/// * the adaptive planner's modeled cycles are ≤ every static plan's
+///   on every scenario (so it is never worse than the best static);
+/// * its prediction error on the mock stays within 2×;
+/// * and it demonstrably selects different plans for the
+///   prefill-heavy and decode-heavy scenarios.
+///
+/// Writes `BENCH_planner.json` with the counter-based speedup ratios.
+fn planner_gate() {
+    println!("\n== adaptive plan selection (mock engine, modeled-cost counters) ==");
+    let mut scenarios_json = JsonValue::Arr(vec![]);
+    let mut dominant: Vec<(String, String)> = Vec::new();
+    for sc in ServeScenario::bundled() {
+        let (adaptive_tokens, adaptive) =
+            planner_run(&sc, Planner::with_dwell(PlanSpec::Adaptive, 1));
+        let mut statics = Vec::new();
+        for choice in PlanChoice::candidates() {
+            let (tokens, snap) = planner_run(&sc, Planner::new(PlanSpec::Static(choice)));
+            assert_eq!(
+                tokens, adaptive_tokens,
+                "{}: tokens diverged under static:{}",
+                sc.name,
+                choice.name()
+            );
+            statics.push((choice, snap));
+        }
+
+        // The counter gate: adaptive ≤ every static plan.
+        let mut best_static = u64::MAX;
+        let mut statics_json = JsonValue::Arr(vec![]);
+        for (choice, snap) in &statics {
+            best_static = best_static.min(snap.modeled_cycles);
+            assert!(
+                adaptive.modeled_cycles <= snap.modeled_cycles,
+                "{}: adaptive {} cycles worse than static:{} {}",
+                sc.name,
+                adaptive.modeled_cycles,
+                choice.name(),
+                snap.modeled_cycles
+            );
+            let mut o = JsonValue::obj();
+            o.set("plan", choice.name())
+                .set("modeled_cycles", snap.modeled_cycles)
+                .set("modeled_bytes", snap.modeled_bytes)
+                .set(
+                    "speedup_vs_adaptive",
+                    (snap.modeled_cycles as f64 / adaptive.modeled_cycles.max(1) as f64 * 1e3)
+                        .round()
+                        / 1e3,
+                );
+            statics_json.push(o);
+        }
+
+        // Predictor sanity: the mock behaves within 2× of prediction.
+        let err = adaptive.prediction_error();
+        assert!(
+            (0.5..=2.0).contains(&err),
+            "{}: predictor error {err:.3} outside 2x",
+            sc.name
+        );
+
+        let dom = adaptive
+            .dominant_plan()
+            .map(|(c, _)| c.name())
+            .unwrap_or_default();
+        println!(
+            "  {:<14} adaptive={:<10} cycles (best static {:<10}) plans={} switches={} err={:.2}x",
+            sc.name,
+            adaptive.modeled_cycles,
+            best_static,
+            dom,
+            adaptive.plan_switches,
+            err
+        );
+        dominant.push((sc.name.to_string(), dom.clone()));
+
+        let mut o = JsonValue::obj();
+        o.set("scenario", sc.name)
+            .set("adaptive_modeled_cycles", adaptive.modeled_cycles)
+            .set("adaptive_modeled_bytes", adaptive.modeled_bytes)
+            .set("adaptive_plan_switches", adaptive.plan_switches)
+            .set("adaptive_dominant_plan", dom.as_str())
+            .set("best_static_modeled_cycles", best_static)
+            .set("prediction_error", (err * 1e3).round() / 1e3)
+            .set("statics", statics_json)
+            .set("pass", adaptive.modeled_cycles <= best_static);
+        scenarios_json.push(o);
+    }
+
+    // The phase flip: prefill-heavy and decode-heavy pick differently.
+    let by_name = |n: &str| {
+        dominant
+            .iter()
+            .find(|(s, _)| s == n)
+            .map(|(_, d)| d.clone())
+            .expect("bundled scenario ran")
+    };
+    let (pre, dec) = (by_name("prefill_heavy"), by_name("decode_heavy"));
+    assert_ne!(
+        pre, dec,
+        "adaptive planner failed to switch plans between prefill-heavy and decode-heavy"
+    );
+
+    let mut gate = JsonValue::obj();
+    gate.set("adaptive_never_worse_than_best_static", true)
+        .set("prefill_heavy_plan", pre.as_str())
+        .set("decode_heavy_plan", dec.as_str())
+        .set("phase_flip", true)
+        .set("pass", true);
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "planner")
+        .set("scenarios", scenarios_json)
+        .set("gate", gate);
+    std::fs::write("BENCH_planner.json", doc.to_string())
+        .expect("writing BENCH_planner.json");
+    println!("wrote BENCH_planner.json (planner gate: PASS)");
 }

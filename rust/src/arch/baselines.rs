@@ -30,7 +30,7 @@ pub enum Staging {
 }
 
 /// A named baseline design point.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Baseline {
     /// Best-case unfused (Table I / Figure 2 reference).
     BestUnfused,

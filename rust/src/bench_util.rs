@@ -1,8 +1,149 @@
 //! Mini benchmark harness (no criterion in the vendored crate set):
 //! warmup + timed iterations with mean / p50 / p95 and a throughput
-//! hook. Used by `cargo bench` targets (harness = false).
+//! hook, plus the **shared serving-scenario builder** — the request
+//! mixes and batch policies the hotpath bench, `serve_mamba` and the
+//! planner gates all drive, defined once so the "bundled scenarios"
+//! CI gates on are the same workloads everywhere.
 
 use std::time::{Duration, Instant};
+
+use crate::coordinator::{BatchPolicy, Request, WorkloadGen};
+
+/// The request-mix shape of a [`ServeScenario`] (kept as data so the
+/// mix can never desynchronize from the scenario name).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ScenarioMix {
+    PrefillHeavy,
+    DecodeHeavy,
+    Interference,
+}
+
+/// A named, deterministic serving workload: a batch policy plus a
+/// request mix. The bundled set covers the paper's phase regimes —
+/// prefill-heavy, decode-heavy, and the mixed long-prompt interference
+/// scenario — so plan-selection quality is measured on the same axis
+/// the paper sweeps (context:generation ratio).
+#[derive(Debug, Clone)]
+pub struct ServeScenario {
+    pub name: &'static str,
+    pub policy: BatchPolicy,
+    mix: ScenarioMix,
+}
+
+impl ServeScenario {
+    /// Prefill-dominated: four monolithic-chunk 4096-token prompts,
+    /// one sampled token each — every tick is (almost) pure prefill at
+    /// the paper's reference context length.
+    pub fn prefill_heavy() -> ServeScenario {
+        ServeScenario {
+            name: "prefill_heavy",
+            policy: BatchPolicy {
+                chunk_tokens: 4096,
+                token_budget: 4096,
+                max_chunk_rows: 1,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::PrefillHeavy,
+        }
+    }
+
+    /// Decode-dominated: eight 3-token prompts generating 48 tokens
+    /// each — after two admission ticks, every tick is a batched
+    /// decode step.
+    pub fn decode_heavy() -> ServeScenario {
+        ServeScenario {
+            name: "decode_heavy",
+            policy: BatchPolicy {
+                chunk_tokens: 4,
+                token_budget: 16,
+                max_chunk_rows: 4,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::DecodeHeavy,
+        }
+    }
+
+    /// Mixed interference: six short-prompt decoders ride along while
+    /// one 512-token prompt prefills in chunks (the hotpath bench's
+    /// long-standing scenario).
+    pub fn interference() -> ServeScenario {
+        ServeScenario {
+            name: "interference",
+            policy: BatchPolicy {
+                chunk_tokens: 16,
+                token_budget: 32,
+                max_chunk_rows: 2,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::Interference,
+        }
+    }
+
+    /// The scenarios the planner CI gates run on.
+    pub fn bundled() -> Vec<ServeScenario> {
+        vec![
+            ServeScenario::prefill_heavy(),
+            ServeScenario::decode_heavy(),
+            ServeScenario::interference(),
+        ]
+    }
+
+    /// The scenario's deterministic request mix for a `vocab`-sized
+    /// model.
+    pub fn requests(&self, vocab: usize) -> Vec<Request> {
+        let v = vocab as i32;
+        match self.mix {
+            ScenarioMix::PrefillHeavy => (0..4)
+                .map(|i| Request {
+                    id: i,
+                    prompt: (0..4096).map(|x| (x + i as i32) % v).collect(),
+                    max_new_tokens: 1,
+                })
+                .collect(),
+            ScenarioMix::DecodeHeavy => (0..8)
+                .map(|i| Request {
+                    id: i,
+                    prompt: vec![(i % 7) as i32 + 1; 3],
+                    max_new_tokens: 48,
+                })
+                .collect(),
+            ScenarioMix::Interference => {
+                let mut reqs: Vec<Request> = (0..6)
+                    .map(|i| Request {
+                        id: i,
+                        prompt: vec![(i % 7) as i32 + 1; 4],
+                        max_new_tokens: 64,
+                    })
+                    .collect();
+                reqs.push(Request {
+                    id: 99,
+                    prompt: (0..512).map(|x| x % v).collect(),
+                    max_new_tokens: 4,
+                });
+                reqs
+            }
+        }
+    }
+
+    /// `serve_mamba --mock`'s mixed traffic: mostly short prompts, with
+    /// every fourth request a long prompt that spans many chunk ticks.
+    pub fn mixed_traffic(n_requests: usize, vocab: usize) -> Vec<Request> {
+        let mut short = WorkloadGen::new(7, vocab, 6, 2, 24).with_prompt_range(2, 12);
+        (0..n_requests)
+            .map(|i| {
+                let mut r = short.next_request();
+                if i % 4 == 3 {
+                    // A long prompt: 10+ chunks at the default size.
+                    r.prompt = (0..48).map(|x| (x + i as i32) % vocab as i32).collect();
+                }
+                r
+            })
+            .collect()
+    }
+}
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -82,6 +223,27 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scenarios_are_deterministic_and_well_formed() {
+        for sc in ServeScenario::bundled() {
+            let a = sc.requests(17);
+            let b = sc.requests(17);
+            assert!(!a.is_empty());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.max_new_tokens, y.max_new_tokens);
+                assert!(!x.prompt.is_empty());
+                assert!(x.max_new_tokens >= 1);
+            }
+        }
+        let m = ServeScenario::mixed_traffic(24, 17);
+        assert_eq!(m.len(), 24);
+        assert_eq!(m, ServeScenario::mixed_traffic(24, 17));
+        assert!(m.iter().any(|r| r.prompt.len() >= 48), "long prompts present");
+    }
 
     #[test]
     fn bench_produces_ordered_percentiles() {

@@ -1,17 +1,40 @@
 //! Serving metrics: latency percentiles, throughput, batch occupancy,
 //! continuous-batching health (chunk counts, per-tick token cost,
-//! prefill queue depth), and **state-traffic accounting**
+//! prefill queue depth), **state-traffic accounting**
 //! (bytes gathered/scattered, padded decode rows — the host-side
-//! analogue of the paper's inter-operator memory-traffic numbers).
+//! analogue of the paper's inter-operator memory-traffic numbers), and
+//! **plan-selection accounting** (which fusion plan each tick executed,
+//! switch counts with dwell-length histogram, and predicted-vs-modeled
+//! device cost so CI can gate on predictor sanity).
 //! All counters are monotone non-decreasing — tests rely on that to
 //! detect double-counting. `state_bytes_resident` is the one gauge.
 
 use std::time::Instant;
 
+use crate::planner::{PlanChoice, PlanDecision};
 use crate::runtime::engine::TrafficCounters;
 
-/// A machine-readable snapshot of the state-traffic counters, for
-/// aggregation across workers and for the bench JSON output.
+/// Dwell-length histogram buckets (ticks a plan ran before a switch):
+/// `1`, `2`, `3..=4`, `5..=8`, `9..=16`, `17..=32`, `33..=64`, `65+`.
+pub const DWELL_BUCKETS: usize = 8;
+
+/// Histogram bucket for a dwell length.
+fn dwell_bucket(dwell: u64) -> usize {
+    match dwell {
+        0 | 1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        17..=32 => 5,
+        33..=64 => 6,
+        _ => 7,
+    }
+}
+
+/// A machine-readable snapshot of the state-traffic and plan-selection
+/// counters, for aggregation across workers and for the bench JSON
+/// output.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TrafficSnapshot {
     /// State bytes copied out of resident storage / between staging.
@@ -22,6 +45,63 @@ pub struct TrafficSnapshot {
     pub state_bytes_resident: u64,
     /// Padded rows shipped to compiled decode batches.
     pub padded_rows: u64,
+    /// Plan switches the planner performed.
+    pub plan_switches: u64,
+    /// Ticks executed under each plan, indexed by
+    /// [`PlanChoice::index`].
+    pub ticks_per_plan: [u64; PlanChoice::COUNT],
+    /// Dwell lengths at switch points, histogrammed over
+    /// [`DWELL_BUCKETS`].
+    pub plan_dwell_hist: [u64; DWELL_BUCKETS],
+    /// Planner-predicted device cost, summed over ticks.
+    pub predicted_cycles: u64,
+    pub predicted_bytes: u64,
+    /// Engine-modeled device cost, summed over ticks (the mock charges
+    /// the executed plan's analytical cost; zero on engines that don't
+    /// model it).
+    pub modeled_cycles: u64,
+    pub modeled_bytes: u64,
+}
+
+impl TrafficSnapshot {
+    /// The plan most ticks executed under, with its tick count.
+    pub fn dominant_plan(&self) -> Option<(PlanChoice, u64)> {
+        let all = PlanChoice::all();
+        self.ticks_per_plan
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t > 0)
+            .max_by_key(|(_, &t)| t)
+            .map(|(i, &t)| (all[i], t))
+    }
+
+    /// Modeled-over-predicted cycle ratio (predictor sanity; 1.0 when
+    /// the engine behaves exactly as predicted, 0.0 when nothing was
+    /// predicted).
+    pub fn prediction_error(&self) -> f64 {
+        if self.predicted_cycles == 0 {
+            return 0.0;
+        }
+        self.modeled_cycles as f64 / self.predicted_cycles as f64
+    }
+
+    /// `name:ticks` pairs for every plan that ran (`-` when none) —
+    /// shared by the report line and the serving CLIs.
+    pub fn plans_summary(&self) -> String {
+        let all = PlanChoice::all();
+        let parts: Vec<String> = self
+            .ticks_per_plan
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t > 0)
+            .map(|(i, &t)| format!("{}:{}", all[i].name(), t))
+            .collect();
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
 }
 
 /// Online metrics collector (single scheduler thread, no locking).
@@ -54,6 +134,18 @@ pub struct Metrics {
     /// Padded rows shipped to compiled decode batches by the default
     /// engine decomposition (a fused engine pads nothing).
     pub padded_rows: u64,
+    /// Plan switches the planner performed.
+    pub plan_switches: u64,
+    /// Ticks executed under each plan ([`PlanChoice::index`]).
+    pub ticks_per_plan: [u64; PlanChoice::COUNT],
+    /// Dwell lengths at switch points (histogram).
+    pub plan_dwell_hist: [u64; DWELL_BUCKETS],
+    /// Planner-predicted device cost, summed over ticks.
+    pub predicted_cycles: u64,
+    pub predicted_bytes: u64,
+    /// Engine-modeled device cost, summed over ticks.
+    pub modeled_cycles: u64,
+    pub modeled_bytes: u64,
     /// Sum of (tick tokens / token budget) per tick, for mean budget
     /// utilization. (Engine-level padding to compiled batch sizes
     /// happens inside `step_mixed_into` and surfaces as `padded_rows`.)
@@ -81,6 +173,13 @@ impl Metrics {
             bytes_scattered: 0,
             state_bytes_resident: 0,
             padded_rows: 0,
+            plan_switches: 0,
+            ticks_per_plan: [0; PlanChoice::COUNT],
+            plan_dwell_hist: [0; DWELL_BUCKETS],
+            predicted_cycles: 0,
+            predicted_bytes: 0,
+            modeled_cycles: 0,
+            modeled_bytes: 0,
             occupancy_sum: 0.0,
             queue_depth_sum: 0.0,
             queue_samples: 0,
@@ -124,6 +223,20 @@ impl Metrics {
         self.padded_rows += padded;
     }
 
+    /// Record one tick's plan decision and the engine's modeled cost
+    /// for it (drained from the workspace after the call).
+    pub fn record_plan(&mut self, d: &PlanDecision, modeled_cycles: u64, modeled_bytes: u64) {
+        self.ticks_per_plan[d.choice.index()] += 1;
+        if d.switched {
+            self.plan_switches += 1;
+            self.plan_dwell_hist[dwell_bucket(d.ended_dwell.unwrap_or(0))] += 1;
+        }
+        self.predicted_cycles += d.predicted.cycles;
+        self.predicted_bytes += d.predicted.bytes;
+        self.modeled_cycles += modeled_cycles;
+        self.modeled_bytes += modeled_bytes;
+    }
+
     /// Snapshot of the traffic counters (aggregation / bench JSON).
     pub fn traffic_snapshot(&self) -> TrafficSnapshot {
         TrafficSnapshot {
@@ -131,6 +244,13 @@ impl Metrics {
             bytes_scattered: self.bytes_scattered,
             state_bytes_resident: self.state_bytes_resident,
             padded_rows: self.padded_rows,
+            plan_switches: self.plan_switches,
+            ticks_per_plan: self.ticks_per_plan,
+            plan_dwell_hist: self.plan_dwell_hist,
+            predicted_cycles: self.predicted_cycles,
+            predicted_bytes: self.predicted_bytes,
+            modeled_cycles: self.modeled_cycles,
+            modeled_bytes: self.modeled_bytes,
         }
     }
 
@@ -167,10 +287,12 @@ impl Metrics {
         let mut total = self.total.clone();
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
         total.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let snap = self.traffic_snapshot();
         format!(
             "requests={} tokens={} ({:.1} tok/s) chunks={} prefill_tokens={} decode_steps={} \
              ticks={} max_tick_tokens={} queue={:.1} budget_use={:.2} \
              gathered={}B scattered={}B resident={}B padded_rows={} \
+             plans={} plan_switches={} plan_err={:.2}x \
              ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
             self.requests_completed,
             self.tokens_generated,
@@ -186,6 +308,9 @@ impl Metrics {
             self.bytes_scattered,
             self.state_bytes_resident,
             self.padded_rows,
+            snap.plans_summary(),
+            self.plan_switches,
+            snap.prediction_error(),
             Self::pct(&ttft, 0.5) * 1e3,
             Self::pct(&ttft, 0.99) * 1e3,
             Self::pct(&total, 0.5) * 1e3,
@@ -217,6 +342,70 @@ impl Default for Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fusion::FusionVariant;
+    use crate::planner::TickEstimate;
+
+    #[test]
+    fn plan_accounting_accumulates() {
+        let mut m = Metrics::new();
+        let ri = PlanChoice::Variant(FusionVariant::RIOnly);
+        let ff = PlanChoice::Variant(FusionVariant::FullyFused);
+        m.record_plan(
+            &PlanDecision {
+                choice: ff,
+                switched: false,
+                ended_dwell: None,
+                predicted: TickEstimate { cycles: 100, bytes: 1000 },
+            },
+            110,
+            1000,
+        );
+        m.record_plan(
+            &PlanDecision {
+                choice: ri,
+                switched: true,
+                ended_dwell: Some(6),
+                predicted: TickEstimate { cycles: 50, bytes: 700 },
+            },
+            50,
+            700,
+        );
+        assert_eq!(m.plan_switches, 1);
+        assert_eq!(m.ticks_per_plan[ff.index()], 1);
+        assert_eq!(m.ticks_per_plan[ri.index()], 1);
+        assert_eq!(m.plan_dwell_hist[3], 1, "dwell 6 lands in the 5..=8 bucket");
+        assert_eq!(m.predicted_cycles, 150);
+        assert_eq!(m.modeled_cycles, 160);
+        assert_eq!(m.predicted_bytes, 1700);
+        assert_eq!(m.modeled_bytes, 1700);
+        let snap = m.traffic_snapshot();
+        assert_eq!(snap.plan_switches, 1);
+        assert_eq!(snap.dominant_plan().map(|(_, t)| t), Some(1));
+        assert!((snap.prediction_error() - 160.0 / 150.0).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("plan_switches=1"), "{r}");
+        assert!(r.contains("ri:1"), "{r}");
+        assert!(r.contains("fully-fused:1"), "{r}");
+    }
+
+    #[test]
+    fn dwell_buckets_are_monotone_cover() {
+        assert_eq!(dwell_bucket(1), 0);
+        assert_eq!(dwell_bucket(2), 1);
+        assert_eq!(dwell_bucket(4), 2);
+        assert_eq!(dwell_bucket(8), 3);
+        assert_eq!(dwell_bucket(16), 4);
+        assert_eq!(dwell_bucket(64), 6);
+        assert_eq!(dwell_bucket(1000), 7);
+    }
+
+    #[test]
+    fn empty_plans_summary_is_dash() {
+        let m = Metrics::new();
+        assert_eq!(m.traffic_snapshot().plans_summary(), "-");
+        assert_eq!(m.traffic_snapshot().dominant_plan(), None);
+        assert_eq!(m.traffic_snapshot().prediction_error(), 0.0);
+    }
 
     #[test]
     fn counters_accumulate() {

@@ -13,7 +13,7 @@ pub mod server;
 pub mod state;
 
 pub use batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
-pub use metrics::{Metrics, TrafficSnapshot};
+pub use metrics::{Metrics, TrafficSnapshot, DWELL_BUCKETS};
 pub use request::{Request, Response, WorkloadGen};
 pub use scheduler::{Scheduler, StatePath};
 pub use server::{serve_all, Server};

@@ -5,7 +5,7 @@ use std::time::Instant;
 use crate::util::XorShift;
 
 /// A generation request entering the coordinator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
     pub id: u64,
     /// Prompt token ids (length must equal the compiled prefill length).

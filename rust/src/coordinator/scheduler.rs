@@ -35,6 +35,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::planner::{PlanChoice, Planner, PlanSpec, WorkloadFeatures};
 use crate::runtime::engine::{argmax_rows_into, Executor, Workspace};
 
 use super::batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
@@ -61,6 +62,12 @@ pub struct Scheduler<E: Executor> {
     batcher: Batcher,
     states: StateArena,
     path: StatePath,
+    /// Per-tick fusion-plan selection (static / adaptive / table; see
+    /// [`crate::planner`]). The decision is made from the tick's
+    /// [`WorkloadFeatures`] before the engine call and dispatched via
+    /// [`Executor::step_planned_into`] on both state paths, so plan
+    /// choice can never depend on — or change — the data path.
+    planner: Planner,
     /// Persistent engine workspace: logits surface + staging buffers +
     /// traffic counters, reused every tick.
     ws: Workspace,
@@ -98,6 +105,30 @@ impl<E: Executor> Scheduler<E> {
 
     /// Construct with an explicit state path (tests / benchmarks).
     pub fn with_path(engine: E, policy: BatchPolicy, path: StatePath) -> Scheduler<E> {
+        Scheduler::with_planner(engine, policy, path, Planner::new(PlanSpec::default()))
+    }
+
+    /// Fully-explicit constructor: state path plus plan policy.
+    pub fn with_planner(
+        mut engine: E,
+        policy: BatchPolicy,
+        path: StatePath,
+        mut planner: Planner,
+    ) -> Scheduler<E> {
+        // Announce every selectable plan up front so engines that
+        // compile per-variant executables do it off the serving path;
+        // a rejected plan is excluded from adaptive selection so the
+        // misconfiguration surfaces here, not as a mid-serve engine
+        // error.
+        for choice in PlanChoice::candidates() {
+            if let Err(e) = engine.register_variant(choice) {
+                eprintln!(
+                    "coordinator: engine rejected plan {} (excluded from selection): {e}",
+                    choice.name()
+                );
+                planner.disallow(choice);
+            }
+        }
         let m = engine.manifest();
         let batcher = Batcher::new(policy);
         // The batcher admits at most `max_running` state-holding
@@ -113,6 +144,7 @@ impl<E: Executor> Scheduler<E> {
             batcher,
             states,
             path,
+            planner,
             ws: Workspace::new(),
             waiting: BTreeMap::new(),
             running: BTreeMap::new(),
@@ -160,6 +192,11 @@ impl<E: Executor> Scheduler<E> {
     /// Which state path this scheduler runs.
     pub fn path(&self) -> StatePath {
         self.path
+    }
+
+    /// The per-tick plan selector (tests / diagnostics).
+    pub fn planner(&self) -> &Planner {
+        &self.planner
     }
 
     /// The resident-state arena (tests / diagnostics).
@@ -272,6 +309,18 @@ impl<E: Executor> Scheduler<E> {
             self.lens_buf.push(1);
         }
 
+        // Select this tick's fusion plan from the engine-visible
+        // features (single-token chunk rows classify as decode rows,
+        // matching how the engine reads `lens`). Steady state this is
+        // a bucket-cache lookup — no allocation, no model evaluation.
+        let features = WorkloadFeatures::from_tick(
+            &self.lens_buf[..chunks.len()],
+            decode_ids.len(),
+            self.states.resident_bytes(),
+            self.batcher.policy().token_budget,
+        );
+        let decision = self.planner.decide(&features);
+
         let vocab = self.vocab();
         // Reference path only: the freshly gathered packed state
         // buffers to install back from after the call. The resident
@@ -299,7 +348,8 @@ impl<E: Executor> Scheduler<E> {
                         .push(self.states.row_of(id).expect("decode row has resident state"));
                 }
                 let (conv, ssm, stride) = self.states.slab_mut();
-                self.engine.step_mixed_into(
+                self.engine.step_planned_into(
+                    decision.choice,
                     &self.lens_buf,
                     &self.tokens_buf,
                     &self.rows_buf,
@@ -324,7 +374,8 @@ impl<E: Executor> Scheduler<E> {
                 }
                 let (mut conv, mut ssm) = self.states.gather_rows(&self.row_state_buf);
                 self.rows_buf.extend(0..batch);
-                self.engine.step_mixed_into(
+                self.engine.step_planned_into(
+                    decision.choice,
                     &self.lens_buf,
                     &self.tokens_buf,
                     &self.rows_buf,
@@ -407,6 +458,11 @@ impl<E: Executor> Scheduler<E> {
         traffic.merge(self.ws.take_traffic());
         let padded = self.ws.take_padded_rows();
         self.metrics.record_traffic(traffic, self.states.resident_bytes(), padded);
+
+        // Plan accounting: the decision, and the engine's modeled cost
+        // for executing it (zero on engines that don't model plans).
+        let (modeled_cycles, modeled_bytes) = self.ws.take_modeled();
+        self.metrics.record_plan(&decision, modeled_cycles, modeled_bytes);
 
         Ok(completed)
     }
@@ -553,6 +609,51 @@ mod tests {
         s.run_until_drained().unwrap();
         assert!(s.metrics().bytes_gathered > 0, "reference path must gather");
         assert!(s.metrics().bytes_scattered > 0, "reference path must scatter");
+    }
+
+    #[test]
+    fn plan_choice_never_changes_tokens() {
+        // The adaptive ≡ static token-output property at the scheduler
+        // level: every plan spec serves the identical token streams.
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let run = |planner: Planner| {
+            let mut s = Scheduler::with_planner(
+                MockEngine::new(),
+                BatchPolicy::default(),
+                StatePath::Resident,
+                planner,
+            );
+            let mut gen = WorkloadGen::new(23, vocab, plen, 2, 6).with_prompt_range(1, 40);
+            for _ in 0..6 {
+                s.submit(gen.next_request()).unwrap();
+            }
+            let mut out = s.run_until_drained().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let adaptive = run(Planner::new(PlanSpec::Adaptive));
+        for choice in PlanChoice::candidates() {
+            let fixed = run(Planner::new(PlanSpec::Static(choice)));
+            assert_eq!(adaptive, fixed, "tokens diverged under static:{}", choice.name());
+        }
+    }
+
+    #[test]
+    fn scheduler_records_plan_metrics() {
+        let mut s = sched();
+        let m = s.manifest();
+        let mut gen = WorkloadGen::new(5, m.vocab, m.prefill_len, 3, 5);
+        for _ in 0..3 {
+            s.submit(gen.next_request()).unwrap();
+        }
+        s.run_until_drained().unwrap();
+        let met = s.metrics();
+        let total_plan_ticks: u64 = met.ticks_per_plan.iter().sum();
+        assert_eq!(total_plan_ticks, met.ticks, "every tick runs under exactly one plan");
+        // The mock charges every tick with the plan's analytical cost.
+        assert!(met.modeled_cycles > 0);
+        assert!(met.predicted_cycles > 0);
     }
 
     #[test]

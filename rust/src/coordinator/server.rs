@@ -10,12 +10,13 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::planner::{Planner, PlanSpec};
 use crate::runtime::engine::Executor;
 
 use super::batcher::BatchPolicy;
 use super::metrics::TrafficSnapshot;
 use super::request::{Request, Response};
-use super::scheduler::Scheduler;
+use super::scheduler::{Scheduler, StatePath};
 
 enum Msg {
     Submit(Request, Sender<Response>),
@@ -47,13 +48,25 @@ impl Server {
         E: Executor,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
+        Server::start_planned(factories, policy, PlanSpec::default())
+    }
+
+    /// Start with an explicit plan-selection policy (each worker gets
+    /// its own [`Planner`] built from the spec — plan caches and dwell
+    /// state are per-worker, like the engine itself).
+    pub fn start_planned<E, F>(factories: Vec<F>, policy: BatchPolicy, spec: PlanSpec) -> Server
+    where
+        E: Executor,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
         let workers = factories
             .into_iter()
             .map(|factory| {
                 let (tx, rx) = channel::<Msg>();
                 let pol = policy.clone();
+                let sp = spec.clone();
                 let handle = std::thread::spawn(move || match factory() {
-                    Ok(engine) => worker_loop(engine, pol, rx),
+                    Ok(engine) => worker_loop(engine, pol, sp, rx),
                     Err(e) => eprintln!("coordinator: engine construction failed: {e}"),
                 });
                 Worker { tx, handle, routed: 0 }
@@ -88,9 +101,9 @@ impl Server {
             .collect()
     }
 
-    /// Aggregate the state-traffic counters across all workers
+    /// Aggregate the state-traffic and plan counters across all workers
     /// (counters sum; the resident gauge sums over workers too, since
-    /// each worker owns its own arena).
+    /// each worker owns its own arena, as does each planner).
     pub fn traffic(&self) -> TrafficSnapshot {
         let mut total = TrafficSnapshot::default();
         for w in &self.workers {
@@ -103,6 +116,17 @@ impl Server {
                 total.bytes_scattered += t.bytes_scattered;
                 total.state_bytes_resident += t.state_bytes_resident;
                 total.padded_rows += t.padded_rows;
+                total.plan_switches += t.plan_switches;
+                for (a, b) in total.ticks_per_plan.iter_mut().zip(&t.ticks_per_plan) {
+                    *a += b;
+                }
+                for (a, b) in total.plan_dwell_hist.iter_mut().zip(&t.plan_dwell_hist) {
+                    *a += b;
+                }
+                total.predicted_cycles += t.predicted_cycles;
+                total.predicted_bytes += t.predicted_bytes;
+                total.modeled_cycles += t.modeled_cycles;
+                total.modeled_bytes += t.modeled_bytes;
             }
         }
         total
@@ -119,8 +143,9 @@ impl Server {
     }
 }
 
-fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, rx: Receiver<Msg>) {
-    let mut sched = Scheduler::new(engine, policy);
+fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, spec: PlanSpec, rx: Receiver<Msg>) {
+    let mut sched =
+        Scheduler::with_planner(engine, policy, StatePath::Resident, Planner::new(spec));
     let mut sinks: std::collections::BTreeMap<u64, Sender<Response>> =
         std::collections::BTreeMap::new();
     let mut shutting_down = false;
@@ -286,6 +311,41 @@ mod tests {
         assert_eq!(t.bytes_scattered, 0);
         assert_eq!(t.padded_rows, 0);
         assert_eq!(t.state_bytes_resident, 0, "all slots released after drain");
+        // Plan counters aggregate across both workers: every tick ran
+        // under some plan, and the mock modeled its cost.
+        assert!(t.ticks_per_plan.iter().sum::<u64>() > 0);
+        assert!(t.modeled_cycles > 0);
+        assert!(t.predicted_cycles > 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn static_plan_spec_serves_identically() {
+        use crate::fusion::FusionVariant;
+        use crate::planner::{PlanChoice, PlanSpec};
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let serve = |spec: PlanSpec| {
+            let mut server = Server::start_planned(
+                vec![|| Ok(MockEngine::new())],
+                BatchPolicy::default(),
+                spec,
+            );
+            let mut gen = WorkloadGen::new(8, vocab, plen, 2, 4);
+            let rxs: Vec<_> = (0..6).map(|_| server.submit(gen.next_request())).collect();
+            let mut toks: Vec<Vec<i32>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+            toks.sort();
+            let t = server.traffic();
+            server.shutdown();
+            (toks, t)
+        };
+        let (adaptive_tokens, _) = serve(PlanSpec::Adaptive);
+        let (static_tokens, t) =
+            serve(PlanSpec::Static(PlanChoice::Variant(FusionVariant::RIOnly)));
+        assert_eq!(adaptive_tokens, static_tokens);
+        // A static spec runs every tick under the one plan.
+        let ri = PlanChoice::Variant(FusionVariant::RIOnly).index();
+        assert_eq!(t.ticks_per_plan.iter().sum::<u64>(), t.ticks_per_plan[ri]);
+        assert_eq!(t.plan_switches, 0);
     }
 }

@@ -13,6 +13,15 @@
 //! * [`fusion`] — classification + greedy stitching (the paper's core);
 //! * [`arch`] / [`model`] / [`traffic`] / [`roofline`] / [`workload`] —
 //!   the analytical accelerator substrate (Timeloop substitute);
+//! * [`planner`] — workload-adaptive fusion-plan selection bridging the
+//!   analytical model into the serving loop: per-tick
+//!   [`planner::WorkloadFeatures`] → shape-bucketed
+//!   [`planner::CostModel`] evaluation of every candidate
+//!   [`planner::PlanChoice`] → [`planner::Planner`] policy (static /
+//!   adaptive / autotuned [`planner::PlanTable`], with dwell
+//!   hysteresis); the choice dispatches through
+//!   [`runtime::Executor::step_planned_into`] and its quality is
+//!   observable in the deterministic modeled-cost counters;
 //! * [`report`] — regenerates every paper table and figure;
 //! * [`runtime`] / [`coordinator`] — the serving stack (python never
 //!   runs on the request path). The runtime's [`runtime::Executor`]
@@ -45,6 +54,7 @@ pub mod coordinator;
 pub mod einsum;
 pub mod fusion;
 pub mod model;
+pub mod planner;
 pub mod prop;
 pub mod report;
 pub mod roofline;

@@ -4,6 +4,7 @@
 //!   cascade    dump the Mamba cascade (table or Graphviz dot)
 //!   fuse       show fusion groups per variant
 //!   analyze    evaluate a layer under a variant on the Mambalaya model
+//!   autotune   sweep the (decode × prefill) grid into a PlanTable artifact
 //!   reproduce  regenerate a paper table/figure (--exp table1|...|fig15|all)
 //!   serve      run the serving coordinator on the AOT artifacts
 //!   help       this text
@@ -12,7 +13,7 @@ use std::io::Write as _;
 
 use mambalaya::arch::ArchSpec;
 use mambalaya::cascade::{mamba1, mamba2, ModelConfig};
-use mambalaya::coordinator::{serve_all, BatchPolicy, WorkloadGen};
+use mambalaya::coordinator::{BatchPolicy, WorkloadGen};
 use mambalaya::einsum::display::{cascade_dot, cascade_table};
 use mambalaya::fusion::{stitch, FusionVariant};
 use mambalaya::model::{evaluate, ExecOptions};
@@ -27,6 +28,7 @@ fn main() {
         Some("cascade") => cmd_cascade(&args),
         Some("fuse") => cmd_fuse(&args),
         Some("analyze") => cmd_analyze(&args),
+        Some("autotune") => cmd_autotune(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("serve") => cmd_serve(&args),
         _ => {
@@ -45,11 +47,14 @@ USAGE: mambalaya <SUBCOMMAND> [OPTIONS]
   cascade   --model 370m|2.8b|tiny [--seq N] [--mamba2] [--dot]
   fuse      --model 370m [--seq N] [--variant V] [--cascade FILE.einsum]
   analyze   --model 370m [--seq N] [--batch B] [--variant V] [--pipelined] [--chart]
+  autotune  [--model 370m] [--quick] [--out PLAN_TABLE.json]
+            (offline fusion-plan sweep; serve with --plan table:<file>)
   reproduce --exp table1|table2|table3|fig2|fig9|fig10|fig12|fig13|fig14|fig15|all
             [--model 370m] [--seq N] [--batch B] [--out-dir results]
   serve     [--artifacts DIR] [--requests N] [--gen-lo N] [--gen-hi N] [--workers W]
-            [--chunk-tokens N] [--token-budget N]   (continuous-batching knobs;
-            chunk-tokens 0 = monolithic prefill)
+            [--chunk-tokens N] [--token-budget N] [--plan SPEC]
+            (continuous-batching knobs; chunk-tokens 0 = monolithic prefill;
+            plan SPEC = static:<variant>|adaptive|table:<path>)
 ";
 
 fn model(args: &Args) -> ModelConfig {
@@ -167,6 +172,38 @@ fn cmd_analyze(args: &Args) -> i32 {
     0
 }
 
+fn cmd_autotune(args: &Args) -> i32 {
+    let cfg = model(args);
+    let quick = args.flag("quick");
+    let out = args.get_or("out", "PLAN_TABLE.json");
+    let arch = ArchSpec::mambalaya();
+    let table = mambalaya::planner::autotune(&cfg, &arch, quick);
+    println!(
+        "autotuned {} ({} grid): {} × {} cells",
+        cfg.name,
+        if quick { "quick" } else { "full" },
+        table.decode_axis.len(),
+        table.prefill_axis.len()
+    );
+    for (d, &rows) in table.decode_axis.iter().enumerate() {
+        for (p, &toks) in table.prefill_axis.iter().enumerate() {
+            let cell = table.cells[d][p];
+            println!(
+                "  decode={rows:<3} prefill={toks:<5} → {:<12} ({} cyc, {} B)",
+                cell.choice.name(),
+                cell.cycles,
+                cell.bytes
+            );
+        }
+    }
+    if let Err(e) = table.save(out) {
+        eprintln!("{e:#}");
+        return 1;
+    }
+    println!("wrote {out} (serve with --plan table:{out})");
+    0
+}
+
 fn cmd_reproduce(args: &Args) -> i32 {
     let cfg = model(args);
     let seq = args.get_u64("seq", 16384);
@@ -240,6 +277,13 @@ fn cmd_serve(args: &Args) -> i32 {
     let gen_hi = args.get_u64("gen-hi", 16) as usize;
     let workers = args.get_u64("workers", 1) as usize;
     let policy = BatchPolicy::from_args(args);
+    let spec = match mambalaya::planner::PlanSpec::parse(args.get_or("plan", "adaptive")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 2;
+        }
+    };
 
     let manifest = match mambalaya::runtime::Manifest::load(&dir) {
         Ok(m) => m,
@@ -249,51 +293,45 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving {} ({} layers, E={}, vocab={}) from {dir} with {workers} worker(s)",
-        manifest.model, manifest.n_layer, manifest.d_model, manifest.vocab
+        "serving {} ({} layers, E={}, vocab={}) from {dir} with {workers} worker(s), plan {}",
+        manifest.model,
+        manifest.n_layer,
+        manifest.d_model,
+        manifest.vocab,
+        spec.name()
     );
     let mut gen =
         WorkloadGen::new(2024, manifest.vocab, manifest.prefill_len, gen_lo, gen_hi);
     let reqs: Vec<_> = (0..n).map(|_| gen.next_request()).collect();
 
-    if workers <= 1 {
-        let dir2 = dir.clone();
-        match serve_all(move || MambaEngine::load(&dir2), policy, reqs) {
-            Ok((resps, reportline)) => {
-                let total_tokens: usize = resps.iter().map(|r| r.tokens.len()).sum();
-                println!("completed {} requests, {} tokens", resps.len(), total_tokens);
-                println!("{reportline}");
-                0
-            }
+    let factories: Vec<_> = (0..workers.max(1))
+        .map(|_| {
+            let d = dir.clone();
+            move || MambaEngine::load(&d)
+        })
+        .collect();
+    let mut server =
+        mambalaya::coordinator::Server::start_planned(factories, policy, spec);
+    let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let mut total_tokens = 0;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(resp) => total_tokens += resp.tokens.len(),
             Err(e) => {
-                eprintln!("serve failed: {e:#}");
-                1
+                eprintln!("response lost: {e}");
+                return 1;
             }
         }
-    } else {
-        let factories: Vec<_> = (0..workers)
-            .map(|_| {
-                let d = dir.clone();
-                move || MambaEngine::load(&d)
-            })
-            .collect();
-        let mut server = mambalaya::coordinator::Server::start(factories, policy);
-        let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
-        let mut total_tokens = 0;
-        for rx in rxs {
-            match rx.recv() {
-                Ok(resp) => total_tokens += resp.tokens.len(),
-                Err(e) => {
-                    eprintln!("response lost: {e}");
-                    return 1;
-                }
-            }
-        }
-        println!("completed {n} requests, {total_tokens} tokens");
-        for r in server.reports() {
-            println!("{r}");
-        }
-        server.shutdown();
-        0
     }
+    println!("completed {n} requests, {total_tokens} tokens");
+    for r in server.reports() {
+        println!("{r}");
+    }
+    let t = server.traffic();
+    println!(
+        "plan: switches={} predicted={}cyc modeled={}cyc | state traffic: gathered={}B scattered={}B",
+        t.plan_switches, t.predicted_cycles, t.modeled_cycles, t.bytes_gathered, t.bytes_scattered
+    );
+    server.shutdown();
+    0
 }

@@ -1,0 +1,279 @@
+//! Offline autotuning: sweep the (decode rows × prefill tokens) shape
+//! grid once, record the analytical argmin plan per cell, and emit the
+//! result as a JSON [`PlanTable`] artifact (via the in-tree
+//! `util::json` emitter). Loading the table at server start gives the
+//! planner its zero-cost fast path: per-tick selection becomes a pure
+//! lookup with no model evaluation in the serving process at all.
+//!
+//! `mambalaya autotune [--model 370m] [--quick] [--out FILE]` runs the
+//! sweep from the CLI; `ci.sh` runs the `--quick` grid and the golden
+//! snapshot under `rust/tests/golden/` pins the quick table
+//! byte-for-byte.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::arch::ArchSpec;
+use crate::cascade::ModelConfig;
+use crate::util::JsonValue;
+
+use super::cost::{CostModel, TickEstimate};
+use super::features::pow2_ceil;
+use super::PlanChoice;
+
+/// The quick (CI / golden) grid axes.
+pub const QUICK_DECODE_AXIS: [usize; 4] = [0, 1, 4, 8];
+pub const QUICK_PREFILL_AXIS: [usize; 4] = [0, 16, 256, 4096];
+
+/// The full grid axes.
+pub const FULL_DECODE_AXIS: [usize; 8] = [0, 1, 2, 4, 8, 16, 32, 64];
+pub const FULL_PREFILL_AXIS: [usize; 8] = [0, 8, 32, 128, 512, 2048, 4096, 8192];
+
+/// One tuned grid cell: the winning plan and its predicted cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCell {
+    pub choice: PlanChoice,
+    pub cycles: u64,
+    pub bytes: u64,
+}
+
+/// An autotuned plan table: `cells[d][p]` is the best plan at
+/// `decode_axis[d]` decode rows and `prefill_axis[p]` prefill tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanTable {
+    /// Model the table was tuned for (sanity check at load).
+    pub model: String,
+    pub decode_axis: Vec<usize>,
+    pub prefill_axis: Vec<usize>,
+    pub cells: Vec<Vec<PlanCell>>,
+}
+
+impl PlanTable {
+    /// Look up the cell covering a shape: each coordinate snaps to the
+    /// smallest axis value ≥ the (already pow2-bucketed) query, so the
+    /// cell is a conservative cover; queries past the last axis clamp
+    /// to it.
+    pub fn lookup(&self, decode_rows: usize, prefill_tokens: usize) -> PlanCell {
+        let idx = |axis: &[usize], v: usize| {
+            axis.iter().position(|&a| a >= v).unwrap_or(axis.len() - 1)
+        };
+        self.cells[idx(&self.decode_axis, decode_rows)][idx(&self.prefill_axis, prefill_tokens)]
+    }
+
+    /// Render as the JSON artifact (stable key order via the BTreeMap
+    /// emitter — byte-stable for the golden snapshot).
+    pub fn to_json(&self) -> JsonValue {
+        let axis = |a: &[usize]| {
+            JsonValue::Arr(a.iter().map(|&v| JsonValue::from(v)).collect())
+        };
+        let mut cells = JsonValue::Arr(vec![]);
+        for (d, row) in self.cells.iter().enumerate() {
+            for (p, cell) in row.iter().enumerate() {
+                let mut o = JsonValue::obj();
+                o.set("decode_rows", self.decode_axis[d])
+                    .set("prefill_tokens", self.prefill_axis[p])
+                    .set("plan", cell.choice.name())
+                    .set("cycles", cell.cycles)
+                    .set("bytes", cell.bytes);
+                cells.push(o);
+            }
+        }
+        let mut doc = JsonValue::obj();
+        doc.set("artifact", "mambalaya-plan-table")
+            .set("model", self.model.as_str())
+            .set("decode_axis", axis(&self.decode_axis))
+            .set("prefill_axis", axis(&self.prefill_axis))
+            .set("cells", cells);
+        doc
+    }
+
+    /// Parse the JSON artifact back.
+    pub fn from_json(doc: &JsonValue) -> Result<PlanTable> {
+        let axis = |key: &str| -> Result<Vec<usize>> {
+            doc.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("plan table missing {key}"))?
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .filter(|&x| x >= 0)
+                        .map(|x| x as usize)
+                        .ok_or_else(|| anyhow!("bad {key} entry"))
+                })
+                .collect()
+        };
+        let model = doc
+            .get("model")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("plan table missing model"))?
+            .to_string();
+        let decode_axis = axis("decode_axis")?;
+        let prefill_axis = axis("prefill_axis")?;
+        anyhow::ensure!(
+            !decode_axis.is_empty() && !prefill_axis.is_empty(),
+            "plan table axes empty"
+        );
+        // `lookup` scans for the first axis value ≥ the query, which
+        // silently misroutes on unsorted axes — reject them at load.
+        let ascending = |a: &[usize]| a.windows(2).all(|w| w[0] < w[1]);
+        anyhow::ensure!(
+            ascending(&decode_axis) && ascending(&prefill_axis),
+            "plan table axes must be strictly ascending"
+        );
+        let mut cells =
+            vec![
+                vec![PlanCell { choice: PlanChoice::candidates()[0], cycles: 0, bytes: 0 };
+                    prefill_axis.len()];
+                decode_axis.len()
+            ];
+        let mut seen = vec![vec![false; prefill_axis.len()]; decode_axis.len()];
+        let raw = doc
+            .get("cells")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("plan table missing cells"))?;
+        for c in raw {
+            let pos = |key: &str, axis: &[usize]| -> Result<usize> {
+                let v = c
+                    .get(key)
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| anyhow!("cell missing {key}"))? as usize;
+                axis.iter().position(|&a| a == v).ok_or_else(|| anyhow!("cell {key}={v} off-axis"))
+            };
+            let d = pos("decode_rows", &decode_axis)?;
+            let p = pos("prefill_tokens", &prefill_axis)?;
+            let name = c
+                .get("plan")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("cell missing plan"))?;
+            let choice =
+                PlanChoice::parse(name).ok_or_else(|| anyhow!("unknown plan {name:?}"))?;
+            let num = |key: &str| -> Result<u64> {
+                c.get(key)
+                    .and_then(|v| v.as_i64())
+                    .filter(|&x| x >= 0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| anyhow!("cell missing {key}"))
+            };
+            cells[d][p] = PlanCell { choice, cycles: num("cycles")?, bytes: num("bytes")? };
+            seen[d][p] = true;
+        }
+        anyhow::ensure!(
+            seen.iter().all(|row| row.iter().all(|&s| s)),
+            "plan table has missing cells"
+        );
+        Ok(PlanTable { model, decode_axis, prefill_axis, cells })
+    }
+
+    /// Write the artifact (trailing newline so the golden file is
+    /// editor-friendly).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing plan table {path}"))
+    }
+
+    /// Load an artifact written by [`PlanTable::save`].
+    pub fn load(path: &str) -> Result<PlanTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan table {path}"))?;
+        let doc = JsonValue::parse(text.trim_end())
+            .map_err(|e| anyhow!("parsing plan table {path}: {e}"))?;
+        PlanTable::from_json(&doc)
+    }
+}
+
+/// Run the sweep: evaluate every candidate at every grid cell and keep
+/// the argmin (most-fused-first tie-break, same as the live planner).
+pub fn autotune(cfg: &ModelConfig, arch: &ArchSpec, quick: bool) -> PlanTable {
+    let (decode_axis, prefill_axis): (Vec<usize>, Vec<usize>) = if quick {
+        (QUICK_DECODE_AXIS.to_vec(), QUICK_PREFILL_AXIS.to_vec())
+    } else {
+        (FULL_DECODE_AXIS.to_vec(), FULL_PREFILL_AXIS.to_vec())
+    };
+    let mut cost = CostModel::new(cfg.clone(), arch.clone());
+    let mut cells = Vec::with_capacity(decode_axis.len());
+    for &d in &decode_axis {
+        let mut row = Vec::with_capacity(prefill_axis.len());
+        for &p in &prefill_axis {
+            // Axis points are already the bucket representatives.
+            debug_assert_eq!(pow2_ceil(d), d);
+            let bucket = super::features::PlanBucket { decode_rows: d, prefill_tokens: p };
+            let (choice, est): (PlanChoice, TickEstimate) = cost.best(bucket);
+            row.push(PlanCell { choice, cycles: est.cycles, bytes: est.bytes });
+        }
+        cells.push(row);
+    }
+    PlanTable { model: cfg.name.clone(), decode_axis, prefill_axis, cells }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::FusionVariant;
+
+    #[test]
+    fn quick_table_shape_and_lookup() {
+        let t = autotune(&ModelConfig::mamba_370m(), &ArchSpec::mambalaya(), true);
+        assert_eq!(t.cells.len(), QUICK_DECODE_AXIS.len());
+        assert!(t.cells.iter().all(|r| r.len() == QUICK_PREFILL_AXIS.len()));
+        // Lookup snaps up to the covering cell and clamps past the end.
+        assert_eq!(t.lookup(2, 0), t.cells[2][0]);
+        assert_eq!(t.lookup(0, 17), t.cells[0][2]);
+        assert_eq!(t.lookup(999, 1 << 20), t.cells[3][3]);
+        // The all-zero cell exists and is deterministic (first
+        // candidate by tie-break).
+        assert_eq!(t.cells[0][0].choice, PlanChoice::candidates()[0]);
+    }
+
+    #[test]
+    fn table_cells_match_live_cost_model() {
+        // The table is exactly the frozen form of the adaptive policy.
+        let t = autotune(&ModelConfig::mamba_370m(), &ArchSpec::mambalaya(), true);
+        let mut m = CostModel::default_serving();
+        for (d, &rows) in t.decode_axis.iter().enumerate() {
+            for (p, &toks) in t.prefill_axis.iter().enumerate() {
+                let (choice, est) = m.best(super::super::features::PlanBucket {
+                    decode_rows: rows,
+                    prefill_tokens: toks,
+                });
+                assert_eq!(t.cells[d][p].choice, choice);
+                assert_eq!(t.cells[d][p].cycles, est.cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let t = autotune(&ModelConfig::mamba_370m(), &ArchSpec::mambalaya(), true);
+        let doc = t.to_json();
+        let back = PlanTable::from_json(&doc).unwrap();
+        assert_eq!(t, back);
+        // Emit → parse → emit is byte-stable (golden-snapshot property).
+        let text = doc.to_string();
+        assert_eq!(JsonValue::parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_tables() {
+        let t = autotune(&ModelConfig::mamba_370m(), &ArchSpec::mambalaya(), true);
+        let mut doc = t.to_json();
+        doc.set("cells", JsonValue::Arr(vec![]));
+        assert!(PlanTable::from_json(&doc).is_err(), "missing cells must fail");
+        let bad = JsonValue::parse(r#"{"model":"x"}"#).unwrap();
+        assert!(PlanTable::from_json(&bad).is_err());
+        // Unsorted axes would silently misroute lookup — rejected.
+        let mut unsorted = t.clone();
+        unsorted.decode_axis.reverse();
+        assert!(PlanTable::from_json(&unsorted.to_json()).is_err());
+    }
+
+    #[test]
+    fn prefill_heavy_cells_prefer_fully_fused() {
+        // The paper's prefill result survives the freeze: the largest
+        // pure-prefill cell is fully fused, and it differs from the
+        // pure-decode column's plan at the batched end.
+        let t = autotune(&ModelConfig::mamba_370m(), &ArchSpec::mambalaya(), true);
+        let pre = t.lookup(0, 4096);
+        let dec = t.lookup(8, 0);
+        assert_eq!(pre.choice, PlanChoice::Variant(FusionVariant::FullyFused));
+        assert_ne!(pre.choice, dec.choice);
+    }
+}

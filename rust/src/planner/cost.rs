@@ -1,0 +1,275 @@
+//! Per-tick cost prediction: evaluate each candidate plan against a
+//! tick's workload features using the repo's analytical accelerator
+//! model (the same `model::evaluate` that reproduces the paper's
+//! figures), and pick the cheapest.
+//!
+//! A tick's cost decomposes by phase, the way the serving engine
+//! executes it:
+//!
+//! * **decode part** — one token for each of `decode_rows` sequences:
+//!   the Mamba-1 cascade at `seq = 1, batch = decode_rows` with
+//!   per-step recurrent-state I/O charged (`decode_state_io`). The
+//!   batch dimension matters: the RD-bridged fully-fused mapping pays a
+//!   per-token DRAM round-trip of the `H` state and K-partial GEMM
+//!   spills that *scale with batch*, which is exactly why the paper's
+//!   best decode mapping is not the best prefill mapping.
+//! * **prefill part** — `prefill_tokens` prompt tokens: the cascade at
+//!   `seq = prefill_tokens, batch = 1`, where fused traversals amortize
+//!   inter-Einsum traffic over the whole chunk.
+//!
+//! Evaluations are cached per (plan, size) — sizes arrive already
+//! power-of-two bucketed from [`super::features::PlanBucket`] — so the
+//! serving hot path performs a pure map lookup after the first tick of
+//! a given shape. Selection minimizes predicted *latency cycles*
+//! (traffic alone would not reproduce the paper's phase flip: the
+//! fused-most variant has the least inter-Einsum traffic in both
+//! phases, but loses decode latency to its RD-bridge round-trips).
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::arch::ArchSpec;
+use crate::cascade::{mamba1, ModelConfig};
+use crate::model::{evaluate, ExecOptions};
+
+use super::features::PlanBucket;
+use super::PlanChoice;
+
+/// Process-wide L2 cache of analytical evaluations, keyed by
+/// (model name, d_model, layers, arch name, plan index, decode?,
+/// size). Every scheduler, mock engine and autotune run in a process
+/// shares one evaluation per point — the per-instance map in
+/// [`CostModel`] stays the lock-free hot path.
+type EvalKey = (String, u64, u64, String, usize, bool, usize);
+
+fn global_cache() -> &'static Mutex<BTreeMap<EvalKey, TickEstimate>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<EvalKey, TickEstimate>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Predicted cost of one scheduler tick under a plan.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TickEstimate {
+    /// Predicted device latency (cycles, all layers).
+    pub cycles: u64,
+    /// Predicted DRAM traffic (bytes, all layers).
+    pub bytes: u64,
+}
+
+impl TickEstimate {
+    pub fn add(&self, other: TickEstimate) -> TickEstimate {
+        TickEstimate { cycles: self.cycles + other.cycles, bytes: self.bytes + other.bytes }
+    }
+}
+
+/// Analytical per-tick cost model over a fixed candidate set.
+#[derive(Debug)]
+pub struct CostModel {
+    cfg: ModelConfig,
+    arch: ArchSpec,
+    /// (plan index, decode rows) → per-tick decode-part estimate.
+    decode_cache: BTreeMap<(usize, usize), TickEstimate>,
+    /// (plan index, prefill tokens) → per-tick prefill-part estimate.
+    prefill_cache: BTreeMap<(usize, usize), TickEstimate>,
+}
+
+impl CostModel {
+    pub fn new(cfg: ModelConfig, arch: ArchSpec) -> CostModel {
+        CostModel { cfg, arch, decode_cache: BTreeMap::new(), prefill_cache: BTreeMap::new() }
+    }
+
+    /// The serving default: the paper's primary model (mamba-370m) on
+    /// the Mambalaya architecture. Shared by the scheduler's planner
+    /// and the mock engine's traffic profiles, so predicted and modeled
+    /// counters are directly comparable.
+    pub fn default_serving() -> CostModel {
+        CostModel::new(ModelConfig::mamba_370m(), ArchSpec::mambalaya())
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// One analytical evaluation (L2-cached process-wide): the Mamba-1
+    /// cascade at `(seq, batch)` under the plan, with `decode`
+    /// selecting the per-step state-I/O regime.
+    fn eval(&self, choice: PlanChoice, decode: bool, size: usize) -> TickEstimate {
+        let key: EvalKey = (
+            self.cfg.name.clone(),
+            self.cfg.d_model,
+            self.cfg.layers,
+            self.arch.name.clone(),
+            choice.index(),
+            decode,
+            size,
+        );
+        if let Some(&e) = global_cache().lock().unwrap().get(&key) {
+            return e;
+        }
+        let (seq, batch) = if decode { (1, size as u64) } else { (size as u64, 1) };
+        let c = mamba1::build(&self.cfg, seq, batch);
+        let opts = ExecOptions {
+            staging: choice.staging(),
+            pipelined: false,
+            decode_state_io: decode,
+        };
+        let cost = evaluate(&c, &choice.plan(&c), &self.arch, &opts);
+        let e = TickEstimate {
+            cycles: cost.latency * self.cfg.layers,
+            bytes: cost.traffic.total() * self.cfg.layers,
+        };
+        global_cache().lock().unwrap().insert(key, e);
+        e
+    }
+
+    /// Decode-part estimate: `rows` sequences advancing one token.
+    pub fn decode_cost(&mut self, choice: PlanChoice, rows: usize) -> TickEstimate {
+        if rows == 0 {
+            return TickEstimate::default();
+        }
+        let key = (choice.index(), rows);
+        if let Some(&e) = self.decode_cache.get(&key) {
+            return e;
+        }
+        let e = self.eval(choice, true, rows);
+        self.decode_cache.insert(key, e);
+        e
+    }
+
+    /// Prefill-part estimate: `tokens` prompt tokens in chunk rows.
+    pub fn prefill_cost(&mut self, choice: PlanChoice, tokens: usize) -> TickEstimate {
+        if tokens == 0 {
+            return TickEstimate::default();
+        }
+        let key = (choice.index(), tokens);
+        if let Some(&e) = self.prefill_cache.get(&key) {
+            return e;
+        }
+        let e = self.eval(choice, false, tokens);
+        self.prefill_cache.insert(key, e);
+        e
+    }
+
+    /// Full tick estimate at a shape bucket.
+    pub fn tick_cost(&mut self, choice: PlanChoice, bucket: PlanBucket) -> TickEstimate {
+        self.decode_cost(choice, bucket.decode_rows)
+            .add(self.prefill_cost(choice, bucket.prefill_tokens))
+    }
+
+    /// The candidate whose predicted cycles are lowest at this bucket.
+    ///
+    /// Candidates are visited most-fused-first and replaced only on a
+    /// *strict* improvement, so ties resolve toward the more aggressive
+    /// fusion — deterministic, and aligned with the paper's preference
+    /// when two mappings model identically.
+    pub fn best(&mut self, bucket: PlanBucket) -> (PlanChoice, TickEstimate) {
+        self.best_among(bucket, |_| true).expect("non-empty candidate set")
+    }
+
+    /// [`CostModel::best`] restricted to candidates `allow` accepts
+    /// (e.g. plans the engine actually registered). `None` when the
+    /// filter rejects everything.
+    pub fn best_among<F: Fn(PlanChoice) -> bool>(
+        &mut self,
+        bucket: PlanBucket,
+        allow: F,
+    ) -> Option<(PlanChoice, TickEstimate)> {
+        let mut best: Option<(PlanChoice, TickEstimate)> = None;
+        for choice in PlanChoice::candidates() {
+            if !allow(choice) {
+                continue;
+            }
+            let e = self.tick_cost(choice, bucket);
+            best = match best {
+                Some((_, b)) if e.cycles >= b.cycles => best,
+                _ => Some((choice, e)),
+            };
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::FusionVariant;
+
+    #[test]
+    fn zero_shapes_cost_nothing() {
+        let mut m = CostModel::default_serving();
+        let ff = PlanChoice::Variant(FusionVariant::FullyFused);
+        assert_eq!(m.decode_cost(ff, 0), TickEstimate::default());
+        assert_eq!(m.prefill_cost(ff, 0), TickEstimate::default());
+        assert_eq!(
+            m.tick_cost(ff, PlanBucket { decode_rows: 0, prefill_tokens: 0 }),
+            TickEstimate::default()
+        );
+    }
+
+    #[test]
+    fn costs_are_monotone_in_shape() {
+        // Rounding a shape *up* to its bucket representative must never
+        // under-predict: every cost component (compute work, traffic,
+        // state I/O, spills, pass reloads) is non-decreasing in both
+        // batch and sequence length.
+        let mut m = CostModel::default_serving();
+        for choice in [
+            PlanChoice::Variant(FusionVariant::RIOnly),
+            PlanChoice::Variant(FusionVariant::FullyFused),
+        ] {
+            for rows in [2usize, 4, 8] {
+                let a = m.decode_cost(choice, rows);
+                let b = m.decode_cost(choice, rows * 2);
+                assert!(b.cycles >= a.cycles, "{choice:?} decode not monotone");
+                assert!(b.bytes >= a.bytes, "{choice:?} decode bytes not monotone");
+            }
+            for toks in [64usize, 256, 1024] {
+                let a = m.prefill_cost(choice, toks);
+                let b = m.prefill_cost(choice, toks * 2);
+                assert!(b.cycles >= a.cycles, "{choice:?} prefill not monotone");
+                assert!(b.bytes >= a.bytes, "{choice:?} prefill bytes not monotone");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_returns_identical_estimates() {
+        let mut m = CostModel::default_serving();
+        let rsp = PlanChoice::Variant(FusionVariant::RIRSbRSp);
+        let a = m.decode_cost(rsp, 8);
+        let b = m.decode_cost(rsp, 8);
+        assert_eq!(a, b);
+        let p = m.prefill_cost(rsp, 512);
+        assert_eq!(p, m.prefill_cost(rsp, 512));
+    }
+
+    #[test]
+    fn phase_flip_fully_fused_wins_prefill_not_decode() {
+        // The paper's central serving observation: the best mapping
+        // depends on the phase. Prefill at the reference length is won
+        // by the fully-fused mapping (pinned independently by
+        // model::exec's `fused_variants_speed_up_prefill`); batched
+        // decode is not — the RD bridge's per-token H round-trip and
+        // K-partial spills scale with batch.
+        let mut m = CostModel::default_serving();
+        let (pre, _) = m.best(PlanBucket { decode_rows: 0, prefill_tokens: 4096 });
+        let (dec, _) = m.best(PlanBucket { decode_rows: 8, prefill_tokens: 0 });
+        assert_eq!(pre, PlanChoice::Variant(FusionVariant::FullyFused));
+        assert_ne!(dec, PlanChoice::Variant(FusionVariant::FullyFused));
+        assert_ne!(pre, dec);
+    }
+
+    #[test]
+    fn best_is_argmin_over_candidates() {
+        let mut m = CostModel::default_serving();
+        let bucket = PlanBucket { decode_rows: 4, prefill_tokens: 64 };
+        let (choice, est) = m.best(bucket);
+        for c in PlanChoice::all() {
+            assert!(
+                m.tick_cost(c, bucket).cycles >= est.cycles,
+                "{c:?} beats the reported best"
+            );
+        }
+        assert_eq!(m.tick_cost(choice, bucket), est);
+    }
+}

@@ -1,0 +1,157 @@
+//! Per-tick workload features: the summary of one mixed batch the
+//! planner selects a fusion plan from.
+//!
+//! The scheduler extracts a [`WorkloadFeatures`] from every
+//! `Action::Mixed` before the engine call: how many rows advance one
+//! token (decode rows plus single-token chunks — indistinguishable at
+//! the engine, which only sees `lens`), how many prompt tokens ride in
+//! multi-token prefill chunks (with a chunk-length histogram), how much
+//! recurrent state is resident, and how much of the per-tick token
+//! budget the batch uses. Selection itself happens on the
+//! [`WorkloadFeatures::bucket`] projection — power-of-two shape buckets,
+//! mirroring how the runtime compiles one executable per padded batch
+//! size — so the cost model is evaluated once per bucket, not per tick,
+//! and the steady-state tick stays allocation-free.
+
+/// Chunk-length histogram buckets: `1..=2`, `3..=8`, `9..=32`, `33+`.
+pub const CHUNK_HIST_BUCKETS: usize = 4;
+
+/// Summary of one scheduler tick's mixed batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadFeatures {
+    /// Rows advancing exactly one token this tick (decode rows plus
+    /// single-token prefill chunks — the engine-visible decode set).
+    pub decode_rows: usize,
+    /// Multi-token prefill chunk rows.
+    pub prefill_chunks: usize,
+    /// Prompt tokens carried by those multi-token chunks.
+    pub prefill_tokens: usize,
+    /// Longest chunk in the tick (0 when decode-only).
+    pub max_chunk: usize,
+    /// Chunk-length histogram over [`CHUNK_HIST_BUCKETS`] buckets.
+    pub chunk_hist: [u32; CHUNK_HIST_BUCKETS],
+    /// Bytes of recurrent state resident in the arena at decision time.
+    pub resident_state_bytes: u64,
+    /// Tick token cost over the policy's token budget (0.0..=1.0-ish).
+    pub budget_utilization: f64,
+}
+
+impl WorkloadFeatures {
+    /// Build features from a tick's chunk lengths and decode-row count
+    /// (the same classification the engine applies to `lens`:
+    /// single-token chunks count as decode rows).
+    pub fn from_tick(
+        chunk_lens: &[usize],
+        decode_rows: usize,
+        resident_state_bytes: u64,
+        token_budget: usize,
+    ) -> WorkloadFeatures {
+        let mut f = WorkloadFeatures {
+            decode_rows,
+            prefill_chunks: 0,
+            prefill_tokens: 0,
+            max_chunk: 0,
+            chunk_hist: [0; CHUNK_HIST_BUCKETS],
+            resident_state_bytes,
+            budget_utilization: 0.0,
+        };
+        let mut tokens = decode_rows;
+        for &len in chunk_lens {
+            tokens += len;
+            if len <= 1 {
+                f.decode_rows += 1;
+                continue;
+            }
+            f.prefill_chunks += 1;
+            f.prefill_tokens += len;
+            f.max_chunk = f.max_chunk.max(len);
+            let b = match len {
+                0..=2 => 0,
+                3..=8 => 1,
+                9..=32 => 2,
+                _ => 3,
+            };
+            f.chunk_hist[b] += 1;
+        }
+        f.budget_utilization = tokens as f64 / token_budget.max(1) as f64;
+        f
+    }
+
+    /// The shape bucket selection happens on.
+    pub fn bucket(&self) -> PlanBucket {
+        PlanBucket::of(self.decode_rows, self.prefill_tokens)
+    }
+}
+
+/// A power-of-two shape bucket: the representative (rounded-up) decode
+/// row count and prefill token count the cost model is evaluated at.
+/// Rounding *up* keeps the prediction a conservative bound: the model's
+/// costs are monotone in both coordinates, so the representative never
+/// under-predicts a point inside its bucket (and the near-linear cost
+/// components keep it close to the bucket floor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PlanBucket {
+    /// Rounded-up decode rows (0 or a power of two).
+    pub decode_rows: usize,
+    /// Rounded-up prefill tokens (0 or a power of two).
+    pub prefill_tokens: usize,
+}
+
+impl PlanBucket {
+    pub fn of(decode_rows: usize, prefill_tokens: usize) -> PlanBucket {
+        PlanBucket {
+            decode_rows: pow2_ceil(decode_rows),
+            prefill_tokens: pow2_ceil(prefill_tokens),
+        }
+    }
+}
+
+/// Smallest power of two ≥ `n` (0 stays 0).
+pub fn pow2_ceil(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        n.next_power_of_two()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifies_unit_chunks_as_decode() {
+        // 6 decode rows + chunks [1, 4, 16]: the unit chunk joins the
+        // decode set, exactly as the engine's `lens` classification.
+        let f = WorkloadFeatures::from_tick(&[1, 4, 16], 6, 1024, 32);
+        assert_eq!(f.decode_rows, 7);
+        assert_eq!(f.prefill_chunks, 2);
+        assert_eq!(f.prefill_tokens, 20);
+        assert_eq!(f.max_chunk, 16);
+        assert_eq!(f.chunk_hist, [0, 1, 1, 0]);
+        assert_eq!(f.resident_state_bytes, 1024);
+        // (6 + 1 + 4 + 16) / 32
+        assert!((f.budget_utilization - 27.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_rounds_up_to_pow2() {
+        assert_eq!(pow2_ceil(0), 0);
+        assert_eq!(pow2_ceil(1), 1);
+        assert_eq!(pow2_ceil(3), 4);
+        assert_eq!(pow2_ceil(8), 8);
+        let f = WorkloadFeatures::from_tick(&[5, 6], 6, 0, 32);
+        assert_eq!(f.bucket(), PlanBucket { decode_rows: 8, prefill_tokens: 16 });
+        let d = WorkloadFeatures::from_tick(&[], 8, 0, 32);
+        assert_eq!(d.bucket(), PlanBucket { decode_rows: 8, prefill_tokens: 0 });
+    }
+
+    #[test]
+    fn decode_only_has_empty_histogram() {
+        let f = WorkloadFeatures::from_tick(&[], 4, 0, 16);
+        assert_eq!(f.prefill_chunks, 0);
+        assert_eq!(f.prefill_tokens, 0);
+        assert_eq!(f.max_chunk, 0);
+        assert_eq!(f.chunk_hist, [0; CHUNK_HIST_BUCKETS]);
+    }
+}

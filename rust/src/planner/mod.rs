@@ -1,0 +1,81 @@
+//! Workload-adaptive fusion-plan selection: the bridge from the
+//! paper's analytical model into the serving loop.
+//!
+//! The paper's central serving observation is that the *best* fusion
+//! mapping depends on the phase mix — fully-fused wins prefill, while
+//! batched decode is won by a non-RD-bridged variant (Figure 12's
+//! context:generation sweep). The repo models exactly that tradeoff;
+//! this subsystem makes the live scheduler act on it:
+//!
+//! * [`features`] — a per-tick [`features::WorkloadFeatures`] summary of
+//!   the mixed batch (decode rows, chunk-length histogram, resident
+//!   state bytes, budget utilization) plus the power-of-two
+//!   [`features::PlanBucket`] projection selection happens on;
+//! * [`cost`] — [`cost::CostModel`]: per-bucket evaluation of every
+//!   candidate plan through `model::evaluate` (decode part at the
+//!   tick's batch with per-step state I/O, prefill part at the chunk
+//!   token count), cached so steady state never re-evaluates;
+//! * [`policy`] — [`policy::Planner`]: static / adaptive / table modes
+//!   ([`policy::PlanSpec`]) with dwell-tick hysteresis against plan
+//!   thrashing on noisy mixes;
+//! * [`autotune`] — the offline grid sweep emitting the JSON
+//!   [`autotune::PlanTable`] artifact, the zero-cost serving fast path.
+//!
+//! The selected [`PlanChoice`] (a re-export of
+//! [`crate::workload::DesignPoint`]: the five fusion variants plus the
+//! MARCA-like / Geens-like baselines) flows into
+//! [`crate::runtime::Executor::step_planned_into`]; engines that
+//! compile one executable per variant dispatch on it, and the mock
+//! engine charges each tick with the chosen plan's analytical cost so
+//! the deterministic `modeled_cycles` / `modeled_bytes` counters make
+//! plan quality observable in tests, benches and CI gates.
+
+pub mod autotune;
+pub mod cost;
+pub mod features;
+pub mod policy;
+
+pub use crate::workload::DesignPoint as PlanChoice;
+
+pub use autotune::{autotune, PlanCell, PlanTable};
+pub use cost::{CostModel, TickEstimate};
+pub use features::{PlanBucket, WorkloadFeatures};
+pub use policy::{PlanDecision, Planner, PlanSpec, DEFAULT_MIN_DWELL};
+
+impl PlanChoice {
+    /// Candidate visiting order for selection: most-fused-first, so
+    /// cost ties resolve toward the more aggressive fusion
+    /// deterministically.
+    pub fn candidates() -> [PlanChoice; PlanChoice::COUNT] {
+        use crate::arch::Baseline;
+        use crate::fusion::FusionVariant;
+        [
+            PlanChoice::Variant(FusionVariant::FullyFused),
+            PlanChoice::Variant(FusionVariant::RIRSbRSp),
+            PlanChoice::Variant(FusionVariant::RIRSb),
+            PlanChoice::Variant(FusionVariant::RIOnly),
+            PlanChoice::Variant(FusionVariant::Unfused),
+            PlanChoice::Baseline(Baseline::GeensLike),
+            PlanChoice::Baseline(Baseline::MarcaLike),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_cover_all_indices_once() {
+        let mut seen = [false; PlanChoice::COUNT];
+        for c in PlanChoice::candidates() {
+            assert!(!seen[c.index()], "{c:?} repeated");
+            seen[c.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // And they round-trip through the parser.
+        for c in PlanChoice::candidates() {
+            assert_eq!(PlanChoice::parse(&c.name()), Some(c));
+        }
+    }
+}

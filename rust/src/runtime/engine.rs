@@ -67,6 +67,14 @@ pub struct Workspace {
     pub logits: Vec<f32>,
     traffic: TrafficCounters,
     padded_rows: u64,
+    /// Engine-modeled device cost of the calls since the last drain
+    /// (cycles / DRAM bytes under the executed fusion plan). Charged by
+    /// engines that model per-plan device behaviour (the mock; see
+    /// [`Workspace::record_modeled`]) — distinct from the host-copy
+    /// `traffic` counters, which stay zero on the resident fused path
+    /// regardless of plan choice.
+    modeled_cycles: u64,
+    modeled_bytes: u64,
     // Staging for the default compiled-entry-point decomposition.
     toks: Vec<i32>,
     offs: Vec<usize>,
@@ -112,6 +120,25 @@ impl Workspace {
     /// Drain the padded-row counter.
     pub fn take_padded_rows(&mut self) -> u64 {
         std::mem::take(&mut self.padded_rows)
+    }
+
+    /// Charge modeled device cost for a call (engine implementors:
+    /// called from [`Executor::step_planned_into`] overrides with the
+    /// executed plan's analytical cycle/byte cost, so plan choice is
+    /// observable in deterministic counters).
+    pub fn record_modeled(&mut self, cycles: u64, bytes: u64) {
+        self.modeled_cycles += cycles;
+        self.modeled_bytes += bytes;
+    }
+
+    /// Modeled device cost since the last [`Workspace::take_modeled`].
+    pub fn modeled(&self) -> (u64, u64) {
+        (self.modeled_cycles, self.modeled_bytes)
+    }
+
+    /// Drain the modeled-cost counters: `(cycles, bytes)`.
+    pub fn take_modeled(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.modeled_cycles), std::mem::take(&mut self.modeled_bytes))
     }
 }
 
@@ -412,6 +439,41 @@ pub trait Executor {
 
         Ok(())
     }
+
+    /// Announce a candidate fusion plan the coordinator may select at
+    /// runtime (called once per candidate at scheduler construction).
+    /// Engines that compile one executable set per variant do so here;
+    /// the default is a no-op — a single-mapping engine simply executes
+    /// its one compiled mapping whatever the
+    /// [`PlanChoice`](crate::planner::PlanChoice) says.
+    fn register_variant(&mut self, _choice: crate::planner::PlanChoice) -> Result<()> {
+        Ok(())
+    }
+
+    /// [`Executor::step_mixed_into`] with an explicit fusion-plan
+    /// choice — the planner-aware hot-path entry point the scheduler
+    /// calls every tick.
+    ///
+    /// The default implementation ignores the choice and runs the
+    /// plain mixed call, which keeps token outputs bit-identical across
+    /// plan choices by construction for every engine. Engines with
+    /// per-variant executables dispatch on `choice`; engines that model
+    /// device behaviour (the mock) additionally charge the plan's
+    /// analytical cost into the workspace's modeled counters.
+    #[allow(clippy::too_many_arguments)]
+    fn step_planned_into(
+        &self,
+        _choice: crate::planner::PlanChoice,
+        lens: &[usize],
+        tokens: &[i32],
+        rows: &[usize],
+        conv: &mut [f32],
+        ssm: &mut [f32],
+        stride: usize,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        self.step_mixed_into(lens, tokens, rows, conv, ssm, stride, ws)
+    }
 }
 
 /// Copy one sequence's per-layer state row between packed layer-major
@@ -613,6 +675,16 @@ mod tests {
         assert_eq!(ws.logits.len(), 20);
         assert!(ws.logits.iter().all(|&x| x == 0.0), "stale logits must be cleared");
         assert_eq!(ws.logits.capacity(), cap);
+    }
+
+    #[test]
+    fn workspace_modeled_counters_accumulate_and_drain() {
+        let mut ws = Workspace::new();
+        ws.record_modeled(100, 4096);
+        ws.record_modeled(50, 1024);
+        assert_eq!(ws.modeled(), (150, 5120));
+        assert_eq!(ws.take_modeled(), (150, 5120));
+        assert_eq!(ws.modeled(), (0, 0));
     }
 
     #[test]

@@ -12,8 +12,23 @@
 //! behaviour a real fused engine (and the paper's resident-intermediate
 //! fusion) provides, which the default trait decomposition merely
 //! emulates through compiled prefill/decode staging.
+//!
+//! The mock also plays the role of a **multi-variant engine** for the
+//! planner: its [`Executor::step_planned_into`] override runs the same
+//! bit-identical math whatever the plan (so token outputs can never
+//! depend on plan choice) but charges the tick with the chosen plan's
+//! cost from the analytical accelerator model — at the same
+//! power-of-two shape granularity the planner buckets on, mirroring how
+//! a real engine pads to compiled batch shapes. Variant choice is
+//! thereby observable in the deterministic `modeled_cycles` /
+//! `modeled_bytes` workspace counters, which is what the planner gates
+//! in tests, benches and CI compare.
+
+use std::cell::RefCell;
 
 use anyhow::Result;
+
+use crate::planner::{CostModel, PlanBucket, PlanChoice};
 
 use super::artifact::Manifest;
 use super::engine::{Executor, StepOutput, Workspace};
@@ -22,6 +37,12 @@ use super::engine::{Executor, StepOutput, Workspace};
 /// logits depend on the whole history through the states.
 pub struct MockEngine {
     manifest: Manifest,
+    /// Analytical per-plan cost profiles (lazily evaluated, cached) —
+    /// the same default model the serving planner predicts with, so
+    /// predicted and modeled counters are directly comparable.
+    profile: RefCell<CostModel>,
+    /// Plans announced via [`Executor::register_variant`].
+    registered: Vec<PlanChoice>,
 }
 
 impl MockEngine {
@@ -40,7 +61,14 @@ impl MockEngine {
                 decode_batches: vec![1, 2, 4, 8],
                 dir: std::path::PathBuf::from("/nonexistent"),
             },
+            profile: RefCell::new(CostModel::default_serving()),
+            registered: Vec::new(),
         }
+    }
+
+    /// Plans announced so far (tests / diagnostics).
+    pub fn registered_variants(&self) -> &[PlanChoice] {
+        &self.registered
     }
 
     /// Conv-state elements per (layer, sequence).
@@ -185,6 +213,39 @@ impl Executor for MockEngine {
             self.logits_into(summary, last, &mut ws.logits[b * vocab..(b + 1) * vocab]);
             off += len;
         }
+        Ok(())
+    }
+
+    fn register_variant(&mut self, choice: PlanChoice) -> Result<()> {
+        if !self.registered.contains(&choice) {
+            self.registered.push(choice);
+        }
+        Ok(())
+    }
+
+    /// Execute the tick (bit-identical to [`Executor::step_mixed_into`]
+    /// — plan choice can never change tokens) and charge the chosen
+    /// plan's analytical cost: single-token rows as a batched decode
+    /// step with per-step state I/O, multi-token rows as a prefill of
+    /// their total token count, both at power-of-two compiled-shape
+    /// granularity.
+    fn step_planned_into(
+        &self,
+        choice: PlanChoice,
+        lens: &[usize],
+        tokens: &[i32],
+        rows: &[usize],
+        conv: &mut [f32],
+        ssm: &mut [f32],
+        stride: usize,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        self.step_mixed_into(lens, tokens, rows, conv, ssm, stride, ws)?;
+        let decode_rows = lens.iter().filter(|&&l| l == 1).count();
+        let prefill_tokens: usize = lens.iter().filter(|&&l| l > 1).sum();
+        let bucket = PlanBucket::of(decode_rows, prefill_tokens);
+        let est = self.profile.borrow_mut().tick_cost(choice, bucket);
+        ws.record_modeled(est.cycles, est.bytes);
         Ok(())
     }
 }
@@ -453,6 +514,72 @@ mod tests {
         assert_eq!(ws3.padded_rows(), 1);
         assert_eq!(ws3.traffic().bytes_gathered, 4 * row_bytes);
         assert_eq!(ws3.traffic().bytes_scattered, 3 * row_bytes);
+    }
+
+    #[test]
+    fn planned_step_is_bit_identical_across_plans_but_charges_differently() {
+        use crate::fusion::FusionVariant;
+        let m = MockEngine::new().manifest().clone();
+        let lens = [1usize, 1, 5];
+        let tokens = [3i32, 4, 5, 6, 7, 8, 9];
+        let (cp, sp) = (m.conv_state_elems() / m.n_layer, m.ssm_state_elems() / m.n_layer);
+        let run = |choice: PlanChoice| {
+            let e = MockEngine::new();
+            let mut conv = vec![0f32; m.n_layer * 3 * cp];
+            let mut ssm = vec![0f32; m.n_layer * 3 * sp];
+            let mut ws = Workspace::new();
+            e.step_planned_into(choice, &lens, &tokens, &[0, 1, 2], &mut conv, &mut ssm, 3, &mut ws)
+                .unwrap();
+            let modeled = ws.take_modeled();
+            (ws.logits.clone(), conv, ssm, modeled)
+        };
+        let ri = run(PlanChoice::Variant(FusionVariant::RIOnly));
+        let ff = run(PlanChoice::Variant(FusionVariant::FullyFused));
+        // Tokens and state are independent of the plan...
+        assert_eq!(ri.0, ff.0);
+        assert_eq!(ri.1, ff.1);
+        assert_eq!(ri.2, ff.2);
+        // ...but the modeled device cost is plan-specific and non-zero.
+        assert!(ri.3 .0 > 0 && ff.3 .0 > 0);
+        assert_ne!(ri.3, ff.3, "plan choice must be observable in the counters");
+    }
+
+    #[test]
+    fn planned_step_charges_at_bucket_granularity() {
+        // 5, 6 and 8 decode rows share the pow2 bucket (8): identical
+        // modeled charge — the compiled-shape semantics the planner's
+        // predictions assume.
+        let probe = MockEngine::new();
+        let m = probe.manifest().clone();
+        let (cp, sp) = (m.conv_state_elems() / m.n_layer, m.ssm_state_elems() / m.n_layer);
+        let choice = PlanChoice::Variant(crate::fusion::FusionVariant::RIRSbRSp);
+        let charge = |n: usize| {
+            let e = MockEngine::new();
+            let lens = vec![1usize; n];
+            let tokens = vec![2i32; n];
+            let rows: Vec<usize> = (0..n).collect();
+            let mut conv = vec![0f32; m.n_layer * n * cp];
+            let mut ssm = vec![0f32; m.n_layer * n * sp];
+            let mut ws = Workspace::new();
+            e.step_planned_into(choice, &lens, &tokens, &rows, &mut conv, &mut ssm, n, &mut ws)
+                .unwrap();
+            ws.take_modeled()
+        };
+        let c5 = charge(5);
+        let c6 = charge(6);
+        let c8 = charge(8);
+        assert_eq!(c5, c6);
+        assert_eq!(c6, c8);
+        assert_ne!(charge(4), c8, "different buckets must charge differently");
+    }
+
+    #[test]
+    fn register_variant_records_once() {
+        let mut e = MockEngine::new();
+        let ri = PlanChoice::Variant(crate::fusion::FusionVariant::RIOnly);
+        e.register_variant(ri).unwrap();
+        e.register_variant(ri).unwrap();
+        assert_eq!(e.registered_variants(), &[ri]);
     }
 
     #[test]

@@ -8,13 +8,21 @@ use crate::fusion::{stitch, FusionVariant};
 use crate::model::{evaluate, ideal_cost, ExecOptions, LayerCost, Traffic};
 
 /// A design point: a fusion variant on Mambalaya, or a baseline.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// Also serves as the planner's *plan choice* (re-exported as
+/// [`crate::planner::PlanChoice`]): the unit the serving loop selects
+/// between per tick, and the index space of the per-plan metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DesignPoint {
     Variant(FusionVariant),
     Baseline(Baseline),
 }
 
 impl DesignPoint {
+    /// Number of design points ([`DesignPoint::all`] length) — the
+    /// fixed index space for per-plan counters.
+    pub const COUNT: usize = 7;
+
     pub fn name(&self) -> String {
         match self {
             DesignPoint::Variant(v) => v.name().to_string(),
@@ -31,7 +39,42 @@ impl DesignPoint {
         v
     }
 
-    fn staging(&self) -> Staging {
+    /// Stable position in [`DesignPoint::all`] (metrics index).
+    pub fn index(&self) -> usize {
+        match self {
+            DesignPoint::Variant(FusionVariant::Unfused) => 0,
+            DesignPoint::Variant(FusionVariant::RIOnly) => 1,
+            DesignPoint::Variant(FusionVariant::RIRSb) => 2,
+            DesignPoint::Variant(FusionVariant::RIRSbRSp) => 3,
+            DesignPoint::Variant(FusionVariant::FullyFused) => 4,
+            DesignPoint::Baseline(Baseline::BestUnfused) => 0,
+            DesignPoint::Baseline(Baseline::MarcaLike) => 5,
+            DesignPoint::Baseline(Baseline::GeensLike) => 6,
+        }
+    }
+
+    /// Parse a CLI/JSON name (variant names, `marca-like`, `geens-like`).
+    pub fn parse(s: &str) -> Option<DesignPoint> {
+        if let Some(v) = FusionVariant::parse(s) {
+            return Some(DesignPoint::Variant(v));
+        }
+        match s.to_ascii_lowercase().as_str() {
+            "marca-like" | "marca" => Some(DesignPoint::Baseline(Baseline::MarcaLike)),
+            "geens-like" | "geens" => Some(DesignPoint::Baseline(Baseline::GeensLike)),
+            _ => None,
+        }
+    }
+
+    /// Build the fusion plan this point executes on a cascade.
+    pub fn plan(&self, c: &crate::einsum::Cascade) -> crate::fusion::FusionPlan {
+        match self {
+            DesignPoint::Variant(v) => stitch(c, *v),
+            DesignPoint::Baseline(b) => baseline_plan(c, *b),
+        }
+    }
+
+    /// Intermediate staging discipline of this point.
+    pub fn staging(&self) -> Staging {
         match self {
             DesignPoint::Baseline(b) => b.staging(),
             _ => Staging::UnitTile,
