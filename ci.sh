@@ -51,15 +51,19 @@ if [[ "${1:-}" != "--fast" ]]; then
     # Perf trajectory gates: the hotpath bench's --quick mode runs
     # (1) the deterministic mixed-traffic interference scenario and
     # asserts the resident state path moves >= 10x fewer state bytes
-    # than the gather/scatter reference, and (2) the adaptive-vs-static
+    # than the gather/scatter reference, (2) the adaptive-vs-static
     # plan-selection comparison on the bundled scenarios, asserting the
     # adaptive planner is never worse than the best static plan, its
     # predictor stays within 2x of the mock's modeled cost, and it
-    # picks different plans for prefill-heavy vs decode-heavy traffic.
+    # picks different plans for prefill-heavy vs decode-heavy traffic,
+    # and (3) the sharded-arena hot-skew scenario, asserting live
+    # migration is token-identical to pinned serving, conserves the
+    # global resident gauge, and beats the re-prefill fallback by >= 5x
+    # (bytes_migrated vs reprefill_tokens * state_bytes_per_seq).
     # All gates are on *counters* (same workload, same numbers, every
-    # run), never on wall time; BENCH_hotpath.json and
-    # BENCH_planner.json record the trajectory.
-    echo "== hotpath bench: quick counter gates (traffic + planner) =="
+    # run), never on wall time; BENCH_hotpath.json, BENCH_planner.json
+    # and BENCH_sharding.json record the trajectory.
+    echo "== hotpath bench: quick counter gates (traffic + planner + sharding) =="
     cargo bench --bench hotpath -- --quick
     if [ ! -s BENCH_hotpath.json ]; then
         echo "ERROR: BENCH_hotpath.json missing or empty" >&2
@@ -69,7 +73,11 @@ if [[ "${1:-}" != "--fast" ]]; then
         echo "ERROR: BENCH_planner.json missing or empty" >&2
         exit 1
     fi
-    echo "   BENCH_hotpath.json + BENCH_planner.json written"
+    if [ ! -s BENCH_sharding.json ]; then
+        echo "ERROR: BENCH_sharding.json missing or empty" >&2
+        exit 1
+    fi
+    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json written"
 
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="

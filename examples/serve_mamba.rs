@@ -29,6 +29,15 @@
 //! histogram and per-plan tick counts next to the `state traffic:`
 //! line.
 //!
+//! ## Sharded state residency
+//!
+//! `--workers N` starts N workers, each owning one shard of the sharded
+//! state arena; the router places new requests on the least-loaded
+//! shard. With `--rebalance`, the router also runs slot-aware rebalance
+//! passes that *migrate in-flight requests* between workers by moving
+//! their resident state rows (`bytes_migrated` in the `migration:`
+//! summary line) — never by re-prefilling.
+//!
 //! ## Modes
 //!
 //! * `--mock` — serve on the deterministic in-process mock engine
@@ -48,12 +57,17 @@ use mambalaya::planner::PlanSpec;
 use mambalaya::runtime::{Executor, Golden, MambaEngine, Manifest, MockEngine};
 use mambalaya::util::Args;
 
-/// Serve `reqs` through a one-worker server and print the outcome.
+/// Serve `reqs` through the server (one worker per factory) and print
+/// the outcome. With `rebalance`, the router runs slot-aware rebalance
+/// passes while the workload drains, migrating in-flight requests off
+/// hot shards by moving their resident state (watch the `migration:`
+/// line — `bytes_migrated` per move, zero re-prefills).
 fn drive<E, F>(
-    factory: F,
+    factories: Vec<F>,
     policy: BatchPolicy,
     spec: PlanSpec,
     reqs: Vec<Request>,
+    rebalance: bool,
 ) -> anyhow::Result<()>
 where
     E: Executor,
@@ -63,8 +77,25 @@ where
     let expected_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
     let spec_name = spec.name();
     let t0 = Instant::now();
-    let mut server = Server::start_planned(vec![factory], policy, spec);
+    let mut server = Server::start_planned(factories, policy, spec);
     let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let mut migration_passes = 0u32;
+    if rebalance {
+        // Router passes while the workload is in flight (a production
+        // loop would run this on a timer): skew only develops as
+        // requests complete unevenly, so keep rebalancing until the
+        // workers drain rather than stopping at the first empty plan.
+        for _ in 0..10_000 {
+            let in_flight: usize =
+                server.loads().iter().map(|l| l.running + l.waiting).sum();
+            if in_flight == 0 {
+                break;
+            }
+            server.rebalance();
+            migration_passes += 1;
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
     let mut total_tokens = 0usize;
     let mut worst_latency = 0f64;
     for rx in rxs {
@@ -96,6 +127,11 @@ where
         "state traffic: gathered={}B scattered={}B resident={}B padded_rows={}",
         t.bytes_gathered, t.bytes_scattered, t.state_bytes_resident, t.padded_rows
     );
+    println!(
+        "migration: migrations={} migrated={}B reprefills_avoided={} reprefill_tokens={} \
+         (rebalance passes: {migration_passes})",
+        t.migrations, t.bytes_migrated, t.reprefills_avoided, t.reprefill_tokens
+    );
     server.shutdown();
 
     println!(
@@ -111,6 +147,8 @@ where
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_requests = args.get_u64("requests", 24) as usize;
+    let workers = (args.get_u64("workers", 1) as usize).max(1);
+    let rebalance = args.flag("rebalance");
     let policy = BatchPolicy::from_args(&args);
     let spec = PlanSpec::parse(args.get_or("plan", "adaptive"))?;
 
@@ -123,13 +161,18 @@ fn main() -> anyhow::Result<()> {
         let probe = MockEngine::new();
         let vocab = probe.manifest().vocab;
         println!(
-            "mock serving: chunk_tokens={} token_budget={} plan={}",
+            "mock serving: chunk_tokens={} token_budget={} plan={} workers={workers} rebalance={rebalance}",
             policy.chunk_tokens,
             policy.token_budget,
             spec.name()
         );
         let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
-        return drive(|| Ok(MockEngine::new()), policy, spec, reqs);
+        fn mock_factory() -> anyhow::Result<MockEngine> {
+            Ok(MockEngine::new())
+        }
+        let factories: Vec<fn() -> anyhow::Result<MockEngine>> =
+            (0..workers).map(|_| mock_factory as fn() -> anyhow::Result<MockEngine>).collect();
+        return drive(factories, policy, spec, reqs, rebalance);
     }
 
     let dir = args.get_or("artifacts", "artifacts").to_string();
@@ -165,5 +208,11 @@ fn main() -> anyhow::Result<()> {
     let mut gen = WorkloadGen::new(7, manifest.vocab, manifest.prefill_len, 2, 24)
         .with_prompt_range(1, 2 * manifest.prefill_len);
     let reqs: Vec<Request> = (0..n_requests).map(|_| gen.next_request()).collect();
-    drive(move || MambaEngine::load(&dir), policy, spec, reqs)
+    let factories: Vec<_> = (0..workers)
+        .map(|_| {
+            let d = dir.clone();
+            move || MambaEngine::load(&d)
+        })
+        .collect();
+    drive(factories, policy, spec, reqs, rebalance)
 }

@@ -265,6 +265,7 @@ fn main() {
     println!("wrote BENCH_hotpath.json (traffic gate: PASS)");
 
     planner_gate();
+    sharding_gate();
 
     if !quick {
         println!("\n== hot-path microbenchmarks ==");
@@ -415,4 +416,218 @@ fn planner_gate() {
     std::fs::write("BENCH_planner.json", doc.to_string())
         .expect("writing BENCH_planner.json");
     println!("wrote BENCH_planner.json (planner gate: PASS)");
+}
+
+/// How a hot-skew run treats the requests stranded on the hot worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SkewMode {
+    /// Pre-sharding behaviour: requests stay pinned where they landed.
+    Pinned,
+    /// Sharded arena: migrate part of the hot decode set by moving
+    /// resident state rows.
+    Migrate,
+    /// Migration realized as the re-prefill fallback (the cost the
+    /// state move eliminates, priced on the same counters).
+    Reprefill,
+}
+
+struct SkewOutcome {
+    name: &'static str,
+    tokens: Vec<Vec<i32>>,
+    hot_ticks: u64,
+    cold_ticks: u64,
+    migrations: u64,
+    bytes_migrated: u64,
+    reprefills_avoided: u64,
+    reprefill_tokens: u64,
+    bytes_per_seq: u64,
+    /// Checked (and meaningful) only for the Migrate run — a state
+    /// move must leave the global gauge invariant. `None` for modes
+    /// that never measured it.
+    gauge_conserved: Option<bool>,
+}
+
+/// One deterministic hot-skew run on a two-shard scheduler pair: six
+/// long-decode requests pinned hot, one cold. At a fixed tick (all six
+/// deterministically decoding) three of the hot requests move to the
+/// cold shard — by state move, by re-prefill, or not at all. Pure
+/// single-threaded scheduling, so every counter is workload-
+/// deterministic: same run, same numbers, every time.
+fn sharded_skew_run(mode: SkewMode) -> SkewOutcome {
+    let sc = ServeScenario::sharded_skew();
+    let vocab = MockEngine::new().manifest().vocab;
+    let mut hot = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    hot.set_shard(0);
+    let mut cold = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    cold.set_shard(1);
+    let bytes_per_seq = hot.state_arena().bytes_per_seq() as u64;
+    for r in sc.requests(vocab) {
+        if ServeScenario::SHARDED_HOT_IDS.contains(&r.id) {
+            hot.submit(r).unwrap();
+        } else {
+            cold.submit(r).unwrap();
+        }
+    }
+
+    // 16-token prompts × 6 on a 16-token budget: prefill interleaves
+    // with early decode and the whole hot set is decoding well before
+    // tick 14 (the scheduler asserts it via detach's running check).
+    const MIGRATE_TICK: u32 = 14;
+    let mut responses: Vec<mambalaya::coordinator::Response> = Vec::new();
+    let mut gauge_conserved: Option<bool> = None;
+    let mut tick = 0u32;
+    loop {
+        let (a, pa) = hot.tick().unwrap();
+        let (b, pb) = cold.tick().unwrap();
+        responses.extend(a);
+        responses.extend(b);
+        tick += 1;
+        assert!(tick < 10_000, "skew scenario did not drain");
+        if tick == MIGRATE_TICK && mode != SkewMode::Pinned {
+            for seq in [1u64, 2, 3] {
+                let before =
+                    hot.state_arena().resident_bytes() + cold.state_arena().resident_bytes();
+                let p = hot.detach(seq).expect("hot request is decoding at the migrate tick");
+                assert!(p.decode_phase());
+                match mode {
+                    SkewMode::Migrate => {
+                        cold.attach(p);
+                        let after = hot.state_arena().resident_bytes()
+                            + cold.state_arena().resident_bytes();
+                        gauge_conserved =
+                            Some(gauge_conserved.unwrap_or(true) && after == before);
+                    }
+                    SkewMode::Reprefill => cold.attach_reprefill(p),
+                    SkewMode::Pinned => unreachable!(),
+                }
+            }
+        }
+        if !pa && !pb && hot.pending() + cold.pending() == 0 {
+            break;
+        }
+    }
+    responses.sort_by_key(|r| r.id);
+    let tokens = responses.iter().map(|r| r.tokens.clone()).collect();
+    SkewOutcome {
+        name: match mode {
+            SkewMode::Pinned => "pinned",
+            SkewMode::Migrate => "migrate",
+            SkewMode::Reprefill => "reprefill",
+        },
+        tokens,
+        hot_ticks: hot.metrics().ticks,
+        cold_ticks: cold.metrics().ticks,
+        migrations: hot.metrics().migrations + cold.metrics().migrations,
+        bytes_migrated: hot.metrics().bytes_migrated + cold.metrics().bytes_migrated,
+        reprefills_avoided: hot.metrics().reprefills_avoided
+            + cold.metrics().reprefills_avoided,
+        reprefill_tokens: hot.metrics().reprefill_tokens + cold.metrics().reprefill_tokens,
+        bytes_per_seq,
+        gauge_conserved,
+    }
+}
+
+/// Hot-worker skew with and without migration, gated on deterministic
+/// counters (never wall time):
+///
+/// * token outputs are bit-identical across pinned / migrate /
+///   re-prefill — moving state changes nothing observable;
+/// * a migration moves exactly `state_bytes_per_seq` and conserves the
+///   global resident gauge, with `reprefills_avoided ≥ 1`;
+/// * the migrated traffic beats the re-prefill fallback by ≥ 5× —
+///   re-prefilling replays `reprefill_tokens` state updates (one
+///   `state_bytes_per_seq` write per token) where the move pays one
+///   transfer per request.
+///
+/// Writes `BENCH_sharding.json`.
+fn sharding_gate() {
+    println!("\n== sharded state arena: hot-skew migration (deterministic counters) ==");
+    let runs = [
+        sharded_skew_run(SkewMode::Pinned),
+        sharded_skew_run(SkewMode::Migrate),
+        sharded_skew_run(SkewMode::Reprefill),
+    ];
+    for o in &runs {
+        println!(
+            "  {:<10} hot_ticks={:<4} cold_ticks={:<4} migrations={} migrated={}B \
+             reprefills_avoided={} reprefill_tokens={}",
+            o.name,
+            o.hot_ticks,
+            o.cold_ticks,
+            o.migrations,
+            o.bytes_migrated,
+            o.reprefills_avoided,
+            o.reprefill_tokens,
+        );
+    }
+    let (pinned, migrate, reprefill) = (&runs[0], &runs[1], &runs[2]);
+
+    // Gate 1 (conformance): migration — either realization — changes
+    // no output.
+    assert_eq!(pinned.tokens, migrate.tokens, "state move changed tokens");
+    assert_eq!(pinned.tokens, reprefill.tokens, "re-prefill fallback changed tokens");
+
+    // Gate 2 (conservation): three decode-phase moves, each exactly one
+    // state payload, gauge conserved at every move.
+    assert_eq!(migrate.migrations, 3);
+    assert_eq!(migrate.bytes_migrated, 3 * migrate.bytes_per_seq);
+    assert!(migrate.reprefills_avoided >= 1);
+    assert_eq!(migrate.reprefills_avoided, 3);
+    assert_eq!(
+        migrate.gauge_conserved,
+        Some(true),
+        "resident gauge not conserved across migration"
+    );
+    assert_eq!(migrate.reprefill_tokens, 0);
+
+    // Gate 3 (the sharding acceptance bar): migrated traffic beats the
+    // re-prefill fallback by ≥ 5× on the deterministic counters. Each
+    // replayed token is one state update — one state_bytes_per_seq
+    // write the device cannot skip — so the fallback's byte cost is
+    // reprefill_tokens × state_bytes_per_seq vs one payload per move.
+    assert_eq!(reprefill.bytes_migrated, 0);
+    assert!(reprefill.reprefill_tokens > 0);
+    let reprefill_bytes = reprefill.reprefill_tokens * reprefill.bytes_per_seq;
+    assert!(
+        reprefill_bytes >= 5 * migrate.bytes_migrated,
+        "sharding gate failed: reprefill fallback {reprefill_bytes}B < 5x migrated {}B",
+        migrate.bytes_migrated
+    );
+
+    let mut arr = JsonValue::Arr(vec![]);
+    for o in &runs {
+        let mut j = JsonValue::obj();
+        j.set("name", o.name)
+            .set("hot_ticks", o.hot_ticks)
+            .set("cold_ticks", o.cold_ticks)
+            .set("migrations", o.migrations)
+            .set("bytes_migrated", o.bytes_migrated)
+            .set("reprefills_avoided", o.reprefills_avoided)
+            .set("reprefill_tokens", o.reprefill_tokens)
+            .set("state_bytes_per_seq", o.bytes_per_seq);
+        // Only the migrate run measures gauge conservation; don't
+        // claim it for runs that never checked.
+        if let Some(conserved) = o.gauge_conserved {
+            j.set("resident_gauge_conserved", conserved);
+        }
+        arr.push(j);
+    }
+    let mut gate = JsonValue::obj();
+    gate.set("tokens_identical", true)
+        .set("bytes_migrated", migrate.bytes_migrated)
+        .set("reprefills_avoided", migrate.reprefills_avoided)
+        .set("resident_gauge_conserved", migrate.gauge_conserved == Some(true))
+        .set("reprefill_fallback_bytes", reprefill_bytes)
+        .set(
+            "migration_traffic_advantage",
+            ((reprefill_bytes as f64 / migrate.bytes_migrated.max(1) as f64) * 1e3).round()
+                / 1e3,
+        )
+        .set("advantage_min", 5u64)
+        .set("pass", true);
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "sharding").set("runs", arr).set("gate", gate);
+    std::fs::write("BENCH_sharding.json", doc.to_string())
+        .expect("writing BENCH_sharding.json");
+    println!("wrote BENCH_sharding.json (sharding gate: PASS)");
 }

@@ -16,6 +16,7 @@ enum ScenarioMix {
     PrefillHeavy,
     DecodeHeavy,
     Interference,
+    ShardedSkew,
 }
 
 /// A named, deterministic serving workload: a batch policy plus a
@@ -82,6 +83,30 @@ impl ServeScenario {
         }
     }
 
+    /// Hot-worker skew for the sharding gate: seven medium-prompt,
+    /// long-generation requests. The bench pins ids 0..=5 to one
+    /// worker (hot) and id 6 to another (cold), then migrates part of
+    /// the hot decode set mid-flight — with state movement vs the
+    /// re-prefill baseline vs no migration at all — and gates on the
+    /// deterministic `bytes_migrated` / `reprefill_tokens` counters.
+    pub fn sharded_skew() -> ServeScenario {
+        ServeScenario {
+            name: "sharded_skew",
+            policy: BatchPolicy {
+                chunk_tokens: 4,
+                token_budget: 16,
+                max_chunk_rows: 4,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::ShardedSkew,
+        }
+    }
+
+    /// Request ids [`ServeScenario::sharded_skew`] pins to the hot
+    /// worker (the rest go cold).
+    pub const SHARDED_HOT_IDS: std::ops::Range<u64> = 0..6;
+
     /// The scenarios the planner CI gates run on.
     pub fn bundled() -> Vec<ServeScenario> {
         vec![
@@ -107,6 +132,13 @@ impl ServeScenario {
                 .map(|i| Request {
                     id: i,
                     prompt: vec![(i % 7) as i32 + 1; 3],
+                    max_new_tokens: 48,
+                })
+                .collect(),
+            ScenarioMix::ShardedSkew => (0..7)
+                .map(|i| Request {
+                    id: i,
+                    prompt: (0..16).map(|x| (x * 7 + i as i32 + 1) % v).collect(),
                     max_new_tokens: 48,
                 })
                 .collect(),
@@ -226,7 +258,10 @@ mod tests {
 
     #[test]
     fn scenarios_are_deterministic_and_well_formed() {
-        for sc in ServeScenario::bundled() {
+        for sc in ServeScenario::bundled()
+            .into_iter()
+            .chain([ServeScenario::sharded_skew()])
+        {
             let a = sc.requests(17);
             let b = sc.requests(17);
             assert!(!a.is_empty());

@@ -140,6 +140,24 @@ impl Batcher {
         self.jobs.push_back(PrefillJob { id, total: prompt_tokens, pos: 0 });
     }
 
+    /// Enqueue a *migrated* mid-prefill prompt with its cursor already
+    /// at `pos` (the partial state for `tokens[..pos]` was attached to
+    /// the arena by the scheduler). Joins the FIFO tail like any other
+    /// arrival.
+    pub fn enqueue_at(&mut self, id: u64, prompt_tokens: usize, pos: usize) {
+        assert!(pos < prompt_tokens, "cursor past prompt end for seq {id}");
+        self.jobs.push_back(PrefillJob { id, total: prompt_tokens, pos });
+    }
+
+    /// Splice a waiting prompt out of the queue (migration detach).
+    /// Returns its `(total, cursor)` so the target worker can resume at
+    /// the same position.
+    pub fn remove(&mut self, id: u64) -> Option<(usize, usize)> {
+        let idx = self.jobs.iter().position(|j| j.id == id)?;
+        let job = self.jobs.remove(idx).expect("position is in range");
+        Some((job.total, job.pos))
+    }
+
     /// Prompts not yet fully prefilled.
     pub fn waiting(&self) -> usize {
         self.jobs.len()
@@ -403,6 +421,29 @@ mod tests {
         // chunk, so the queue drains.
         let chunks = chunks_of(&b.next_action(0));
         assert_eq!(chunks, vec![ChunkPlan { id: 1, start: 0, len: 1, last: false }]);
+    }
+
+    #[test]
+    fn remove_and_enqueue_at_splice_mid_prefill_jobs() {
+        let mut b = batcher();
+        b.enqueue(1, 10);
+        b.enqueue(2, 6);
+        let a = chunks_of(&b.next_action(0));
+        b.commit(&a);
+        assert_eq!(b.cursor(1), Some(4));
+        // Splice seq 1 out mid-prefill (migration detach)...
+        assert_eq!(b.remove(1), Some((10, 4)));
+        assert_eq!(b.remove(1), None);
+        assert_eq!(b.waiting(), 1);
+        // ...and back in at its cursor (migration attach): the next
+        // chunk resumes exactly where the source worker stopped.
+        b.enqueue_at(1, 10, 4);
+        assert_eq!(b.cursor(1), Some(4));
+        assert_eq!(b.mid_prefill(), 1);
+        let chunks = chunks_of(&b.next_action(0));
+        assert!(chunks
+            .iter()
+            .any(|c| *c == ChunkPlan { id: 1, start: 4, len: 4, last: false }));
     }
 
     #[test]

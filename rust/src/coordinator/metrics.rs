@@ -45,6 +45,18 @@ pub struct TrafficSnapshot {
     pub state_bytes_resident: u64,
     /// Padded rows shipped to compiled decode batches.
     pub padded_rows: u64,
+    /// Migrations *attached* on this worker (counting on the receiving
+    /// side only keeps the server-wide sum exact: one per move).
+    pub migrations: u64,
+    /// State bytes installed by migration attaches — exactly
+    /// `state_bytes_per_seq` per state-carrying move.
+    pub bytes_migrated: u64,
+    /// Migrations of decode-phase requests, each of which would
+    /// otherwise have re-prefilled its whole processed history.
+    pub reprefills_avoided: u64,
+    /// Already-processed tokens re-prefilled by `Reprefill`-mode
+    /// migrations (the baseline cost the state move eliminates).
+    pub reprefill_tokens: u64,
     /// Plan switches the planner performed.
     pub plan_switches: u64,
     /// Ticks executed under each plan, indexed by
@@ -64,6 +76,33 @@ pub struct TrafficSnapshot {
 }
 
 impl TrafficSnapshot {
+    /// Accumulate another worker's snapshot into this one. Counters
+    /// sum; the `state_bytes_resident` *gauge* also sums — per-shard
+    /// residency is disjoint (a migrated row is resident on exactly one
+    /// shard at any instant), so the sum is the global gauge, never a
+    /// double count.
+    pub fn accumulate(&mut self, t: &TrafficSnapshot) {
+        self.bytes_gathered += t.bytes_gathered;
+        self.bytes_scattered += t.bytes_scattered;
+        self.state_bytes_resident += t.state_bytes_resident;
+        self.padded_rows += t.padded_rows;
+        self.migrations += t.migrations;
+        self.bytes_migrated += t.bytes_migrated;
+        self.reprefills_avoided += t.reprefills_avoided;
+        self.reprefill_tokens += t.reprefill_tokens;
+        self.plan_switches += t.plan_switches;
+        for (a, b) in self.ticks_per_plan.iter_mut().zip(&t.ticks_per_plan) {
+            *a += b;
+        }
+        for (a, b) in self.plan_dwell_hist.iter_mut().zip(&t.plan_dwell_hist) {
+            *a += b;
+        }
+        self.predicted_cycles += t.predicted_cycles;
+        self.predicted_bytes += t.predicted_bytes;
+        self.modeled_cycles += t.modeled_cycles;
+        self.modeled_bytes += t.modeled_bytes;
+    }
+
     /// The plan most ticks executed under, with its tick count.
     pub fn dominant_plan(&self) -> Option<(PlanChoice, u64)> {
         let all = PlanChoice::all();
@@ -134,6 +173,18 @@ pub struct Metrics {
     /// Padded rows shipped to compiled decode batches by the default
     /// engine decomposition (a fused engine pads nothing).
     pub padded_rows: u64,
+    /// Migrations attached on this worker (see [`TrafficSnapshot`]).
+    pub migrations: u64,
+    /// Migrations *detached* from this worker (report-line diagnostics;
+    /// deliberately not in the snapshot, so server-wide sums count each
+    /// move once, on the attaching side).
+    pub migrations_out: u64,
+    /// State bytes installed by migration attaches.
+    pub bytes_migrated: u64,
+    /// Decode-phase migrations (whole-history re-prefills avoided).
+    pub reprefills_avoided: u64,
+    /// Already-processed tokens replayed by `Reprefill`-mode attaches.
+    pub reprefill_tokens: u64,
     /// Plan switches the planner performed.
     pub plan_switches: u64,
     /// Ticks executed under each plan ([`PlanChoice::index`]).
@@ -173,6 +224,11 @@ impl Metrics {
             bytes_scattered: 0,
             state_bytes_resident: 0,
             padded_rows: 0,
+            migrations: 0,
+            migrations_out: 0,
+            bytes_migrated: 0,
+            reprefills_avoided: 0,
+            reprefill_tokens: 0,
             plan_switches: 0,
             ticks_per_plan: [0; PlanChoice::COUNT],
             plan_dwell_hist: [0; DWELL_BUCKETS],
@@ -223,6 +279,34 @@ impl Metrics {
         self.padded_rows += padded;
     }
 
+    /// Record a migration *attach* on this worker: `bytes` of state
+    /// installed (`state_bytes_per_seq`, or 0 for a `Reprefill`-mode
+    /// attach), whether it avoided a whole-history re-prefill
+    /// (decode-phase move), and the arena's resident gauge *after* the
+    /// attach — migrations update the gauge immediately, between ticks,
+    /// so the global sum is conserved at every instant.
+    pub fn record_migration_in(&mut self, bytes: u64, avoided_reprefill: bool, resident: u64) {
+        self.migrations += 1;
+        self.bytes_migrated += bytes;
+        if avoided_reprefill {
+            self.reprefills_avoided += 1;
+        }
+        self.state_bytes_resident = resident;
+    }
+
+    /// Record a migration *detach* from this worker (gauge drops now;
+    /// the transfer itself is counted by the attaching worker).
+    pub fn record_migration_out(&mut self, resident: u64) {
+        self.migrations_out += 1;
+        self.state_bytes_resident = resident;
+    }
+
+    /// Record the already-processed tokens a `Reprefill`-mode attach
+    /// will replay through the engine.
+    pub fn record_reprefill(&mut self, tokens: u64) {
+        self.reprefill_tokens += tokens;
+    }
+
     /// Record one tick's plan decision and the engine's modeled cost
     /// for it (drained from the workspace after the call).
     pub fn record_plan(&mut self, d: &PlanDecision, modeled_cycles: u64, modeled_bytes: u64) {
@@ -244,6 +328,10 @@ impl Metrics {
             bytes_scattered: self.bytes_scattered,
             state_bytes_resident: self.state_bytes_resident,
             padded_rows: self.padded_rows,
+            migrations: self.migrations,
+            bytes_migrated: self.bytes_migrated,
+            reprefills_avoided: self.reprefills_avoided,
+            reprefill_tokens: self.reprefill_tokens,
             plan_switches: self.plan_switches,
             ticks_per_plan: self.ticks_per_plan,
             plan_dwell_hist: self.plan_dwell_hist,
@@ -292,6 +380,7 @@ impl Metrics {
             "requests={} tokens={} ({:.1} tok/s) chunks={} prefill_tokens={} decode_steps={} \
              ticks={} max_tick_tokens={} queue={:.1} budget_use={:.2} \
              gathered={}B scattered={}B resident={}B padded_rows={} \
+             migrations={}in/{}out migrated={}B reprefills_avoided={} \
              plans={} plan_switches={} plan_err={:.2}x \
              ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
             self.requests_completed,
@@ -308,6 +397,10 @@ impl Metrics {
             self.bytes_scattered,
             self.state_bytes_resident,
             self.padded_rows,
+            self.migrations,
+            self.migrations_out,
+            self.bytes_migrated,
+            self.reprefills_avoided,
             snap.plans_summary(),
             self.plan_switches,
             snap.prediction_error(),
@@ -452,6 +545,42 @@ mod tests {
         assert!(r.contains("scattered=60B"));
         assert!(r.contains("resident=256B"));
         assert!(r.contains("padded_rows=2"));
+    }
+
+    #[test]
+    fn migration_accounting_and_snapshot_accumulate() {
+        // Worker A detaches (gauge drops); worker B attaches (counters
+        // rise, gauge rises). The server-wide accumulation counts the
+        // move once and conserves the gauge sum.
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record_traffic(TrafficCounters::default(), 512, 0); // two resident seqs
+        b.record_traffic(TrafficCounters::default(), 256, 0);
+        let before: u64 = [&a, &b].iter().map(|m| m.state_bytes_resident).sum();
+
+        a.record_migration_out(256);
+        b.record_migration_in(256, true, 512);
+        assert_eq!(a.migrations_out, 1);
+        assert_eq!(b.migrations, 1);
+        assert_eq!(b.bytes_migrated, 256);
+        assert_eq!(b.reprefills_avoided, 1);
+        let after: u64 = [&a, &b].iter().map(|m| m.state_bytes_resident).sum();
+        assert_eq!(before, after, "global resident gauge conserved");
+
+        b.record_reprefill(40);
+        let mut total = TrafficSnapshot::default();
+        total.accumulate(&a.traffic_snapshot());
+        total.accumulate(&b.traffic_snapshot());
+        assert_eq!(total.migrations, 1, "each move counted once, on the attach side");
+        assert_eq!(total.bytes_migrated, 256);
+        assert_eq!(total.reprefills_avoided, 1);
+        assert_eq!(total.reprefill_tokens, 40);
+        assert_eq!(total.state_bytes_resident, after);
+
+        let r = b.report();
+        assert!(r.contains("migrations=1in/0out"), "{r}");
+        assert!(r.contains("migrated=256B"), "{r}");
+        assert!(r.contains("reprefills_avoided=1"), "{r}");
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! The L3 serving coordinator: request router, continuous batcher with
-//! chunked prefill, mixed prefill/decode scheduler, and the
-//! recurrent-state **arena** (Mamba's fixed-size analogue of a KV-cache
-//! manager, kept resident in engine layout so the steady-state decode
-//! tick moves zero state bytes). Python never runs here — the engine
+//! The L3 serving coordinator: slot-aware request router, continuous
+//! batcher with chunked prefill, mixed prefill/decode scheduler, and
+//! the **sharded** recurrent-state arena (Mamba's fixed-size analogue
+//! of a KV-cache manager, kept resident in engine layout so the
+//! steady-state decode tick moves zero state bytes; each worker owns
+//! one shard, and in-flight requests migrate between shards by moving
+//! their resident rows — never by re-prefilling). Python never runs here — the engine
 //! executes AOT-compiled HLO artifacts via PJRT.
 
 pub mod batcher;
@@ -10,6 +12,7 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod state;
 
 pub use batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
@@ -17,4 +20,8 @@ pub use metrics::{Metrics, TrafficSnapshot, DWELL_BUCKETS};
 pub use request::{Request, Response, WorkloadGen};
 pub use scheduler::{Scheduler, StatePath};
 pub use server::{serve_all, Server};
-pub use state::StateArena;
+pub use shard::{
+    Migration, MigrationMode, MigrationOutcome, MigrationPacket, RouterPolicy, ShardMap,
+    WorkerLoad,
+};
+pub use state::{SlotHandle, StateArena};

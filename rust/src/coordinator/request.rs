@@ -36,6 +36,12 @@ pub struct InFlight {
     /// the request starts generating once this reaches the prompt
     /// length. Mirrors the batcher's per-job cursor.
     pub prefill_pos: usize,
+    /// How many leading `generated` tokens a `Reprefill`-mode migration
+    /// has folded into `prompt` as replay history. A second re-prefill
+    /// must append only `generated[prompt_replayed..]`, or the replayed
+    /// history would duplicate those tokens and corrupt the stream. 0
+    /// for every flight that was never reprefill-migrated.
+    pub prompt_replayed: usize,
 }
 
 impl InFlight {
@@ -52,6 +58,7 @@ impl InFlight {
             first_token: None,
             generated,
             prefill_pos: 0,
+            prompt_replayed: 0,
         }
     }
 

@@ -41,7 +41,8 @@ use crate::runtime::engine::{argmax_rows_into, Executor, Workspace};
 use super::batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
-use super::state::StateArena;
+use super::shard::MigrationPacket;
+use super::state::{SlotHandle, StateArena};
 
 /// How the scheduler moves recurrent state between ticks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -86,6 +87,11 @@ pub struct Scheduler<E: Executor> {
     /// Once poisoned, every tick fails fast; the worker must be
     /// discarded (see `server::worker_loop`, which exits on tick error).
     poisoned: bool,
+    /// Resident state bytes on *other* shards of the sharded arena
+    /// (pushed by the server's gauge sync), so the planner's
+    /// [`WorkloadFeatures`] see the server-wide residency, not just
+    /// this worker's slice.
+    remote_resident: u64,
     metrics: Metrics,
     // Per-tick staging, retained across ticks so the steady-state
     // decode tick allocates nothing.
@@ -150,6 +156,7 @@ impl<E: Executor> Scheduler<E> {
             running: BTreeMap::new(),
             decode_rr: 0,
             poisoned: false,
+            remote_resident: 0,
             metrics: Metrics::new(),
             lens_buf: Vec::new(),
             tokens_buf: Vec::new(),
@@ -202,6 +209,122 @@ impl<E: Executor> Scheduler<E> {
     /// The resident-state arena (tests / diagnostics).
     pub fn state_arena(&self) -> &StateArena {
         &self.states
+    }
+
+    /// Assign this scheduler's shard index in the sharded arena (the
+    /// server sets one per worker; defaults to 0).
+    pub fn set_shard(&mut self, shard: usize) {
+        self.states.set_shard(shard);
+    }
+
+    /// The globally stable `(shard, row)` handle of a resident
+    /// sequence's state.
+    pub fn slot_of(&self, seq: u64) -> Option<SlotHandle> {
+        self.states.handle_of(seq)
+    }
+
+    /// Update the resident-bytes gauge of the *other* shards (server
+    /// gauge sync), consulted by [`Scheduler::global_resident_bytes`].
+    pub fn set_remote_resident_bytes(&mut self, bytes: u64) {
+        self.remote_resident = bytes;
+    }
+
+    /// Server-wide resident state bytes: this shard's arena gauge plus
+    /// the last-synced remote gauge — the value the planner's
+    /// [`WorkloadFeatures`] carry each tick.
+    pub fn global_resident_bytes(&self) -> u64 {
+        self.states.resident_bytes() + self.remote_resident
+    }
+
+    /// **Migration detach**: splice an in-flight sequence out of this
+    /// worker — its bookkeeping plus its resident state rows — without
+    /// disturbing any other sequence's residency (the steady-state
+    /// zero-copy tick path is untouched; detach runs between ticks).
+    ///
+    /// Detachable: decode-phase (running) sequences, and mid-prefill
+    /// sequences whose partial state exists (cursor > 0). Returns
+    /// `None` for anything else — completed, unknown, pre-state, or
+    /// when this scheduler is poisoned (its resident state cannot be
+    /// trusted, so it must not be exported).
+    pub fn detach(&mut self, seq: u64) -> Option<MigrationPacket> {
+        if self.poisoned {
+            return None;
+        }
+        let flight = if self.running.contains_key(&seq) {
+            self.running.remove(&seq).expect("checked")
+        } else if self.waiting.get(&seq).map_or(false, |fl| fl.prefill_pos > 0) {
+            let fl = self.waiting.remove(&seq).expect("checked");
+            let (_, pos) = self.batcher.remove(seq).expect("waiting seq has a batcher job");
+            debug_assert_eq!(pos, fl.prefill_pos, "batcher cursor mirrors InFlight");
+            fl
+        } else {
+            return None;
+        };
+        let from = self.states.handle_of(seq).expect("in-flight seq holds state");
+        let (conv, ssm) =
+            self.states.detach_row(seq).expect("in-flight seq has resident state");
+        self.metrics.record_migration_out(self.states.resident_bytes());
+        Some(MigrationPacket { flight, from, conv, ssm })
+    }
+
+    /// **Migration attach** (the sharded design's payoff): install a
+    /// detached sequence's state into this shard's arena and resume it
+    /// exactly where the source worker stopped — decode-phase requests
+    /// rejoin the running set, mid-prefill ones rejoin the prefill
+    /// queue at their cursor. One `state_bytes_per_seq` transfer,
+    /// counted as `bytes_migrated`; never a re-prefill.
+    pub fn attach(&mut self, p: MigrationPacket) {
+        let seq = p.seq();
+        debug_assert!(
+            !self.running.contains_key(&seq) && !self.waiting.contains_key(&seq),
+            "attach of a sequence already in flight here"
+        );
+        let decode_phase = p.decode_phase();
+        let bytes = p.state_bytes();
+        self.states.attach_row(seq, &p.conv, &p.ssm);
+        self.metrics
+            .record_migration_in(bytes, decode_phase, self.states.resident_bytes());
+        if decode_phase {
+            self.running.insert(seq, p.flight);
+        } else {
+            self.batcher
+                .enqueue_at(seq, p.flight.req.prompt.len(), p.flight.prefill_pos);
+            self.waiting.insert(seq, p.flight);
+        }
+    }
+
+    /// **Re-prefill attach**: the pre-sharding baseline, kept so the
+    /// counter gates can price what migration replaces. The packet's
+    /// state payload is discarded; the already-processed tokens (whole
+    /// prompt plus generated suffix for decode-phase requests, the
+    /// prefilled prefix for mid-prefill ones) are replayed through the
+    /// engine as a fresh prefill. Token outputs are identical — the
+    /// replayed history rebuilds the exact state, and the final chunk
+    /// re-samples the same pending token — but the cost lands in
+    /// `reprefill_tokens` instead of `bytes_migrated`.
+    pub fn attach_reprefill(&mut self, p: MigrationPacket) {
+        let replayed = p.reprefill_cost_tokens() as u64;
+        let decode_phase = p.decode_phase();
+        let mut flight = p.flight;
+        let seq = flight.req.id;
+        if decode_phase {
+            // State after k generated tokens reflects prompt + g1..gk−1
+            // (gk is the pending decode input), so that is the history
+            // to replay; the completing chunk re-samples gk. Append
+            // only the suffix a previous re-prefill has not already
+            // folded into the prompt (`prompt_replayed`), else the
+            // replayed history would duplicate tokens.
+            let k = flight.generated.len();
+            flight.req.prompt.extend_from_slice(&flight.generated[flight.prompt_replayed..k - 1]);
+            flight.prompt_replayed = k - 1;
+            flight.generated.truncate(k - 1);
+        }
+        flight.prefill_pos = 0;
+        self.metrics
+            .record_migration_in(0, false, self.states.resident_bytes());
+        self.metrics.record_reprefill(replayed);
+        self.batcher.enqueue(seq, flight.req.prompt.len());
+        self.waiting.insert(seq, flight);
     }
 
     pub fn manifest(&self) -> &crate::runtime::artifact::Manifest {
@@ -311,12 +434,14 @@ impl<E: Executor> Scheduler<E> {
 
         // Select this tick's fusion plan from the engine-visible
         // features (single-token chunk rows classify as decode rows,
-        // matching how the engine reads `lens`). Steady state this is
-        // a bucket-cache lookup — no allocation, no model evaluation.
+        // matching how the engine reads `lens`). The resident gauge is
+        // the *server-wide* one — this shard's arena plus the synced
+        // remote shards. Steady state this is a bucket-cache lookup —
+        // no allocation, no model evaluation.
         let features = WorkloadFeatures::from_tick(
             &self.lens_buf[..chunks.len()],
             decode_ids.len(),
-            self.states.resident_bytes(),
+            self.global_resident_bytes(),
             self.batcher.policy().token_budget,
         );
         let decision = self.planner.decide(&features);
@@ -411,7 +536,11 @@ impl<E: Executor> Scheduler<E> {
             if ch.last {
                 let mut fl = self.waiting.remove(&ch.id).expect("waiting entry");
                 fl.prefill_pos += ch.len;
-                fl.first_token = Some(now);
+                // A reprefill-migrated flight already clocked its first
+                // token on the source worker — keep the original TTFT.
+                if fl.first_token.is_none() {
+                    fl.first_token = Some(now);
+                }
                 fl.generated.push(self.next_buf[b]);
                 self.metrics.record_decode(1); // the prefill-produced token
                 if fl.done() {
@@ -654,6 +783,128 @@ mod tests {
         // The mock charges every tick with the plan's analytical cost.
         assert!(met.modeled_cycles > 0);
         assert!(met.predicted_cycles > 0);
+    }
+
+    #[test]
+    fn detach_attach_resumes_decode_without_reprefill() {
+        // One request decodes on shard 0 for a while, migrates to
+        // shard 1, and finishes there — tokens identical to an
+        // unmigrated run, zero prefill work on the target worker.
+        let solo = {
+            let mut s = sched();
+            s.submit(Request { id: 5, prompt: vec![3, 1, 4, 1], max_new_tokens: 12 }).unwrap();
+            s.run_until_drained().unwrap().remove(0).tokens
+        };
+
+        let mut a = sched();
+        a.set_shard(0);
+        let mut b = sched();
+        b.set_shard(1);
+        a.submit(Request { id: 5, prompt: vec![3, 1, 4, 1], max_new_tokens: 12 }).unwrap();
+        for _ in 0..5 {
+            a.tick().unwrap();
+        }
+        assert_eq!(a.running(), 1);
+        assert_eq!(a.slot_of(5).unwrap().shard, 0);
+
+        let p = a.detach(5).expect("running seq detaches");
+        assert!(p.decode_phase());
+        assert_eq!(p.from.shard, 0);
+        assert_eq!(p.state_bytes(), a.state_arena().bytes_per_seq() as u64);
+        assert!(a.detach(5).is_none(), "gone from the source");
+        b.attach(p);
+        assert_eq!(b.slot_of(5).unwrap().shard, 1, "migration changed the handle's shard");
+
+        let mut out = b.run_until_drained().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out.remove(0).tokens, solo, "migration changed tokens");
+        // The move was counted once, on the attach side, and the
+        // target worker prefilled nothing.
+        assert_eq!(a.metrics().migrations_out, 1);
+        assert_eq!(b.metrics().migrations, 1);
+        assert_eq!(b.metrics().bytes_migrated, b.state_arena().bytes_per_seq() as u64);
+        assert_eq!(b.metrics().reprefills_avoided, 1);
+        assert_eq!(b.metrics().prefill_tokens, 0, "migration must never re-prefill");
+    }
+
+    #[test]
+    fn mid_prefill_detach_resumes_at_cursor() {
+        let policy = BatchPolicy { chunk_tokens: 4, token_budget: 8, ..BatchPolicy::default() };
+        let solo = {
+            let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+            let prompt: Vec<i32> = (0..24).map(|x| x % 17).collect();
+            s.submit(Request { id: 9, prompt, max_new_tokens: 3 }).unwrap();
+            s.run_until_drained().unwrap().remove(0).tokens
+        };
+        let mut a = Scheduler::new(MockEngine::new(), policy.clone());
+        let mut b = Scheduler::new(MockEngine::new(), policy);
+        b.set_shard(1);
+        let prompt: Vec<i32> = (0..24).map(|x| x % 17).collect();
+        a.submit(Request { id: 9, prompt, max_new_tokens: 3 }).unwrap();
+        a.tick().unwrap();
+        a.tick().unwrap();
+        assert_eq!(a.waiting(), 1, "still mid-prefill");
+        let p = a.detach(9).expect("mid-prefill seq with state detaches");
+        assert!(!p.decode_phase());
+        assert_eq!(p.flight.prefill_pos, 8);
+        b.attach(p);
+        let out = b.run_until_drained().unwrap();
+        assert_eq!(out[0].tokens, solo);
+        // Target only prefilled the *remaining* 16 tokens.
+        assert_eq!(b.metrics().prefill_tokens, 16);
+        assert_eq!(b.metrics().reprefills_avoided, 0, "partial move avoids no whole-history replay");
+    }
+
+    #[test]
+    fn detach_refuses_pre_state_and_unknown_sequences() {
+        let mut s = sched();
+        s.submit(Request { id: 1, prompt: vec![2; 6], max_new_tokens: 2 }).unwrap();
+        // No chunk has run: no resident state to move.
+        assert!(s.detach(1).is_none());
+        assert!(s.detach(42).is_none());
+        // The request is untouched and still completes.
+        assert_eq!(s.run_until_drained().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn reprefill_attach_matches_state_move_with_counted_replay() {
+        let run = |reprefill: bool| {
+            let mut a = sched();
+            let mut b = sched();
+            b.set_shard(1);
+            a.submit(Request { id: 7, prompt: vec![5, 6, 7], max_new_tokens: 10 }).unwrap();
+            for _ in 0..6 {
+                a.tick().unwrap();
+            }
+            let p = a.detach(7).expect("running");
+            let replay_cost = p.reprefill_cost_tokens();
+            if reprefill {
+                b.attach_reprefill(p);
+            } else {
+                b.attach(p);
+            }
+            let out = b.run_until_drained().unwrap();
+            (out[0].tokens.clone(), b.metrics().reprefill_tokens, replay_cost)
+        };
+        let (moved, moved_replay, _) = run(false);
+        let (replayed, replay_counter, replay_cost) = run(true);
+        assert_eq!(moved, replayed, "reprefill baseline must be token-identical");
+        assert_eq!(moved_replay, 0);
+        assert_eq!(replay_counter, replay_cost as u64);
+        assert!(replay_counter > 0);
+    }
+
+    #[test]
+    fn global_resident_bytes_sums_arena_and_remote() {
+        let mut s = sched();
+        assert_eq!(s.global_resident_bytes(), 0);
+        s.set_remote_resident_bytes(4096);
+        assert_eq!(s.global_resident_bytes(), 4096);
+        s.submit(Request { id: 1, prompt: vec![1, 2], max_new_tokens: 4 }).unwrap();
+        s.tick().unwrap();
+        let own = s.state_arena().resident_bytes();
+        assert!(own > 0);
+        assert_eq!(s.global_resident_bytes(), own + 4096);
     }
 
     #[test]

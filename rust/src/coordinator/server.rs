@@ -1,9 +1,19 @@
-//! Threaded serving front-end: a request router feeding one or more
-//! scheduler workers over channels (std threads — the vendored crate
-//! set has no tokio; see DESIGN.md §4). Each worker runs the
-//! continuous-batching tick loop ([`Scheduler::tick`]): one mixed
-//! engine call per tick, decode rows plus prefill chunks under the
-//! policy's token budget.
+//! Threaded serving front-end: a **slot-aware** request router feeding
+//! one or more scheduler workers over channels (std threads — the
+//! vendored crate set has no tokio; see DESIGN.md §4). Each worker runs
+//! the continuous-batching tick loop ([`Scheduler::tick`]) over its own
+//! shard of the sharded state arena: one mixed engine call per tick,
+//! decode rows plus prefill chunks under the policy's token budget.
+//!
+//! The router is the paper's leader: it places new requests on the
+//! least-loaded shard ([`ShardMap`]) and — the sharded design's payoff
+//! — **migrates in-flight requests between workers** over the same
+//! channels, splicing their resident state rows from one shard's arena
+//! into another's ([`Scheduler::detach`] → [`Scheduler::attach`]). A
+//! migration is one counted `state_bytes_per_seq` transfer
+//! (`bytes_migrated`), never a re-prefill; [`Server::rebalance`] plans
+//! moves under the [`RouterPolicy`] hysteresis so balanced or
+//! alternating load never thrashes state between workers.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -17,32 +27,51 @@ use super::batcher::BatchPolicy;
 use super::metrics::TrafficSnapshot;
 use super::request::{Request, Response};
 use super::scheduler::{Scheduler, StatePath};
+use super::shard::{
+    Migration, MigrationMode, MigrationOutcome, MigrationPacket, RouterPolicy, ShardMap,
+    WorkerLoad,
+};
+
+/// A successful detach reply: the transfer packet plus the response
+/// sink, which follows the request to its new worker.
+type DetachReply = (Box<MigrationPacket>, Sender<Response>);
 
 enum Msg {
     Submit(Request, Sender<Response>),
     Report(Sender<String>),
     Traffic(Sender<TrafficSnapshot>),
+    Load(Sender<WorkerLoad>),
+    Detach(u64, Sender<Option<DetachReply>>),
+    Attach(Box<MigrationPacket>, Sender<Response>, MigrationMode),
+    /// Gauge sync: resident state bytes on every *other* shard.
+    RemoteResident(u64),
     Shutdown,
 }
 
-/// One worker: a scheduler on its own thread.
+/// One worker: a scheduler on its own thread, owning one arena shard.
 struct Worker {
     tx: Sender<Msg>,
     handle: JoinHandle<()>,
-    /// Requests routed to this worker (router-side load estimate).
-    routed: u64,
 }
 
-/// The router/server: owns the workers, routes by least-load.
+/// The router/server: owns the workers, routes new requests by
+/// least-load and migrates in-flight ones by moving their state.
 pub struct Server {
     workers: Vec<Worker>,
+    shards: ShardMap,
+    router: RouterPolicy,
+    mode: MigrationMode,
+    /// Completion notifications from the workers (request ids), drained
+    /// lazily so the router's tracked load stays honest.
+    done_rx: Receiver<u64>,
 }
 
 impl Server {
     /// Start with one worker per engine *factory*. Each worker
     /// constructs its engine on its own thread (PJRT handles are not
     /// `Send`). Multiple workers model the paper's leader/worker split:
-    /// the router is the leader, each PJRT engine a worker.
+    /// the router is the leader, each PJRT engine a worker owning one
+    /// shard of the state arena.
     pub fn start<E, F>(factories: Vec<F>, policy: BatchPolicy) -> Server
     where
         E: Executor,
@@ -59,34 +88,176 @@ impl Server {
         E: Executor,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
+        let n_shards = factories.len();
+        let (done_tx, done_rx) = channel();
         let workers = factories
             .into_iter()
-            .map(|factory| {
+            .enumerate()
+            .map(|(shard, factory)| {
                 let (tx, rx) = channel::<Msg>();
                 let pol = policy.clone();
                 let sp = spec.clone();
+                let done = done_tx.clone();
                 let handle = std::thread::spawn(move || match factory() {
-                    Ok(engine) => worker_loop(engine, pol, sp, rx),
+                    Ok(engine) => worker_loop(engine, pol, sp, shard, rx, done),
                     Err(e) => eprintln!("coordinator: engine construction failed: {e}"),
                 });
-                Worker { tx, handle, routed: 0 }
+                Worker { tx, handle }
             })
             .collect();
-        Server { workers }
+        Server {
+            workers,
+            shards: ShardMap::new(n_shards),
+            router: RouterPolicy::default(),
+            mode: MigrationMode::Move,
+            done_rx,
+        }
     }
 
-    /// Route a request to the least-loaded worker; returns the response
-    /// channel.
+    /// Replace the router's migration heuristics.
+    pub fn set_router_policy(&mut self, policy: RouterPolicy) {
+        self.router = policy.normalized();
+    }
+
+    /// How migrations are realized ([`MigrationMode::Move`] by default;
+    /// [`MigrationMode::Reprefill`] is the counter-gate baseline).
+    pub fn set_migration_mode(&mut self, mode: MigrationMode) {
+        self.mode = mode;
+    }
+
+    /// The router's request → shard placement map (tests/diagnostics).
+    pub fn shard_map(&self) -> &ShardMap {
+        &self.shards
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Absorb the workers' completion notifications into the tracked
+    /// placement map.
+    fn drain_completions(&mut self) {
+        while let Ok(seq) = self.done_rx.try_recv() {
+            self.shards.complete(seq);
+        }
+    }
+
+    /// Route a request to the least-loaded worker (slot-aware: tracked
+    /// in-flight count per shard); returns the response channel.
     pub fn submit(&mut self, req: Request) -> Receiver<Response> {
+        self.drain_completions();
+        let shard = self.shards.place(req.id);
+        self.send_submit(req, shard)
+    }
+
+    /// Route a request to an explicit worker (benchmarks use this to
+    /// create hot-shard skew; production callers want [`Server::submit`]).
+    pub fn submit_to(&mut self, req: Request, shard: usize) -> Receiver<Response> {
+        self.drain_completions();
+        let shard = shard.min(self.workers.len().saturating_sub(1));
+        self.shards.assign(req.id, shard);
+        self.send_submit(req, shard)
+    }
+
+    fn send_submit(&mut self, req: Request, shard: usize) -> Receiver<Response> {
         let (tx, rx) = channel();
-        let w = self
-            .workers
-            .iter_mut()
-            .min_by_key(|w| w.routed)
-            .expect("at least one worker");
-        w.routed += 1;
+        let w = self.workers.get(shard).expect("at least one worker");
         let _ = w.tx.send(Msg::Submit(req, tx));
         rx
+    }
+
+    /// Live load snapshot of every worker (queried over the channels).
+    pub fn loads(&self) -> Vec<WorkerLoad> {
+        self.workers
+            .iter()
+            .filter_map(|w| {
+                let (tx, rx) = channel();
+                w.tx.send(Msg::Load(tx)).ok()?;
+                rx.recv().ok()
+            })
+            .collect()
+    }
+
+    /// Push the global resident-state gauge to every worker: each
+    /// scheduler learns the resident bytes on the *other* shards, so
+    /// the planner's per-tick `WorkloadFeatures` carry the server-wide
+    /// gauge instead of one shard's slice.
+    pub fn sync_global_resident(&self) {
+        let loads = self.loads();
+        let total: u64 = loads.iter().map(|l| l.resident_bytes).sum();
+        for l in &loads {
+            if let Some(w) = self.workers.get(l.shard) {
+                let _ = w.tx.send(Msg::RemoteResident(total - l.resident_bytes));
+            }
+        }
+    }
+
+    /// One rebalance pass: plan migrations off the hottest shards under
+    /// the [`RouterPolicy`] hysteresis, execute each over the worker
+    /// channels, and re-sync the global resident gauge. A planned move
+    /// can miss (the request completed, or holds no state yet); misses
+    /// are deferred so the next rounds don't retry them immediately.
+    pub fn rebalance(&mut self) -> MigrationOutcome {
+        self.drain_completions();
+        let planned = self.shards.plan_rebalance(&self.router);
+        let mut out = MigrationOutcome { planned: planned.len(), migrated: 0 };
+        for m in &planned {
+            if self.migrate_between(m.seq, m.from, m.to) {
+                self.shards.apply(m, &self.router);
+                out.migrated += 1;
+            } else {
+                self.shards.defer(m.seq, &self.router);
+            }
+        }
+        self.sync_global_resident();
+        out
+    }
+
+    /// Force one migration (tests / conformance): move `seq` to worker
+    /// `to` regardless of load. Returns false when the request is not
+    /// currently migratable (unknown, completed, pre-state, already
+    /// there).
+    pub fn force_migrate(&mut self, seq: u64, to: usize) -> bool {
+        self.drain_completions();
+        let Some(from) = self.shards.shard_of(seq) else { return false };
+        if from == to || to >= self.workers.len() {
+            return false;
+        }
+        if self.migrate_between(seq, from, to) {
+            self.shards.apply(&Migration { seq, from, to }, &self.router);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Execute one migration over the channels: detach (packet + sink)
+    /// from the source worker, attach on the target. The state is in
+    /// exactly one arena at every observable instant — the source
+    /// releases it before replying, and the target's attach message is
+    /// ordered before any later query on its channel. If the target
+    /// worker is gone (its mailbox dropped), the packet bounces back to
+    /// the source as a state move, so a failed migration never destroys
+    /// an in-flight request.
+    fn migrate_between(&self, seq: u64, from: usize, to: usize) -> bool {
+        let (tx, rx) = channel();
+        if self.workers[from].tx.send(Msg::Detach(seq, tx)).is_err() {
+            return false;
+        }
+        let Ok(Some((packet, sink))) = rx.recv() else { return false };
+        match self.workers[to].tx.send(Msg::Attach(packet, sink, self.mode)) {
+            Ok(()) => true,
+            Err(std::sync::mpsc::SendError(msg)) => {
+                if let Msg::Attach(packet, sink, _) = msg {
+                    // Re-attach where it came from — always as a state
+                    // move: the packet holds the authoritative state.
+                    let _ = self.workers[from]
+                        .tx
+                        .send(Msg::Attach(packet, sink, MigrationMode::Move));
+                }
+                false
+            }
+        }
     }
 
     /// Collect metrics reports from all workers.
@@ -101,9 +272,15 @@ impl Server {
             .collect()
     }
 
-    /// Aggregate the state-traffic and plan counters across all workers
-    /// (counters sum; the resident gauge sums over workers too, since
-    /// each worker owns its own arena, as does each planner).
+    /// Aggregate the state-traffic, migration and plan counters across
+    /// all workers. Counters sum. The `state_bytes_resident` *gauge*
+    /// also sums — and the sum is the one global gauge, not a double
+    /// count: per-shard residency is disjoint, and a migrated row is
+    /// resident on exactly one shard at any instant (the source worker
+    /// releases it before the detach reply, the target installs it on
+    /// attach, and each worker's gauge updates immediately — between
+    /// ticks — on both sides of the move). Migrations themselves are
+    /// counted once each, on the attaching worker.
     pub fn traffic(&self) -> TrafficSnapshot {
         let mut total = TrafficSnapshot::default();
         for w in &self.workers {
@@ -112,21 +289,7 @@ impl Server {
                 continue;
             }
             if let Ok(t) = rx.recv() {
-                total.bytes_gathered += t.bytes_gathered;
-                total.bytes_scattered += t.bytes_scattered;
-                total.state_bytes_resident += t.state_bytes_resident;
-                total.padded_rows += t.padded_rows;
-                total.plan_switches += t.plan_switches;
-                for (a, b) in total.ticks_per_plan.iter_mut().zip(&t.ticks_per_plan) {
-                    *a += b;
-                }
-                for (a, b) in total.plan_dwell_hist.iter_mut().zip(&t.plan_dwell_hist) {
-                    *a += b;
-                }
-                total.predicted_cycles += t.predicted_cycles;
-                total.predicted_bytes += t.predicted_bytes;
-                total.modeled_cycles += t.modeled_cycles;
-                total.modeled_bytes += t.modeled_bytes;
+                total.accumulate(&t);
             }
         }
         total
@@ -143,34 +306,92 @@ impl Server {
     }
 }
 
-fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, spec: PlanSpec, rx: Receiver<Msg>) {
+/// Apply one mailbox message to the worker's scheduler/sink state.
+/// Shared by the non-blocking drain and the idle blocking receive.
+fn handle_msg<E: Executor>(
+    msg: Msg,
+    sched: &mut Scheduler<E>,
+    sinks: &mut std::collections::BTreeMap<u64, Sender<Response>>,
+    shard: usize,
+    done: &Sender<u64>,
+    shutting_down: &mut bool,
+) {
+    match msg {
+        Msg::Submit(req, sink) => {
+            let id = req.id;
+            sinks.insert(id, sink);
+            if let Err(e) = sched.submit(req) {
+                eprintln!("coordinator: rejected request: {e}");
+                // The request will never complete: release the sink
+                // (the client's recv() errors out instead of hanging)
+                // and tell the router so its tracked placement doesn't
+                // leak a phantom load entry.
+                sinks.remove(&id);
+                let _ = done.send(id);
+            }
+        }
+        Msg::Report(tx) => {
+            let _ = tx.send(sched.metrics().report());
+        }
+        Msg::Traffic(tx) => {
+            let _ = tx.send(sched.metrics().traffic_snapshot());
+        }
+        Msg::Load(tx) => {
+            let _ = tx.send(WorkerLoad {
+                shard,
+                running: sched.running(),
+                waiting: sched.waiting(),
+                resident_bytes: sched.state_arena().resident_bytes(),
+            });
+        }
+        Msg::Detach(seq, tx) => {
+            // The sink must travel with the flight; refuse the detach
+            // if we don't hold one (nothing to route the response to).
+            let reply = if sinks.contains_key(&seq) {
+                sched.detach(seq).map(|p| {
+                    let sink = sinks.remove(&seq).expect("checked above");
+                    (Box::new(p), sink)
+                })
+            } else {
+                None
+            };
+            let _ = tx.send(reply);
+        }
+        Msg::Attach(packet, sink, mode) => {
+            sinks.insert(packet.seq(), sink);
+            match mode {
+                MigrationMode::Move => sched.attach(*packet),
+                MigrationMode::Reprefill => sched.attach_reprefill(*packet),
+            }
+        }
+        Msg::RemoteResident(bytes) => sched.set_remote_resident_bytes(bytes),
+        Msg::Shutdown => *shutting_down = true,
+    }
+}
+
+fn worker_loop<E: Executor>(
+    engine: E,
+    policy: BatchPolicy,
+    spec: PlanSpec,
+    shard: usize,
+    rx: Receiver<Msg>,
+    done: Sender<u64>,
+) {
     let mut sched =
         Scheduler::with_planner(engine, policy, StatePath::Resident, Planner::new(spec));
+    sched.set_shard(shard);
     let mut sinks: std::collections::BTreeMap<u64, Sender<Response>> =
         std::collections::BTreeMap::new();
     let mut shutting_down = false;
     loop {
         // Drain the mailbox without blocking while work is in flight.
-        loop {
+        while !shutting_down {
             match rx.try_recv() {
-                Ok(Msg::Submit(req, sink)) => {
-                    sinks.insert(req.id, sink);
-                    if let Err(e) = sched.submit(req) {
-                        eprintln!("coordinator: rejected request: {e}");
-                    }
+                Ok(msg) => {
+                    handle_msg(msg, &mut sched, &mut sinks, shard, &done, &mut shutting_down)
                 }
-                Ok(Msg::Report(tx)) => {
-                    let _ = tx.send(sched.metrics().report());
-                }
-                Ok(Msg::Traffic(tx)) => {
-                    let _ = tx.send(sched.metrics().traffic_snapshot());
-                }
-                Ok(Msg::Shutdown) => shutting_down = true,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => shutting_down = true,
-            }
-            if shutting_down {
-                break;
             }
         }
         if shutting_down && sched.pending() == 0 {
@@ -178,8 +399,9 @@ fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, spec: PlanSpec, rx: 
         }
 
         match sched.tick() {
-            Ok((done, progressed)) => {
-                for resp in done {
+            Ok((completed, progressed)) => {
+                for resp in completed {
+                    let _ = done.send(resp.id);
                     if let Some(sink) = sinks.remove(&resp.id) {
                         let _ = sink.send(resp);
                     }
@@ -189,21 +411,8 @@ fn worker_loop<E: Executor>(engine: E, policy: BatchPolicy, spec: PlanSpec, rx: 
                         return;
                     }
                     // Idle: block briefly for new work.
-                    match rx.recv_timeout(std::time::Duration::from_millis(1)) {
-                        Ok(Msg::Submit(req, sink)) => {
-                            sinks.insert(req.id, sink);
-                            if let Err(e) = sched.submit(req) {
-                                eprintln!("coordinator: rejected request: {e}");
-                            }
-                        }
-                        Ok(Msg::Report(tx)) => {
-                            let _ = tx.send(sched.metrics().report());
-                        }
-                        Ok(Msg::Traffic(tx)) => {
-                            let _ = tx.send(sched.metrics().traffic_snapshot());
-                        }
-                        Ok(Msg::Shutdown) => shutting_down = true,
-                        Err(_) => {}
+                    if let Ok(msg) = rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                        handle_msg(msg, &mut sched, &mut sinks, shard, &done, &mut shutting_down);
                     }
                 }
             }
@@ -311,6 +520,9 @@ mod tests {
         assert_eq!(t.bytes_scattered, 0);
         assert_eq!(t.padded_rows, 0);
         assert_eq!(t.state_bytes_resident, 0, "all slots released after drain");
+        // No rebalance ran: nothing migrated.
+        assert_eq!(t.migrations, 0);
+        assert_eq!(t.bytes_migrated, 0);
         // Plan counters aggregate across both workers: every tick ran
         // under some plan, and the mock modeled its cost.
         assert!(t.ticks_per_plan.iter().sum::<u64>() > 0);
@@ -347,5 +559,26 @@ mod tests {
         let ri = PlanChoice::Variant(FusionVariant::RIOnly).index();
         assert_eq!(t.ticks_per_plan.iter().sum::<u64>(), t.ticks_per_plan[ri]);
         assert_eq!(t.plan_switches, 0);
+    }
+
+    #[test]
+    fn completions_release_tracked_load() {
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let mut server = Server::start(
+            vec![|| Ok(MockEngine::new()), || Ok(MockEngine::new())],
+            BatchPolicy::default(),
+        );
+        let mut gen = WorkloadGen::new(3, vocab, plen, 2, 3);
+        let rxs: Vec<_> = (0..6).map(|_| server.submit(gen.next_request())).collect();
+        assert_eq!(server.shard_map().loads(), &[3, 3], "least-load placement balances");
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // A later routing decision sees the drained completions.
+        let rx = server.submit(gen.next_request());
+        assert_eq!(server.shard_map().len(), 1);
+        rx.recv().unwrap();
+        server.shutdown();
     }
 }

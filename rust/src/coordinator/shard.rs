@@ -1,0 +1,388 @@
+//! Slot-aware routing for the sharded state arena: the router-side
+//! [`ShardMap`] (request → shard placement, tracked load), the
+//! [`RouterPolicy`] migration heuristics (imbalance threshold,
+//! per-request cooldown — the hysteresis that keeps alternating load
+//! from thrashing state between workers), and the [`MigrationPacket`]
+//! inter-shard transfer format.
+//!
+//! The paper's leader/worker split makes the router the leader and each
+//! engine a worker. Pre-sharding, a request pinned to a hot worker
+//! could only move by discarding its recurrent state and re-prefilling
+//! — exactly the off-chip state round-trip Mambalaya's fusion mappings
+//! exist to avoid. The migration protocol instead splices the resident
+//! rows out of one shard's arena and into another's
+//! ([`super::scheduler::Scheduler::detach`] /
+//! [`super::scheduler::Scheduler::attach`]): a single
+//! `state_bytes_per_seq` transfer, counted as `bytes_migrated`, with
+//! the re-prefill it replaced counted as `reprefills_avoided`.
+//!
+//! Everything here is pure policy (no threads, no channels), so the
+//! affinity / no-starvation / hysteresis properties are testable the
+//! same way the batcher's invariants are (`rust/tests/router_properties.rs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::request::InFlight;
+
+/// Tunable migration heuristics for the slot-aware router.
+#[derive(Debug, Clone)]
+pub struct RouterPolicy {
+    /// Minimum load gap (hot − cold, in tracked in-flight requests)
+    /// before a rebalance plans any migration. Moving one request
+    /// changes the gap by 2, so a threshold of ≥ 2 makes ±1 load
+    /// wiggles (one arrival / one completion) provably migration-free.
+    pub migrate_threshold: usize,
+    /// Max migrations planned per [`ShardMap::plan_rebalance`] call.
+    pub max_moves_per_rebalance: usize,
+    /// Rebalance rounds a freshly migrated request is pinned to its new
+    /// shard (per-request hysteresis: alternating skew cannot ping-pong
+    /// the same resident state back and forth every round).
+    pub cooldown_rounds: u64,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> Self {
+        RouterPolicy {
+            migrate_threshold: 2,
+            max_moves_per_rebalance: 4,
+            cooldown_rounds: 2,
+        }
+    }
+}
+
+impl RouterPolicy {
+    /// Clamp degenerate knob values (a zero threshold would migrate on
+    /// every ±1 wiggle; zero moves would make rebalance a no-op
+    /// forever, which is better expressed by not calling it).
+    pub fn normalized(mut self) -> RouterPolicy {
+        self.migrate_threshold = self.migrate_threshold.max(1);
+        self.max_moves_per_rebalance = self.max_moves_per_rebalance.max(1);
+        self
+    }
+}
+
+/// One planned request move between shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Migration {
+    pub seq: u64,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// How the server realizes a planned migration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationMode {
+    /// Move the resident state rows between arenas (the point of the
+    /// sharded design): one `state_bytes_per_seq` transfer.
+    Move,
+    /// Baseline for the counter gates: discard the state and rebuild it
+    /// on the target worker by re-prefilling the already-processed
+    /// tokens. Token outputs are identical; the cost shows up in the
+    /// deterministic `reprefill_tokens` counter instead of
+    /// `bytes_migrated`.
+    Reprefill,
+}
+
+/// Outcome of one [`super::server::Server::rebalance`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationOutcome {
+    /// Moves the policy planned this round.
+    pub planned: usize,
+    /// Moves that actually landed (a plan can miss: the request may
+    /// have completed, or not hold state yet).
+    pub migrated: usize,
+}
+
+/// A live worker's load snapshot (queried over the worker channel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerLoad {
+    pub shard: usize,
+    /// Sequences currently generating.
+    pub running: usize,
+    /// Sequences waiting on (or mid-) prefill.
+    pub waiting: usize,
+    /// Bytes of recurrent state resident in this shard's arena.
+    pub resident_bytes: u64,
+}
+
+/// The inter-shard transfer format: everything a worker needs to resume
+/// an in-flight request exactly where the source worker left it — the
+/// request bookkeeping (prompt, generated tokens, prefill cursor,
+/// latency clocks) plus the sequence-major recurrent-state payload from
+/// [`super::state::StateArena::detach_row`].
+#[derive(Debug)]
+pub struct MigrationPacket {
+    /// The in-flight bookkeeping, moved verbatim (timing clocks keep
+    /// running across the migration, so TTFT/latency stay honest).
+    pub flight: InFlight,
+    /// The source slot the state was detached from (handle provenance:
+    /// its `shard` differs from the attaching arena's).
+    pub from: super::state::SlotHandle,
+    /// Sequence-major `[layers, conv_per_layer]` state payload.
+    pub conv: Vec<f32>,
+    /// Sequence-major `[layers, ssm_per_layer]` state payload.
+    pub ssm: Vec<f32>,
+}
+
+impl MigrationPacket {
+    pub fn seq(&self) -> u64 {
+        self.flight.req.id
+    }
+
+    /// True when the request finished prefill (it is generating), so
+    /// moving its state avoids re-prefilling the *whole* prompt plus
+    /// the generated suffix.
+    pub fn decode_phase(&self) -> bool {
+        self.flight.prefill_pos >= self.flight.req.prompt.len()
+    }
+
+    /// Bytes of state this packet carries — exactly
+    /// `state_bytes_per_seq` (the conservation law the conformance
+    /// suite checks).
+    pub fn state_bytes(&self) -> u64 {
+        ((self.conv.len() + self.ssm.len()) * 4) as u64
+    }
+
+    /// Tokens the target worker would have to re-process to rebuild
+    /// this state by re-prefilling (the cost migration avoids): for
+    /// decode-phase requests the full prompt plus the generated suffix
+    /// not already folded into it by a previous re-prefill (all but the
+    /// pending last token); for mid-prefill ones, the prefill cursor.
+    pub fn reprefill_cost_tokens(&self) -> usize {
+        if self.decode_phase() {
+            self.flight.req.prompt.len()
+                + self
+                    .flight
+                    .generated
+                    .len()
+                    .saturating_sub(1)
+                    .saturating_sub(self.flight.prompt_replayed)
+        } else {
+            self.flight.prefill_pos
+        }
+    }
+}
+
+/// The router's request → shard placement map with tracked per-shard
+/// load and migration hysteresis state. Pure bookkeeping: the server
+/// feeds it submissions, completion notifications and rebalance rounds;
+/// it answers "where does this request go" and "what should move".
+#[derive(Debug)]
+pub struct ShardMap {
+    placement: BTreeMap<u64, usize>,
+    /// Tracked in-flight requests per shard (the routing load signal).
+    counts: Vec<usize>,
+    /// Rebalance round a migrated request is pinned until.
+    cooldown_until: BTreeMap<u64, u64>,
+    /// Monotone rebalance-round clock.
+    round: u64,
+}
+
+impl ShardMap {
+    pub fn new(n_shards: usize) -> ShardMap {
+        ShardMap {
+            placement: BTreeMap::new(),
+            counts: vec![0; n_shards.max(1)],
+            cooldown_until: BTreeMap::new(),
+            round: 0,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Tracked in-flight requests per shard.
+    pub fn loads(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Tracked in-flight requests overall.
+    pub fn len(&self) -> usize {
+        self.placement.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.placement.is_empty()
+    }
+
+    pub fn shard_of(&self, seq: u64) -> Option<usize> {
+        self.placement.get(&seq).copied()
+    }
+
+    /// Route a new request: least-loaded shard, ties to the lowest
+    /// index. Records the placement.
+    pub fn place(&mut self, seq: u64) -> usize {
+        let shard = self
+            .counts
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &c)| (c, i))
+            .map(|(i, _)| i)
+            .expect("at least one shard");
+        self.assign(seq, shard);
+        shard
+    }
+
+    /// Record a forced placement (or correct one after a migration):
+    /// moves the tracked load with the request.
+    pub fn assign(&mut self, seq: u64, shard: usize) {
+        let shard = shard.min(self.counts.len() - 1);
+        if let Some(old) = self.placement.insert(seq, shard) {
+            self.counts[old] -= 1;
+        }
+        self.counts[shard] += 1;
+    }
+
+    /// A request completed: drop it from tracking. Unknown ids are a
+    /// no-op (completion notifications can race a migration plan).
+    pub fn complete(&mut self, seq: u64) -> bool {
+        match self.placement.remove(&seq) {
+            Some(shard) => {
+                self.counts[shard] -= 1;
+                self.cooldown_until.remove(&seq);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Plan one rebalance round: repeatedly move one request from the
+    /// most- to the least-loaded shard while the gap *strictly exceeds*
+    /// the policy threshold, skipping requests still in their
+    /// post-migration cooldown. Pure planning — placements are not
+    /// touched; the server calls [`ShardMap::apply`] for each move that
+    /// actually lands (a plan can miss when the request completed or
+    /// does not hold state yet) and [`ShardMap::defer`] for each miss.
+    pub fn plan_rebalance(&mut self, pol: &RouterPolicy) -> Vec<Migration> {
+        let pol = pol.clone().normalized();
+        self.round += 1;
+        let mut counts = self.counts.clone();
+        let mut planned: Vec<Migration> = Vec::new();
+        let mut moved: BTreeSet<u64> = BTreeSet::new();
+        while planned.len() < pol.max_moves_per_rebalance {
+            let hot = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|&(i, &c)| (c, std::cmp::Reverse(i)))
+                .map(|(i, _)| i)
+                .expect("at least one shard");
+            let cold = counts
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &c)| (c, i))
+                .map(|(i, _)| i)
+                .expect("at least one shard");
+            if counts[hot] <= counts[cold] + pol.migrate_threshold {
+                break;
+            }
+            // Smallest-id movable request on the hot shard (oldest
+            // first — deterministic and biased toward requests that
+            // already hold state).
+            // A request applied/deferred at round r is pinned through
+            // round r + cooldown (movable again at r + cooldown + 1).
+            let seq = self.placement.iter().find_map(|(&s, &sh)| {
+                let cooling =
+                    self.cooldown_until.get(&s).map_or(false, |&until| until >= self.round);
+                (sh == hot && !cooling && !moved.contains(&s)).then_some(s)
+            });
+            let Some(seq) = seq else { break };
+            counts[hot] -= 1;
+            counts[cold] += 1;
+            moved.insert(seq);
+            planned.push(Migration { seq, from: hot, to: cold });
+        }
+        planned
+    }
+
+    /// A planned move landed: update the placement and start the
+    /// request's cooldown.
+    pub fn apply(&mut self, m: &Migration, pol: &RouterPolicy) {
+        self.assign(m.seq, m.to);
+        self.cooldown_until.insert(m.seq, self.round + pol.cooldown_rounds);
+    }
+
+    /// A planned move missed because the request is not migratable
+    /// *yet* (no resident state): leave the placement alone but start a
+    /// cooldown so the next rounds don't retry it immediately. (A move
+    /// that missed because the request *completed* is reconciled by the
+    /// worker's completion notification instead.)
+    pub fn defer(&mut self, seq: u64, pol: &RouterPolicy) {
+        self.cooldown_until.insert(seq, self.round + pol.cooldown_rounds);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn place_balances_and_complete_releases() {
+        let mut m = ShardMap::new(3);
+        for seq in 0..6u64 {
+            m.place(seq);
+        }
+        assert_eq!(m.loads(), &[2, 2, 2]);
+        assert_eq!(m.len(), 6);
+        assert!(m.complete(0));
+        assert!(!m.complete(0), "double completion is a no-op");
+        assert_eq!(m.loads(), &[1, 2, 2]);
+        // The freed capacity is the next placement target.
+        assert_eq!(m.place(100), 0);
+    }
+
+    #[test]
+    fn assign_moves_tracked_load() {
+        let mut m = ShardMap::new(2);
+        m.assign(1, 0);
+        m.assign(2, 0);
+        assert_eq!(m.loads(), &[2, 0]);
+        m.assign(1, 1);
+        assert_eq!(m.loads(), &[1, 1]);
+        assert_eq!(m.shard_of(1), Some(1));
+    }
+
+    #[test]
+    fn plan_moves_from_hot_to_cold_until_threshold() {
+        let mut m = ShardMap::new(2);
+        for seq in 0..8u64 {
+            m.assign(seq, 0);
+        }
+        let pol = RouterPolicy { max_moves_per_rebalance: 16, ..RouterPolicy::default() };
+        let plan = m.plan_rebalance(&pol);
+        // 8 vs 0 with threshold 2: plans converge to a gap of ≤ 2.
+        assert_eq!(plan.len(), 3);
+        for mv in &plan {
+            assert_eq!((mv.from, mv.to), (0, 1));
+            m.apply(mv, &pol);
+        }
+        assert_eq!(m.loads(), &[5, 3]);
+        // Planning is pure: nothing moved until apply.
+        assert!(m.plan_rebalance(&pol).is_empty(), "gap of 2 is within threshold");
+    }
+
+    #[test]
+    fn cooldown_pins_migrated_requests() {
+        let mut m = ShardMap::new(2);
+        for seq in 0..4u64 {
+            m.assign(seq, 0);
+        }
+        let pol = RouterPolicy {
+            migrate_threshold: 1,
+            cooldown_rounds: 100,
+            ..RouterPolicy::default()
+        };
+        let plan = m.plan_rebalance(&pol);
+        assert!(!plan.is_empty());
+        for mv in &plan {
+            m.apply(mv, &pol);
+        }
+        // Pile the load back onto shard 1 by hand: every movable
+        // candidate there is now cooling, so nothing plans.
+        for seq in 10..16u64 {
+            m.assign(seq, 1);
+            m.defer(seq, &pol);
+        }
+        assert!(m.plan_rebalance(&pol).is_empty(), "cooldown must pin all candidates");
+    }
+}

@@ -15,14 +15,37 @@
 //! ([`StateArena::gather_rows`] / [`StateArena::install_from_batch`]),
 //! and every byte they move is counted into [`TrafficCounters`],
 //! mirroring the paper's inter-operator traffic accounting.
+//!
+//! Under the sharded server each worker owns one shard of the logically
+//! global arena: slots are addressed by a globally stable
+//! [`SlotHandle`] `(shard, row)`, and a sequence moves between shards
+//! only through the explicit migration splice
+//! ([`StateArena::detach_row`] → [`StateArena::attach_row`]) — a
+//! single counted `bytes_migrated` transfer, never a re-prefill.
 
 use std::collections::BTreeMap;
 
 use crate::runtime::engine::{copy_state_row, TrafficCounters};
 
+/// A globally stable address for one resident state row: which shard's
+/// arena holds it, and which row within that shard's slab. The row part
+/// is stable for the sequence's residency on that shard (rows never
+/// move while resident); a **migration** is the only operation that
+/// changes a sequence's handle, and it changes the `shard` coordinate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SlotHandle {
+    /// The shard (server worker) whose arena owns the row.
+    pub shard: usize,
+    /// Row index within that shard's layer-major slab.
+    pub row: usize,
+}
+
 /// Contiguous arena of per-sequence recurrent state with stable rows.
 #[derive(Debug)]
 pub struct StateArena {
+    /// Which shard of the (logically global) sharded arena this slab
+    /// is — the `shard` coordinate of every [`SlotHandle`] it issues.
+    shard: usize,
     n_layer: usize,
     conv_per_layer: usize,
     ssm_per_layer: usize,
@@ -51,6 +74,7 @@ impl StateArena {
     ) -> StateArena {
         let capacity = capacity.max(1);
         StateArena {
+            shard: 0,
             n_layer,
             conv_per_layer,
             ssm_per_layer,
@@ -63,6 +87,17 @@ impl StateArena {
             peak: 0,
             traffic: TrafficCounters::default(),
         }
+    }
+
+    /// Set which shard of the sharded arena this slab is (the server
+    /// assigns one per worker; defaults to 0 for single-shard use).
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+    }
+
+    /// This slab's shard index.
+    pub fn shard(&self) -> usize {
+        self.shard
     }
 
     pub fn len(&self) -> usize {
@@ -99,6 +134,12 @@ impl StateArena {
     /// The arena row a sequence resides at (stable for its lifetime).
     pub fn row_of(&self, seq: u64) -> Option<usize> {
         self.rows.get(&seq).copied()
+    }
+
+    /// The globally stable `(shard, row)` handle for a resident
+    /// sequence.
+    pub fn handle_of(&self, seq: u64) -> Option<SlotHandle> {
+        self.row_of(seq).map(|row| SlotHandle { shard: self.shard, row })
     }
 
     /// State bytes copied by gather/install/relocation since the last
@@ -209,6 +250,36 @@ impl StateArena {
         copy_state_row(self.n_layer, cp, conv_batch, batch, b, &mut self.conv, self.capacity, row);
         copy_state_row(self.n_layer, sp, ssm_batch, batch, b, &mut self.ssm, self.capacity, row);
         self.traffic.bytes_scattered += per_seq;
+    }
+
+    /// **Migration path**: splice a sequence's state *out* of this
+    /// shard — copy it to sequence-major `[layers, per]` buffers and
+    /// free the row in one step. The bytes are the inter-shard transfer
+    /// payload, so they are **not** counted as gather/scatter traffic
+    /// here; the scheduler counts them as `bytes_migrated` on the
+    /// attaching side, exactly once per migration.
+    pub fn detach_row(&mut self, seq: u64) -> Option<(Vec<f32>, Vec<f32>)> {
+        let snap = self.snapshot(seq)?;
+        self.release(seq);
+        Some(snap)
+    }
+
+    /// **Migration path**: splice a migrated sequence's state *into*
+    /// this shard from sequence-major `[layers, per]` buffers (the
+    /// [`StateArena::detach_row`] payload of another shard). Allocates
+    /// a row (free-list, growing if needed) and returns it. Not counted
+    /// as gather/scatter traffic — see [`StateArena::detach_row`].
+    pub fn attach_row(&mut self, seq: u64, conv: &[f32], ssm: &[f32]) -> usize {
+        let (cp, sp) = (self.conv_per_layer, self.ssm_per_layer);
+        assert_eq!(conv.len(), self.n_layer * cp, "attach conv payload shape");
+        assert_eq!(ssm.len(), self.n_layer * sp, "attach ssm payload shape");
+        let row = match self.rows.get(&seq) {
+            Some(&row) => row,
+            None => self.alloc_row(seq),
+        };
+        copy_state_row(self.n_layer, cp, conv, 1, 0, &mut self.conv, self.capacity, row);
+        copy_state_row(self.n_layer, sp, ssm, 1, 0, &mut self.ssm, self.capacity, row);
+        row
     }
 
     /// Allocate a row without zeroing (the caller overwrites it).
@@ -367,6 +438,44 @@ mod tests {
         m.install_from_batch(5, 1, 0, &conv, &ssm);
         assert!(m.take_traffic().bytes_scattered > 0);
         assert_eq!(m.traffic(), TrafficCounters::default());
+    }
+
+    #[test]
+    fn handles_are_shard_qualified_and_stable() {
+        let mut m = arena();
+        assert_eq!(m.shard(), 0);
+        m.set_shard(3);
+        let row = m.admit(7);
+        assert_eq!(m.handle_of(7), Some(SlotHandle { shard: 3, row }));
+        m.admit(8);
+        assert_eq!(m.handle_of(7), Some(SlotHandle { shard: 3, row }), "handle stable");
+        assert_eq!(m.handle_of(99), None);
+    }
+
+    #[test]
+    fn detach_attach_round_trips_state_without_traffic() {
+        let mut src = arena();
+        let mut dst = arena();
+        dst.set_shard(1);
+        let conv: Vec<f32> = (0..2 * 3).map(|x| x as f32 + 1.0).collect();
+        let ssm: Vec<f32> = (0..2 * 4).map(|x| x as f32 + 50.0).collect();
+        src.install_from_batch(7, 1, 0, &conv, &ssm);
+        src.take_traffic();
+
+        let (pc, ps) = src.detach_row(7).expect("resident");
+        // The payload is exactly one sequence's state.
+        assert_eq!((pc.len() + ps.len()) * 4, src.bytes_per_seq());
+        assert!(!src.contains(7), "detach frees the row");
+        assert_eq!(src.resident_bytes(), 0);
+
+        let row = dst.attach_row(7, &pc, &ps);
+        assert_eq!(dst.handle_of(7), Some(SlotHandle { shard: 1, row }));
+        assert_eq!(dst.snapshot(7).unwrap(), (conv, ssm), "state survives the move");
+        // The transfer itself is not gather/scatter traffic (it is
+        // counted as bytes_migrated by the scheduler, once).
+        assert_eq!(src.traffic(), TrafficCounters::default());
+        assert_eq!(dst.traffic(), TrafficCounters::default());
+        assert_eq!(src.detach_row(7), None, "double detach is a no-op");
     }
 
     #[test]

@@ -35,12 +35,18 @@
 //!   with prefill chunks from waiting prompts, bounded by the
 //!   [`coordinator::BatchPolicy`] knobs `chunk_tokens` (chunk size; 0 =
 //!   monolithic) and `token_budget` (per-tick token cost cap). All
-//!   recurrent state lives resident in the [`coordinator::StateArena`]
-//!   (stable free-list rows, engine layout), so a prompt may span many
-//!   ticks before its first sampled token while decode never stalls,
-//!   and a steady-state decode tick moves zero state bytes — the
-//!   deterministic `bytes_gathered`/`bytes_scattered` counters in
-//!   [`coordinator::Metrics`] prove it per run;
+//!   recurrent state lives resident in the **sharded**
+//!   [`coordinator::StateArena`] (stable free-list rows addressed by
+//!   globally stable [`coordinator::SlotHandle`]s, engine layout), so
+//!   a prompt may span many ticks before its first sampled token while
+//!   decode never stalls, and a steady-state decode tick moves zero
+//!   state bytes — the deterministic `bytes_gathered`/`bytes_scattered`
+//!   counters in [`coordinator::Metrics`] prove it per run. The
+//!   slot-aware router ([`coordinator::ShardMap`] +
+//!   [`coordinator::RouterPolicy`]) places requests by least-load and
+//!   live-migrates in-flight requests between worker shards by moving
+//!   their resident rows (one counted `bytes_migrated` transfer, never
+//!   a re-prefill);
 //! * [`util`] / [`prop`] / [`bench_util`] — offline-build stand-ins for
 //!   clap/serde/proptest/criterion (plus vendored `anyhow`/`xla` shims
 //!   under `rust/vendor/`).

@@ -52,9 +52,11 @@ USAGE: mambalaya <SUBCOMMAND> [OPTIONS]
   reproduce --exp table1|table2|table3|fig2|fig9|fig10|fig12|fig13|fig14|fig15|all
             [--model 370m] [--seq N] [--batch B] [--out-dir results]
   serve     [--artifacts DIR] [--requests N] [--gen-lo N] [--gen-hi N] [--workers W]
-            [--chunk-tokens N] [--token-budget N] [--plan SPEC]
+            [--chunk-tokens N] [--token-budget N] [--plan SPEC] [--rebalance]
             (continuous-batching knobs; chunk-tokens 0 = monolithic prefill;
-            plan SPEC = static:<variant>|adaptive|table:<path>)
+            plan SPEC = static:<variant>|adaptive|table:<path>; --rebalance
+            lets the slot-aware router migrate in-flight requests between
+            worker shards by moving resident state, never re-prefilling)
 ";
 
 fn model(args: &Args) -> ModelConfig {
@@ -313,6 +315,21 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut server =
         mambalaya::coordinator::Server::start_planned(factories, policy, spec);
     let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    if args.flag("rebalance") {
+        // Slot-aware router passes while the workload drains: migrate
+        // in-flight requests off hot shards by moving resident state.
+        // Skew develops as requests complete unevenly, so keep passing
+        // until the workers drain, not until the first empty plan.
+        for _ in 0..10_000 {
+            let in_flight: usize =
+                server.loads().iter().map(|l| l.running + l.waiting).sum();
+            if in_flight == 0 {
+                break;
+            }
+            server.rebalance();
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
     let mut total_tokens = 0;
     for rx in rxs {
         match rx.recv() {
@@ -329,8 +346,16 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let t = server.traffic();
     println!(
-        "plan: switches={} predicted={}cyc modeled={}cyc | state traffic: gathered={}B scattered={}B",
-        t.plan_switches, t.predicted_cycles, t.modeled_cycles, t.bytes_gathered, t.bytes_scattered
+        "plan: switches={} predicted={}cyc modeled={}cyc | state traffic: gathered={}B scattered={}B \
+         | migration: {} moves, {}B migrated, {} reprefills avoided",
+        t.plan_switches,
+        t.predicted_cycles,
+        t.modeled_cycles,
+        t.bytes_gathered,
+        t.bytes_scattered,
+        t.migrations,
+        t.bytes_migrated,
+        t.reprefills_avoided
     );
     server.shutdown();
     0

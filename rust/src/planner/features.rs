@@ -30,7 +30,11 @@ pub struct WorkloadFeatures {
     pub max_chunk: usize,
     /// Chunk-length histogram over [`CHUNK_HIST_BUCKETS`] buckets.
     pub chunk_hist: [u32; CHUNK_HIST_BUCKETS],
-    /// Bytes of recurrent state resident in the arena at decision time.
+    /// Bytes of recurrent state resident at decision time — the
+    /// **server-wide** gauge under the sharded arena (this worker's
+    /// shard plus the router-synced remote shards; see
+    /// [`crate::coordinator::Scheduler::global_resident_bytes`]), so
+    /// admission-aware policies see total residency, not one slice.
     pub resident_state_bytes: u64,
     /// Tick token cost over the policy's token budget (0.0..=1.0-ish).
     pub budget_utilization: f64,
