@@ -56,28 +56,30 @@ if [[ "${1:-}" != "--fast" ]]; then
     # adaptive planner is never worse than the best static plan, its
     # predictor stays within 2x of the mock's modeled cost, and it
     # picks different plans for prefill-heavy vs decode-heavy traffic,
-    # and (3) the sharded-arena hot-skew scenario, asserting live
+    # (3) the sharded-arena hot-skew scenario, asserting live
     # migration is token-identical to pinned serving, conserves the
     # global resident gauge, and beats the re-prefill fallback by >= 5x
-    # (bytes_migrated vs reprefill_tokens * state_bytes_per_seq).
+    # (bytes_migrated vs reprefill_tokens * state_bytes_per_seq), and
+    # (4) the engine-API gate on the chunk-heavy scenario, asserting a
+    # caps-declared varlen engine launches exactly once per tick with
+    # zero staged bytes while the caps-off decomposition pays at least
+    # its lockstep floor (max(chunk) device calls per chunk tick) —
+    # token outputs bit-identical either way. (The runtime module also
+    # builds under #![deny(missing_docs)], so the engine surface stays
+    # documented by construction.)
     # All gates are on *counters* (same workload, same numbers, every
-    # run), never on wall time; BENCH_hotpath.json, BENCH_planner.json
-    # and BENCH_sharding.json record the trajectory.
-    echo "== hotpath bench: quick counter gates (traffic + planner + sharding) =="
+    # run), never on wall time; BENCH_hotpath.json, BENCH_planner.json,
+    # BENCH_sharding.json and BENCH_engine_api.json record the
+    # trajectory.
+    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API) =="
     cargo bench --bench hotpath -- --quick
-    if [ ! -s BENCH_hotpath.json ]; then
-        echo "ERROR: BENCH_hotpath.json missing or empty" >&2
-        exit 1
-    fi
-    if [ ! -s BENCH_planner.json ]; then
-        echo "ERROR: BENCH_planner.json missing or empty" >&2
-        exit 1
-    fi
-    if [ ! -s BENCH_sharding.json ]; then
-        echo "ERROR: BENCH_sharding.json missing or empty" >&2
-        exit 1
-    fi
-    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json written"
+    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json; do
+        if [ ! -s "$f" ]; then
+            echo "ERROR: $f missing or empty" >&2
+            exit 1
+        fi
+    done
+    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json written"
 
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="

@@ -29,6 +29,16 @@
 //! histogram and per-plan tick counts next to the `state traffic:`
 //! line.
 //!
+//! ## Engine capability report
+//!
+//! At startup the driver prints a one-line `engine caps:` summary —
+//! the backend's [`EngineCaps`](mambalaya::runtime::EngineCaps)
+//! report: whether it has a fused varlen kernel, advances state in
+//! place, honours buffer donation, and which fusion plans it can
+//! execute. The scheduler and planner negotiate from the same report,
+//! so the line shows operators exactly which fused paths the serving
+//! process is actually using.
+//!
 //! ## Sharded state residency
 //!
 //! `--workers N` starts N workers, each owning one shard of the sharded
@@ -78,6 +88,12 @@ where
     let spec_name = spec.name();
     let t0 = Instant::now();
     let mut server = Server::start_planned(factories, policy, spec);
+    // What the backend actually advertises — which fused paths exist,
+    // whether state may be donated, and which plans are executable
+    // (the scheduler/planner negotiated from this same report).
+    if let Some(caps) = server.caps().first() {
+        println!("engine caps: {}", caps.summary());
+    }
     let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
     let mut migration_passes = 0u32;
     if rebalance {

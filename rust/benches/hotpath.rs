@@ -19,7 +19,11 @@
 //!   the CI gate. Both modes write machine-readable
 //!   `BENCH_hotpath.json` (ticks/sec plus the traffic counters) and
 //!   assert the resident path moves ≥ 10× fewer state bytes than the
-//!   reference path — a counter gate, not a wall-time gate.
+//!   reference path — a counter gate, not a wall-time gate. Both modes
+//!   also run the planner gate (`BENCH_planner.json`), the sharding
+//!   gate (`BENCH_sharding.json`) and the engine-API gate
+//!   (`BENCH_engine_api.json`: caps-declared fused varlen launch = 1
+//!   device call per tick vs the decomposition's lockstep cost).
 
 use std::time::{Duration, Instant};
 
@@ -32,7 +36,10 @@ use mambalaya::coordinator::{
 use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
 use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
 use mambalaya::planner::{PlanChoice, Planner, PlanSpec};
-use mambalaya::runtime::{Executor, MockEngine, Workspace};
+use mambalaya::runtime::{
+    Donation, EngineCaps, Executor, LaunchSpec, MixedBatch, MockEngine, Phase, Segment,
+    StateSlabs, Workspace,
+};
 use mambalaya::util::{Args, JsonValue};
 
 fn b<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
@@ -152,21 +159,35 @@ fn main() {
         }
         let some_ids: Vec<Option<u64>> = (0..8).map(Some).collect();
         let decode_toks: Vec<i32> = (1..=8).collect();
-        let lens = [1usize; 8];
-        results.push(b("coordinator: reference gather+step+install b=8", || {
-            let (c8, s8) = arena.gather_rows(&some_ids);
-            let out = mock.step_mixed(&lens, &decode_toks, &c8, &s8).unwrap();
+        let ref_segs: Vec<Segment> =
+            (0..8).map(|b| Segment { len: 1, row: b, phase: Phase::Decode }).collect();
+        let mut ws_ref = Workspace::new();
+        results.push(b("coordinator: reference gather+launch+install b=8", || {
+            let (mut c8, mut s8) = arena.gather_rows(&some_ids);
+            mock.launch(LaunchSpec {
+                batch: MixedBatch::new(&ref_segs, &decode_toks).unwrap(),
+                state: StateSlabs::new(&mut c8, &mut s8, 8, Donation::Retain),
+                plan: None,
+                ws: &mut ws_ref,
+            })
+            .unwrap();
             for s in 0..8u64 {
-                arena.install_from_batch(s, 8, s as usize, &out.conv_state, &out.ssm_state);
+                arena.install_from_batch(s, 8, s as usize, &c8, &s8);
             }
             black_box(());
         }));
-        let rows: Vec<usize> = (0..8).map(|s| arena.row_of(s).unwrap()).collect();
+        let res_segs: Vec<Segment> = (0..8)
+            .map(|s| Segment { len: 1, row: arena.row_of(s).unwrap(), phase: Phase::Decode })
+            .collect();
         let mut ws = Workspace::new();
-        results.push(b("coordinator: resident step_mixed_into b=8", || {
-            let (conv, ssm, stride) = arena.slab_mut();
-            mock.step_mixed_into(&lens, &decode_toks, &rows, conv, ssm, stride, &mut ws)
-                .unwrap();
+        results.push(b("coordinator: resident launch b=8", || {
+            mock.launch(LaunchSpec {
+                batch: MixedBatch::new(&res_segs, &decode_toks).unwrap(),
+                state: arena.slabs(Donation::DonateInPlace),
+                plan: None,
+                ws: &mut ws,
+            })
+            .unwrap();
             black_box(ws.logits.len());
         }));
         let probe = MockEngine::new();
@@ -266,6 +287,7 @@ fn main() {
 
     planner_gate();
     sharding_gate();
+    engine_api_gate();
 
     if !quick {
         println!("\n== hot-path microbenchmarks ==");
@@ -416,6 +438,121 @@ fn planner_gate() {
     std::fs::write("BENCH_planner.json", doc.to_string())
         .expect("writing BENCH_planner.json");
     println!("wrote BENCH_planner.json (planner gate: PASS)");
+}
+
+/// One chunk-heavy scheduler run with an explicit engine capability
+/// report. Returns `(tokens, traffic snapshot, ticks, chunk ticks,
+/// prefill tokens)`.
+fn engine_api_run(caps: EngineCaps) -> (Vec<Vec<i32>>, TrafficSnapshot, u64, u64, u64) {
+    let sc = ServeScenario::chunk_heavy();
+    let vocab = MockEngine::new().manifest().vocab;
+    let mut s = Scheduler::new(MockEngine::with_caps(caps), sc.policy.clone());
+    for r in sc.requests(vocab) {
+        s.submit(r).unwrap();
+    }
+    let mut resps = s.run_until_drained().unwrap();
+    resps.sort_by_key(|r| r.id);
+    let tokens = resps.into_iter().map(|r| r.tokens).collect();
+    let met = s.metrics();
+    (tokens, met.traffic_snapshot(), met.ticks, met.prefill_batches, met.prefill_tokens)
+}
+
+/// The engine-API gate: the *same* mock engine serves the chunk-heavy
+/// scenario twice, with its capability report flipped between
+/// `varlen_kernel: true` (fused launch) and `false` (the default
+/// compiled-primitive decomposition), gated on deterministic counters
+/// (never wall time):
+///
+/// * token outputs are bit-identical — capability negotiation changes
+///   nothing observable;
+/// * the fused path makes **exactly 1 device call per tick** and
+///   stages zero state bytes;
+/// * the decomposition pays at least its lockstep floor — a
+///   chunk-carrying tick's lockstep scan runs `max(chunk)` positions,
+///   and with at most `max_chunk_rows` chunks per tick that is ≥
+///   `⌈chunk tokens of the tick / max_chunk_rows⌉`, so summed over the
+///   run the scan calls alone are ≥ `⌈prefill_tokens /
+///   max_chunk_rows⌉`, plus one call for every chunk-free tick — and
+///   nonzero staging traffic.
+///
+/// Writes `BENCH_engine_api.json` with the call/byte ratios.
+fn engine_api_gate() {
+    println!("\n== engine API: caps-negotiated varlen launch vs decomposition ==");
+    let (fused_tokens, fused, fused_ticks, fused_chunk_ticks, _) =
+        engine_api_run(EngineCaps::full());
+    let (decomp_tokens, decomp, decomp_ticks, chunk_ticks, prefill_tokens) =
+        engine_api_run(EngineCaps { varlen_kernel: false, ..EngineCaps::full() });
+    let fused_staged = fused.bytes_gathered + fused.bytes_scattered;
+    let decomp_staged = decomp.bytes_gathered + decomp.bytes_scattered;
+    for (name, t, calls, staged) in [
+        ("fused(varlen_kernel)", fused_ticks, fused.device_calls, fused_staged),
+        ("decomposition", decomp_ticks, decomp.device_calls, decomp_staged),
+    ] {
+        println!("  {name:<22} ticks={t:<4} device_calls={calls:<5} staged_bytes={staged}");
+    }
+
+    // Gate 1 (equivalence): the caps toggle changes no output and no
+    // schedule.
+    assert_eq!(fused_tokens, decomp_tokens, "caps toggle changed tokens");
+    assert_eq!(fused_ticks, decomp_ticks, "caps toggle changed the schedule");
+
+    // Gate 2 (the fused contract): 1 device call per tick, zero staged
+    // state bytes, zero padding.
+    assert_eq!(fused.device_calls, fused_ticks, "fused path must launch once per tick");
+    assert_eq!(fused_staged, 0, "fused path must stage nothing");
+    assert_eq!(fused.padded_rows, 0);
+
+    // Gate 3 (the decomposition's lockstep cost): a chunk tick's scan
+    // runs max(chunk) positions ≥ ⌈its chunk tokens / max_chunk_rows⌉,
+    // so scan calls over the run ≥ ⌈prefill_tokens / max_chunk_rows⌉;
+    // chunk-free ticks cost ≥ 1 call each. Provable from the counters
+    // alone, and far above the fused path's 1-per-tick.
+    let r = ServeScenario::chunk_heavy().policy.max_chunk_rows as u64;
+    let lockstep_floor = (decomp_ticks - chunk_ticks) + (prefill_tokens + r - 1) / r;
+    assert!(chunk_ticks > 0, "chunk-heavy scenario must have chunk ticks");
+    assert!(
+        decomp.device_calls >= lockstep_floor,
+        "decomposition paid {} device calls < lockstep floor {lockstep_floor}",
+        decomp.device_calls
+    );
+    assert!(
+        lockstep_floor > 2 * fused.device_calls,
+        "scenario must make the lockstep floor dominate the fused cost \
+         ({lockstep_floor} vs {})",
+        fused.device_calls
+    );
+    assert!(decomp_staged > 0, "decomposition must stage state bytes");
+
+    let call_ratio = decomp.device_calls as f64 / fused.device_calls.max(1) as f64;
+    let mut gate = JsonValue::obj();
+    gate.set("tokens_identical", true)
+        .set("fused_calls_per_tick", 1u64)
+        .set("decomp_device_calls", decomp.device_calls)
+        .set("lockstep_floor", lockstep_floor)
+        .set("device_call_ratio", (call_ratio * 1e3).round() / 1e3)
+        .set("fused_staged_bytes", fused_staged)
+        .set("decomp_staged_bytes", decomp_staged)
+        .set("pass", true);
+    let mut runs = JsonValue::Arr(vec![]);
+    for (name, ticks, chunk, t) in [
+        ("fused", fused_ticks, fused_chunk_ticks, &fused),
+        ("decomposition", decomp_ticks, chunk_ticks, &decomp),
+    ] {
+        let mut j = JsonValue::obj();
+        j.set("name", name)
+            .set("ticks", ticks)
+            .set("chunk_ticks", chunk)
+            .set("device_calls", t.device_calls)
+            .set("bytes_gathered", t.bytes_gathered)
+            .set("bytes_scattered", t.bytes_scattered)
+            .set("padded_rows", t.padded_rows);
+        runs.push(j);
+    }
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "engine_api").set("runs", runs).set("gate", gate);
+    std::fs::write("BENCH_engine_api.json", doc.to_string())
+        .expect("writing BENCH_engine_api.json");
+    println!("wrote BENCH_engine_api.json (engine API gate: PASS)");
 }
 
 /// How a hot-skew run treats the requests stranded on the hot worker.

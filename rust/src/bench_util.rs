@@ -17,6 +17,7 @@ enum ScenarioMix {
     DecodeHeavy,
     Interference,
     ShardedSkew,
+    ChunkHeavy,
 }
 
 /// A named, deterministic serving workload: a batch policy plus a
@@ -107,6 +108,35 @@ impl ServeScenario {
     /// worker (the rest go cold).
     pub const SHARDED_HOT_IDS: std::ops::Range<u64> = 0..6;
 
+    /// Mid-prompt-chunk-dominated: four 42-token prompts split into
+    /// 6-token chunks under a 12-token budget, short generations.
+    /// Every chunk is exactly [`ServeScenario::CHUNK_HEAVY_LEN`] tokens
+    /// and — deliberately — *not* the mock's compiled `prefill_len`,
+    /// so every chunk row is a varlen scan row: exactly the kind the
+    /// default engine decomposition pays `max(chunk)` lockstep device
+    /// calls for and a fused varlen kernel serves in one launch. The
+    /// `BENCH_engine_api.json` gate prices that gap on the
+    /// deterministic `device_calls` / staged-bytes counters.
+    pub fn chunk_heavy() -> ServeScenario {
+        ServeScenario {
+            name: "chunk_heavy",
+            policy: BatchPolicy {
+                chunk_tokens: Self::CHUNK_HEAVY_LEN,
+                token_budget: 2 * Self::CHUNK_HEAVY_LEN,
+                max_chunk_rows: 2,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::ChunkHeavy,
+        }
+    }
+
+    /// Every [`ServeScenario::chunk_heavy`] chunk is exactly this many
+    /// tokens (the prompt length is a multiple of it), so the
+    /// decomposition's lockstep cost per chunk tick is exactly this
+    /// many device calls.
+    pub const CHUNK_HEAVY_LEN: usize = 6;
+
     /// The scenarios the planner CI gates run on.
     pub fn bundled() -> Vec<ServeScenario> {
         vec![
@@ -140,6 +170,16 @@ impl ServeScenario {
                     id: i,
                     prompt: (0..16).map(|x| (x * 7 + i as i32 + 1) % v).collect(),
                     max_new_tokens: 48,
+                })
+                .collect(),
+            ScenarioMix::ChunkHeavy => (0..4)
+                .map(|i| Request {
+                    id: i,
+                    // 7 chunks of exactly CHUNK_HEAVY_LEN tokens each.
+                    prompt: (0..7 * Self::CHUNK_HEAVY_LEN as i32)
+                        .map(|x| (x * 3 + i as i32 + 2) % v)
+                        .collect(),
+                    max_new_tokens: 4,
                 })
                 .collect(),
             ScenarioMix::Interference => {
@@ -260,7 +300,7 @@ mod tests {
     fn scenarios_are_deterministic_and_well_formed() {
         for sc in ServeScenario::bundled()
             .into_iter()
-            .chain([ServeScenario::sharded_skew()])
+            .chain([ServeScenario::sharded_skew(), ServeScenario::chunk_heavy()])
         {
             let a = sc.requests(17);
             let b = sc.requests(17);

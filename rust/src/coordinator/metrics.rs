@@ -45,6 +45,10 @@ pub struct TrafficSnapshot {
     pub state_bytes_resident: u64,
     /// Padded rows shipped to compiled decode batches.
     pub padded_rows: u64,
+    /// Device launches (compiled-executable invocations): one per tick
+    /// on a fused varlen engine, `max(chunk)`-ish per tick for the
+    /// default decomposition.
+    pub device_calls: u64,
     /// Migrations *attached* on this worker (counting on the receiving
     /// side only keeps the server-wide sum exact: one per move).
     pub migrations: u64,
@@ -86,6 +90,7 @@ impl TrafficSnapshot {
         self.bytes_scattered += t.bytes_scattered;
         self.state_bytes_resident += t.state_bytes_resident;
         self.padded_rows += t.padded_rows;
+        self.device_calls += t.device_calls;
         self.migrations += t.migrations;
         self.bytes_migrated += t.bytes_migrated;
         self.reprefills_avoided += t.reprefills_avoided;
@@ -173,6 +178,9 @@ pub struct Metrics {
     /// Padded rows shipped to compiled decode batches by the default
     /// engine decomposition (a fused engine pads nothing).
     pub padded_rows: u64,
+    /// Device launches drained from the workspace each tick — one per
+    /// tick on a fused varlen engine, more under the decomposition.
+    pub device_calls: u64,
     /// Migrations attached on this worker (see [`TrafficSnapshot`]).
     pub migrations: u64,
     /// Migrations *detached* from this worker (report-line diagnostics;
@@ -199,7 +207,8 @@ pub struct Metrics {
     pub modeled_bytes: u64,
     /// Sum of (tick tokens / token budget) per tick, for mean budget
     /// utilization. (Engine-level padding to compiled batch sizes
-    /// happens inside `step_mixed_into` and surfaces as `padded_rows`.)
+    /// happens inside the launch decomposition and surfaces as
+    /// `padded_rows`.)
     occupancy_sum: f64,
     /// Prefill queue depth sampled each tick.
     queue_depth_sum: f64,
@@ -224,6 +233,7 @@ impl Metrics {
             bytes_scattered: 0,
             state_bytes_resident: 0,
             padded_rows: 0,
+            device_calls: 0,
             migrations: 0,
             migrations_out: 0,
             bytes_migrated: 0,
@@ -279,6 +289,12 @@ impl Metrics {
         self.padded_rows += padded;
     }
 
+    /// Record the device launches one tick performed (drained from the
+    /// workspace's counter after the engine call).
+    pub fn record_device_calls(&mut self, calls: u64) {
+        self.device_calls += calls;
+    }
+
     /// Record a migration *attach* on this worker: `bytes` of state
     /// installed (`state_bytes_per_seq`, or 0 for a `Reprefill`-mode
     /// attach), whether it avoided a whole-history re-prefill
@@ -328,6 +344,7 @@ impl Metrics {
             bytes_scattered: self.bytes_scattered,
             state_bytes_resident: self.state_bytes_resident,
             padded_rows: self.padded_rows,
+            device_calls: self.device_calls,
             migrations: self.migrations,
             bytes_migrated: self.bytes_migrated,
             reprefills_avoided: self.reprefills_avoided,
@@ -379,7 +396,7 @@ impl Metrics {
         format!(
             "requests={} tokens={} ({:.1} tok/s) chunks={} prefill_tokens={} decode_steps={} \
              ticks={} max_tick_tokens={} queue={:.1} budget_use={:.2} \
-             gathered={}B scattered={}B resident={}B padded_rows={} \
+             gathered={}B scattered={}B resident={}B padded_rows={} device_calls={} \
              migrations={}in/{}out migrated={}B reprefills_avoided={} \
              plans={} plan_switches={} plan_err={:.2}x \
              ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
@@ -397,6 +414,7 @@ impl Metrics {
             self.bytes_scattered,
             self.state_bytes_resident,
             self.padded_rows,
+            self.device_calls,
             self.migrations,
             self.migrations_out,
             self.bytes_migrated,
@@ -518,6 +536,8 @@ mod tests {
             256,
             0,
         );
+        m.record_device_calls(3);
+        m.record_device_calls(1);
         m.record_completion(0.001, 0.010);
         assert_eq!(m.tokens_generated, 6);
         assert_eq!(m.decode_steps, 2);
@@ -535,9 +555,11 @@ mod tests {
         assert_eq!(m.bytes_scattered, 60);
         assert_eq!(m.state_bytes_resident, 256);
         assert_eq!(m.padded_rows, 2);
+        assert_eq!(m.device_calls, 4);
         let snap = m.traffic_snapshot();
         assert_eq!(snap.bytes_gathered, 140);
         assert_eq!(snap.state_bytes_resident, 256);
+        assert_eq!(snap.device_calls, 4);
         let r = m.report();
         assert!(r.contains("requests=1"));
         assert!(r.contains("max_tick_tokens=66"));
@@ -545,6 +567,7 @@ mod tests {
         assert!(r.contains("scattered=60B"));
         assert!(r.contains("resident=256B"));
         assert!(r.contains("padded_rows=2"));
+        assert!(r.contains("device_calls=4"));
     }
 
     #[test]

@@ -13,10 +13,10 @@
 //! ## Hot-path memory discipline
 //!
 //! The default path ([`StatePath::Resident`]) admits each sequence to a
-//! stable arena row once and then hands the arena's slabs plus a
-//! per-tick row plan straight to [`Executor::step_mixed_into`], which
-//! advances every row in place and writes logits into a persistent
-//! [`Workspace`]. All per-tick staging (`lens`, tokens, row plan,
+//! stable arena row once and then launches the arena's slabs straight
+//! through one typed [`LaunchSpec`] per tick ([`Executor::launch`]):
+//! the engine advances every row in place and writes logits into a
+//! persistent [`Workspace`]. All per-tick staging (segments, tokens,
 //! sampled tokens, round-robin scratch) lives in buffers retained
 //! across ticks, so a steady-state decode tick — unchanged batch
 //! membership — performs **zero gather/scatter copies and zero heap
@@ -24,19 +24,26 @@
 //! affected rows (a zeroing admit or a free-list release).
 //!
 //! [`StatePath::Reference`] keeps the pre-residency data path —
-//! gather packed copies, call the allocating [`Executor::step_mixed`],
-//! install the outputs back — bit-identical in tokens and counters,
-//! as the equivalence baseline for tests and for the deterministic
+//! gather packed copies, launch over them with identity rows, install
+//! the outputs back — bit-identical in tokens and counters, as the
+//! equivalence baseline for tests and for the deterministic
 //! traffic-counter comparison (`bytes_gathered` / `bytes_scattered`
 //! in [`Metrics`]).
+//!
+//! Which path a plain [`Scheduler::new`] runs, which fusion plans the
+//! planner may pick, and whether launches carry a
+//! [`Donation::DonateInPlace`] annotation are all **negotiated from
+//! the engine's [`EngineCaps`]** at construction — nothing is probed
+//! and nothing is hardcoded.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::planner::{PlanChoice, Planner, PlanSpec, WorkloadFeatures};
+use crate::planner::{Planner, PlanSpec, WorkloadFeatures};
 use crate::runtime::engine::{argmax_rows_into, Executor, Workspace};
+use crate::runtime::{Donation, EngineCaps, LaunchSpec, MixedBatch, Phase, Segment, StateSlabs};
 
 use super::batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 use super::metrics::Metrics;
@@ -47,12 +54,14 @@ use super::state::{SlotHandle, StateArena};
 /// How the scheduler moves recurrent state between ticks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StatePath {
-    /// Zero-copy (default): state stays resident in the arena and the
-    /// engine advances arena rows in place via `step_mixed_into`.
+    /// Zero-copy (default for in-place-capable engines): state stays
+    /// resident in the arena and the engine advances arena rows in
+    /// place through the per-tick launch.
     Resident,
-    /// Pre-residency baseline: gather packed copies per tick, call the
-    /// allocating `step_mixed`, install the outputs back. Kept for
-    /// equivalence tests and as the traffic-counter reference.
+    /// Pre-residency baseline: gather packed copies per tick, launch
+    /// over them with identity rows, install the outputs back. Kept
+    /// for equivalence tests, as the traffic-counter reference, and as
+    /// the fallback for engines whose caps disclaim in-place state.
     Reference,
 }
 
@@ -65,10 +74,14 @@ pub struct Scheduler<E: Executor> {
     path: StatePath,
     /// Per-tick fusion-plan selection (static / adaptive / table; see
     /// [`crate::planner`]). The decision is made from the tick's
-    /// [`WorkloadFeatures`] before the engine call and dispatched via
-    /// [`Executor::step_planned_into`] on both state paths, so plan
-    /// choice can never depend on — or change — the data path.
+    /// [`WorkloadFeatures`] before the engine call and carried in the
+    /// [`LaunchSpec`] on both state paths, so plan choice can never
+    /// depend on — or change — the data path.
     planner: Planner,
+    /// The engine's capability report, read once at construction: the
+    /// planner's candidate mask, the default state path, and the
+    /// per-launch [`Donation`] annotation all come from it.
+    caps: EngineCaps,
     /// Persistent engine workspace: logits surface + staging buffers +
     /// traffic counters, reused every tick.
     ws: Workspace,
@@ -95,9 +108,8 @@ pub struct Scheduler<E: Executor> {
     metrics: Metrics,
     // Per-tick staging, retained across ticks so the steady-state
     // decode tick allocates nothing.
-    lens_buf: Vec<usize>,
+    segs_buf: Vec<Segment>,
     tokens_buf: Vec<i32>,
-    rows_buf: Vec<usize>,
     row_state_buf: Vec<Option<u64>>,
     next_buf: Vec<i32>,
     rr_scratch: Vec<u64>,
@@ -105,8 +117,12 @@ pub struct Scheduler<E: Executor> {
 }
 
 impl<E: Executor> Scheduler<E> {
+    /// Default construction: the state path follows the engine's
+    /// capability report (`in_place_state` ⇒ zero-copy residency,
+    /// otherwise the packed reference path) instead of being
+    /// hardcoded.
     pub fn new(engine: E, policy: BatchPolicy) -> Scheduler<E> {
-        Scheduler::with_path(engine, policy, StatePath::Resident)
+        Scheduler::with_planner_auto(engine, policy, Planner::new(PlanSpec::default()))
     }
 
     /// Construct with an explicit state path (tests / benchmarks).
@@ -114,27 +130,32 @@ impl<E: Executor> Scheduler<E> {
         Scheduler::with_planner(engine, policy, path, Planner::new(PlanSpec::default()))
     }
 
+    /// Construct with an explicit plan policy, the state path chosen
+    /// from the engine's capability report (what the server workers
+    /// use).
+    pub fn with_planner_auto(engine: E, policy: BatchPolicy, planner: Planner) -> Scheduler<E> {
+        let path = if engine.caps().in_place_state {
+            StatePath::Resident
+        } else {
+            StatePath::Reference
+        };
+        Scheduler::with_planner(engine, policy, path, planner)
+    }
+
     /// Fully-explicit constructor: state path plus plan policy.
     pub fn with_planner(
-        mut engine: E,
+        engine: E,
         policy: BatchPolicy,
         path: StatePath,
         mut planner: Planner,
     ) -> Scheduler<E> {
-        // Announce every selectable plan up front so engines that
-        // compile per-variant executables do it off the serving path;
-        // a rejected plan is excluded from adaptive selection so the
-        // misconfiguration surfaces here, not as a mid-serve engine
-        // error.
-        for choice in PlanChoice::candidates() {
-            if let Err(e) = engine.register_variant(choice) {
-                eprintln!(
-                    "coordinator: engine rejected plan {} (excluded from selection): {e}",
-                    choice.name()
-                );
-                planner.disallow(choice);
-            }
-        }
+        // Capability negotiation: the engine *declares* which fusion
+        // plans it can execute and the planner masks its candidate set
+        // accordingly — a misconfiguration surfaces here, at
+        // construction, never as a mid-serve engine error (the old
+        // register_variant trial-and-error is gone).
+        let caps = engine.caps();
+        planner.apply_caps(&caps);
         let m = engine.manifest();
         let batcher = Batcher::new(policy);
         // The batcher admits at most `max_running` state-holding
@@ -151,6 +172,7 @@ impl<E: Executor> Scheduler<E> {
             states,
             path,
             planner,
+            caps,
             ws: Workspace::new(),
             waiting: BTreeMap::new(),
             running: BTreeMap::new(),
@@ -158,9 +180,8 @@ impl<E: Executor> Scheduler<E> {
             poisoned: false,
             remote_resident: 0,
             metrics: Metrics::new(),
-            lens_buf: Vec::new(),
+            segs_buf: Vec::new(),
             tokens_buf: Vec::new(),
-            rows_buf: Vec::new(),
             row_state_buf: Vec::new(),
             next_buf: Vec::new(),
             rr_scratch: Vec::new(),
@@ -199,6 +220,11 @@ impl<E: Executor> Scheduler<E> {
     /// Which state path this scheduler runs.
     pub fn path(&self) -> StatePath {
         self.path
+    }
+
+    /// The engine's capability report (read once at construction).
+    pub fn caps(&self) -> EngineCaps {
+        self.caps
     }
 
     /// The per-tick plan selector (tests / diagnostics).
@@ -413,51 +439,36 @@ impl<E: Executor> Scheduler<E> {
     }
 
     /// One mixed engine invocation: `chunks` prefill-chunk rows followed
-    /// by one decode row per id in `decode_ids`.
+    /// by one decode row per id in `decode_ids`, launched as a single
+    /// typed [`LaunchSpec`].
     fn do_mixed(&mut self, chunks: &[ChunkPlan], decode_ids: &[u64]) -> Result<Vec<Response>> {
         let batch = chunks.len() + decode_ids.len();
         assert!(batch > 0, "empty mixed action");
-        self.lens_buf.clear();
         self.tokens_buf.clear();
-        self.rows_buf.clear();
+        self.segs_buf.clear();
         for ch in chunks {
             let fl = self.waiting.get(&ch.id).expect("waiting entry for chunk");
             assert_eq!(fl.prefill_pos, ch.start, "scheduler cursor mismatch for seq {}", ch.id);
             self.tokens_buf.extend_from_slice(&fl.req.prompt[ch.start..ch.start + ch.len]);
-            self.lens_buf.push(ch.len);
         }
         for &id in decode_ids {
             self.tokens_buf
                 .push(*self.running[&id].generated.last().expect("running seq has a token"));
-            self.lens_buf.push(1);
         }
 
-        // Select this tick's fusion plan from the engine-visible
-        // features (single-token chunk rows classify as decode rows,
-        // matching how the engine reads `lens`). The resident gauge is
-        // the *server-wide* one — this shard's arena plus the synced
-        // remote shards. Steady state this is a bucket-cache lookup —
-        // no allocation, no model evaluation.
-        let features = WorkloadFeatures::from_tick(
-            &self.lens_buf[..chunks.len()],
-            decode_ids.len(),
-            self.global_resident_bytes(),
-            self.batcher.policy().token_budget,
-        );
-        let decision = self.planner.decide(&features);
-
-        let vocab = self.vocab();
-        // Reference path only: the freshly gathered packed state
-        // buffers to install back from after the call. The resident
-        // path leaves this `None` — the engine already advanced the
-        // arena rows in place.
-        let mut ref_out: Option<(Vec<f32>, Vec<f32>)> = None;
+        // Build the tick's segments. The declared phase is what the
+        // scheduler *knows* — a chunk at cursor 0 starts from the
+        // zeroed row it was just admitted to (`PrefillFirst`), later
+        // chunks carry state (`PrefillCont`), unit rows are decode
+        // steps — so engines never re-derive it by scanning state
+        // memory. Reference-path rows are the packed batch indices;
+        // resident rows come from the arena (fresh rows admitted —
+        // zeroed, free-list — up front, everything else already
+        // resident, so unchanged batch membership rebuilds the same
+        // plan with zero copies).
+        let mut ref_bufs: Option<(Vec<f32>, Vec<f32>)> = None;
         match self.path {
             StatePath::Resident => {
-                // Row plan: fresh rows are admitted (zeroed, free-list)
-                // up front; everything else is already resident, so an
-                // unchanged batch membership rebuilds the same plan with
-                // zero copies.
                 for ch in chunks {
                     let row = if ch.start == 0 {
                         self.states.admit(ch.id)
@@ -466,52 +477,83 @@ impl<E: Executor> Scheduler<E> {
                             .row_of(ch.id)
                             .expect("mid-prefill chunk has resident state")
                     };
-                    self.rows_buf.push(row);
+                    self.segs_buf.push(Segment { len: ch.len, row, phase: chunk_phase(ch) });
                 }
                 for &id in decode_ids {
-                    self.rows_buf
-                        .push(self.states.row_of(id).expect("decode row has resident state"));
+                    let row = self.states.row_of(id).expect("decode row has resident state");
+                    self.segs_buf.push(Segment { len: 1, row, phase: Phase::Decode });
                 }
-                let (conv, ssm, stride) = self.states.slab_mut();
-                self.engine.step_planned_into(
-                    decision.choice,
-                    &self.lens_buf,
-                    &self.tokens_buf,
-                    &self.rows_buf,
-                    conv,
-                    ssm,
-                    stride,
-                    &mut self.ws,
-                )?;
             }
             StatePath::Reference => {
                 // Pre-residency data path: gather packed per-tick
-                // copies (counted by the arena), run the engine on
-                // them with an identity row plan, install back below.
-                // Routes through the same persistent workspace so the
-                // engine's own staging traffic is counted too.
+                // copies (counted by the arena), launch over them with
+                // identity rows, install back below. Routes through the
+                // same persistent workspace so the engine's own staging
+                // traffic is counted too.
                 self.row_state_buf.clear();
-                for ch in chunks {
+                for (b, ch) in chunks.iter().enumerate() {
                     self.row_state_buf.push(if ch.start == 0 { None } else { Some(ch.id) });
+                    self.segs_buf.push(Segment { len: ch.len, row: b, phase: chunk_phase(ch) });
                 }
-                for &id in decode_ids {
+                for (i, &id) in decode_ids.iter().enumerate() {
                     self.row_state_buf.push(Some(id));
+                    self.segs_buf.push(Segment {
+                        len: 1,
+                        row: chunks.len() + i,
+                        phase: Phase::Decode,
+                    });
                 }
-                let (mut conv, mut ssm) = self.states.gather_rows(&self.row_state_buf);
-                self.rows_buf.extend(0..batch);
-                self.engine.step_planned_into(
-                    decision.choice,
-                    &self.lens_buf,
-                    &self.tokens_buf,
-                    &self.rows_buf,
-                    &mut conv,
-                    &mut ssm,
-                    batch,
-                    &mut self.ws,
-                )?;
-                ref_out = Some((conv, ssm));
+                ref_bufs = Some(self.states.gather_rows(&self.row_state_buf));
             }
         }
+
+        // The validated batch view — one construction per tick, over
+        // the retained buffers (no allocation once warm; the distinct-
+        // rows check is the engine's corruption guard).
+        let view = MixedBatch::new(&self.segs_buf, &self.tokens_buf)?;
+
+        // Select this tick's fusion plan from the same typed view the
+        // engine will see (single-token chunk rows classify as decode
+        // rows). The resident gauge is the *server-wide* one — this
+        // shard's arena plus the synced remote shards. Steady state
+        // this is a bucket-cache lookup — no allocation, no model
+        // evaluation.
+        let features = WorkloadFeatures::from_batch(
+            &view,
+            self.global_resident_bytes(),
+            self.batcher.policy().token_budget,
+        );
+        let decision = self.planner.decide(&features);
+
+        let vocab = self.vocab();
+        match &mut ref_bufs {
+            // Resident: the arena slabs go straight into the launch —
+            // donated when the engine's caps say it honours donation.
+            None => {
+                let donation = if self.caps.donation {
+                    Donation::DonateInPlace
+                } else {
+                    Donation::Retain
+                };
+                self.engine.launch(LaunchSpec {
+                    batch: view,
+                    state: self.states.slabs(donation),
+                    plan: Some(decision.choice),
+                    ws: &mut self.ws,
+                })?;
+            }
+            // Reference: launch over the gathered packed copies (always
+            // retained — they are installed back after the call).
+            Some((conv, ssm)) => {
+                self.engine.launch(LaunchSpec {
+                    batch: view,
+                    state: StateSlabs::new(conv, ssm, batch, Donation::Retain),
+                    plan: Some(decision.choice),
+                    ws: &mut self.ws,
+                })?;
+            }
+        }
+        let ref_out = ref_bufs;
         argmax_rows_into(&self.ws.logits, vocab, &mut self.next_buf);
 
         let chunk_tokens: usize = chunks.iter().map(|c| c.len).sum();
@@ -587,6 +629,9 @@ impl<E: Executor> Scheduler<E> {
         traffic.merge(self.ws.take_traffic());
         let padded = self.ws.take_padded_rows();
         self.metrics.record_traffic(traffic, self.states.resident_bytes(), padded);
+        // Device-launch accounting: 1 per tick on a fused varlen
+        // engine, the compiled-group count under the decomposition.
+        self.metrics.record_device_calls(self.ws.take_device_calls());
 
         // Plan accounting: the decision, and the engine's modeled cost
         // for executing it (zero on engines that don't model plans).
@@ -597,10 +642,26 @@ impl<E: Executor> Scheduler<E> {
     }
 }
 
+/// The scheduler-declared [`Phase`] of one prefill chunk row: cursor 0
+/// means the row was just admitted to a zeroed arena slot (or gathers
+/// as zeros on the reference path), so the engine may treat it as a
+/// fresh full prefill; unit chunks are decode steps, exactly as the
+/// engine classifies lengths.
+fn chunk_phase(ch: &ChunkPlan) -> Phase {
+    if ch.len == 1 {
+        Phase::Decode
+    } else if ch.start == 0 {
+        Phase::PrefillFirst
+    } else {
+        Phase::PrefillCont
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::request::WorkloadGen;
+    use crate::planner::PlanChoice;
     use crate::runtime::mock::MockEngine;
 
     fn sched() -> Scheduler<MockEngine> {
@@ -721,6 +782,58 @@ mod tests {
         assert_eq!(s.metrics().bytes_gathered, 0);
         assert_eq!(s.metrics().bytes_scattered, 0);
         assert_eq!(s.metrics().padded_rows, 0);
+    }
+
+    #[test]
+    fn caps_pick_the_state_path_and_donation() {
+        use crate::runtime::EngineCaps;
+        // An in-place-capable engine gets the zero-copy resident path…
+        let s = sched();
+        assert_eq!(s.path(), StatePath::Resident);
+        assert!(s.caps().donation);
+        // …an engine that disclaims in-place state falls back to the
+        // packed reference path, with no hardcoding anywhere.
+        let caps = EngineCaps { in_place_state: false, ..EngineCaps::baseline() };
+        let mut s = Scheduler::new(MockEngine::with_caps(caps), BatchPolicy::default());
+        assert_eq!(s.path(), StatePath::Reference);
+        assert!(!s.caps().donation);
+        // And it still serves correctly (decomposition + gather/install).
+        s.submit(Request { id: 1, prompt: vec![2, 3], max_new_tokens: 3 }).unwrap();
+        let out = s.run_until_drained().unwrap();
+        assert_eq!(out[0].tokens.len(), 3);
+        assert!(s.metrics().bytes_gathered > 0);
+    }
+
+    #[test]
+    fn fused_engine_makes_one_device_call_per_tick() {
+        // The capability the whole redesign exists to expose: a
+        // varlen-fused engine serves every tick in exactly one device
+        // launch; the same engine with the kernel capability off pays
+        // the decomposition's lockstep call count.
+        use crate::runtime::EngineCaps;
+        let run = |caps: EngineCaps| {
+            let mut s = Scheduler::new(MockEngine::with_caps(caps), BatchPolicy::default());
+            let m = s.manifest();
+            let mut gen =
+                WorkloadGen::new(19, m.vocab, m.prefill_len, 2, 5).with_prompt_range(2, 20);
+            for _ in 0..5 {
+                s.submit(gen.next_request()).unwrap();
+            }
+            let mut out = s.run_until_drained().unwrap();
+            out.sort_by_key(|r| r.id);
+            let tokens: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+            (tokens, s.metrics().ticks, s.metrics().device_calls)
+        };
+        let (fused_tokens, fused_ticks, fused_calls) = run(EngineCaps::full());
+        let (decomp_tokens, decomp_ticks, decomp_calls) =
+            run(EngineCaps { varlen_kernel: false, ..EngineCaps::full() });
+        assert_eq!(fused_tokens, decomp_tokens, "caps must not change outputs");
+        assert_eq!(fused_calls, fused_ticks, "fused: exactly 1 device call per tick");
+        assert_eq!(fused_ticks, decomp_ticks, "same schedule either way");
+        assert!(
+            decomp_calls > decomp_ticks,
+            "decomposition must pay more than 1 call per tick: {decomp_calls} vs {decomp_ticks}"
+        );
     }
 
     #[test]

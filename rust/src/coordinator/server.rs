@@ -22,11 +22,12 @@ use anyhow::Result;
 
 use crate::planner::{Planner, PlanSpec};
 use crate::runtime::engine::Executor;
+use crate::runtime::EngineCaps;
 
 use super::batcher::BatchPolicy;
 use super::metrics::TrafficSnapshot;
 use super::request::{Request, Response};
-use super::scheduler::{Scheduler, StatePath};
+use super::scheduler::Scheduler;
 use super::shard::{
     Migration, MigrationMode, MigrationOutcome, MigrationPacket, RouterPolicy, ShardMap,
     WorkerLoad,
@@ -40,6 +41,7 @@ enum Msg {
     Submit(Request, Sender<Response>),
     Report(Sender<String>),
     Traffic(Sender<TrafficSnapshot>),
+    Caps(Sender<EngineCaps>),
     Load(Sender<WorkerLoad>),
     Detach(u64, Sender<Option<DetachReply>>),
     Attach(Box<MigrationPacket>, Sender<Response>, MigrationMode),
@@ -260,6 +262,20 @@ impl Server {
         }
     }
 
+    /// Each worker engine's capability report (what the schedulers
+    /// negotiated from at construction) — `serve_mamba` prints the
+    /// first one as the startup `engine caps:` line.
+    pub fn caps(&self) -> Vec<EngineCaps> {
+        self.workers
+            .iter()
+            .filter_map(|w| {
+                let (tx, rx) = channel();
+                w.tx.send(Msg::Caps(tx)).ok()?;
+                rx.recv().ok()
+            })
+            .collect()
+    }
+
     /// Collect metrics reports from all workers.
     pub fn reports(&self) -> Vec<String> {
         self.workers
@@ -336,6 +352,9 @@ fn handle_msg<E: Executor>(
         Msg::Traffic(tx) => {
             let _ = tx.send(sched.metrics().traffic_snapshot());
         }
+        Msg::Caps(tx) => {
+            let _ = tx.send(sched.caps());
+        }
         Msg::Load(tx) => {
             let _ = tx.send(WorkerLoad {
                 shard,
@@ -377,8 +396,9 @@ fn worker_loop<E: Executor>(
     rx: Receiver<Msg>,
     done: Sender<u64>,
 ) {
-    let mut sched =
-        Scheduler::with_planner(engine, policy, StatePath::Resident, Planner::new(spec));
+    // The state path is negotiated from the engine's caps (resident for
+    // in-place-capable engines, packed reference otherwise).
+    let mut sched = Scheduler::with_planner_auto(engine, policy, Planner::new(spec));
     sched.set_shard(shard);
     let mut sinks: std::collections::BTreeMap<u64, Sender<Response>> =
         std::collections::BTreeMap::new();
@@ -498,6 +518,21 @@ mod tests {
     #[test]
     fn shutdown_with_no_work_is_clean() {
         let server = Server::start(vec![|| Ok(MockEngine::new())], BatchPolicy::default());
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_reports_worker_caps() {
+        let server = Server::start(
+            vec![|| Ok(MockEngine::new()), || Ok(MockEngine::new())],
+            BatchPolicy::default(),
+        );
+        let caps = server.caps();
+        assert_eq!(caps.len(), 2);
+        for c in &caps {
+            assert!(c.varlen_kernel, "mock workers advertise the fused kernel");
+            assert!(!c.summary().is_empty());
+        }
         server.shutdown();
     }
 

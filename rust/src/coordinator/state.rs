@@ -6,10 +6,11 @@
 //! layer plus the J−1 conv tail) — so the arena is one contiguous
 //! **layer-major slab** (`[layers, capacity, …]`) with free-list slot
 //! allocation and stable row indices. A sequence is admitted to a row
-//! once and its state never moves again: the scheduler hands the slab
-//! plus a per-tick row plan straight to
-//! [`Executor::step_mixed_into`](crate::runtime::engine::Executor::step_mixed_into),
-//! which advances each row **in place**. Gather and scatter — the ~6
+//! once and its state never moves again: the scheduler wraps the slab
+//! as a typed [`StateSlabs`] view inside each tick's
+//! [`LaunchSpec`](crate::runtime::LaunchSpec) and the engine
+//! ([`Executor::launch`](crate::runtime::engine::Executor::launch))
+//! advances each row **in place**. Gather and scatter — the ~6
 //! full state copies per tick of the old `BTreeMap<u64, Vec<f32>>`
 //! manager — exist only on the explicit reference path
 //! ([`StateArena::gather_rows`] / [`StateArena::install_from_batch`]),
@@ -26,6 +27,7 @@
 use std::collections::BTreeMap;
 
 use crate::runtime::engine::{copy_state_row, TrafficCounters};
+use crate::runtime::{Donation, StateSlabs};
 
 /// A globally stable address for one resident state row: which shard's
 /// arena holds it, and which row within that shard's slab. The row part
@@ -178,10 +180,10 @@ impl StateArena {
         }
     }
 
-    /// The resident slabs plus their row stride, for
-    /// [`Executor::step_mixed_into`](crate::runtime::engine::Executor::step_mixed_into):
-    /// `(conv, ssm, stride)`. Zero-copy — the engine reads and writes
-    /// arena rows in place.
+    /// The resident slabs plus their row stride as raw parts:
+    /// `(conv, ssm, stride)` (tests / legacy callers; the launch path
+    /// uses the typed [`StateArena::slabs`] view). Zero-copy — the
+    /// engine reads and writes arena rows in place.
     pub fn slab_mut(&mut self) -> (&mut [f32], &mut [f32], usize) {
         (&mut self.conv, &mut self.ssm, self.capacity)
     }
@@ -189,6 +191,14 @@ impl StateArena {
     /// Read-only view of the slabs (tests / diagnostics).
     pub fn slab(&self) -> (&[f32], &[f32], usize) {
         (&self.conv, &self.ssm, self.capacity)
+    }
+
+    /// The resident slabs wrapped as the typed [`StateSlabs`] view a
+    /// [`LaunchSpec`](crate::runtime::LaunchSpec) carries — zero-copy;
+    /// the engine reads and writes arena rows in place under the
+    /// caller's [`Donation`] annotation.
+    pub fn slabs(&mut self, donation: Donation) -> StateSlabs<'_> {
+        StateSlabs::new(&mut self.conv, &mut self.ssm, self.capacity, donation)
     }
 
     /// Copy one sequence's state out as sequence-major `[layers, per]`
@@ -476,6 +486,25 @@ mod tests {
         assert_eq!(src.traffic(), TrafficCounters::default());
         assert_eq!(dst.traffic(), TrafficCounters::default());
         assert_eq!(src.detach_row(7), None, "double detach is a no-op");
+    }
+
+    #[test]
+    fn typed_slabs_view_matches_raw_slab() {
+        let mut m = arena();
+        m.admit(5);
+        let (raw_conv_len, raw_ssm_len, stride) = {
+            let (c, s, st) = m.slab();
+            (c.len(), s.len(), st)
+        };
+        let mut view = m.slabs(Donation::DonateInPlace);
+        assert_eq!(view.stride(), stride);
+        assert_eq!(view.donation(), Donation::DonateInPlace);
+        let (c, s) = view.slabs_mut();
+        assert_eq!(c.len(), raw_conv_len);
+        assert_eq!(s.len(), raw_ssm_len);
+        // Writes through the view land in the arena (zero-copy).
+        c[0] = 7.5;
+        assert_eq!(m.slab().0[0], 7.5);
     }
 
     #[test]

@@ -19,19 +19,29 @@
 //!   [`planner::CostModel`] evaluation of every candidate
 //!   [`planner::PlanChoice`] → [`planner::Planner`] policy (static /
 //!   adaptive / autotuned [`planner::PlanTable`], with dwell
-//!   hysteresis); the choice dispatches through
-//!   [`runtime::Executor::step_planned_into`] and its quality is
+//!   hysteresis); the candidate set is masked from the engine's
+//!   capability report ([`planner::Planner::apply_caps`]), the choice
+//!   rides in each tick's [`runtime::LaunchSpec`], and its quality is
 //!   observable in the deterministic modeled-cost counters;
 //! * [`report`] — regenerates every paper table and figure;
 //! * [`runtime`] / [`coordinator`] — the serving stack (python never
-//!   runs on the request path). The runtime's [`runtime::Executor`]
-//!   exposes prefill, decode, and the varlen mixed call in two forms:
-//!   allocating `step_mixed`, and the zero-copy `step_mixed_into`
-//!   which advances caller-owned state slabs **in place** through a
-//!   per-tick row plan and reusable [`runtime::Workspace`] buffers.
+//!   runs on the request path). The runtime's [`runtime::Executor`] is
+//!   a typed launch surface: compiled primitives (prefill / decode)
+//!   plus **one entry point** [`runtime::Executor::launch`] over a
+//!   validated [`runtime::LaunchSpec`] — a [`runtime::MixedBatch`] of
+//!   per-row [`runtime::Segment`]s (distinct-rows contract enforced at
+//!   construction), [`runtime::StateSlabs`] carrying stride and a
+//!   [`runtime::Donation`] annotation (PJRT buffer-donation ready),
+//!   the plan choice, and reusable [`runtime::Workspace`] buffers
+//!   whose counters price staged bytes, padded rows and device calls.
+//!   What an engine can fuse is *declared* in
+//!   [`runtime::EngineCaps`] and negotiated at scheduler
+//!   construction; engines without a varlen kernel inherit the default
+//!   compiled-primitive decomposition, and the legacy step methods are
+//!   deprecated wrappers over `launch`.
 //!   The coordinator drives **continuous batching with chunked
-//!   prefill**: each [`coordinator::Scheduler`] tick is one mixed
-//!   engine invocation combining one decode token per running sequence
+//!   prefill**: each [`coordinator::Scheduler`] tick is one engine
+//!   launch combining one decode token per running sequence
 //!   with prefill chunks from waiting prompts, bounded by the
 //!   [`coordinator::BatchPolicy`] knobs `chunk_tokens` (chunk size; 0 =
 //!   monolithic) and `token_budget` (per-tick token cost cap). All

@@ -187,6 +187,19 @@ impl CostModel {
         }
         best
     }
+
+    /// [`CostModel::best`] restricted to an [`PlanChoice::index`]-ed
+    /// availability mask — the shape a capability report
+    /// ([`crate::runtime::EngineCaps::plans`]) and the planner's
+    /// disallow set both take, so capability-negotiated selection needs
+    /// no closure plumbing. `None` when the mask rejects everything.
+    pub fn best_allowed(
+        &mut self,
+        bucket: PlanBucket,
+        allowed: &[bool; PlanChoice::COUNT],
+    ) -> Option<(PlanChoice, TickEstimate)> {
+        self.best_among(bucket, |c| allowed[c.index()])
+    }
 }
 
 #[cfg(test)]

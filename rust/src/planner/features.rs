@@ -13,6 +13,8 @@
 //! size — so the cost model is evaluated once per bucket, not per tick,
 //! and the steady-state tick stays allocation-free.
 
+use crate::runtime::MixedBatch;
+
 /// Chunk-length histogram buckets: `1..=2`, `3..=8`, `9..=32`, `33+`.
 pub const CHUNK_HIST_BUCKETS: usize = 4;
 
@@ -41,6 +43,32 @@ pub struct WorkloadFeatures {
 }
 
 impl WorkloadFeatures {
+    fn empty(decode_rows: usize, resident_state_bytes: u64) -> WorkloadFeatures {
+        WorkloadFeatures {
+            decode_rows,
+            prefill_chunks: 0,
+            prefill_tokens: 0,
+            max_chunk: 0,
+            chunk_hist: [0; CHUNK_HIST_BUCKETS],
+            resident_state_bytes,
+            budget_utilization: 0.0,
+        }
+    }
+
+    /// Account one multi-token prefill chunk.
+    fn add_chunk(&mut self, len: usize) {
+        self.prefill_chunks += 1;
+        self.prefill_tokens += len;
+        self.max_chunk = self.max_chunk.max(len);
+        let b = match len {
+            0..=2 => 0,
+            3..=8 => 1,
+            9..=32 => 2,
+            _ => 3,
+        };
+        self.chunk_hist[b] += 1;
+    }
+
     /// Build features from a tick's chunk lengths and decode-row count
     /// (the same classification the engine applies to `lens`:
     /// single-token chunks count as decode rows).
@@ -50,15 +78,7 @@ impl WorkloadFeatures {
         resident_state_bytes: u64,
         token_budget: usize,
     ) -> WorkloadFeatures {
-        let mut f = WorkloadFeatures {
-            decode_rows,
-            prefill_chunks: 0,
-            prefill_tokens: 0,
-            max_chunk: 0,
-            chunk_hist: [0; CHUNK_HIST_BUCKETS],
-            resident_state_bytes,
-            budget_utilization: 0.0,
-        };
+        let mut f = WorkloadFeatures::empty(decode_rows, resident_state_bytes);
         let mut tokens = decode_rows;
         for &len in chunk_lens {
             tokens += len;
@@ -66,18 +86,32 @@ impl WorkloadFeatures {
                 f.decode_rows += 1;
                 continue;
             }
-            f.prefill_chunks += 1;
-            f.prefill_tokens += len;
-            f.max_chunk = f.max_chunk.max(len);
-            let b = match len {
-                0..=2 => 0,
-                3..=8 => 1,
-                9..=32 => 2,
-                _ => 3,
-            };
-            f.chunk_hist[b] += 1;
+            f.add_chunk(len);
         }
         f.budget_utilization = tokens as f64 / token_budget.max(1) as f64;
+        f
+    }
+
+    /// Build features straight from the validated [`MixedBatch`] the
+    /// engine will launch — the scheduler's per-tick path, so planner
+    /// and engine classify the batch from the *same* typed view:
+    /// single-token segments are the decode set, multi-token segments
+    /// the prefill chunks. Equivalent to [`WorkloadFeatures::from_tick`]
+    /// on the batch's raw lengths (the planner property tests pin it).
+    pub fn from_batch(
+        batch: &MixedBatch<'_>,
+        resident_state_bytes: u64,
+        token_budget: usize,
+    ) -> WorkloadFeatures {
+        let mut f = WorkloadFeatures::empty(0, resident_state_bytes);
+        for seg in batch.segments() {
+            if seg.len == 1 {
+                f.decode_rows += 1;
+            } else {
+                f.add_chunk(seg.len);
+            }
+        }
+        f.budget_utilization = batch.total_tokens() as f64 / token_budget.max(1) as f64;
         f
     }
 
@@ -148,6 +182,28 @@ mod tests {
         assert_eq!(f.bucket(), PlanBucket { decode_rows: 8, prefill_tokens: 16 });
         let d = WorkloadFeatures::from_tick(&[], 8, 0, 32);
         assert_eq!(d.bucket(), PlanBucket { decode_rows: 8, prefill_tokens: 0 });
+    }
+
+    #[test]
+    fn from_batch_matches_from_tick_classification() {
+        use crate::runtime::{Phase, Segment};
+        // Segments [3, 1, 16, 1, 1] — unit segments are the decode set
+        // whatever their origin, exactly like the raw-lens view.
+        let segs = [
+            Segment { len: 3, row: 0, phase: Phase::PrefillFirst },
+            Segment { len: 1, row: 1, phase: Phase::Decode },
+            Segment { len: 16, row: 2, phase: Phase::PrefillCont },
+            Segment { len: 1, row: 3, phase: Phase::Decode },
+            Segment { len: 1, row: 4, phase: Phase::Decode },
+        ];
+        let tokens = vec![7i32; 22];
+        let batch = MixedBatch::new(&segs, &tokens).unwrap();
+        let via_batch = WorkloadFeatures::from_batch(&batch, 2048, 32);
+        let via_lens = WorkloadFeatures::from_tick(&[3, 1, 16], 2, 2048, 32);
+        assert_eq!(via_batch, via_lens);
+        assert_eq!(via_batch.decode_rows, 3);
+        assert_eq!(via_batch.prefill_tokens, 19);
+        assert_eq!(via_batch.bucket(), via_lens.bucket());
     }
 
     #[test]

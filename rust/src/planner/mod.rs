@@ -23,12 +23,15 @@
 //!
 //! The selected [`PlanChoice`] (a re-export of
 //! [`crate::workload::DesignPoint`]: the five fusion variants plus the
-//! MARCA-like / Geens-like baselines) flows into
-//! [`crate::runtime::Executor::step_planned_into`]; engines that
-//! compile one executable per variant dispatch on it, and the mock
-//! engine charges each tick with the chosen plan's analytical cost so
-//! the deterministic `modeled_cycles` / `modeled_bytes` counters make
-//! plan quality observable in tests, benches and CI gates.
+//! MARCA-like / Geens-like baselines) rides in each tick's
+//! [`crate::runtime::LaunchSpec`]; engines that compile one executable
+//! per variant dispatch on it, and the mock engine charges each tick
+//! with the chosen plan's analytical cost so the deterministic
+//! `modeled_cycles` / `modeled_bytes` counters make plan quality
+//! observable in tests, benches and CI gates. Which plans are
+//! *selectable* is negotiated up front: the engine declares per-plan
+//! availability in [`crate::runtime::EngineCaps`] and the scheduler
+//! seeds [`Planner::apply_caps`] from the report.
 
 pub mod autotune;
 pub mod cost;

@@ -6,6 +6,8 @@
 //! occupancy/recompilation costs on a switch even though the analytical
 //! model does not).
 
+use crate::runtime::EngineCaps;
+
 use super::autotune::PlanTable;
 use super::cost::{CostModel, TickEstimate};
 use super::features::WorkloadFeatures;
@@ -116,17 +118,57 @@ impl Planner {
         }
     }
 
-    /// Exclude a candidate from adaptive selection (the scheduler calls
-    /// this for plans the engine rejects at registration, so a
-    /// startup-detectable misconfiguration never dispatches mid-serve).
-    /// The last remaining candidate cannot be excluded — selection must
-    /// always have something to pick.
+    /// Exclude a candidate from adaptive selection (a plan the engine's
+    /// capability report marks unavailable, so a startup-detectable
+    /// misconfiguration never dispatches mid-serve). The last remaining
+    /// candidate cannot be excluded — selection must always have
+    /// something to pick.
     pub fn disallow(&mut self, choice: PlanChoice) {
         let remaining = self.allowed.iter().filter(|&&a| a).count();
         if remaining > 1 || !self.allowed[choice.index()] {
             self.allowed[choice.index()] = false;
             self.cache.clear();
         }
+    }
+
+    /// Seed the disallow set from an engine's capability report: every
+    /// plan whose [`EngineCaps::plans`] bit is off is excluded from
+    /// selection. The scheduler calls this once at construction —
+    /// capability *negotiation* replaces the legacy `register_variant`
+    /// trial-and-error (announce every candidate, treat `Err` as
+    /// unavailable). As with [`Planner::disallow`], the last remaining
+    /// candidate is irremovable: a degenerate report that masks out
+    /// *every* plan leaves one selectable so the scheduler can still
+    /// construct, but the contradiction is loudly reported here, at
+    /// startup — not discovered as a mid-serve engine failure.
+    pub fn apply_caps(&mut self, caps: &EngineCaps) {
+        for choice in PlanChoice::candidates() {
+            if !caps.plans[choice.index()] {
+                eprintln!(
+                    "planner: engine caps mark plan {} unavailable (excluded from selection)",
+                    choice.name()
+                );
+                self.disallow(choice);
+            }
+        }
+        // The irremovable-last-candidate rule can contradict a
+        // degenerate all-masked report; surface it instead of silently
+        // dispatching a plan the engine disclaimed.
+        for choice in PlanChoice::candidates() {
+            if !caps.plans[choice.index()] && self.is_allowed(choice) {
+                eprintln!(
+                    "planner: WARNING: engine caps disallow every candidate; keeping plan {} \
+                     selectable so serving can proceed — the engine's capability report is \
+                     inconsistent and should be fixed",
+                    choice.name()
+                );
+            }
+        }
+    }
+
+    /// Whether a candidate is currently selectable (tests/diagnostics).
+    pub fn is_allowed(&self, choice: PlanChoice) -> bool {
+        self.allowed[choice.index()]
     }
 
     pub fn spec(&self) -> &PlanSpec {
@@ -157,12 +199,10 @@ impl Planner {
                         let c = *c;
                         (c, self.cost.tick_cost(c, bucket))
                     }
-                    PlanSpec::Adaptive => {
-                        let allowed = self.allowed;
-                        self.cost
-                            .best_among(bucket, |c| allowed[c.index()])
-                            .expect("disallow keeps at least one candidate")
-                    }
+                    PlanSpec::Adaptive => self
+                        .cost
+                        .best_allowed(bucket, &self.allowed)
+                        .expect("disallow keeps at least one candidate"),
                     PlanSpec::Table(t) => {
                         let cell = t.lookup(bucket.decode_rows, bucket.prefill_tokens);
                         (cell.choice, TickEstimate { cycles: cell.cycles, bytes: cell.bytes })
@@ -319,6 +359,26 @@ mod tests {
         }
         let d = p.decide(&decode_tick());
         let _ = d.choice; // selection still yields a plan
+    }
+
+    #[test]
+    fn apply_caps_masks_unavailable_plans() {
+        // A capability report with fully-fused unavailable: the planner
+        // never selects it, even where it would win (prefill-heavy).
+        let mut caps = EngineCaps::full();
+        let ff = PlanChoice::Variant(FusionVariant::FullyFused);
+        caps.plans[ff.index()] = false;
+        let mut p = Planner::with_dwell(PlanSpec::Adaptive, 1);
+        p.apply_caps(&caps);
+        assert!(!p.is_allowed(ff));
+        assert_ne!(p.decide(&prefill_tick()).choice, ff);
+        // An all-available report masks nothing.
+        let mut q = Planner::with_dwell(PlanSpec::Adaptive, 1);
+        q.apply_caps(&EngineCaps::full());
+        for c in PlanChoice::candidates() {
+            assert!(q.is_allowed(c));
+        }
+        assert_eq!(q.decide(&prefill_tick()).choice, ff);
     }
 
     #[test]

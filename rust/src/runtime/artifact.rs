@@ -10,16 +10,27 @@ use crate::util::JsonValue;
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name (e.g. `mamba_tiny`).
     pub model: String,
+    /// Vocabulary size (logits row width).
     pub vocab: usize,
+    /// Model embedding width `d_model`.
     pub d_model: usize,
+    /// Inner (expanded) width `D = E·d_model`.
     pub d_inner: usize,
+    /// Recurrent state width `N` per channel.
     pub d_state: usize,
+    /// Causal-conv kernel width `J` (the conv state carries `J−1` taps).
     pub d_conv: usize,
+    /// Number of layers.
     pub n_layer: usize,
+    /// Sequence length the prefill executables were compiled for.
     pub prefill_len: usize,
+    /// Batch sizes with a compiled prefill executable.
     pub prefill_batches: Vec<usize>,
+    /// Batch sizes with a compiled decode executable.
     pub decode_batches: Vec<usize>,
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
@@ -90,16 +101,24 @@ impl Manifest {
 /// integration test).
 #[derive(Debug, Clone)]
 pub struct Golden {
+    /// The token batch the golden prefill ran on.
     pub prefill_tokens: Vec<i32>,
+    /// A sample of the golden prefill logits (first row prefix).
     pub prefill_logits_sample: Vec<f32>,
+    /// Per-row argmax of the golden prefill logits.
     pub prefill_logits_argmax: Vec<i64>,
+    /// The token batch the golden decode step ran on.
     pub decode_token: Vec<i32>,
+    /// A sample of the golden decode logits (first row prefix).
     pub decode_logits_sample: Vec<f32>,
+    /// Per-row argmax of the golden decode logits.
     pub decode_logits_argmax: Vec<i64>,
+    /// Checksum of the golden post-decode SSM state.
     pub ssm_state_sum: f64,
 }
 
 impl Golden {
+    /// Load `golden.json` from an artifacts directory.
     pub fn load(dir: impl AsRef<Path>) -> Result<Golden> {
         let path = dir.as_ref().join("golden.json");
         let text = std::fs::read_to_string(&path)

@@ -1,6 +1,29 @@
 //! PJRT execution engine: loads the AOT HLO-text artifacts, compiles
-//! them once per batch size, and serves prefill/decode calls from the
-//! coordinator's hot path. Python is never involved at runtime.
+//! them once per batch size, and serves the coordinator's launches
+//! from the hot path. Python is never involved at runtime.
+//!
+//! ## Capability negotiation
+//!
+//! An [`Executor`] is two things: a set of **compiled primitives**
+//! ([`Executor::prefill`], [`Executor::decode`]) and one **launch
+//! entry point** ([`Executor::launch`]) that executes a whole varlen
+//! tick described by a typed [`LaunchSpec`]. What an engine can fuse is
+//! *declared*, not probed: [`Executor::caps`] returns an
+//! [`EngineCaps`] report the scheduler reads once at construction —
+//! the planner masks out unexecutable fusion plans
+//! ([`crate::planner::Planner::apply_caps`]), the state path follows
+//! `in_place_state`, and the [`Donation`] annotation is honoured only
+//! when `donation` is set. An engine with `varlen_kernel: false`
+//! simply inherits the default `launch`, which decomposes the batch
+//! onto the compiled primitives (and prices every staged byte and
+//! device call in the [`Workspace`] counters, so the difference
+//! between a fused and an emulated engine is observable in
+//! deterministic numbers).
+//!
+//! The legacy step methods (`step_mixed`, `step_mixed_into`,
+//! `step_planned_into`, `register_variant`) survive as thin deprecated
+//! wrappers over `launch` / `caps` — see [`super::spec`] for the
+//! migration story.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -8,6 +31,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use super::artifact::Manifest;
+use super::spec::{Donation, EngineCaps, LaunchSpec, MixedBatch, Phase, Segment, StateSlabs};
 
 /// Raw per-call outputs: last-position logits plus the packed recurrent
 /// states (the coordinator scatters them back into per-sequence slots).
@@ -34,7 +58,10 @@ pub struct StepOutput {
 /// decode tick on a fused engine moves zero bytes on both counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct TrafficCounters {
+    /// Bytes copied into staging buffers (see the type docs for the
+    /// destination convention).
     pub bytes_gathered: u64,
+    /// Bytes copied into resident storage.
     pub bytes_scattered: u64,
 }
 
@@ -51,22 +78,30 @@ impl TrafficCounters {
     }
 }
 
-/// Caller-owned reusable buffers for [`Executor::step_mixed_into`].
+/// Caller-owned reusable buffers for [`Executor::launch`].
 ///
 /// The scheduler holds one `Workspace` for its whole lifetime, so the
 /// per-tick hot path performs no heap allocation once the buffers have
 /// grown to the workload's steady-state sizes: `logits` is the output
 /// surface, the private staging buffers serve the default
 /// prefill/decode decomposition (reused across every lockstep-scan
-/// position rather than reallocated per position), and `traffic` /
-/// `padded_rows` record exactly how many state bytes the call copied
-/// and how many padded rows it shipped to compiled decode batches.
+/// position rather than reallocated per position), and the counters
+/// record exactly what each launch cost — `traffic` / `padded_rows`
+/// for host state copies, `device_calls` for compiled-entry-point
+/// invocations (1 per tick on a fused varlen engine, `max(chunk)`-ish
+/// for the decomposition), and the modeled-cost pair for engines that
+/// model per-plan device behaviour.
 #[derive(Debug, Default)]
 pub struct Workspace {
     /// `[batch, vocab]` last-position logits of the most recent call.
     pub logits: Vec<f32>,
     traffic: TrafficCounters,
     padded_rows: u64,
+    /// Device launches (compiled-executable invocations) since the last
+    /// drain. A fused varlen engine records exactly one per
+    /// [`Executor::launch`]; the default decomposition records one per
+    /// compiled prefill/decode call it stages.
+    device_calls: u64,
     /// Engine-modeled device cost of the calls since the last drain
     /// (cycles / DRAM bytes under the executed fusion plan). Charged by
     /// engines that model per-plan device behaviour (the mock; see
@@ -89,6 +124,8 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Fresh workspace with empty buffers (they grow on first use and
+    /// are reused thereafter).
     pub fn new() -> Workspace {
         Workspace::default()
     }
@@ -122,10 +159,28 @@ impl Workspace {
         std::mem::take(&mut self.padded_rows)
     }
 
+    /// Record one device launch (engine implementors: call once per
+    /// compiled-executable invocation, so the fused-vs-decomposed
+    /// launch-count difference is observable in deterministic
+    /// counters).
+    pub fn record_device_call(&mut self) {
+        self.device_calls += 1;
+    }
+
+    /// Device launches since the last [`Workspace::take_device_calls`].
+    pub fn device_calls(&self) -> u64 {
+        self.device_calls
+    }
+
+    /// Drain the device-launch counter.
+    pub fn take_device_calls(&mut self) -> u64 {
+        std::mem::take(&mut self.device_calls)
+    }
+
     /// Charge modeled device cost for a call (engine implementors:
-    /// called from [`Executor::step_planned_into`] overrides with the
-    /// executed plan's analytical cycle/byte cost, so plan choice is
-    /// observable in deterministic counters).
+    /// called from [`Executor::launch`] overrides with the executed
+    /// plan's analytical cycle/byte cost, so plan choice is observable
+    /// in deterministic counters).
     pub fn record_modeled(&mut self, cycles: u64, bytes: u64) {
         self.modeled_cycles += cycles;
         self.modeled_bytes += bytes;
@@ -146,8 +201,24 @@ impl Workspace {
 /// without PJRT (see [`super::mock::MockEngine`]). Not `Send`: PJRT
 /// handles hold raw pointers, so each server worker *constructs its own
 /// engine* on its thread (see [`crate::coordinator::server::Server`]).
+///
+/// Engines implement [`Executor::manifest`], the compiled primitives
+/// ([`Executor::prefill`] / [`Executor::decode`]), and — when they can
+/// do better than the default decomposition — [`Executor::launch`] and
+/// [`Executor::caps`]. Everything else is provided.
 pub trait Executor {
+    /// The model/artifact description this engine executes.
     fn manifest(&self) -> &Manifest;
+
+    /// The engine's capability report. The default is the conservative
+    /// [`EngineCaps::baseline`] every engine satisfies by construction;
+    /// engines with a fused varlen kernel, device-side in-place state,
+    /// buffer donation, or a restricted executable plan set override
+    /// this to *declare* it — the scheduler and planner negotiate from
+    /// the report instead of probing.
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::baseline()
+    }
 
     /// Prefill a batch of `batch × prefill_len` tokens from zero state.
     fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput>;
@@ -161,21 +232,47 @@ pub trait Executor {
         ssm_state: &[f32],
     ) -> Result<StepOutput>;
 
-    /// One **mixed** invocation: a varlen batch where row `b` consumes
-    /// `lens[b]` tokens from the flat `tokens` buffer, starting from
-    /// the packed per-row states (`[layers, batch, …]`, layer-major;
-    /// zero rows mean "fresh sequence"). Returns the *last-position*
-    /// logits per row plus the final packed states — so a row with
-    /// `lens[b] == 1` is a decode step, a row with `lens[b] > 1` is a
-    /// prefill chunk, and the coordinator can schedule both in the same
-    /// engine call (continuous batching with chunked prefill).
+    /// Execute one varlen tick described by `spec` — **the** engine
+    /// entry point.
     ///
-    /// Allocating convenience wrapper around
-    /// [`Executor::step_mixed_into`]: copies the packed input states,
-    /// runs the call against a throwaway [`Workspace`], and returns a
-    /// fresh [`StepOutput`]. Kept for callers that want value semantics
-    /// (tests, one-shot tools, the scheduler's reference path); the
-    /// serving hot path uses `step_mixed_into` directly.
+    /// Each batch row `b` consumes its segment's tokens starting from
+    /// the slab row `spec.batch.segments()[b].row`, advances that row's
+    /// state **in place** in `spec.state`, and (on success) leaves its
+    /// last-position logits in `spec.ws.logits[b*vocab..]`. Rows are
+    /// guaranteed distinct by [`MixedBatch`] construction; slab shapes
+    /// are checked via [`LaunchSpec::validate`]. `spec.plan` carries
+    /// the planner's fusion-plan choice (`None` for unplanned calls):
+    /// single-mapping engines ignore it, multi-variant engines dispatch
+    /// on it, modeling engines charge its analytical cost via
+    /// [`Workspace::record_modeled`]. Every state byte the launch
+    /// copies is priced into the workspace [`TrafficCounters`], and
+    /// every compiled-executable invocation is counted via
+    /// [`Workspace::record_device_call`].
+    ///
+    /// The default implementation decomposes the batch onto the
+    /// compiled `prefill`/`decode` primitives — decode rows as padded
+    /// compiled-decode batches, full-`prefill_len` fresh rows
+    /// ([`Phase::PrefillFirst`]) through the compiled prefill, and
+    /// everything else (mid-prompt chunks) in lockstep through compiled
+    /// decode, one call per shared token position — which is correct
+    /// for any engine but costs `max(chunk)` device calls plus staging
+    /// traffic. Engines whose [`EngineCaps::varlen_kernel`] is true
+    /// override it with a real fused launch (see
+    /// [`super::mock::MockEngine`], whose allocation-free override is
+    /// verified bit-identical to this default).
+    fn launch(&self, mut spec: LaunchSpec<'_>) -> Result<()> {
+        decompose_launch(self, &mut spec)
+    }
+
+    /// One **mixed** invocation with value semantics: row `b` consumes
+    /// `lens[b]` tokens from the flat `tokens` buffer starting from the
+    /// packed per-row states; returns last-position logits plus final
+    /// packed states.
+    ///
+    /// Deprecated wrapper: copies the inputs, builds a [`LaunchSpec`]
+    /// over identity rows, runs [`Executor::launch`] against a
+    /// throwaway [`Workspace`], and repacks a [`StepOutput`].
+    #[deprecated(note = "build a LaunchSpec and call Executor::launch")]
     fn step_mixed(
         &self,
         lens: &[usize],
@@ -188,8 +285,17 @@ pub trait Executor {
         let mut conv = conv_state.to_vec();
         let mut ssm = ssm_state.to_vec();
         let rows: Vec<usize> = (0..batch).collect();
+        let segs = segments_from_slices(self.manifest(), lens, &rows, &conv, &ssm, batch);
         let mut ws = Workspace::new();
-        self.step_mixed_into(lens, tokens, &rows, &mut conv, &mut ssm, batch, &mut ws)?;
+        {
+            let spec = LaunchSpec {
+                batch: MixedBatch::new(&segs, tokens)?,
+                state: StateSlabs::new(&mut conv, &mut ssm, batch, Donation::Retain),
+                plan: None,
+                ws: &mut ws,
+            };
+            self.launch(spec)?;
+        }
         Ok(StepOutput {
             logits: std::mem::take(&mut ws.logits),
             conv_state: conv,
@@ -197,36 +303,17 @@ pub trait Executor {
         })
     }
 
-    /// One mixed invocation writing into **caller-owned storage** — the
-    /// zero-copy hot-path entry point.
+    /// One mixed invocation writing into caller-owned storage through
+    /// the legacy seven-slice convention (`lens, tokens, rows, conv,
+    /// ssm, stride, ws`).
     ///
-    /// `conv`/`ssm` are layer-major slabs of `stride` rows per layer
-    /// (`[layers, stride, …]`); batch row `b` reads its state from slab
-    /// row `rows[b]` and the final state is written back **in place** at
-    /// the same row. Last-position logits land in `ws.logits`
-    /// (`[batch, vocab]`). The coordinator's `StateArena` passes its
-    /// resident slabs straight in, so gather/scatter disappear for
-    /// ticks whose batch membership is unchanged; row indices must be
-    /// distinct (aliasing two batch rows onto one slab row is a caller
-    /// bug).
-    ///
-    /// Every state byte the call *does* copy (staging for compiled
-    /// prefill/decode entry points, padding rows) is recorded in `ws`'s
-    /// [`TrafficCounters`], so the serving metrics can report
-    /// deterministic bytes-moved numbers.
-    ///
-    /// The default implementation decomposes the batch onto the
-    /// compiled `prefill`/`decode` entry points — single-token rows run
-    /// as padded compiled-decode batches, full-`prefill_len` rows with
-    /// zero state run through the compiled prefill, and everything else
-    /// (mid-prompt chunks) advances in lockstep through compiled decode
-    /// batches, one call per token *position* shared across rows —
-    /// staging through `ws`'s reusable buffers (one set per group,
-    /// reused across every lockstep position, never reallocated per
-    /// position). That is correct for any engine; engines with a fused
-    /// varlen kernel override it (see [`super::mock::MockEngine`],
-    /// whose allocation-free override is verified bit-identical to this
-    /// default).
+    /// Deprecated wrapper: classifies each row's [`Phase`] (zero-state
+    /// scan, exactly the check the old default decomposition did),
+    /// builds a [`LaunchSpec`], and calls [`Executor::launch`] — so it
+    /// stays bit-identical to the old entry point while every engine
+    /// only implements the new surface.
+    #[deprecated(note = "build a LaunchSpec and call Executor::launch")]
+    #[allow(clippy::too_many_arguments)]
     fn step_mixed_into(
         &self,
         lens: &[usize],
@@ -237,233 +324,47 @@ pub trait Executor {
         stride: usize,
         ws: &mut Workspace,
     ) -> Result<()> {
-        let m = self.manifest();
-        let batch = lens.len();
-        let (nl, vocab, plen) = (m.n_layer, m.vocab, m.prefill_len);
-        let cp = m.d_inner * (m.d_conv - 1);
-        let sp = m.d_inner * m.d_state;
-        anyhow::ensure!(batch > 0, "empty mixed batch");
-        anyhow::ensure!(rows.len() == batch, "row plan: got {}, want {batch}", rows.len());
-        anyhow::ensure!(lens.iter().all(|&l| l >= 1), "zero-length mixed row");
-        anyhow::ensure!(rows.iter().all(|&r| r < stride), "row index past stride {stride}");
-        let total: usize = lens.iter().sum();
-        anyhow::ensure!(tokens.len() == total, "mixed tokens: got {}, want {total}", tokens.len());
         anyhow::ensure!(
-            conv.len() == nl * stride * cp,
-            "mixed conv slab: got {}, want {}",
-            conv.len(),
-            nl * stride * cp
+            rows.len() == lens.len(),
+            "row plan: got {}, want {}",
+            rows.len(),
+            lens.len()
         );
-        anyhow::ensure!(
-            ssm.len() == nl * stride * sp,
-            "mixed ssm slab: got {}, want {}",
-            ssm.len(),
-            nl * stride * sp
-        );
-
-        ws.reset_logits(batch, vocab);
-
-        // Flat-token offset of each row.
-        ws.offs.clear();
-        let mut o = 0usize;
-        for &l in lens {
-            ws.offs.push(o);
-            o += l;
-        }
-
-        // Bucket rows by which compiled entry point serves them
-        // (reading the slab before any staging mutates it).
-        ws.decode_rows.clear();
-        ws.prefill_rows.clear();
-        ws.scan_rows.clear();
-        {
-            let zero_state = |b: usize| {
-                let r = rows[b];
-                (0..nl).all(|l| {
-                    conv[(l * stride + r) * cp..(l * stride + r + 1) * cp]
-                        .iter()
-                        .all(|&x| x == 0.0)
-                        && ssm[(l * stride + r) * sp..(l * stride + r + 1) * sp]
-                            .iter()
-                            .all(|&x| x == 0.0)
-                })
-            };
-            for b in 0..batch {
-                if lens[b] == 1 {
-                    ws.decode_rows.push(b);
-                } else if lens[b] == plen && zero_state(b) {
-                    ws.prefill_rows.push(b);
-                } else {
-                    ws.scan_rows.push(b);
-                }
-            }
-        }
-
-        let row_bytes = ((cp + sp) * nl * 4) as u64;
-
-        // 1. Single-token rows → compiled decode batches, padded to a
-        //    compiled size by repeating the last row (groups of at most
-        //    the largest compiled size).
-        if !ws.decode_rows.is_empty() {
-            let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
-            let mut i = 0usize;
-            while i < ws.decode_rows.len() {
-                let n = (ws.decode_rows.len() - i).min(largest);
-                let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
-                ws.toks.clear();
-                ws.group_conv.clear();
-                ws.group_conv.resize(nl * size * cp, 0.0);
-                ws.group_ssm.clear();
-                ws.group_ssm.resize(nl * size * sp, 0.0);
-                for j in 0..size {
-                    let b = ws.decode_rows[i + j.min(n - 1)];
-                    ws.toks.push(tokens[ws.offs[b]]);
-                    copy_state_row(nl, cp, conv, stride, rows[b], &mut ws.group_conv, size, j);
-                    copy_state_row(nl, sp, ssm, stride, rows[b], &mut ws.group_ssm, size, j);
-                }
-                ws.traffic.bytes_gathered += size as u64 * row_bytes;
-                ws.padded_rows += (size - n) as u64;
-                let out = self.decode(size, &ws.toks, &ws.group_conv, &ws.group_ssm)?;
-                for j in 0..n {
-                    let b = ws.decode_rows[i + j];
-                    ws.logits[b * vocab..(b + 1) * vocab]
-                        .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
-                    copy_state_row(nl, cp, &out.conv_state, size, j, conv, stride, rows[b]);
-                    copy_state_row(nl, sp, &out.ssm_state, size, j, ssm, stride, rows[b]);
-                }
-                ws.traffic.bytes_scattered += n as u64 * row_bytes;
-                i += n;
-            }
-        }
-
-        // 2. Full-length fresh rows → the compiled prefill path (no
-        //    state gather: fresh rows start from zero inside the
-        //    compiled kernel).
-        if !ws.prefill_rows.is_empty() {
-            let largest = m.prefill_batches.iter().copied().max().unwrap_or(1);
-            let mut i = 0usize;
-            while i < ws.prefill_rows.len() {
-                let n = (ws.prefill_rows.len() - i).min(largest);
-                let size = MambaEngine::fit_batch(&m.prefill_batches, n).unwrap_or(n);
-                ws.toks.clear();
-                for j in 0..size {
-                    let b = ws.prefill_rows[i + j.min(n - 1)];
-                    ws.toks.extend_from_slice(&tokens[ws.offs[b]..ws.offs[b] + plen]);
-                }
-                let out = self.prefill(size, &ws.toks)?;
-                for j in 0..n {
-                    let b = ws.prefill_rows[i + j];
-                    ws.logits[b * vocab..(b + 1) * vocab]
-                        .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
-                    copy_state_row(nl, cp, &out.conv_state, size, j, conv, stride, rows[b]);
-                    copy_state_row(nl, sp, &out.ssm_state, size, j, ssm, stride, rows[b]);
-                }
-                ws.traffic.bytes_scattered += n as u64 * row_bytes;
-                i += n;
-            }
-        }
-
-        // 3. Everything else (mid-prompt chunks, odd lengths) advances
-        //    in *lockstep* through compiled decode batches: one decode
-        //    call per token position shared across all scan rows, so a
-        //    tick's chunk cost is max(chunk lens) device calls, not
-        //    sum(chunk lens). The scan working set and the per-group
-        //    staging buffers live in `ws` and are reused across every
-        //    position. (A compiled varlen chunk kernel — i.e. an
-        //    overridden step_mixed_into — is still the real fix for
-        //    production engines.)
-        if !ws.scan_rows.is_empty() {
-            let k = ws.scan_rows.len();
-            let max_len = ws.scan_rows.iter().map(|&b| lens[b]).max().unwrap();
-            let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
-            // Working states, packed [layers, k, per] in scan-row
-            // order, staged out of the slab once (not per position).
-            ws.scan_conv.clear();
-            ws.scan_conv.resize(nl * k * cp, 0.0);
-            ws.scan_ssm.clear();
-            ws.scan_ssm.resize(nl * k * sp, 0.0);
-            for j in 0..k {
-                let b = ws.scan_rows[j];
-                copy_state_row(nl, cp, conv, stride, rows[b], &mut ws.scan_conv, k, j);
-                copy_state_row(nl, sp, ssm, stride, rows[b], &mut ws.scan_ssm, k, j);
-            }
-            ws.traffic.bytes_gathered += k as u64 * row_bytes;
-            for t in 0..max_len {
-                // Scan-row indices still holding a token at position t.
-                ws.active.clear();
-                for j in 0..k {
-                    if t < lens[ws.scan_rows[j]] {
-                        ws.active.push(j);
-                    }
-                }
-                let mut i = 0usize;
-                while i < ws.active.len() {
-                    let n = (ws.active.len() - i).min(largest);
-                    let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
-                    ws.toks.clear();
-                    ws.group_conv.clear();
-                    ws.group_conv.resize(nl * size * cp, 0.0);
-                    ws.group_ssm.clear();
-                    ws.group_ssm.resize(nl * size * sp, 0.0);
-                    for jj in 0..size {
-                        let j = ws.active[i + jj.min(n - 1)];
-                        ws.toks.push(tokens[ws.offs[ws.scan_rows[j]] + t]);
-                        copy_state_row(nl, cp, &ws.scan_conv, k, j, &mut ws.group_conv, size, jj);
-                        copy_state_row(nl, sp, &ws.scan_ssm, k, j, &mut ws.group_ssm, size, jj);
-                    }
-                    ws.traffic.bytes_gathered += size as u64 * row_bytes;
-                    ws.padded_rows += (size - n) as u64;
-                    let out = self.decode(size, &ws.toks, &ws.group_conv, &ws.group_ssm)?;
-                    for jj in 0..n {
-                        let j = ws.active[i + jj];
-                        copy_state_row(nl, cp, &out.conv_state, size, jj, &mut ws.scan_conv, k, j);
-                        copy_state_row(nl, sp, &out.ssm_state, size, jj, &mut ws.scan_ssm, k, j);
-                        if t + 1 == lens[ws.scan_rows[j]] {
-                            let b = ws.scan_rows[j];
-                            ws.logits[b * vocab..(b + 1) * vocab]
-                                .copy_from_slice(&out.logits[jj * vocab..(jj + 1) * vocab]);
-                        }
-                    }
-                    // Engine output → scan working set (staging).
-                    ws.traffic.bytes_gathered += n as u64 * row_bytes;
-                    i += n;
-                }
-            }
-            for j in 0..k {
-                let b = ws.scan_rows[j];
-                copy_state_row(nl, cp, &ws.scan_conv, k, j, conv, stride, rows[b]);
-                copy_state_row(nl, sp, &ws.scan_ssm, k, j, ssm, stride, rows[b]);
-            }
-            ws.traffic.bytes_scattered += k as u64 * row_bytes;
-        }
-
-        Ok(())
+        let segs = segments_from_slices(self.manifest(), lens, rows, conv, ssm, stride);
+        let spec = LaunchSpec {
+            batch: MixedBatch::new(&segs, tokens)?,
+            state: StateSlabs::new(conv, ssm, stride, Donation::Retain),
+            plan: None,
+            ws,
+        };
+        self.launch(spec)
     }
 
-    /// Announce a candidate fusion plan the coordinator may select at
-    /// runtime (called once per candidate at scheduler construction).
-    /// Engines that compile one executable set per variant do so here;
-    /// the default is a no-op — a single-mapping engine simply executes
-    /// its one compiled mapping whatever the
-    /// [`PlanChoice`](crate::planner::PlanChoice) says.
+    /// Announce a candidate fusion plan (legacy negotiation: the
+    /// scheduler used to announce every candidate and treat `Err` as
+    /// "unavailable").
+    ///
+    /// Deprecated: engines now *declare* per-plan availability in
+    /// [`EngineCaps::plans`] and the planner masks its candidate set
+    /// from the report — no trial-and-error. The default accepts
+    /// everything, matching [`EngineCaps::baseline`].
+    #[deprecated(note = "declare per-plan availability in Executor::caps().plans")]
     fn register_variant(&mut self, _choice: crate::planner::PlanChoice) -> Result<()> {
         Ok(())
     }
 
-    /// [`Executor::step_mixed_into`] with an explicit fusion-plan
-    /// choice — the planner-aware hot-path entry point the scheduler
-    /// calls every tick.
+    /// The legacy seven-slice mixed call with an explicit fusion-plan
+    /// choice.
     ///
-    /// The default implementation ignores the choice and runs the
-    /// plain mixed call, which keeps token outputs bit-identical across
-    /// plan choices by construction for every engine. Engines with
-    /// per-variant executables dispatch on `choice`; engines that model
-    /// device behaviour (the mock) additionally charge the plan's
-    /// analytical cost into the workspace's modeled counters.
+    /// Deprecated wrapper: identical to [`Executor::step_mixed_into`]
+    /// except the built [`LaunchSpec`] carries `Some(choice)`, so
+    /// modeling engines charge the plan's analytical cost exactly as
+    /// the old entry point did.
+    #[deprecated(note = "build a LaunchSpec (with plan: Some(choice)) and call Executor::launch")]
     #[allow(clippy::too_many_arguments)]
     fn step_planned_into(
         &self,
-        _choice: crate::planner::PlanChoice,
+        choice: crate::planner::PlanChoice,
         lens: &[usize],
         tokens: &[i32],
         rows: &[usize],
@@ -472,8 +373,253 @@ pub trait Executor {
         stride: usize,
         ws: &mut Workspace,
     ) -> Result<()> {
-        self.step_mixed_into(lens, tokens, rows, conv, ssm, stride, ws)
+        anyhow::ensure!(
+            rows.len() == lens.len(),
+            "row plan: got {}, want {}",
+            rows.len(),
+            lens.len()
+        );
+        let segs = segments_from_slices(self.manifest(), lens, rows, conv, ssm, stride);
+        let spec = LaunchSpec {
+            batch: MixedBatch::new(&segs, tokens)?,
+            state: StateSlabs::new(conv, ssm, stride, Donation::Retain),
+            plan: Some(choice),
+            ws,
+        };
+        self.launch(spec)
     }
+}
+
+/// Build the per-row [`Segment`]s for a legacy raw-slice call:
+/// `len == 1` rows are decode steps; `len == prefill_len` rows are
+/// classified [`Phase::PrefillFirst`] iff their slab state is all-zero
+/// (the same scan, on the same rows, the old default decomposition
+/// performed — other lengths route to the lockstep scan whatever their
+/// state, so they skip the scan and declare [`Phase::PrefillCont`],
+/// which makes no zero-state claim). Out-of-range rows are classified
+/// without a state scan and rejected later by [`LaunchSpec::validate`].
+fn segments_from_slices(
+    m: &Manifest,
+    lens: &[usize],
+    rows: &[usize],
+    conv: &[f32],
+    ssm: &[f32],
+    stride: usize,
+) -> Vec<Segment> {
+    let (nl, cp, sp) = (m.n_layer, m.d_inner * (m.d_conv - 1), m.d_inner * m.d_state);
+    let zero_state = |r: usize| {
+        (0..nl).all(|l| {
+            let c0 = (l * stride + r) * cp;
+            let s0 = (l * stride + r) * sp;
+            conv.get(c0..c0 + cp).map_or(false, |c| c.iter().all(|&x| x == 0.0))
+                && ssm.get(s0..s0 + sp).map_or(false, |s| s.iter().all(|&x| x == 0.0))
+        })
+    };
+    lens.iter()
+        .zip(rows)
+        .map(|(&len, &row)| {
+            let phase = if len == 1 {
+                Phase::Decode
+            } else if len == m.prefill_len && row < stride && zero_state(row) {
+                Phase::PrefillFirst
+            } else {
+                Phase::PrefillCont
+            };
+            Segment { len, row, phase }
+        })
+        .collect()
+}
+
+/// The default [`Executor::launch`] implementation: decompose a varlen
+/// batch onto the compiled `prefill`/`decode` primitives.
+///
+/// Decode rows run as padded compiled-decode batches;
+/// full-`prefill_len` [`Phase::PrefillFirst`] rows run through the
+/// compiled prefill (fresh rows start from zero inside the compiled
+/// kernel — declared, so no state scan is needed); everything else
+/// (mid-prompt chunks, odd lengths) advances in **lockstep** through
+/// compiled decode batches, one device call per token position shared
+/// across rows — so a tick's chunk cost is `max(chunk lens)` device
+/// calls, not `sum(chunk lens)`. All staging goes through the
+/// workspace's reusable buffers, every copied byte lands in the
+/// traffic counters, and every compiled call bumps `device_calls`.
+/// (A compiled varlen chunk kernel — an engine whose caps declare
+/// `varlen_kernel` and whose `launch` override uses it — is still the
+/// real fix for production engines.)
+pub(crate) fn decompose_launch<E: Executor + ?Sized>(
+    engine: &E,
+    spec: &mut LaunchSpec<'_>,
+) -> Result<()> {
+    let m = engine.manifest();
+    spec.validate(m)?;
+    let batch = spec.batch;
+    let segs = batch.segments();
+    let toks_flat = batch.tokens();
+    let nb = batch.rows();
+    let (nl, vocab, plen) = (m.n_layer, m.vocab, m.prefill_len);
+    let cp = m.d_inner * (m.d_conv - 1);
+    let sp = m.d_inner * m.d_state;
+    let stride = spec.state.stride();
+    let ws = &mut *spec.ws;
+    let (conv, ssm) = spec.state.slabs_mut();
+
+    ws.reset_logits(nb, vocab);
+    batch.fill_offsets(&mut ws.offs);
+
+    // Bucket rows by which compiled entry point serves them — from the
+    // declared phases (the legacy surface re-derived PrefillFirst by
+    // scanning state memory; the typed batch declares it).
+    ws.decode_rows.clear();
+    ws.prefill_rows.clear();
+    ws.scan_rows.clear();
+    for (b, seg) in segs.iter().enumerate() {
+        match seg.phase {
+            Phase::Decode => ws.decode_rows.push(b),
+            Phase::PrefillFirst if seg.len == plen => ws.prefill_rows.push(b),
+            _ => ws.scan_rows.push(b),
+        }
+    }
+
+    let row_bytes = ((cp + sp) * nl * 4) as u64;
+
+    // 1. Single-token rows → compiled decode batches, padded to a
+    //    compiled size by repeating the last row (groups of at most
+    //    the largest compiled size).
+    if !ws.decode_rows.is_empty() {
+        let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
+        let mut i = 0usize;
+        while i < ws.decode_rows.len() {
+            let n = (ws.decode_rows.len() - i).min(largest);
+            let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
+            ws.toks.clear();
+            ws.group_conv.clear();
+            ws.group_conv.resize(nl * size * cp, 0.0);
+            ws.group_ssm.clear();
+            ws.group_ssm.resize(nl * size * sp, 0.0);
+            for j in 0..size {
+                let b = ws.decode_rows[i + j.min(n - 1)];
+                ws.toks.push(toks_flat[ws.offs[b]]);
+                copy_state_row(nl, cp, conv, stride, segs[b].row, &mut ws.group_conv, size, j);
+                copy_state_row(nl, sp, ssm, stride, segs[b].row, &mut ws.group_ssm, size, j);
+            }
+            ws.traffic.bytes_gathered += size as u64 * row_bytes;
+            ws.padded_rows += (size - n) as u64;
+            ws.device_calls += 1;
+            let out = engine.decode(size, &ws.toks, &ws.group_conv, &ws.group_ssm)?;
+            for j in 0..n {
+                let b = ws.decode_rows[i + j];
+                ws.logits[b * vocab..(b + 1) * vocab]
+                    .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
+                copy_state_row(nl, cp, &out.conv_state, size, j, conv, stride, segs[b].row);
+                copy_state_row(nl, sp, &out.ssm_state, size, j, ssm, stride, segs[b].row);
+            }
+            ws.traffic.bytes_scattered += n as u64 * row_bytes;
+            i += n;
+        }
+    }
+
+    // 2. Full-length fresh rows → the compiled prefill path (no state
+    //    gather: fresh rows start from zero inside the compiled
+    //    kernel).
+    if !ws.prefill_rows.is_empty() {
+        let largest = m.prefill_batches.iter().copied().max().unwrap_or(1);
+        let mut i = 0usize;
+        while i < ws.prefill_rows.len() {
+            let n = (ws.prefill_rows.len() - i).min(largest);
+            let size = MambaEngine::fit_batch(&m.prefill_batches, n).unwrap_or(n);
+            ws.toks.clear();
+            for j in 0..size {
+                let b = ws.prefill_rows[i + j.min(n - 1)];
+                ws.toks.extend_from_slice(&toks_flat[ws.offs[b]..ws.offs[b] + plen]);
+            }
+            ws.device_calls += 1;
+            let out = engine.prefill(size, &ws.toks)?;
+            for j in 0..n {
+                let b = ws.prefill_rows[i + j];
+                ws.logits[b * vocab..(b + 1) * vocab]
+                    .copy_from_slice(&out.logits[j * vocab..(j + 1) * vocab]);
+                copy_state_row(nl, cp, &out.conv_state, size, j, conv, stride, segs[b].row);
+                copy_state_row(nl, sp, &out.ssm_state, size, j, ssm, stride, segs[b].row);
+            }
+            ws.traffic.bytes_scattered += n as u64 * row_bytes;
+            i += n;
+        }
+    }
+
+    // 3. Everything else (mid-prompt chunks, odd lengths) advances in
+    //    *lockstep* through compiled decode batches: one decode call
+    //    per token position shared across all scan rows, so a tick's
+    //    chunk cost is max(chunk lens) device calls, not
+    //    sum(chunk lens). The scan working set and the per-group
+    //    staging buffers live in `ws` and are reused across every
+    //    position.
+    if !ws.scan_rows.is_empty() {
+        let k = ws.scan_rows.len();
+        let max_len = ws.scan_rows.iter().map(|&b| segs[b].len).max().unwrap();
+        let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
+        // Working states, packed [layers, k, per] in scan-row order,
+        // staged out of the slab once (not per position).
+        ws.scan_conv.clear();
+        ws.scan_conv.resize(nl * k * cp, 0.0);
+        ws.scan_ssm.clear();
+        ws.scan_ssm.resize(nl * k * sp, 0.0);
+        for j in 0..k {
+            let b = ws.scan_rows[j];
+            copy_state_row(nl, cp, conv, stride, segs[b].row, &mut ws.scan_conv, k, j);
+            copy_state_row(nl, sp, ssm, stride, segs[b].row, &mut ws.scan_ssm, k, j);
+        }
+        ws.traffic.bytes_gathered += k as u64 * row_bytes;
+        for t in 0..max_len {
+            // Scan-row indices still holding a token at position t.
+            ws.active.clear();
+            for j in 0..k {
+                if t < segs[ws.scan_rows[j]].len {
+                    ws.active.push(j);
+                }
+            }
+            let mut i = 0usize;
+            while i < ws.active.len() {
+                let n = (ws.active.len() - i).min(largest);
+                let size = MambaEngine::fit_batch(&m.decode_batches, n).unwrap_or(n);
+                ws.toks.clear();
+                ws.group_conv.clear();
+                ws.group_conv.resize(nl * size * cp, 0.0);
+                ws.group_ssm.clear();
+                ws.group_ssm.resize(nl * size * sp, 0.0);
+                for jj in 0..size {
+                    let j = ws.active[i + jj.min(n - 1)];
+                    ws.toks.push(toks_flat[ws.offs[ws.scan_rows[j]] + t]);
+                    copy_state_row(nl, cp, &ws.scan_conv, k, j, &mut ws.group_conv, size, jj);
+                    copy_state_row(nl, sp, &ws.scan_ssm, k, j, &mut ws.group_ssm, size, jj);
+                }
+                ws.traffic.bytes_gathered += size as u64 * row_bytes;
+                ws.padded_rows += (size - n) as u64;
+                ws.device_calls += 1;
+                let out = engine.decode(size, &ws.toks, &ws.group_conv, &ws.group_ssm)?;
+                for jj in 0..n {
+                    let j = ws.active[i + jj];
+                    copy_state_row(nl, cp, &out.conv_state, size, jj, &mut ws.scan_conv, k, j);
+                    copy_state_row(nl, sp, &out.ssm_state, size, jj, &mut ws.scan_ssm, k, j);
+                    if t + 1 == segs[ws.scan_rows[j]].len {
+                        let b = ws.scan_rows[j];
+                        ws.logits[b * vocab..(b + 1) * vocab]
+                            .copy_from_slice(&out.logits[jj * vocab..(jj + 1) * vocab]);
+                    }
+                }
+                // Engine output → scan working set (staging).
+                ws.traffic.bytes_gathered += n as u64 * row_bytes;
+                i += n;
+            }
+        }
+        for j in 0..k {
+            let b = ws.scan_rows[j];
+            copy_state_row(nl, cp, &ws.scan_conv, k, j, conv, stride, segs[b].row);
+            copy_state_row(nl, sp, &ws.scan_ssm, k, j, ssm, stride, segs[b].row);
+        }
+        ws.traffic.bytes_scattered += k as u64 * row_bytes;
+    }
+
+    Ok(())
 }
 
 /// Copy one sequence's per-layer state row between packed layer-major
@@ -553,6 +699,16 @@ impl MambaEngine {
 impl Executor for MambaEngine {
     fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Honest report for today's artifact set: compiled per-shape
+    /// prefill/decode executables only, so varlen ticks go through the
+    /// default decomposition and no buffer donation is wired up yet.
+    /// The two open ROADMAP items are exactly the two flags to flip: a
+    /// varlen chunk executable (`varlen_kernel: true` + a `launch`
+    /// override) and PJRT input/output aliasing (`donation: true`).
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::baseline()
     }
 
     fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
@@ -693,10 +849,16 @@ mod tests {
         ws.traffic.bytes_gathered = 8;
         ws.traffic.bytes_scattered = 4;
         ws.padded_rows = 2;
+        ws.record_device_call();
+        ws.record_device_call();
+        ws.record_device_call();
         let t = ws.take_traffic();
         assert_eq!(t.total(), 12);
         assert_eq!(ws.traffic(), TrafficCounters::default());
         assert_eq!(ws.take_padded_rows(), 2);
         assert_eq!(ws.padded_rows(), 0);
+        assert_eq!(ws.device_calls(), 3);
+        assert_eq!(ws.take_device_calls(), 3);
+        assert_eq!(ws.device_calls(), 0);
     }
 }

@@ -5,24 +5,34 @@
 //! artifacts, no PJRT), including the recurrence-consistency invariant:
 //! prefill(t[..k]) + decode over t[k..] ≡ prefill(t).
 //!
-//! The mock plays the role of a **fused varlen kernel**: its
-//! [`Executor::step_mixed_into`] override advances every row in place
-//! inside the caller's state slab, computes logits only for each row's
-//! *final* position, and performs **zero heap allocation** — the
-//! behaviour a real fused engine (and the paper's resident-intermediate
-//! fusion) provides, which the default trait decomposition merely
-//! emulates through compiled prefill/decode staging.
+//! The mock plays the role of a **fused varlen kernel**: its default
+//! [`EngineCaps`] declare `varlen_kernel` (plus in-place state and
+//! donation), and its [`Executor::launch`] override advances every row
+//! in place inside the caller's state slab, computes logits only for
+//! each row's *final* position, performs **zero heap allocation**, and
+//! records exactly **one device call per launch** — the behaviour a
+//! real fused engine (and the paper's resident-intermediate fusion)
+//! provides, which the default trait decomposition merely emulates
+//! through compiled prefill/decode staging. Construct it with
+//! [`MockEngine::with_caps`] and `varlen_kernel: false` to force that
+//! same engine through the default decomposition — the toggle the
+//! engine-API tests and the `BENCH_engine_api.json` gate flip to price
+//! fused-vs-emulated on deterministic counters (1 device call per tick
+//! vs `max(chunk)`-ish, zero staged bytes vs gather/scatter per
+//! group).
 //!
 //! The mock also plays the role of a **multi-variant engine** for the
-//! planner: its [`Executor::step_planned_into`] override runs the same
-//! bit-identical math whatever the plan (so token outputs can never
-//! depend on plan choice) but charges the tick with the chosen plan's
-//! cost from the analytical accelerator model — at the same
-//! power-of-two shape granularity the planner buckets on, mirroring how
-//! a real engine pads to compiled batch shapes. Variant choice is
-//! thereby observable in the deterministic `modeled_cycles` /
-//! `modeled_bytes` workspace counters, which is what the planner gates
-//! in tests, benches and CI compare.
+//! planner: whatever the executed plan, `launch` runs the same
+//! bit-identical math (so token outputs can never depend on plan
+//! choice) but charges the tick with the chosen plan's cost from the
+//! analytical accelerator model — at the same power-of-two shape
+//! granularity the planner buckets on, mirroring how a real engine
+//! pads to compiled batch shapes. Variant choice is thereby observable
+//! in the deterministic `modeled_cycles` / `modeled_bytes` workspace
+//! counters, which is what the planner gates in tests, benches and CI
+//! compare. Unplanned launches (`spec.plan == None`, i.e. the legacy
+//! unplanned wrappers) charge nothing, exactly like the legacy
+//! surface.
 
 use std::cell::RefCell;
 
@@ -31,7 +41,8 @@ use anyhow::Result;
 use crate::planner::{CostModel, PlanBucket, PlanChoice};
 
 use super::artifact::Manifest;
-use super::engine::{Executor, StepOutput, Workspace};
+use super::engine::{decompose_launch, Executor, StepOutput, Workspace};
+use super::spec::{EngineCaps, LaunchSpec};
 
 /// Mock model: per-layer decaying recurrences over tiny state vectors;
 /// logits depend on the whole history through the states.
@@ -41,12 +52,25 @@ pub struct MockEngine {
     /// the same default model the serving planner predicts with, so
     /// predicted and modeled counters are directly comparable.
     profile: RefCell<CostModel>,
-    /// Plans announced via [`Executor::register_variant`].
-    registered: Vec<PlanChoice>,
+    /// The capability report [`Executor::caps`] returns (defaults to
+    /// [`EngineCaps::full`]; see [`MockEngine::with_caps`]).
+    caps: EngineCaps,
 }
 
 impl MockEngine {
+    /// A fully-capable mock: fused varlen launches, in-place state,
+    /// donation honoured, every plan executable.
     pub fn new() -> MockEngine {
+        MockEngine::with_caps(EngineCaps::full())
+    }
+
+    /// A mock with an explicit capability report — the test toggle.
+    /// With `varlen_kernel: false` the engine's `launch` delegates to
+    /// the default trait decomposition (compiled prefill/decode
+    /// staging), so the *same* engine can be priced fused vs emulated
+    /// on the same workload; with a restricted `plans` mask the
+    /// planner's capability negotiation is exercised end to end.
+    pub fn with_caps(caps: EngineCaps) -> MockEngine {
         MockEngine {
             manifest: Manifest {
                 model: "mock".into(),
@@ -62,13 +86,8 @@ impl MockEngine {
                 dir: std::path::PathBuf::from("/nonexistent"),
             },
             profile: RefCell::new(CostModel::default_serving()),
-            registered: Vec::new(),
+            caps,
         }
-    }
-
-    /// Plans announced so far (tests / diagnostics).
-    pub fn registered_variants(&self) -> &[PlanChoice] {
-        &self.registered
     }
 
     /// Conv-state elements per (layer, sequence).
@@ -132,6 +151,10 @@ impl Executor for MockEngine {
         &self.manifest
     }
 
+    fn caps(&self) -> EngineCaps {
+        self.caps
+    }
+
     fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
         let l = self.manifest.prefill_len;
         anyhow::ensure!(tokens.len() == batch * l, "token shape");
@@ -172,88 +195,64 @@ impl Executor for MockEngine {
         Ok(StepOutput { logits, conv_state: conv, ssm_state: ssm })
     }
 
-    /// Native fused varlen batch over caller-owned state slabs: one
-    /// scan over all rows, advancing each row **in place** at
-    /// `rows[b]`, logits computed only for final positions, zero heap
-    /// allocation — the fused kernel the default trait decomposition
-    /// emulates (tests pin the two bit-identical).
-    fn step_mixed_into(
-        &self,
-        lens: &[usize],
-        tokens: &[i32],
-        rows: &[usize],
-        conv: &mut [f32],
-        ssm: &mut [f32],
-        stride: usize,
-        ws: &mut Workspace,
-    ) -> Result<()> {
-        let batch = lens.len();
-        let vocab = self.manifest.vocab;
-        let (nl, cp, sp) =
-            (self.manifest.n_layer, self.conv_per_layer(), self.ssm_per_layer());
-        anyhow::ensure!(batch > 0, "empty mixed batch");
-        anyhow::ensure!(rows.len() == batch, "row plan shape");
-        anyhow::ensure!(lens.iter().all(|&l| l >= 1), "zero-length mixed row");
-        anyhow::ensure!(rows.iter().all(|&r| r < stride), "row index past stride {stride}");
-        anyhow::ensure!(tokens.len() == lens.iter().sum::<usize>(), "token shape");
-        anyhow::ensure!(
-            conv.len() == nl * stride * cp && ssm.len() == nl * stride * sp,
-            "state slab shape"
-        );
-        ws.reset_logits(batch, vocab);
-        let mut off = 0usize;
-        for (b, &len) in lens.iter().enumerate() {
-            let row = rows[b];
-            let mut summary = 0f32;
-            let mut last = 0i32;
-            for &t in &tokens[off..off + len] {
-                summary = self.advance(stride, row, t, conv, ssm);
-                last = t;
+    /// Native fused varlen launch over caller-owned state slabs: one
+    /// scan over all rows, advancing each row **in place** at its
+    /// segment's slab row, logits computed only for final positions,
+    /// zero heap allocation, one recorded device call — the fused
+    /// kernel the default trait decomposition emulates (tests pin the
+    /// two bit-identical). When this engine's caps say
+    /// `varlen_kernel: false`, the launch delegates to that default
+    /// decomposition instead, so fused-vs-emulated is a caps toggle on
+    /// the same engine. Planned launches additionally charge the
+    /// chosen plan's analytical cost: single-token rows as a batched
+    /// decode step with per-step state I/O, multi-token rows as a
+    /// prefill of their total token count, both at power-of-two
+    /// compiled-shape granularity.
+    fn launch(&self, mut spec: LaunchSpec<'_>) -> Result<()> {
+        spec.validate(self.manifest())?;
+        // Price the plan before executing (the estimate only depends on
+        // the batch shape; the charge lands only on success, below).
+        let est = spec.plan.map(|choice| {
+            let decode_rows = spec.batch.decode_rows();
+            let prefill_tokens: usize =
+                spec.batch.segments().iter().map(|s| s.len).filter(|&l| l > 1).sum();
+            let bucket = PlanBucket::of(decode_rows, prefill_tokens);
+            self.profile.borrow_mut().tick_cost(choice, bucket)
+        });
+        if self.caps.varlen_kernel {
+            let batch = spec.batch;
+            let vocab = self.manifest.vocab;
+            let stride = spec.state.stride();
+            let ws = &mut *spec.ws;
+            let (conv, ssm) = spec.state.slabs_mut();
+            ws.reset_logits(batch.rows(), vocab);
+            for (b, seg, toks) in batch.iter() {
+                let mut summary = 0f32;
+                let mut last = 0i32;
+                for &t in toks {
+                    summary = self.advance(stride, seg.row, t, conv, ssm);
+                    last = t;
+                }
+                self.logits_into(summary, last, &mut ws.logits[b * vocab..(b + 1) * vocab]);
             }
-            self.logits_into(summary, last, &mut ws.logits[b * vocab..(b + 1) * vocab]);
-            off += len;
+            ws.record_device_call();
+        } else {
+            decompose_launch(self, &mut spec)?;
         }
-        Ok(())
-    }
-
-    fn register_variant(&mut self, choice: PlanChoice) -> Result<()> {
-        if !self.registered.contains(&choice) {
-            self.registered.push(choice);
+        if let Some(est) = est {
+            spec.ws.record_modeled(est.cycles, est.bytes);
         }
-        Ok(())
-    }
-
-    /// Execute the tick (bit-identical to [`Executor::step_mixed_into`]
-    /// — plan choice can never change tokens) and charge the chosen
-    /// plan's analytical cost: single-token rows as a batched decode
-    /// step with per-step state I/O, multi-token rows as a prefill of
-    /// their total token count, both at power-of-two compiled-shape
-    /// granularity.
-    fn step_planned_into(
-        &self,
-        choice: PlanChoice,
-        lens: &[usize],
-        tokens: &[i32],
-        rows: &[usize],
-        conv: &mut [f32],
-        ssm: &mut [f32],
-        stride: usize,
-        ws: &mut Workspace,
-    ) -> Result<()> {
-        self.step_mixed_into(lens, tokens, rows, conv, ssm, stride, ws)?;
-        let decode_rows = lens.iter().filter(|&&l| l == 1).count();
-        let prefill_tokens: usize = lens.iter().filter(|&&l| l > 1).sum();
-        let bucket = PlanBucket::of(decode_rows, prefill_tokens);
-        let est = self.profile.borrow_mut().tick_cost(choice, bucket);
-        ws.record_modeled(est.cycles, est.bytes);
         Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the legacy wrappers are exercised on purpose
+
     use super::*;
     use crate::runtime::engine::argmax_rows;
+    use crate::runtime::spec::{Donation, MixedBatch, Phase, Segment, StateSlabs};
 
     #[test]
     fn prefill_then_decode_matches_manual_stepping() {
@@ -312,7 +311,8 @@ mod tests {
 
     #[test]
     fn step_mixed_fresh_full_rows_equal_prefill() {
-        // A mixed batch of full-length zero-state rows IS a prefill.
+        // A mixed batch of full-length zero-state rows IS a prefill
+        // (exercised through the deprecated value-semantics wrapper).
         let e = MockEngine::new();
         let l = e.manifest().prefill_len;
         let toks: Vec<i32> = (0..2 * l as i32).collect();
@@ -350,11 +350,11 @@ mod tests {
     }
 
     #[test]
-    fn step_mixed_into_respects_row_plan_and_stride() {
-        // The resident-slab call with a sparse row plan (stride wider
-        // than the batch, rows out of order) must agree bit-exactly
-        // with the packed step_mixed wrapper, touch exactly the planned
-        // rows, and leave every other slab row untouched.
+    fn launch_respects_row_plan_and_stride() {
+        // A direct LaunchSpec with a sparse row plan (stride wider than
+        // the batch, rows out of order) must agree bit-exactly with the
+        // packed step_mixed wrapper, touch exactly the planned rows,
+        // and leave every other slab row untouched.
         let e = MockEngine::new();
         let m = e.manifest().clone();
         let (cp, sp) = (e.conv_per_layer(), e.ssm_per_layer());
@@ -367,7 +367,7 @@ mod tests {
         let seed_toks: Vec<i32> = (0..3 * m.prefill_len as i32).collect();
         let seeded = e.prefill(3, &seed_toks).unwrap();
 
-        // Packed reference.
+        // Packed reference through the deprecated wrapper.
         let want = e
             .step_mixed(&lens, &tokens, &seeded.conv_state[..], &seeded.ssm_state[..])
             .unwrap();
@@ -384,9 +384,19 @@ mod tests {
                 nl, sp, &seeded.ssm_state, 3, src, &mut ssm, stride, row,
             );
         }
+        let segs = [
+            Segment { len: 3, row: 4, phase: Phase::PrefillCont },
+            Segment { len: 1, row: 0, phase: Phase::Decode },
+            Segment { len: 2, row: 2, phase: Phase::PrefillCont },
+        ];
         let mut ws = Workspace::new();
-        e.step_mixed_into(&lens, &tokens, &rows, &mut conv, &mut ssm, stride, &mut ws)
-            .unwrap();
+        e.launch(LaunchSpec {
+            batch: MixedBatch::new(&segs, &tokens).unwrap(),
+            state: StateSlabs::new(&mut conv, &mut ssm, stride, Donation::DonateInPlace),
+            plan: None,
+            ws: &mut ws,
+        })
+        .unwrap();
         assert_eq!(ws.logits, want.logits);
         // Planned rows carry the final states; unused rows keep poison.
         for (src, &row) in rows.iter().enumerate() {
@@ -408,42 +418,26 @@ mod tests {
                     .all(|&x| x == -9.0));
             }
         }
-        // The fused override stages nothing: zero bytes moved.
+        // The fused launch stages nothing and runs one device call.
         assert_eq!(ws.traffic().total(), 0);
         assert_eq!(ws.padded_rows(), 0);
-    }
-
-    /// Delegates everything except `step_mixed_into`, so calls fall
-    /// through to the Executor trait's default decomposition.
-    struct DefaultMixed(MockEngine);
-
-    impl Executor for DefaultMixed {
-        fn manifest(&self) -> &Manifest {
-            self.0.manifest()
-        }
-        fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
-            self.0.prefill(batch, tokens)
-        }
-        fn decode(
-            &self,
-            batch: usize,
-            tokens: &[i32],
-            conv: &[f32],
-            ssm: &[f32],
-        ) -> Result<StepOutput> {
-            self.0.decode(batch, tokens, conv, ssm)
-        }
+        assert_eq!(ws.take_device_calls(), 1);
+        // Unplanned launch: no modeled charge.
+        assert_eq!(ws.take_modeled(), (0, 0));
     }
 
     #[test]
     fn default_step_mixed_matches_native_override() {
         // The trait's default decomposition (compiled prefill/decode
-        // calls) and the mock's fused varlen override must agree
-        // bit-exactly on a batch mixing every row kind: a fresh
-        // full-length prefill, a mid-prompt chunk with carried state,
-        // and two decode rows.
+        // calls, forced via a caps toggle on the same engine type) and
+        // the mock's fused varlen launch must agree bit-exactly on a
+        // batch mixing every row kind: a fresh full-length prefill, a
+        // mid-prompt chunk with carried state, and two decode rows.
         let native = MockEngine::new();
-        let deflt = DefaultMixed(MockEngine::new());
+        let deflt = MockEngine::with_caps(EngineCaps {
+            varlen_kernel: false,
+            ..EngineCaps::full()
+        });
         let m = native.manifest().clone();
         let l = m.prefill_len;
         let (cp, sp) = (m.conv_state_elems() / m.n_layer, m.ssm_state_elems() / m.n_layer);
@@ -478,15 +472,18 @@ mod tests {
     }
 
     #[test]
-    fn default_decomposition_counts_staging_traffic() {
+    fn default_decomposition_counts_staging_traffic_and_device_calls() {
         // The default path stages through compiled entry points, so its
         // traffic counters must be non-zero for a batch that carries
-        // state — the quantity the resident hot path eliminates.
-        let deflt = DefaultMixed(MockEngine::new());
+        // state — the quantity the resident hot path eliminates — and
+        // its device-call count exposes the compiled-group structure.
+        let deflt =
+            MockEngine::with_caps(EngineCaps { varlen_kernel: false, ..EngineCaps::full() });
         let m = deflt.manifest().clone();
         let (cp, sp) = (m.conv_state_elems() / m.n_layer, m.ssm_state_elems() / m.n_layer);
         let batch = 2usize;
-        let seeded = deflt.0.prefill(2, &(0..2 * m.prefill_len as i32).collect::<Vec<_>>()).unwrap();
+        let seeded =
+            deflt.prefill(2, &(0..2 * m.prefill_len as i32).collect::<Vec<_>>()).unwrap();
         let mut conv = seeded.conv_state.clone();
         let mut ssm = seeded.ssm_state.clone();
         let rows: Vec<usize> = (0..batch).collect();
@@ -496,14 +493,16 @@ mod tests {
             .unwrap();
         let t = ws.traffic();
         // Two decode rows fit a compiled batch of 2: gather 2 rows in,
-        // scatter 2 rows out.
+        // scatter 2 rows out, one compiled decode call.
         let row_bytes = (m.n_layer * (cp + sp) * 4) as u64;
         assert_eq!(t.bytes_gathered, 2 * row_bytes);
         assert_eq!(t.bytes_scattered, 2 * row_bytes);
         assert_eq!(ws.padded_rows(), 0);
+        assert_eq!(ws.take_device_calls(), 1);
 
         // Three decode rows pad up to the compiled batch of 4.
-        let seeded3 = deflt.0.prefill(3, &(0..3 * m.prefill_len as i32).collect::<Vec<_>>()).unwrap();
+        let seeded3 =
+            deflt.prefill(3, &(0..3 * m.prefill_len as i32).collect::<Vec<_>>()).unwrap();
         let mut conv3 = seeded3.conv_state.clone();
         let mut ssm3 = seeded3.ssm_state.clone();
         let rows3: Vec<usize> = (0..3).collect();
@@ -514,10 +513,48 @@ mod tests {
         assert_eq!(ws3.padded_rows(), 1);
         assert_eq!(ws3.traffic().bytes_gathered, 4 * row_bytes);
         assert_eq!(ws3.traffic().bytes_scattered, 3 * row_bytes);
+        assert_eq!(ws3.take_device_calls(), 1);
     }
 
     #[test]
-    fn planned_step_is_bit_identical_across_plans_but_charges_differently() {
+    fn decomposition_lockstep_costs_max_chunk_device_calls() {
+        // One mid-prompt chunk of length L plus decode rows: the
+        // decomposition pays max(chunk) lockstep decode calls for the
+        // scan plus one call for the decode group, where the fused
+        // launch pays exactly 1 — the engine-API gate's core claim.
+        let fused = MockEngine::new();
+        let deflt =
+            MockEngine::with_caps(EngineCaps { varlen_kernel: false, ..EngineCaps::full() });
+        let m = fused.manifest().clone();
+        let (cp, sp) = (m.conv_state_elems() / m.n_layer, m.ssm_state_elems() / m.n_layer);
+        let seeded =
+            fused.prefill(4, &(0..4 * m.prefill_len as i32).collect::<Vec<_>>()).unwrap();
+        let chunk_len = 5usize;
+        let lens = [chunk_len, 1, 1, 1];
+        let tokens: Vec<i32> = (0..(chunk_len + 3) as i32).collect();
+        let rows: Vec<usize> = (0..4).collect();
+        let run = |e: &MockEngine| {
+            let mut conv = seeded.conv_state.clone();
+            let mut ssm = seeded.ssm_state.clone();
+            let mut ws = Workspace::new();
+            e.step_mixed_into(&lens, &tokens, &rows, &mut conv, &mut ssm, 4, &mut ws)
+                .unwrap();
+            (ws.logits.clone(), conv, ssm, ws.take_device_calls())
+        };
+        let (fl, fc, fs, f_calls) = run(&fused);
+        let (dl, dc, ds, d_calls) = run(&deflt);
+        assert_eq!(fl, dl);
+        assert_eq!(fc, dc);
+        assert_eq!(fs, ds);
+        assert_eq!(f_calls, 1, "fused varlen launch is one device call");
+        // Scan: chunk_len lockstep positions × one group of 1; decode
+        // group: 3 rows fit compiled batch 4 in one call.
+        assert_eq!(d_calls, chunk_len as u64 + 1);
+        let _ = (cp, sp);
+    }
+
+    #[test]
+    fn planned_launch_is_bit_identical_across_plans_but_charges_differently() {
         use crate::fusion::FusionVariant;
         let m = MockEngine::new().manifest().clone();
         let lens = [1usize, 1, 5];
@@ -545,7 +582,7 @@ mod tests {
     }
 
     #[test]
-    fn planned_step_charges_at_bucket_granularity() {
+    fn planned_launch_charges_at_bucket_granularity() {
         // 5, 6 and 8 decode rows share the pow2 bucket (8): identical
         // modeled charge — the compiled-shape semantics the planner's
         // predictions assume.
@@ -574,12 +611,19 @@ mod tests {
     }
 
     #[test]
-    fn register_variant_records_once() {
-        let mut e = MockEngine::new();
-        let ri = PlanChoice::Variant(crate::fusion::FusionVariant::RIOnly);
-        e.register_variant(ri).unwrap();
-        e.register_variant(ri).unwrap();
-        assert_eq!(e.registered_variants(), &[ri]);
+    fn caps_toggle_reports_what_launch_does() {
+        let fused = MockEngine::new();
+        assert!(fused.caps().varlen_kernel);
+        assert!(fused.caps().in_place_state);
+        assert!(fused.caps().donation);
+        assert_eq!(fused.caps().plans_available(), PlanChoice::COUNT);
+
+        let mut limited = EngineCaps::full();
+        let ff = PlanChoice::candidates()[0];
+        limited.plans[ff.index()] = false;
+        let e = MockEngine::with_caps(limited);
+        assert!(!e.caps().plans[ff.index()]);
+        assert_eq!(e.caps().plans_available(), PlanChoice::COUNT - 1);
     }
 
     #[test]
@@ -596,5 +640,12 @@ mod tests {
         let mut s = zeros_s.clone();
         assert!(e.step_mixed_into(&[1], &[1], &[1], &mut c, &mut s, 1, &mut ws).is_err());
         assert!(e.step_mixed_into(&[1], &[1], &[], &mut c, &mut s, 1, &mut ws).is_err());
+        // Aliased rows — the contract the typed batch enforces.
+        let mut c2 = vec![0f32; 2 * e.manifest().conv_state_elems()];
+        let mut s2 = vec![0f32; 2 * e.manifest().ssm_state_elems()];
+        let err = e
+            .step_mixed_into(&[1, 1], &[1, 2], &[0, 0], &mut c2, &mut s2, 2, &mut ws)
+            .unwrap_err();
+        assert!(err.to_string().contains("aliased"), "{err}");
     }
 }

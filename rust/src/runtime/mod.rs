@@ -1,12 +1,24 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on
 //! the request path (adapting /opt/xla-example/load_hlo).
+//!
+//! The engine API is the typed launch surface of [`spec`]: engines
+//! implement [`Executor::launch`] over a validated [`LaunchSpec`]
+//! (varlen [`MixedBatch`] + [`StateSlabs`] with a [`Donation`]
+//! annotation + optional plan + [`Workspace`]) and *declare* what they
+//! can fuse in [`EngineCaps`]; the legacy step methods are deprecated
+//! wrappers. See [`engine`] for the trait and the default
+//! decomposition, [`mock`] for the hermetic fused reference engine.
+
+#![deny(missing_docs)]
 
 pub mod artifact;
 pub mod engine;
 pub mod mock;
+pub mod spec;
 
 pub use artifact::{Golden, Manifest};
 pub use engine::{
     argmax_rows, argmax_rows_into, Executor, MambaEngine, StepOutput, TrafficCounters, Workspace,
 };
 pub use mock::MockEngine;
+pub use spec::{Donation, EngineCaps, LaunchSpec, MixedBatch, Phase, Segment, StateSlabs};

@@ -1,0 +1,537 @@
+//! The typed engine-launch surface: one validated description of one
+//! engine invocation.
+//!
+//! Mambalaya's fusion mappings only pay off when the runtime can hand
+//! the engine a *whole varlen cascade* in one launch and let state live
+//! on-device. The legacy `Executor` surface grew four overlapping step
+//! entry points behind a seven-positional-slice calling convention
+//! (`lens, tokens, rows, conv, ssm, stride, ws`) that could express
+//! neither of the remaining ROADMAP items (PJRT buffer donation, a true
+//! varlen fused chunk kernel). This module replaces that convention
+//! with three typed objects and one bundle:
+//!
+//! * [`MixedBatch`] — a **validated view** over one tick's varlen
+//!   batch: per-row [`Segment`]s (`len`, slab `row`, [`Phase`]) over a
+//!   flat token buffer. Constructed once by the scheduler;
+//!   [`MixedBatch::new`] centralizes the shape checks that used to be
+//!   scattered `ensure!`s in the default engine decomposition — and
+//!   *enforces* the row-aliasing contract (two batch rows sharing one
+//!   slab row would silently corrupt state in an in-place engine, so
+//!   aliased rows are a construction error, not a documented footgun).
+//! * [`StateSlabs`] — the borrowed layer-major conv/ssm slab pair with
+//!   its row `stride` and a [`Donation`] annotation, so a real PJRT
+//!   backend can mark the state inputs as donated/aliased buffers
+//!   while the [`Workspace`](super::engine::Workspace) traffic
+//!   counters keep pricing whatever the engine actually copies.
+//! * [`EngineCaps`] — the engine's capability report. The scheduler
+//!   reads it once at construction: the planner masks out fusion plans
+//!   the engine cannot execute ([`crate::planner::Planner::apply_caps`]),
+//!   and the state path is chosen from `in_place_state` instead of
+//!   being hardcoded. This replaces the old `register_variant`
+//!   trial-and-error negotiation.
+//!
+//! A [`LaunchSpec`] bundles a `MixedBatch` + `StateSlabs` + an optional
+//! [`PlanChoice`] + the caller's `Workspace`, and is the single
+//! argument of [`Executor::launch`](super::engine::Executor::launch) —
+//! the one entry point every engine implements. The legacy step
+//! methods survive as thin deprecated wrappers that build a
+//! `LaunchSpec`.
+//!
+//! ## The `Donation` contract
+//!
+//! With [`Donation::Retain`] the engine must treat the slabs as live
+//! caller memory: it may stage copies out of them (counted in the
+//! workspace [`TrafficCounters`](super::engine::TrafficCounters)) and
+//! must write each row's final state back before returning. With
+//! [`Donation::DonateInPlace`] the caller additionally promises not to
+//! read any launched row until the call returns, so a device backend
+//! may alias the state inputs to its outputs (PJRT input/output buffer
+//! donation) and update them truly in place — no device-side
+//! round-trip through fresh allocations. Host-side engines (the mock,
+//! the default decomposition) already advance the slabs in place, so
+//! for them the annotation is observability only: the traffic counters
+//! price what is still copied either way. On error the slab contents
+//! are unspecified under either annotation (rows may be partially
+//! advanced) — the scheduler poisons itself accordingly.
+
+use crate::planner::PlanChoice;
+
+use super::artifact::Manifest;
+use super::engine::Workspace;
+
+/// What one batch row does this tick — declared by the scheduler so
+/// engines never have to re-derive it by scanning state memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// A single-token decode step (`len == 1`).
+    Decode,
+    /// A prefill chunk starting from **zero state** (the first chunk of
+    /// a prompt; the caller guarantees the row's slab state is zero).
+    PrefillFirst,
+    /// A mid-prompt prefill chunk continuing from carried state.
+    PrefillCont,
+}
+
+/// One row of a [`MixedBatch`]: how many flat tokens it consumes, which
+/// slab row holds its recurrent state, and its declared [`Phase`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    /// Tokens this row consumes from the flat token buffer (≥ 1).
+    pub len: usize,
+    /// Slab row index holding this sequence's state (must be unique
+    /// within the batch — enforced by [`MixedBatch::new`]).
+    pub row: usize,
+    /// Declared phase; [`Phase::Decode`] iff `len == 1`.
+    pub phase: Phase,
+}
+
+/// A validated view over one tick's varlen batch: per-row [`Segment`]s
+/// plus the flat token buffer they index into. Constructing one proves
+/// the shape invariants the engines rely on, so engine implementations
+/// validate the *slab* shapes (via [`LaunchSpec::validate`]) and
+/// nothing else.
+#[derive(Debug, Clone, Copy)]
+pub struct MixedBatch<'a> {
+    segs: &'a [Segment],
+    tokens: &'a [i32],
+}
+
+impl<'a> MixedBatch<'a> {
+    /// Validate and wrap a batch view. Errors (instead of corrupting
+    /// state later) on: an empty batch, a zero-length row, a
+    /// phase/length mismatch (`Decode` ⇔ `len == 1`), a token buffer
+    /// that does not match `Σ len`, and — the contract the legacy
+    /// surface only documented — two segments aliasing one slab row.
+    pub fn new(segs: &'a [Segment], tokens: &'a [i32]) -> anyhow::Result<MixedBatch<'a>> {
+        anyhow::ensure!(!segs.is_empty(), "empty mixed batch");
+        let mut total = 0usize;
+        for s in segs {
+            anyhow::ensure!(s.len >= 1, "zero-length mixed row");
+            anyhow::ensure!(
+                (s.len == 1) == (s.phase == Phase::Decode),
+                "phase {:?} inconsistent with len {}",
+                s.phase,
+                s.len
+            );
+            total += s.len;
+        }
+        anyhow::ensure!(
+            tokens.len() == total,
+            "mixed tokens: got {}, want {total}",
+            tokens.len()
+        );
+        // Distinct-rows contract: aliasing two batch rows onto one slab
+        // row silently corrupts state under any in-place engine.
+        // Batches are scheduler-tick sized (tens of rows), so the
+        // allocation-free pairwise check beats building a set.
+        for (i, a) in segs.iter().enumerate() {
+            for b in &segs[i + 1..] {
+                anyhow::ensure!(
+                    a.row != b.row,
+                    "aliased slab row {} in mixed batch (rows must be distinct)",
+                    a.row
+                );
+            }
+        }
+        Ok(MixedBatch { segs, tokens })
+    }
+
+    /// Number of batch rows.
+    pub fn rows(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// The per-row segments.
+    pub fn segments(&self) -> &'a [Segment] {
+        self.segs
+    }
+
+    /// The flat token buffer (`Σ len` tokens, row-major).
+    pub fn tokens(&self) -> &'a [i32] {
+        self.tokens
+    }
+
+    /// Total tokens across all rows.
+    pub fn total_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Iterate `(batch index, segment, this row's token slice)` — the
+    /// walk both the default decomposition and fused engines use.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, Segment, &'a [i32])> {
+        let (segs, tokens) = (self.segs, self.tokens);
+        let mut off = 0usize;
+        segs.iter().enumerate().map(move |(b, &seg)| {
+            let slice = &tokens[off..off + seg.len];
+            off += seg.len;
+            (b, seg, slice)
+        })
+    }
+
+    /// Fill `offs` with each row's starting offset into the flat token
+    /// buffer (cleared first; reuses capacity).
+    pub fn fill_offsets(&self, offs: &mut Vec<usize>) {
+        offs.clear();
+        let mut o = 0usize;
+        for s in self.segs {
+            offs.push(o);
+            o += s.len;
+        }
+    }
+
+    /// Rows advancing exactly one token (the engine-visible decode set).
+    pub fn decode_rows(&self) -> usize {
+        self.segs.iter().filter(|s| s.len == 1).count()
+    }
+
+    /// Longest multi-token chunk in the batch (0 when decode-only).
+    pub fn max_chunk(&self) -> usize {
+        self.segs.iter().map(|s| s.len).filter(|&l| l > 1).max().unwrap_or(0)
+    }
+}
+
+/// How the engine may treat the caller's state slabs for one launch.
+/// See the module docs for the full contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Donation {
+    /// Live caller memory: stage copies if you must (priced by the
+    /// workspace traffic counters), write final rows back on success.
+    Retain,
+    /// The caller will not read launched rows mid-call: a device
+    /// backend may alias state inputs to outputs (PJRT buffer
+    /// donation) and update them in place.
+    DonateInPlace,
+}
+
+/// The borrowed layer-major state slab pair one launch advances:
+/// `[layers, stride, per-layer]` conv and ssm slabs, the row `stride`,
+/// and the caller's [`Donation`] annotation.
+#[derive(Debug)]
+pub struct StateSlabs<'a> {
+    conv: &'a mut [f32],
+    ssm: &'a mut [f32],
+    stride: usize,
+    donation: Donation,
+}
+
+impl<'a> StateSlabs<'a> {
+    /// Wrap the slab pair. Shape validation against the model's
+    /// dimensions happens in [`LaunchSpec::validate`] (it needs the
+    /// manifest).
+    pub fn new(
+        conv: &'a mut [f32],
+        ssm: &'a mut [f32],
+        stride: usize,
+        donation: Donation,
+    ) -> StateSlabs<'a> {
+        StateSlabs { conv, ssm, stride, donation }
+    }
+
+    /// Rows per layer stripe.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// The caller's donation annotation for this launch.
+    pub fn donation(&self) -> Donation {
+        self.donation
+    }
+
+    /// Shared views of both slabs: `(conv, ssm)`.
+    pub fn slabs(&self) -> (&[f32], &[f32]) {
+        (&*self.conv, &*self.ssm)
+    }
+
+    /// Mutable views of both slabs: `(conv, ssm)`.
+    pub fn slabs_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut *self.conv, &mut *self.ssm)
+    }
+}
+
+/// An engine's capability report: which launch shapes it can fuse and
+/// which fusion plans it can execute. The scheduler reads this once at
+/// construction and negotiates from it — replacing the old
+/// `register_variant` trial-and-error (announce every candidate, treat
+/// an `Err` as "unavailable").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineCaps {
+    /// The engine executes a whole varlen [`MixedBatch`] as **one**
+    /// fused device launch (`device_calls == 1` per tick). When false,
+    /// the default trait decomposition emulates the varlen call through
+    /// the compiled prefill/decode entry points — `max(chunk)` lockstep
+    /// device calls per tick plus staging traffic.
+    pub varlen_kernel: bool,
+    /// The engine advances caller-owned slab rows in place at arbitrary
+    /// strides (the resident-arena contract). When false the scheduler
+    /// falls back to the packed reference data path.
+    pub in_place_state: bool,
+    /// The engine honours [`Donation::DonateInPlace`] — it aliases
+    /// state inputs to outputs device-side (PJRT buffer donation)
+    /// instead of round-tripping through fresh device allocations.
+    pub donation: bool,
+    /// Per-[`PlanChoice`] executability, indexed by
+    /// [`PlanChoice::index`]. The planner never selects an unavailable
+    /// plan ([`crate::planner::Planner::apply_caps`]) — except for a
+    /// degenerate report that masks out *every* candidate, where one
+    /// stays selectable so serving can proceed and the inconsistency
+    /// is loudly reported at construction.
+    pub plans: [bool; PlanChoice::COUNT],
+}
+
+impl EngineCaps {
+    /// The conservative baseline every engine satisfies by construction
+    /// of the default trait methods: no fused varlen kernel, in-place
+    /// slab advancement via the decomposition, no donation, and every
+    /// plan nominally executable (a single-mapping engine executes its
+    /// one compiled mapping whatever the plan says).
+    pub fn baseline() -> EngineCaps {
+        EngineCaps {
+            varlen_kernel: false,
+            in_place_state: true,
+            donation: false,
+            plans: [true; PlanChoice::COUNT],
+        }
+    }
+
+    /// Everything on — what a fully fused in-process engine (the mock)
+    /// or a finished PJRT varlen backend advertises.
+    pub fn full() -> EngineCaps {
+        EngineCaps { varlen_kernel: true, in_place_state: true, donation: true, ..EngineCaps::baseline() }
+    }
+
+    /// Number of executable plans.
+    pub fn plans_available(&self) -> usize {
+        self.plans.iter().filter(|&&p| p).count()
+    }
+
+    /// One-line operator summary (`serve_mamba` prints this at startup
+    /// so operators can see which fused paths a backend advertises).
+    pub fn summary(&self) -> String {
+        let yn = |b: bool| if b { "yes" } else { "no" };
+        let missing: Vec<String> = PlanChoice::candidates()
+            .iter()
+            .filter(|c| !self.plans[c.index()])
+            .map(|c| c.name())
+            .collect();
+        let plans = if missing.is_empty() {
+            format!("{}/{}", PlanChoice::COUNT, PlanChoice::COUNT)
+        } else {
+            format!(
+                "{}/{} (unavailable: {})",
+                self.plans_available(),
+                PlanChoice::COUNT,
+                missing.join(",")
+            )
+        };
+        format!(
+            "varlen_kernel={} in_place_state={} donation={} plans={}",
+            yn(self.varlen_kernel),
+            yn(self.in_place_state),
+            yn(self.donation),
+            plans
+        )
+    }
+}
+
+impl Default for EngineCaps {
+    fn default() -> Self {
+        EngineCaps::baseline()
+    }
+}
+
+/// Everything one engine invocation needs, in one typed bundle: the
+/// validated varlen batch, the state slabs it advances, the fusion
+/// plan the planner chose (`None` for unplanned legacy calls — the
+/// engine executes its default mapping and models no plan cost), and
+/// the caller's persistent [`Workspace`] (logits surface, staging
+/// buffers, traffic / device-call / modeled-cost counters).
+#[derive(Debug)]
+pub struct LaunchSpec<'a> {
+    /// The tick's varlen batch view.
+    pub batch: MixedBatch<'a>,
+    /// The state slabs the launch advances.
+    pub state: StateSlabs<'a>,
+    /// The fusion plan to execute, if the caller planned one.
+    pub plan: Option<PlanChoice>,
+    /// The caller's persistent workspace.
+    pub ws: &'a mut Workspace,
+}
+
+impl<'a> LaunchSpec<'a> {
+    /// Validate the batch↔slab agreement an engine must rely on: every
+    /// segment row within `stride`, and both slabs shaped
+    /// `[layers, stride, per-layer]` for this manifest. Engines call
+    /// this first (batch-internal invariants already hold by
+    /// [`MixedBatch::new`] construction).
+    pub fn validate(&self, m: &Manifest) -> anyhow::Result<()> {
+        let stride = self.state.stride();
+        for s in self.batch.segments() {
+            anyhow::ensure!(s.row < stride, "row index {} past stride {stride}", s.row);
+        }
+        let (nl, cp, sp) =
+            (m.n_layer, m.d_inner * (m.d_conv - 1), m.d_inner * m.d_state);
+        let (conv, ssm) = self.state.slabs();
+        anyhow::ensure!(
+            conv.len() == nl * stride * cp,
+            "mixed conv slab: got {}, want {}",
+            conv.len(),
+            nl * stride * cp
+        );
+        anyhow::ensure!(
+            ssm.len() == nl * stride * sp,
+            "mixed ssm slab: got {}, want {}",
+            ssm.len(),
+            nl * stride * sp
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(len: usize, row: usize) -> Segment {
+        let phase = if len == 1 { Phase::Decode } else { Phase::PrefillCont };
+        Segment { len, row, phase }
+    }
+
+    #[test]
+    fn mixed_batch_validates_shapes() {
+        let toks = [1i32, 2, 3, 4];
+        let segs = [seg(3, 0), seg(1, 1)];
+        let b = MixedBatch::new(&segs, &toks).unwrap();
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.total_tokens(), 4);
+        assert_eq!(b.decode_rows(), 1);
+        assert_eq!(b.max_chunk(), 3);
+
+        assert!(MixedBatch::new(&[], &[]).is_err(), "empty batch");
+        assert!(
+            MixedBatch::new(&[Segment { len: 0, row: 0, phase: Phase::Decode }], &[]).is_err(),
+            "zero-length row"
+        );
+        assert!(MixedBatch::new(&segs, &toks[..3]).is_err(), "token shortfall");
+        assert!(
+            MixedBatch::new(&[Segment { len: 2, row: 0, phase: Phase::Decode }], &toks[..2])
+                .is_err(),
+            "decode phase on a multi-token row"
+        );
+        assert!(
+            MixedBatch::new(&[Segment { len: 1, row: 0, phase: Phase::PrefillCont }], &toks[..1])
+                .is_err(),
+            "prefill phase on a unit row"
+        );
+    }
+
+    #[test]
+    fn mixed_batch_rejects_aliased_rows() {
+        // The regression the legacy surface could not catch: two batch
+        // rows sharing slab row 3 would silently corrupt state in any
+        // in-place engine. Construction must fail instead.
+        let toks = [1i32, 2, 3];
+        let segs = [seg(1, 3), seg(1, 0), seg(1, 3)];
+        let err = MixedBatch::new(&segs, &toks).unwrap_err();
+        assert!(err.to_string().contains("aliased slab row 3"), "{err}");
+    }
+
+    #[test]
+    fn iter_walks_rows_with_token_slices() {
+        let toks = [10i32, 11, 12, 13, 14, 15];
+        let segs = [seg(2, 4), seg(1, 0), seg(3, 2)];
+        let b = MixedBatch::new(&segs, &toks).unwrap();
+        let walked: Vec<(usize, usize, Vec<i32>)> =
+            b.iter().map(|(i, s, t)| (i, s.row, t.to_vec())).collect();
+        assert_eq!(
+            walked,
+            vec![
+                (0, 4, vec![10, 11]),
+                (1, 0, vec![12]),
+                (2, 2, vec![13, 14, 15]),
+            ]
+        );
+        let mut offs = Vec::new();
+        b.fill_offsets(&mut offs);
+        assert_eq!(offs, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn launch_spec_validates_slab_shapes() {
+        // Hand-built tiny manifest: 2 layers, cp = 8*3 = 24, sp = 8*2 = 16.
+        let m = Manifest {
+            model: "test".into(),
+            vocab: 17,
+            d_model: 4,
+            d_inner: 8,
+            d_state: 2,
+            d_conv: 4,
+            n_layer: 2,
+            prefill_len: 8,
+            prefill_batches: vec![1],
+            decode_batches: vec![1],
+            dir: std::path::PathBuf::from("/nonexistent"),
+        };
+        let (cp, sp) = (24usize, 16usize);
+        let stride = 3usize;
+        let mut conv = vec![0f32; 2 * stride * cp];
+        let mut ssm = vec![0f32; 2 * stride * sp];
+        let toks = [5i32];
+        let segs = [seg(1, 2)];
+        let batch = MixedBatch::new(&segs, &toks).unwrap();
+        let mut ws = Workspace::new();
+        let spec = LaunchSpec {
+            batch,
+            state: StateSlabs::new(&mut conv, &mut ssm, stride, Donation::Retain),
+            plan: None,
+            ws: &mut ws,
+        };
+        spec.validate(&m).unwrap();
+
+        // Row past stride.
+        let bad_segs = [seg(1, 3)];
+        let bad_batch = MixedBatch::new(&bad_segs, &toks).unwrap();
+        let mut ws2 = Workspace::new();
+        let mut conv2 = vec![0f32; 2 * stride * cp];
+        let mut ssm2 = vec![0f32; 2 * stride * sp];
+        let spec = LaunchSpec {
+            batch: bad_batch,
+            state: StateSlabs::new(&mut conv2, &mut ssm2, stride, Donation::Retain),
+            plan: None,
+            ws: &mut ws2,
+        };
+        assert!(spec.validate(&m).is_err());
+
+        // Wrong slab size.
+        let mut ws3 = Workspace::new();
+        let mut conv3 = vec![0f32; 7];
+        let mut ssm3 = vec![0f32; 2 * stride * sp];
+        let spec = LaunchSpec {
+            batch,
+            state: StateSlabs::new(&mut conv3, &mut ssm3, stride, Donation::Retain),
+            plan: None,
+            ws: &mut ws3,
+        };
+        assert!(spec.validate(&m).is_err());
+    }
+
+    #[test]
+    fn caps_summary_reports_negotiation_surface() {
+        let full = EngineCaps::full();
+        assert!(full.varlen_kernel && full.donation);
+        assert_eq!(full.plans_available(), PlanChoice::COUNT);
+        let s = full.summary();
+        assert!(s.contains("varlen_kernel=yes"), "{s}");
+        assert!(s.contains("donation=yes"), "{s}");
+        assert!(s.contains(&format!("plans={}/{}", PlanChoice::COUNT, PlanChoice::COUNT)), "{s}");
+
+        let mut partial = EngineCaps::baseline();
+        let ff = PlanChoice::candidates()[0];
+        partial.plans[ff.index()] = false;
+        let s = partial.summary();
+        assert!(s.contains("varlen_kernel=no"), "{s}");
+        assert!(s.contains("unavailable:"), "{s}");
+        assert!(s.contains(&ff.name()), "{s}");
+        assert_eq!(partial.plans_available(), PlanChoice::COUNT - 1);
+        assert_eq!(EngineCaps::default(), EngineCaps::baseline());
+    }
+}

@@ -1,0 +1,507 @@
+//! The typed engine-API surface, tested hermetically against
+//! `runtime::mock`:
+//!
+//! * **wrapper equivalence** (the api_redesign acceptance bar): calling
+//!   the deprecated `step_mixed` / `step_mixed_into` /
+//!   `step_planned_into` wrappers is bit-identical — logits, slab
+//!   states, traffic / padded / device-call / modeled counters — to
+//!   building the `LaunchSpec` directly, across randomized batches,
+//!   sparse row plans, carried/zero states, and both the fused varlen
+//!   engine and the caps-off default decomposition;
+//! * the same equivalence at the **scheduler** level, on both state
+//!   paths, via a shim engine whose `launch` round-trips every call
+//!   through the deprecated seven-slice convention;
+//! * the **distinct-rows contract** is enforced (aliased slab rows are
+//!   a construction error, not a silent state corruption);
+//! * **capability negotiation**: a plan the engine's caps disclaim is
+//!   never dispatched, and the caps toggle (fused vs decomposition)
+//!   changes counters but never tokens;
+//! * the [`Donation`] annotation is observability-only on host
+//!   engines: `DonateInPlace` and `Retain` launches are bit-identical.
+
+#![allow(deprecated)] // the legacy wrappers are the subject under test
+
+use mambalaya::coordinator::{BatchPolicy, Request, Scheduler, StatePath, WorkloadGen};
+use mambalaya::planner::{PlanChoice, Planner, PlanSpec};
+use mambalaya::prop::check;
+use mambalaya::runtime::{
+    Donation, EngineCaps, Executor, LaunchSpec, Manifest, MixedBatch, MockEngine, Phase,
+    Segment, StateSlabs, StepOutput, Workspace,
+};
+use mambalaya::util::XorShift;
+
+/// Everything one engine call observably produced: outputs plus every
+/// workspace counter.
+#[derive(Debug, Clone, PartialEq)]
+struct CallOutcome {
+    logits: Vec<f32>,
+    conv: Vec<f32>,
+    ssm: Vec<f32>,
+    gathered: u64,
+    scattered: u64,
+    padded: u64,
+    device_calls: u64,
+    modeled: (u64, u64),
+}
+
+fn drain(ws: &mut Workspace, conv: &[f32], ssm: &[f32]) -> CallOutcome {
+    let t = ws.take_traffic();
+    CallOutcome {
+        logits: ws.logits.clone(),
+        conv: conv.to_vec(),
+        ssm: ssm.to_vec(),
+        gathered: t.bytes_gathered,
+        scattered: t.bytes_scattered,
+        padded: ws.take_padded_rows(),
+        device_calls: ws.take_device_calls(),
+        modeled: ws.take_modeled(),
+    }
+}
+
+/// One randomized engine-level case: lens, sparse distinct rows, flat
+/// tokens, and slabs whose planned rows are randomly carried-state or
+/// zeroed (so every phase classification is exercised).
+struct Case {
+    lens: Vec<usize>,
+    rows: Vec<usize>,
+    tokens: Vec<i32>,
+    stride: usize,
+    conv: Vec<f32>,
+    ssm: Vec<f32>,
+}
+
+fn random_case(rng: &mut XorShift, m: &Manifest) -> Case {
+    let (nl, plen) = (m.n_layer, m.prefill_len);
+    let cp = m.d_inner * (m.d_conv - 1);
+    let sp = m.d_inner * m.d_state;
+    let batch = rng.range(1, 5) as usize;
+    let stride = batch + rng.range(0, 3) as usize;
+    // Distinct rows: shuffle 0..stride, take the first `batch`.
+    let mut all_rows: Vec<usize> = (0..stride).collect();
+    for i in (1..all_rows.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        all_rows.swap(i, j);
+    }
+    let rows = all_rows[..batch].to_vec();
+    let lens: Vec<usize> = (0..batch)
+        .map(|_| {
+            match rng.below(4) {
+                0 => 1,                              // decode row
+                1 => plen,                           // full-length row
+                _ => rng.range(2, 2 * plen as u64) as usize, // odd chunk
+            }
+        })
+        .collect();
+    let tokens: Vec<i32> =
+        (0..lens.iter().sum::<usize>()).map(|_| rng.below(m.vocab as u64) as i32).collect();
+    let mut conv = vec![0f32; nl * stride * cp];
+    let mut ssm = vec![0f32; nl * stride * sp];
+    for x in conv.iter_mut() {
+        *x = (rng.f64() as f32) - 0.5;
+    }
+    for x in ssm.iter_mut() {
+        *x = (rng.f64() as f32) - 0.5;
+    }
+    // Randomly zero some planned rows (fresh sequences) so the
+    // PrefillFirst classification and the compiled-prefill bucket of
+    // the decomposition both get exercised.
+    for &row in &rows {
+        if rng.below(3) == 0 {
+            for l in 0..nl {
+                conv[(l * stride + row) * cp..(l * stride + row + 1) * cp].fill(0.0);
+                ssm[(l * stride + row) * sp..(l * stride + row + 1) * sp].fill(0.0);
+            }
+        }
+    }
+    Case { lens, rows, tokens, stride, conv, ssm }
+}
+
+/// The wrapper's phase classification, reproduced for direct
+/// `LaunchSpec` construction: unit rows decode, `prefill_len` rows
+/// `PrefillFirst` iff their slab state is all-zero (other lengths go
+/// to the lockstep scan regardless, so the wrapper skips their scan
+/// and declares `PrefillCont`).
+fn classify(case: &Case, m: &Manifest) -> Vec<Segment> {
+    let (nl, cp, sp) = (
+        m.n_layer,
+        m.d_inner * (m.d_conv - 1),
+        m.d_inner * m.d_state,
+    );
+    case.lens
+        .iter()
+        .zip(&case.rows)
+        .map(|(&len, &row)| {
+            let zero = || {
+                (0..nl).all(|l| {
+                    case.conv[(l * case.stride + row) * cp..(l * case.stride + row + 1) * cp]
+                        .iter()
+                        .all(|&x| x == 0.0)
+                        && case.ssm
+                            [(l * case.stride + row) * sp..(l * case.stride + row + 1) * sp]
+                            .iter()
+                            .all(|&x| x == 0.0)
+                })
+            };
+            let phase = if len == 1 {
+                Phase::Decode
+            } else if len == m.prefill_len && zero() {
+                Phase::PrefillFirst
+            } else {
+                Phase::PrefillCont
+            };
+            Segment { len, row, phase }
+        })
+        .collect()
+}
+
+/// Run one case through the deprecated wrapper surface.
+fn via_wrapper(e: &MockEngine, case: &Case, plan: Option<PlanChoice>) -> CallOutcome {
+    let mut conv = case.conv.clone();
+    let mut ssm = case.ssm.clone();
+    let mut ws = Workspace::new();
+    match plan {
+        Some(choice) => e
+            .step_planned_into(
+                choice, &case.lens, &case.tokens, &case.rows, &mut conv, &mut ssm, case.stride,
+                &mut ws,
+            )
+            .unwrap(),
+        None => e
+            .step_mixed_into(
+                &case.lens, &case.tokens, &case.rows, &mut conv, &mut ssm, case.stride, &mut ws,
+            )
+            .unwrap(),
+    }
+    drain(&mut ws, &conv, &ssm)
+}
+
+/// Run one case through a directly-built `LaunchSpec`.
+fn via_launch(e: &MockEngine, case: &Case, plan: Option<PlanChoice>) -> CallOutcome {
+    let segs = classify(case, e.manifest());
+    let mut conv = case.conv.clone();
+    let mut ssm = case.ssm.clone();
+    let mut ws = Workspace::new();
+    e.launch(LaunchSpec {
+        batch: MixedBatch::new(&segs, &case.tokens).unwrap(),
+        state: StateSlabs::new(&mut conv, &mut ssm, case.stride, Donation::Retain),
+        plan,
+        ws: &mut ws,
+    })
+    .unwrap();
+    drain(&mut ws, &conv, &ssm)
+}
+
+#[test]
+fn prop_wrappers_equal_direct_launch() {
+    // The acceptance bar: every deprecated wrapper is a *pure
+    // repackaging* of a LaunchSpec — bit-identical logits, states and
+    // counters — on both the fused engine and the caps-off
+    // decomposition, planned and unplanned.
+    let candidates = PlanChoice::candidates();
+    check("wrappers ≡ launch", 30, |rng| {
+        let fused = MockEngine::new();
+        let decomp =
+            MockEngine::with_caps(EngineCaps { varlen_kernel: false, ..EngineCaps::full() });
+        let case = random_case(rng, fused.manifest());
+        let plan = if rng.below(2) == 0 {
+            Some(candidates[rng.below(candidates.len() as u64) as usize])
+        } else {
+            None
+        };
+        for e in [&fused, &decomp] {
+            let a = via_wrapper(e, &case, plan);
+            let b = via_launch(e, &case, plan);
+            if a != b {
+                return Err(format!(
+                    "wrapper != direct (varlen={}, plan={:?}): {:?} vs {:?}",
+                    e.caps().varlen_kernel,
+                    plan,
+                    (a.gathered, a.scattered, a.padded, a.device_calls, a.modeled),
+                    (b.gathered, b.scattered, b.padded, b.device_calls, b.modeled),
+                ));
+            }
+        }
+        // And fused vs decomposition agree on outputs (not counters).
+        let f = via_launch(&fused, &case, plan);
+        let d = via_launch(&decomp, &case, plan);
+        if f.logits != d.logits || f.conv != d.conv || f.ssm != d.ssm {
+            return Err("fused and decomposition outputs diverged".into());
+        }
+        if f.device_calls != 1 {
+            return Err(format!("fused launch made {} device calls", f.device_calls));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_step_mixed_value_wrapper_equals_launch() {
+    // The allocating value-semantics wrapper: identity rows, packed
+    // slabs (stride == batch), returned StepOutput — still just a
+    // LaunchSpec underneath.
+    check("step_mixed ≡ launch", 20, |rng| {
+        let e = MockEngine::new();
+        let m = e.manifest().clone();
+        let (nl, plen) = (m.n_layer, m.prefill_len);
+        let cpl = m.d_inner * (m.d_conv - 1);
+        let spl = m.d_inner * m.d_state;
+        let batch = rng.range(1, 4) as usize;
+        let lens: Vec<usize> = (0..batch)
+            .map(|_| match rng.below(3) {
+                0 => 1,
+                1 => plen,
+                _ => rng.range(2, plen as u64 + 3) as usize,
+            })
+            .collect();
+        let tokens: Vec<i32> = (0..lens.iter().sum::<usize>())
+            .map(|_| rng.below(m.vocab as u64) as i32)
+            .collect();
+        // Packed layer-major slabs [nl, batch, per]; random carried
+        // state, some rows zeroed (fresh).
+        let mut conv = vec![0f32; nl * batch * cpl];
+        let mut ssm = vec![0f32; nl * batch * spl];
+        for x in conv.iter_mut() {
+            *x = (rng.f64() as f32) - 0.5;
+        }
+        for x in ssm.iter_mut() {
+            *x = (rng.f64() as f32) - 0.5;
+        }
+        for b in 0..batch {
+            if rng.below(3) == 0 {
+                for l in 0..nl {
+                    conv[(l * batch + b) * cpl..(l * batch + b + 1) * cpl].fill(0.0);
+                    ssm[(l * batch + b) * spl..(l * batch + b + 1) * spl].fill(0.0);
+                }
+            }
+        }
+        let case = Case {
+            lens,
+            rows: (0..batch).collect(),
+            tokens,
+            stride: batch,
+            conv,
+            ssm,
+        };
+
+        let out: StepOutput =
+            e.step_mixed(&case.lens, &case.tokens, &case.conv, &case.ssm).unwrap();
+        let direct = via_launch(&e, &case, None);
+        if out.logits != direct.logits {
+            return Err("logits diverged".into());
+        }
+        if out.conv_state != direct.conv || out.ssm_state != direct.ssm {
+            return Err("states diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// An engine whose `launch` flattens the typed spec back onto the
+/// deprecated seven-slice wrapper of a wrapped mock — so a scheduler
+/// running on it exercises the full legacy round-trip
+/// (spec → slices → spec → fused launch) every tick.
+struct LegacyShim(MockEngine);
+
+impl Executor for LegacyShim {
+    fn manifest(&self) -> &Manifest {
+        self.0.manifest()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        self.0.caps()
+    }
+
+    fn prefill(&self, batch: usize, tokens: &[i32]) -> anyhow::Result<StepOutput> {
+        self.0.prefill(batch, tokens)
+    }
+
+    fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        conv: &[f32],
+        ssm: &[f32],
+    ) -> anyhow::Result<StepOutput> {
+        self.0.decode(batch, tokens, conv, ssm)
+    }
+
+    fn launch(&self, spec: LaunchSpec<'_>) -> anyhow::Result<()> {
+        let LaunchSpec { batch, mut state, plan, ws } = spec;
+        let lens: Vec<usize> = batch.segments().iter().map(|s| s.len).collect();
+        let rows: Vec<usize> = batch.segments().iter().map(|s| s.row).collect();
+        let stride = state.stride();
+        let (conv, ssm) = state.slabs_mut();
+        match plan {
+            Some(c) => self
+                .0
+                .step_planned_into(c, &lens, batch.tokens(), &rows, conv, ssm, stride, ws),
+            None => self.0.step_mixed_into(&lens, batch.tokens(), &rows, conv, ssm, stride, ws),
+        }
+    }
+}
+
+#[test]
+fn prop_scheduler_on_wrappers_matches_direct_engine_on_both_paths() {
+    // Serve randomized workloads through the scheduler with the engine
+    // surface round-tripped through the deprecated wrappers every tick:
+    // tokens and every traffic/plan counter must be bit-identical to
+    // the direct engine, on both scheduler state paths.
+    check("scheduler wrapper-shim ≡ direct", 12, |rng| {
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let policy = BatchPolicy {
+            chunk_tokens: rng.range(0, 6) as usize,
+            token_budget: rng.range(1, 24) as usize,
+            max_chunk_rows: rng.range(1, 5) as usize,
+            max_running: rng.range(1, 8) as usize,
+            decode_priority_threshold: rng.range(1, 10) as usize,
+        };
+        let seed = rng.next_u64();
+        let n_reqs = rng.range(1, 6);
+        let make_reqs = |seed: u64| {
+            let mut gen =
+                WorkloadGen::new(seed, vocab, plen, 1, 6).with_prompt_range(1, 3 * plen);
+            (0..n_reqs).map(|_| gen.next_request()).collect::<Vec<Request>>()
+        };
+        for path in [StatePath::Resident, StatePath::Reference] {
+            let run = |shim: bool| {
+                let mut out;
+                let metrics;
+                if shim {
+                    let mut s =
+                        Scheduler::with_path(LegacyShim(MockEngine::new()), policy.clone(), path);
+                    for r in make_reqs(seed) {
+                        s.submit(r).unwrap();
+                    }
+                    out = s.run_until_drained().unwrap();
+                    metrics = s.metrics().traffic_snapshot();
+                } else {
+                    let mut s = Scheduler::with_path(MockEngine::new(), policy.clone(), path);
+                    for r in make_reqs(seed) {
+                        s.submit(r).unwrap();
+                    }
+                    out = s.run_until_drained().unwrap();
+                    metrics = s.metrics().traffic_snapshot();
+                }
+                out.sort_by_key(|r| r.id);
+                let tokens: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+                (tokens, metrics)
+            };
+            let (direct_tokens, direct) = run(false);
+            let (shim_tokens, shim) = run(true);
+            if direct_tokens != shim_tokens {
+                return Err(format!("{path:?}: tokens diverged through the wrappers"));
+            }
+            if direct != shim {
+                return Err(format!(
+                    "{path:?}: counters diverged: {direct:?} vs {shim:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn aliased_rows_are_rejected_not_corrupting() {
+    // The regression the legacy surface could not catch: two batch rows
+    // sharing one slab row. Before the typed batch this was only a doc
+    // comment — an in-place engine would advance the shared row twice
+    // and silently corrupt both sequences' outputs. Now it is an error
+    // at every entry point.
+    let e = MockEngine::new();
+    let m = e.manifest().clone();
+    let cp = m.conv_state_elems();
+    let sp = m.ssm_state_elems();
+    let mut conv = vec![0f32; 2 * cp];
+    let mut ssm = vec![0f32; 2 * sp];
+    let mut ws = Workspace::new();
+
+    // Direct construction fails…
+    let segs = [
+        Segment { len: 1, row: 1, phase: Phase::Decode },
+        Segment { len: 1, row: 1, phase: Phase::Decode },
+    ];
+    let err = MixedBatch::new(&segs, &[3, 4]).unwrap_err();
+    assert!(err.to_string().contains("aliased slab row 1"), "{err}");
+
+    // …and so does the legacy wrapper that used to let it through.
+    let err = e
+        .step_mixed_into(&[1, 1], &[3, 4], &[1, 1], &mut conv, &mut ssm, 2, &mut ws)
+        .unwrap_err();
+    assert!(err.to_string().contains("aliased"), "{err}");
+    // Nothing ran: no device calls, no logits.
+    assert_eq!(ws.device_calls(), 0);
+
+    // Distinct rows on the same engine still work.
+    e.step_mixed_into(&[1, 1], &[3, 4], &[0, 1], &mut conv, &mut ssm, 2, &mut ws).unwrap();
+    assert_eq!(ws.take_device_calls(), 1);
+}
+
+#[test]
+fn caps_disallowed_plan_is_never_dispatched() {
+    // An engine that cannot execute fully-fused: the planner must mask
+    // it out at construction and never dispatch it — and the served
+    // tokens are identical to a fully-capable engine's (plan choice
+    // can never change outputs).
+    let ff = PlanChoice::candidates()[0];
+    let mut limited = EngineCaps::full();
+    limited.plans[ff.index()] = false;
+
+    let serve = |caps: EngineCaps| {
+        // The bundled prefill-heavy scenario: pure 4096-token prefill
+        // ticks, the bucket where fully-fused is the pinned argmin.
+        let sc = mambalaya::bench_util::ServeScenario::prefill_heavy();
+        let vocab = MockEngine::new().manifest().vocab;
+        let mut s = Scheduler::with_planner(
+            MockEngine::with_caps(caps),
+            sc.policy.clone(),
+            StatePath::Resident,
+            Planner::with_dwell(PlanSpec::Adaptive, 1),
+        );
+        for r in sc.requests(vocab) {
+            s.submit(r).unwrap();
+        }
+        let mut out = s.run_until_drained().unwrap();
+        out.sort_by_key(|r| r.id);
+        let tokens: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+        (tokens, s.metrics().ticks_per_plan)
+    };
+
+    let (full_tokens, full_plans) = serve(EngineCaps::full());
+    let (lim_tokens, lim_plans) = serve(limited);
+    assert_eq!(full_tokens, lim_tokens, "capability masking changed tokens");
+    assert!(
+        full_plans[ff.index()] > 0,
+        "scenario must make fully-fused attractive for the unrestricted engine"
+    );
+    assert_eq!(lim_plans[ff.index()], 0, "disallowed plan was dispatched");
+}
+
+#[test]
+fn donation_annotation_is_observability_only_on_host_engines() {
+    // Retain vs DonateInPlace: for in-process engines the annotation
+    // changes nothing observable (a PJRT backend would read it to set
+    // input/output aliasing); it must not change outputs or counters.
+    let e = MockEngine::new();
+    let m = e.manifest().clone();
+    let segs = [
+        Segment { len: 4, row: 0, phase: Phase::PrefillFirst },
+        Segment { len: 1, row: 1, phase: Phase::Decode },
+    ];
+    let tokens = [5i32, 6, 7, 8, 9];
+    let run = |donation: Donation| {
+        let mut conv = vec![0f32; 2 * m.conv_state_elems()];
+        let mut ssm = vec![0f32; 2 * m.ssm_state_elems()];
+        let mut ws = Workspace::new();
+        e.launch(LaunchSpec {
+            batch: MixedBatch::new(&segs, &tokens).unwrap(),
+            state: StateSlabs::new(&mut conv, &mut ssm, 2, donation),
+            plan: None,
+            ws: &mut ws,
+        })
+        .unwrap();
+        drain(&mut ws, &conv, &ssm)
+    };
+    assert_eq!(run(Donation::Retain), run(Donation::DonateInPlace));
+}
