@@ -64,22 +64,26 @@ if [[ "${1:-}" != "--fast" ]]; then
     # caps-declared varlen engine launches exactly once per tick with
     # zero staged bytes while the caps-off decomposition pays at least
     # its lockstep floor (max(chunk) device calls per chunk tick) —
-    # token outputs bit-identical either way. (The runtime module also
-    # builds under #![deny(missing_docs)], so the engine surface stays
-    # documented by construction.)
+    # token outputs bit-identical either way, and (5) the snapshot
+    # gate, asserting session follow-up turns prefill only their new
+    # tokens (the skipped history beats the re-prefill fallback >= 5x
+    # in state bytes) and best-of-N forks decode N candidates from one
+    # prefill — both token-identical to full re-prefill. (The runtime
+    # module also builds under #![deny(missing_docs)], so the engine
+    # surface stays documented by construction.)
     # All gates are on *counters* (same workload, same numbers, every
     # run), never on wall time; BENCH_hotpath.json, BENCH_planner.json,
-    # BENCH_sharding.json and BENCH_engine_api.json record the
-    # trajectory.
-    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API) =="
+    # BENCH_sharding.json, BENCH_engine_api.json and BENCH_snapshot.json
+    # record the trajectory.
+    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API + snapshot) =="
     cargo bench --bench hotpath -- --quick
-    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json; do
+    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json BENCH_snapshot.json; do
         if [ ! -s "$f" ]; then
             echo "ERROR: $f missing or empty" >&2
             exit 1
         fi
     done
-    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json written"
+    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json + BENCH_snapshot.json written"
 
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="

@@ -48,6 +48,17 @@
 //! their resident state rows (`bytes_migrated` in the `migration:`
 //! summary line) — never by re-prefilling.
 //!
+//! ## Session snapshot & fork
+//!
+//! `--sessions N` (with `--mock`) serves N multi-turn conversations
+//! through the session snapshot cache: each completed turn's recurrent
+//! state (one fixed-size arena row — the SSM analogue of a prefix
+//! cache) is cached per session, so every follow-up turn prefills
+//! **only its new tokens** (`prefill_tokens_skipped` in the
+//! `snapshot:` summary line). `--fork K` additionally forks the first
+//! session K ways copy-on-write — K best-of-N candidates decode from
+//! one shared prefill, zero bytes copied at fork time.
+//!
 //! ## Modes
 //!
 //! * `--mock` — serve on the deterministic in-process mock engine
@@ -62,7 +73,7 @@
 use std::time::Instant;
 
 use mambalaya::bench_util::ServeScenario;
-use mambalaya::coordinator::{BatchPolicy, Request, Server, WorkloadGen};
+use mambalaya::coordinator::{BatchPolicy, Request, Server, TrafficSnapshot, WorkloadGen};
 use mambalaya::planner::PlanSpec;
 use mambalaya::runtime::{Executor, Golden, MambaEngine, Manifest, MockEngine};
 use mambalaya::util::Args;
@@ -148,6 +159,7 @@ where
          (rebalance passes: {migration_passes})",
         t.migrations, t.bytes_migrated, t.reprefills_avoided, t.reprefill_tokens
     );
+    print_snapshot_line(&t);
     server.shutdown();
 
     println!(
@@ -160,11 +172,144 @@ where
     Ok(())
 }
 
+/// The deterministic snapshot-cache accounting (the session analogue
+/// of the `state traffic:` line): stores/hits/forks, the one-copy
+/// restore bytes, the prompt tokens follow-up turns did *not* replay,
+/// and the cache's unique-bytes gauge.
+fn print_snapshot_line(t: &TrafficSnapshot) {
+    println!(
+        "snapshot: stored={} hits={} forks={} restored={}B skipped_prefill_tokens={} \
+         cached={}B evictions={}",
+        t.snapshots_stored,
+        t.snapshot_hits,
+        t.snapshot_forks,
+        t.snapshot_bytes_restored,
+        t.prefill_tokens_skipped,
+        t.snapshot_bytes_cached,
+        t.snapshot_evictions
+    );
+}
+
+/// The `--sessions` demo: N multi-turn conversations served through
+/// the session snapshot cache, plus `--fork K` copy-on-write
+/// candidates decoding from the first session's shared prefill. Every
+/// follow-up turn prefills only its new tokens — the skipped history
+/// shows up in the `snapshot:` line, and the turn/candidate replies
+/// print so the skip is visibly not changing outputs.
+fn drive_sessions<E, F>(
+    factories: Vec<F>,
+    policy: BatchPolicy,
+    spec: PlanSpec,
+    n_sessions: usize,
+    fork: usize,
+    vocab: usize,
+) -> anyhow::Result<()>
+where
+    E: Executor,
+    F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+{
+    let fresh = ServeScenario::MULTI_TURN_NEW_TOKENS;
+    let t0 = Instant::now();
+    let mut server = Server::start_planned(factories, policy, spec);
+    if let Some(caps) = server.caps().first() {
+        println!("engine caps: {}", caps.summary());
+    }
+
+    // Turn 1: one opener per session (submitted together — the ticks
+    // batch across sessions as usual).
+    let openers: Vec<Request> = (0..n_sessions as u64)
+        .map(|i| Request {
+            id: i,
+            prompt: (0..24).map(|x| (x * 11 + i as i32 * 3 + 1) % vocab as i32).collect(),
+            max_new_tokens: 8,
+        })
+        .collect();
+    let rxs: Vec<_> =
+        openers.iter().map(|r| server.submit_session(r.clone(), r.id)).collect();
+    let replies: Vec<Vec<i32>> =
+        rxs.into_iter().map(|rx| rx.recv().map(|r| r.tokens)).collect::<Result<_, _>>()?;
+
+    // Turn 2: each prompt resubmits its conversation plus fresh tokens;
+    // the cache skips the shared history.
+    let follow_ups: Vec<Request> = openers
+        .iter()
+        .zip(&replies)
+        .map(|(r, reply)| Request {
+            id: 1000 + r.id,
+            prompt: ServeScenario::follow_up_prompt(&r.prompt, reply, fresh, vocab),
+            max_new_tokens: 8,
+        })
+        .collect();
+    let rxs: Vec<_> = follow_ups
+        .iter()
+        .zip(&openers)
+        .map(|(r, opener)| server.submit_session(r.clone(), opener.id))
+        .collect();
+    let replies2: Vec<Vec<i32>> =
+        rxs.into_iter().map(|rx| rx.recv().map(|r| r.tokens)).collect::<Result<_, _>>()?;
+    for (i, (r1, r2)) in replies.iter().zip(&replies2).enumerate() {
+        println!("session {i}: turn1 reply {r1:?} → turn2 reply {r2:?}");
+    }
+
+    // Fork: K best-of-N candidates off session 0's cached state.
+    let mut candidates = 0usize;
+    if fork > 0 {
+        for k in 0..fork as u64 {
+            anyhow::ensure!(server.fork_session(0, 10_000 + k), "fork {k} refused");
+        }
+        let rxs: Vec<_> = (0..fork as u64)
+            .map(|k| {
+                let r = Request {
+                    id: 2000 + k,
+                    prompt: ServeScenario::follow_up_prompt(
+                        &follow_ups[0].prompt,
+                        &replies2[0],
+                        2,
+                        vocab,
+                    ),
+                    max_new_tokens: 8,
+                };
+                server.submit_session(r, 10_000 + k)
+            })
+            .collect();
+        for (k, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv()?;
+            println!("candidate {k}: {:?}", resp.tokens);
+            candidates += 1;
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    for r in server.reports() {
+        println!("{r}");
+    }
+    let t = server.traffic();
+    print_snapshot_line(&t);
+    server.shutdown();
+
+    let turns = n_sessions * 2 + candidates;
+    anyhow::ensure!(
+        t.snapshot_hits as usize == n_sessions + candidates,
+        "every follow-up and candidate should hit the cache"
+    );
+    anyhow::ensure!(t.prefill_tokens_skipped > 0, "no history was skipped");
+    println!(
+        "\nserved {turns} session turns ({n_sessions} sessions, {candidates} forked candidates) \
+         in {wall:.2}s — follow-ups prefilled only their new tokens \
+         ({} history tokens skipped)",
+        t.prefill_tokens_skipped
+    );
+    println!("serve_mamba OK");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_requests = args.get_u64("requests", 24) as usize;
     let workers = (args.get_u64("workers", 1) as usize).max(1);
     let rebalance = args.flag("rebalance");
+    let sessions = args.get_u64("sessions", 0) as usize;
+    let fork = args.get_u64("fork", 0) as usize;
     let policy = BatchPolicy::from_args(&args);
     let spec = PlanSpec::parse(args.get_or("plan", "adaptive"))?;
 
@@ -182,12 +327,15 @@ fn main() -> anyhow::Result<()> {
             policy.token_budget,
             spec.name()
         );
-        let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
         fn mock_factory() -> anyhow::Result<MockEngine> {
             Ok(MockEngine::new())
         }
         let factories: Vec<fn() -> anyhow::Result<MockEngine>> =
             (0..workers).map(|_| mock_factory as fn() -> anyhow::Result<MockEngine>).collect();
+        if sessions > 0 {
+            return drive_sessions(factories, policy, spec, sessions, fork, vocab);
+        }
+        let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
         return drive(factories, policy, spec, reqs, rebalance);
     }
 

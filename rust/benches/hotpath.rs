@@ -21,9 +21,13 @@
 //!   assert the resident path moves ≥ 10× fewer state bytes than the
 //!   reference path — a counter gate, not a wall-time gate. Both modes
 //!   also run the planner gate (`BENCH_planner.json`), the sharding
-//!   gate (`BENCH_sharding.json`) and the engine-API gate
+//!   gate (`BENCH_sharding.json`), the engine-API gate
 //!   (`BENCH_engine_api.json`: caps-declared fused varlen launch = 1
-//!   device call per tick vs the decomposition's lockstep cost).
+//!   device call per tick vs the decomposition's lockstep cost) and
+//!   the snapshot gate (`BENCH_snapshot.json`: session snapshot cache —
+//!   multi-turn follow-ups prefill only their new tokens, best-of-N
+//!   forks decode N ways from one prefill, token-identical to full
+//!   re-prefill).
 
 use std::time::{Duration, Instant};
 
@@ -31,7 +35,7 @@ use mambalaya::arch::ArchSpec;
 use mambalaya::bench_util::{bench_config, black_box, BenchResult, ServeScenario};
 use mambalaya::cascade::{mamba1, ModelConfig};
 use mambalaya::coordinator::{
-    serve_all, BatchPolicy, Scheduler, StateArena, StatePath, TrafficSnapshot, WorkloadGen,
+    serve_all, BatchPolicy, Request, Scheduler, StateArena, StatePath, TrafficSnapshot, WorkloadGen,
 };
 use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
 use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
@@ -288,6 +292,7 @@ fn main() {
     planner_gate();
     sharding_gate();
     engine_api_gate();
+    snapshot_gate();
 
     if !quick {
         println!("\n== hot-path microbenchmarks ==");
@@ -628,7 +633,7 @@ fn sharded_skew_run(mode: SkewMode) -> SkewOutcome {
                 assert!(p.decode_phase());
                 match mode {
                     SkewMode::Migrate => {
-                        cold.attach(p);
+                        cold.attach(p).expect("well-formed packet attaches");
                         let after = hot.state_arena().resident_bytes()
                             + cold.state_arena().resident_bytes();
                         gauge_conserved =
@@ -767,4 +772,198 @@ fn sharding_gate() {
     std::fs::write("BENCH_sharding.json", doc.to_string())
         .expect("writing BENCH_sharding.json");
     println!("wrote BENCH_sharding.json (sharding gate: PASS)");
+}
+
+/// Session snapshot cache, gated on deterministic counters (never wall
+/// time):
+///
+/// * multi-turn: each follow-up turn prefills *only* its new tokens —
+///   the shared history is restored by one `state_bytes_per_seq` copy
+///   (`snapshot_bytes_restored`) and lands in `prefill_tokens_skipped`;
+/// * the snapshot-attach path is token-identical to a full re-prefill
+///   of the same turn-2 prompts on a session-less scheduler, and the
+///   skipped traffic beats the fallback's replay bytes by ≥ 5×;
+/// * best-of-N: N decode candidates are served from exactly one
+///   prefill via copy-on-write forks — `snapshot_forks == N`, zero new
+///   cached bytes, each candidate prefilling exactly its 1 new token.
+///
+/// Writes `BENCH_snapshot.json`.
+fn snapshot_gate() {
+    println!("\n== session snapshot cache: multi-turn skip + best-of-N fork ==");
+    let vocab = MockEngine::new().manifest().vocab;
+
+    // ---- multi-turn: follow-up turns prefill only their new tokens ----
+    let sc = ServeScenario::multi_turn();
+    let turn1 = sc.requests(vocab);
+    let mut s = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    for r in &turn1 {
+        // Session id = conversation id = turn-1 request id.
+        s.submit_session(r.clone(), Some(r.id)).unwrap();
+    }
+    let mut t1 = s.run_until_drained().unwrap();
+    t1.sort_by_key(|r| r.id);
+    let bytes_per_seq = s.state_arena().bytes_per_seq() as u64;
+    let prefill_turn1 = s.metrics().prefill_tokens;
+    assert_eq!(prefill_turn1, 4 * 24, "turn 1 pays the full prompts");
+    assert_eq!(s.metrics().snapshots_stored, ServeScenario::MULTI_TURN_SESSIONS);
+
+    let fresh = ServeScenario::MULTI_TURN_NEW_TOKENS;
+    let mut expected_new = 0u64;
+    let mut expected_skip = 0u64;
+    let turn2: Vec<Request> = turn1
+        .iter()
+        .zip(&t1)
+        .map(|(r, resp)| {
+            expected_skip += ServeScenario::session_history(&r.prompt, &resp.tokens).len() as u64;
+            expected_new += (fresh + 1) as u64; // fresh tokens + the un-fed last reply token
+            Request {
+                id: 1000 + r.id,
+                prompt: ServeScenario::follow_up_prompt(&r.prompt, &resp.tokens, fresh, vocab),
+                max_new_tokens: 8,
+            }
+        })
+        .collect();
+    for (r2, r1) in turn2.iter().zip(&turn1) {
+        s.submit_session(r2.clone(), Some(r1.id)).unwrap();
+    }
+    let mut t2 = s.run_until_drained().unwrap();
+    t2.sort_by_key(|r| r.id);
+    let prefill_turn2 = s.metrics().prefill_tokens - prefill_turn1;
+    let met = s.metrics();
+    println!(
+        "  multi_turn  turn2_prefill={prefill_turn2} skipped={} hits={} restored={}B",
+        met.prefill_tokens_skipped, met.snapshot_hits, met.snapshot_bytes_restored,
+    );
+
+    // Gate 1 (the skip): turn 2 prefills exactly the new tokens; every
+    // history token is skipped and counted.
+    assert_eq!(prefill_turn2, expected_new, "turn 2 prefilled more than its new tokens");
+    assert_eq!(met.snapshot_hits, ServeScenario::MULTI_TURN_SESSIONS);
+    assert_eq!(met.prefill_tokens_skipped, expected_skip);
+    assert_eq!(
+        met.snapshot_bytes_restored,
+        ServeScenario::MULTI_TURN_SESSIONS * bytes_per_seq,
+        "each hit restores exactly one state payload"
+    );
+
+    // Gate 2 (conformance): a session-less scheduler re-prefilling the
+    // full turn-2 prompts produces bit-identical tokens — and pays for
+    // every skipped token.
+    let mut base = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    for r in &turn2 {
+        base.submit(r.clone()).unwrap();
+    }
+    let mut tb = base.run_until_drained().unwrap();
+    tb.sort_by_key(|r| r.id);
+    let t2_tokens: Vec<Vec<i32>> = t2.iter().map(|r| r.tokens.clone()).collect();
+    let tb_tokens: Vec<Vec<i32>> = tb.iter().map(|r| r.tokens.clone()).collect();
+    assert_eq!(t2_tokens, tb_tokens, "snapshot attach changed tokens");
+    let full_prefill = base.metrics().prefill_tokens;
+    assert_eq!(full_prefill, expected_new + expected_skip);
+
+    // Gate 3 (the acceptance bar): each skipped token is one state
+    // update the fallback cannot avoid — one state_bytes_per_seq write
+    // — vs one payload copy per hit.
+    let fallback_bytes = expected_skip * bytes_per_seq;
+    let restored = met.snapshot_bytes_restored;
+    assert!(
+        fallback_bytes >= 5 * restored,
+        "snapshot gate failed: re-prefill fallback {fallback_bytes}B < 5x restored {restored}B"
+    );
+
+    // ---- best-of-N: N decodes from one prefill via CoW fork ----
+    let sc_n = ServeScenario::best_of_n();
+    let parent_req = sc_n.requests(vocab).remove(0);
+    let parent_session = 7u64;
+    let n = ServeScenario::BEST_OF_N;
+    let mut f = Scheduler::with_path(MockEngine::new(), sc_n.policy.clone(), StatePath::Resident);
+    f.submit_session(parent_req.clone(), Some(parent_session)).unwrap();
+    let shared = f.run_until_drained().unwrap().remove(0);
+    assert_eq!(shared.tokens.len(), 1);
+    let prefill_shared = f.metrics().prefill_tokens;
+    assert_eq!(prefill_shared, parent_req.prompt.len() as u64);
+
+    let cached_before = f.snapshot_cache().resident_bytes();
+    for i in 0..n as u64 {
+        assert!(f.fork_session(parent_session, 100 + i), "fork {i} failed");
+    }
+    assert_eq!(
+        f.snapshot_cache().resident_bytes(),
+        cached_before,
+        "CoW forks must add zero cached bytes"
+    );
+    assert_eq!(f.metrics().snapshot_forks, n as u64);
+
+    let children: Vec<Request> = (0..n as u64)
+        .map(|i| {
+            let mut p = parent_req.prompt.clone();
+            p.push(shared.tokens[0]); // the sampled token joins the prompt
+            Request { id: 10 + i, prompt: p, max_new_tokens: 8 }
+        })
+        .collect();
+    for (i, r) in children.iter().enumerate() {
+        f.submit_session(r.clone(), Some(100 + i as u64)).unwrap();
+    }
+    let mut outs = f.run_until_drained().unwrap();
+    outs.sort_by_key(|r| r.id);
+    let prefill_children = f.metrics().prefill_tokens - prefill_shared;
+    println!(
+        "  best_of_n   candidates={n} candidate_prefill={prefill_children} forks={}",
+        f.metrics().snapshot_forks,
+    );
+    assert_eq!(
+        prefill_children, n as u64,
+        "each candidate must prefill exactly its 1 new token"
+    );
+    assert_eq!(f.metrics().snapshot_hits, n as u64);
+
+    // Conformance: a candidate decoded from the fork matches a full
+    // re-prefill of the same prompt.
+    let mut base_n =
+        Scheduler::with_path(MockEngine::new(), sc_n.policy.clone(), StatePath::Resident);
+    base_n.submit(children[0].clone()).unwrap();
+    let solo = base_n.run_until_drained().unwrap().remove(0);
+    for o in &outs {
+        assert_eq!(o.tokens, solo.tokens, "forked candidate diverged from full re-prefill");
+    }
+
+    let mut arr = JsonValue::Arr(vec![]);
+    let mut mt = JsonValue::obj();
+    mt.set("name", "multi_turn")
+        .set("sessions", ServeScenario::MULTI_TURN_SESSIONS)
+        .set("turn1_prefill_tokens", prefill_turn1)
+        .set("turn2_prefill_tokens", prefill_turn2)
+        .set("prefill_tokens_skipped", met.prefill_tokens_skipped)
+        .set("snapshot_hits", met.snapshot_hits)
+        .set("snapshot_bytes_restored", restored)
+        .set("reprefill_fallback_bytes", fallback_bytes)
+        .set("full_reprefill_tokens", full_prefill)
+        .set("state_bytes_per_seq", bytes_per_seq);
+    arr.push(mt);
+    let mut bn = JsonValue::obj();
+    bn.set("name", "best_of_n")
+        .set("candidates", n as u64)
+        .set("shared_prefill_tokens", prefill_shared)
+        .set("candidate_prefill_tokens", prefill_children)
+        .set("snapshot_forks", n as u64)
+        .set("fork_cached_bytes_added", 0u64);
+    arr.push(bn);
+    let mut gate = JsonValue::obj();
+    gate.set("tokens_identical", true)
+        .set("turn2_prefill_is_new_tokens_only", true)
+        .set("prefill_tokens_skipped", met.prefill_tokens_skipped)
+        .set("snapshot_bytes_restored", restored)
+        .set("reprefill_fallback_bytes", fallback_bytes)
+        .set(
+            "snapshot_traffic_advantage",
+            ((fallback_bytes as f64 / restored.max(1) as f64) * 1e3).round() / 1e3,
+        )
+        .set("advantage_min", 5u64)
+        .set("best_of_n_single_prefill", true)
+        .set("pass", true);
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "snapshot").set("runs", arr).set("gate", gate);
+    std::fs::write("BENCH_snapshot.json", doc.to_string())
+        .expect("writing BENCH_snapshot.json");
+    println!("wrote BENCH_snapshot.json (snapshot gate: PASS)");
 }

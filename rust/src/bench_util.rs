@@ -18,6 +18,8 @@ enum ScenarioMix {
     Interference,
     ShardedSkew,
     ChunkHeavy,
+    MultiTurn,
+    BestOfN,
 }
 
 /// A named, deterministic serving workload: a batch policy plus a
@@ -137,6 +139,83 @@ impl ServeScenario {
     /// many device calls.
     pub const CHUNK_HEAVY_LEN: usize = 6;
 
+    /// Multi-turn chat for the snapshot gate: each of
+    /// [`ServeScenario::MULTI_TURN_SESSIONS`] sessions opens with a
+    /// 24-token prompt and an 8-token reply. The gate then builds each
+    /// session's turn-2 prompt with [`ServeScenario::follow_up_prompt`]
+    /// (turn-1 history plus [`ServeScenario::MULTI_TURN_NEW_TOKENS`]
+    /// fresh tokens) and asserts turn 2 prefills *only* the new tokens
+    /// — the history lands in `prefill_tokens_skipped`.
+    pub fn multi_turn() -> ServeScenario {
+        ServeScenario {
+            name: "multi_turn",
+            policy: BatchPolicy {
+                chunk_tokens: 8,
+                token_budget: 32,
+                max_chunk_rows: 4,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::MultiTurn,
+        }
+    }
+
+    /// Sessions in [`ServeScenario::multi_turn`].
+    pub const MULTI_TURN_SESSIONS: u64 = 4;
+
+    /// Fresh tokens each turn-2 prompt appends after its history.
+    pub const MULTI_TURN_NEW_TOKENS: usize = 6;
+
+    /// Best-of-N for the snapshot gate: one 32-token prompt generating
+    /// a single token, whose session is then forked
+    /// [`ServeScenario::BEST_OF_N`] ways — N decodes from exactly one
+    /// prefill.
+    pub fn best_of_n() -> ServeScenario {
+        ServeScenario {
+            name: "best_of_n",
+            policy: BatchPolicy {
+                chunk_tokens: 8,
+                token_budget: 32,
+                max_chunk_rows: 4,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::BestOfN,
+        }
+    }
+
+    /// Fork fan-out of [`ServeScenario::best_of_n`].
+    pub const BEST_OF_N: usize = 4;
+
+    /// The token history a completed turn's state summarizes: the
+    /// prompt plus every *engine-consumed* reply token. The final
+    /// sampled token was never fed back (it is the pending next-step
+    /// input), so it is excluded — including it in a follow-up prompt
+    /// makes it one of the *new* tokens that turn prefills.
+    pub fn session_history(prompt: &[i32], reply: &[i32]) -> Vec<i32> {
+        let mut h = prompt.to_vec();
+        if !reply.is_empty() {
+            h.extend_from_slice(&reply[..reply.len() - 1]);
+        }
+        h
+    }
+
+    /// A follow-up turn's prompt: the previous turn (prompt + full
+    /// reply) extended with `fresh` deterministic new tokens — a strict
+    /// extension of [`ServeScenario::session_history`], as a real chat
+    /// client resubmitting the conversation would produce. Shared by
+    /// the snapshot gate, `serve_mamba --sessions`, and the conformance
+    /// tests so the turn-2 contract is defined once.
+    pub fn follow_up_prompt(prompt: &[i32], reply: &[i32], fresh: usize, vocab: usize) -> Vec<i32> {
+        let v = vocab as i32;
+        let mut p = prompt.to_vec();
+        p.extend_from_slice(reply);
+        for x in 0..fresh as i32 {
+            p.push((x * 5 + 3) % v);
+        }
+        p
+    }
+
     /// The scenarios the planner CI gates run on.
     pub fn bundled() -> Vec<ServeScenario> {
         vec![
@@ -182,6 +261,22 @@ impl ServeScenario {
                     max_new_tokens: 4,
                 })
                 .collect(),
+            ScenarioMix::MultiTurn => (0..Self::MULTI_TURN_SESSIONS)
+                .map(|i| Request {
+                    id: i,
+                    // Turn 1 of session i: 24 tokens, 8-token reply.
+                    prompt: (0..24).map(|x| (x * 11 + i as i32 * 3 + 1) % v).collect(),
+                    max_new_tokens: 8,
+                })
+                .collect(),
+            ScenarioMix::BestOfN => vec![Request {
+                id: 0,
+                // One shared prefill; the gate forks its session N ways
+                // with max_new_tokens 1, so the stored snapshot is the
+                // state right after the prompt.
+                prompt: (0..32).map(|x| (x * 13 + 5) % v).collect(),
+                max_new_tokens: 1,
+            }],
             ScenarioMix::Interference => {
                 let mut reqs: Vec<Request> = (0..6)
                     .map(|i| Request {
@@ -298,10 +393,12 @@ mod tests {
 
     #[test]
     fn scenarios_are_deterministic_and_well_formed() {
-        for sc in ServeScenario::bundled()
-            .into_iter()
-            .chain([ServeScenario::sharded_skew(), ServeScenario::chunk_heavy()])
-        {
+        for sc in ServeScenario::bundled().into_iter().chain([
+            ServeScenario::sharded_skew(),
+            ServeScenario::chunk_heavy(),
+            ServeScenario::multi_turn(),
+            ServeScenario::best_of_n(),
+        ]) {
             let a = sc.requests(17);
             let b = sc.requests(17);
             assert!(!a.is_empty());
@@ -318,6 +415,24 @@ mod tests {
         assert_eq!(m.len(), 24);
         assert_eq!(m, ServeScenario::mixed_traffic(24, 17));
         assert!(m.iter().any(|r| r.prompt.len() >= 48), "long prompts present");
+    }
+
+    #[test]
+    fn follow_up_prompt_strictly_extends_session_history() {
+        let prompt: Vec<i32> = (0..24).collect();
+        let reply = vec![3, 1, 4, 1, 5];
+        let history = ServeScenario::session_history(&prompt, &reply);
+        assert_eq!(history.len(), prompt.len() + reply.len() - 1, "last token never fed back");
+        let fresh = 6;
+        let p2 = ServeScenario::follow_up_prompt(&prompt, &reply, fresh, 17);
+        assert_eq!(p2, ServeScenario::follow_up_prompt(&prompt, &reply, fresh, 17));
+        assert!(p2.len() > history.len());
+        assert_eq!(&p2[..history.len()], &history[..], "history is a strict prefix");
+        // New tokens the snapshot path must prefill: the un-fed final
+        // reply token plus the fresh ones.
+        assert_eq!(p2.len() - history.len(), fresh + 1);
+        // Empty reply: the history is just the prompt.
+        assert_eq!(ServeScenario::session_history(&prompt, &[]), prompt);
     }
 
     #[test]

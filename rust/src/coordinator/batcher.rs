@@ -140,10 +140,18 @@ impl Batcher {
         self.jobs.push_back(PrefillJob { id, total: prompt_tokens, pos: 0 });
     }
 
-    /// Enqueue a *migrated* mid-prefill prompt with its cursor already
-    /// at `pos` (the partial state for `tokens[..pos]` was attached to
-    /// the arena by the scheduler). Joins the FIFO tail like any other
+    /// Enqueue a prompt with its cursor already at `pos` — a migrated
+    /// mid-prefill sequence, or a session snapshot hit whose history
+    /// prefix is already summarized by the attached state (in both
+    /// cases the partial state for `tokens[..pos]` was attached to the
+    /// arena by the scheduler). Joins the FIFO tail like any other
     /// arrival.
+    ///
+    /// The assert is a programmer-error guard, not input validation:
+    /// `Scheduler::attach` rejects malformed migration packets (cursor
+    /// past prompt end, wrong payload shape, …) with an `Err` *before*
+    /// reaching here, and the snapshot-hit path derives `pos` from a
+    /// strict-prefix match, so a trip here means a scheduler bug.
     pub fn enqueue_at(&mut self, id: u64, prompt_tokens: usize, pos: usize) {
         assert!(pos < prompt_tokens, "cursor past prompt end for seq {id}");
         self.jobs.push_back(PrefillJob { id, total: prompt_tokens, pos });

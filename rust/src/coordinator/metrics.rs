@@ -61,6 +61,26 @@ pub struct TrafficSnapshot {
     /// Already-processed tokens re-prefilled by `Reprefill`-mode
     /// migrations (the baseline cost the state move eliminates).
     pub reprefill_tokens: u64,
+    /// Session snapshots stored into the snapshot cache on request
+    /// completion (one counted `state_bytes_per_seq` copy each).
+    pub snapshots_stored: u64,
+    /// Follow-up submissions that attached a cached session snapshot
+    /// instead of prefilling their history.
+    pub snapshot_hits: u64,
+    /// Copy-on-write session forks (best-of-N / parallel sampling);
+    /// forks share the parent payload, so they add zero cached bytes.
+    pub snapshot_forks: u64,
+    /// State bytes restored from the snapshot cache into the arena —
+    /// exactly `state_bytes_per_seq` per hit.
+    pub snapshot_bytes_restored: u64,
+    /// History tokens a snapshot attach skipped (the prefill work a
+    /// session-less submit would have paid to rebuild the same state).
+    pub prefill_tokens_skipped: u64,
+    /// Snapshot-cache entries evicted by the LRU byte budget.
+    pub snapshot_evictions: u64,
+    /// Gauge: unique payload bytes held by the snapshot cache (shared
+    /// fork payloads counted once).
+    pub snapshot_bytes_cached: u64,
     /// Plan switches the planner performed.
     pub plan_switches: u64,
     /// Ticks executed under each plan, indexed by
@@ -95,6 +115,16 @@ impl TrafficSnapshot {
         self.bytes_migrated += t.bytes_migrated;
         self.reprefills_avoided += t.reprefills_avoided;
         self.reprefill_tokens += t.reprefill_tokens;
+        self.snapshots_stored += t.snapshots_stored;
+        self.snapshot_hits += t.snapshot_hits;
+        self.snapshot_forks += t.snapshot_forks;
+        self.snapshot_bytes_restored += t.snapshot_bytes_restored;
+        self.prefill_tokens_skipped += t.prefill_tokens_skipped;
+        self.snapshot_evictions += t.snapshot_evictions;
+        // Like the resident gauge: per-worker snapshot caches are
+        // disjoint (sessions pin to one shard), so summing the cached
+        // gauge yields the global figure.
+        self.snapshot_bytes_cached += t.snapshot_bytes_cached;
         self.plan_switches += t.plan_switches;
         for (a, b) in self.ticks_per_plan.iter_mut().zip(&t.ticks_per_plan) {
             *a += b;
@@ -193,6 +223,22 @@ pub struct Metrics {
     pub reprefills_avoided: u64,
     /// Already-processed tokens replayed by `Reprefill`-mode attaches.
     pub reprefill_tokens: u64,
+    /// Session snapshots stored on request completion.
+    pub snapshots_stored: u64,
+    /// Follow-up submits that attached a cached session snapshot.
+    pub snapshot_hits: u64,
+    /// Copy-on-write session forks.
+    pub snapshot_forks: u64,
+    /// State bytes restored from the snapshot cache into the arena.
+    pub snapshot_bytes_restored: u64,
+    /// History tokens snapshot attaches skipped re-prefilling.
+    pub prefill_tokens_skipped: u64,
+    /// Snapshot-cache entries evicted by the LRU byte budget
+    /// (mirrors the cache's own monotone total).
+    pub snapshot_evictions: u64,
+    /// Gauge (not monotone): unique payload bytes the snapshot cache
+    /// holds right now (mirrors the cache's resident gauge).
+    pub snapshot_bytes_cached: u64,
     /// Plan switches the planner performed.
     pub plan_switches: u64,
     /// Ticks executed under each plan ([`PlanChoice::index`]).
@@ -239,6 +285,13 @@ impl Metrics {
             bytes_migrated: 0,
             reprefills_avoided: 0,
             reprefill_tokens: 0,
+            snapshots_stored: 0,
+            snapshot_hits: 0,
+            snapshot_forks: 0,
+            snapshot_bytes_restored: 0,
+            prefill_tokens_skipped: 0,
+            snapshot_evictions: 0,
+            snapshot_bytes_cached: 0,
             plan_switches: 0,
             ticks_per_plan: [0; PlanChoice::COUNT],
             plan_dwell_hist: [0; DWELL_BUCKETS],
@@ -323,6 +376,40 @@ impl Metrics {
         self.reprefill_tokens += tokens;
     }
 
+    /// Record a session snapshot stored on request completion (one
+    /// counted `state_bytes_per_seq` copy out of the arena).
+    pub fn record_snapshot_store(&mut self) {
+        self.snapshots_stored += 1;
+    }
+
+    /// Record a snapshot-cache hit on submit: `bytes` of state restored
+    /// into the arena, `skipped_tokens` of history the follow-up will
+    /// not re-prefill, and the arena's resident gauge *after* the
+    /// attach (snapshot attaches, like migrations, move the gauge
+    /// between ticks).
+    pub fn record_snapshot_hit(&mut self, bytes: u64, skipped_tokens: u64, resident: u64) {
+        self.snapshot_hits += 1;
+        self.snapshot_bytes_restored += bytes;
+        self.prefill_tokens_skipped += skipped_tokens;
+        self.state_bytes_resident = resident;
+    }
+
+    /// Record a copy-on-write session fork (shares the parent payload;
+    /// no bytes copied).
+    pub fn record_snapshot_fork(&mut self) {
+        self.snapshot_forks += 1;
+    }
+
+    /// Mirror the snapshot cache's own gauges into the metrics: the
+    /// unique-bytes-cached gauge and the monotone eviction total. Both
+    /// are assignments (the cache is the source of truth); the
+    /// server-wide view still sums cleanly because per-worker caches
+    /// are disjoint.
+    pub fn record_snapshot_cache(&mut self, cached_bytes: u64, evictions: u64) {
+        self.snapshot_bytes_cached = cached_bytes;
+        self.snapshot_evictions = evictions;
+    }
+
     /// Record one tick's plan decision and the engine's modeled cost
     /// for it (drained from the workspace after the call).
     pub fn record_plan(&mut self, d: &PlanDecision, modeled_cycles: u64, modeled_bytes: u64) {
@@ -349,6 +436,13 @@ impl Metrics {
             bytes_migrated: self.bytes_migrated,
             reprefills_avoided: self.reprefills_avoided,
             reprefill_tokens: self.reprefill_tokens,
+            snapshots_stored: self.snapshots_stored,
+            snapshot_hits: self.snapshot_hits,
+            snapshot_forks: self.snapshot_forks,
+            snapshot_bytes_restored: self.snapshot_bytes_restored,
+            prefill_tokens_skipped: self.prefill_tokens_skipped,
+            snapshot_evictions: self.snapshot_evictions,
+            snapshot_bytes_cached: self.snapshot_bytes_cached,
             plan_switches: self.plan_switches,
             ticks_per_plan: self.ticks_per_plan,
             plan_dwell_hist: self.plan_dwell_hist,
@@ -398,6 +492,7 @@ impl Metrics {
              ticks={} max_tick_tokens={} queue={:.1} budget_use={:.2} \
              gathered={}B scattered={}B resident={}B padded_rows={} device_calls={} \
              migrations={}in/{}out migrated={}B reprefills_avoided={} \
+             snap={}s/{}h/{}f restored={}B skipped={} cached={}B evicted={} \
              plans={} plan_switches={} plan_err={:.2}x \
              ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
             self.requests_completed,
@@ -419,6 +514,13 @@ impl Metrics {
             self.migrations_out,
             self.bytes_migrated,
             self.reprefills_avoided,
+            self.snapshots_stored,
+            self.snapshot_hits,
+            self.snapshot_forks,
+            self.snapshot_bytes_restored,
+            self.prefill_tokens_skipped,
+            self.snapshot_bytes_cached,
+            self.snapshot_evictions,
             snap.plans_summary(),
             self.plan_switches,
             snap.prediction_error(),
@@ -604,6 +706,41 @@ mod tests {
         assert!(r.contains("migrations=1in/0out"), "{r}");
         assert!(r.contains("migrated=256B"), "{r}");
         assert!(r.contains("reprefills_avoided=1"), "{r}");
+    }
+
+    #[test]
+    fn snapshot_accounting_and_accumulation() {
+        // Worker A caches two sessions and serves one hit; worker B
+        // only forks. Counters sum across workers; the cached gauge
+        // sums too (per-worker caches are disjoint).
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record_snapshot_store();
+        a.record_snapshot_store();
+        a.record_snapshot_cache(512, 0);
+        a.record_snapshot_hit(256, 31, 1024);
+        b.record_snapshot_fork();
+        b.record_snapshot_cache(256, 1);
+        assert_eq!(a.snapshots_stored, 2);
+        assert_eq!(a.snapshot_hits, 1);
+        assert_eq!(a.snapshot_bytes_restored, 256);
+        assert_eq!(a.prefill_tokens_skipped, 31);
+        assert_eq!(a.state_bytes_resident, 1024, "hit moves the arena gauge");
+        let mut total = TrafficSnapshot::default();
+        total.accumulate(&a.traffic_snapshot());
+        total.accumulate(&b.traffic_snapshot());
+        assert_eq!(total.snapshots_stored, 2);
+        assert_eq!(total.snapshot_hits, 1);
+        assert_eq!(total.snapshot_forks, 1);
+        assert_eq!(total.snapshot_bytes_restored, 256);
+        assert_eq!(total.prefill_tokens_skipped, 31);
+        assert_eq!(total.snapshot_bytes_cached, 768);
+        assert_eq!(total.snapshot_evictions, 1);
+        let r = a.report();
+        assert!(r.contains("snap=2s/1h/0f"), "{r}");
+        assert!(r.contains("restored=256B"), "{r}");
+        assert!(r.contains("skipped=31"), "{r}");
+        assert!(r.contains("cached=512B"), "{r}");
     }
 
     #[test]

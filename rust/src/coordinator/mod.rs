@@ -13,15 +13,17 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
+pub mod snapshot;
 pub mod state;
 
 pub use batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 pub use metrics::{Metrics, TrafficSnapshot, DWELL_BUCKETS};
-pub use request::{Request, Response, WorkloadGen};
+pub use request::{InFlight, Request, Response, WorkloadGen};
 pub use scheduler::{Scheduler, StatePath};
 pub use server::{serve_all, Server};
 pub use shard::{
     Migration, MigrationMode, MigrationOutcome, MigrationPacket, RouterPolicy, ShardMap,
     WorkerLoad,
 };
+pub use snapshot::{SnapshotCache, SnapshotConfig, SnapshotHit, SnapshotPayload};
 pub use state::{SlotHandle, StateArena};

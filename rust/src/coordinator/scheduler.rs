@@ -49,6 +49,7 @@ use super::batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 use super::metrics::Metrics;
 use super::request::{InFlight, Request, Response};
 use super::shard::MigrationPacket;
+use super::snapshot::{SnapshotCache, SnapshotConfig};
 use super::state::{SlotHandle, StateArena};
 
 /// How the scheduler moves recurrent state between ticks.
@@ -105,6 +106,14 @@ pub struct Scheduler<E: Executor> {
     /// [`WorkloadFeatures`] see the server-wide residency, not just
     /// this worker's slice.
     remote_resident: u64,
+    /// Session-keyed snapshot cache: completed session-tagged requests
+    /// export their arena row here; follow-up turns attach it and
+    /// prefill only their new tokens. Owned by this scheduler thread
+    /// (sessions pin to one shard), never crosses the channel.
+    snapshots: SnapshotCache,
+    /// seq id → session id for in-flight session-tagged requests, so
+    /// the completion hook knows which cache key to store under.
+    session_of: BTreeMap<u64, u64>,
     metrics: Metrics,
     // Per-tick staging, retained across ticks so the steady-state
     // decode tick allocates nothing.
@@ -179,6 +188,8 @@ impl<E: Executor> Scheduler<E> {
             decode_rr: 0,
             poisoned: false,
             remote_resident: 0,
+            snapshots: SnapshotCache::new(SnapshotConfig::default()),
+            session_of: BTreeMap::new(),
             metrics: Metrics::new(),
             segs_buf: Vec::new(),
             tokens_buf: Vec::new(),
@@ -192,11 +203,119 @@ impl<E: Executor> Scheduler<E> {
     /// Accept a request. Any non-empty prompt length is served — the
     /// batcher splits it into chunks of at most `chunk_tokens`.
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        self.submit_session(req, None)
+    }
+
+    /// Accept a request, optionally tagged with a session id.
+    ///
+    /// A session-tagged request does two things a plain one does not:
+    /// on completion, its final recurrent state is exported to the
+    /// [`SnapshotCache`] keyed by the session; and at submit time the
+    /// cache is consulted — if the stored history is a strict prefix of
+    /// this prompt, the snapshot is attached via the arena's
+    /// `attach_row` splice (one counted copy, `snapshot_bytes_restored`)
+    /// and the prefill cursor starts *after* the history, so only the
+    /// new tokens run through the engine (`prefill_tokens_skipped`).
+    /// Token outputs are identical to a full prefill: the cached row is
+    /// bit-exactly the state the skipped history would rebuild, and the
+    /// chunked-prefill machinery already resumes from a nonzero cursor
+    /// (the same splice migration attaches use).
+    ///
+    /// Duplicate in-flight ids are rejected: admitting one would make
+    /// `StateArena::admit` silently re-zero the resident row of the
+    /// original mid-flight (see `admit`'s idempotence contract), which
+    /// corrupts its remaining generation.
+    pub fn submit_session(&mut self, req: Request, session: Option<u64>) -> Result<()> {
         anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
         anyhow::ensure!(req.max_new_tokens >= 1, "must generate at least one token");
-        self.batcher.enqueue(req.id, req.prompt.len());
-        self.waiting.insert(req.id, InFlight::new(req));
+        anyhow::ensure!(
+            !self.waiting.contains_key(&req.id) && !self.running.contains_key(&req.id),
+            "request id {} is already in flight (duplicate submit would re-zero its \
+             resident state row)",
+            req.id
+        );
+        let id = req.id;
+        if let Some(session) = session {
+            self.session_of.insert(id, session);
+            if let Some(hit) = self.snapshots.lookup(session, &req.prompt) {
+                let h = hit.history_len;
+                let bytes = hit.payload.state_bytes();
+                self.states.attach_row(id, &hit.payload.conv, &hit.payload.ssm);
+                self.metrics.record_snapshot_hit(
+                    bytes,
+                    h as u64,
+                    self.states.resident_bytes(),
+                );
+                self.mirror_snapshot_cache();
+                self.batcher.enqueue_at(id, req.prompt.len(), h);
+                let mut fl = InFlight::new(req);
+                fl.prefill_pos = h;
+                self.waiting.insert(id, fl);
+                return Ok(());
+            }
+        }
+        self.batcher.enqueue(id, req.prompt.len());
+        self.waiting.insert(id, InFlight::new(req));
         Ok(())
+    }
+
+    /// Copy-on-write session fork: register `child` as a session whose
+    /// next submit attaches `parent`'s snapshot. O(1) in state bytes —
+    /// the payload is refcounted and shared; each child's attach is the
+    /// one counted copy. Returns `false` when the parent has no
+    /// snapshot (or the child key is taken).
+    pub fn fork_session(&mut self, parent: u64, child: u64) -> bool {
+        let ok = self.snapshots.fork(parent, child);
+        if ok {
+            self.metrics.record_snapshot_fork();
+            self.mirror_snapshot_cache();
+        }
+        ok
+    }
+
+    /// Replace the snapshot cache's LRU byte budget and re-enforce it
+    /// immediately (`0` disables session caching).
+    pub fn set_snapshot_budget(&mut self, bytes: u64) {
+        self.snapshots.set_budget(bytes);
+        self.mirror_snapshot_cache();
+    }
+
+    /// The session snapshot cache (tests / diagnostics).
+    pub fn snapshot_cache(&self) -> &SnapshotCache {
+        &self.snapshots
+    }
+
+    /// Mirror the cache's unique-bytes gauge and eviction total into
+    /// the metrics after any mutation.
+    fn mirror_snapshot_cache(&mut self) {
+        self.metrics
+            .record_snapshot_cache(self.snapshots.resident_bytes(), self.snapshots.evictions());
+    }
+
+    /// Completion hook: export a finishing session-tagged request's
+    /// state to the snapshot cache, keyed by its session. Runs *before*
+    /// the arena row is released. The stored history is everything the
+    /// state has actually consumed: the (possibly reprefill-extended)
+    /// prompt plus the fed-back generated tokens — the final sampled
+    /// token was never fed through the engine, so it is excluded; a
+    /// follow-up turn that includes it in its prompt prefills it as a
+    /// new token, which keeps snapshot attaches token-identical to full
+    /// prefills.
+    fn snapshot_on_completion(&mut self, seq: u64, fl: &InFlight) {
+        let Some(session) = self.session_of.remove(&seq) else {
+            return;
+        };
+        let Some((conv, ssm)) = self.states.snapshot(seq) else {
+            return;
+        };
+        let k = fl.generated.len();
+        let mut history = fl.req.prompt.clone();
+        if k > 0 && fl.prompt_replayed < k - 1 {
+            history.extend_from_slice(&fl.generated[fl.prompt_replayed..k - 1]);
+        }
+        self.snapshots.store(session, history, conv, ssm);
+        self.metrics.record_snapshot_store();
+        self.mirror_snapshot_cache();
     }
 
     pub fn pending(&self) -> usize {
@@ -289,6 +408,10 @@ impl<E: Executor> Scheduler<E> {
         let from = self.states.handle_of(seq).expect("in-flight seq holds state");
         let (conv, ssm) =
             self.states.detach_row(seq).expect("in-flight seq has resident state");
+        // A migrated request completes on another worker, whose cache
+        // never saw this session — drop the tag here rather than leave
+        // a stale entry (the session simply misses on its next turn).
+        self.session_of.remove(&seq);
         self.metrics.record_migration_out(self.states.resident_bytes());
         Some(MigrationPacket { flight, from, conv, ssm })
     }
@@ -299,12 +422,30 @@ impl<E: Executor> Scheduler<E> {
     /// rejoin the running set, mid-prefill ones rejoin the prefill
     /// queue at their cursor. One `state_bytes_per_seq` transfer,
     /// counted as `bytes_migrated`; never a re-prefill.
-    pub fn attach(&mut self, p: MigrationPacket) {
+    ///
+    /// A malformed packet is **rejected, not unwound**: the packet
+    /// comes from another worker over a channel, so a corrupt one must
+    /// not crash this worker (the old behaviour was an `assert!` panic
+    /// deep in `Batcher::enqueue_at`, or — worse — a decode-phase
+    /// packet with an empty `generated` buffer joining the running set
+    /// and panicking mid-tick). Validation runs *before* any state is
+    /// touched, so `Err` returns the packet unchanged and leaves this
+    /// scheduler exactly as it was; the server falls back to
+    /// [`Scheduler::attach_reprefill`], which rebuilds state from
+    /// tokens and doesn't trust the payload.
+    pub fn attach(&mut self, p: MigrationPacket) -> Result<(), MigrationPacket> {
         let seq = p.seq();
-        debug_assert!(
-            !self.running.contains_key(&seq) && !self.waiting.contains_key(&seq),
-            "attach of a sequence already in flight here"
-        );
+        let (conv_len, ssm_len) = self.states.payload_shape();
+        let valid = !self.running.contains_key(&seq)
+            && !self.waiting.contains_key(&seq)
+            && !p.flight.req.prompt.is_empty()
+            && p.flight.prefill_pos <= p.flight.req.prompt.len()
+            && (!p.decode_phase() || !p.flight.generated.is_empty())
+            && p.conv.len() == conv_len
+            && p.ssm.len() == ssm_len;
+        if !valid {
+            return Err(p);
+        }
         let decode_phase = p.decode_phase();
         let bytes = p.state_bytes();
         self.states.attach_row(seq, &p.conv, &p.ssm);
@@ -317,6 +458,7 @@ impl<E: Executor> Scheduler<E> {
                 .enqueue_at(seq, p.flight.req.prompt.len(), p.flight.prefill_pos);
             self.waiting.insert(seq, p.flight);
         }
+        Ok(())
     }
 
     /// **Re-prefill attach**: the pre-sharding baseline, kept so the
@@ -339,11 +481,20 @@ impl<E: Executor> Scheduler<E> {
             // to replay; the completing chunk re-samples gk. Append
             // only the suffix a previous re-prefill has not already
             // folded into the prompt (`prompt_replayed`), else the
-            // replayed history would duplicate tokens.
+            // replayed history would duplicate tokens. k == 0 — a
+            // decode-phase packet with nothing generated yet (cursor at
+            // prompt end, first token pending) — has nothing to fold
+            // back: `k - 1` would underflow usize and panic, so just
+            // replay the prompt.
             let k = flight.generated.len();
-            flight.req.prompt.extend_from_slice(&flight.generated[flight.prompt_replayed..k - 1]);
-            flight.prompt_replayed = k - 1;
-            flight.generated.truncate(k - 1);
+            if k > 0 {
+                flight
+                    .req
+                    .prompt
+                    .extend_from_slice(&flight.generated[flight.prompt_replayed..k - 1]);
+                flight.prompt_replayed = k - 1;
+                flight.generated.truncate(k - 1);
+            }
         }
         flight.prefill_pos = 0;
         self.metrics
@@ -586,6 +737,15 @@ impl<E: Executor> Scheduler<E> {
                 fl.generated.push(self.next_buf[b]);
                 self.metrics.record_decode(1); // the prefill-produced token
                 if fl.done() {
+                    // Reference path: completed flights normally skip
+                    // the install-back, but a session snapshot needs
+                    // the post-tick state in the arena first.
+                    if self.session_of.contains_key(&ch.id) {
+                        if let Some((conv, ssm)) = &ref_out {
+                            self.states.install_from_batch(ch.id, batch, b, conv, ssm);
+                        }
+                    }
+                    self.snapshot_on_completion(ch.id, &fl); // before the row is freed
                     self.states.release(ch.id); // free the slot
                     let resp = fl.finish();
                     self.metrics.record_completion(resp.ttft, resp.total);
@@ -612,6 +772,12 @@ impl<E: Executor> Scheduler<E> {
             fl.generated.push(self.next_buf[b]);
             if fl.done() {
                 let fl = self.running.remove(&id).unwrap();
+                if self.session_of.contains_key(&id) {
+                    if let Some((conv, ssm)) = &ref_out {
+                        self.states.install_from_batch(id, batch, b, conv, ssm);
+                    }
+                }
+                self.snapshot_on_completion(id, &fl); // before the row is freed
                 self.states.release(id);
                 let resp = fl.finish();
                 self.metrics.record_completion(resp.ttft, resp.total);
@@ -925,7 +1091,7 @@ mod tests {
         assert_eq!(p.from.shard, 0);
         assert_eq!(p.state_bytes(), a.state_arena().bytes_per_seq() as u64);
         assert!(a.detach(5).is_none(), "gone from the source");
-        b.attach(p);
+        b.attach(p).unwrap();
         assert_eq!(b.slot_of(5).unwrap().shard, 1, "migration changed the handle's shard");
 
         let mut out = b.run_until_drained().unwrap();
@@ -960,7 +1126,7 @@ mod tests {
         let p = a.detach(9).expect("mid-prefill seq with state detaches");
         assert!(!p.decode_phase());
         assert_eq!(p.flight.prefill_pos, 8);
-        b.attach(p);
+        b.attach(p).unwrap();
         let out = b.run_until_drained().unwrap();
         assert_eq!(out[0].tokens, solo);
         // Target only prefilled the *remaining* 16 tokens.
@@ -994,7 +1160,7 @@ mod tests {
             if reprefill {
                 b.attach_reprefill(p);
             } else {
-                b.attach(p);
+                b.attach(p).unwrap();
             }
             let out = b.run_until_drained().unwrap();
             (out[0].tokens.clone(), b.metrics().reprefill_tokens, replay_cost)

@@ -14,7 +14,14 @@
 //! (`bytes_migrated`), never a re-prefill; [`Server::rebalance`] plans
 //! moves under the [`RouterPolicy`] hysteresis so balanced or
 //! alternating load never thrashes state between workers.
+//!
+//! **Sessions** ([`Server::submit_session`] / [`Server::fork_session`])
+//! pin each conversation to one shard, whose scheduler keeps a
+//! snapshot cache of completed turns: a follow-up prompt extending the
+//! previous turn attaches the cached state row and prefills only its
+//! new tokens.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 
@@ -39,6 +46,14 @@ type DetachReply = (Box<MigrationPacket>, Sender<Response>);
 
 enum Msg {
     Submit(Request, Sender<Response>),
+    /// Session-tagged submit: the worker consults its snapshot cache
+    /// and, on a hit, prefills only the tokens after the cached
+    /// history.
+    SubmitSession(Request, u64, Sender<Response>),
+    /// Copy-on-write session fork on the worker owning the parent.
+    Fork(u64, u64, Sender<bool>),
+    /// Replace every worker's snapshot-cache byte budget.
+    SnapshotBudget(u64),
     Report(Sender<String>),
     Traffic(Sender<TrafficSnapshot>),
     Caps(Sender<EngineCaps>),
@@ -66,6 +81,11 @@ pub struct Server {
     /// Completion notifications from the workers (request ids), drained
     /// lazily so the router's tracked load stays honest.
     done_rx: Receiver<u64>,
+    /// Session id → shard. Snapshot caches are per-worker state, so a
+    /// session is pinned to the shard that served its first turn —
+    /// every follow-up (and fork child) routes there, which is what
+    /// guarantees the cache lookup can hit.
+    sessions: BTreeMap<u64, usize>,
 }
 
 impl Server {
@@ -113,6 +133,7 @@ impl Server {
             router: RouterPolicy::default(),
             mode: MigrationMode::Move,
             done_rx,
+            sessions: BTreeMap::new(),
         }
     }
 
@@ -148,6 +169,9 @@ impl Server {
     /// in-flight count per shard); returns the response channel.
     pub fn submit(&mut self, req: Request) -> Receiver<Response> {
         self.drain_completions();
+        if let Some(rx) = self.reject_duplicate(&req) {
+            return rx;
+        }
         let shard = self.shards.place(req.id);
         self.send_submit(req, shard)
     }
@@ -156,9 +180,89 @@ impl Server {
     /// create hot-shard skew; production callers want [`Server::submit`]).
     pub fn submit_to(&mut self, req: Request, shard: usize) -> Receiver<Response> {
         self.drain_completions();
+        if let Some(rx) = self.reject_duplicate(&req) {
+            return rx;
+        }
         let shard = shard.min(self.workers.len().saturating_sub(1));
         self.shards.assign(req.id, shard);
         self.send_submit(req, shard)
+    }
+
+    /// Submit a request under a session: follow-up turns route to the
+    /// shard that owns the session's snapshot cache entry, so a prompt
+    /// extending the previous turn attaches the cached state and
+    /// prefills only the new tokens. The first submit under a session
+    /// places it least-loaded and pins the session there.
+    pub fn submit_session(&mut self, req: Request, session: u64) -> Receiver<Response> {
+        self.drain_completions();
+        if let Some(rx) = self.reject_duplicate(&req) {
+            return rx;
+        }
+        let shard = match self.sessions.get(&session) {
+            Some(&s) => {
+                self.shards.assign(req.id, s);
+                s
+            }
+            None => {
+                let s = self.shards.place(req.id);
+                self.sessions.insert(session, s);
+                s
+            }
+        };
+        let (tx, rx) = channel();
+        let w = self.workers.get(shard).expect("at least one worker");
+        let _ = w.tx.send(Msg::SubmitSession(req, session, tx));
+        rx
+    }
+
+    /// Copy-on-write session fork: register `child` as a session
+    /// sharing `parent`'s cached state (zero bytes copied — each
+    /// child's first submit pays the one counted attach). Returns
+    /// `false` when the parent has no snapshot.
+    pub fn fork_session(&mut self, parent: u64, child: u64) -> bool {
+        let Some(&shard) = self.sessions.get(&parent) else {
+            return false;
+        };
+        let Some(w) = self.workers.get(shard) else {
+            return false;
+        };
+        let (tx, rx) = channel();
+        if w.tx.send(Msg::Fork(parent, child, tx)).is_err() {
+            return false;
+        }
+        let ok = rx.recv().unwrap_or(false);
+        if ok {
+            // The child shares the parent's cache, so it pins to the
+            // same shard.
+            self.sessions.insert(child, shard);
+        }
+        ok
+    }
+
+    /// Replace every worker's snapshot-cache LRU byte budget (`0`
+    /// disables session caching).
+    pub fn set_snapshot_budget(&self, bytes: u64) {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::SnapshotBudget(bytes));
+        }
+    }
+
+    /// Router-level duplicate guard: an id the placement map still
+    /// tracks is in flight on some worker, and submitting it again
+    /// would (before the scheduler's own guard existed) silently
+    /// re-zero its resident state row mid-generation. Returns a dead
+    /// receiver — the caller's `recv()` errors instead of hanging —
+    /// and leaves the original request untouched.
+    fn reject_duplicate(&self, req: &Request) -> Option<Receiver<Response>> {
+        if self.shards.shard_of(req.id).is_some() {
+            eprintln!(
+                "coordinator: rejected request {}: id already in flight",
+                req.id
+            );
+            let (_tx, rx) = channel();
+            return Some(rx);
+        }
+        None
     }
 
     fn send_submit(&mut self, req: Request, shard: usize) -> Receiver<Response> {
@@ -322,6 +426,29 @@ impl Server {
     }
 }
 
+/// Hand a submit (plain or session-tagged) to the worker's scheduler,
+/// releasing the sink and notifying the router if it is rejected.
+fn accept_submit<E: Executor>(
+    sched: &mut Scheduler<E>,
+    sinks: &mut std::collections::BTreeMap<u64, Sender<Response>>,
+    done: &Sender<u64>,
+    req: Request,
+    session: Option<u64>,
+    sink: Sender<Response>,
+) {
+    let id = req.id;
+    sinks.insert(id, sink);
+    if let Err(e) = sched.submit_session(req, session) {
+        eprintln!("coordinator: rejected request: {e}");
+        // The request will never complete: release the sink (the
+        // client's recv() errors out instead of hanging) and tell the
+        // router so its tracked placement doesn't leak a phantom load
+        // entry.
+        sinks.remove(&id);
+        let _ = done.send(id);
+    }
+}
+
 /// Apply one mailbox message to the worker's scheduler/sink state.
 /// Shared by the non-blocking drain and the idle blocking receive.
 fn handle_msg<E: Executor>(
@@ -334,18 +461,15 @@ fn handle_msg<E: Executor>(
 ) {
     match msg {
         Msg::Submit(req, sink) => {
-            let id = req.id;
-            sinks.insert(id, sink);
-            if let Err(e) = sched.submit(req) {
-                eprintln!("coordinator: rejected request: {e}");
-                // The request will never complete: release the sink
-                // (the client's recv() errors out instead of hanging)
-                // and tell the router so its tracked placement doesn't
-                // leak a phantom load entry.
-                sinks.remove(&id);
-                let _ = done.send(id);
-            }
+            accept_submit(sched, sinks, done, req, None, sink);
         }
+        Msg::SubmitSession(req, session, sink) => {
+            accept_submit(sched, sinks, done, req, Some(session), sink);
+        }
+        Msg::Fork(parent, child, tx) => {
+            let _ = tx.send(sched.fork_session(parent, child));
+        }
+        Msg::SnapshotBudget(bytes) => sched.set_snapshot_budget(bytes),
         Msg::Report(tx) => {
             let _ = tx.send(sched.metrics().report());
         }
@@ -379,7 +503,21 @@ fn handle_msg<E: Executor>(
         Msg::Attach(packet, sink, mode) => {
             sinks.insert(packet.seq(), sink);
             match mode {
-                MigrationMode::Move => sched.attach(*packet),
+                MigrationMode::Move => {
+                    // A malformed packet (corrupt cursor, wrong payload
+                    // shape, …) is rejected by the scheduler *before*
+                    // touching any state — instead of unwinding this
+                    // worker we rebuild the request from its tokens,
+                    // which trusts nothing but the flight bookkeeping.
+                    if let Err(p) = sched.attach(*packet) {
+                        eprintln!(
+                            "coordinator: rejected malformed migration packet for \
+                             seq {}; rebuilding by re-prefill",
+                            p.seq()
+                        );
+                        sched.attach_reprefill(p);
+                    }
+                }
                 MigrationMode::Reprefill => sched.attach_reprefill(*packet),
             }
         }
@@ -512,6 +650,21 @@ mod tests {
         for r in &reports {
             assert!(!r.contains("requests=0"), "{r}");
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn duplicate_submit_gets_dead_receiver_and_original_survives() {
+        let mut server =
+            Server::start(vec![|| Ok(MockEngine::new())], BatchPolicy::default());
+        let rx1 = server.submit(Request { id: 1, prompt: vec![2, 3, 4], max_new_tokens: 512 });
+        // Same id while the original is in flight: the router hands
+        // back a dead receiver instead of letting the worker re-zero
+        // the original's resident state row.
+        let rx_dup = server.submit(Request { id: 1, prompt: vec![9, 9], max_new_tokens: 4 });
+        assert!(rx_dup.recv().is_err(), "duplicate id must be rejected");
+        let resp = rx1.recv().unwrap();
+        assert_eq!(resp.tokens.len(), 512, "original request unharmed");
         server.shutdown();
     }
 

@@ -1,0 +1,389 @@
+//! Session-keyed recurrent-state snapshot cache.
+//!
+//! Mamba's per-sequence state is a *fixed-size* compressed summary of
+//! everything the sequence has seen — not an ever-growing KV cache —
+//! which makes prefix caching trivial for SSMs: a whole conversation
+//! compresses to one `state_bytes_per_seq` arena row. On request
+//! completion the scheduler may copy that row out here, keyed by
+//! session id, together with the *history* (prompt ++ generated
+//! tokens) the state summarizes. A follow-up turn whose prompt starts
+//! with that history attaches the snapshot via the arena's
+//! `attach_row` splice and prefills **only the new tokens**.
+//!
+//! `fork()` is copy-on-write: N best-of-N / parallel-sampling decodes
+//! register N session keys against one refcounted payload
+//! (`Rc<SnapshotPayload>`), so a fan-out adds zero cached bytes — the
+//! counted copy happens on each attach, exactly once per decode, same
+//! as a migration attach.
+//!
+//! Eviction is LRU over a configurable **byte budget** measured on
+//! the unique-payload gauge (shared fork payloads count once). All
+//! cache activity is mirrored into `Metrics`/`TrafficSnapshot` by the
+//! scheduler (`snapshots_stored`, `snapshot_hits`, `snapshot_forks`,
+//! `snapshot_bytes_restored`, `prefill_tokens_skipped`,
+//! `snapshot_evictions`, and the `snapshot_bytes_cached` gauge) so
+//! the bench gate can assert the skip arithmetic deterministically.
+//!
+//! The cache is single-threaded state owned by one scheduler (the
+//! server pins every session to one shard), so plain `Rc` is correct;
+//! nothing here crosses a thread boundary.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// One cached state payload, sequence-major, same layout as
+/// `MigrationPacket`: `conv` is `n_layer * conv_per_layer` floats,
+/// `ssm` is `n_layer * ssm_per_layer` floats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotPayload {
+    pub conv: Vec<f32>,
+    pub ssm: Vec<f32>,
+}
+
+impl SnapshotPayload {
+    /// Bytes this payload occupies (f32 elements × 4) — matches
+    /// `StateArena::bytes_per_seq()` for same-manifest payloads.
+    pub fn state_bytes(&self) -> u64 {
+        ((self.conv.len() + self.ssm.len()) * 4) as u64
+    }
+}
+
+/// A successful cache lookup: the payload to attach and how much of
+/// the submitted prompt it already covers.
+#[derive(Debug, Clone)]
+pub struct SnapshotHit {
+    /// Tokens of the new prompt already summarized by the payload —
+    /// the prefill cursor starts here.
+    pub history_len: usize,
+    pub payload: Rc<SnapshotPayload>,
+}
+
+/// Snapshot-cache tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotConfig {
+    /// LRU byte budget over unique payload bytes. `0` disables
+    /// caching entirely (every `store` is immediately evicted).
+    pub byte_budget: u64,
+}
+
+impl Default for SnapshotConfig {
+    fn default() -> Self {
+        // 64 MiB — thousands of rows for the bench-scale manifests,
+        // small enough that real deployments will want to raise it.
+        SnapshotConfig { byte_budget: 64 << 20 }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    payload: Rc<SnapshotPayload>,
+    /// The token history the payload summarizes (prompt ++ fed-back
+    /// generated tokens). A follow-up hits iff its prompt strictly
+    /// extends this.
+    history: Vec<i32>,
+    /// LRU clock stamp of the last store/lookup/fork touch.
+    touched: u64,
+}
+
+/// Session-keyed LRU cache of recurrent-state snapshots. See the
+/// module docs for semantics.
+#[derive(Debug)]
+pub struct SnapshotCache {
+    entries: BTreeMap<u64, Entry>,
+    config: SnapshotConfig,
+    /// Monotone logical clock driving LRU ordering.
+    clock: u64,
+    /// Gauge: unique payload bytes resident (fork-shared payloads
+    /// counted once).
+    resident: u64,
+    /// Monotone total of entries evicted by the byte budget.
+    evictions: u64,
+}
+
+impl SnapshotCache {
+    pub fn new(config: SnapshotConfig) -> SnapshotCache {
+        SnapshotCache {
+            entries: BTreeMap::new(),
+            config,
+            clock: 0,
+            resident: 0,
+            evictions: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Bytes `payload` contributes to the unique-bytes gauge given the
+    /// rest of the cache: zero if any *other* entry shares the same
+    /// allocation (fork), its size otherwise.
+    fn unique_bytes(&self, session: u64, payload: &Rc<SnapshotPayload>) -> u64 {
+        let shared = self
+            .entries
+            .iter()
+            .any(|(&s, e)| s != session && Rc::ptr_eq(&e.payload, payload));
+        if shared {
+            0
+        } else {
+            payload.state_bytes()
+        }
+    }
+
+    fn remove_entry(&mut self, session: u64) -> Option<Entry> {
+        let e = self.entries.remove(&session)?;
+        self.resident -= self.unique_bytes(session, &e.payload);
+        Some(e)
+    }
+
+    /// Evict least-recently-touched entries until the unique-bytes
+    /// gauge fits the budget. With `byte_budget == 0` this empties the
+    /// cache (caching disabled). Evicting one member of a fork family
+    /// frees nothing until the last member goes — the loop keeps
+    /// evicting, so the budget always ends respected.
+    fn evict_to_budget(&mut self) {
+        while self.resident > self.config.byte_budget {
+            let Some((&victim, _)) = self.entries.iter().min_by_key(|(_, e)| e.touched) else {
+                break;
+            };
+            self.remove_entry(victim);
+            self.evictions += 1;
+        }
+        if self.config.byte_budget == 0 && !self.entries.is_empty() {
+            // resident can be 0 while fork-only entries remain; a zero
+            // budget still means "cache nothing".
+            let victims: Vec<u64> = self.entries.keys().copied().collect();
+            for v in victims {
+                self.remove_entry(v);
+                self.evictions += 1;
+            }
+        }
+    }
+
+    /// Store a completed request's state for `session`, replacing any
+    /// prior snapshot for that session, then enforce the byte budget.
+    /// Under a budget smaller than one payload the fresh entry itself
+    /// is evicted — `store` never over-commits the budget.
+    pub fn store(&mut self, session: u64, history: Vec<i32>, conv: Vec<f32>, ssm: Vec<f32>) {
+        self.remove_entry(session);
+        let payload = Rc::new(SnapshotPayload { conv, ssm });
+        self.resident += payload.state_bytes();
+        let touched = self.tick();
+        self.entries.insert(session, Entry { payload, history, touched });
+        self.evict_to_budget();
+    }
+
+    /// Copy-on-write fork: register `child` against `parent`'s payload
+    /// and history. O(history) for the token clone, O(1) for the state
+    /// (an `Rc` clone — zero new cached bytes). Returns `false` if the
+    /// parent has no snapshot or the child key is taken.
+    pub fn fork(&mut self, parent: u64, child: u64) -> bool {
+        if parent == child || self.entries.contains_key(&child) {
+            return false;
+        }
+        let Some(p) = self.entries.get(&parent) else {
+            return false;
+        };
+        let payload = Rc::clone(&p.payload);
+        let history = p.history.clone();
+        let touched = self.tick();
+        self.entries.insert(child, Entry { payload, history, touched });
+        // Shared payload: the unique-bytes gauge is unchanged, so the
+        // budget cannot newly overflow; no eviction pass needed.
+        true
+    }
+
+    /// Look up `session` for a follow-up `prompt`. Hits iff the prompt
+    /// *strictly* extends the stored history (equal-length prompts
+    /// would leave zero tokens to prefill — the engine needs at least
+    /// one new token to produce a next-token distribution, so that is
+    /// a miss). A hit refreshes the LRU stamp and returns an owned
+    /// handle to the refcounted payload.
+    pub fn lookup(&mut self, session: u64, prompt: &[i32]) -> Option<SnapshotHit> {
+        let stamp = self.clock + 1;
+        let e = self.entries.get_mut(&session)?;
+        let h = e.history.len();
+        if prompt.len() <= h || prompt[..h] != e.history[..] {
+            return None;
+        }
+        e.touched = stamp;
+        self.clock = stamp;
+        Some(SnapshotHit { history_len: h, payload: Rc::clone(&e.payload) })
+    }
+
+    /// Drop `session`'s snapshot (not counted as an eviction).
+    pub fn remove(&mut self, session: u64) -> bool {
+        self.remove_entry(session).is_some()
+    }
+
+    /// Replace the byte budget and immediately re-enforce it.
+    pub fn set_budget(&mut self, byte_budget: u64) {
+        self.config.byte_budget = byte_budget;
+        self.evict_to_budget();
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.config.byte_budget
+    }
+
+    /// Gauge: unique payload bytes resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident
+    }
+
+    /// Monotone total of budget evictions.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, session: u64) -> bool {
+        self.entries.contains_key(&session)
+    }
+
+    /// The stored history for `session` (tests / diagnostics).
+    pub fn history(&self, session: u64) -> Option<&[i32]> {
+        self.entries.get(&session).map(|e| e.history.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(tag: f32, n: usize) -> (Vec<f32>, Vec<f32>) {
+        (vec![tag; n], vec![tag + 0.5; n])
+    }
+
+    #[test]
+    fn store_lookup_strict_prefix() {
+        let mut c = SnapshotCache::new(SnapshotConfig::default());
+        let (conv, ssm) = payload(1.0, 4);
+        c.store(7, vec![1, 2, 3], conv.clone(), ssm.clone());
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resident_bytes(), 8 * 4);
+        assert_eq!(c.history(7), Some(&[1, 2, 3][..]));
+
+        // Strict extension hits and carries the payload bit-identically.
+        let hit = c.lookup(7, &[1, 2, 3, 4]).expect("strict extension hits");
+        assert_eq!(hit.history_len, 3);
+        assert_eq!(hit.payload.conv, conv);
+        assert_eq!(hit.payload.ssm, ssm);
+
+        // Equal prompt, divergent prompt, short prompt, unknown session:
+        // all misses.
+        assert!(c.lookup(7, &[1, 2, 3]).is_none(), "equal prompt leaves nothing to prefill");
+        assert!(c.lookup(7, &[1, 9, 3, 4]).is_none());
+        assert!(c.lookup(7, &[1, 2]).is_none());
+        assert!(c.lookup(8, &[1, 2, 3, 4]).is_none());
+    }
+
+    #[test]
+    fn store_replaces_prior_snapshot() {
+        let mut c = SnapshotCache::new(SnapshotConfig::default());
+        let (conv, ssm) = payload(1.0, 4);
+        c.store(7, vec![1], conv, ssm);
+        let (conv2, ssm2) = payload(2.0, 4);
+        c.store(7, vec![1, 2], conv2.clone(), ssm2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resident_bytes(), 8 * 4, "old payload bytes released");
+        assert_eq!(c.lookup(7, &[1, 2, 9]).unwrap().payload.conv, conv2);
+    }
+
+    #[test]
+    fn fork_shares_payload_bytes() {
+        let mut c = SnapshotCache::new(SnapshotConfig::default());
+        let (conv, ssm) = payload(3.0, 8);
+        c.store(1, vec![5, 6], conv, ssm);
+        let before = c.resident_bytes();
+        assert!(c.fork(1, 2));
+        assert!(c.fork(1, 3));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.resident_bytes(), before, "forks add zero cached bytes");
+        // Children hit independently with the shared payload.
+        let h2 = c.lookup(2, &[5, 6, 7]).unwrap();
+        let h3 = c.lookup(3, &[5, 6, 8]).unwrap();
+        assert!(Rc::ptr_eq(&h2.payload, &h3.payload));
+        // Bad forks: unknown parent, taken child, self-fork.
+        assert!(!c.fork(99, 4));
+        assert!(!c.fork(1, 2));
+        assert!(!c.fork(1, 1));
+    }
+
+    #[test]
+    fn fork_bytes_survive_until_last_ref() {
+        let mut c = SnapshotCache::new(SnapshotConfig::default());
+        let (conv, ssm) = payload(3.0, 8);
+        c.store(1, vec![5], conv, ssm);
+        let bytes = c.resident_bytes();
+        assert!(c.fork(1, 2));
+        assert!(c.remove(1), "dropping the parent keeps the shared payload");
+        assert_eq!(c.resident_bytes(), bytes);
+        assert!(c.remove(2));
+        assert_eq!(c.resident_bytes(), 0, "last ref releases the bytes");
+        assert_eq!(c.evictions(), 0, "explicit removes are not evictions");
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        // Each payload is 8 f32 = 32 bytes; budget fits exactly two.
+        let mut c = SnapshotCache::new(SnapshotConfig { byte_budget: 64 });
+        for s in 0..2u64 {
+            let (conv, ssm) = payload(s as f32, 4);
+            c.store(s, vec![s as i32], conv, ssm);
+        }
+        assert_eq!(c.resident_bytes(), 64);
+        // Touch session 0 so session 1 becomes the LRU victim.
+        assert!(c.lookup(0, &[0, 1]).is_some());
+        let (conv, ssm) = payload(9.0, 4);
+        c.store(2, vec![9], conv, ssm);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(0) && c.contains(2) && !c.contains(1));
+        assert_eq!(c.resident_bytes(), 64);
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn tiny_budget_evicts_fresh_store() {
+        let mut c = SnapshotCache::new(SnapshotConfig { byte_budget: 8 });
+        let (conv, ssm) = payload(1.0, 4);
+        c.store(7, vec![1], conv, ssm);
+        assert!(c.is_empty(), "store never over-commits the budget");
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn zero_budget_disables_caching_even_for_forks() {
+        let mut c = SnapshotCache::new(SnapshotConfig::default());
+        let (conv, ssm) = payload(1.0, 4);
+        c.store(1, vec![1], conv, ssm);
+        assert!(c.fork(1, 2));
+        c.set_budget(0);
+        assert!(c.is_empty(), "zero budget evicts fork-only entries too");
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.evictions(), 2);
+    }
+
+    #[test]
+    fn set_budget_shrink_evicts_lru_first() {
+        let mut c = SnapshotCache::new(SnapshotConfig::default());
+        for s in 0..3u64 {
+            let (conv, ssm) = payload(s as f32, 4);
+            c.store(s, vec![s as i32], conv, ssm);
+        }
+        assert!(c.lookup(0, &[0, 5]).is_some()); // refresh session 0
+        c.set_budget(64);
+        assert_eq!(c.len(), 2);
+        assert!(!c.contains(1), "oldest-touched evicted first");
+        assert!(c.contains(0) && c.contains(2));
+    }
+}

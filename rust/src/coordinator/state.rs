@@ -124,6 +124,16 @@ impl StateArena {
         self.n_layer * (self.conv_per_layer + self.ssm_per_layer) * 4
     }
 
+    /// Element counts of a sequence-major payload for this arena:
+    /// `(conv_len, ssm_len)` — what [`StateArena::attach_row`] asserts
+    /// and [`StateArena::snapshot`] produces. Callers validating a
+    /// [`MigrationPacket`](super::shard::MigrationPacket) or building a
+    /// snapshot payload check against this instead of hardcoding
+    /// manifest arithmetic.
+    pub fn payload_shape(&self) -> (usize, usize) {
+        (self.n_layer * self.conv_per_layer, self.n_layer * self.ssm_per_layer)
+    }
+
     /// Bytes of state currently resident (a gauge, not a counter).
     pub fn resident_bytes(&self) -> u64 {
         (self.rows.len() * self.bytes_per_seq()) as u64
@@ -158,7 +168,10 @@ impl StateArena {
     /// Admit a sequence: allocate a row from the free-list (LIFO) and
     /// zero it, so the engine sees a fresh zero state in place. Zeroing
     /// is initialization, not state movement — it is not counted as
-    /// traffic. Re-admitting a resident sequence re-zeroes its row.
+    /// traffic. Re-admitting a resident sequence re-zeroes its row —
+    /// which is why the scheduler rejects duplicate in-flight request
+    /// ids at submit: a second admit under the same id would silently
+    /// wipe the original's mid-flight state.
     pub fn admit(&mut self, seq: u64) -> usize {
         let row = match self.rows.get(&seq) {
             Some(&row) => row,
@@ -202,7 +215,9 @@ impl StateArena {
     }
 
     /// Copy one sequence's state out as sequence-major `[layers, per]`
-    /// buffers (tests / debugging — not a hot-path API).
+    /// buffers — the migration-detach payload and the snapshot-cache
+    /// export path (one counted copy per completed session-tagged
+    /// request; never on the per-tick hot path).
     pub fn snapshot(&self, seq: u64) -> Option<(Vec<f32>, Vec<f32>)> {
         let row = self.row_of(seq)?;
         let (cp, sp) = (self.conv_per_layer, self.ssm_per_layer);

@@ -107,7 +107,7 @@ fn run_sharded_with_forced_migrations(
                 assert_eq!(p.state_bytes(), bytes_per_seq, "payload != state_bytes_per_seq");
                 assert_eq!(p.from.shard, from, "handle provenance");
                 let decode_phase = p.decode_phase();
-                shards[to].attach(p);
+                shards[to].attach(p).expect("well-formed packet attaches");
                 placement.insert(seq, to);
                 stats.migrations += 1;
                 if decode_phase {
@@ -203,7 +203,7 @@ fn reprefill_baseline_is_token_identical_but_pays_in_replayed_tokens() {
         if reprefill {
             b.attach_reprefill(p);
         } else {
-            b.attach(p);
+            b.attach(p).expect("well-formed packet attaches");
         }
         let out = b.run_until_drained().unwrap();
         (
@@ -225,6 +225,110 @@ fn reprefill_baseline_is_token_identical_but_pays_in_replayed_tokens() {
         "the baseline must replay at least the whole prompt ({replay_replay} tokens)"
     );
     assert_eq!(replay_avoided, 0);
+}
+
+#[test]
+fn prop_detach_attach_round_trip_survives_arena_growth() {
+    // The scheduler sizes its arena to `max_running`, so a migration
+    // *into* a worker whose arena is full is exactly the case that
+    // forces `grow()` — a doubling that re-strides every layer-major
+    // stripe. The round-trip law: detach → attach-into-full-arena →
+    // detach must hand back a bit-identical payload, growth must not
+    // disturb any other resident row, and the resident gauge (arena
+    // truth and the metrics view) must track exactly attach − detach.
+    let probe = MockEngine::new();
+    let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+    check("detach→attach round-trip under grow()", 12, |rng| {
+        let policy = BatchPolicy {
+            chunk_tokens: rng.range(0, 6) as usize,
+            token_budget: rng.range(8, 24) as usize,
+            max_chunk_rows: rng.range(1, 5) as usize,
+            max_running: rng.range(1, 4) as usize,
+            decode_priority_threshold: rng.range(1, 10) as usize,
+        };
+
+        // Source worker: long generations so a detachable (state-
+        // holding) flight always exists after a few ticks.
+        let mut a = Scheduler::new(MockEngine::new(), policy.clone());
+        a.set_shard(0);
+        let n = rng.range(1, 4);
+        for id in 0..n {
+            let len = rng.range(1, 2 * plen as u64) as usize;
+            a.submit(Request {
+                id,
+                prompt: (0..len as i32).map(|x| (x * 3 + id as i32 + 1) % vocab as i32).collect(),
+                max_new_tokens: 500,
+            })
+            .unwrap();
+        }
+        for _ in 0..rng.range(1, 20) {
+            a.tick().unwrap();
+        }
+        let mut p = (0..n).find_map(|id| a.detach(id));
+        let mut guard = 0;
+        while p.is_none() {
+            guard += 1;
+            assert!(guard < 1000, "no flight ever held detachable state");
+            a.tick().unwrap();
+            p = (0..n).find_map(|id| a.detach(id));
+        }
+        let p = p.unwrap();
+        let seq = p.seq();
+        let bytes_per_seq = a.state_arena().bytes_per_seq() as u64;
+        let (want_conv, want_ssm) = (p.conv.clone(), p.ssm.clone());
+
+        // Target worker: fill its arena to capacity with resident
+        // decoders, so the attach has no free row and must grow().
+        let mut b = Scheduler::new(MockEngine::new(), policy.clone());
+        b.set_shard(1);
+        let fillers: Vec<u64> = (0..policy.max_running as u64).map(|i| 1000 + i).collect();
+        for &id in &fillers {
+            b.submit(Request {
+                id,
+                prompt: vec![(id % 7) as i32 + 1; 4],
+                max_new_tokens: 2000,
+            })
+            .unwrap();
+        }
+        let mut guard = 0;
+        while !fillers.iter().all(|&id| b.state_arena().contains(id)) {
+            guard += 1;
+            assert!(guard < 1000, "fillers never filled the target arena");
+            b.tick().unwrap();
+        }
+        let cap_before = b.state_arena().capacity();
+        let resident_before = b.state_arena().resident_bytes();
+        assert_eq!(resident_before, cap_before as u64 * bytes_per_seq, "arena full before attach");
+        let filler_snaps: Vec<_> =
+            fillers.iter().map(|&id| b.state_arena().snapshot(id).unwrap()).collect();
+
+        b.attach(p).expect("well-formed packet attaches");
+        if b.state_arena().capacity() <= cap_before {
+            return Err("attach into a full arena did not grow()".into());
+        }
+        if b.state_arena().resident_bytes() != resident_before + bytes_per_seq
+            || b.metrics().state_bytes_resident != resident_before + bytes_per_seq
+        {
+            return Err("resident gauge did not track the attach".into());
+        }
+        for (&id, snap) in fillers.iter().zip(&filler_snaps) {
+            if b.state_arena().snapshot(id).unwrap() != *snap {
+                return Err(format!("grow() re-striding corrupted resident row {id}"));
+            }
+        }
+
+        // Round-trip back out before any tick: bit-identity.
+        let p2 = b.detach(seq).expect("attached flight detaches");
+        if p2.conv != want_conv || p2.ssm != want_ssm {
+            return Err("payload not bit-identical across detach→attach→detach".into());
+        }
+        if b.state_arena().resident_bytes() != resident_before
+            || b.metrics().state_bytes_resident != resident_before
+        {
+            return Err("resident gauge did not return after detach".into());
+        }
+        Ok(())
+    });
 }
 
 /// Long-generation requests pinned to one worker, so forced migrations

@@ -1,0 +1,452 @@
+//! Session snapshot/fork cache conformance, plus regression coverage
+//! for the three attach/admit hardening fixes that shipped with it:
+//!
+//! * **Skip law**: a follow-up turn whose prompt extends its session's
+//!   stored history prefills *only* the new tokens, restores exactly
+//!   one `state_bytes_per_seq` payload, and emits tokens bit-identical
+//!   to a full re-prefill of the same prompt.
+//! * **Fork law**: N best-of-N decodes forked from one session share a
+//!   single prefill and a single refcounted payload — zero new cached
+//!   bytes at fork time, one counted copy per attach.
+//! * **Regressions** (each fails on the pre-fix code):
+//!   `attach_reprefill` underflowed on a decode-phase packet with
+//!   nothing generated; a duplicate in-flight submit silently re-zeroed
+//!   the original's resident state row; a malformed migration packet
+//!   panicked the receiving worker instead of being rejected.
+
+use mambalaya::bench_util::ServeScenario;
+use mambalaya::coordinator::{
+    BatchPolicy, InFlight, MigrationPacket, Request, Scheduler, Server, SlotHandle,
+};
+use mambalaya::runtime::{Executor, MockEngine};
+
+fn prompt_of(len: usize, salt: i32, vocab: usize) -> Vec<i32> {
+    (0..len as i32).map(|x| (x * 11 + salt * 3 + 1) % vocab as i32).collect()
+}
+
+fn solo_tokens(req: &Request, policy: &BatchPolicy) -> Vec<i32> {
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+    s.submit(req.clone()).unwrap();
+    s.run_until_drained().unwrap().remove(0).tokens
+}
+
+/// Hand-build a migration packet (the regression tests need packets no
+/// healthy worker would produce).
+fn packet(req: Request, prefill_pos: usize, generated: Vec<i32>, conv: Vec<f32>, ssm: Vec<f32>) -> MigrationPacket {
+    let mut flight = InFlight::new(req);
+    flight.prefill_pos = prefill_pos;
+    flight.generated = generated;
+    MigrationPacket { flight, from: SlotHandle { shard: 0, row: 0 }, conv, ssm }
+}
+
+#[test]
+fn multi_turn_follow_up_prefills_only_new_tokens() {
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = ServeScenario::multi_turn().policy;
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+    let bytes_per_seq = s.state_arena().bytes_per_seq() as u64;
+
+    let turn1 = Request { id: 1, prompt: prompt_of(24, 0, vocab), max_new_tokens: 8 };
+    s.submit_session(turn1.clone(), Some(5)).unwrap();
+    let reply = s.run_until_drained().unwrap().remove(0).tokens;
+    assert_eq!(s.metrics().snapshots_stored, 1);
+    assert_eq!(
+        s.snapshot_cache().history(5).unwrap(),
+        &ServeScenario::session_history(&turn1.prompt, &reply)[..],
+        "stored history = prompt + fed-back reply (last sampled token excluded)"
+    );
+    let prefill_1 = s.metrics().prefill_tokens;
+    assert_eq!(prefill_1, 24);
+
+    let fresh = 6usize;
+    let turn2 = Request {
+        id: 2,
+        prompt: ServeScenario::follow_up_prompt(&turn1.prompt, &reply, fresh, vocab),
+        max_new_tokens: 8,
+    };
+    s.submit_session(turn2.clone(), Some(5)).unwrap();
+    let out = s.run_until_drained().unwrap().remove(0).tokens;
+
+    let met = s.metrics();
+    assert_eq!(met.prefill_tokens - prefill_1, (fresh + 1) as u64, "only new tokens prefilled");
+    assert_eq!(met.snapshot_hits, 1);
+    assert_eq!(met.prefill_tokens_skipped, (turn1.prompt.len() + reply.len() - 1) as u64);
+    assert_eq!(met.snapshot_bytes_restored, bytes_per_seq, "one counted copy per attach");
+
+    // Conformance: bit-identical to paying for the whole prompt.
+    assert_eq!(out, solo_tokens(&turn2, &policy), "snapshot attach changed tokens");
+}
+
+#[test]
+fn three_turn_chain_keeps_skipping_with_one_entry_per_session() {
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = ServeScenario::multi_turn().policy;
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+    let fresh = 4usize;
+
+    let mut req = Request { id: 10, prompt: prompt_of(16, 2, vocab), max_new_tokens: 6 };
+    let mut prev_prefill = 0u64;
+    for turn in 0..3u64 {
+        s.submit_session(req.clone(), Some(77)).unwrap();
+        let reply = s.run_until_drained().unwrap().remove(0).tokens;
+        let spent = s.metrics().prefill_tokens - prev_prefill;
+        prev_prefill = s.metrics().prefill_tokens;
+        if turn == 0 {
+            assert_eq!(spent, req.prompt.len() as u64);
+        } else {
+            assert_eq!(spent, (fresh + 1) as u64, "turn {turn} prefilled more than its new tokens");
+        }
+        assert_eq!(s.snapshot_cache().len(), 1, "store replaces, never accumulates");
+        assert_eq!(reply, solo_tokens(&req, &policy), "turn {turn} diverged from full prefill");
+        if turn < 2 {
+            req = Request {
+                id: req.id + 1,
+                prompt: ServeScenario::follow_up_prompt(&req.prompt, &reply, fresh, vocab),
+                max_new_tokens: 6,
+            };
+        }
+    }
+    assert_eq!(s.metrics().snapshot_hits, 2);
+    assert_eq!(s.metrics().snapshots_stored, 3);
+}
+
+#[test]
+fn fork_serves_n_decodes_from_one_prefill() {
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = ServeScenario::best_of_n().policy;
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+
+    let parent = Request { id: 0, prompt: prompt_of(32, 1, vocab), max_new_tokens: 1 };
+    s.submit_session(parent.clone(), Some(7)).unwrap();
+    let g1 = s.run_until_drained().unwrap().remove(0).tokens[0];
+    let prefill_shared = s.metrics().prefill_tokens;
+    assert_eq!(prefill_shared, 32);
+
+    let cached = s.snapshot_cache().resident_bytes();
+    for child in 0..3u64 {
+        assert!(s.fork_session(7, 100 + child));
+    }
+    assert!(!s.fork_session(7, 100), "taken child key refuses");
+    assert!(!s.fork_session(999, 200), "unknown parent refuses");
+    assert_eq!(s.snapshot_cache().resident_bytes(), cached, "CoW fork adds zero cached bytes");
+    assert_eq!(s.metrics().snapshot_forks, 3);
+
+    let mut child_prompt = parent.prompt.clone();
+    child_prompt.push(g1);
+    let mut outs = Vec::new();
+    for child in 0..3u64 {
+        let r = Request { id: 50 + child, prompt: child_prompt.clone(), max_new_tokens: 6 };
+        s.submit_session(r, Some(100 + child)).unwrap();
+        outs.push(s.run_until_drained().unwrap().remove(0).tokens);
+    }
+    assert_eq!(
+        s.metrics().prefill_tokens - prefill_shared,
+        3,
+        "each candidate prefills exactly its 1 new token"
+    );
+    assert_eq!(s.metrics().snapshot_hits, 3);
+    let solo = solo_tokens(
+        &Request { id: 9000, prompt: child_prompt, max_new_tokens: 6 },
+        &policy,
+    );
+    for out in outs {
+        assert_eq!(out, solo, "forked candidate diverged from full re-prefill");
+    }
+}
+
+#[test]
+fn fork_payload_outlives_parent_snapshot_replacement() {
+    // The parent keeps chatting (its entry is replaced), but a child
+    // forked from turn 1 still hits against the old refcounted payload.
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = BatchPolicy::default();
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+
+    let turn1 = Request { id: 1, prompt: prompt_of(12, 3, vocab), max_new_tokens: 5 };
+    s.submit_session(turn1.clone(), Some(1)).unwrap();
+    let reply1 = s.run_until_drained().unwrap().remove(0).tokens;
+    assert!(s.fork_session(1, 2));
+
+    // Parent turn 2 replaces session 1's snapshot.
+    let turn2 = Request {
+        id: 3,
+        prompt: ServeScenario::follow_up_prompt(&turn1.prompt, &reply1, 3, vocab),
+        max_new_tokens: 5,
+    };
+    s.submit_session(turn2.clone(), Some(1)).unwrap();
+    s.run_until_drained().unwrap();
+    let prefill_before = s.metrics().prefill_tokens;
+
+    // The child extends the *old* history and still skips it.
+    let child = Request {
+        id: 4,
+        prompt: ServeScenario::follow_up_prompt(&turn1.prompt, &reply1, 2, vocab),
+        max_new_tokens: 5,
+    };
+    s.submit_session(child.clone(), Some(2)).unwrap();
+    let out = s.run_until_drained().unwrap().remove(0).tokens;
+    assert_eq!(s.metrics().prefill_tokens - prefill_before, 3, "2 fresh + the un-fed reply token");
+    assert_eq!(out, solo_tokens(&child, &policy));
+}
+
+#[test]
+fn lru_eviction_falls_back_to_full_prefill_and_stays_correct() {
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = ServeScenario::multi_turn().policy;
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+    let bytes_per_seq = s.state_arena().bytes_per_seq() as u64;
+    // Budget for exactly one payload: the second store evicts the
+    // first-stored (LRU) session.
+    s.set_snapshot_budget(bytes_per_seq);
+
+    let a1 = Request { id: 1, prompt: prompt_of(10, 0, vocab), max_new_tokens: 4 };
+    s.submit_session(a1.clone(), Some(1)).unwrap();
+    let reply_a = s.run_until_drained().unwrap().remove(0).tokens;
+    let b1 = Request { id: 2, prompt: prompt_of(10, 1, vocab), max_new_tokens: 4 };
+    s.submit_session(b1.clone(), Some(2)).unwrap();
+    let reply_b = s.run_until_drained().unwrap().remove(0).tokens;
+
+    assert_eq!(s.snapshot_cache().len(), 1, "byte budget holds one payload");
+    assert!(!s.snapshot_cache().contains(1) && s.snapshot_cache().contains(2));
+    assert_eq!(s.metrics().snapshot_evictions, 1);
+    assert_eq!(s.metrics().snapshot_bytes_cached, bytes_per_seq);
+
+    // Surviving session first: a hit. (Its completion re-stores within
+    // budget; checking it before session 1's fallback matters, because
+    // that fallback's own completion stores session 1 again and evicts
+    // session 2 in turn.)
+    let prefill_before = s.metrics().prefill_tokens;
+    let b2 = Request {
+        id: 4,
+        prompt: ServeScenario::follow_up_prompt(&b1.prompt, &reply_b, 3, vocab),
+        max_new_tokens: 4,
+    };
+    s.submit_session(b2.clone(), Some(2)).unwrap();
+    let out_b = s.run_until_drained().unwrap().remove(0).tokens;
+    assert_eq!(s.metrics().snapshot_hits, 1);
+    assert_eq!(s.metrics().prefill_tokens - prefill_before, 4, "3 fresh + the un-fed reply token");
+    assert_eq!(out_b, solo_tokens(&b2, &policy));
+
+    // Evicted session: miss → full prefill, still token-correct.
+    let prefill_before = s.metrics().prefill_tokens;
+    let a2 = Request {
+        id: 3,
+        prompt: ServeScenario::follow_up_prompt(&a1.prompt, &reply_a, 3, vocab),
+        max_new_tokens: 4,
+    };
+    s.submit_session(a2.clone(), Some(1)).unwrap();
+    let out_a = s.run_until_drained().unwrap().remove(0).tokens;
+    assert_eq!(s.metrics().snapshot_hits, 1, "the evicted session must not hit");
+    assert_eq!(s.metrics().prefill_tokens - prefill_before, a2.prompt.len() as u64);
+    assert_eq!(out_a, solo_tokens(&a2, &policy));
+}
+
+#[test]
+fn misses_pay_full_prefill_and_stay_correct() {
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = BatchPolicy::default();
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+
+    let turn1 = Request { id: 1, prompt: prompt_of(10, 4, vocab), max_new_tokens: 4 };
+    s.submit_session(turn1.clone(), Some(3)).unwrap();
+    let reply = s.run_until_drained().unwrap().remove(0).tokens;
+    let history = ServeScenario::session_history(&turn1.prompt, &reply);
+    let prefill_before = s.metrics().prefill_tokens;
+
+    // (a) prompt == stored history: nothing left to prefill — a miss.
+    let equal = Request { id: 2, prompt: history.clone(), max_new_tokens: 4 };
+    s.submit_session(equal.clone(), Some(3)).unwrap();
+    let out = s.run_until_drained().unwrap().remove(0).tokens;
+    assert_eq!(out, solo_tokens(&equal, &policy));
+
+    // (b) divergent prompt (same length, different content): a miss.
+    let mut diverged_prompt = history.clone();
+    diverged_prompt[2] = (diverged_prompt[2] + 1) % vocab as i32;
+    diverged_prompt.push(1);
+    let diverged = Request { id: 3, prompt: diverged_prompt, max_new_tokens: 4 };
+    s.submit_session(diverged.clone(), Some(3)).unwrap();
+    let out = s.run_until_drained().unwrap().remove(0).tokens;
+    assert_eq!(out, solo_tokens(&diverged, &policy));
+
+    // (c) unknown session: a miss.
+    let unknown = Request { id: 4, prompt: prompt_of(8, 5, vocab), max_new_tokens: 4 };
+    s.submit_session(unknown.clone(), Some(42)).unwrap();
+    let out = s.run_until_drained().unwrap().remove(0).tokens;
+    assert_eq!(out, solo_tokens(&unknown, &policy));
+
+    assert_eq!(s.metrics().snapshot_hits, 0, "no miss case may attach");
+    let full: u64 = [&equal, &diverged, &unknown].iter().map(|r| r.prompt.len() as u64).sum();
+    assert_eq!(s.metrics().prefill_tokens - prefill_before, full);
+    assert_eq!(s.metrics().prefill_tokens_skipped, 0);
+}
+
+#[test]
+fn reprefill_attach_with_zero_generated_decode_packet_recovers() {
+    // Regression (pre-fix: usize underflow panic): a decode-phase
+    // packet whose cursor sits at the prompt end with *nothing*
+    // generated yet — the first token is pending — has no tokens to
+    // fold back; `generated[prompt_replayed..k - 1]` underflowed.
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = BatchPolicy::default();
+    let req = Request { id: 4, prompt: prompt_of(20, 6, vocab), max_new_tokens: 6 };
+    let want = solo_tokens(&req, &policy);
+
+    let mut b = Scheduler::new(MockEngine::new(), policy.clone());
+    let p = packet(req.clone(), req.prompt.len(), Vec::new(), Vec::new(), Vec::new());
+    assert!(p.decode_phase());
+    assert_eq!(p.reprefill_cost_tokens(), req.prompt.len());
+    b.attach_reprefill(p);
+    let out = b.run_until_drained().unwrap().remove(0);
+    assert_eq!(out.tokens, want, "re-prefilled request must replay to the same stream");
+    assert_eq!(b.metrics().reprefill_tokens, req.prompt.len() as u64);
+}
+
+#[test]
+fn duplicate_submit_is_rejected_and_resident_state_survives() {
+    // Regression (pre-fix: silent state corruption): submitting a
+    // request id already in flight reached `StateArena::admit`, which
+    // re-zeroes a resident row — wiping the original's mid-flight
+    // state. The scheduler now rejects the duplicate before any state
+    // is touched.
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = BatchPolicy::default();
+    let req = Request { id: 1, prompt: prompt_of(8, 7, vocab), max_new_tokens: 64 };
+    let want = solo_tokens(&req, &policy);
+
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+    s.submit(req.clone()).unwrap();
+    let mut guard = 0;
+    while !s.state_arena().contains(1) {
+        guard += 1;
+        assert!(guard < 1000, "request never admitted");
+        s.tick().unwrap();
+    }
+    let before = s.state_arena().snapshot(1).unwrap();
+
+    let err = s.submit(Request { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 4 });
+    assert!(err.is_err(), "duplicate in-flight id must be rejected");
+    assert_eq!(
+        s.state_arena().snapshot(1).unwrap(),
+        before,
+        "rejection must not touch the resident row"
+    );
+
+    let out = s.run_until_drained().unwrap().remove(0);
+    assert_eq!(out.tokens, want, "original stream corrupted by the duplicate submit");
+}
+
+#[test]
+fn attach_rejects_malformed_packets_without_touching_state() {
+    // Regression (pre-fix: panic): a malformed packet off the migration
+    // channel either tripped `Batcher::enqueue_at`'s cursor assert or —
+    // for a decode-phase packet with an empty `generated` buffer —
+    // panicked mid-tick at the running set's `generated.last()`.
+    // `attach` now validates first and hands the packet back untouched.
+    let vocab = MockEngine::new().manifest().vocab;
+    let policy = BatchPolicy::default();
+    let mut s = Scheduler::new(MockEngine::new(), policy.clone());
+    let (conv_len, ssm_len) = s.state_arena().payload_shape();
+    let good_payload = || (vec![0.25f32; conv_len], vec![0.5f32; ssm_len]);
+    let req = Request { id: 30, prompt: prompt_of(12, 8, vocab), max_new_tokens: 4 };
+
+    let assert_rejected = |s: &mut Scheduler<MockEngine>, p: MigrationPacket, why: &str| {
+        let seq = p.seq();
+        let resident = s.state_arena().resident_bytes();
+        let pending = s.pending();
+        let back = s.attach(p).expect_err(why);
+        assert_eq!(back.seq(), seq, "rejected packet returned intact");
+        assert_eq!(s.state_arena().resident_bytes(), resident, "{why}: state touched");
+        assert_eq!(s.pending(), pending, "{why}: bookkeeping touched");
+    };
+
+    // (a) cursor past the prompt end.
+    let (conv, ssm) = good_payload();
+    assert_rejected(
+        &mut s,
+        packet(req.clone(), req.prompt.len() + 3, vec![7], conv, ssm),
+        "cursor past prompt end must be rejected",
+    );
+    // (b) decode phase with nothing generated (the mid-tick panic).
+    let (conv, ssm) = good_payload();
+    assert_rejected(
+        &mut s,
+        packet(req.clone(), req.prompt.len(), Vec::new(), conv, ssm),
+        "decode-phase packet with empty generated must be rejected",
+    );
+    // (c) wrong payload shape.
+    let (conv, _) = good_payload();
+    assert_rejected(
+        &mut s,
+        packet(req.clone(), 4, Vec::new(), conv, vec![0.5f32; ssm_len + 1]),
+        "wrong-shape payload must be rejected",
+    );
+    // (d) id already in flight here.
+    s.submit(req.clone()).unwrap();
+    let (conv, ssm) = good_payload();
+    assert_rejected(
+        &mut s,
+        packet(req.clone(), 4, Vec::new(), conv, ssm),
+        "duplicate in-flight id must be rejected",
+    );
+    let out = s.run_until_drained().unwrap().remove(0);
+    assert_eq!(out.tokens, solo_tokens(&req, &policy), "survivor must be unharmed");
+
+    // Recovery: the server-side fallback — `attach_reprefill` on the
+    // rejected packet — rebuilds by replay and stays token-identical.
+    let mut fresh = Scheduler::new(MockEngine::new(), policy.clone());
+    let req2 = Request { id: 31, prompt: prompt_of(12, 9, vocab), max_new_tokens: 4 };
+    let (conv, _) = good_payload();
+    let bad = packet(req2.clone(), 4, Vec::new(), conv, vec![0.5f32; ssm_len + 1]);
+    let back = fresh.attach(bad).expect_err("wrong-shape payload must be rejected");
+    fresh.attach_reprefill(back);
+    let out = fresh.run_until_drained().unwrap().remove(0);
+    assert_eq!(out.tokens, solo_tokens(&req2, &policy));
+}
+
+#[test]
+fn server_sessions_route_and_skip_across_turns() {
+    let vocab = MockEngine::new().manifest().vocab;
+    let factories: Vec<fn() -> anyhow::Result<MockEngine>> =
+        vec![|| Ok(MockEngine::new()), || Ok(MockEngine::new())];
+    let mut server = Server::start(factories, BatchPolicy::default());
+
+    let turn1 = Request { id: 1, prompt: prompt_of(16, 0, vocab), max_new_tokens: 6 };
+    let reply = server.submit_session(turn1.clone(), 9).recv().unwrap().tokens;
+    assert_eq!(reply.len(), 6);
+
+    // The follow-up routes to the same shard (the only worker whose
+    // cache holds session 9) and skips the shared history.
+    let turn2 = Request {
+        id: 2,
+        prompt: ServeScenario::follow_up_prompt(&turn1.prompt, &reply, 5, vocab),
+        max_new_tokens: 6,
+    };
+    let out = server.submit_session(turn2.clone(), 9).recv().unwrap().tokens;
+    let t = server.traffic();
+    assert_eq!(t.snapshots_stored, 2);
+    assert_eq!(t.snapshot_hits, 1);
+    assert_eq!(
+        t.prefill_tokens_skipped,
+        (turn1.prompt.len() + reply.len() - 1) as u64
+    );
+    assert!(t.snapshot_bytes_restored > 0);
+
+    // Forks ride the same routing: the child session pins to the
+    // parent's shard and its next submit attaches the shared payload.
+    assert!(server.fork_session(9, 10));
+    assert!(!server.fork_session(999, 11), "unknown parent refuses");
+    let child = Request {
+        id: 3,
+        prompt: ServeScenario::follow_up_prompt(&turn2.prompt, &out, 4, vocab),
+        max_new_tokens: 6,
+    };
+    let child_out = server.submit_session(child.clone(), 10).recv().unwrap().tokens;
+    let t = server.traffic();
+    assert_eq!(t.snapshot_forks, 1);
+    assert_eq!(t.snapshot_hits, 2);
+    server.shutdown();
+
+    // Conformance against a solo scheduler for both follow-ups.
+    assert_eq!(out, solo_tokens(&turn2, &BatchPolicy::default()));
+    assert_eq!(child_out, solo_tokens(&child, &BatchPolicy::default()));
+}
