@@ -68,22 +68,29 @@ if [[ "${1:-}" != "--fast" ]]; then
     # gate, asserting session follow-up turns prefill only their new
     # tokens (the skipped history beats the re-prefill fallback >= 5x
     # in state bytes) and best-of-N forks decode N candidates from one
-    # prefill — both token-identical to full re-prefill. (The runtime
-    # module also builds under #![deny(missing_docs)], so the engine
-    # surface stays documented by construction.)
+    # prefill — both token-identical to full re-prefill, and (6) the
+    # resilience gate on the fault_storm scenario, asserting a
+    # fault-poisoned scheduler's salvage replays >= 5x fewer tokens
+    # than reprefill-everything while recovering bit-identically, the
+    # threaded server respawns a fail-once worker within its restart
+    # cap (again bit-identical to fault-free), and a permanent fault
+    # ends with exactly one terminal error Response per sink — never a
+    # dropped channel. (The runtime module also builds under
+    # #![deny(missing_docs)], so the engine surface stays documented by
+    # construction.)
     # All gates are on *counters* (same workload, same numbers, every
     # run), never on wall time; BENCH_hotpath.json, BENCH_planner.json,
-    # BENCH_sharding.json, BENCH_engine_api.json and BENCH_snapshot.json
-    # record the trajectory.
-    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API + snapshot) =="
+    # BENCH_sharding.json, BENCH_engine_api.json, BENCH_snapshot.json
+    # and BENCH_resilience.json record the trajectory.
+    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API + snapshot + resilience) =="
     cargo bench --bench hotpath -- --quick
-    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json BENCH_snapshot.json; do
+    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json BENCH_snapshot.json BENCH_resilience.json; do
         if [ ! -s "$f" ]; then
             echo "ERROR: $f missing or empty" >&2
             exit 1
         fi
     done
-    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json + BENCH_snapshot.json written"
+    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json + BENCH_snapshot.json + BENCH_resilience.json written"
 
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="

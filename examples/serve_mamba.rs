@@ -59,6 +59,19 @@
 //! session K ways copy-on-write — K best-of-N candidates decode from
 //! one shared prefill, zero bytes copied at fork time.
 //!
+//! ## Fault injection
+//!
+//! `--faults <plan>` wraps every worker's engine in a deterministic
+//! fault injector ([`FaultPlan`](mambalaya::runtime::FaultPlan)
+//! spellings: `nth:N`, `every:K`, `once[:N]`, `construct[:N]`) so the
+//! supervision machinery is drivable from the command line: a failing
+//! launch poisons that worker, its salvageable flights re-route to
+//! healthy shards (state-carrying rows resume in place, suspect rows
+//! re-prefill), the worker respawns under a bounded restart cap, and
+//! requests that exhaust their retry budget get one terminal error
+//! `Response` instead of a hung channel. The per-run `resilience:`
+//! line prints the recovery counters.
+//!
 //! ## Modes
 //!
 //! * `--mock` — serve on the deterministic in-process mock engine
@@ -70,13 +83,35 @@
 //!
 //! Run: `cargo run --release --example serve_mamba -- --mock [--requests 32]`
 
-use std::time::Instant;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
 
 use mambalaya::bench_util::ServeScenario;
-use mambalaya::coordinator::{BatchPolicy, Request, Server, TrafficSnapshot, WorkloadGen};
+use mambalaya::coordinator::{BatchPolicy, Request, Response, Server, TrafficSnapshot, WorkloadGen};
 use mambalaya::planner::PlanSpec;
-use mambalaya::runtime::{Executor, Golden, MambaEngine, Manifest, MockEngine};
+use mambalaya::runtime::{Executor, FaultInjector, FaultPlan, Golden, MambaEngine, Manifest, MockEngine};
 use mambalaya::util::Args;
+
+/// Receive one response while pumping [`Server::supervise`]: worker
+/// deaths are only observed at supervision points, so a bare blocking
+/// `recv` could wait forever on a re-route nobody has issued yet. A
+/// disconnected sink is a supervision bug (every request is owed
+/// exactly one terminal message) and reports as such.
+fn recv_supervised(
+    server: &mut Server,
+    rx: &std::sync::mpsc::Receiver<Response>,
+) -> anyhow::Result<Response> {
+    loop {
+        server.supervise();
+        match rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(r) => return Ok(r),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("response channel dropped without a terminal message")
+            }
+        }
+    }
+}
 
 /// Serve `reqs` through the server (one worker per factory) and print
 /// the outcome. With `rebalance`, the router runs slot-aware rebalance
@@ -89,13 +124,14 @@ fn drive<E, F>(
     spec: PlanSpec,
     reqs: Vec<Request>,
     rebalance: bool,
+    faults: Option<FaultInjector>,
 ) -> anyhow::Result<()>
 where
     E: Executor,
-    F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    F: FnMut() -> anyhow::Result<E> + Send + 'static,
 {
     let n_requests = reqs.len();
-    let expected_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+    let mut expected_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
     let spec_name = spec.name();
     let t0 = Instant::now();
     let mut server = Server::start_planned(factories, policy, spec);
@@ -105,7 +141,7 @@ where
     if let Some(caps) = server.caps().first() {
         println!("engine caps: {}", caps.summary());
     }
-    let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
     let mut migration_passes = 0u32;
     if rebalance {
         // Router passes while the workload is in flight (a production
@@ -125,9 +161,20 @@ where
     }
     let mut total_tokens = 0usize;
     let mut worst_latency = 0f64;
-    for rx in rxs {
-        let resp = rx.recv()?;
-        total_tokens += resp.tokens.len();
+    let mut failed = 0usize;
+    for (rx, req) in rxs.iter().zip(&reqs) {
+        let resp = recv_supervised(&mut server, rx)?;
+        if resp.is_error() {
+            // A terminal error is the contract under injected faults
+            // (retry budget exhausted / no healthy worker) — the sink
+            // got exactly one message, just not a token stream. Its
+            // generation budget leaves the expected total.
+            failed += 1;
+            expected_tokens -= req.max_new_tokens;
+            println!("request {} failed terminally: {}", resp.id, resp.error.as_deref().unwrap_or("?"));
+        } else {
+            total_tokens += resp.tokens.len();
+        }
         worst_latency = worst_latency.max(resp.total);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -159,13 +206,37 @@ where
          (rebalance passes: {migration_passes})",
         t.migrations, t.bytes_migrated, t.reprefills_avoided, t.reprefill_tokens
     );
+    // Fault-recovery accounting: how the supervisor handled worker
+    // deaths — salvaged rows resumed from moved state, suspect rows
+    // re-prefilled, respawns burned, and requests that hit a terminal
+    // error. All zeros on a fault-free run.
+    let res = server.resilience();
+    println!(
+        "resilience: faults_injected={} workers_down={} worker_restarts={} \
+         requests_salvaged={} requests_reprefilled_on_fault={} requests_failed={}",
+        faults.as_ref().map_or(0, |i| i.faults_injected()),
+        res.workers_down,
+        res.worker_restarts,
+        res.requests_salvaged,
+        res.requests_reprefilled_on_fault,
+        res.requests_failed,
+    );
     print_snapshot_line(&t);
     server.shutdown();
 
     println!(
         "\nserved {n_requests} requests / {total_tokens} tokens in {wall:.2}s \
-         ({:.1} tok/s end-to-end, worst request {worst_latency:.3}s)",
-        total_tokens as f64 / wall
+         ({:.1} tok/s end-to-end, worst request {worst_latency:.3}s{})",
+        total_tokens as f64 / wall,
+        if failed > 0 {
+            format!(", {failed} terminal errors under injected faults")
+        } else {
+            String::new()
+        },
+    );
+    anyhow::ensure!(
+        faults.is_some() || failed == 0,
+        "requests failed without fault injection"
     );
     anyhow::ensure!(total_tokens == expected_tokens, "token count mismatch");
     println!("serve_mamba OK");
@@ -206,7 +277,7 @@ fn drive_sessions<E, F>(
 ) -> anyhow::Result<()>
 where
     E: Executor,
-    F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    F: FnMut() -> anyhow::Result<E> + Send + 'static,
 {
     let fresh = ServeScenario::MULTI_TURN_NEW_TOKENS;
     let t0 = Instant::now();
@@ -312,6 +383,11 @@ fn main() -> anyhow::Result<()> {
     let fork = args.get_u64("fork", 0) as usize;
     let policy = BatchPolicy::from_args(&args);
     let spec = PlanSpec::parse(args.get_or("plan", "adaptive"))?;
+    let faults = args.get("faults").map(FaultPlan::parse).transpose()?.map(FaultInjector::new);
+    anyhow::ensure!(
+        faults.is_none() || sessions == 0,
+        "--faults drives the request workload; combine it with --mock/--requests, not --sessions"
+    );
 
     if args.flag("mock") {
         // Mixed traffic on the mock engine (the shared scenario
@@ -327,6 +403,19 @@ fn main() -> anyhow::Result<()> {
             policy.token_budget,
             spec.name()
         );
+        if let Some(inj) = faults {
+            // Every worker's engine is wrapped by the same injector, so
+            // plan state (`once`, `construct` counters) is shared
+            // across shards and respawned replacements.
+            let factories: Vec<_> = (0..workers)
+                .map(|_| {
+                    let inj = inj.clone();
+                    move || inj.wrap(MockEngine::new())
+                })
+                .collect();
+            let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
+            return drive(factories, policy, spec, reqs, rebalance, Some(inj));
+        }
         fn mock_factory() -> anyhow::Result<MockEngine> {
             Ok(MockEngine::new())
         }
@@ -336,7 +425,7 @@ fn main() -> anyhow::Result<()> {
             return drive_sessions(factories, policy, spec, sessions, fork, vocab);
         }
         let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
-        return drive(factories, policy, spec, reqs, rebalance);
+        return drive(factories, policy, spec, reqs, rebalance, None);
     }
 
     let dir = args.get_or("artifacts", "artifacts").to_string();
@@ -372,11 +461,21 @@ fn main() -> anyhow::Result<()> {
     let mut gen = WorkloadGen::new(7, manifest.vocab, manifest.prefill_len, 2, 24)
         .with_prompt_range(1, 2 * manifest.prefill_len);
     let reqs: Vec<Request> = (0..n_requests).map(|_| gen.next_request()).collect();
+    if let Some(inj) = faults {
+        let factories: Vec<_> = (0..workers)
+            .map(|_| {
+                let d = dir.clone();
+                let inj = inj.clone();
+                move || inj.wrap(MambaEngine::load(&d)?)
+            })
+            .collect();
+        return drive(factories, policy, spec, reqs, rebalance, Some(inj));
+    }
     let factories: Vec<_> = (0..workers)
         .map(|_| {
             let d = dir.clone();
             move || MambaEngine::load(&d)
         })
         .collect();
-    drive(factories, policy, spec, reqs, rebalance)
+    drive(factories, policy, spec, reqs, rebalance, None)
 }

@@ -23,26 +23,34 @@
 //!   also run the planner gate (`BENCH_planner.json`), the sharding
 //!   gate (`BENCH_sharding.json`), the engine-API gate
 //!   (`BENCH_engine_api.json`: caps-declared fused varlen launch = 1
-//!   device call per tick vs the decomposition's lockstep cost) and
-//!   the snapshot gate (`BENCH_snapshot.json`: session snapshot cache —
+//!   device call per tick vs the decomposition's lockstep cost), the
+//!   snapshot gate (`BENCH_snapshot.json`: session snapshot cache —
 //!   multi-turn follow-ups prefill only their new tokens, best-of-N
 //!   forks decode N ways from one prefill, token-identical to full
-//!   re-prefill).
+//!   re-prefill) and the resilience gate (`BENCH_resilience.json`:
+//!   fault-injected engine failures — salvage from a poisoned
+//!   scheduler replays only the rows the failing launch touched,
+//!   beating reprefill-everything ≥ 5× on replayed-token counters;
+//!   the threaded server respawns a fail-once worker within its
+//!   restart cap bit-identically, and a permanent fault ends in
+//!   exactly one terminal error per sink, never a dropped channel).
 
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
 use mambalaya::arch::ArchSpec;
 use mambalaya::bench_util::{bench_config, black_box, BenchResult, ServeScenario};
 use mambalaya::cascade::{mamba1, ModelConfig};
 use mambalaya::coordinator::{
-    serve_all, BatchPolicy, Request, Scheduler, StateArena, StatePath, TrafficSnapshot, WorkloadGen,
+    serve_all, BatchPolicy, Request, Response, Scheduler, Server, StateArena, StatePath,
+    TrafficSnapshot, WorkloadGen,
 };
 use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
 use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
 use mambalaya::planner::{PlanChoice, Planner, PlanSpec};
 use mambalaya::runtime::{
-    Donation, EngineCaps, Executor, LaunchSpec, MixedBatch, MockEngine, Phase, Segment,
-    StateSlabs, Workspace,
+    Donation, EngineCaps, Executor, FaultInjector, FaultPlan, LaunchSpec, MixedBatch, MockEngine,
+    Phase, Segment, StateSlabs, Workspace,
 };
 use mambalaya::util::{Args, JsonValue};
 
@@ -293,6 +301,7 @@ fn main() {
     sharding_gate();
     engine_api_gate();
     snapshot_gate();
+    resilience_gate();
 
     if !quick {
         println!("\n== hot-path microbenchmarks ==");
@@ -966,4 +975,322 @@ fn snapshot_gate() {
     std::fs::write("BENCH_snapshot.json", doc.to_string())
         .expect("writing BENCH_snapshot.json");
     println!("wrote BENCH_snapshot.json (snapshot gate: PASS)");
+}
+
+/// One fault-recovery run of the `fault_storm` population. A donor
+/// shard builds all eight requests to steady-state decode, the whole
+/// population migrates onto a faulty worker whose serialized policy
+/// (`token_budget: 1`) launches exactly one row per tick, and the
+/// injected `nth:3` launch fault poisons that scheduler with exactly
+/// one suspect row. [`Scheduler::salvage`] then exports the wreck and
+/// a healthy shard finishes the job — either resuming the seven
+/// untouched rows from their salvaged state (`salvage: true`) or
+/// replaying every row's history (`salvage: false`, the
+/// reprefill-everything floor). Pure single-threaded scheduling, so
+/// every counter is workload-deterministic.
+struct SalvageOutcome {
+    name: &'static str,
+    tokens: Vec<Vec<i32>>,
+    suspects: usize,
+    state_packets: u64,
+    migrations: u64,
+    bytes_migrated: u64,
+    replayed_tokens: u64,
+    bytes_per_seq: u64,
+    faults_injected: u64,
+}
+
+fn salvage_run(salvage: bool) -> SalvageOutcome {
+    let sc = ServeScenario::fault_storm();
+    let vocab = MockEngine::new().manifest().vocab;
+    let n = ServeScenario::FAULT_STORM_REQUESTS;
+
+    // Donor shard: twelve ticks leave all eight requests deep in
+    // decode (6-token prompts fully prefilled, nobody near max_new).
+    let mut donor =
+        Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    donor.set_shard(0);
+    for r in sc.requests(vocab) {
+        donor.submit(r).unwrap();
+    }
+    let mut responses = Vec::new();
+    for _ in 0..12 {
+        let (done, _) = donor.tick().unwrap();
+        responses.extend(done);
+    }
+    assert!(responses.is_empty(), "fault_storm population completed before the fault");
+
+    // Faulty shard: token_budget 1 serializes decode, so the third
+    // launch — the one the plan fails — carries exactly one row.
+    let tight = BatchPolicy { token_budget: 1, max_chunk_rows: 1, ..sc.policy.clone() };
+    let inj = FaultInjector::new(FaultPlan::parse("nth:3").unwrap());
+    let mut faulty = Scheduler::with_path(
+        inj.wrap(MockEngine::new()).unwrap(),
+        tight,
+        StatePath::Resident,
+    );
+    faulty.set_shard(1);
+    for seq in 0..n {
+        let p = donor.detach(seq).expect("donor row is decoding after 12 ticks");
+        faulty.attach(p).expect("well-formed packet attaches");
+    }
+
+    let mut fault = None;
+    for _ in 0..8 {
+        match faulty.tick() {
+            Ok((done, _)) => responses.extend(done),
+            Err(e) => {
+                fault = Some(e);
+                break;
+            }
+        }
+    }
+    let fault = fault.expect("nth:3 fires within eight serialized ticks");
+    assert!(
+        fault.to_string().contains("injected launch fault"),
+        "unexpected failure: {fault:#}"
+    );
+    assert!(faulty.poisoned());
+    let suspects = faulty.suspect_rows().len();
+    let packets = faulty.salvage();
+    assert_eq!(packets.len(), n as usize, "salvage exports every in-flight row");
+
+    // Recovery shard: attach what the fault never touched, replay the
+    // rest — or replay everything, which is what salvage replaces.
+    let mut healthy =
+        Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    healthy.set_shard(2);
+    let mut state_packets = 0u64;
+    for p in packets {
+        if salvage && p.state_bytes() > 0 {
+            state_packets += 1;
+            healthy.attach(p).expect("salvaged state re-attaches");
+        } else {
+            healthy.attach_reprefill(p);
+        }
+    }
+    responses.extend(healthy.run_until_drained().unwrap());
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), n as usize);
+    let met = healthy.metrics();
+    SalvageOutcome {
+        name: if salvage { "salvage" } else { "reprefill_everything" },
+        tokens: responses.iter().map(|r| r.tokens.clone()).collect(),
+        suspects,
+        state_packets,
+        migrations: met.migrations,
+        bytes_migrated: met.bytes_migrated,
+        replayed_tokens: met.reprefill_tokens,
+        bytes_per_seq: healthy.state_arena().bytes_per_seq() as u64,
+        faults_injected: inj.faults_injected(),
+    }
+}
+
+/// Pump server supervision while waiting on a response sink. A worker
+/// death is only observed at the next [`Server::supervise`], so a bare
+/// blocking `recv` could wait on a re-route that nobody has issued
+/// yet; a sink that disconnects without a terminal message is exactly
+/// the dropped-sink bug the gate exists to catch, so it panics.
+fn recv_supervised(server: &mut Server, rx: &Receiver<Response>) -> Response {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while Instant::now() < deadline {
+        server.supervise();
+        match rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(r) => return r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("sink dropped without a terminal response")
+            }
+        }
+    }
+    panic!("no response within 30s of supervised pumping");
+}
+
+/// Fault-injected engine failures, gated on deterministic counters
+/// (never wall time):
+///
+/// * recoverable requests are **bit-identical** to the fault-free
+///   baseline, whether they resume from salvaged state or replay
+///   their history;
+/// * salvage replays only the suspect row the failing launch touched
+///   — ≥ 5× fewer replayed tokens than the reprefill-everything
+///   floor — and moves exactly one state payload per untouched row;
+/// * the threaded server respawns a fail-once worker within its
+///   restart cap and completes every request bit-identically;
+/// * a permanent fault ends with **exactly one terminal message per
+///   sink** — an error `Response`, never a dropped channel.
+///
+/// Writes `BENCH_resilience.json`.
+fn resilience_gate() {
+    println!("\n== fault-injected failures: salvage vs reprefill, supervised respawn ==");
+    let n = ServeScenario::FAULT_STORM_REQUESTS;
+
+    // ---- fault-free baseline: the bit-identity reference ----
+    let sc = ServeScenario::fault_storm();
+    let vocab = MockEngine::new().manifest().vocab;
+    let mut base =
+        Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    for r in sc.requests(vocab) {
+        base.submit(r).unwrap();
+    }
+    let mut base_resps = base.run_until_drained().unwrap();
+    base_resps.sort_by_key(|r| r.id);
+    let base_tokens: Vec<Vec<i32>> = base_resps.iter().map(|r| r.tokens.clone()).collect();
+
+    // ---- scheduler-level: salvage vs reprefill-everything ----
+    let salv = salvage_run(true);
+    let rep = salvage_run(false);
+    for o in [&salv, &rep] {
+        println!(
+            "  {:<22} suspects={} state_packets={} migrated={}B replayed_tokens={} faults={}",
+            o.name, o.suspects, o.state_packets, o.bytes_migrated, o.replayed_tokens,
+            o.faults_injected,
+        );
+    }
+
+    // Gate 1 (conformance): both recoveries change no output.
+    assert_eq!(salv.tokens, base_tokens, "salvaged recovery changed tokens");
+    assert_eq!(rep.tokens, base_tokens, "reprefill recovery changed tokens");
+
+    // Gate 2 (conservation): the serialized fault touches exactly one
+    // row; salvage moves exactly one state payload per untouched row
+    // and replays only the suspect, the floor replays everything and
+    // moves nothing.
+    assert_eq!(salv.suspects, 1, "token_budget 1 must launch exactly one row");
+    assert_eq!(salv.state_packets, n - 1);
+    assert_eq!(salv.bytes_migrated, (n - 1) * salv.bytes_per_seq);
+    assert_eq!(salv.migrations, n, "every salvaged row re-routes exactly once");
+    assert!(salv.replayed_tokens > 0, "the suspect row must replay its history");
+    assert_eq!(rep.state_packets, 0);
+    assert_eq!(rep.bytes_migrated, 0);
+    assert_eq!(salv.faults_injected, 1);
+    assert_eq!(rep.faults_injected, 1);
+
+    // Gate 3 (the resilience acceptance bar): salvage beats
+    // reprefill-everything ≥ 5× on the replayed-token counters.
+    assert!(
+        rep.replayed_tokens >= 5 * salv.replayed_tokens,
+        "resilience gate failed: reprefill-everything {} tokens < 5x salvage {}",
+        rep.replayed_tokens,
+        salv.replayed_tokens
+    );
+
+    // ---- threaded: fail-once worker respawns within the cap ----
+    let reqs = sc.requests(vocab);
+    let inj = FaultInjector::new(FaultPlan::parse("once:3").unwrap());
+    let factory = {
+        let inj = inj.clone();
+        move || inj.wrap(MockEngine::new())
+    };
+    let mut server = Server::start(vec![factory], sc.policy.clone());
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    let mut got: Vec<Response> =
+        rxs.iter().map(|rx| recv_supervised(&mut server, rx)).collect();
+    got.sort_by_key(|r| r.id);
+    for (g, b) in got.iter().zip(&base_resps) {
+        assert!(!g.is_error(), "recoverable request {} failed: {:?}", g.id, g.error);
+        assert_eq!(g.tokens, b.tokens, "recovered tokens diverged from fault-free baseline");
+    }
+    for rx in &rxs {
+        assert!(rx.try_recv().is_err(), "sink got a second message after its terminal one");
+    }
+    let recover = server.resilience();
+    assert_eq!(recover.workers_down, 1);
+    assert_eq!(recover.worker_restarts, 1, "fail-once must respawn within the cap");
+    assert_eq!(recover.requests_failed, 0);
+    assert!(
+        recover.requests_salvaged + recover.requests_reprefilled_on_fault >= 1,
+        "the death must have re-routed at least one in-flight request"
+    );
+    assert_eq!(inj.faults_injected(), 1);
+    assert!(server.shard_map().has_live());
+    server.shutdown();
+    println!(
+        "  fail_once_recover      down={} restarts={} salvaged={} reprefilled={} failed={}",
+        recover.workers_down,
+        recover.worker_restarts,
+        recover.requests_salvaged,
+        recover.requests_reprefilled_on_fault,
+        recover.requests_failed,
+    );
+
+    // ---- threaded: permanent fault drains to terminal errors ----
+    let inj2 = FaultInjector::new(FaultPlan::parse("nth:2").unwrap());
+    let factory2 = {
+        let inj2 = inj2.clone();
+        move || inj2.wrap(MockEngine::new())
+    };
+    let mut doomed = Server::start(vec![factory2], sc.policy.clone());
+    doomed.set_max_restarts(1);
+    doomed.set_max_replays(2);
+    let rxs2: Vec<_> = reqs.iter().map(|r| doomed.submit(r.clone())).collect();
+    let got2: Vec<Response> =
+        rxs2.iter().map(|rx| recv_supervised(&mut doomed, rx)).collect();
+    for g in &got2 {
+        assert!(g.is_error(), "request {} survived a permanent fault", g.id);
+        assert!(g.tokens.is_empty(), "terminal error must carry no tokens");
+    }
+    for rx in &rxs2 {
+        assert!(rx.try_recv().is_err(), "sink got a second message after its terminal one");
+    }
+    let perm = doomed.resilience();
+    assert_eq!(perm.requests_failed, n, "every request gets exactly one terminal error");
+    assert_eq!(perm.workers_down, 2, "the original and its one replacement both die");
+    assert_eq!(perm.worker_restarts, 1, "respawns stop at the restart cap");
+    assert_eq!(inj2.faults_injected(), 2);
+    assert!(!doomed.shard_map().has_live(), "the exhausted shard must be unroutable");
+    doomed.shutdown();
+    println!(
+        "  permanent_fault        down={} restarts={} failed={} faults={} (every sink terminal)",
+        perm.workers_down,
+        perm.worker_restarts,
+        perm.requests_failed,
+        inj2.faults_injected(),
+    );
+
+    // Machine-readable output for CI and trend tracking.
+    let mut runs = JsonValue::Arr(vec![]);
+    for o in [&salv, &rep] {
+        let mut j = JsonValue::obj();
+        j.set("name", o.name)
+            .set("suspect_rows", o.suspects as u64)
+            .set("state_packets", o.state_packets)
+            .set("migrations", o.migrations)
+            .set("bytes_migrated", o.bytes_migrated)
+            .set("replayed_tokens", o.replayed_tokens)
+            .set("state_bytes_per_seq", o.bytes_per_seq)
+            .set("faults_injected", o.faults_injected);
+        runs.push(j);
+    }
+    for (name, s, faults) in [
+        ("fail_once_recover", &recover, 1u64),
+        ("permanent_fault", &perm, 2u64),
+    ] {
+        let mut j = JsonValue::obj();
+        j.set("name", name)
+            .set("workers_down", s.workers_down)
+            .set("worker_restarts", s.worker_restarts)
+            .set("requests_salvaged", s.requests_salvaged)
+            .set("requests_reprefilled_on_fault", s.requests_reprefilled_on_fault)
+            .set("requests_failed", s.requests_failed)
+            .set("faults_injected", faults);
+        runs.push(j);
+    }
+    let advantage = rep.replayed_tokens as f64 / salv.replayed_tokens.max(1) as f64;
+    let mut gate = JsonValue::obj();
+    gate.set("tokens_identical", true)
+        .set("salvage_replayed_tokens", salv.replayed_tokens)
+        .set("reprefill_everything_replayed_tokens", rep.replayed_tokens)
+        .set("salvage_replay_advantage", (advantage * 1e3).round() / 1e3)
+        .set("advantage_min", 5u64)
+        .set("bytes_migrated", salv.bytes_migrated)
+        .set("respawn_within_cap", true)
+        .set("zero_dropped_sinks", true)
+        .set("terminal_error_per_failed_request", true)
+        .set("pass", true);
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "resilience").set("runs", runs).set("gate", gate);
+    std::fs::write("BENCH_resilience.json", doc.to_string())
+        .expect("writing BENCH_resilience.json");
+    println!("wrote BENCH_resilience.json (resilience gate: PASS)");
 }

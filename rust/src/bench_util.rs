@@ -20,6 +20,7 @@ enum ScenarioMix {
     ChunkHeavy,
     MultiTurn,
     BestOfN,
+    FaultStorm,
 }
 
 /// A named, deterministic serving workload: a batch policy plus a
@@ -187,6 +188,31 @@ impl ServeScenario {
     /// Fork fan-out of [`ServeScenario::best_of_n`].
     pub const BEST_OF_N: usize = 4;
 
+    /// Fault-recovery storm for the resilience gate: eight
+    /// single-chunk prompts with long generations, so the whole
+    /// population is deep in decode when the gate injects a launch
+    /// fault. The gate runs the population fault-free as the baseline,
+    /// then re-runs it across a worker death — salvage vs
+    /// reprefill-everything — and gates on bit-identical tokens plus
+    /// the deterministic `reprefill_tokens` / `bytes_migrated`
+    /// counters (`BENCH_resilience.json`).
+    pub fn fault_storm() -> ServeScenario {
+        ServeScenario {
+            name: "fault_storm",
+            policy: BatchPolicy {
+                chunk_tokens: 6,
+                token_budget: 16,
+                max_chunk_rows: 2,
+                max_running: 8,
+                decode_priority_threshold: 8,
+            },
+            mix: ScenarioMix::FaultStorm,
+        }
+    }
+
+    /// Requests in [`ServeScenario::fault_storm`].
+    pub const FAULT_STORM_REQUESTS: u64 = 8;
+
     /// The token history a completed turn's state summarizes: the
     /// prompt plus every *engine-consumed* reply token. The final
     /// sampled token was never fed back (it is the pending next-step
@@ -277,6 +303,16 @@ impl ServeScenario {
                 prompt: (0..32).map(|x| (x * 13 + 5) % v).collect(),
                 max_new_tokens: 1,
             }],
+            ScenarioMix::FaultStorm => (0..Self::FAULT_STORM_REQUESTS)
+                .map(|i| Request {
+                    id: i,
+                    // One 6-token chunk each (== the policy's chunk
+                    // size), generations long enough that nobody
+                    // completes before the gate's fault tick.
+                    prompt: (0..6).map(|x| (x * 7 + i as i32 * 3 + 2) % v).collect(),
+                    max_new_tokens: 20,
+                })
+                .collect(),
             ScenarioMix::Interference => {
                 let mut reqs: Vec<Request> = (0..6)
                     .map(|i| Request {
@@ -398,6 +434,7 @@ mod tests {
             ServeScenario::chunk_heavy(),
             ServeScenario::multi_turn(),
             ServeScenario::best_of_n(),
+            ServeScenario::fault_storm(),
         ]) {
             let a = sc.requests(17);
             let b = sc.requests(17);

@@ -20,7 +20,7 @@ pub use batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
 pub use metrics::{Metrics, TrafficSnapshot, DWELL_BUCKETS};
 pub use request::{InFlight, Request, Response, WorkloadGen};
 pub use scheduler::{Scheduler, StatePath};
-pub use server::{serve_all, Server};
+pub use server::{serve_all, ResilienceStats, Server};
 pub use shard::{
     Migration, MigrationMode, MigrationOutcome, MigrationPacket, RouterPolicy, ShardMap,
     WorkerLoad,

@@ -14,7 +14,11 @@ pub struct Request {
     pub max_new_tokens: usize,
 }
 
-/// Completed response.
+/// Completed response — or, when `error` is set, the request's
+/// **terminal failure**. Under supervision every sink receives exactly
+/// one `Response`; a request that exhausts its retry budget (or has no
+/// healthy worker left) gets an explicit error here instead of a
+/// silently dropped sink and a client hung on `recv()`.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
@@ -23,6 +27,28 @@ pub struct Response {
     pub ttft: f64,
     /// Total time from submission to completion (seconds).
     pub total: f64,
+    /// `Some(reason)` when the request failed terminally; `tokens`
+    /// then holds whatever was generated before the failure (possibly
+    /// empty) and must not be treated as a completed stream.
+    pub error: Option<String>,
+}
+
+impl Response {
+    /// A terminal failure response for request `id`.
+    pub fn failure(id: u64, reason: impl Into<String>) -> Response {
+        Response {
+            id,
+            tokens: Vec::new(),
+            ttft: 0.0,
+            total: 0.0,
+            error: Some(reason.into()),
+        }
+    }
+
+    /// True if this is a terminal failure rather than a completion.
+    pub fn is_error(&self) -> bool {
+        self.error.is_some()
+    }
 }
 
 /// Coordinator-internal tracking for an in-flight request.
@@ -42,6 +68,13 @@ pub struct InFlight {
     /// history would duplicate those tokens and corrupt the stream. 0
     /// for every flight that was never reprefill-migrated.
     pub prompt_replayed: usize,
+    /// How many times fault recovery has re-routed this flight
+    /// (salvage attach or re-prefill after a worker death). Checked
+    /// against the server's `max_replays` budget so a request that
+    /// keeps landing on faults degrades to a terminal error instead of
+    /// looping forever. 0 for every flight that never saw a fault;
+    /// planned live migration does not count.
+    pub replays: u32,
 }
 
 impl InFlight {
@@ -59,6 +92,7 @@ impl InFlight {
             generated,
             prefill_pos: 0,
             prompt_replayed: 0,
+            replays: 0,
         }
     }
 
@@ -76,6 +110,7 @@ impl InFlight {
                 .map(|t| (t - self.submitted).as_secs_f64())
                 .unwrap_or_default(),
             total: (now - self.submitted).as_secs_f64(),
+            error: None,
         }
     }
 }

@@ -98,9 +98,16 @@ pub struct Scheduler<E: Executor> {
     /// Set after an engine error. The resident path advances arena rows
     /// *in place*, so a failed tick may leave state partially ahead of
     /// the batcher cursors — retrying would silently corrupt outputs.
-    /// Once poisoned, every tick fails fast; the worker must be
-    /// discarded (see `server::worker_loop`, which exits on tick error).
+    /// Once poisoned, every tick fails fast; the scheduler must be
+    /// discarded — but not necessarily its *work*: `salvage()` consumes
+    /// it and exports every in-flight sequence (see
+    /// `server::worker_loop`, which salvages on tick error).
     poisoned: bool,
+    /// The arena rows the **failing** launch touched (chunk rows plus
+    /// decode rows of the poisoned tick). Only these rows may have been
+    /// advanced in place by the partial launch; every other resident
+    /// row is still bit-exact, which is what makes `salvage()` sound.
+    suspect: Vec<u64>,
     /// Resident state bytes on *other* shards of the sharded arena
     /// (pushed by the server's gauge sync), so the planner's
     /// [`WorkloadFeatures`] see the server-wide residency, not just
@@ -187,6 +194,7 @@ impl<E: Executor> Scheduler<E> {
             running: BTreeMap::new(),
             decode_rr: 0,
             poisoned: false,
+            suspect: Vec::new(),
             remote_resident: 0,
             snapshots: SnapshotCache::new(SnapshotConfig::default()),
             session_of: BTreeMap::new(),
@@ -504,6 +512,87 @@ impl<E: Executor> Scheduler<E> {
         self.waiting.insert(seq, flight);
     }
 
+    /// True once an engine error has poisoned this scheduler (every
+    /// further `tick`/`detach` refuses; `salvage` is the way out).
+    pub fn poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// The rows the poisoning launch touched (empty when not poisoned).
+    pub fn suspect_rows(&self) -> &[u64] {
+        &self.suspect
+    }
+
+    /// **Salvage a poisoned scheduler**: consume it and export every
+    /// in-flight sequence as a [`MigrationPacket`], so a worker death
+    /// forfeits at most the rows the failing launch actually touched —
+    /// discarding everything is the documented floor, not the only
+    /// option.
+    ///
+    /// Soundness: flight bookkeeping (generated tokens, prefill
+    /// cursors) advances only *after* a successful launch, and
+    /// `Batcher::commit` runs only on success, so on the failed tick
+    /// every flight's token record is exact. Resident state is advanced
+    /// **in place** by the engine, so only the rows named in the
+    /// failing launch (recorded in `suspect_rows`) may hold partially
+    /// advanced state. Accordingly:
+    ///
+    /// - **Untouched rows with resident state** export as
+    ///   state-carrying packets — valid for [`Scheduler::attach`] on a
+    ///   healthy shard, one counted copy, no replay.
+    /// - **Suspect rows** (and queued rows with no state yet) export as
+    ///   token-only packets (empty payload). These deliberately fail
+    ///   `attach`'s shape validation and fall through to
+    ///   [`Scheduler::attach_reprefill`], which rebuilds state from
+    ///   tokens and never trusts the payload. An unstarted row replays
+    ///   zero tokens — resubmission is free.
+    ///
+    /// Packets are returned in ascending sequence order (running rows
+    /// first, then waiting). No metrics are recorded — this scheduler
+    /// is being consumed; the receiving shard counts the attach.
+    pub fn salvage(mut self) -> Vec<MigrationPacket> {
+        use std::collections::BTreeSet;
+        let suspect: BTreeSet<u64> = self.suspect.iter().copied().collect();
+        let ids: Vec<u64> = self
+            .running
+            .keys()
+            .chain(self.waiting.keys())
+            .copied()
+            .collect();
+        let mut out = Vec::with_capacity(ids.len());
+        for seq in ids {
+            let flight = match self.running.remove(&seq) {
+                Some(fl) => fl,
+                None => {
+                    self.batcher.remove(seq);
+                    self.waiting.remove(&seq).expect("id came from waiting")
+                }
+            };
+            let trusted = !suspect.contains(&seq);
+            let packet = match (trusted, self.states.handle_of(seq)) {
+                (true, Some(from)) => {
+                    let (conv, ssm) = self
+                        .states
+                        .detach_row(seq)
+                        .expect("resident handle implies a detachable row");
+                    MigrationPacket { flight, from, conv, ssm }
+                }
+                _ => MigrationPacket {
+                    flight,
+                    // Placeholder provenance for a token-only packet;
+                    // attach() rejects it on payload shape and the
+                    // re-prefill path never reads `from`.
+                    from: SlotHandle { shard: self.states.shard(), row: 0 },
+                    conv: Vec::new(),
+                    ssm: Vec::new(),
+                },
+            };
+            self.session_of.remove(&seq);
+            out.push(packet);
+        }
+        out
+    }
+
     pub fn manifest(&self) -> &crate::runtime::artifact::Manifest {
         self.engine.manifest()
     }
@@ -533,8 +622,14 @@ impl<E: Executor> Scheduler<E> {
                         // in place before failing; nothing here can be
                         // retried. Poison the scheduler so no caller
                         // feeds already-consumed tokens to
-                        // already-advanced state.
+                        // already-advanced state — but record exactly
+                        // which rows the failing launch touched, so
+                        // `salvage()` can still export everything else
+                        // with its state intact.
                         self.poisoned = true;
+                        self.suspect.clear();
+                        self.suspect.extend(chunks.iter().map(|c| c.id));
+                        self.suspect.extend(self.decode_ids_buf.iter().copied());
                         return Err(e);
                     }
                 };
@@ -1241,6 +1336,162 @@ mod tests {
             if s.metrics().requests_completed == 0 {
                 assert!(s.metrics().prefill_tokens > pre_before, "prefill stalled");
             }
+        }
+    }
+
+    #[test]
+    fn failed_tick_records_exactly_the_launched_rows_as_suspect() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // Tight budget: each tick decodes exactly one running row, so
+        // the failing launch touches exactly one known sequence.
+        let policy = BatchPolicy {
+            chunk_tokens: 4,
+            token_budget: 1,
+            max_chunk_rows: 1,
+            ..BatchPolicy::default()
+        };
+        let mut donor = sched();
+        for id in 0..3u64 {
+            donor
+                .submit(Request { id, prompt: vec![3, 1, 4, 1], max_new_tokens: 10 })
+                .unwrap();
+        }
+        for _ in 0..4 {
+            donor.tick().unwrap();
+        }
+        assert_eq!(donor.running(), 3);
+        let inj = FaultInjector::new(FaultPlan::Nth(2));
+        let mut faulty = Scheduler::with_path(
+            inj.wrap(MockEngine::new()).unwrap(),
+            policy,
+            StatePath::Resident,
+        );
+        for id in 0..3u64 {
+            faulty.attach(donor.detach(id).unwrap()).unwrap();
+        }
+        faulty.tick().unwrap(); // decodes seq 0
+        let err = faulty.tick().expect_err("second launch is planned to fail");
+        assert!(format!("{err}").contains("injected launch fault"), "{err}");
+        assert!(faulty.poisoned());
+        assert_eq!(faulty.suspect_rows(), &[1], "round-robin reached seq 1");
+        assert_eq!(inj.faults_injected(), 1);
+        // Poisoned schedulers still refuse detach — salvage is the exit.
+        assert!(faulty.detach(0).is_none());
+    }
+
+    #[test]
+    fn salvage_resumes_untouched_rows_bit_identical_and_reprefills_suspects() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        let reqs: Vec<Request> = (0..3u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![3, 1, 4, 1, 5],
+                max_new_tokens: 9 + id as usize,
+            })
+            .collect();
+        // Fault-free baseline.
+        let baseline: Vec<Vec<i32>> = {
+            let mut s = sched();
+            for r in &reqs {
+                s.submit(r.clone()).unwrap();
+            }
+            let mut out = s.run_until_drained().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect()
+        };
+
+        // Build a decode-phase population, move it onto a faulty worker.
+        let mut donor = sched();
+        donor.set_shard(0);
+        for r in &reqs {
+            donor.submit(r.clone()).unwrap();
+        }
+        for _ in 0..4 {
+            donor.tick().unwrap();
+        }
+        assert_eq!(donor.running(), 3);
+        let inj = FaultInjector::new(FaultPlan::Nth(2));
+        let tight = BatchPolicy {
+            chunk_tokens: 4,
+            token_budget: 1,
+            max_chunk_rows: 1,
+            ..BatchPolicy::default()
+        };
+        let mut faulty =
+            Scheduler::with_path(inj.wrap(MockEngine::new()).unwrap(), tight, StatePath::Resident);
+        faulty.set_shard(1);
+        for r in &reqs {
+            faulty.attach(donor.detach(r.id).unwrap()).unwrap();
+        }
+        faulty.tick().unwrap();
+        faulty.tick().expect_err("planned fault");
+
+        // Salvage: suspect seq 1 becomes token-only, 0 and 2 carry state.
+        let packets = faulty.salvage();
+        assert_eq!(packets.len(), 3);
+        assert_eq!(
+            packets.iter().map(|p| p.seq()).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "ascending sequence order"
+        );
+        let mut healthy = sched();
+        healthy.set_shard(2);
+        let (mut carried, mut replayed_rows) = (0, 0);
+        for p in packets {
+            if p.state_bytes() > 0 {
+                carried += 1;
+                healthy.attach(p).expect("state-carrying salvage packet attaches");
+            } else {
+                replayed_rows += 1;
+                assert_eq!(p.seq(), 1, "only the suspect row lost its state");
+                let rejected = healthy.attach(p).expect_err("token-only packet must not attach");
+                healthy.attach_reprefill(rejected);
+            }
+        }
+        assert_eq!((carried, replayed_rows), (2, 1));
+        let mut out = healthy.run_until_drained().unwrap();
+        out.sort_by_key(|r| r.id);
+        let tokens: Vec<Vec<i32>> = out.into_iter().map(|r| r.tokens).collect();
+        assert_eq!(tokens, baseline, "salvaged serving must be bit-identical");
+        // Conservation: two counted state copies in, one replay.
+        assert_eq!(healthy.metrics().migrations, 3);
+        assert_eq!(
+            healthy.metrics().bytes_migrated,
+            2 * healthy.state_arena().bytes_per_seq() as u64
+        );
+        assert!(healthy.metrics().reprefill_tokens > 0);
+    }
+
+    #[test]
+    fn salvage_of_unstarted_rows_is_a_free_resubmit() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // Queue two prompts behind a tiny chunk budget and fail the
+        // very first launch: the head row is suspect (it was in the
+        // failing chunk), the second never started — its salvage packet
+        // must replay zero tokens.
+        let policy = BatchPolicy {
+            chunk_tokens: 2,
+            token_budget: 2,
+            max_chunk_rows: 1,
+            ..BatchPolicy::default()
+        };
+        let inj = FaultInjector::new(FaultPlan::Nth(1));
+        let mut faulty =
+            Scheduler::with_path(inj.wrap(MockEngine::new()).unwrap(), policy, StatePath::Resident);
+        faulty
+            .submit(Request { id: 7, prompt: vec![1, 2, 3, 4], max_new_tokens: 2 })
+            .unwrap();
+        faulty
+            .submit(Request { id: 8, prompt: vec![5, 6], max_new_tokens: 2 })
+            .unwrap();
+        faulty.tick().expect_err("first launch fails");
+        assert_eq!(faulty.suspect_rows(), &[7]);
+        let packets = faulty.salvage();
+        assert_eq!(packets.len(), 2);
+        for p in &packets {
+            assert_eq!(p.state_bytes(), 0, "no trusted state existed yet");
+            assert_eq!(p.flight.prefill_pos, 0, "cursors never advanced");
+            assert_eq!(p.reprefill_cost_tokens(), 0, "resubmission is free");
         }
     }
 }

@@ -44,6 +44,56 @@ use super::shard::{
 /// sink, which follows the request to its new worker.
 type DetachReply = (Box<MigrationPacket>, Sender<Response>);
 
+/// One salvaged in-flight request leaving a dead worker: the transfer
+/// packet (state-carrying for untouched rows, token-only for suspect
+/// ones) paired with its response sink.
+type SalvageEntry = (Box<MigrationPacket>, Sender<Response>);
+
+/// Worker → supervisor notifications, delivered on a dedicated channel
+/// (never mixed with completions: a `Down` carries sinks).
+enum WorkerEvent {
+    /// A worker died — engine fault mid-serve or construction failure.
+    /// `salvage` holds every in-flight request it could export;
+    /// `generation` guards against a stale tombstone retiring a
+    /// respawned healthy worker.
+    Down {
+        shard: usize,
+        generation: u64,
+        salvage: Vec<SalvageEntry>,
+    },
+    /// A submit that reached a dead worker's mailbox; the supervisor
+    /// re-routes it to a live shard (or fails it terminally).
+    Orphan {
+        req: Request,
+        session: Option<u64>,
+        sink: Sender<Response>,
+    },
+}
+
+/// Supervision counters, accumulated by the [`Server`] across worker
+/// failures. All deterministic under a deterministic fault plan.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceStats {
+    /// Worker deaths the supervisor retired (per generation).
+    pub workers_down: u64,
+    /// Respawns performed within the restart budget.
+    pub worker_restarts: u64,
+    /// Salvaged flights re-attached with their state (one counted copy,
+    /// no replay).
+    pub requests_salvaged: u64,
+    /// Salvaged flights whose state was suspect (or absent): re-routed
+    /// as token-only re-prefills.
+    pub requests_reprefilled_on_fault: u64,
+    /// Requests terminally failed (retry budget exhausted, no healthy
+    /// worker, or unroutable submit). Each sent exactly one error
+    /// [`Response`] to its sink.
+    pub requests_failed: u64,
+}
+
+/// A retained, re-invocable engine factory: respawning a shard calls it
+/// again on the replacement worker's thread.
+type Spawner = Box<dyn FnMut(u64) -> Worker + Send>;
+
 enum Msg {
     Submit(Request, Sender<Response>),
     /// Session-tagged submit: the worker consults its snapshot cache
@@ -69,23 +119,43 @@ enum Msg {
 struct Worker {
     tx: Sender<Msg>,
     handle: JoinHandle<()>,
+    /// Incarnation counter for this shard (0 for the original worker,
+    /// +1 per respawn) — matched against `WorkerEvent::Down` so stale
+    /// death notices from a replaced tombstone are ignored.
+    generation: u64,
 }
 
 /// The router/server: owns the workers, routes new requests by
 /// least-load and migrates in-flight ones by moving their state.
 pub struct Server {
     workers: Vec<Worker>,
+    /// Retained engine factories, one per shard, so a dead worker can
+    /// be respawned within the restart budget.
+    spawners: Vec<Spawner>,
+    /// Respawns consumed per shard (bounded by `max_restarts`).
+    restarts: Vec<u32>,
+    /// Join handles of replaced (dead) workers, joined at shutdown.
+    retired: Vec<JoinHandle<()>>,
     shards: ShardMap,
     router: RouterPolicy,
     mode: MigrationMode,
     /// Completion notifications from the workers (request ids), drained
     /// lazily so the router's tracked load stays honest.
     done_rx: Receiver<u64>,
+    /// Supervision events (worker deaths with salvage, orphaned
+    /// submits), drained by [`Server::supervise`].
+    event_rx: Receiver<WorkerEvent>,
     /// Session id → shard. Snapshot caches are per-worker state, so a
     /// session is pinned to the shard that served its first turn —
     /// every follow-up (and fork child) routes there, which is what
     /// guarantees the cache lookup can hit.
     sessions: BTreeMap<u64, usize>,
+    /// Respawn budget per shard; 0 disables respawn entirely.
+    max_restarts: u32,
+    /// Per-request fault-replay budget: a flight re-routed more than
+    /// this many times fails terminally instead of looping.
+    max_replays: u32,
+    stats: ResilienceStats,
 }
 
 impl Server {
@@ -97,7 +167,7 @@ impl Server {
     pub fn start<E, F>(factories: Vec<F>, policy: BatchPolicy) -> Server
     where
         E: Executor,
-        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+        F: FnMut() -> anyhow::Result<E> + Send + 'static,
     {
         Server::start_planned(factories, policy, PlanSpec::default())
     }
@@ -105,35 +175,83 @@ impl Server {
     /// Start with an explicit plan-selection policy (each worker gets
     /// its own [`Planner`] built from the spec — plan caches and dwell
     /// state are per-worker, like the engine itself).
+    ///
+    /// Factories are `FnMut` and **retained**: when a worker dies (tick
+    /// fault or construction failure) the supervisor may call the
+    /// shard's factory again to respawn it, up to
+    /// [`Server::set_max_restarts`].
     pub fn start_planned<E, F>(factories: Vec<F>, policy: BatchPolicy, spec: PlanSpec) -> Server
     where
         E: Executor,
-        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+        F: FnMut() -> anyhow::Result<E> + Send + 'static,
     {
         let n_shards = factories.len();
         let (done_tx, done_rx) = channel();
-        let workers = factories
-            .into_iter()
-            .enumerate()
-            .map(|(shard, factory)| {
+        let (event_tx, event_rx) = channel();
+        let mut workers = Vec::with_capacity(n_shards);
+        let mut spawners: Vec<Spawner> = Vec::with_capacity(n_shards);
+        for (shard, factory) in factories.into_iter().enumerate() {
+            // The factory crosses into each incarnation's thread (the
+            // engine must be constructed there — PJRT handles are not
+            // `Send`) and must come back for the next respawn, hence
+            // the shared cell.
+            let factory = std::sync::Arc::new(std::sync::Mutex::new(factory));
+            let policy = policy.clone();
+            let spec = spec.clone();
+            let done = done_tx.clone();
+            let events = event_tx.clone();
+            let mut spawn: Spawner = Box::new(move |generation: u64| {
                 let (tx, rx) = channel::<Msg>();
+                let factory = std::sync::Arc::clone(&factory);
                 let pol = policy.clone();
                 let sp = spec.clone();
-                let done = done_tx.clone();
-                let handle = std::thread::spawn(move || match factory() {
-                    Ok(engine) => worker_loop(engine, pol, sp, shard, rx, done),
-                    Err(e) => eprintln!("coordinator: engine construction failed: {e}"),
+                let done = done.clone();
+                let events = events.clone();
+                let handle = std::thread::spawn(move || {
+                    let built = {
+                        let mut f = factory.lock().expect("engine factory mutex");
+                        f()
+                    };
+                    match built {
+                        Ok(engine) => {
+                            worker_loop(engine, pol, sp, shard, generation, rx, done, events)
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "coordinator: engine construction failed on shard {shard}: {e}"
+                            );
+                            // Construction failures are supervised like
+                            // mid-serve deaths (empty salvage), and the
+                            // mailbox keeps answering — a silently
+                            // dropped message is a client hung forever.
+                            let _ = events.send(WorkerEvent::Down {
+                                shard,
+                                generation,
+                                salvage: Vec::new(),
+                            });
+                            tombstone_loop(shard, generation, rx, &events);
+                        }
+                    }
                 });
-                Worker { tx, handle }
-            })
-            .collect();
+                Worker { tx, handle, generation }
+            });
+            workers.push(spawn(0));
+            spawners.push(spawn);
+        }
         Server {
             workers,
+            spawners,
+            restarts: vec![0; n_shards],
+            retired: Vec::new(),
             shards: ShardMap::new(n_shards),
             router: RouterPolicy::default(),
             mode: MigrationMode::Move,
             done_rx,
+            event_rx,
             sessions: BTreeMap::new(),
+            max_restarts: 2,
+            max_replays: 3,
+            stats: ResilienceStats::default(),
         }
     }
 
@@ -158,10 +276,181 @@ impl Server {
     }
 
     /// Absorb the workers' completion notifications into the tracked
-    /// placement map.
+    /// placement map, then handle any pending supervision events.
     fn drain_completions(&mut self) {
         while let Ok(seq) = self.done_rx.try_recv() {
             self.shards.complete(seq);
+        }
+        self.supervise();
+    }
+
+    /// Respawn budget per shard (default 2; 0 disables respawn — a dead
+    /// shard stays retired).
+    pub fn set_max_restarts(&mut self, n: u32) {
+        self.max_restarts = n;
+    }
+
+    /// Per-request fault-replay budget (default 3): a flight the
+    /// supervisor has already re-routed this many times fails
+    /// terminally — an explicit error [`Response`] at the client —
+    /// instead of looping through re-prefill forever.
+    pub fn set_max_replays(&mut self, n: u32) {
+        self.max_replays = n;
+    }
+
+    /// Supervision counters accumulated so far.
+    pub fn resilience(&self) -> ResilienceStats {
+        self.stats
+    }
+
+    /// Drain and handle pending supervision events: retire dead shards
+    /// (dropping their session pins and reconciling tracked load),
+    /// respawn within the restart budget, re-route salvaged flights to
+    /// healthy workers, and resubmit orphaned requests. Returns the
+    /// number of events handled.
+    ///
+    /// Every routing entry point calls this, so a server under steady
+    /// traffic supervises itself. A caller that stops submitting and
+    /// blocks on response receivers must pump it while waiting (e.g.
+    /// `recv_timeout` + `supervise()` in a loop) — the supervisor lives
+    /// on the router thread by design, exactly like `rebalance`.
+    pub fn supervise(&mut self) -> usize {
+        let mut handled = 0;
+        while let Ok(ev) = self.event_rx.try_recv() {
+            handled += 1;
+            match ev {
+                WorkerEvent::Down { shard, generation, salvage } => {
+                    self.handle_down(shard, generation, salvage)
+                }
+                WorkerEvent::Orphan { req, session, sink } => {
+                    self.reroute_orphan(req, session, sink)
+                }
+            }
+        }
+        handled
+    }
+
+    fn handle_down(&mut self, shard: usize, generation: u64, salvage: Vec<SalvageEntry>) {
+        // Generation guard: a tombstone can bounce late messages (as
+        // further `Down` events carrying their salvage) after the shard
+        // already respawned — those must not retire the healthy
+        // replacement. A cap-exhausted shard keeps its final generation
+        // in `workers`, so the dead-shard check is what de-duplicates
+        // echoes of an un-respawned death. Their salvage is still
+        // re-routed below.
+        let current = self.workers.get(shard).map(|w| w.generation);
+        if current == Some(generation) && !self.shards.is_dead(shard) {
+            self.stats.workers_down += 1;
+            // Retire first: drops every tracked placement on the shard
+            // (their completions will never arrive) and takes it out of
+            // routing. The flights the worker could save arrive in
+            // `salvage`; queued-but-unstarted submits bounce back as
+            // `Orphan` events from the tombstone.
+            let _orphaned = self.shards.retire(shard);
+            // Session pins on the dead shard drop so follow-ups miss
+            // cleanly (place anew) instead of chasing a lost cache.
+            self.sessions.retain(|_, s| *s != shard);
+            // Respawn before re-routing, so a single-worker server can
+            // re-route its salvage onto its own replacement.
+            if self.restarts[shard] < self.max_restarts {
+                self.restarts[shard] += 1;
+                self.stats.worker_restarts += 1;
+                // Bounded backoff: 2ms, 4ms, … capped — enough to not
+                // hot-spin on a construction that keeps failing, short
+                // enough for tests.
+                std::thread::sleep(std::time::Duration::from_millis(
+                    1u64 << self.restarts[shard].min(6),
+                ));
+                let replacement = (self.spawners[shard])(generation + 1);
+                let old = std::mem::replace(&mut self.workers[shard], replacement);
+                self.retired.push(old.handle);
+                self.shards.revive(shard);
+            }
+        }
+        for (packet, sink) in salvage {
+            self.reroute_salvage(packet, sink);
+        }
+    }
+
+    /// Re-route one salvaged flight: state-carrying packets `attach` on
+    /// the target (falling back to re-prefill exactly like the
+    /// malformed-packet path); token-only packets go straight to
+    /// re-prefill. Budget-exhausted or unroutable flights fail
+    /// terminally — their sink always gets exactly one message.
+    fn reroute_salvage(&mut self, mut packet: Box<MigrationPacket>, sink: Sender<Response>) {
+        let seq = packet.seq();
+        if packet.flight.replays >= self.max_replays {
+            self.fail_request(
+                seq,
+                sink,
+                format!(
+                    "retry budget exhausted after {} fault re-routes",
+                    packet.flight.replays
+                ),
+            );
+            return;
+        }
+        if !self.shards.has_live() {
+            self.fail_request(seq, sink, "no healthy worker available");
+            return;
+        }
+        packet.flight.replays += 1;
+        let carried = packet.state_bytes() > 0;
+        let mode = if carried {
+            MigrationMode::Move
+        } else {
+            // Token-only packets would be rejected by attach's shape
+            // validation anyway; route them straight to re-prefill.
+            MigrationMode::Reprefill
+        };
+        let shard = self.shards.place(seq);
+        match self.workers[shard].tx.send(Msg::Attach(packet, sink, mode)) {
+            Ok(()) => {
+                if carried {
+                    self.stats.requests_salvaged += 1;
+                } else {
+                    self.stats.requests_reprefilled_on_fault += 1;
+                }
+            }
+            Err(std::sync::mpsc::SendError(msg)) => {
+                if let Msg::Attach(_, sink, _) = msg {
+                    self.fail_request(seq, sink, "worker lost while re-routing");
+                }
+            }
+        }
+    }
+
+    /// Re-route a submit that bounced off a dead worker's mailbox.
+    fn reroute_orphan(&mut self, req: Request, session: Option<u64>, sink: Sender<Response>) {
+        if !self.shards.has_live() {
+            self.fail_request(req.id, sink, "no healthy worker available");
+            return;
+        }
+        let shard = self.shards.place(req.id);
+        if let Some(sid) = session {
+            self.sessions.insert(sid, shard);
+        }
+        let msg = match session {
+            Some(sid) => Msg::SubmitSession(req, sid, sink),
+            None => Msg::Submit(req, sink),
+        };
+        if let Err(std::sync::mpsc::SendError(msg)) = self.workers[shard].tx.send(msg) {
+            self.fail_submit_msg(msg, "worker lost while re-routing");
+        }
+    }
+
+    /// Terminal failure: exactly one error message to the sink, router
+    /// bookkeeping released.
+    fn fail_request(&mut self, seq: u64, sink: Sender<Response>, reason: impl Into<String>) {
+        self.stats.requests_failed += 1;
+        self.shards.complete(seq);
+        let _ = sink.send(Response::failure(seq, reason));
+    }
+
+    /// Unwrap a failed submit-message send and fail it terminally.
+    fn fail_submit_msg(&mut self, msg: Msg, reason: &str) {
+        if let Msg::Submit(req, sink) | Msg::SubmitSession(req, _, sink) = msg {
+            self.fail_request(req.id, sink, reason);
         }
     }
 
@@ -198,20 +487,31 @@ impl Server {
         if let Some(rx) = self.reject_duplicate(&req) {
             return rx;
         }
+        // A pin onto a retired shard is stale (supervision drops pins
+        // at retire time, but a pin can also go stale between a death
+        // and its Down event): place anew rather than chase it.
         let shard = match self.sessions.get(&session) {
-            Some(&s) => {
+            Some(&s) if !self.shards.is_dead(s) => {
                 self.shards.assign(req.id, s);
                 s
             }
-            None => {
+            _ => {
                 let s = self.shards.place(req.id);
                 self.sessions.insert(session, s);
                 s
             }
         };
         let (tx, rx) = channel();
-        let w = self.workers.get(shard).expect("at least one worker");
-        let _ = w.tx.send(Msg::SubmitSession(req, session, tx));
+        match self.workers.get(shard) {
+            Some(w) => {
+                if let Err(std::sync::mpsc::SendError(msg)) =
+                    w.tx.send(Msg::SubmitSession(req, session, tx))
+                {
+                    self.fail_submit_msg(msg, "worker channel closed");
+                }
+            }
+            None => self.fail_request(req.id, tx, "no such worker"),
+        }
         rx
     }
 
@@ -265,10 +565,20 @@ impl Server {
         None
     }
 
+    /// Send a submit to `shard`'s mailbox. If the worker is gone (no
+    /// such shard, or its channel closed before the tombstone took
+    /// over), the request fails terminally — the returned receiver
+    /// yields an error [`Response`], never a silent disconnect.
     fn send_submit(&mut self, req: Request, shard: usize) -> Receiver<Response> {
         let (tx, rx) = channel();
-        let w = self.workers.get(shard).expect("at least one worker");
-        let _ = w.tx.send(Msg::Submit(req, tx));
+        match self.workers.get(shard) {
+            Some(w) => {
+                if let Err(std::sync::mpsc::SendError(msg)) = w.tx.send(Msg::Submit(req, tx)) {
+                    self.fail_submit_msg(msg, "worker channel closed");
+                }
+            }
+            None => self.fail_request(req.id, tx, "no such worker"),
+        }
         rx
     }
 
@@ -415,13 +725,21 @@ impl Server {
         total
     }
 
-    /// Graceful shutdown: drains in-flight work first.
-    pub fn shutdown(self) {
+    /// Graceful shutdown: drains in-flight work first. Pending
+    /// supervision events are handled before the workers stop, so
+    /// salvaged flights still re-route rather than vanish.
+    pub fn shutdown(mut self) {
+        self.supervise();
         for w in &self.workers {
             let _ = w.tx.send(Msg::Shutdown);
         }
         for w in self.workers {
             let _ = w.handle.join();
+        }
+        // Tombstones of replaced workers exit when their mailbox
+        // disconnects (their Sender was dropped at respawn).
+        for h in self.retired {
+            let _ = h.join();
         }
     }
 }
@@ -440,11 +758,14 @@ fn accept_submit<E: Executor>(
     sinks.insert(id, sink);
     if let Err(e) = sched.submit_session(req, session) {
         eprintln!("coordinator: rejected request: {e}");
-        // The request will never complete: release the sink (the
-        // client's recv() errors out instead of hanging) and tell the
-        // router so its tracked placement doesn't leak a phantom load
-        // entry.
-        sinks.remove(&id);
+        // The request will never complete: send its one terminal
+        // message (an explicit error — the client's recv() returns it
+        // instead of hanging or surprising with a disconnect) and tell
+        // the router so its tracked placement doesn't leak a phantom
+        // load entry.
+        if let Some(sink) = sinks.remove(&id) {
+            let _ = sink.send(Response::failure(id, format!("rejected: {e}")));
+        }
         let _ = done.send(id);
     }
 }
@@ -531,8 +852,10 @@ fn worker_loop<E: Executor>(
     policy: BatchPolicy,
     spec: PlanSpec,
     shard: usize,
+    generation: u64,
     rx: Receiver<Msg>,
     done: Sender<u64>,
+    events: Sender<WorkerEvent>,
 ) {
     // The state path is negotiated from the engine's caps (resident for
     // in-place-capable engines, packed reference otherwise).
@@ -575,10 +898,78 @@ fn worker_loop<E: Executor>(
                 }
             }
             Err(e) => {
-                eprintln!("coordinator: engine error: {e}");
-                // Fail-stop for this worker: report and exit.
+                eprintln!("coordinator: engine error on shard {shard}: {e}");
+                // Salvage instead of fail-stop: the poisoned scheduler
+                // exports every in-flight sequence (untouched rows with
+                // their state, suspect rows as token-only re-prefills)
+                // and the supervisor re-routes them. Sinks travel with
+                // their flights; any sink left without a flight gets
+                // its terminal error here — a dead worker never
+                // silently drops a client.
+                let mut salvage: Vec<SalvageEntry> = Vec::new();
+                for packet in sched.salvage() {
+                    let seq = packet.seq();
+                    match sinks.remove(&seq) {
+                        Some(sink) => salvage.push((Box::new(packet), sink)),
+                        // No sink, no observer: nothing to route the
+                        // response to (detach in flight) — drop it and
+                        // release the router's tracking.
+                        None => {
+                            let _ = done.send(seq);
+                        }
+                    }
+                }
+                for (id, sink) in std::mem::take(&mut sinks) {
+                    let _ = sink.send(Response::failure(id, "worker failed with no salvageable flight"));
+                    let _ = done.send(id);
+                }
+                let _ = events.send(WorkerEvent::Down { shard, generation, salvage });
+                tombstone_loop(shard, generation, rx, &events);
                 return;
             }
+        }
+    }
+}
+
+/// Mailbox service for a dead worker. The scheduler is gone, but the
+/// channel must keep answering until the supervisor replaces the worker
+/// (dropping this receiver's sender) or shuts down — any message racing
+/// the death would otherwise be silently dropped, and a dropped submit
+/// is a client hung on `recv()` forever. Submits bounce back to the
+/// supervisor as `Orphan` events for re-routing; attaches re-enter the
+/// salvage path (a stale-generation `Down` whose salvage the supervisor
+/// re-routes without retiring anything); detaches report "not here";
+/// queries get their reply channel dropped, which the router already
+/// treats as "worker gone".
+fn tombstone_loop(shard: usize, generation: u64, rx: Receiver<Msg>, events: &Sender<WorkerEvent>) {
+    while let Ok(msg) = rx.recv() {
+        let forwarded = match msg {
+            Msg::Submit(req, sink) => events.send(WorkerEvent::Orphan { req, session: None, sink }),
+            Msg::SubmitSession(req, session, sink) => {
+                events.send(WorkerEvent::Orphan { req, session: Some(session), sink })
+            }
+            Msg::Attach(packet, sink, _) => events.send(WorkerEvent::Down {
+                shard,
+                generation,
+                salvage: vec![(packet, sink)],
+            }),
+            Msg::Fork(_, _, tx) => {
+                let _ = tx.send(false);
+                Ok(())
+            }
+            Msg::Detach(_, tx) => {
+                let _ = tx.send(None);
+                Ok(())
+            }
+            // Dropping the reply sender makes the router's recv() fail,
+            // which every query path already skips over.
+            Msg::Report(_) | Msg::Traffic(_) | Msg::Caps(_) | Msg::Load(_) => Ok(()),
+            Msg::SnapshotBudget(_) | Msg::RemoteResident(_) => Ok(()),
+            Msg::Shutdown => return,
+        };
+        if forwarded.is_err() {
+            // Supervisor gone: nobody left to re-route to.
+            return;
         }
     }
 }
@@ -592,7 +983,7 @@ pub fn serve_all<E, F>(
 ) -> Result<(Vec<Response>, String)>
 where
     E: Executor,
-    F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    F: FnMut() -> anyhow::Result<E> + Send + 'static,
 {
     let mut server = Server::start(vec![factory], policy);
     let sinks: Vec<Receiver<Response>> =
@@ -767,6 +1158,200 @@ mod tests {
         let rx = server.submit(gen.next_request());
         assert_eq!(server.shard_map().len(), 1);
         rx.recv().unwrap();
+        server.shutdown();
+    }
+
+    /// Block on one response receiver while pumping the supervisor, so
+    /// fault recovery can run while the test waits. Panics (rather than
+    /// hanging CI) if nothing arrives within the deadline — and a
+    /// disconnect is a test failure by definition: supervision
+    /// guarantees every sink exactly one terminal message.
+    fn recv_supervised(server: &mut Server, rx: &Receiver<Response>) -> Response {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            server.supervise();
+            match rx.recv_timeout(std::time::Duration::from_millis(2)) {
+                Ok(resp) => return resp,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    assert!(std::time::Instant::now() < deadline, "sink starved for 30s");
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    panic!("sink disconnected without a terminal response")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_worker_sinks_get_terminal_errors_not_disconnects() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // One worker, engine dies at its second launch, respawn
+        // disabled: every in-flight request must degrade to an explicit
+        // error response — no hung or disconnected clients.
+        let inj = FaultInjector::new(FaultPlan::Nth(2));
+        let factory = {
+            let inj = inj.clone();
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(vec![factory], BatchPolicy::default());
+        server.set_max_restarts(0);
+        let rxs: Vec<_> = (0..4u64)
+            .map(|id| {
+                server.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 8 })
+            })
+            .collect();
+        for rx in &rxs {
+            let resp = recv_supervised(&mut server, rx);
+            assert!(resp.is_error(), "expected terminal error, got {resp:?}");
+            assert!(
+                rx.try_recv().is_err(),
+                "exactly one terminal message per sink"
+            );
+        }
+        let stats = server.resilience();
+        assert_eq!(stats.workers_down, 1);
+        assert_eq!(stats.worker_restarts, 0);
+        assert_eq!(stats.requests_failed, 4);
+        assert_eq!(inj.faults_injected(), 1);
+        assert!(!server.shard_map().has_live());
+        server.shutdown();
+    }
+
+    #[test]
+    fn fail_once_respawns_within_cap_and_completes_bit_identical() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![3, 1, 4, 1, 5, 9],
+                max_new_tokens: 10 + id as usize % 3,
+            })
+            .collect();
+        let baseline: Vec<Vec<i32>> = {
+            let (mut resps, _) =
+                serve_all(|| Ok(MockEngine::new()), BatchPolicy::default(), reqs.clone()).unwrap();
+            resps.sort_by_key(|r| r.id);
+            resps.into_iter().map(|r| r.tokens).collect()
+        };
+
+        let inj = FaultInjector::new(FaultPlan::Once(3));
+        let factory = {
+            let inj = inj.clone();
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(vec![factory], BatchPolicy::default());
+        let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+        let mut resps: Vec<Response> =
+            rxs.iter().map(|rx| recv_supervised(&mut server, rx)).collect();
+        resps.sort_by_key(|r| r.id);
+        for (resp, want) in resps.iter().zip(&baseline) {
+            assert!(resp.error.is_none(), "recoverable request failed: {:?}", resp.error);
+            assert_eq!(&resp.tokens, want, "request {} diverged across the fault", resp.id);
+        }
+        let stats = server.resilience();
+        assert_eq!(stats.workers_down, 1, "one death");
+        assert_eq!(stats.worker_restarts, 1, "one respawn, within the default cap");
+        assert_eq!(stats.requests_failed, 0);
+        assert!(
+            stats.requests_salvaged + stats.requests_reprefilled_on_fault >= 1,
+            "the in-flight work was re-routed, not discarded: {stats:?}"
+        );
+        assert_eq!(inj.faults_injected(), 1);
+        assert!(server.shard_map().has_live(), "the shard is serving again");
+        server.shutdown();
+    }
+
+    #[test]
+    fn construction_failure_routes_around_the_phantom_shard() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // Shard 0 can never build its engine; shard 1 is healthy.
+        // Every request must still complete (re-routed), and the dead
+        // shard must leave the routing map.
+        let mk = |plan: FaultPlan| {
+            let inj = FaultInjector::new(plan);
+            let f = {
+                let inj = inj.clone();
+                move || inj.wrap(MockEngine::new())
+            };
+            (inj, f)
+        };
+        let (bad_inj, bad) = mk(FaultPlan::Construct(u64::MAX));
+        let (_good_inj, good) = mk(FaultPlan::Construct(0));
+        let mut server = Server::start(vec![bad, good], BatchPolicy::default());
+        server.set_max_restarts(0);
+        let rxs: Vec<_> = (0..6u64)
+            .map(|id| {
+                server.submit(Request { id, prompt: vec![2, 7, 1], max_new_tokens: 5 })
+            })
+            .collect();
+        for rx in &rxs {
+            let resp = recv_supervised(&mut server, rx);
+            assert!(resp.error.is_none(), "healthy shard must absorb the load: {resp:?}");
+            assert_eq!(resp.tokens.len(), 5);
+        }
+        assert!(bad_inj.faults_injected() >= 1);
+        assert!(server.shard_map().is_dead(0));
+        assert!(!server.shard_map().is_dead(1));
+        // New submits never touch the phantom shard.
+        let rx = server.submit(Request { id: 99, prompt: vec![4], max_new_tokens: 2 });
+        assert_eq!(server.shard_map().shard_of(99), Some(1));
+        assert!(recv_supervised(&mut server, &rx).error.is_none());
+        server.shutdown();
+    }
+
+    #[test]
+    fn construction_retry_succeeds_within_restart_budget() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // First construction fails, the respawn's retry builds cleanly.
+        let inj = FaultInjector::new(FaultPlan::Construct(1));
+        let factory = {
+            let inj = inj.clone();
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(vec![factory], BatchPolicy::default());
+        let rxs: Vec<_> = (0..3u64)
+            .map(|id| {
+                server.submit(Request { id, prompt: vec![1, 2], max_new_tokens: 4 })
+            })
+            .collect();
+        for rx in &rxs {
+            let resp = recv_supervised(&mut server, rx);
+            assert!(resp.error.is_none(), "{resp:?}");
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        let stats = server.resilience();
+        assert_eq!(stats.workers_down, 1);
+        assert_eq!(stats.worker_restarts, 1);
+        assert_eq!(inj.constructions(), 2, "failed build plus the successful retry");
+        server.shutdown();
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_an_explicit_error() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // The engine dies on its first launch of *every* incarnation:
+        // requests keep getting salvaged and re-routed until their
+        // replay budget runs out, then fail terminally — never an
+        // infinite loop, never a dropped sink.
+        let inj = FaultInjector::new(FaultPlan::Nth(1));
+        let factory = {
+            let inj = inj.clone();
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(vec![factory], BatchPolicy::default());
+        server.set_max_restarts(8);
+        server.set_max_replays(2);
+        let rx = server.submit(Request { id: 0, prompt: vec![5, 5], max_new_tokens: 4 });
+        let resp = recv_supervised(&mut server, &rx);
+        assert!(resp.is_error(), "{resp:?}");
+        assert!(
+            resp.error.as_deref().unwrap_or("").contains("retry budget")
+                || resp.error.as_deref().unwrap_or("").contains("no healthy worker"),
+            "unexpected terminal reason: {:?}",
+            resp.error
+        );
+        assert_eq!(server.resilience().requests_failed, 1);
+        assert!(inj.faults_injected() >= 2, "the fault was actually replayed");
         server.shutdown();
     }
 }

@@ -176,15 +176,21 @@ pub struct ShardMap {
     cooldown_until: BTreeMap<u64, u64>,
     /// Monotone rebalance-round clock.
     round: u64,
+    /// Shards retired by supervision (worker dead, not respawned):
+    /// excluded from placement and from rebalance targets until
+    /// [`ShardMap::revive`].
+    dead: Vec<bool>,
 }
 
 impl ShardMap {
     pub fn new(n_shards: usize) -> ShardMap {
+        let n = n_shards.max(1);
         ShardMap {
             placement: BTreeMap::new(),
-            counts: vec![0; n_shards.max(1)],
+            counts: vec![0; n],
             cooldown_until: BTreeMap::new(),
             round: 0,
+            dead: vec![false; n],
         }
     }
 
@@ -210,18 +216,71 @@ impl ShardMap {
         self.placement.get(&seq).copied()
     }
 
-    /// Route a new request: least-loaded shard, ties to the lowest
-    /// index. Records the placement.
+    /// Route a new request: least-loaded **live** shard, ties to the
+    /// lowest index. Records the placement. When every shard is dead
+    /// this falls back to the plain least-loaded pick (callers that
+    /// care check [`ShardMap::has_live`] first and fail the request
+    /// terminally instead of sending into a void).
     pub fn place(&mut self, seq: u64) -> usize {
-        let shard = self
+        let live = self
             .counts
             .iter()
             .enumerate()
+            .filter(|&(i, _)| !self.dead[i])
             .min_by_key(|&(i, &c)| (c, i))
-            .map(|(i, _)| i)
-            .expect("at least one shard");
+            .map(|(i, _)| i);
+        let shard = live.unwrap_or_else(|| {
+            self.counts
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &c)| (c, i))
+                .map(|(i, _)| i)
+                .expect("at least one shard")
+        });
         self.assign(seq, shard);
         shard
+    }
+
+    /// Retire a dead shard: mark it unroutable and drop every tracked
+    /// placement on it, reconciling the load counter to zero (its
+    /// completions will never arrive on `done_rx`, so without this the
+    /// tracked load over-counts forever and skews least-load placement
+    /// for the rest of the process). Returns the orphaned sequence ids
+    /// — the supervisor re-routes the ones it salvaged and fails the
+    /// rest terminally.
+    pub fn retire(&mut self, shard: usize) -> Vec<u64> {
+        if shard >= self.counts.len() {
+            return Vec::new();
+        }
+        self.dead[shard] = true;
+        let orphans: Vec<u64> = self
+            .placement
+            .iter()
+            .filter_map(|(&seq, &sh)| (sh == shard).then_some(seq))
+            .collect();
+        for &seq in &orphans {
+            self.placement.remove(&seq);
+            self.cooldown_until.remove(&seq);
+        }
+        self.counts[shard] = 0;
+        orphans
+    }
+
+    /// Bring a respawned shard back into routing.
+    pub fn revive(&mut self, shard: usize) {
+        if shard < self.dead.len() {
+            self.dead[shard] = false;
+        }
+    }
+
+    /// True if `shard` is retired (or out of range).
+    pub fn is_dead(&self, shard: usize) -> bool {
+        self.dead.get(shard).copied().unwrap_or(true)
+    }
+
+    /// True while at least one shard is routable.
+    pub fn has_live(&self) -> bool {
+        self.dead.iter().any(|&d| !d)
     }
 
     /// Record a forced placement (or correct one after a migration):
@@ -261,18 +320,27 @@ impl ShardMap {
         let mut planned: Vec<Migration> = Vec::new();
         let mut moved: BTreeSet<u64> = BTreeSet::new();
         while planned.len() < pol.max_moves_per_rebalance {
-            let hot = counts
+            // Dead shards are never rebalance endpoints: they hold no
+            // load after `retire` (so they cannot be hot) and must not
+            // receive moves (so they cannot be cold).
+            let Some(hot) = counts
                 .iter()
                 .enumerate()
+                .filter(|&(i, _)| !self.dead[i])
                 .max_by_key(|&(i, &c)| (c, std::cmp::Reverse(i)))
                 .map(|(i, _)| i)
-                .expect("at least one shard");
-            let cold = counts
+            else {
+                break;
+            };
+            let Some(cold) = counts
                 .iter()
                 .enumerate()
+                .filter(|&(i, _)| !self.dead[i])
                 .min_by_key(|&(i, &c)| (c, i))
                 .map(|(i, _)| i)
-                .expect("at least one shard");
+            else {
+                break;
+            };
             if counts[hot] <= counts[cold] + pol.migrate_threshold {
                 break;
             }
@@ -384,5 +452,58 @@ mod tests {
             m.defer(seq, &pol);
         }
         assert!(m.plan_rebalance(&pol).is_empty(), "cooldown must pin all candidates");
+    }
+
+    #[test]
+    fn retire_reconciles_load_and_routes_around_the_dead_shard() {
+        let mut m = ShardMap::new(2);
+        for seq in 0..4u64 {
+            m.place(seq);
+        }
+        assert_eq!(m.loads(), &[2, 2]);
+        let orphans = m.retire(0);
+        assert_eq!(orphans, vec![0, 2], "shard 0 held the even placements");
+        assert!(m.is_dead(0));
+        assert!(m.has_live());
+        // Tracked load is reconciled, not leaked: the dead shard's
+        // completions will never arrive, so its counter must be zero.
+        assert_eq!(m.loads(), &[0, 2]);
+        // Placement routes around the dead shard even though it now
+        // reads as least-loaded.
+        for seq in 10..14u64 {
+            assert_eq!(m.place(seq), 1);
+        }
+        m.revive(0);
+        assert!(!m.is_dead(0));
+        assert_eq!(m.place(99), 0, "revived shard is the cold target again");
+    }
+
+    #[test]
+    fn retire_everything_still_places_but_reports_no_live() {
+        let mut m = ShardMap::new(1);
+        m.place(1);
+        let orphans = m.retire(0);
+        assert_eq!(orphans, vec![1]);
+        assert!(!m.has_live());
+        // Fallback placement stays in range; callers gate on has_live.
+        assert_eq!(m.place(2), 0);
+        assert!(m.retire(9).is_empty(), "out-of-range retire is a no-op");
+        assert!(m.is_dead(9), "out-of-range shards are never routable");
+    }
+
+    #[test]
+    fn plan_rebalance_never_targets_a_dead_shard() {
+        let mut m = ShardMap::new(3);
+        for seq in 0..8u64 {
+            m.assign(seq, 0);
+        }
+        m.retire(2);
+        let pol = RouterPolicy { max_moves_per_rebalance: 16, ..RouterPolicy::default() };
+        let plan = m.plan_rebalance(&pol);
+        assert!(!plan.is_empty());
+        for mv in &plan {
+            assert_eq!((mv.from, mv.to), (0, 1), "dead shard 2 must not be the cold target");
+            m.apply(mv, &pol);
+        }
     }
 }

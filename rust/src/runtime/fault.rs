@@ -1,0 +1,320 @@
+//! Deterministic fault injection for executors.
+//!
+//! A [`FaultyEngine`] wraps any [`Executor`] and fails launches (or
+//! construction) according to a [`FaultPlan`], so every engine failure
+//! mode the serving stack must survive — a transient device error, a
+//! permanently wedged kernel, an engine that cannot even be built — is
+//! a *replayable test input* instead of a hope. The wrapper is driven
+//! by a [`FaultInjector`], a cloneable handle that doubles as the
+//! observer: tests and benches read [`FaultInjector::faults_injected`]
+//! to assert exactly how many faults actually fired.
+//!
+//! Plans are deterministic by construction: launch counting is
+//! per-engine-instance (a respawned worker gets a fresh count), while
+//! the `Once` recovery latch and the `Construct` budget are shared
+//! across every engine built from the same injector — that is what
+//! makes "fail once, then recover" and "fail the first N
+//! constructions" meaningful under supervised respawn.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::artifact::Manifest;
+use super::engine::{Executor, StepOutput};
+use super::spec::{EngineCaps, LaunchSpec};
+
+/// A deterministic engine-failure schedule.
+///
+/// Launch indices are 1-based and counted **per engine instance**;
+/// construction indices are 1-based and counted **per injector**
+/// (shared across respawns, which is what lets a construction-retry
+/// succeed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPlan {
+    /// Fail exactly the `n`th launch of every engine instance built
+    /// from this injector. A respawned instance fails again at its own
+    /// `n`th launch — this is the "permanently faulty shard" plan that
+    /// exercises the restart cap.
+    Nth(u64),
+    /// Fail every `k`th launch (launches `k, 2k, 3k, …`) of each
+    /// instance. `Every(0)` never fires.
+    Every(u64),
+    /// Fail the first launch at index `>= n`, once, across **all**
+    /// instances sharing this injector — fail-once-then-recover. The
+    /// replacement engine (or any later launch) runs clean.
+    Once(u64),
+    /// Fail the first `n` constructions ([`FaultInjector::wrap`]),
+    /// shared across the injector; construction `n + 1` succeeds. With
+    /// `n = u64::MAX` the engine can never be built.
+    Construct(u64),
+}
+
+impl FaultPlan {
+    /// Parse a plan from its CLI spelling: `nth:N`, `every:K`,
+    /// `once[:N]` (default `N = 1`), `construct[:N]` (default `N = 1`).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        let num = |default: Option<u64>| -> Result<u64> {
+            match (arg, default) {
+                (Some(a), _) => a
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("bad fault plan count {a:?}: {e}")),
+                (None, Some(d)) => Ok(d),
+                (None, None) => bail!("fault plan {kind:?} needs a count, e.g. {kind}:3"),
+            }
+        };
+        match kind {
+            "nth" => {
+                let n = num(None)?;
+                if n == 0 {
+                    bail!("nth:0 is meaningless (launches are 1-based)");
+                }
+                Ok(FaultPlan::Nth(n))
+            }
+            "every" => Ok(FaultPlan::Every(num(None)?)),
+            "once" => Ok(FaultPlan::Once(num(Some(1))?.max(1))),
+            "construct" => Ok(FaultPlan::Construct(num(Some(1))?)),
+            other => bail!("unknown fault plan {other:?} (want nth:N | every:K | once[:N] | construct[:N])"),
+        }
+    }
+}
+
+/// State shared by every engine built from one injector.
+#[derive(Debug, Default)]
+struct FaultShared {
+    /// Latch for [`FaultPlan::Once`]: set by the single firing.
+    fired: AtomicBool,
+    /// Constructions attempted via [`FaultInjector::wrap`].
+    constructions: AtomicU64,
+    /// Faults actually injected (construction + launch).
+    injected: AtomicU64,
+}
+
+/// Factory-and-observer handle for fault injection.
+///
+/// Clone it freely: clones share the same counters and `Once` latch,
+/// so a test can keep one clone while a worker factory moves another
+/// into its thread, and both see the same truth.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    shared: Arc<FaultShared>,
+}
+
+impl FaultInjector {
+    /// Build an injector for `plan`.
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            shared: Arc::new(FaultShared::default()),
+        }
+    }
+
+    /// The plan this injector executes.
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    /// Wrap `engine`, applying construction faults.
+    ///
+    /// Every call counts as one construction attempt; under
+    /// [`FaultPlan::Construct(n)`] the first `n` attempts fail (and
+    /// count as injected faults), later ones succeed.
+    pub fn wrap<E: Executor>(&self, engine: E) -> Result<FaultyEngine<E>> {
+        let attempt = self.shared.constructions.fetch_add(1, Ordering::SeqCst) + 1;
+        if let FaultPlan::Construct(n) = self.plan {
+            if attempt <= n {
+                self.shared.injected.fetch_add(1, Ordering::SeqCst);
+                bail!("injected construction fault (construction {attempt} of first {n})");
+            }
+        }
+        Ok(FaultyEngine {
+            inner: engine,
+            injector: self.clone(),
+            launches: Cell::new(0),
+        })
+    }
+
+    /// Total faults injected so far (construction + launch), across
+    /// every engine built from this injector.
+    pub fn faults_injected(&self) -> u64 {
+        self.shared.injected.load(Ordering::SeqCst)
+    }
+
+    /// Construction attempts so far (successful or not).
+    pub fn constructions(&self) -> u64 {
+        self.shared.constructions.load(Ordering::SeqCst)
+    }
+}
+
+/// An [`Executor`] wrapper that fails launches on a [`FaultPlan`]
+/// schedule and otherwise delegates everything to the inner engine.
+///
+/// Failures are injected only at the [`Executor::launch`] boundary —
+/// exactly where the scheduler's poisoning/salvage machinery observes
+/// real engine errors — so a `FaultyEngine<MockEngine>` run exercises
+/// the same recovery code paths a real device fault would.
+#[derive(Debug)]
+pub struct FaultyEngine<E> {
+    inner: E,
+    injector: FaultInjector,
+    // `launch` takes `&self`, so the per-instance counter is a Cell.
+    launches: Cell<u64>,
+}
+
+impl<E> FaultyEngine<E> {
+    /// Launches attempted on this instance (including the failing one).
+    pub fn launches(&self) -> u64 {
+        self.launches.get()
+    }
+}
+
+impl<E: Executor> Executor for FaultyEngine<E> {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        self.inner.caps()
+    }
+
+    fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<StepOutput> {
+        self.inner.prefill(batch, tokens)
+    }
+
+    fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        conv_state: &[f32],
+        ssm_state: &[f32],
+    ) -> Result<StepOutput> {
+        self.inner.decode(batch, tokens, conv_state, ssm_state)
+    }
+
+    fn launch(&self, spec: LaunchSpec<'_>) -> Result<()> {
+        let n = self.launches.get() + 1;
+        self.launches.set(n);
+        let fail = match self.injector.plan {
+            FaultPlan::Nth(k) => n == k,
+            FaultPlan::Every(k) => k > 0 && n % k == 0,
+            // Short-circuit keeps the latch untouched until the
+            // threshold is reached; the first swap wins.
+            FaultPlan::Once(k) => n >= k && !self.injector.shared.fired.swap(true, Ordering::SeqCst),
+            FaultPlan::Construct(_) => false,
+        };
+        if fail {
+            self.injector.shared.injected.fetch_add(1, Ordering::SeqCst);
+            bail!(
+                "injected launch fault (launch {n} under plan {:?})",
+                self.injector.plan
+            );
+        }
+        self.inner.launch(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mock::MockEngine;
+    use super::super::spec::{Donation, MixedBatch, Phase, Segment, StateSlabs};
+    use super::super::Workspace;
+    use super::*;
+
+    /// One single-row decode launch from zero state — the smallest
+    /// valid `LaunchSpec`, enough to tick the launch counter.
+    fn try_launch<E: Executor>(engine: &E, ws: &mut Workspace) -> Result<()> {
+        let (nl, cp, sp) = {
+            let m = engine.manifest();
+            (
+                m.n_layer,
+                m.d_inner * (m.d_conv - 1),
+                m.d_inner * m.d_state,
+            )
+        };
+        let segs = [Segment {
+            row: 0,
+            len: 1,
+            phase: Phase::Decode,
+        }];
+        let tokens = [3i32];
+        let mut conv = vec![0.0f32; nl * cp];
+        let mut ssm = vec![0.0f32; nl * sp];
+        engine.launch(LaunchSpec {
+            batch: MixedBatch::new(&segs, &tokens).unwrap(),
+            state: StateSlabs::new(&mut conv, &mut ssm, 1, Donation::Retain),
+            plan: None,
+            ws,
+        })
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_spellings() {
+        assert_eq!(FaultPlan::parse("nth:4").unwrap(), FaultPlan::Nth(4));
+        assert_eq!(FaultPlan::parse("every:7").unwrap(), FaultPlan::Every(7));
+        assert_eq!(FaultPlan::parse("once").unwrap(), FaultPlan::Once(1));
+        assert_eq!(FaultPlan::parse("once:9").unwrap(), FaultPlan::Once(9));
+        assert_eq!(FaultPlan::parse("construct").unwrap(), FaultPlan::Construct(1));
+        assert_eq!(FaultPlan::parse("construct:2").unwrap(), FaultPlan::Construct(2));
+        assert!(FaultPlan::parse("nth:0").is_err());
+        assert!(FaultPlan::parse("nth").is_err());
+        assert!(FaultPlan::parse("sometimes:3").is_err());
+    }
+
+    #[test]
+    fn nth_plan_fails_exactly_the_nth_launch_per_instance() {
+        let inj = FaultInjector::new(FaultPlan::Nth(3));
+        let mut ws = Workspace::default();
+        for instance in 0..2 {
+            let engine = inj.wrap(MockEngine::new()).unwrap();
+            for n in 1..=5u64 {
+                let r = try_launch(&engine, &mut ws);
+                assert_eq!(r.is_err(), n == 3, "instance {instance} launch {n}");
+            }
+        }
+        assert_eq!(inj.faults_injected(), 2, "each instance fails its own 3rd launch");
+    }
+
+    #[test]
+    fn once_plan_recovers_on_the_replacement_instance() {
+        let inj = FaultInjector::new(FaultPlan::Once(2));
+        let mut ws = Workspace::default();
+        let first = inj.wrap(MockEngine::new()).unwrap();
+        assert!(try_launch(&first, &mut ws).is_ok());
+        assert!(try_launch(&first, &mut ws).is_err());
+        // The replacement never faults: the shared latch has fired.
+        let second = inj.wrap(MockEngine::new()).unwrap();
+        for _ in 0..4 {
+            assert!(try_launch(&second, &mut ws).is_ok());
+        }
+        assert_eq!(inj.faults_injected(), 1);
+    }
+
+    #[test]
+    fn every_plan_fires_on_multiples() {
+        let inj = FaultInjector::new(FaultPlan::Every(2));
+        let engine = inj.wrap(MockEngine::new()).unwrap();
+        let mut ws = Workspace::default();
+        let pattern: Vec<bool> = (1..=6).map(|_| try_launch(&engine, &mut ws).is_err()).collect();
+        assert_eq!(pattern, [false, true, false, true, false, true]);
+        assert_eq!(inj.faults_injected(), 3);
+    }
+
+    #[test]
+    fn construct_plan_fails_first_n_then_builds() {
+        let inj = FaultInjector::new(FaultPlan::Construct(2));
+        assert!(inj.wrap(MockEngine::new()).is_err());
+        assert!(inj.wrap(MockEngine::new()).is_err());
+        let engine = inj.wrap(MockEngine::new()).unwrap();
+        let mut ws = Workspace::default();
+        assert!(try_launch(&engine, &mut ws).is_ok(), "construct plan never faults launches");
+        assert_eq!(inj.constructions(), 3);
+        assert_eq!(inj.faults_injected(), 2);
+    }
+}

@@ -13,10 +13,12 @@
 
 pub mod artifact;
 pub mod engine;
+pub mod fault;
 pub mod mock;
 pub mod spec;
 
 pub use artifact::{Golden, Manifest};
+pub use fault::{FaultInjector, FaultPlan, FaultyEngine};
 pub use engine::{
     argmax_rows, argmax_rows_into, Executor, MambaEngine, StepOutput, TrafficCounters, Workspace,
 };

@@ -20,14 +20,21 @@
 //! * **End-to-end**: the threaded `Server` migrates in-flight requests
 //!   over its channels (`force_migrate`, `rebalance`) without losing a
 //!   response.
+//! * **Salvage conformance**: killing one worker of a pair mid-run with
+//!   a randomized injected fault plan, salvaging the poisoned
+//!   scheduler, and re-routing the wreck to the survivor emits
+//!   bit-identical tokens to a fault-free single worker — with the
+//!   salvage conservation laws (suspect rows never export state, every
+//!   state payload is exactly `state_bytes_per_seq`, the survivor's
+//!   resident gauge grows by exactly one payload per state attach).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use mambalaya::coordinator::{
     BatchPolicy, MigrationMode, Request, Scheduler, Server, WorkloadGen,
 };
 use mambalaya::prop::check;
-use mambalaya::runtime::{Executor, MockEngine};
+use mambalaya::runtime::{Executor, FaultInjector, FaultPlan, MockEngine};
 use mambalaya::util::XorShift;
 
 fn run_single(policy: &BatchPolicy, reqs: &[Request]) -> BTreeMap<u64, Vec<i32>> {
@@ -421,6 +428,154 @@ fn server_rebalance_moves_load_off_the_hot_worker() {
     assert!(t.migrations as usize >= migrated);
     assert!(t.bytes_migrated > 0);
     server.shutdown();
+}
+
+#[test]
+fn prop_salvaged_worker_death_matches_fault_free_single_worker() {
+    // One worker of a pair dies mid-run under a randomized injected
+    // fault plan; its poisoned scheduler is salvaged and the wreck
+    // re-routed to the survivor — state-carrying packets resume in
+    // place, suspect/stateless packets re-prefill. The law: the final
+    // token streams are bit-identical to a fault-free single worker,
+    // and the salvage never launders untrusted state.
+    let probe = MockEngine::new();
+    let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+    let mut total_faults = 0u64;
+    let mut total_state_salvages = 0u64;
+    let mut total_reprefill_salvages = 0u64;
+    check("worker death + salvage ≡ fault-free single worker", 24, |rng| {
+        let policy = BatchPolicy {
+            chunk_tokens: rng.range(0, 6) as usize,
+            token_budget: rng.range(1, 24) as usize,
+            max_chunk_rows: rng.range(1, 5) as usize,
+            max_running: rng.range(1, 8) as usize,
+            decode_priority_threshold: rng.range(1, 10) as usize,
+        };
+        let mut gen = WorkloadGen::new(rng.next_u64(), vocab, plen, 2, 12)
+            .with_prompt_range(1, 3 * plen);
+        let reqs: Vec<Request> =
+            (0..rng.range(2, 8)).map(|_| gen.next_request()).collect();
+        let want = run_single(&policy, &reqs);
+
+        // A randomized deterministic fault plan; large `n` values mean
+        // some iterations never fire, which must also be harmless.
+        let n = rng.range(1, 40);
+        let plan = if rng.below(2) == 0 { FaultPlan::Nth(n) } else { FaultPlan::Every(n) };
+        let inj = FaultInjector::new(plan);
+        let mut healthy = Scheduler::new(MockEngine::new(), policy.clone());
+        healthy.set_shard(1);
+        let bytes_per_seq = healthy.state_arena().bytes_per_seq() as u64;
+        let mut faulty =
+            Some(Scheduler::new(inj.wrap(MockEngine::new()).unwrap(), policy.clone()));
+        faulty.as_mut().unwrap().set_shard(0);
+
+        // Alternate placement; `live` tracks what is still on the
+        // doomed shard when it dies.
+        let mut live: BTreeSet<u64> = BTreeSet::new();
+        for (i, r) in reqs.iter().enumerate() {
+            if i % 2 == 0 {
+                live.insert(r.id);
+                faulty.as_mut().unwrap().submit(r.clone()).unwrap();
+            } else {
+                healthy.submit(r.clone()).unwrap();
+            }
+        }
+
+        let mut out = BTreeMap::new();
+        let mut guard = 0u32;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "salvage scenario did not drain");
+            if let Some(f) = faulty.as_mut() {
+                match f.tick() {
+                    Ok((done, _)) => {
+                        for resp in done {
+                            live.remove(&resp.id);
+                            out.insert(resp.id, resp.tokens);
+                        }
+                    }
+                    Err(e) => {
+                        total_faults += 1;
+                        if !e.to_string().contains("injected launch fault") {
+                            return Err(format!("unexpected engine error: {e:#}"));
+                        }
+                        let wreck = faulty.take().unwrap();
+                        if !wreck.poisoned() {
+                            return Err("failed tick did not poison the scheduler".into());
+                        }
+                        let suspect: BTreeSet<u64> =
+                            wreck.suspect_rows().iter().copied().collect();
+                        if suspect.is_empty() {
+                            return Err("poisoning launch recorded no suspect rows".into());
+                        }
+                        if !suspect.is_subset(&live) {
+                            return Err(format!(
+                                "suspect rows {suspect:?} not all in flight {live:?}"
+                            ));
+                        }
+                        let packets = wreck.salvage();
+                        if packets.len() != live.len() {
+                            return Err(format!(
+                                "salvage exported {} packets for {} in-flight rows",
+                                packets.len(),
+                                live.len()
+                            ));
+                        }
+                        let resident_before = healthy.state_arena().resident_bytes();
+                        let mut moved = 0u64;
+                        for p in packets {
+                            let id = p.seq();
+                            if suspect.contains(&id) && p.state_bytes() != 0 {
+                                return Err(format!("suspect row {id} exported state"));
+                            }
+                            if p.state_bytes() > 0 {
+                                if p.state_bytes() != bytes_per_seq {
+                                    return Err("payload != state_bytes_per_seq".into());
+                                }
+                                moved += 1;
+                                total_state_salvages += 1;
+                                if healthy.attach(p).is_err() {
+                                    return Err(format!("salvaged packet {id} refused"));
+                                }
+                            } else {
+                                total_reprefill_salvages += 1;
+                                healthy.attach_reprefill(p);
+                            }
+                        }
+                        if healthy.state_arena().resident_bytes()
+                            != resident_before + moved * bytes_per_seq
+                        {
+                            return Err(
+                                "survivor gauge did not track salvage attaches".into()
+                            );
+                        }
+                        live.clear();
+                    }
+                }
+            }
+            for resp in healthy.tick().unwrap().0 {
+                out.insert(resp.id, resp.tokens);
+            }
+            let pending =
+                faulty.as_ref().map_or(0, |f| f.pending()) + healthy.pending();
+            if pending == 0 {
+                break;
+            }
+        }
+
+        if out != want {
+            return Err(format!(
+                "tokens diverged across worker death + salvage: {out:?} vs {want:?}"
+            ));
+        }
+        Ok(())
+    });
+    // The suite must actually exercise the machinery it claims to
+    // verify — deaths, state-carrying salvage, and the re-prefill
+    // fallback for suspect/stateless rows.
+    assert!(total_faults > 0, "no injected fault ever fired");
+    assert!(total_state_salvages > 0, "no salvage ever carried state");
+    assert!(total_reprefill_salvages > 0, "no salvage ever fell back to re-prefill");
 }
 
 #[test]
