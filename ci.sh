@@ -75,22 +75,35 @@ if [[ "${1:-}" != "--fast" ]]; then
     # threaded server respawns a fail-once worker within its restart
     # cap (again bit-identical to fault-free), and a permanent fault
     # ends with exactly one terminal error Response per sink — never a
-    # dropped channel. (The runtime module also builds under
+    # dropped channel, and (7) the trajectory gate, which serves all
+    # eight bundled scenarios through one harness and writes the
+    # consolidated scenario x counter matrix (plus tick-unit p50/p99
+    # latency percentiles from the merged log2 histograms) to
+    # BENCH_trajectory.json — every row reconciled against the
+    # request-lifecycle trace and proven bit-identical across a re-run,
+    # so a trajectory diff between commits is a behaviour diff, never
+    # noise. (The runtime module also builds under
     # #![deny(missing_docs)], so the engine surface stays documented by
     # construction.)
+    # Every gate additionally enforces the reconciliation property: the
+    # drained lifecycle trace must account for the independent traffic
+    # counters exactly (device calls, staged bytes, migrations,
+    # snapshot hits, replayed tokens, completions — and exactly one
+    # terminal event per request span).
     # All gates are on *counters* (same workload, same numbers, every
     # run), never on wall time; BENCH_hotpath.json, BENCH_planner.json,
-    # BENCH_sharding.json, BENCH_engine_api.json, BENCH_snapshot.json
-    # and BENCH_resilience.json record the trajectory.
-    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API + snapshot + resilience) =="
+    # BENCH_sharding.json, BENCH_engine_api.json, BENCH_snapshot.json,
+    # BENCH_resilience.json and BENCH_trajectory.json record the
+    # trajectory.
+    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API + snapshot + resilience + trajectory) =="
     cargo bench --bench hotpath -- --quick
-    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json BENCH_snapshot.json BENCH_resilience.json; do
+    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json BENCH_snapshot.json BENCH_resilience.json BENCH_trajectory.json; do
         if [ ! -s "$f" ]; then
             echo "ERROR: $f missing or empty" >&2
             exit 1
         fi
     done
-    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json + BENCH_snapshot.json + BENCH_resilience.json written"
+    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json + BENCH_snapshot.json + BENCH_resilience.json + BENCH_trajectory.json written"
 
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="

@@ -72,6 +72,18 @@
 //! `Response` instead of a hung channel. The per-run `resilience:`
 //! line prints the recovery counters.
 //!
+//! ## Observability
+//!
+//! Every run ends with a `latency:` line — server-wide percentiles
+//! pooled exactly across workers via the mergeable log2 histograms
+//! ([`mambalaya::obs::Histogram`]), in wall milliseconds and in
+//! deterministic scheduler ticks. `--trace-out trace.json` additionally
+//! drains the request-lifecycle trace (submit → route → chunk →
+//! launch → first token → migrate/salvage → complete, stamped with the
+//! per-worker tick clock) and writes Chrome trace-event JSON: open it
+//! in Perfetto / `chrome://tracing` to see one track per shard plus
+//! one span per request.
+//!
 //! ## Modes
 //!
 //! * `--mock` — serve on the deterministic in-process mock engine
@@ -113,6 +125,36 @@ fn recv_supervised(
     }
 }
 
+/// Print the server-wide latency line — percentiles pooled exactly
+/// across workers by merging each worker's log2 histograms — and, when
+/// `--trace-out` was given, drain the request-lifecycle trace and write
+/// Chrome trace-event JSON. Call before `shutdown`: both queries go
+/// through the live worker channels.
+fn report_observability(server: &mut Server, trace_out: Option<&str>) -> anyhow::Result<()> {
+    let lat = server.latency();
+    println!(
+        "latency: ttft p50={:.2}ms p99={:.2}ms total p50={:.2}ms p99={:.2}ms \
+         | ticks: ttft p50={} p99={} inter_token p50={} p99={}",
+        lat.ttft_us.percentile(0.50) as f64 / 1e3,
+        lat.ttft_us.percentile(0.99) as f64 / 1e3,
+        lat.total_us.percentile(0.50) as f64 / 1e3,
+        lat.total_us.percentile(0.99) as f64 / 1e3,
+        lat.ttft_ticks.percentile(0.50),
+        lat.ttft_ticks.percentile(0.99),
+        lat.inter_token_ticks.percentile(0.50),
+        lat.inter_token_ticks.percentile(0.99),
+    );
+    if let Some(path) = trace_out {
+        let events = server.trace();
+        std::fs::write(path, mambalaya::obs::chrome_trace(&events).to_string())?;
+        println!(
+            "trace: wrote {} lifecycle events to {path} (open in Perfetto / chrome://tracing)",
+            events.len()
+        );
+    }
+    Ok(())
+}
+
 /// Serve `reqs` through the server (one worker per factory) and print
 /// the outcome. With `rebalance`, the router runs slot-aware rebalance
 /// passes while the workload drains, migrating in-flight requests off
@@ -125,6 +167,7 @@ fn drive<E, F>(
     reqs: Vec<Request>,
     rebalance: bool,
     faults: Option<FaultInjector>,
+    trace_out: Option<&str>,
 ) -> anyhow::Result<()>
 where
     E: Executor,
@@ -222,6 +265,7 @@ where
         res.requests_failed,
     );
     print_snapshot_line(&t);
+    report_observability(&mut server, trace_out)?;
     server.shutdown();
 
     println!(
@@ -274,6 +318,7 @@ fn drive_sessions<E, F>(
     n_sessions: usize,
     fork: usize,
     vocab: usize,
+    trace_out: Option<&str>,
 ) -> anyhow::Result<()>
 where
     E: Executor,
@@ -356,6 +401,7 @@ where
     }
     let t = server.traffic();
     print_snapshot_line(&t);
+    report_observability(&mut server, trace_out)?;
     server.shutdown();
 
     let turns = n_sessions * 2 + candidates;
@@ -384,6 +430,7 @@ fn main() -> anyhow::Result<()> {
     let policy = BatchPolicy::from_args(&args);
     let spec = PlanSpec::parse(args.get_or("plan", "adaptive"))?;
     let faults = args.get("faults").map(FaultPlan::parse).transpose()?.map(FaultInjector::new);
+    let trace_out = args.get("trace-out");
     anyhow::ensure!(
         faults.is_none() || sessions == 0,
         "--faults drives the request workload; combine it with --mock/--requests, not --sessions"
@@ -414,7 +461,7 @@ fn main() -> anyhow::Result<()> {
                 })
                 .collect();
             let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
-            return drive(factories, policy, spec, reqs, rebalance, Some(inj));
+            return drive(factories, policy, spec, reqs, rebalance, Some(inj), trace_out);
         }
         fn mock_factory() -> anyhow::Result<MockEngine> {
             Ok(MockEngine::new())
@@ -422,10 +469,10 @@ fn main() -> anyhow::Result<()> {
         let factories: Vec<fn() -> anyhow::Result<MockEngine>> =
             (0..workers).map(|_| mock_factory as fn() -> anyhow::Result<MockEngine>).collect();
         if sessions > 0 {
-            return drive_sessions(factories, policy, spec, sessions, fork, vocab);
+            return drive_sessions(factories, policy, spec, sessions, fork, vocab, trace_out);
         }
         let reqs = ServeScenario::mixed_traffic(n_requests, vocab);
-        return drive(factories, policy, spec, reqs, rebalance, None);
+        return drive(factories, policy, spec, reqs, rebalance, None, trace_out);
     }
 
     let dir = args.get_or("artifacts", "artifacts").to_string();
@@ -469,7 +516,7 @@ fn main() -> anyhow::Result<()> {
                 move || inj.wrap(MambaEngine::load(&d)?)
             })
             .collect();
-        return drive(factories, policy, spec, reqs, rebalance, Some(inj));
+        return drive(factories, policy, spec, reqs, rebalance, Some(inj), trace_out);
     }
     let factories: Vec<_> = (0..workers)
         .map(|_| {
@@ -477,5 +524,5 @@ fn main() -> anyhow::Result<()> {
             move || MambaEngine::load(&d)
         })
         .collect();
-    drive(factories, policy, spec, reqs, rebalance, None)
+    drive(factories, policy, spec, reqs, rebalance, None, trace_out)
 }

@@ -33,7 +33,19 @@
 //!   beating reprefill-everything ≥ 5× on replayed-token counters;
 //!   the threaded server respawns a fail-once worker within its
 //!   restart cap bit-identically, and a permanent fault ends in
-//!   exactly one terminal error per sink, never a dropped channel).
+//!   exactly one terminal error per sink, never a dropped channel)
+//!   and the trajectory gate (`BENCH_trajectory.json`: all eight
+//!   bundled scenarios through one harness, emitting a scenario ×
+//!   counter matrix plus tick-unit latency percentiles — every value
+//!   deterministic, proven by running each scenario twice and
+//!   requiring identical rows).
+//!
+//! Every gate additionally enforces the **reconciliation property**:
+//! the drained request-lifecycle trace ([`mambalaya::obs`]) must
+//! account for the independently maintained traffic counters exactly —
+//! Σ `Launch.device_calls` == `device_calls`, Σ staged bytes, migration
+//! /snapshot/replay counts, completions — with exactly one terminal
+//! event per request span.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -42,8 +54,8 @@ use mambalaya::arch::ArchSpec;
 use mambalaya::bench_util::{bench_config, black_box, BenchResult, ServeScenario};
 use mambalaya::cascade::{mamba1, ModelConfig};
 use mambalaya::coordinator::{
-    serve_all, BatchPolicy, Request, Response, Scheduler, Server, StateArena, StatePath,
-    TrafficSnapshot, WorkloadGen,
+    serve_all, BatchPolicy, LatencyReport, Request, Response, Scheduler, Server, StateArena,
+    StatePath, TrafficSnapshot, WorkloadGen,
 };
 use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
 use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
@@ -52,10 +64,22 @@ use mambalaya::runtime::{
     Donation, EngineCaps, Executor, FaultInjector, FaultPlan, LaunchSpec, MixedBatch, MockEngine,
     Phase, Segment, StateSlabs, Workspace,
 };
+use mambalaya::obs::{assemble_spans, reconcile, TraceEvent, TraceRecord};
 use mambalaya::util::{Args, JsonValue};
 
 fn b<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     bench_config(name, 3, 20, Duration::from_millis(200), &mut f)
+}
+
+/// Drain a scheduler's trace ring and enforce the reconciliation
+/// property against its own counters: the check is only meaningful over
+/// a complete stream, so a lossy ring fails the gate outright.
+fn reconcile_scheduler<E: Executor>(gate: &str, s: &mut Scheduler<E>) -> Vec<TraceRecord> {
+    assert_eq!(s.trace_dropped(), 0, "{gate}: trace ring overflowed");
+    let trace = s.take_trace();
+    reconcile(&trace, &s.metrics().traffic_snapshot())
+        .unwrap_or_else(|e| panic!("{gate}: trace/counter reconciliation failed: {e}"));
+    trace
 }
 
 /// One interference run: six short-prompt decoders ride along while a
@@ -92,6 +116,7 @@ fn interference(name: &'static str, policy: BatchPolicy, path: StatePath) -> Int
         .map(|r| r.total)
         .fold(0.0, f64::max);
     let tokens = resps.iter().map(|r| r.tokens.clone()).collect();
+    reconcile_scheduler(name, &mut s);
     let met = s.metrics();
     InterferenceOutcome {
         name,
@@ -302,6 +327,7 @@ fn main() {
     engine_api_gate();
     snapshot_gate();
     resilience_gate();
+    trajectory_gate();
 
     if !quick {
         println!("\n== hot-path microbenchmarks ==");
@@ -330,6 +356,7 @@ fn planner_run(sc: &ServeScenario, planner: Planner) -> (Vec<Vec<i32>>, TrafficS
     let mut resps = s.run_until_drained().unwrap();
     resps.sort_by_key(|r| r.id);
     let tokens = resps.into_iter().map(|r| r.tokens).collect();
+    reconcile_scheduler(sc.name, &mut s);
     (tokens, s.metrics().traffic_snapshot())
 }
 
@@ -467,6 +494,7 @@ fn engine_api_run(caps: EngineCaps) -> (Vec<Vec<i32>>, TrafficSnapshot, u64, u64
     let mut resps = s.run_until_drained().unwrap();
     resps.sort_by_key(|r| r.id);
     let tokens = resps.into_iter().map(|r| r.tokens).collect();
+    reconcile_scheduler("engine_api", &mut s);
     let met = s.metrics();
     (tokens, met.traffic_snapshot(), met.ticks, met.prefill_batches, met.prefill_tokens)
 }
@@ -659,6 +687,21 @@ fn sharded_skew_run(mode: SkewMode) -> SkewOutcome {
     }
     responses.sort_by_key(|r| r.id);
     let tokens = responses.iter().map(|r| r.tokens.clone()).collect();
+    // Reconciliation property across the shard pair: a migrated span
+    // starts hot and terminates cold, and `migrations` counts attaches
+    // only, so the check must run on the combined trace against the
+    // accumulated snapshot — per-shard it would be lopsided by design.
+    assert_eq!(
+        hot.trace_dropped() + cold.trace_dropped(),
+        0,
+        "sharding: trace ring overflowed"
+    );
+    let mut trace = hot.take_trace();
+    trace.extend(cold.take_trace());
+    let mut combined = hot.metrics().traffic_snapshot();
+    combined.accumulate(&cold.metrics().traffic_snapshot());
+    reconcile(&trace, &combined)
+        .unwrap_or_else(|e| panic!("sharding({mode:?}): reconciliation failed: {e}"));
     SkewOutcome {
         name: match mode {
             SkewMode::Pinned => "pinned",
@@ -838,6 +881,9 @@ fn snapshot_gate() {
     let mut t2 = s.run_until_drained().unwrap();
     t2.sort_by_key(|r| r.id);
     let prefill_turn2 = s.metrics().prefill_tokens - prefill_turn1;
+    // Reconciliation property over both turns, snapshot hits included:
+    // Σ SnapshotHit.tokens_skipped must equal the skip counter exactly.
+    reconcile_scheduler("snapshot(multi_turn)", &mut s);
     let met = s.metrics();
     println!(
         "  multi_turn  turn2_prefill={prefill_turn2} skipped={} hits={} restored={}B",
@@ -925,6 +971,7 @@ fn snapshot_gate() {
         "each candidate must prefill exactly its 1 new token"
     );
     assert_eq!(f.metrics().snapshot_hits, n as u64);
+    reconcile_scheduler("snapshot(best_of_n)", &mut f);
 
     // Conformance: a candidate decoded from the fork matches a full
     // re-prefill of the same prompt.
@@ -1052,6 +1099,12 @@ fn salvage_run(salvage: bool) -> SalvageOutcome {
     );
     assert!(faulty.poisoned());
     let suspects = faulty.suspect_rows().len();
+    // Salvage consumes the scheduler, so its lifecycle evidence — the
+    // trace (including the Fault record) and the counters it must
+    // reconcile against — is captured before the wreck is exported.
+    assert_eq!(faulty.trace_dropped(), 0, "resilience: trace ring overflowed");
+    let faulty_trace = faulty.take_trace();
+    let faulty_snap = faulty.metrics().traffic_snapshot();
     let packets = faulty.salvage();
     assert_eq!(packets.len(), n as usize, "salvage exports every in-flight row");
 
@@ -1072,6 +1125,27 @@ fn salvage_run(salvage: bool) -> SalvageOutcome {
     responses.extend(healthy.run_until_drained().unwrap());
     responses.sort_by_key(|r| r.id);
     assert_eq!(responses.len(), n as usize);
+    // Reconciliation property across the whole fault story: every span
+    // submits on the donor, migrates through the faulty shard (whose
+    // trace carries the Fault record), and terminates exactly once on
+    // the recovery shard — and the summed counters balance the events.
+    assert!(
+        faulty_trace.iter().any(|r| matches!(r.event, TraceEvent::Fault)),
+        "faulty shard left no Fault record"
+    );
+    let mut trace = donor.take_trace();
+    assert_eq!(donor.trace_dropped() + healthy.trace_dropped(), 0);
+    trace.extend(faulty_trace);
+    trace.extend(healthy.take_trace());
+    let mut combined = donor.metrics().traffic_snapshot();
+    combined.accumulate(&faulty_snap);
+    combined.accumulate(&healthy.metrics().traffic_snapshot());
+    reconcile(&trace, &combined).unwrap_or_else(|e| {
+        panic!(
+            "resilience({}): reconciliation failed: {e}",
+            if salvage { "salvage" } else { "reprefill_everything" }
+        )
+    });
     let met = healthy.metrics();
     SalvageOutcome {
         name: if salvage { "salvage" } else { "reprefill_everything" },
@@ -1204,6 +1278,17 @@ fn resilience_gate() {
     );
     assert_eq!(inj.faults_injected(), 1);
     assert!(server.shard_map().has_live());
+    // Server-level reconciliation across the death: the dead
+    // incarnation's trace and counters rode the Down event into the
+    // server totals, so the property holds even though a worker was
+    // killed mid-flight.
+    let events = server.trace();
+    assert!(
+        events.iter().any(|r| matches!(r.event, TraceEvent::Fault)),
+        "dead worker's Fault record lost"
+    );
+    reconcile(&events, &server.traffic())
+        .unwrap_or_else(|e| panic!("resilience(fail_once): reconciliation failed: {e}"));
     server.shutdown();
     println!(
         "  fail_once_recover      down={} restarts={} salvaged={} reprefilled={} failed={}",
@@ -1239,6 +1324,10 @@ fn resilience_gate() {
     assert_eq!(perm.worker_restarts, 1, "respawns stop at the restart cap");
     assert_eq!(inj2.faults_injected(), 2);
     assert!(!doomed.shard_map().has_live(), "the exhausted shard must be unroutable");
+    // Reconciliation with zero completions: every span terminates in
+    // exactly one router-recorded Failed event, never a Completed.
+    reconcile(&doomed.trace(), &doomed.traffic())
+        .unwrap_or_else(|e| panic!("resilience(permanent): reconciliation failed: {e}"));
     doomed.shutdown();
     println!(
         "  permanent_fault        down={} restarts={} failed={} faults={} (every sink terminal)",
@@ -1293,4 +1382,340 @@ fn resilience_gate() {
     std::fs::write("BENCH_resilience.json", doc.to_string())
         .expect("writing BENCH_resilience.json");
     println!("wrote BENCH_resilience.json (resilience gate: PASS)");
+}
+
+/// Everything one scenario run contributes to the trajectory matrix:
+/// accumulated counters, merged tick-unit latency histograms, the
+/// concatenated lifecycle trace, and the request/token totals from the
+/// responses themselves.
+struct TrajectoryCell {
+    snap: TrafficSnapshot,
+    lat: LatencyReport,
+    trace: Vec<TraceRecord>,
+    ticks: u64,
+    requests: u64,
+    tokens: u64,
+}
+
+impl TrajectoryCell {
+    fn new() -> TrajectoryCell {
+        TrajectoryCell {
+            snap: TrafficSnapshot::default(),
+            lat: LatencyReport::default(),
+            trace: Vec::new(),
+            ticks: 0,
+            requests: 0,
+            tokens: 0,
+        }
+    }
+
+    /// Fold one scheduler's observability state into the cell: drain
+    /// its trace (loss-free or the gate fails), accumulate its
+    /// snapshot, merge its latency histograms. Call once per scheduler,
+    /// after it has drained — and for a scheduler about to be consumed
+    /// by [`Scheduler::salvage`], call it *before* the salvage.
+    fn absorb<E: Executor>(&mut self, s: &mut Scheduler<E>) {
+        assert_eq!(s.trace_dropped(), 0, "trajectory: trace ring overflowed");
+        self.trace.extend(s.take_trace());
+        self.snap.accumulate(&s.metrics().traffic_snapshot());
+        self.lat.merge(&s.latency_report());
+        self.ticks += s.metrics().ticks;
+    }
+
+    fn note(&mut self, responses: &[Response]) {
+        self.requests += responses.len() as u64;
+        self.tokens += responses.iter().map(|r| r.tokens.len() as u64).sum::<u64>();
+    }
+}
+
+/// Single-scheduler scenarios: submit everything, drain.
+fn plain_cell(sc: &ServeScenario, vocab: usize) -> TrajectoryCell {
+    let mut cell = TrajectoryCell::new();
+    let mut s = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    for r in sc.requests(vocab) {
+        s.submit(r).unwrap();
+    }
+    let resps = s.run_until_drained().unwrap();
+    cell.note(&resps);
+    cell.absorb(&mut s);
+    cell
+}
+
+/// The sharding gate's migrate mode, reduced to its counters: two
+/// shards, three hot requests moved cold mid-decode by state move.
+fn skew_cell(sc: &ServeScenario, vocab: usize) -> TrajectoryCell {
+    let mut cell = TrajectoryCell::new();
+    let mut hot = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    hot.set_shard(0);
+    let mut cold = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    cold.set_shard(1);
+    for r in sc.requests(vocab) {
+        if ServeScenario::SHARDED_HOT_IDS.contains(&r.id) {
+            hot.submit(r).unwrap();
+        } else {
+            cold.submit(r).unwrap();
+        }
+    }
+    let mut responses = Vec::new();
+    let mut tick = 0u32;
+    loop {
+        let (a, pa) = hot.tick().unwrap();
+        let (b, pb) = cold.tick().unwrap();
+        responses.extend(a);
+        responses.extend(b);
+        tick += 1;
+        assert!(tick < 10_000, "skew scenario did not drain");
+        if tick == 14 {
+            for seq in [1u64, 2, 3] {
+                let p = hot.detach(seq).expect("hot request is decoding at the migrate tick");
+                cold.attach(p).expect("well-formed packet attaches");
+            }
+        }
+        if !pa && !pb && hot.pending() + cold.pending() == 0 {
+            break;
+        }
+    }
+    cell.note(&responses);
+    cell.absorb(&mut hot);
+    cell.absorb(&mut cold);
+    cell
+}
+
+/// The snapshot gate's multi-turn flow: turn 1 stores each session's
+/// state, turn 2 attaches it and prefills only its new tokens.
+fn multi_turn_cell(sc: &ServeScenario, vocab: usize) -> TrajectoryCell {
+    let mut cell = TrajectoryCell::new();
+    let mut s = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    let turn1 = sc.requests(vocab);
+    for r in &turn1 {
+        s.submit_session(r.clone(), Some(r.id)).unwrap();
+    }
+    let mut t1 = s.run_until_drained().unwrap();
+    t1.sort_by_key(|r| r.id);
+    let turn2: Vec<Request> = turn1
+        .iter()
+        .zip(&t1)
+        .map(|(r, resp)| Request {
+            id: 1000 + r.id,
+            prompt: ServeScenario::follow_up_prompt(
+                &r.prompt,
+                &resp.tokens,
+                ServeScenario::MULTI_TURN_NEW_TOKENS,
+                vocab,
+            ),
+            max_new_tokens: 8,
+        })
+        .collect();
+    for (r2, r1) in turn2.iter().zip(&turn1) {
+        s.submit_session(r2.clone(), Some(r1.id)).unwrap();
+    }
+    let t2 = s.run_until_drained().unwrap();
+    cell.note(&t1);
+    cell.note(&t2);
+    cell.absorb(&mut s);
+    cell
+}
+
+/// The snapshot gate's best-of-N flow: one shared prefill, N
+/// copy-on-write forks, N candidates decoding from it.
+fn best_of_n_cell(sc: &ServeScenario, vocab: usize) -> TrajectoryCell {
+    let mut cell = TrajectoryCell::new();
+    let parent_req = sc.requests(vocab).remove(0);
+    let parent_session = 7u64;
+    let n = ServeScenario::BEST_OF_N;
+    let mut f = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    f.submit_session(parent_req.clone(), Some(parent_session)).unwrap();
+    let shared = f.run_until_drained().unwrap();
+    for i in 0..n as u64 {
+        assert!(f.fork_session(parent_session, 100 + i), "fork {i} refused");
+    }
+    let children: Vec<Request> = (0..n as u64)
+        .map(|i| {
+            let mut p = parent_req.prompt.clone();
+            p.push(shared[0].tokens[0]);
+            Request { id: 10 + i, prompt: p, max_new_tokens: 8 }
+        })
+        .collect();
+    for (i, r) in children.iter().enumerate() {
+        f.submit_session(r.clone(), Some(100 + i as u64)).unwrap();
+    }
+    let outs = f.run_until_drained().unwrap();
+    cell.note(&shared);
+    cell.note(&outs);
+    cell.absorb(&mut f);
+    cell
+}
+
+/// The resilience gate's salvage path, reduced to its counters: build
+/// the population to steady decode on a donor, migrate onto a faulty
+/// shard, fault, salvage, finish on a healthy shard.
+fn fault_storm_cell(sc: &ServeScenario, vocab: usize) -> TrajectoryCell {
+    let mut cell = TrajectoryCell::new();
+    let n = ServeScenario::FAULT_STORM_REQUESTS;
+    let mut donor =
+        Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    donor.set_shard(0);
+    for r in sc.requests(vocab) {
+        donor.submit(r).unwrap();
+    }
+    let mut responses = Vec::new();
+    for _ in 0..12 {
+        let (done, _) = donor.tick().unwrap();
+        responses.extend(done);
+    }
+    let tight = BatchPolicy { token_budget: 1, max_chunk_rows: 1, ..sc.policy.clone() };
+    let inj = FaultInjector::new(FaultPlan::parse("nth:3").unwrap());
+    let mut faulty = Scheduler::with_path(
+        inj.wrap(MockEngine::new()).unwrap(),
+        tight,
+        StatePath::Resident,
+    );
+    faulty.set_shard(1);
+    for seq in 0..n {
+        let p = donor.detach(seq).expect("donor row is decoding after 12 ticks");
+        faulty.attach(p).expect("well-formed packet attaches");
+    }
+    let mut faulted = false;
+    for _ in 0..8 {
+        match faulty.tick() {
+            Ok((done, _)) => responses.extend(done),
+            Err(_) => {
+                faulted = true;
+                break;
+            }
+        }
+    }
+    assert!(faulted, "nth:3 fires within eight serialized ticks");
+    // Salvage consumes the scheduler — absorb its evidence first.
+    cell.absorb(&mut faulty);
+    let packets = faulty.salvage();
+    let mut healthy =
+        Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    healthy.set_shard(2);
+    for p in packets {
+        if p.state_bytes() > 0 {
+            healthy.attach(p).expect("salvaged state re-attaches");
+        } else {
+            healthy.attach_reprefill(p);
+        }
+    }
+    responses.extend(healthy.run_until_drained().unwrap());
+    cell.note(&responses);
+    cell.absorb(&mut donor);
+    cell.absorb(&mut healthy);
+    cell
+}
+
+/// One scenario through the harness shape it exercises.
+fn trajectory_cell(sc: &ServeScenario) -> TrajectoryCell {
+    let vocab = MockEngine::new().manifest().vocab;
+    match sc.name {
+        "sharded_skew" => skew_cell(sc, vocab),
+        "multi_turn" => multi_turn_cell(sc, vocab),
+        "best_of_n" => best_of_n_cell(sc, vocab),
+        "fault_storm" => fault_storm_cell(sc, vocab),
+        _ => plain_cell(sc, vocab),
+    }
+}
+
+/// One scenario's row in the trajectory matrix. Deterministic values
+/// only — counters and tick-unit percentiles, never wall time.
+fn trajectory_row(sc: &ServeScenario, cell: &TrajectoryCell) -> JsonValue {
+    let spans = assemble_spans(&cell.trace);
+    let mut row = JsonValue::obj();
+    row.set("scenario", sc.name)
+        .set("requests", cell.requests)
+        .set("tokens", cell.tokens)
+        .set("ticks", cell.ticks)
+        .set("trace_events", cell.trace.len() as u64)
+        .set("spans", spans.len() as u64)
+        .set("device_calls", cell.snap.device_calls)
+        .set("staged_bytes", cell.snap.bytes_gathered + cell.snap.bytes_scattered)
+        .set("padded_rows", cell.snap.padded_rows)
+        .set("migrations", cell.snap.migrations)
+        .set("bytes_migrated", cell.snap.bytes_migrated)
+        .set("reprefill_tokens", cell.snap.reprefill_tokens)
+        .set("snapshot_hits", cell.snap.snapshot_hits)
+        .set("snapshot_forks", cell.snap.snapshot_forks)
+        .set("prefill_tokens_skipped", cell.snap.prefill_tokens_skipped)
+        .set("plan_switches", cell.snap.plan_switches)
+        .set("modeled_cycles", cell.snap.modeled_cycles)
+        .set("requests_completed", cell.snap.requests_completed)
+        .set("ttft_ticks_p50", cell.lat.ttft_ticks.percentile(0.50))
+        .set("ttft_ticks_p99", cell.lat.ttft_ticks.percentile(0.99))
+        .set("total_ticks_p50", cell.lat.total_ticks.percentile(0.50))
+        .set("total_ticks_p99", cell.lat.total_ticks.percentile(0.99))
+        .set("inter_token_ticks_p99", cell.lat.inter_token_ticks.percentile(0.99));
+    row
+}
+
+/// The consolidated perf-trajectory artifact: all eight bundled
+/// scenarios through one harness, one row per scenario with the full
+/// deterministic counter set plus tick-unit latency percentiles from
+/// the merged histograms. Per scenario the gate enforces:
+///
+/// * the reconciliation property — the drained trace accounts for the
+///   accumulated counters exactly;
+/// * exactly one assembled span per request, each with one terminal
+///   event, and one tick-TTFT measurement per request;
+/// * bit-identical rows on a second full run — the artifact holds no
+///   wall-clock values, so a trajectory diff across commits is a
+///   behaviour diff, never noise.
+///
+/// Writes `BENCH_trajectory.json`.
+fn trajectory_gate() {
+    println!("\n== perf trajectory: 8 scenarios x deterministic counters ==");
+    let mut rows = JsonValue::Arr(vec![]);
+    for sc in ServeScenario::all() {
+        let cell = trajectory_cell(&sc);
+        reconcile(&cell.trace, &cell.snap)
+            .unwrap_or_else(|e| panic!("trajectory({}): reconciliation failed: {e}", sc.name));
+        let spans = assemble_spans(&cell.trace);
+        assert_eq!(
+            spans.len() as u64,
+            cell.requests,
+            "{}: one span per request",
+            sc.name
+        );
+        assert_eq!(
+            cell.snap.requests_completed, cell.requests,
+            "{}: every request completes",
+            sc.name
+        );
+        assert_eq!(
+            cell.lat.ttft_ticks.count(),
+            cell.requests,
+            "{}: one tick-TTFT measurement per request",
+            sc.name
+        );
+        let row = trajectory_row(&sc, &cell);
+        // The determinism proof: an identical re-run, identical row.
+        let again = trajectory_row(&sc, &trajectory_cell(&sc));
+        assert_eq!(
+            row.to_string(),
+            again.to_string(),
+            "{}: trajectory row not deterministic across runs",
+            sc.name
+        );
+        println!(
+            "  {:<14} requests={:<2} ticks={:<4} events={:<5} ttft_ticks_p99={}",
+            sc.name,
+            cell.requests,
+            cell.ticks,
+            cell.trace.len(),
+            cell.lat.ttft_ticks.percentile(0.99),
+        );
+        rows.push(row);
+    }
+    let mut gate = JsonValue::obj();
+    gate.set("scenarios", 8u64)
+        .set("reconciled", true)
+        .set("spans_match_requests", true)
+        .set("deterministic", true)
+        .set("pass", true);
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "trajectory").set("scenarios", rows).set("gate", gate);
+    std::fs::write("BENCH_trajectory.json", doc.to_string())
+        .expect("writing BENCH_trajectory.json");
+    println!("wrote BENCH_trajectory.json (trajectory gate: PASS)");
 }

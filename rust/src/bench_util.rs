@@ -251,6 +251,24 @@ impl ServeScenario {
         ]
     }
 
+    /// Every bundled scenario, in the fixed order the perf-trajectory
+    /// artifact (`BENCH_trajectory.json`) reports them. One scenario ×
+    /// counter matrix over this list is the repo's consolidated view of
+    /// serving behaviour across all phase regimes — keep the order
+    /// stable so trajectory diffs line up across commits.
+    pub fn all() -> Vec<ServeScenario> {
+        vec![
+            ServeScenario::prefill_heavy(),
+            ServeScenario::decode_heavy(),
+            ServeScenario::interference(),
+            ServeScenario::sharded_skew(),
+            ServeScenario::chunk_heavy(),
+            ServeScenario::multi_turn(),
+            ServeScenario::best_of_n(),
+            ServeScenario::fault_storm(),
+        ]
+    }
+
     /// The scenario's deterministic request mix for a `vocab`-sized
     /// model.
     pub fn requests(&self, vocab: usize) -> Vec<Request> {
@@ -428,14 +446,19 @@ mod tests {
     use super::*;
 
     #[test]
+    fn all_covers_every_scenario_with_unique_names() {
+        let all = ServeScenario::all();
+        assert_eq!(all.len(), 8);
+        let names: std::collections::BTreeSet<_> = all.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), all.len(), "duplicate scenario name");
+        for b in ServeScenario::bundled() {
+            assert!(names.contains(b.name), "bundled scenario {} missing from all()", b.name);
+        }
+    }
+
+    #[test]
     fn scenarios_are_deterministic_and_well_formed() {
-        for sc in ServeScenario::bundled().into_iter().chain([
-            ServeScenario::sharded_skew(),
-            ServeScenario::chunk_heavy(),
-            ServeScenario::multi_turn(),
-            ServeScenario::best_of_n(),
-            ServeScenario::fault_storm(),
-        ]) {
+        for sc in ServeScenario::all() {
             let a = sc.requests(17);
             let b = sc.requests(17);
             assert!(!a.is_empty());

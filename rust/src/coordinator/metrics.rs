@@ -11,6 +11,7 @@
 
 use std::time::Instant;
 
+use crate::obs::Histogram;
 use crate::planner::{PlanChoice, PlanDecision};
 use crate::runtime::engine::TrafficCounters;
 
@@ -37,6 +38,10 @@ fn dwell_bucket(dwell: u64) -> usize {
 /// output.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TrafficSnapshot {
+    /// Requests completed on this worker — the independent counter the
+    /// trace's `Completed` events must reconcile against exactly
+    /// ([`crate::obs::reconcile`]).
+    pub requests_completed: u64,
     /// State bytes copied out of resident storage / between staging.
     pub bytes_gathered: u64,
     /// State bytes copied into resident storage.
@@ -106,6 +111,7 @@ impl TrafficSnapshot {
     /// shard at any instant), so the sum is the global gauge, never a
     /// double count.
     pub fn accumulate(&mut self, t: &TrafficSnapshot) {
+        self.requests_completed += t.requests_completed;
         self.bytes_gathered += t.bytes_gathered;
         self.bytes_scattered += t.bytes_scattered;
         self.state_bytes_resident += t.state_bytes_resident;
@@ -175,6 +181,43 @@ impl TrafficSnapshot {
         } else {
             parts.join(",")
         }
+    }
+}
+
+/// Mergeable latency distributions, queried per worker and folded
+/// into a server-wide view with [`Histogram::merge`] (per-worker
+/// percentiles cannot be averaged; merged bucket counts can).
+///
+/// Two unit families deliberately ride together: `*_ticks` histograms
+/// are denominated in the scheduler's deterministic tick clock (same
+/// workload, same numbers, every run — what CI gates and
+/// `BENCH_trajectory.json` record), `*_us` in wall microseconds
+/// (reporting only, never gated). Kept out of [`TrafficSnapshot`] so
+/// snapshot equality comparisons stay about traffic, not timing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyReport {
+    /// Wall-clock time-to-first-token, microseconds.
+    pub ttft_us: Histogram,
+    /// Wall-clock total request latency, microseconds.
+    pub total_us: Histogram,
+    /// Submit→first-token, scheduler ticks (deterministic).
+    pub ttft_ticks: Histogram,
+    /// Submit→completion, scheduler ticks (deterministic).
+    pub total_ticks: Histogram,
+    /// Gap between consecutive generated tokens, scheduler ticks
+    /// (deterministic; 1 on every tick a request decodes without
+    /// waiting).
+    pub inter_token_ticks: Histogram,
+}
+
+impl LatencyReport {
+    /// Fold another worker's distributions into this one.
+    pub fn merge(&mut self, other: &LatencyReport) {
+        self.ttft_us.merge(&other.ttft_us);
+        self.total_us.merge(&other.total_us);
+        self.ttft_ticks.merge(&other.ttft_ticks);
+        self.total_ticks.merge(&other.total_ticks);
+        self.inter_token_ticks.merge(&other.inter_token_ticks);
     }
 }
 
@@ -259,8 +302,10 @@ pub struct Metrics {
     /// Prefill queue depth sampled each tick.
     queue_depth_sum: f64,
     queue_samples: u64,
-    ttft: Vec<f64>,
-    total: Vec<f64>,
+    /// Streaming latency distributions — O(1) record, no per-sample
+    /// storage (the old `Vec<f64>` grew unboundedly and every
+    /// percentile query cloned + sorted it).
+    latency: LatencyReport,
 }
 
 impl Metrics {
@@ -302,8 +347,7 @@ impl Metrics {
             occupancy_sum: 0.0,
             queue_depth_sum: 0.0,
             queue_samples: 0,
-            ttft: Vec::new(),
-            total: Vec::new(),
+            latency: LatencyReport::default(),
         }
     }
 
@@ -427,6 +471,7 @@ impl Metrics {
     /// Snapshot of the traffic counters (aggregation / bench JSON).
     pub fn traffic_snapshot(&self) -> TrafficSnapshot {
         TrafficSnapshot {
+            requests_completed: self.requests_completed,
             bytes_gathered: self.bytes_gathered,
             bytes_scattered: self.bytes_scattered,
             state_bytes_resident: self.state_bytes_resident,
@@ -453,12 +498,32 @@ impl Metrics {
         }
     }
 
+    /// Record a completion's wall-clock latencies (seconds). O(1):
+    /// samples stream into the log2 histograms instead of an unbounded
+    /// per-worker `Vec<f64>`.
     pub fn record_completion(&mut self, ttft: f64, total: f64) {
         self.requests_completed += 1;
-        self.ttft.push(ttft);
-        self.total.push(total);
+        self.latency.ttft_us.record_secs(ttft);
+        self.latency.total_us.record_secs(total);
     }
 
+    /// Record a completion's deterministic tick-clock latencies
+    /// (companion to [`Metrics::record_completion`]; kept separate so
+    /// the wall-clock signature stays unchanged for existing callers).
+    pub fn record_completion_ticks(&mut self, ttft_ticks: u64, total_ticks: u64) {
+        self.latency.ttft_ticks.record(ttft_ticks);
+        self.latency.total_ticks.record(total_ticks);
+    }
+
+    /// Record the tick gap between two consecutive generated tokens of
+    /// one request (1 in steady-state decode; larger when a request
+    /// sat out ticks behind the token budget or a migration).
+    pub fn record_inter_token_ticks(&mut self, gap: u64) {
+        self.latency.inter_token_ticks.record(gap);
+    }
+
+    /// Exact percentile of a pre-sorted sample slice (reference
+    /// implementation the histogram estimates are tested against).
     fn pct(sorted: &[f64], p: f64) -> f64 {
         if sorted.is_empty() {
             return 0.0;
@@ -467,37 +532,44 @@ impl Metrics {
         sorted[idx.min(sorted.len() - 1)]
     }
 
-    /// TTFT percentile over completed requests (`p` in [0, 1]).
+    /// TTFT percentile over completed requests (`p` in [0, 1]),
+    /// seconds. Histogram-estimated: exact at the extremes, an upper
+    /// bound within one log2 bucket (≤ 2×) elsewhere.
     pub fn ttft_pct(&self, p: f64) -> f64 {
-        let mut v = self.ttft.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Self::pct(&v, p)
+        self.latency.ttft_us.percentile(p) as f64 * 1e-6
     }
 
     /// Completed requests with a recorded TTFT (monotone).
     pub fn ttft_count(&self) -> usize {
-        self.ttft.len()
+        self.latency.ttft_us.count() as usize
     }
 
-    /// Snapshot as a human-readable report.
+    /// The mergeable latency distributions (worker-channel query
+    /// payload for server-wide aggregation).
+    pub fn latency_report(&self) -> LatencyReport {
+        self.latency
+    }
+
+    /// Snapshot as a human-readable report. Wall-clock figures (tok/s,
+    /// millisecond percentiles) vary run to run; the tick-denominated
+    /// figures (`tok/tick`, tick percentiles) are deterministic —
+    /// same workload, same numbers, every run.
     pub fn report(&self) -> String {
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
-        let mut ttft = self.ttft.clone();
-        let mut total = self.total.clone();
-        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        total.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let snap = self.traffic_snapshot();
         format!(
-            "requests={} tokens={} ({:.1} tok/s) chunks={} prefill_tokens={} decode_steps={} \
+            "requests={} tokens={} ({:.1} tok/s, {:.2} tok/tick) chunks={} prefill_tokens={} decode_steps={} \
              ticks={} max_tick_tokens={} queue={:.1} budget_use={:.2} \
              gathered={}B scattered={}B resident={}B padded_rows={} device_calls={} \
              migrations={}in/{}out migrated={}B reprefills_avoided={} \
              snap={}s/{}h/{}f restored={}B skipped={} cached={}B evicted={} \
              plans={} plan_switches={} plan_err={:.2}x \
-             ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms",
+             ttft p50={:.1}ms p99={:.1}ms latency p50={:.1}ms p99={:.1}ms \
+             ttft_ticks p50={} p99={}",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_generated as f64 / elapsed,
+            self.tokens_per_tick(),
             self.prefill_chunks,
             self.prefill_tokens,
             self.decode_steps,
@@ -524,11 +596,20 @@ impl Metrics {
             snap.plans_summary(),
             self.plan_switches,
             snap.prediction_error(),
-            Self::pct(&ttft, 0.5) * 1e3,
-            Self::pct(&ttft, 0.99) * 1e3,
-            Self::pct(&total, 0.5) * 1e3,
-            Self::pct(&total, 0.99) * 1e3,
+            self.latency.ttft_us.percentile(0.5) as f64 / 1e3,
+            self.latency.ttft_us.percentile(0.99) as f64 / 1e3,
+            self.latency.total_us.percentile(0.5) as f64 / 1e3,
+            self.latency.total_us.percentile(0.99) as f64 / 1e3,
+            self.latency.ttft_ticks.percentile(0.5),
+            self.latency.ttft_ticks.percentile(0.99),
         )
+    }
+
+    /// Deterministic tick-denominated throughput: generated tokens per
+    /// mixed engine tick (0.0 before the first tick). Unlike `tok/s`,
+    /// identical across runs of the same workload.
+    pub fn tokens_per_tick(&self) -> f64 {
+        self.tokens_generated as f64 / self.ticks.max(1) as f64
     }
 
     /// Mean fraction of the per-tick token budget actually used.
@@ -754,5 +835,47 @@ mod tests {
         m.record_completion(0.002, 0.01);
         m.record_completion(0.004, 0.02);
         assert!(m.ttft_pct(0.99) >= m.ttft_pct(0.0));
+        // Streaming histogram percentiles: exact at the top (p→1 is
+        // max = 4000us), and p→0 an upper estimate within one log2
+        // bucket of min (2000us sits in [1024, 2047] → reports 2047us).
+        let p0 = m.ttft_pct(0.0);
+        assert!((0.002..0.004).contains(&p0), "{p0}");
+        assert!((m.ttft_pct(1.0) - 0.004).abs() < 1e-9, "{}", m.ttft_pct(1.0));
+    }
+
+    #[test]
+    fn tick_latency_is_deterministic_and_mergeable() {
+        // Two workers record tick-clock completions; the merged report
+        // sees the pooled distribution — and none of it involves wall
+        // time, so the numbers are identical every run.
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record_completion_ticks(3, 10);
+        a.record_completion_ticks(5, 12);
+        a.record_inter_token_ticks(1);
+        b.record_completion_ticks(40, 80);
+        let mut fleet = a.latency_report();
+        fleet.merge(&b.latency_report());
+        assert_eq!(fleet.ttft_ticks.count(), 3);
+        assert_eq!(fleet.ttft_ticks.percentile(0.0), 3);
+        assert_eq!(fleet.ttft_ticks.percentile(1.0), 40);
+        assert_eq!(fleet.inter_token_ticks.count(), 1);
+        // Per-worker p99 (5 and 40) cannot be averaged into the fleet
+        // p99; the merged histogram reports from the pooled counts.
+        assert!(fleet.ttft_ticks.percentile(0.99) >= 40);
+    }
+
+    #[test]
+    fn tokens_per_tick_is_tick_denominated() {
+        let mut m = Metrics::new();
+        assert_eq!(m.tokens_per_tick(), 0.0);
+        m.record_decode(4);
+        m.record_decode(2);
+        m.record_tick(6, 8, 0);
+        m.record_tick(2, 8, 0);
+        assert!((m.tokens_per_tick() - 3.0).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("tok/tick"), "{r}");
+        assert!(r.contains("ttft_ticks p50="), "{r}");
     }
 }

@@ -75,6 +75,17 @@ pub struct InFlight {
     /// looping forever. 0 for every flight that never saw a fault;
     /// planned live migration does not count.
     pub replays: u32,
+    /// Scheduler tick count when this flight was admitted — the
+    /// deterministic companion of `submitted`. Re-stamped to the local
+    /// clock on migration/salvage attach (tick clocks are per worker),
+    /// so tick latencies measure on-shard scheduling delay.
+    pub submitted_tick: u64,
+    /// Tick count at the first generated token (deterministic TTFT =
+    /// `first_token_tick - submitted_tick`).
+    pub first_token_tick: Option<u64>,
+    /// Tick count at the most recent generated token, for the
+    /// deterministic inter-token gap histogram.
+    pub last_token_tick: u64,
 }
 
 impl InFlight {
@@ -93,6 +104,9 @@ impl InFlight {
             prefill_pos: 0,
             prompt_replayed: 0,
             replays: 0,
+            submitted_tick: 0,
+            first_token_tick: None,
+            last_token_tick: 0,
         }
     }
 

@@ -41,12 +41,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::obs::{TraceEvent, TraceRecord, TraceRing, DEFAULT_TRACE_CAP, WORKER_SEQ};
 use crate::planner::{Planner, PlanSpec, WorkloadFeatures};
 use crate::runtime::engine::{argmax_rows_into, Executor, Workspace};
 use crate::runtime::{Donation, EngineCaps, LaunchSpec, MixedBatch, Phase, Segment, StateSlabs};
 
 use super::batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
-use super::metrics::Metrics;
+use super::metrics::{LatencyReport, Metrics};
 use super::request::{InFlight, Request, Response};
 use super::shard::MigrationPacket;
 use super::snapshot::{SnapshotCache, SnapshotConfig};
@@ -122,6 +123,11 @@ pub struct Scheduler<E: Executor> {
     /// the completion hook knows which cache key to store under.
     session_of: BTreeMap<u64, u64>,
     metrics: Metrics,
+    /// Bounded request-lifecycle trace ring, stamped with the
+    /// deterministic tick clock. Pre-allocated at construction and
+    /// drop-oldest on overflow ([`TraceRing::events_dropped`] counts),
+    /// so tracing never allocates on the steady-state decode tick.
+    trace: TraceRing,
     // Per-tick staging, retained across ticks so the steady-state
     // decode tick allocates nothing.
     segs_buf: Vec<Segment>,
@@ -130,6 +136,20 @@ pub struct Scheduler<E: Executor> {
     next_buf: Vec<i32>,
     rr_scratch: Vec<u64>,
     decode_ids_buf: Vec<u64>,
+}
+
+/// Re-anchor a migrated/salvaged flight's tick stamps to the receiving
+/// worker's clock. Tick clocks are per worker, so a delta across two
+/// clocks would be meaningless (or underflow); after re-stamping, tick
+/// latencies measure on-shard scheduling delay. Wall-clock stamps
+/// (`submitted` / `first_token`) are untouched — end-to-end wall
+/// latency still spans the migration.
+fn restamp_ticks(fl: &mut InFlight, now: u64) {
+    fl.submitted_tick = now;
+    if fl.first_token_tick.is_some() {
+        fl.first_token_tick = Some(now);
+    }
+    fl.last_token_tick = now;
 }
 
 impl<E: Executor> Scheduler<E> {
@@ -199,6 +219,7 @@ impl<E: Executor> Scheduler<E> {
             snapshots: SnapshotCache::new(SnapshotConfig::default()),
             session_of: BTreeMap::new(),
             metrics: Metrics::new(),
+            trace: TraceRing::new(DEFAULT_TRACE_CAP),
             segs_buf: Vec::new(),
             tokens_buf: Vec::new(),
             row_state_buf: Vec::new(),
@@ -243,6 +264,7 @@ impl<E: Executor> Scheduler<E> {
             req.id
         );
         let id = req.id;
+        self.trace_push(id, TraceEvent::Submit);
         if let Some(session) = session {
             self.session_of.insert(id, session);
             if let Some(hit) = self.snapshots.lookup(session, &req.prompt) {
@@ -254,16 +276,20 @@ impl<E: Executor> Scheduler<E> {
                     h as u64,
                     self.states.resident_bytes(),
                 );
+                self.trace_push(id, TraceEvent::SnapshotHit { tokens_skipped: h as u64 });
                 self.mirror_snapshot_cache();
                 self.batcher.enqueue_at(id, req.prompt.len(), h);
                 let mut fl = InFlight::new(req);
                 fl.prefill_pos = h;
+                fl.submitted_tick = self.metrics.ticks;
                 self.waiting.insert(id, fl);
                 return Ok(());
             }
         }
         self.batcher.enqueue(id, req.prompt.len());
-        self.waiting.insert(id, InFlight::new(req));
+        let mut fl = InFlight::new(req);
+        fl.submitted_tick = self.metrics.ticks;
+        self.waiting.insert(id, fl);
         Ok(())
     }
 
@@ -344,6 +370,49 @@ impl<E: Executor> Scheduler<E> {
         &self.metrics
     }
 
+    /// Record one lifecycle event, stamped with this worker's tick
+    /// clock and shard index. O(1), no allocation (the ring is
+    /// pre-allocated; overflow drops the oldest record and counts it).
+    fn trace_push(&mut self, seq: u64, event: TraceEvent) {
+        self.trace.push(TraceRecord {
+            seq,
+            tick: self.metrics.ticks,
+            shard: self.states.shard() as u32,
+            event,
+        });
+    }
+
+    /// Drain the trace ring into a fresh vector, oldest first. The
+    /// cumulative drop counter survives the drain.
+    pub fn take_trace(&mut self) -> Vec<TraceRecord> {
+        let mut out = Vec::with_capacity(self.trace.len());
+        self.trace.drain_into(&mut out);
+        out
+    }
+
+    /// Drain the trace ring into `out` (appends, oldest first) —
+    /// allocation-free when `out` has capacity.
+    pub fn drain_trace_into(&mut self, out: &mut Vec<TraceRecord>) {
+        self.trace.drain_into(out);
+    }
+
+    /// How many trace records the bounded ring has dropped (cumulative
+    /// over the scheduler's lifetime; drains do not reset it).
+    pub fn trace_dropped(&self) -> u64 {
+        self.trace.events_dropped()
+    }
+
+    /// Copy of the mergeable latency histograms (tick + wall units);
+    /// `LatencyReport::merge` pools them exactly across workers.
+    pub fn latency_report(&self) -> LatencyReport {
+        self.metrics.latency_report()
+    }
+
+    /// The deterministic tick clock trace records are stamped with.
+    pub fn tick_count(&self) -> u64 {
+        self.metrics.ticks
+    }
+
     /// Which state path this scheduler runs.
     pub fn path(&self) -> StatePath {
         self.path
@@ -421,6 +490,8 @@ impl<E: Executor> Scheduler<E> {
         // a stale entry (the session simply misses on its next turn).
         self.session_of.remove(&seq);
         self.metrics.record_migration_out(self.states.resident_bytes());
+        let own = self.states.shard() as u32;
+        self.trace_push(seq, TraceEvent::MigrationOut { shard: own });
         Some(MigrationPacket { flight, from, conv, ssm })
     }
 
@@ -456,15 +527,22 @@ impl<E: Executor> Scheduler<E> {
         }
         let decode_phase = p.decode_phase();
         let bytes = p.state_bytes();
+        let from_shard = p.from.shard as u32;
         self.states.attach_row(seq, &p.conv, &p.ssm);
         self.metrics
             .record_migration_in(bytes, decode_phase, self.states.resident_bytes());
+        self.trace_push(seq, TraceEvent::MigrationIn { shard: from_shard });
+        let mut flight = p.flight;
+        // Tick clocks are per worker: re-anchor the flight's stamps to
+        // the local clock so tick latencies stay non-negative and
+        // measure on-shard delay (wall-clock stamps are untouched).
+        restamp_ticks(&mut flight, self.metrics.ticks);
         if decode_phase {
-            self.running.insert(seq, p.flight);
+            self.running.insert(seq, flight);
         } else {
             self.batcher
-                .enqueue_at(seq, p.flight.req.prompt.len(), p.flight.prefill_pos);
-            self.waiting.insert(seq, p.flight);
+                .enqueue_at(seq, flight.req.prompt.len(), flight.prefill_pos);
+            self.waiting.insert(seq, flight);
         }
         Ok(())
     }
@@ -481,6 +559,7 @@ impl<E: Executor> Scheduler<E> {
     pub fn attach_reprefill(&mut self, p: MigrationPacket) {
         let replayed = p.reprefill_cost_tokens() as u64;
         let decode_phase = p.decode_phase();
+        let from_shard = p.from.shard as u32;
         let mut flight = p.flight;
         let seq = flight.req.id;
         if decode_phase {
@@ -508,6 +587,9 @@ impl<E: Executor> Scheduler<E> {
         self.metrics
             .record_migration_in(0, false, self.states.resident_bytes());
         self.metrics.record_reprefill(replayed);
+        self.trace_push(seq, TraceEvent::MigrationIn { shard: from_shard });
+        self.trace_push(seq, TraceEvent::Replayed { tokens: replayed });
+        restamp_ticks(&mut flight, self.metrics.ticks);
         self.batcher.enqueue(seq, flight.req.prompt.len());
         self.waiting.insert(seq, flight);
     }
@@ -630,6 +712,7 @@ impl<E: Executor> Scheduler<E> {
                         self.suspect.clear();
                         self.suspect.extend(chunks.iter().map(|c| c.id));
                         self.suspect.extend(self.decode_ids_buf.iter().copied());
+                        self.trace_push(WORKER_SEQ, TraceEvent::Fault);
                         return Err(e);
                     }
                 };
@@ -814,6 +897,16 @@ impl<E: Executor> Scheduler<E> {
             self.batcher.policy().token_budget,
             self.waiting.len(),
         );
+        // All lifecycle events of this tick are stamped *after*
+        // `record_tick`, so every record of tick T carries tick == T
+        // (1-based, matching `Metrics::ticks`).
+        let tick_now = self.metrics.ticks;
+        for ch in chunks {
+            self.trace_push(
+                ch.id,
+                TraceEvent::ChunkScheduled { chunk_len: ch.len as u32, cursor: ch.start as u32 },
+            );
+        }
 
         let now = Instant::now();
         let mut completed = Vec::new();
@@ -829,6 +922,11 @@ impl<E: Executor> Scheduler<E> {
                 if fl.first_token.is_none() {
                     fl.first_token = Some(now);
                 }
+                if fl.first_token_tick.is_none() {
+                    fl.first_token_tick = Some(tick_now);
+                    self.trace_push(ch.id, TraceEvent::FirstToken);
+                }
+                fl.last_token_tick = tick_now;
                 fl.generated.push(self.next_buf[b]);
                 self.metrics.record_decode(1); // the prefill-produced token
                 if fl.done() {
@@ -844,6 +942,13 @@ impl<E: Executor> Scheduler<E> {
                     self.states.release(ch.id); // free the slot
                     let resp = fl.finish();
                     self.metrics.record_completion(resp.ttft, resp.total);
+                    self.metrics.record_completion_ticks(
+                        fl.first_token_tick
+                            .unwrap_or(tick_now)
+                            .saturating_sub(fl.submitted_tick),
+                        tick_now.saturating_sub(fl.submitted_tick),
+                    );
+                    self.trace_push(ch.id, TraceEvent::Completed);
                     completed.push(resp);
                 } else {
                     if let Some((conv, ssm)) = &ref_out {
@@ -860,11 +965,18 @@ impl<E: Executor> Scheduler<E> {
             }
         }
 
-        // Decode rows.
+        // Decode rows. Note the borrow discipline: `fl` holds
+        // `self.running`, so the per-token bookkeeping below touches
+        // only *other* fields (`metrics`, `next_buf`) — field-disjoint
+        // borrows — and no trace event fires on a plain decode token
+        // (the steady-state tick stays event-free per sequence).
         for (i, &id) in decode_ids.iter().enumerate() {
             let b = chunks.len() + i;
             let fl = self.running.get_mut(&id).expect("running entry");
             fl.generated.push(self.next_buf[b]);
+            let gap = tick_now.saturating_sub(fl.last_token_tick);
+            fl.last_token_tick = tick_now;
+            self.metrics.record_inter_token_ticks(gap);
             if fl.done() {
                 let fl = self.running.remove(&id).unwrap();
                 if self.session_of.contains_key(&id) {
@@ -876,6 +988,13 @@ impl<E: Executor> Scheduler<E> {
                 self.states.release(id);
                 let resp = fl.finish();
                 self.metrics.record_completion(resp.ttft, resp.total);
+                self.metrics.record_completion_ticks(
+                    fl.first_token_tick
+                        .unwrap_or(tick_now)
+                        .saturating_sub(fl.submitted_tick),
+                    tick_now.saturating_sub(fl.submitted_tick),
+                );
+                self.trace_push(id, TraceEvent::Completed);
                 completed.push(resp);
             } else if let Some((conv, ssm)) = &ref_out {
                 self.states.install_from_batch(id, batch, b, conv, ssm);
@@ -892,12 +1011,27 @@ impl<E: Executor> Scheduler<E> {
         self.metrics.record_traffic(traffic, self.states.resident_bytes(), padded);
         // Device-launch accounting: 1 per tick on a fused varlen
         // engine, the compiled-group count under the decomposition.
-        self.metrics.record_device_calls(self.ws.take_device_calls());
+        let device_calls = self.ws.take_device_calls();
+        self.metrics.record_device_calls(device_calls);
 
         // Plan accounting: the decision, and the engine's modeled cost
         // for executing it (zero on engines that don't model plans).
         let (modeled_cycles, modeled_bytes) = self.ws.take_modeled();
         self.metrics.record_plan(&decision, modeled_cycles, modeled_bytes);
+
+        // The worker-scoped Launch record carries exactly what the
+        // counters above just absorbed, which is what lets
+        // `obs::reconcile` demand Σ Launch.device_calls ==
+        // `Metrics::device_calls` (and staged bytes likewise) with no
+        // slack.
+        self.trace_push(
+            WORKER_SEQ,
+            TraceEvent::Launch {
+                plan: decision.choice.index() as u8,
+                device_calls,
+                staged_bytes: traffic.total(),
+            },
+        );
 
         Ok(completed)
     }
@@ -1493,5 +1627,67 @@ mod tests {
             assert_eq!(p.flight.prefill_pos, 0, "cursors never advanced");
             assert_eq!(p.reprefill_cost_tokens(), 0, "resubmission is free");
         }
+    }
+
+    #[test]
+    fn trace_reconciles_with_traffic_counters() {
+        use crate::obs;
+        let mut s = sched();
+        let m = s.manifest();
+        let mut gen = WorkloadGen::new(23, m.vocab, m.prefill_len, 2, 7).with_prompt_range(1, 24);
+        for _ in 0..6 {
+            s.submit(gen.next_request()).unwrap();
+        }
+        s.run_until_drained().unwrap();
+        assert_eq!(s.trace_dropped(), 0);
+        let events = s.take_trace();
+        let snap = s.metrics().traffic_snapshot();
+        obs::reconcile(&events, &snap).unwrap();
+        // Exactly one terminal event per submitted request, spans well
+        // formed on the single shard.
+        let spans = obs::assemble_spans(&events);
+        assert_eq!(spans.len(), 6);
+        for sp in &spans {
+            assert_eq!(sp.terminal().map(|e| e.name()), Some("completed"));
+            assert_eq!(sp.shards, vec![0]);
+        }
+        // Draining resets the ring; the next tick starts a fresh trace.
+        assert!(s.take_trace().is_empty());
+    }
+
+    #[test]
+    fn trace_covers_snapshot_hits_and_tick_latency() {
+        use crate::obs::{self, TraceEvent};
+        let mut s = sched();
+        let prompt = vec![1, 2, 3, 4];
+        s.submit_session(Request { id: 1, prompt: prompt.clone(), max_new_tokens: 3 }, Some(9))
+            .unwrap();
+        s.run_until_drained().unwrap();
+        // Second turn extends the history recorded by the first —
+        // snapshot hit skips the shared prefix.
+        let mut p2 = prompt.clone();
+        // Drain between turns: each trace window reconciles against
+        // the counters accumulated so far (cumulative at this point ==
+        // exactly turn one).
+        let first = s.take_trace();
+        obs::reconcile(&first, &s.metrics().traffic_snapshot()).unwrap();
+        p2.extend([7, 8, 9]);
+        s.submit_session(Request { id: 2, prompt: p2, max_new_tokens: 2 }, Some(9)).unwrap();
+        s.run_until_drained().unwrap();
+        let events = s.take_trace();
+        let skipped: u64 = events
+            .iter()
+            .filter_map(|r| match r.event {
+                TraceEvent::SnapshotHit { tokens_skipped } => Some(tokens_skipped),
+                _ => None,
+            })
+            .sum();
+        assert!(skipped > 0, "session reuse must emit a SnapshotHit event");
+        assert_eq!(skipped, s.metrics().prefill_tokens_skipped);
+        // Tick-denominated latency recorded deterministically.
+        let lat = s.latency_report();
+        assert_eq!(lat.ttft_ticks.count(), 2);
+        assert_eq!(lat.total_ticks.count(), 2);
+        assert!(lat.total_ticks.max() >= lat.ttft_ticks.max());
     }
 }

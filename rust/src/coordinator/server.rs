@@ -27,12 +27,13 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::obs::{TraceEvent, TraceRecord};
 use crate::planner::{Planner, PlanSpec};
 use crate::runtime::engine::Executor;
 use crate::runtime::EngineCaps;
 
 use super::batcher::BatchPolicy;
-use super::metrics::TrafficSnapshot;
+use super::metrics::{LatencyReport, TrafficSnapshot};
 use super::request::{Request, Response};
 use super::scheduler::Scheduler;
 use super::shard::{
@@ -60,6 +61,19 @@ enum WorkerEvent {
         shard: usize,
         generation: u64,
         salvage: Vec<SalvageEntry>,
+        /// The dead worker's trace ring, drained *before* salvage
+        /// consumed its scheduler (plus one `Salvaged` record per
+        /// exported flight) — a worker death loses no trace records.
+        trace: Vec<TraceRecord>,
+        /// Its latency histograms, likewise captured before salvage so
+        /// server-wide percentiles still cover completions it served.
+        latency: LatencyReport,
+        /// Its traffic counters at death (gauges zeroed: the state and
+        /// cache they measured are gone). Folded into
+        /// [`Server::traffic`] so a worker death never makes the
+        /// server-wide counters go backwards — and so the trace still
+        /// reconciles against them exactly.
+        traffic: TrafficSnapshot,
     },
     /// A submit that reached a dead worker's mailbox; the supervisor
     /// re-routes it to a live shard (or fails it terminally).
@@ -106,6 +120,10 @@ enum Msg {
     SnapshotBudget(u64),
     Report(Sender<String>),
     Traffic(Sender<TrafficSnapshot>),
+    /// Drain the worker's lifecycle-trace ring.
+    Trace(Sender<Vec<TraceRecord>>),
+    /// Copy of the worker's mergeable latency histograms.
+    Latency(Sender<LatencyReport>),
     Caps(Sender<EngineCaps>),
     Load(Sender<WorkerLoad>),
     Detach(u64, Sender<Option<DetachReply>>),
@@ -156,6 +174,18 @@ pub struct Server {
     /// this many times fails terminally instead of looping.
     max_replays: u32,
     stats: ResilienceStats,
+    /// Router-scoped lifecycle records (`Routed` placements, terminal
+    /// `Failed`s) — the router has no tick clock, so these stamp tick 0.
+    router_trace: Vec<TraceRecord>,
+    /// Trace records recovered from dead workers (shipped in their
+    /// `Down` events), drained by [`Server::trace`].
+    dead_trace: Vec<TraceRecord>,
+    /// Latency histograms recovered from dead workers, merged into
+    /// [`Server::latency`].
+    dead_latency: LatencyReport,
+    /// Traffic counters recovered from dead workers, folded into
+    /// [`Server::traffic`].
+    dead_traffic: TrafficSnapshot,
 }
 
 impl Server {
@@ -228,6 +258,9 @@ impl Server {
                                 shard,
                                 generation,
                                 salvage: Vec::new(),
+                                trace: Vec::new(),
+                                latency: LatencyReport::default(),
+                                traffic: TrafficSnapshot::default(),
                             });
                             tombstone_loop(shard, generation, rx, &events);
                         }
@@ -252,7 +285,17 @@ impl Server {
             max_restarts: 2,
             max_replays: 3,
             stats: ResilienceStats::default(),
+            router_trace: Vec::new(),
+            dead_trace: Vec::new(),
+            dead_latency: LatencyReport::default(),
+            dead_traffic: TrafficSnapshot::default(),
         }
+    }
+
+    /// Record a router-scoped lifecycle event for `seq` (tick 0: the
+    /// router is clockless; worker records carry the real tick).
+    fn router_record(&mut self, seq: u64, shard: usize, event: TraceEvent) {
+        self.router_trace.push(TraceRecord { seq, tick: 0, shard: shard as u32, event });
     }
 
     /// Replace the router's migration heuristics.
@@ -319,7 +362,10 @@ impl Server {
         while let Ok(ev) = self.event_rx.try_recv() {
             handled += 1;
             match ev {
-                WorkerEvent::Down { shard, generation, salvage } => {
+                WorkerEvent::Down { shard, generation, salvage, trace, latency, traffic } => {
+                    self.dead_trace.extend(trace);
+                    self.dead_latency.merge(&latency);
+                    self.dead_traffic.accumulate(&traffic);
                     self.handle_down(shard, generation, salvage)
                 }
                 WorkerEvent::Orphan { req, session, sink } => {
@@ -427,6 +473,7 @@ impl Server {
             return;
         }
         let shard = self.shards.place(req.id);
+        self.router_record(req.id, shard, TraceEvent::Routed { shard: shard as u32 });
         if let Some(sid) = session {
             self.sessions.insert(sid, shard);
         }
@@ -443,7 +490,9 @@ impl Server {
     /// bookkeeping released.
     fn fail_request(&mut self, seq: u64, sink: Sender<Response>, reason: impl Into<String>) {
         self.stats.requests_failed += 1;
+        let shard = self.shards.shard_of(seq).unwrap_or(0);
         self.shards.complete(seq);
+        self.router_record(seq, shard, TraceEvent::Failed);
         let _ = sink.send(Response::failure(seq, reason));
     }
 
@@ -462,6 +511,7 @@ impl Server {
             return rx;
         }
         let shard = self.shards.place(req.id);
+        self.router_record(req.id, shard, TraceEvent::Routed { shard: shard as u32 });
         self.send_submit(req, shard)
     }
 
@@ -474,6 +524,7 @@ impl Server {
         }
         let shard = shard.min(self.workers.len().saturating_sub(1));
         self.shards.assign(req.id, shard);
+        self.router_record(req.id, shard, TraceEvent::Routed { shard: shard as u32 });
         self.send_submit(req, shard)
     }
 
@@ -501,6 +552,7 @@ impl Server {
                 s
             }
         };
+        self.router_record(req.id, shard, TraceEvent::Routed { shard: shard as u32 });
         let (tx, rx) = channel();
         match self.workers.get(shard) {
             Some(w) => {
@@ -711,8 +763,13 @@ impl Server {
     /// attach, and each worker's gauge updates immediately — between
     /// ticks — on both sides of the move). Migrations themselves are
     /// counted once each, on the attaching worker.
+    /// Counters from workers that died mid-serve are preserved: each
+    /// death ships its final snapshot (gauges zeroed) in its `Down`
+    /// event, and the sum here includes them — so the server-wide
+    /// counters never go backwards across a fault, and the lifecycle
+    /// trace reconciles against them exactly ([`crate::obs::reconcile`]).
     pub fn traffic(&self) -> TrafficSnapshot {
-        let mut total = TrafficSnapshot::default();
+        let mut total = self.dead_traffic;
         for w in &self.workers {
             let (tx, rx) = channel();
             if w.tx.send(Msg::Traffic(tx)).is_err() {
@@ -720,6 +777,53 @@ impl Server {
             }
             if let Ok(t) = rx.recv() {
                 total.accumulate(&t);
+            }
+        }
+        total
+    }
+
+    /// Drain the full request-lifecycle trace: router-scoped records
+    /// (`Routed` / `Failed`), every live worker's ring (over the same
+    /// channels every other query uses), and records recovered from
+    /// dead workers' `Down` events. Each call returns a fresh window —
+    /// records are drained exactly once, so consecutive windows
+    /// reconcile against counter *deltas* (and one drain at end of run
+    /// reconciles against the totals). Per-seq record order is
+    /// router → per-worker in drain order; tick stamps are per-worker
+    /// clocks ([`crate::obs::assemble_spans`] stitches by sequence, not
+    /// by comparing ticks across shards).
+    pub fn trace(&mut self) -> Vec<TraceRecord> {
+        self.supervise(); // pick up pending Down events' traces first
+        let mut all = std::mem::take(&mut self.router_trace);
+        for w in &self.workers {
+            let (tx, rx) = channel();
+            if w.tx.send(Msg::Trace(tx)).is_err() {
+                continue;
+            }
+            if let Ok(mut t) = rx.recv() {
+                all.append(&mut t);
+            }
+        }
+        all.append(&mut self.dead_trace);
+        all
+    }
+
+    /// Server-wide latency histograms: every live worker's
+    /// [`LatencyReport`] plus those recovered from dead workers, pooled
+    /// via [`crate::obs::Histogram::merge`] — the percentiles are
+    /// exactly those of the pooled samples (what the old
+    /// last-writer-wins report lines could never give), in both wall
+    /// and tick units.
+    pub fn latency(&mut self) -> LatencyReport {
+        self.supervise();
+        let mut total = self.dead_latency;
+        for w in &self.workers {
+            let (tx, rx) = channel();
+            if w.tx.send(Msg::Latency(tx)).is_err() {
+                continue;
+            }
+            if let Ok(l) = rx.recv() {
+                total.merge(&l);
             }
         }
         total
@@ -796,6 +900,12 @@ fn handle_msg<E: Executor>(
         }
         Msg::Traffic(tx) => {
             let _ = tx.send(sched.metrics().traffic_snapshot());
+        }
+        Msg::Trace(tx) => {
+            let _ = tx.send(sched.take_trace());
+        }
+        Msg::Latency(tx) => {
+            let _ = tx.send(sched.latency_report());
         }
         Msg::Caps(tx) => {
             let _ = tx.send(sched.caps());
@@ -906,9 +1016,33 @@ fn worker_loop<E: Executor>(
                 // their flights; any sink left without a flight gets
                 // its terminal error here — a dead worker never
                 // silently drops a client.
+                // Trace and latency must come off the scheduler
+                // *before* `salvage()` consumes it; the fault tick is
+                // already in the ring (the failing tick pushed it).
+                let mut trace = sched.take_trace();
+                let fault_tick = sched.tick_count();
+                let latency = sched.latency_report();
+                let traffic = {
+                    // Gauges measure state that dies with the worker
+                    // (rows are salvaged off or lost; the snapshot
+                    // cache is gone) — zero them so the server-wide
+                    // sums stay honest. Monotone counters survive.
+                    let mut t = sched.metrics().traffic_snapshot();
+                    t.state_bytes_resident = 0;
+                    t.snapshot_bytes_cached = 0;
+                    t
+                };
                 let mut salvage: Vec<SalvageEntry> = Vec::new();
                 for packet in sched.salvage() {
                     let seq = packet.seq();
+                    trace.push(TraceRecord {
+                        seq,
+                        tick: fault_tick,
+                        shard: shard as u32,
+                        event: TraceEvent::Salvaged {
+                            state_carrying: packet.state_bytes() > 0,
+                        },
+                    });
                     match sinks.remove(&seq) {
                         Some(sink) => salvage.push((Box::new(packet), sink)),
                         // No sink, no observer: nothing to route the
@@ -923,7 +1057,14 @@ fn worker_loop<E: Executor>(
                     let _ = sink.send(Response::failure(id, "worker failed with no salvageable flight"));
                     let _ = done.send(id);
                 }
-                let _ = events.send(WorkerEvent::Down { shard, generation, salvage });
+                let _ = events.send(WorkerEvent::Down {
+                    shard,
+                    generation,
+                    salvage,
+                    trace,
+                    latency,
+                    traffic,
+                });
                 tombstone_loop(shard, generation, rx, &events);
                 return;
             }
@@ -952,6 +1093,9 @@ fn tombstone_loop(shard: usize, generation: u64, rx: Receiver<Msg>, events: &Sen
                 shard,
                 generation,
                 salvage: vec![(packet, sink)],
+                trace: Vec::new(),
+                latency: LatencyReport::default(),
+                traffic: TrafficSnapshot::default(),
             }),
             Msg::Fork(_, _, tx) => {
                 let _ = tx.send(false);
@@ -963,7 +1107,8 @@ fn tombstone_loop(shard: usize, generation: u64, rx: Receiver<Msg>, events: &Sen
             }
             // Dropping the reply sender makes the router's recv() fail,
             // which every query path already skips over.
-            Msg::Report(_) | Msg::Traffic(_) | Msg::Caps(_) | Msg::Load(_) => Ok(()),
+            Msg::Report(_) | Msg::Traffic(_) | Msg::Trace(_) | Msg::Latency(_) | Msg::Caps(_)
+            | Msg::Load(_) => Ok(()),
             Msg::SnapshotBudget(_) | Msg::RemoteResident(_) => Ok(()),
             Msg::Shutdown => return,
         };
@@ -1352,6 +1497,77 @@ mod tests {
         );
         assert_eq!(server.resilience().requests_failed, 1);
         assert!(inj.faults_injected() >= 2, "the fault was actually replayed");
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_trace_reconciles_and_latency_merges_across_workers() {
+        use crate::obs;
+        let probe = MockEngine::new();
+        let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+        let factories: Vec<fn() -> anyhow::Result<MockEngine>> =
+            vec![|| Ok(MockEngine::new()), || Ok(MockEngine::new())];
+        let mut server = Server::start(factories, BatchPolicy::default());
+        let mut gen = WorkloadGen::new(31, vocab, plen, 2, 6);
+        let rxs: Vec<_> = (0..8).map(|_| server.submit(gen.next_request())).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().error.is_none());
+        }
+        // Spans: router Routed + worker lifecycle, one Completed each.
+        let events = server.trace();
+        let snap = server.traffic();
+        obs::reconcile(&events, &snap).unwrap();
+        let spans = obs::assemble_spans(&events);
+        assert_eq!(spans.len(), 8);
+        for sp in &spans {
+            assert_eq!(sp.terminal().map(|e| e.name()), Some("completed"));
+        }
+        // Server-wide latency pools both workers' histograms exactly.
+        let lat = server.latency();
+        assert_eq!(lat.ttft_us.count(), 8);
+        assert_eq!(lat.total_ticks.count(), 8);
+        assert!(lat.total_us.percentile(0.99) >= lat.ttft_us.percentile(0.5));
+        // The drain was exact-once: a second window is empty.
+        assert!(server.trace().is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn dead_worker_trace_and_counters_survive_into_server_totals() {
+        use crate::obs::{self, TraceEvent};
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // Engine dies once mid-serve; after respawn + salvage the full
+        // window (dead incarnation included) still reconciles against
+        // the server-wide counters, and every request has exactly one
+        // terminal event.
+        let inj = FaultInjector::new(FaultPlan::Once(3));
+        let factory = {
+            let inj = inj.clone();
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(vec![factory], BatchPolicy::default());
+        let rxs: Vec<_> = (0..5u64)
+            .map(|id| {
+                server.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 6 })
+            })
+            .collect();
+        for rx in &rxs {
+            let resp = recv_supervised(&mut server, rx);
+            assert!(resp.error.is_none(), "{resp:?}");
+        }
+        assert_eq!(inj.faults_injected(), 1);
+        let events = server.trace();
+        assert!(
+            events.iter().any(|r| matches!(r.event, TraceEvent::Fault)),
+            "the dead incarnation's Fault record survived"
+        );
+        assert!(
+            events.iter().any(|r| matches!(r.event, TraceEvent::Salvaged { .. })),
+            "salvaged flights are marked in the trace"
+        );
+        let snap = server.traffic();
+        assert_eq!(snap.requests_completed, 5, "dead worker's completions preserved");
+        obs::reconcile(&events, &snap).unwrap();
         server.shutdown();
     }
 }

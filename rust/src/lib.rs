@@ -57,6 +57,16 @@
 //!   live-migrates in-flight requests between worker shards by moving
 //!   their resident rows (one counted `bytes_migrated` transfer, never
 //!   a re-prefill);
+//! * [`obs`] — deterministic observability over the serving stack:
+//!   typed [`obs::TraceEvent`] request-lifecycle records stamped with
+//!   the scheduler's tick clock in bounded pre-allocated
+//!   [`obs::TraceRing`]s (zero-alloc steady state, counted drops),
+//!   per-request [`obs::Span`] stitching across migration/salvage
+//!   hops with Chrome-trace/Perfetto export ([`obs::chrome_trace`]),
+//!   mergeable log2 [`obs::Histogram`] latency percentiles (tick
+//!   units gateable, wall units reporting), and the
+//!   [`obs::reconcile`] property that forces trace sums to equal the
+//!   traffic counters bit-for-bit in every CI gate;
 //! * [`util`] / [`prop`] / [`bench_util`] — offline-build stand-ins for
 //!   clap/serde/proptest/criterion (plus vendored `anyhow`/`xla` shims
 //!   under `rust/vendor/`).
@@ -70,6 +80,7 @@ pub mod coordinator;
 pub mod einsum;
 pub mod fusion;
 pub mod model;
+pub mod obs;
 pub mod planner;
 pub mod prop;
 pub mod report;

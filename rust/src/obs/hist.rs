@@ -1,0 +1,262 @@
+//! Log2-bucketed mergeable latency histograms.
+//!
+//! The serving stack needs percentiles in two places with two very
+//! different requirements:
+//!
+//! * **per-worker reporting** on the scheduler hot path — recording a
+//!   sample must be O(1) and allocation-free (the old `Vec<f64>` in
+//!   `Metrics` grew without bound and `ttft_pct` cloned + sorted it on
+//!   every query), and
+//! * **server-wide aggregation** — per-worker percentiles cannot be
+//!   averaged; the only way to get a true fleet p99 is to merge the
+//!   underlying distributions. Log2 buckets merge by summing counts,
+//!   so [`Histogram::merge`] makes cross-shard percentiles *exact at
+//!   bucket resolution* (the merged histogram is bit-identical to the
+//!   histogram of the pooled samples — see the unit suite).
+//!
+//! Values are unsigned integers in whatever unit the caller picks.
+//! `Metrics` keeps two parallel families: **tick units** (the
+//! deterministic scheduler clock — same workload, same numbers, every
+//! run; these are what CI gates and `BENCH_trajectory.json` record)
+//! and **wall microseconds** (reporting only, never gated).
+//!
+//! ## Bucket semantics
+//!
+//! Bucket 0 holds exactly the value 0; bucket `b >= 1` holds the range
+//! `[2^(b-1), 2^b - 1]`. [`Histogram::percentile`] walks the
+//! cumulative counts to the target rank and returns that bucket's
+//! upper bound clamped into `[min, max]` — i.e. an upper estimate
+//! within one log2 bucket width of the exact order statistic, never
+//! below `min`, and exact at the top (p→1 reports `max`).
+
+/// Number of log2 buckets. Bucket 31 is open-ended (values ≥ 2^30
+/// saturate into it); tick- and microsecond-denominated latencies in
+/// this stack sit far below that.
+pub const HIST_BUCKETS: usize = 32;
+
+/// A fixed-size, `Copy`, mergeable log2 histogram.
+///
+/// `Copy` is load-bearing: histograms ride in query replies over the
+/// worker channels (`Server::latency`) and live inline in `Metrics`
+/// with zero heap footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub const fn new() -> Histogram {
+        Histogram { counts: [0; HIST_BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Bucket index for a value: 0 → 0, else `64 - leading_zeros`
+    /// clamped, so bucket `b >= 1` spans `[2^(b-1), 2^b - 1]`.
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `b` (the percentile estimate
+    /// reported for ranks landing in `b`).
+    pub fn bucket_upper(b: usize) -> u64 {
+        if b == 0 {
+            0
+        } else {
+            (1u64 << b.min(63)) - 1
+        }
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a wall-clock duration in seconds as whole microseconds.
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record((secs.max(0.0) * 1e6).round() as u64);
+    }
+
+    /// Fold `other` into `self`. Bucket counts sum, so the merged
+    /// percentiles equal the pooled-samples percentiles exactly at
+    /// bucket resolution — this is what makes server-wide p50/p99
+    /// across shards trustworthy.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded samples (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of recorded samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Percentile estimate for `p` in `[0, 1]`: the upper bound of the
+    /// bucket holding the rank-`ceil(p·count)` sample, clamped into
+    /// `[min, max]`. Returns 0 on an empty histogram. Monotone in `p`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper(b).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn bucket_ranges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(7), 3);
+        assert_eq!(Histogram::bucket_of(8), 4);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        for b in 1..HIST_BUCKETS - 1 {
+            // b's range is [2^(b-1), 2^b - 1] and upper() is its top.
+            assert_eq!(Histogram::bucket_of(1 << (b - 1)), b);
+            assert_eq!(Histogram::bucket_of(Histogram::bucket_upper(b)), b);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        let mut h = Histogram::new();
+        h.record(37);
+        assert_eq!(h.percentile(0.0), 37);
+        assert_eq!(h.percentile(1.0), 37);
+        assert_eq!(h.mean(), 37.0);
+    }
+
+    /// The tentpole property: merging per-shard histograms gives the
+    /// same percentiles as pooling every sample and sorting, within
+    /// one log2 bucket width — and exactly at the extremes.
+    #[test]
+    fn merge_matches_pooled_sort_within_one_bucket() {
+        let mut rng = XorShift::new(0x0b5);
+        for _ in 0..50 {
+            let mut merged = Histogram::new();
+            let mut pooled: Vec<u64> = Vec::new();
+            for _ in 0..4 {
+                let n = rng.below(60) as usize;
+                let mut shard = Histogram::new();
+                for _ in 0..n {
+                    let v = rng.below(5000);
+                    shard.record(v);
+                    pooled.push(v);
+                }
+                merged.merge(&shard);
+            }
+            pooled.sort_unstable();
+            assert_eq!(merged.count() as usize, pooled.len());
+            let mut last = 0u64;
+            for &p in &[0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                let got = merged.percentile(p);
+                assert!(got >= last, "percentile not monotone at p={p}");
+                last = got;
+                if pooled.is_empty() {
+                    assert_eq!(got, 0);
+                    continue;
+                }
+                let rank = ((p * pooled.len() as f64).ceil() as usize).clamp(1, pooled.len());
+                let exact = pooled[rank - 1];
+                // Upper estimate, within one bucket width of exact.
+                assert!(
+                    got >= exact || got == merged.max(),
+                    "p={p}: got {got} < exact {exact}"
+                );
+                assert!(got <= 2 * exact + 1, "p={p}: got {got} > 2*{exact}+1");
+            }
+            assert_eq!(merged.percentile(1.0), *pooled.last().unwrap_or(&0));
+        }
+    }
+
+    /// Merge equals recording the pooled samples directly — the
+    /// bit-for-bit form of aggregation exactness.
+    #[test]
+    fn merge_is_bit_identical_to_pooled_recording() {
+        let mut rng = XorShift::new(9);
+        let a: Vec<u64> = (0..40).map(|_| rng.below(1 << 20)).collect();
+        let b: Vec<u64> = (0..25).map(|_| rng.below(1 << 20)).collect();
+        let (mut ha, mut hb, mut pooled) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for &v in &a {
+            ha.record(v);
+            pooled.record(v);
+        }
+        for &v in &b {
+            hb.record(v);
+            pooled.record(v);
+        }
+        ha.merge(&hb);
+        assert_eq!(ha, pooled);
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability: deterministic request-lifecycle tracing and
+//! mergeable latency histograms.
+//!
+//! The serving stack's perf argument is a *traffic-accounting*
+//! argument — every byte, device call and migration is a deterministic
+//! counter. This layer makes those aggregates attributable:
+//!
+//! * [`trace`] — typed [`TraceEvent`]s stamped with the scheduler's
+//!   tick clock, recorded into a bounded pre-allocated [`TraceRing`]
+//!   per worker, stitched into per-request [`Span`]s across
+//!   migration/salvage hops, exported as Perfetto-viewable Chrome
+//!   trace JSON, and [`reconcile`]d bit-for-bit against the
+//!   independent traffic counters so the trace can never silently
+//!   drift from the numbers CI gates on.
+//! * [`hist`] — log2-bucketed `Copy` [`Histogram`]s whose `merge()`
+//!   makes cross-shard latency percentiles exact at bucket
+//!   resolution, in deterministic tick units (gateable) and wall
+//!   microseconds (reporting).
+//!
+//! Nothing here allocates on the steady-state decode path: ring slots
+//! and histogram buckets are fixed-size and `Copy`, and overflow is a
+//! counted event ([`TraceRing::events_dropped`]), not an allocation
+//! or a silent loss.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Histogram, HIST_BUCKETS};
+pub use trace::{
+    assemble_spans, chrome_trace, reconcile, Span, TraceEvent, TraceRecord, TraceRing,
+    DEFAULT_TRACE_CAP, WORKER_SEQ,
+};

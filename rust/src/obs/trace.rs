@@ -1,0 +1,562 @@
+//! Deterministic request-lifecycle tracing.
+//!
+//! Every hop a request takes through the serving stack — admission,
+//! routing, chunked prefill, engine launches, first token, snapshot
+//! hits, migration, faults, salvage, terminal completion or failure —
+//! is recorded as a typed [`TraceEvent`] stamped with the scheduler's
+//! **deterministic tick clock** (never wall time: same workload, same
+//! trace, every run). Events land in a bounded, pre-allocated
+//! [`TraceRing`] per worker, so steady-state decode ticks stay
+//! zero-allocation with tracing enabled; overflow is *counted*
+//! ([`TraceRing::events_dropped`]), never silent.
+//!
+//! Tracing here is **trustworthy rather than decorative** because of
+//! [`reconcile`]: summed trace events must equal the independently
+//! maintained traffic counters exactly (Σ `Launch.device_calls` ==
+//! `device_calls`, migration events == `migrations`, snapshot hits,
+//! and exactly one terminal event per submitted request — the
+//! supervision sink contract, now observable). Every bench gate runs
+//! this check, so trace drift fails CI immediately.
+//!
+//! [`chrome_trace`] exports a drained event set as Chrome trace-event
+//! JSON viewable in Perfetto (`serve_mamba --trace-out trace.json`):
+//! one track per shard for worker-scoped launches, one track per
+//! request for its lifecycle span.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::TrafficSnapshot;
+use crate::util::JsonValue;
+
+/// Sentinel `seq` for worker-scoped records (per-tick launches,
+/// faults) that belong to a shard's track rather than any request.
+pub const WORKER_SEQ: u64 = u64::MAX;
+
+/// Default per-worker ring capacity. Sized so every gated scenario
+/// drains with zero drops (reconciliation requires the full event
+/// stream); at 32 bytes per slot this is 256 KiB per worker.
+pub const DEFAULT_TRACE_CAP: usize = 8192;
+
+/// One step of a request's lifecycle (or a worker-scoped engine
+/// event). Payloads are `Copy` only — no strings, no heap — so
+/// recording never allocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// Request entered a scheduler's waiting queue.
+    Submit,
+    /// Router placed the request on `shard` (server-side, pre-submit).
+    Routed {
+        /// Destination shard index.
+        shard: u32,
+    },
+    /// A session follow-up attached a cached snapshot row and skipped
+    /// re-prefilling `tokens_skipped` history tokens.
+    SnapshotHit {
+        /// Prompt tokens the cache made unnecessary.
+        tokens_skipped: u64,
+    },
+    /// A prefill chunk of `chunk_len` tokens was batched into this
+    /// tick, starting at prompt offset `cursor`.
+    ChunkScheduled {
+        /// Tokens in this chunk row.
+        chunk_len: u32,
+        /// Prompt offset the chunk starts at.
+        cursor: u32,
+    },
+    /// One mixed engine launch (worker-scoped, `seq == WORKER_SEQ`).
+    /// `staged_bytes` is the tick's gather+scatter traffic drained
+    /// from the engine workspace — zero on the resident fast path.
+    Launch {
+        /// Fusion plan index (`PlanChoice::index()`) the tick ran under.
+        plan: u8,
+        /// Device calls the launch decomposed into.
+        device_calls: u64,
+        /// Gathered + scattered state bytes staged for this tick.
+        staged_bytes: u64,
+    },
+    /// The request emitted its first generated token.
+    FirstToken,
+    /// The request's resident state row left this worker (planned
+    /// migration detach); `shard` is the row's home shard.
+    MigrationOut {
+        /// Shard the row detached from.
+        shard: u32,
+    },
+    /// The request attached on this worker; `shard` is where its
+    /// state (or replay history) came from.
+    MigrationIn {
+        /// Source shard of the attached packet.
+        shard: u32,
+    },
+    /// A re-prefill attach replayed `tokens` prompt+history tokens.
+    Replayed {
+        /// Tokens replayed through prefill.
+        tokens: u64,
+    },
+    /// An engine launch failed and poisoned this worker
+    /// (worker-scoped, `seq == WORKER_SEQ`).
+    Fault,
+    /// The request was exported from a poisoned worker's salvage;
+    /// `state_carrying` says whether its state rows travelled with it
+    /// (vs. a token-only packet that must re-prefill).
+    Salvaged {
+        /// True when the packet carries resident state rows.
+        state_carrying: bool,
+    },
+    /// Terminal: the request completed and its sink got the response.
+    Completed,
+    /// Terminal: the request failed and its sink got an error
+    /// response (retry budget exhausted, no healthy worker, …).
+    Failed,
+}
+
+impl TraceEvent {
+    /// Short stable name (the Chrome-trace event name).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Submit => "submit",
+            TraceEvent::Routed { .. } => "routed",
+            TraceEvent::SnapshotHit { .. } => "snapshot_hit",
+            TraceEvent::ChunkScheduled { .. } => "chunk_scheduled",
+            TraceEvent::Launch { .. } => "launch",
+            TraceEvent::FirstToken => "first_token",
+            TraceEvent::MigrationOut { .. } => "migration_out",
+            TraceEvent::MigrationIn { .. } => "migration_in",
+            TraceEvent::Replayed { .. } => "replayed",
+            TraceEvent::Fault => "fault",
+            TraceEvent::Salvaged { .. } => "salvaged",
+            TraceEvent::Completed => "completed",
+            TraceEvent::Failed => "failed",
+        }
+    }
+
+    /// True for the two span-ending events. Every submitted request
+    /// must produce exactly one ([`reconcile`] enforces it).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TraceEvent::Completed | TraceEvent::Failed)
+    }
+}
+
+/// One ring slot: which request (`seq`), when (deterministic `tick`
+/// of the recording worker's clock), where (`shard`), what (`event`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Request id, or [`WORKER_SEQ`] for worker-scoped events.
+    pub seq: u64,
+    /// The recording scheduler's tick count at the event (0 for
+    /// server-side router events — the router has no tick clock).
+    pub tick: u64,
+    /// Shard the event was recorded on (or routed to).
+    pub shard: u32,
+    /// The lifecycle step.
+    pub event: TraceEvent,
+}
+
+impl Default for TraceRecord {
+    fn default() -> Self {
+        TraceRecord { seq: WORKER_SEQ, tick: 0, shard: 0, event: TraceEvent::Submit }
+    }
+}
+
+/// Bounded per-worker event ring. All slots are allocated up front;
+/// when full, a push overwrites the **oldest** record and bumps
+/// `events_dropped` — the hot path never allocates and never blocks,
+/// and loss is observable instead of silent.
+#[derive(Debug)]
+pub struct TraceRing {
+    slots: Vec<TraceRecord>,
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring with `cap` pre-allocated slots (min 1).
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { slots: vec![TraceRecord::default(); cap.max(1)], head: 0, len: 0, dropped: 0 }
+    }
+
+    /// Record an event. O(1), allocation-free; overwrites the oldest
+    /// record (counting it dropped) when full.
+    pub fn push(&mut self, rec: TraceRecord) {
+        let cap = self.slots.len();
+        if self.len < cap {
+            self.slots[(self.head + self.len) % cap] = rec;
+            self.len += 1;
+        } else {
+            self.slots[self.head] = rec;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Records currently buffered.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Cumulative count of records lost to overwrite. Non-zero means
+    /// the drained stream is incomplete and [`reconcile`] against it
+    /// is not meaningful — size the ring up or drain more often.
+    pub fn events_dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Append all buffered records (oldest first) to `out` and reset
+    /// the ring. The drop counter is cumulative and survives drains.
+    pub fn drain_into(&mut self, out: &mut Vec<TraceRecord>) {
+        let cap = self.slots.len();
+        out.reserve(self.len);
+        for i in 0..self.len {
+            out.push(self.slots[(self.head + i) % cap]);
+        }
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+/// A stitched per-request span: every event recorded for one `seq`,
+/// in drain order, across however many shards the request visited
+/// (migration and salvage make multi-shard spans).
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// The request id.
+    pub seq: u64,
+    /// Tick of the first event (on its recording worker's clock).
+    pub start_tick: u64,
+    /// Tick of the last event (on its recording worker's clock).
+    pub end_tick: u64,
+    /// Shards visited, consecutive duplicates collapsed, in order.
+    pub shards: Vec<u32>,
+    /// The span's events in recorded order.
+    pub events: Vec<TraceRecord>,
+}
+
+impl Span {
+    /// The span's terminal event, if it has ended.
+    pub fn terminal(&self) -> Option<TraceEvent> {
+        self.events.iter().rev().map(|r| r.event).find(TraceEvent::is_terminal)
+    }
+}
+
+/// Group drained records into per-request [`Span`]s (worker-scoped
+/// records are skipped), ordered by `seq`. Records for one request
+/// must already be in causal order per worker; cross-worker stitching
+/// relies on drain order (router first, then shard by shard), which
+/// is how [`Server::trace`] assembles its stream.
+///
+/// [`Server::trace`]: crate::coordinator::Server::trace
+pub fn assemble_spans(events: &[TraceRecord]) -> Vec<Span> {
+    let mut by_seq: BTreeMap<u64, Vec<TraceRecord>> = BTreeMap::new();
+    for &r in events {
+        if r.seq != WORKER_SEQ {
+            by_seq.entry(r.seq).or_default().push(r);
+        }
+    }
+    by_seq
+        .into_iter()
+        .map(|(seq, events)| {
+            let mut shards: Vec<u32> = Vec::new();
+            for r in &events {
+                if shards.last() != Some(&r.shard) {
+                    shards.push(r.shard);
+                }
+            }
+            Span {
+                seq,
+                start_tick: events.first().map_or(0, |r| r.tick),
+                end_tick: events.last().map_or(0, |r| r.tick),
+                shards,
+                events,
+            }
+        })
+        .collect()
+}
+
+/// Cross-check a drained event stream against the independently
+/// maintained traffic counters. Passing means the trace is a faithful
+/// account of what the counters measured:
+///
+/// * Σ `Launch.device_calls` == `snap.device_calls`
+/// * Σ `Launch.staged_bytes` == `snap.bytes_gathered + bytes_scattered`
+/// * `MigrationIn` count == `snap.migrations` (every counted attach —
+///   planned move, salvage, or re-prefill — left an event)
+/// * `SnapshotHit` count == `snap.snapshot_hits`, and the skipped
+///   tokens sum to `snap.prefill_tokens_skipped`
+/// * Σ `Replayed.tokens` == `snap.reprefill_tokens`
+/// * `Completed` count == `snap.requests_completed`
+/// * every span with a `Submit` or `Routed` event has **exactly one**
+///   terminal event; no span has more than one.
+///
+/// Returns every mismatch found (empty error list == `Ok`). The check
+/// is only meaningful over a complete stream — drain with zero
+/// [`TraceRing::events_dropped`].
+pub fn reconcile(events: &[TraceRecord], snap: &TrafficSnapshot) -> Result<(), String> {
+    let mut errs: Vec<String> = Vec::new();
+    let mut check = |name: &str, got: u64, want: u64| {
+        if got != want {
+            errs.push(format!("{name}: trace says {got}, counters say {want}"));
+        }
+    };
+
+    let (mut device_calls, mut staged, mut migr_in) = (0u64, 0u64, 0u64);
+    let (mut snap_hits, mut skipped, mut replayed, mut completed) = (0u64, 0u64, 0u64, 0u64);
+    for r in events {
+        match r.event {
+            TraceEvent::Launch { device_calls: d, staged_bytes: b, .. } => {
+                device_calls += d;
+                staged += b;
+            }
+            TraceEvent::MigrationIn { .. } => migr_in += 1,
+            TraceEvent::SnapshotHit { tokens_skipped } => {
+                snap_hits += 1;
+                skipped += tokens_skipped;
+            }
+            TraceEvent::Replayed { tokens } => replayed += tokens,
+            TraceEvent::Completed => completed += 1,
+            _ => {}
+        }
+    }
+    check("launch.device_calls", device_calls, snap.device_calls);
+    check("launch.staged_bytes", staged, snap.bytes_gathered + snap.bytes_scattered);
+    check("migration_in", migr_in, snap.migrations);
+    check("snapshot_hit", snap_hits, snap.snapshot_hits);
+    check("snapshot_hit.tokens_skipped", skipped, snap.prefill_tokens_skipped);
+    check("replayed.tokens", replayed, snap.reprefill_tokens);
+    check("completed", completed, snap.requests_completed);
+
+    for span in assemble_spans(events) {
+        let submitted = span
+            .events
+            .iter()
+            .any(|r| matches!(r.event, TraceEvent::Submit | TraceEvent::Routed { .. }));
+        let terminals = span.events.iter().filter(|r| r.event.is_terminal()).count();
+        if submitted && terminals != 1 {
+            errs.push(format!("seq {}: {} terminal events (want exactly 1)", span.seq, terminals));
+        } else if terminals > 1 {
+            errs.push(format!("seq {}: {} terminal events (want at most 1)", span.seq, terminals));
+        }
+    }
+
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs.join("; "))
+    }
+}
+
+fn event_args(r: &TraceRecord) -> JsonValue {
+    let mut args = JsonValue::obj();
+    match r.event {
+        TraceEvent::Routed { shard }
+        | TraceEvent::MigrationOut { shard }
+        | TraceEvent::MigrationIn { shard } => {
+            args.set("shard", shard as u64);
+        }
+        TraceEvent::SnapshotHit { tokens_skipped } => {
+            args.set("tokens_skipped", tokens_skipped);
+        }
+        TraceEvent::ChunkScheduled { chunk_len, cursor } => {
+            args.set("chunk_len", chunk_len as u64).set("cursor", cursor as u64);
+        }
+        TraceEvent::Launch { plan, device_calls, staged_bytes } => {
+            args.set("plan", plan as u64)
+                .set("device_calls", device_calls)
+                .set("staged_bytes", staged_bytes);
+        }
+        TraceEvent::Replayed { tokens } => {
+            args.set("tokens", tokens);
+        }
+        TraceEvent::Salvaged { state_carrying } => {
+            args.set("state_carrying", state_carrying);
+        }
+        _ => {}
+    }
+    args
+}
+
+/// Export a drained event stream as Chrome trace-event JSON (open the
+/// file in Perfetto / `chrome://tracing`). Layout:
+///
+/// * **pid 1 "shards"** — one thread per shard; worker-scoped events
+///   (`launch`, `fault`) as instants on their shard's track, `ts` =
+///   the worker's deterministic tick.
+/// * **pid 2 "requests"** — one thread per request; an `X` span from
+///   first to last event plus an instant per lifecycle step. A
+///   migrated or salvaged request's instants name the shards they
+///   crossed (`args.shard`), which is how a hop reads in the UI.
+///
+/// Tick clocks are per-worker, so cross-track timestamps align only
+/// loosely — the value of the export is ordering and attribution, not
+/// cross-shard simultaneity.
+pub fn chrome_trace(events: &[TraceRecord]) -> JsonValue {
+    let mut out = Vec::new();
+    let mut meta = |pid: u64, tid: u64, which: &str, name: String| {
+        let mut m = JsonValue::obj();
+        let mut args = JsonValue::obj();
+        args.set("name", name);
+        m.set("ph", "M").set("name", which).set("pid", pid).set("tid", tid).set("args", args);
+        m
+    };
+
+    out.push(meta(1, 0, "process_name", "shards".to_string()));
+    out.push(meta(2, 0, "process_name", "requests".to_string()));
+    let mut shards_seen: Vec<u32> = events.iter().map(|r| r.shard).collect();
+    shards_seen.sort_unstable();
+    shards_seen.dedup();
+    for s in shards_seen {
+        out.push(meta(1, s as u64, "thread_name", format!("shard {s}")));
+    }
+
+    for r in events {
+        let (pid, tid) = if r.seq == WORKER_SEQ { (1u64, r.shard as u64) } else { (2u64, r.seq) };
+        let mut e = JsonValue::obj();
+        e.set("name", r.event.name())
+            .set("ph", "i")
+            .set("s", "t")
+            .set("ts", r.tick)
+            .set("pid", pid)
+            .set("tid", tid)
+            .set("args", event_args(r));
+        out.push(e);
+    }
+
+    for span in assemble_spans(events) {
+        out.push(meta(2, span.seq, "thread_name", format!("req {}", span.seq)));
+        let mut args = JsonValue::obj();
+        let shards: Vec<JsonValue> =
+            span.shards.iter().map(|&s| JsonValue::from(s as u64)).collect();
+        args.set("shards", shards).set(
+            "terminal",
+            span.terminal().map_or("in_flight", |t| t.name()),
+        );
+        let mut e = JsonValue::obj();
+        e.set("name", format!("req {}", span.seq))
+            .set("ph", "X")
+            .set("ts", span.start_tick)
+            .set("dur", (span.end_tick.saturating_sub(span.start_tick)).max(1))
+            .set("pid", 2u64)
+            .set("tid", span.seq)
+            .set("args", args);
+        out.push(e);
+    }
+
+    let mut root = JsonValue::obj();
+    root.set("displayTimeUnit", "ms").set("traceEvents", out);
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64, tick: u64, shard: u32, event: TraceEvent) -> TraceRecord {
+        TraceRecord { seq, tick, shard, event }
+    }
+
+    /// Push 10 into a capacity-4 ring: the last 4 survive and exactly
+    /// 6 are counted dropped — overflow is never silent.
+    #[test]
+    fn ring_wraparound_counts_drops_exactly() {
+        let mut ring = TraceRing::new(4);
+        for i in 0..10u64 {
+            ring.push(rec(i, i, 0, TraceEvent::Submit));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.events_dropped(), 6);
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert!(ring.is_empty());
+        // Drain resets contents but the drop counter is cumulative.
+        assert_eq!(ring.events_dropped(), 6);
+        for i in 0..3u64 {
+            ring.push(rec(i, i, 0, TraceEvent::Submit));
+        }
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(ring.events_dropped(), 6);
+    }
+
+    #[test]
+    fn ring_never_allocates_after_construction() {
+        let mut ring = TraceRing::new(8);
+        let base = ring.capacity();
+        for i in 0..1000u64 {
+            ring.push(rec(i, i, 0, TraceEvent::FirstToken));
+        }
+        assert_eq!(ring.capacity(), base);
+        assert_eq!(ring.events_dropped(), 1000 - 8);
+    }
+
+    #[test]
+    fn spans_stitch_across_shards() {
+        let events = vec![
+            rec(7, 0, 0, TraceEvent::Routed { shard: 0 }),
+            rec(7, 1, 0, TraceEvent::Submit),
+            rec(WORKER_SEQ, 2, 0, TraceEvent::Launch { plan: 0, device_calls: 3, staged_bytes: 0 }),
+            rec(7, 4, 0, TraceEvent::MigrationOut { shard: 0 }),
+            rec(7, 1, 1, TraceEvent::MigrationIn { shard: 0 }),
+            rec(7, 3, 1, TraceEvent::Completed),
+        ];
+        let spans = assemble_spans(&events);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].shards, vec![0, 1]);
+        assert_eq!(spans[0].terminal(), Some(TraceEvent::Completed));
+        assert_eq!(spans[0].events.len(), 5, "worker-scoped record excluded");
+    }
+
+    #[test]
+    fn reconcile_catches_drift() {
+        let mut snap = TrafficSnapshot::default();
+        snap.device_calls = 3;
+        snap.requests_completed = 1;
+        let good = vec![
+            rec(1, 0, 0, TraceEvent::Submit),
+            rec(WORKER_SEQ, 1, 0, TraceEvent::Launch { plan: 0, device_calls: 3, staged_bytes: 0 }),
+            rec(1, 2, 0, TraceEvent::Completed),
+        ];
+        assert!(reconcile(&good, &snap).is_ok());
+        // Drift in a counter, a missing terminal, and a double
+        // terminal are all caught.
+        snap.device_calls = 4;
+        assert!(reconcile(&good, &snap).unwrap_err().contains("device_calls"));
+        snap.device_calls = 3;
+        let unterminated = &good[..2];
+        let err = reconcile(unterminated, &snap).unwrap_err();
+        assert!(err.contains("terminal"), "{err}");
+        let mut doubled = good.clone();
+        doubled.push(rec(1, 3, 0, TraceEvent::Failed));
+        assert!(reconcile(&doubled, &snap).unwrap_err().contains("terminal"));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_both_tracks() {
+        let events = vec![
+            rec(1, 0, 0, TraceEvent::Submit),
+            rec(WORKER_SEQ, 1, 0, TraceEvent::Launch { plan: 2, device_calls: 1, staged_bytes: 64 }),
+            rec(1, 1, 0, TraceEvent::FirstToken),
+            rec(1, 2, 0, TraceEvent::Completed),
+        ];
+        let doc = chrome_trace(&events);
+        let text = doc.to_string();
+        let parsed = JsonValue::parse(&text).expect("exported trace must parse");
+        let items = parsed.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // 2 process metas + 1 shard meta + 4 instants + 1 req meta + 1 span.
+        assert_eq!(items.len(), 9);
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"first_token\""));
+        assert!(text.contains("\"staged_bytes\":64"));
+    }
+}

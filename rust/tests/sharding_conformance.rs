@@ -27,12 +27,21 @@
 //!   salvage conservation laws (suspect rows never export state, every
 //!   state payload is exactly `state_bytes_per_seq`, the survivor's
 //!   resident gauge grows by exactly one payload per state attach).
+//! * **Reconciliation property**: under randomized migrations and under
+//!   a fault-storm worker kill, the drained request-lifecycle trace
+//!   ([`mambalaya::obs`]) accounts for the independent traffic counters
+//!   exactly, every request span carries exactly one terminal event,
+//!   and a migrated span records every shard it crossed.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
 
 use mambalaya::coordinator::{
-    BatchPolicy, MigrationMode, Request, Scheduler, Server, WorkloadGen,
+    BatchPolicy, MigrationMode, Request, Response, Scheduler, Server, TrafficSnapshot,
+    WorkloadGen,
 };
+use mambalaya::obs::{assemble_spans, reconcile, TraceEvent};
 use mambalaya::prop::check;
 use mambalaya::runtime::{Executor, FaultInjector, FaultPlan, MockEngine};
 use mambalaya::util::XorShift;
@@ -618,4 +627,195 @@ fn server_reprefill_mode_serves_identically_with_replay_counters() {
     assert_eq!(moved.reprefill_tokens, 0);
     assert_eq!(replayed.bytes_migrated, 0);
     assert!(replayed.reprefill_tokens > 0);
+}
+
+#[test]
+fn prop_trace_reconciles_under_randomized_migrations() {
+    // The reconciliation property from `mambalaya::obs`, under the
+    // nastiest scheduler-level churn this suite can produce: random
+    // policies, random workloads, and forced cross-shard moves at
+    // random ticks. Per-shard the books are lopsided by design (a
+    // migrated span starts hot and terminates cold), so the law is
+    // stated over the *combined* trace and the *accumulated*
+    // counters: every launch's device calls and staged bytes, every
+    // migration, every completion — accounted exactly, with one
+    // terminal event per request span, and every landed move visible
+    // as a shard-crossing in its assembled span.
+    let probe = MockEngine::new();
+    let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+    let mut total_migrations = 0u64;
+    check("trace/counter reconciliation under migration churn", 16, |rng| {
+        let policy = BatchPolicy {
+            chunk_tokens: rng.range(0, 6) as usize,
+            token_budget: rng.range(1, 24) as usize,
+            max_chunk_rows: rng.range(1, 5) as usize,
+            max_running: rng.range(1, 8) as usize,
+            decode_priority_threshold: rng.range(1, 10) as usize,
+        };
+        let mut gen = WorkloadGen::new(rng.next_u64(), vocab, plen, 2, 12)
+            .with_prompt_range(1, 3 * plen);
+        let reqs: Vec<Request> =
+            (0..rng.range(2, 8)).map(|_| gen.next_request()).collect();
+
+        let mut shards = vec![
+            Scheduler::new(MockEngine::new(), policy.clone()),
+            Scheduler::new(MockEngine::new(), policy.clone()),
+        ];
+        shards[0].set_shard(0);
+        shards[1].set_shard(1);
+        let mut placement: BTreeMap<u64, usize> = BTreeMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            placement.insert(r.id, i % 2);
+            shards[i % 2].submit(r.clone()).unwrap();
+        }
+
+        let mut migrated: BTreeSet<u64> = BTreeSet::new();
+        let mut done = 0u64;
+        let mut guard = 0u32;
+        while shards.iter().map(|s| s.pending()).sum::<usize>() > 0 {
+            guard += 1;
+            assert!(guard < 100_000, "sharded serve did not drain");
+            for s in shards.iter_mut() {
+                for resp in s.tick().unwrap().0 {
+                    placement.remove(&resp.id);
+                    done += 1;
+                }
+            }
+            if guard % 2 == 0 && !placement.is_empty() {
+                let live: Vec<u64> = placement.keys().copied().collect();
+                let seq = live[rng.below(live.len() as u64) as usize];
+                let from = placement[&seq];
+                if let Some(p) = shards[from].detach(seq) {
+                    shards[1 - from].attach(p).expect("well-formed packet attaches");
+                    placement.insert(seq, 1 - from);
+                    migrated.insert(seq);
+                }
+            }
+        }
+        total_migrations += migrated.len() as u64;
+
+        // The law is cross-shard: combine the traces, accumulate the
+        // counters, then reconcile.
+        let mut trace = Vec::new();
+        let mut combined = TrafficSnapshot::default();
+        for s in shards.iter_mut() {
+            assert_eq!(s.trace_dropped(), 0, "trace ring overflowed");
+            trace.extend(s.take_trace());
+            combined.accumulate(&s.metrics().traffic_snapshot());
+        }
+        reconcile(&trace, &combined)
+            .map_err(|e| format!("reconciliation failed under churn: {e}"))?;
+
+        let spans = assemble_spans(&trace);
+        if spans.len() != reqs.len() {
+            return Err(format!("{} spans for {} requests", spans.len(), reqs.len()));
+        }
+        if combined.requests_completed != done {
+            return Err(format!(
+                "counted {} completions, drained {done}",
+                combined.requests_completed
+            ));
+        }
+        for span in &spans {
+            if migrated.contains(&span.seq) && span.shards.len() < 2 {
+                return Err(format!(
+                    "seq {} migrated but its span never crossed a shard: {:?}",
+                    span.seq, span.shards
+                ));
+            }
+        }
+        Ok(())
+    });
+    assert!(total_migrations > 0, "no forced migration ever landed");
+}
+
+/// Pump `supervise` while waiting on a sink, so a worker death gets
+/// detected and recovered instead of stalling the receive forever.
+fn recv_supervised(server: &mut Server, rx: &Receiver<Response>) -> Response {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while Instant::now() < deadline {
+        server.supervise();
+        match rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(r) => return r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("sink dropped without a terminal response")
+            }
+        }
+    }
+    panic!("no response within 30s of supervised pumping");
+}
+
+#[test]
+fn prop_trace_reconciles_across_fault_storm_worker_kill() {
+    // The same law across the kill path: a randomized fail-once fault
+    // takes a worker down mid-flight, the supervisor salvages the
+    // wreck and respawns within the restart cap. The dead
+    // incarnation's trace and counters must ride into the server
+    // totals — so reconciliation holds across the death, the Fault
+    // (and, when flights carried state, Salvaged) records survive,
+    // and every request span still ends in exactly one terminal
+    // event.
+    let probe = MockEngine::new();
+    let (vocab, plen) = (probe.manifest().vocab, probe.manifest().prefill_len);
+    let mut total_salvaged = 0u64;
+    check("trace/counter reconciliation across a worker kill", 10, |rng| {
+        let n_reqs = rng.range(3, 8) as usize;
+        let mut gen = WorkloadGen::new(rng.next_u64(), vocab, plen, 8, 24)
+            .with_prompt_range(1, 3 * plen);
+        let reqs: Vec<Request> = (0..n_reqs).map(|_| gen.next_request()).collect();
+
+        // Fail the k-th device call, once: early enough that flights
+        // are still in the air, recoverable so every request finishes.
+        let k = rng.range(1, 8);
+        let inj = FaultInjector::new(FaultPlan::parse(&format!("once:{k}")).unwrap());
+        let factory = {
+            let inj = inj.clone();
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(vec![factory], BatchPolicy::default());
+        let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+        let responses: Vec<Response> =
+            rxs.iter().map(|rx| recv_supervised(&mut server, rx)).collect();
+        for r in &responses {
+            if r.is_error() {
+                return Err(format!("recoverable request {} failed: {:?}", r.id, r.error));
+            }
+        }
+
+        let recover = server.resilience();
+        if recover.workers_down != 1 || recover.worker_restarts != 1 {
+            return Err(format!(
+                "fail-once must kill and respawn exactly once: down={} restarts={}",
+                recover.workers_down, recover.worker_restarts
+            ));
+        }
+        total_salvaged += recover.requests_salvaged;
+
+        let events = server.trace();
+        if !events.iter().any(|r| matches!(r.event, TraceEvent::Fault)) {
+            return Err("dead worker's Fault record lost".into());
+        }
+        if recover.requests_salvaged > 0
+            && !events.iter().any(|r| matches!(r.event, TraceEvent::Salvaged { .. }))
+        {
+            return Err("salvaged flights left no Salvaged record".into());
+        }
+        let snap = server.traffic();
+        reconcile(&events, &snap)
+            .map_err(|e| format!("reconciliation failed across the kill: {e}"))?;
+        let spans = assemble_spans(&events);
+        if spans.len() != n_reqs {
+            return Err(format!("{} spans for {n_reqs} requests", spans.len()));
+        }
+        if snap.requests_completed != n_reqs as u64 {
+            return Err(format!(
+                "counted {} completions for {n_reqs} requests",
+                snap.requests_completed
+            ));
+        }
+        server.shutdown();
+        Ok(())
+    });
+    assert!(total_salvaged > 0, "the storm never salvaged an in-flight request");
 }
