@@ -82,7 +82,17 @@ if [[ "${1:-}" != "--fast" ]]; then
     # BENCH_trajectory.json — every row reconciled against the
     # request-lifecycle trace and proven bit-identical across a re-run,
     # so a trajectory diff between commits is a behaviour diff, never
-    # noise. (The runtime module also builds under
+    # noise, and (8) the frontend gate, which drives the overload
+    # storm (~10x the interactive class's own demand) and asserts
+    # SLO-aware admission holds interactive p99 TTFT within 2x the
+    # unloaded baseline while FIFO no-admission degrades >= 5x — zero
+    # interactive sheds, every batch shed counted — then runs real
+    # concurrent TCP clients through frontend::serve and asserts every
+    # submitted id receives exactly one terminal frame over the wire
+    # (shed requests get exactly one Error frame; zero hung
+    # connections), with token streams bit-identical to in-process
+    # serve_all and shed requests reconciling as terminal Failed
+    # spans. (The runtime module also builds under
     # #![deny(missing_docs)], so the engine surface stays documented by
     # construction.)
     # Every gate additionally enforces the reconciliation property: the
@@ -93,17 +103,17 @@ if [[ "${1:-}" != "--fast" ]]; then
     # All gates are on *counters* (same workload, same numbers, every
     # run), never on wall time; BENCH_hotpath.json, BENCH_planner.json,
     # BENCH_sharding.json, BENCH_engine_api.json, BENCH_snapshot.json,
-    # BENCH_resilience.json and BENCH_trajectory.json record the
-    # trajectory.
-    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API + snapshot + resilience + trajectory) =="
+    # BENCH_resilience.json, BENCH_trajectory.json and
+    # BENCH_frontend.json record the trajectory.
+    echo "== hotpath bench: quick counter gates (traffic + planner + sharding + engine API + snapshot + resilience + trajectory + frontend) =="
     cargo bench --bench hotpath -- --quick
-    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json BENCH_snapshot.json BENCH_resilience.json BENCH_trajectory.json; do
+    for f in BENCH_hotpath.json BENCH_planner.json BENCH_sharding.json BENCH_engine_api.json BENCH_snapshot.json BENCH_resilience.json BENCH_trajectory.json BENCH_frontend.json; do
         if [ ! -s "$f" ]; then
             echo "ERROR: $f missing or empty" >&2
             exit 1
         fi
     done
-    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json + BENCH_snapshot.json + BENCH_resilience.json + BENCH_trajectory.json written"
+    echo "   BENCH_hotpath.json + BENCH_planner.json + BENCH_sharding.json + BENCH_engine_api.json + BENCH_snapshot.json + BENCH_resilience.json + BENCH_trajectory.json + BENCH_frontend.json written"
 
     if command -v python >/dev/null 2>&1 && python -c "import jax" >/dev/null 2>&1; then
         echo "== python AOT-layer tests (non-gating) =="

@@ -84,22 +84,49 @@
 //! in Perfetto / `chrome://tracing` to see one track per shard plus
 //! one span per request.
 //!
+//! ## Network front-end
+//!
+//! `--listen ADDR` turns the process into a serving daemon: a TCP
+//! accept loop speaking the length-prefixed framed protocol
+//! ([`mambalaya::frontend::wire`]) with per-connection streaming token
+//! responses, fronted by SLO-aware admission control. Knobs:
+//!
+//! * `--batch-share F` — batch-class fraction of each admission
+//!   window's token capacity (`0` sheds all batch traffic, default `1`);
+//! * `--window-ticks N` / `--max-queued-tokens N` — admission window
+//!   length and the queued-prompt-token backstop;
+//! * `--max-conns N` — serve exactly N connections then exit (default:
+//!   serve forever).
+//!
+//! `--client ADDR` is the matching client: it handshakes (version-
+//! checked Hello), pipelines `--requests N` submissions at
+//! `--priority {interactive|standard|batch}`, and prints each
+//! streamed reply. Every submitted id receives exactly one terminal
+//! frame — a `Done` with the token count, or an `Error` carrying the
+//! shed/failure reason.
+//!
 //! ## Modes
 //!
 //! * `--mock` — serve on the deterministic in-process mock engine
 //!   (no artifacts needed); demonstrates chunked prefill with a mixed
 //!   long/short-prompt workload.
+//! * `--listen ADDR` / `--client ADDR` — network daemon / client over
+//!   the framed TCP protocol (combine `--listen` with `--mock` for an
+//!   artifact-free demo).
 //! * default — load the AOT artifacts and serve via PJRT.
 //!   Prereq: `make artifacts` (and a real `xla` binding crate — the
 //!   vendored stub fails at load with a pointer here).
 //!
 //! Run: `cargo run --release --example serve_mamba -- --mock [--requests 32]`
+//! Daemon: `cargo run --release --example serve_mamba -- --mock --listen 127.0.0.1:7070`
+//! Client: `cargo run --release --example serve_mamba -- --client 127.0.0.1:7070 --priority interactive --requests 8`
 
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
 
 use mambalaya::bench_util::ServeScenario;
 use mambalaya::coordinator::{BatchPolicy, Request, Response, Server, TrafficSnapshot, WorkloadGen};
+use mambalaya::frontend::{self, AdmissionConfig, FrontendConfig, Priority, PROTOCOL_VERSION};
 use mambalaya::planner::PlanSpec;
 use mambalaya::runtime::{Executor, FaultInjector, FaultPlan, Golden, MambaEngine, Manifest, MockEngine};
 use mambalaya::util::Args;
@@ -420,6 +447,102 @@ where
     Ok(())
 }
 
+/// Daemon mode: hand a started [`Server`] to [`frontend::serve`] on
+/// `addr` with admission knobs from the command line, then print the
+/// front-end stats and the usual observability lines when the accept
+/// loop returns (it returns after `--max-conns` connections; without
+/// that flag it serves until the process is killed).
+fn run_daemon(addr: &str, server: Server, args: &Args) -> anyhow::Result<()> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    let batch_share = args
+        .get("batch-share")
+        .map(|s| s.parse::<f64>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--batch-share: {e}"))?
+        .unwrap_or(1.0);
+    let mut admission = AdmissionConfig::default();
+    admission.shares[Priority::Batch.index()] = batch_share;
+    if let Some(w) = args.get("window-ticks") {
+        admission.window_ticks = w.parse().map_err(|e| anyhow::anyhow!("--window-ticks: {e}"))?;
+    }
+    if let Some(q) = args.get("max-queued-tokens") {
+        admission.max_queued_tokens =
+            q.parse().map_err(|e| anyhow::anyhow!("--max-queued-tokens: {e}"))?;
+    }
+    let max_connections = args
+        .get("max-conns")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--max-conns: {e}"))?;
+    println!(
+        "frontend: listening on {} (protocol v{PROTOCOL_VERSION}, batch_share={batch_share}, \
+         max_conns={max_connections:?})",
+        listener.local_addr()?
+    );
+    let cfg = FrontendConfig { admission, max_connections };
+    let (mut server, stats) = frontend::serve(listener, server, cfg)?;
+    println!(
+        "frontend: connections={} requests={} admitted={:?} shed={:?} error_frames={}",
+        stats.connections, stats.requests, stats.admitted, stats.shed, stats.errors
+    );
+    for r in server.reports() {
+        println!("{r}");
+    }
+    print_snapshot_line(&server.traffic());
+    report_observability(&mut server, args.get("trace-out"))?;
+    server.shutdown();
+    println!("serve_mamba OK");
+    Ok(())
+}
+
+/// Client mode: handshake with a `--listen` daemon at `addr`, pipeline
+/// `--requests` submissions at `--priority`, and print every streamed
+/// reply. Each submitted id gets exactly one terminal frame: a `Done`
+/// (token count + latency stamps) or an `Error` with the shed reason.
+fn run_client_mode(addr: &str, args: &Args) -> anyhow::Result<()> {
+    let n = args.get_u64("requests", 8);
+    let prio_s = args.get_or("priority", "interactive");
+    let prio = Priority::parse(prio_s).ok_or_else(|| {
+        anyhow::anyhow!("--priority must be interactive|standard|batch, got {prio_s:?}")
+    })?;
+    let reqs: Vec<(Request, Priority)> = (0..n)
+        .map(|k| {
+            let req = Request {
+                id: k,
+                prompt: (0..8 + (k % 5) as i32).map(|x| (x * 7 + k as i32 + 1) % 97).collect(),
+                max_new_tokens: 4 + (k % 4) as usize,
+            };
+            (req, prio)
+        })
+        .collect();
+    println!("client: {n} {prio} requests → {addr} (protocol v{PROTOCOL_VERSION})");
+    let replies = frontend::run_client(addr, &reqs, Some(Duration::from_secs(120)))
+        .map_err(|e| anyhow::anyhow!("client: {e}"))?;
+    let (mut served, mut shed) = (0usize, 0usize);
+    for r in &replies {
+        match &r.error {
+            None => {
+                served += 1;
+                println!(
+                    "request {}: {} tokens (ttft {:.2}ms): {:?}",
+                    r.id,
+                    r.tokens.len(),
+                    r.ttft_us as f64 / 1e3,
+                    r.tokens
+                );
+            }
+            Some(e) => {
+                shed += 1;
+                println!("request {}: terminal error: {e}", r.id);
+            }
+        }
+    }
+    println!("\nclient done: {served} served, {shed} terminal errors");
+    println!("serve_mamba OK");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_requests = args.get_u64("requests", 24) as usize;
@@ -435,6 +558,36 @@ fn main() -> anyhow::Result<()> {
         faults.is_none() || sessions == 0,
         "--faults drives the request workload; combine it with --mock/--requests, not --sessions"
     );
+
+    if let Some(addr) = args.get("client") {
+        return run_client_mode(addr, &args);
+    }
+    if let Some(addr) = args.get("listen") {
+        anyhow::ensure!(
+            faults.is_none() && sessions == 0,
+            "--listen serves network requests; --faults/--sessions apply to the batch drivers"
+        );
+        let server = if args.flag("mock") {
+            fn mock_factory() -> anyhow::Result<MockEngine> {
+                Ok(MockEngine::new())
+            }
+            let factories: Vec<fn() -> anyhow::Result<MockEngine>> = (0..workers)
+                .map(|_| mock_factory as fn() -> anyhow::Result<MockEngine>)
+                .collect();
+            Server::start_planned(factories, policy, spec)
+        } else {
+            let dir = args.get_or("artifacts", "artifacts").to_string();
+            Manifest::load(&dir)?; // fail fast before binding the socket
+            let factories: Vec<_> = (0..workers)
+                .map(|_| {
+                    let d = dir.clone();
+                    move || MambaEngine::load(&d)
+                })
+                .collect();
+            Server::start_planned(factories, policy, spec)
+        };
+        return run_daemon(addr, server, &args);
+    }
 
     if args.flag("mock") {
         // Mixed traffic on the mock engine (the shared scenario

@@ -38,7 +38,14 @@
 //!   bundled scenarios through one harness, emitting a scenario ×
 //!   counter matrix plus tick-unit latency percentiles — every value
 //!   deterministic, proven by running each scenario twice and
-//!   requiring identical rows).
+//!   requiring identical rows)
+//!   and the frontend gate (`BENCH_frontend.json`: the overload storm
+//!   at ~10× the interactive class's demand — SLO-aware admission
+//!   holds interactive p99 TTFT within 2× the unloaded baseline while
+//!   FIFO no-admission degrades ≥ 5×, every shed counted; plus real
+//!   TCP conformance — concurrent clients through `frontend::serve`
+//!   get exactly one terminal frame per submitted id, shed requests
+//!   included, bit-identical to in-process `serve_all`).
 //!
 //! Every gate additionally enforces the **reconciliation property**:
 //! the drained request-lifecycle trace ([`mambalaya::obs`]) must
@@ -55,7 +62,10 @@ use mambalaya::bench_util::{bench_config, black_box, BenchResult, ServeScenario}
 use mambalaya::cascade::{mamba1, ModelConfig};
 use mambalaya::coordinator::{
     serve_all, BatchPolicy, LatencyReport, Request, Response, Scheduler, Server, StateArena,
-    StatePath, TrafficSnapshot, WorkloadGen,
+    StatePath, TrafficSnapshot, WorkloadGen, PRIORITY_CLASSES,
+};
+use mambalaya::frontend::{
+    run_client, serve, AdmissionConfig, AdmissionController, FrontendConfig, LoadSignal, Priority,
 };
 use mambalaya::fusion::{classify_cascade, stitch, FusionVariant};
 use mambalaya::model::{analyze_scope, evaluate, ExecOptions};
@@ -328,6 +338,7 @@ fn main() {
     snapshot_gate();
     resilience_gate();
     trajectory_gate();
+    frontend_gate();
 
     if !quick {
         println!("\n== hot-path microbenchmarks ==");
@@ -1718,4 +1729,379 @@ fn trajectory_gate() {
     std::fs::write("BENCH_trajectory.json", doc.to_string())
         .expect("writing BENCH_trajectory.json");
     println!("wrote BENCH_trajectory.json (trajectory gate: PASS)");
+}
+
+// ---------------------------------------------------------------------------
+// Frontend gate: SLO-aware admission under 10x overload + wire conformance
+// ---------------------------------------------------------------------------
+
+/// One overload run's evidence: sorted interactive TTFTs (scheduler
+/// ticks, exact — extracted from trace spans, not histogram buckets),
+/// per-class shed counts, and the work-tick total.
+struct OverloadOutcome {
+    /// Sorted Submit→FirstToken tick deltas for the interactive class.
+    ttfts: Vec<u64>,
+    shed: [u64; PRIORITY_CLASSES],
+    work_ticks: u64,
+    completed: u64,
+}
+
+/// Exact p99 over sorted per-request values (nearest-rank).
+fn exact_p99(sorted: &[u64]) -> u64 {
+    assert!(!sorted.is_empty(), "p99 of empty sample");
+    let n = sorted.len();
+    let rank = ((0.99 * n as f64).ceil() as usize).max(1) - 1;
+    sorted[rank.min(n - 1)]
+}
+
+/// Drive the overload storm through a bare scheduler under one of
+/// three admission regimes:
+///
+/// * `"base"` — interactive arrivals only (the unloaded baseline);
+/// * `"fifo"` — everything admitted, no controller (the pathology);
+/// * `"admission"` — the [`AdmissionController`] at the front door:
+///   batch share 0.25 of each 12-tick window's 192-token capacity,
+///   plus a 192-token queued-prompt backstop.
+///
+/// The submit loop runs on its own iteration clock (arrival ticks);
+/// TTFT is measured on the scheduler's work-tick clock from the
+/// drained trace — Submit and FirstToken stamps per span — so the
+/// numbers are deterministic and exact.
+fn overload_run(mode: &str) -> OverloadOutcome {
+    let sc = ServeScenario::overload();
+    let vocab = MockEngine::new().manifest().vocab;
+    let arrivals = ServeScenario::overload_arrivals(vocab);
+    let interactive: std::collections::BTreeSet<u64> = arrivals
+        .iter()
+        .filter(|a| a.class == Priority::Interactive.index())
+        .map(|a| a.req.id)
+        .collect();
+    let window = ServeScenario::OVERLOAD_WINDOW_TICKS;
+    let capacity = window * sc.policy.token_budget as u64;
+    let mut s = Scheduler::with_path(MockEngine::new(), sc.policy.clone(), StatePath::Resident);
+    let mut admission = AdmissionController::new(AdmissionConfig {
+        window_ticks: window,
+        token_budget: sc.policy.token_budget as u64,
+        shares: [1.0, 1.0, 0.25],
+        ttft_deadline_ticks: [u64::MAX; PRIORITY_CLASSES],
+        max_queued_tokens: capacity,
+        max_resident_bytes: u64::MAX,
+    });
+    let mut trace: Vec<TraceRecord> = Vec::new();
+    let mut inflight: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    let mut queued_tokens: u64 = 0;
+    let mut completed: u64 = 0;
+    let mut next = 0usize;
+    let mut t: u64 = 0;
+    loop {
+        while next < arrivals.len() && arrivals[next].tick <= t {
+            let a = &arrivals[next];
+            next += 1;
+            match mode {
+                "base" if a.class != Priority::Interactive.index() => continue,
+                "admission" => {
+                    let class = Priority::from_index(a.class).expect("schedule class in range");
+                    let load = LoadSignal {
+                        queue_depth: s.waiting() as u64,
+                        queued_prompt_tokens: queued_tokens,
+                        running: s.running() as u64,
+                        resident_state_bytes: 0,
+                        budget_utilization: (s.running() as f64
+                            / sc.policy.token_budget.max(1) as f64)
+                            .min(1.0),
+                    };
+                    if admission.admit(class, a.req.prompt.len() as u64, t, &load).is_err() {
+                        continue; // shed at the front door; the controller counted it
+                    }
+                }
+                _ => {}
+            }
+            queued_tokens += a.req.prompt.len() as u64;
+            inflight.insert(a.req.id, a.req.prompt.len() as u64);
+            s.submit(a.req.clone()).unwrap();
+        }
+        let (done, _) = s.tick().unwrap();
+        for r in &done {
+            queued_tokens = queued_tokens.saturating_sub(inflight.remove(&r.id).unwrap_or(0));
+            completed += 1;
+        }
+        if t % 64 == 0 {
+            assert_eq!(s.trace_dropped(), 0, "frontend({mode}): trace ring overflowed");
+            s.drain_trace_into(&mut trace);
+        }
+        if mode == "admission" && t > 0 && t % window == 0 {
+            // Feed the deterministic tick histograms back as the
+            // SLO-pressure signal (inert here — deadlines disabled —
+            // but it keeps the gate on the same path the TCP loop uses).
+            admission.note_latency(&s.latency_report());
+        }
+        t += 1;
+        if next >= arrivals.len() && s.pending() == 0 {
+            break;
+        }
+        assert!(t < 100_000, "frontend({mode}): overload run did not drain");
+    }
+    let work_ticks = s.tick_count();
+    assert_eq!(s.trace_dropped(), 0, "frontend({mode}): trace ring overflowed");
+    s.drain_trace_into(&mut trace);
+    reconcile(&trace, &s.metrics().traffic_snapshot())
+        .unwrap_or_else(|e| panic!("frontend({mode}): reconciliation failed: {e}"));
+    let mut ttfts = Vec::new();
+    for sp in assemble_spans(&trace) {
+        if !interactive.contains(&sp.seq) {
+            continue;
+        }
+        let stamp = |want: fn(&TraceEvent) -> bool| {
+            sp.events.iter().find(|r| want(&r.event)).map(|r| r.tick)
+        };
+        let sub = stamp(|e| matches!(e, TraceEvent::Submit));
+        let first = stamp(|e| matches!(e, TraceEvent::FirstToken));
+        match (sub, first) {
+            (Some(sub), Some(first)) => ttfts.push(first.saturating_sub(sub)),
+            _ => panic!("frontend({mode}): interactive span {} missing Submit/FirstToken", sp.seq),
+        }
+    }
+    ttfts.sort_unstable();
+    OverloadOutcome { ttfts, shed: admission.shed(), work_ticks, completed }
+}
+
+/// Deterministic per-client request mix for the socket conformance
+/// half: four interactive and three batch requests per client, ids
+/// disjoint across clients.
+fn client_requests(client: usize, vocab: usize) -> Vec<(Request, Priority)> {
+    let v = vocab as i32;
+    let base = 1_000 * client as u64;
+    let mut reqs = Vec::new();
+    for k in 0..4u64 {
+        let id = base + k;
+        reqs.push((
+            Request {
+                id,
+                prompt: (0..(6 + k as i32 + client as i32))
+                    .map(|x| (x * 7 + id as i32 + 1) % v)
+                    .collect(),
+                max_new_tokens: 3 + k as usize,
+            },
+            Priority::Interactive,
+        ));
+    }
+    for k in 0..3u64 {
+        let id = base + 100 + k;
+        reqs.push((
+            Request {
+                id,
+                prompt: (0..8).map(|x| (x * 5 + id as i32 + 2) % v).collect(),
+                max_new_tokens: 4,
+            },
+            Priority::Batch,
+        ));
+    }
+    reqs
+}
+
+/// The frontend gate, two halves:
+///
+/// **A — SLO under overload (deterministic, scheduler-direct).** The
+/// shared `ServeScenario::overload` storm delivers ~2× each window's
+/// token capacity (~10× the interactive class's own demand). Gate:
+/// admission-controlled interactive p99 TTFT stays within 2× the
+/// unloaded baseline while the FIFO no-admission run degrades ≥ 5×;
+/// zero interactive sheds; every run reconciles trace-vs-counters
+/// with zero dropped records; the admission run is bit-identical when
+/// repeated.
+///
+/// **B — wire conformance (real TCP).** Three concurrent clients
+/// against `frontend::serve` with batch share 0: every submitted id
+/// gets exactly one terminal frame (shed batch requests get exactly
+/// one `Error`, zero hung connections), interactive token streams are
+/// bit-identical to in-process `serve_all`, and the server's trace
+/// reconciles with shed requests as terminal `Failed` spans.
+///
+/// Writes `BENCH_frontend.json`.
+fn frontend_gate() {
+    println!("\n== frontend gate: admission under overload + wire conformance ==");
+    let base = overload_run("base");
+    let fifo = overload_run("fifo");
+    let adm = overload_run("admission");
+    let again = overload_run("admission");
+    assert_eq!(adm.ttfts, again.ttfts, "frontend: admission run not deterministic");
+    assert_eq!(adm.shed, again.shed, "frontend: shed counts not deterministic");
+
+    let n_interactive = ServeScenario::OVERLOAD_WINDOWS;
+    assert_eq!(base.ttfts.len() as u64, n_interactive, "baseline serves every interactive");
+    assert_eq!(fifo.ttfts.len() as u64, n_interactive, "fifo serves every interactive");
+    assert_eq!(adm.ttfts.len() as u64, n_interactive, "admission serves every interactive");
+    let base_p99 = exact_p99(&base.ttfts);
+    let fifo_p99 = exact_p99(&fifo.ttfts);
+    let adm_p99 = exact_p99(&adm.ttfts);
+    assert!(
+        adm_p99 <= 2 * base_p99,
+        "frontend: admission p99 {adm_p99} ticks > 2x unloaded baseline {base_p99}"
+    );
+    assert!(
+        fifo_p99 >= 5 * base_p99,
+        "frontend: fifo p99 {fifo_p99} ticks < 5x baseline {base_p99} — storm not overloading"
+    );
+    assert_eq!(adm.shed[Priority::Interactive.index()], 0, "interactive traffic never sheds");
+    assert!(adm.shed[Priority::Batch.index()] > 0, "overload sheds batch traffic");
+    assert_eq!(base.shed, [0; PRIORITY_CLASSES]);
+    assert_eq!(fifo.shed, [0; PRIORITY_CLASSES]);
+    println!(
+        "  ttft_p99_ticks: base={base_p99} admission={adm_p99} fifo={fifo_p99}  \
+         shed(batch)={} work_ticks: base={} admission={} fifo={}",
+        adm.shed[Priority::Batch.index()],
+        base.work_ticks,
+        adm.work_ticks,
+        fifo.work_ticks,
+    );
+
+    // --- Part B: wire conformance over real sockets ---
+    let vocab = MockEngine::new().manifest().vocab;
+    let n_clients = 3usize;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let server = Server::start(vec![|| Ok(MockEngine::new())], BatchPolicy::default());
+    let cfg = FrontendConfig {
+        admission: AdmissionConfig {
+            // Batch share 0: every batch submit sheds, deterministically.
+            shares: [1.0, 1.0, 0.0],
+            ..AdmissionConfig::default()
+        },
+        max_connections: Some(n_clients),
+    };
+    let srv = std::thread::spawn(move || serve(listener, server, cfg).expect("serve loop"));
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let reqs = client_requests(c, vocab);
+                let replies = run_client(&addr, &reqs, Some(Duration::from_secs(60)))
+                    .expect("client round trip");
+                (reqs, replies)
+            })
+        })
+        .collect();
+    let mut all_interactive: Vec<Request> = Vec::new();
+    let mut wire_tokens: std::collections::HashMap<u64, Vec<i32>> =
+        std::collections::HashMap::new();
+    let mut batch_sent = 0u64;
+    let mut error_frames = 0u64;
+    for handle in clients {
+        let (reqs, replies) = handle.join().expect("client thread");
+        assert_eq!(replies.len(), reqs.len(), "one terminal reply per submitted id");
+        for ((req, prio), reply) in reqs.into_iter().zip(replies) {
+            assert_eq!(req.id, reply.id, "replies in submission order");
+            match prio {
+                Priority::Batch => {
+                    batch_sent += 1;
+                    error_frames += 1;
+                    let err = reply.error.as_deref().unwrap_or_else(|| {
+                        panic!("batch request {} should shed, got tokens", req.id)
+                    });
+                    assert!(err.contains("shed"), "shed reason on the wire: {err}");
+                    assert!(reply.tokens.is_empty(), "shed request streamed tokens");
+                }
+                _ => {
+                    assert!(
+                        reply.error.is_none(),
+                        "interactive request {} failed: {:?}",
+                        req.id,
+                        reply.error
+                    );
+                    assert_eq!(reply.tokens.len(), req.max_new_tokens, "full stream delivered");
+                    wire_tokens.insert(req.id, reply.tokens.clone());
+                    all_interactive.push(req);
+                }
+            }
+        }
+    }
+    let (mut server, stats) = srv.join().expect("serve thread");
+    assert_eq!(stats.connections as usize, n_clients);
+    assert_eq!(stats.shed, [0, 0, batch_sent], "every batch submit shed exactly once");
+    assert_eq!(stats.errors, error_frames, "one Error frame per shed request");
+    assert_eq!(
+        stats.admitted[Priority::Interactive.index()] as usize,
+        all_interactive.len(),
+        "every interactive submit admitted"
+    );
+
+    // Shed requests reconcile as terminal Failed spans; served spans
+    // complete; the trace accounts for the counters exactly.
+    let events = server.trace();
+    let traffic = server.traffic();
+    assert_eq!(traffic.requests_shed, batch_sent);
+    reconcile(&events, &traffic)
+        .unwrap_or_else(|e| panic!("frontend(tcp): reconciliation failed: {e}"));
+    let spans = assemble_spans(&events);
+    assert_eq!(
+        spans.len() as u64,
+        batch_sent + all_interactive.len() as u64,
+        "one span per submitted id, sheds included"
+    );
+    let failed = spans
+        .iter()
+        .filter(|sp| matches!(sp.terminal(), Some(TraceEvent::Failed)))
+        .count() as u64;
+    assert_eq!(failed, batch_sent, "every shed span terminates Failed");
+    server.shutdown();
+
+    // Bit-identical to in-process serve_all on the same requests.
+    let (resps, _) = serve_all(
+        || Ok(MockEngine::new()),
+        BatchPolicy::default(),
+        all_interactive.clone(),
+    )
+    .expect("serve_all baseline");
+    assert_eq!(resps.len(), all_interactive.len());
+    for r in &resps {
+        assert_eq!(
+            wire_tokens.get(&r.id),
+            Some(&r.tokens),
+            "request {}: socket stream diverged from serve_all",
+            r.id
+        );
+    }
+    println!(
+        "  tcp: clients={n_clients} interactive={} batch_shed={batch_sent} \
+         error_frames={error_frames} spans={} (bit-identical to serve_all)",
+        all_interactive.len(),
+        spans.len(),
+    );
+
+    let mut part_a = JsonValue::obj();
+    part_a
+        .set("base_p99_ttft_ticks", base_p99)
+        .set("admission_p99_ttft_ticks", adm_p99)
+        .set("fifo_p99_ttft_ticks", fifo_p99)
+        .set("admission_bound", 2 * base_p99)
+        .set("fifo_floor", 5 * base_p99)
+        .set("interactive_requests", n_interactive)
+        .set("batch_shed", adm.shed[Priority::Batch.index()])
+        .set("interactive_shed", 0u64)
+        .set("completed_admission", adm.completed)
+        .set("completed_fifo", fifo.completed)
+        .set("work_ticks_admission", adm.work_ticks)
+        .set("work_ticks_fifo", fifo.work_ticks);
+    let mut part_b = JsonValue::obj();
+    part_b
+        .set("clients", n_clients as u64)
+        .set("interactive_served", all_interactive.len() as u64)
+        .set("batch_shed", batch_sent)
+        .set("error_frames", error_frames)
+        .set("spans", spans.len() as u64)
+        .set("bit_identical_to_serve_all", true);
+    let mut gate = JsonValue::obj();
+    gate.set("trace_dropped", 0u64)
+        .set("reconciled", true)
+        .set("deterministic", true)
+        .set("one_terminal_per_request", true)
+        .set("pass", true);
+    let mut doc = JsonValue::obj();
+    doc.set("bench", "frontend")
+        .set("overload", part_a)
+        .set("wire", part_b)
+        .set("gate", gate);
+    std::fs::write("BENCH_frontend.json", doc.to_string())
+        .expect("writing BENCH_frontend.json");
+    println!("wrote BENCH_frontend.json (frontend gate: PASS)");
 }

@@ -21,6 +21,20 @@ enum ScenarioMix {
     MultiTurn,
     BestOfN,
     FaultStorm,
+    Overload,
+}
+
+/// One scheduled arrival in the [`ServeScenario::overload`] storm: the
+/// loop tick it enters the front door, its priority class, and the
+/// request itself.
+#[derive(Debug, Clone)]
+pub struct OverloadArrival {
+    /// Arrival tick on the submit-loop clock (same clock the admission
+    /// window rolls on).
+    pub tick: u64,
+    /// [`crate::frontend::Priority`] index (0 = interactive, 2 = batch).
+    pub class: usize,
+    pub req: Request,
 }
 
 /// A named, deterministic serving workload: a batch policy plus a
@@ -213,6 +227,93 @@ impl ServeScenario {
     /// Requests in [`ServeScenario::fault_storm`].
     pub const FAULT_STORM_REQUESTS: u64 = 8;
 
+    /// Admission-overload storm for the frontend gate: a tight policy
+    /// (4 running slots, 16-token budget) hit with ~10× its sustainable
+    /// load. Each [`ServeScenario::OVERLOAD_WINDOWS`]-window schedule
+    /// delivers [`ServeScenario::OVERLOAD_BATCH_PER_WINDOW`] batch-class
+    /// 32-token prompts plus one interactive 96-token prompt per
+    /// [`ServeScenario::OVERLOAD_WINDOW_TICKS`]-tick window — the
+    /// window's token capacity (16 × 12 = 192) fits roughly one
+    /// interactive and one batch prompt, so FIFO admission drowns the
+    /// interactive class while share-based admission sheds the excess
+    /// batch traffic. **Not** part of [`ServeScenario::all`]: the
+    /// trajectory artifact's scenario matrix stays at eight rows.
+    pub fn overload() -> ServeScenario {
+        ServeScenario {
+            name: "overload",
+            policy: BatchPolicy {
+                chunk_tokens: 16,
+                token_budget: 16,
+                max_chunk_rows: 2,
+                max_running: 4,
+                decode_priority_threshold: 4,
+            },
+            mix: ScenarioMix::Overload,
+        }
+    }
+
+    /// Admission-window length (submit-loop ticks) in the overload
+    /// storm; one interactive request arrives per window.
+    pub const OVERLOAD_WINDOW_TICKS: u64 = 12;
+
+    /// Windows in the overload schedule.
+    pub const OVERLOAD_WINDOWS: u64 = 20;
+
+    /// Batch-class arrivals per window (ticks +0..+8 within the
+    /// window; the interactive arrival lands at +4).
+    pub const OVERLOAD_BATCH_PER_WINDOW: u64 = 9;
+
+    /// Interactive prompt length in the overload storm.
+    pub const OVERLOAD_HIGH_PROMPT: usize = 96;
+
+    /// Batch prompt length in the overload storm.
+    pub const OVERLOAD_LOW_PROMPT: usize = 32;
+
+    /// Generation length for every overload request.
+    pub const OVERLOAD_NEW_TOKENS: usize = 4;
+
+    /// The full deterministic overload arrival schedule: per window,
+    /// nine batch prompts at ticks +0..+8 and one interactive prompt
+    /// at tick +4, sorted by (tick, id). Ids are dense 0..200 in
+    /// generation order (batch ids of a window precede its interactive
+    /// id), so the id order at a shared tick matches generation order.
+    pub fn overload_arrivals(vocab: usize) -> Vec<OverloadArrival> {
+        let v = vocab as i32;
+        let mut out = Vec::new();
+        let mut id: u64 = 0;
+        for w in 0..Self::OVERLOAD_WINDOWS {
+            let base = w * Self::OVERLOAD_WINDOW_TICKS;
+            for k in 0..Self::OVERLOAD_BATCH_PER_WINDOW {
+                out.push(OverloadArrival {
+                    tick: base + k,
+                    class: 2, // frontend::Priority::Batch
+                    req: Request {
+                        id,
+                        prompt: (0..Self::OVERLOAD_LOW_PROMPT as i32)
+                            .map(|x| (x * 7 + id as i32 + 1) % v)
+                            .collect(),
+                        max_new_tokens: Self::OVERLOAD_NEW_TOKENS,
+                    },
+                });
+                id += 1;
+            }
+            out.push(OverloadArrival {
+                tick: base + 4,
+                class: 0, // frontend::Priority::Interactive
+                req: Request {
+                    id,
+                    prompt: (0..Self::OVERLOAD_HIGH_PROMPT as i32)
+                        .map(|x| (x * 11 + id as i32 + 3) % v)
+                        .collect(),
+                    max_new_tokens: Self::OVERLOAD_NEW_TOKENS,
+                },
+            });
+            id += 1;
+        }
+        out.sort_by_key(|a| (a.tick, a.req.id));
+        out
+    }
+
     /// The token history a completed turn's state summarizes: the
     /// prompt plus every *engine-consumed* reply token. The final
     /// sampled token was never fed back (it is the pending next-step
@@ -330,6 +431,10 @@ impl ServeScenario {
                     prompt: (0..6).map(|x| (x * 7 + i as i32 * 3 + 2) % v).collect(),
                     max_new_tokens: 20,
                 })
+                .collect(),
+            ScenarioMix::Overload => Self::overload_arrivals(vocab)
+                .into_iter()
+                .map(|a| a.req)
                 .collect(),
             ScenarioMix::Interference => {
                 let mut reqs: Vec<Request> = (0..6)
@@ -493,6 +598,42 @@ mod tests {
         assert_eq!(p2.len() - history.len(), fresh + 1);
         // Empty reply: the history is just the prompt.
         assert_eq!(ServeScenario::session_history(&prompt, &[]), prompt);
+    }
+
+    #[test]
+    fn overload_schedule_is_deterministic_and_shaped() {
+        let a = ServeScenario::overload_arrivals(17);
+        let b = ServeScenario::overload_arrivals(17);
+        let per_window =
+            ServeScenario::OVERLOAD_BATCH_PER_WINDOW + 1;
+        assert_eq!(a.len() as u64, ServeScenario::OVERLOAD_WINDOWS * per_window);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.tick, x.class, &x.req.prompt), (y.tick, y.class, &y.req.prompt));
+        }
+        // Ids are unique, ticks sorted, classes well formed.
+        let ids: std::collections::BTreeSet<_> = a.iter().map(|r| r.req.id).collect();
+        assert_eq!(ids.len(), a.len());
+        assert!(a.windows(2).all(|w| w[0].tick <= w[1].tick));
+        let interactive = a.iter().filter(|r| r.class == 0).count() as u64;
+        assert_eq!(interactive, ServeScenario::OVERLOAD_WINDOWS);
+        for r in &a {
+            assert!(r.class == 0 || r.class == 2);
+            let want = if r.class == 0 {
+                ServeScenario::OVERLOAD_HIGH_PROMPT
+            } else {
+                ServeScenario::OVERLOAD_LOW_PROMPT
+            };
+            assert_eq!(r.req.prompt.len(), want);
+            assert_eq!(r.req.max_new_tokens, ServeScenario::OVERLOAD_NEW_TOKENS);
+        }
+        // The storm is genuinely over capacity: each window's demand
+        // (9×32 + 96 = 384 prompt tokens) is 2× its 192-token budget.
+        let demand = ServeScenario::OVERLOAD_BATCH_PER_WINDOW as usize
+            * ServeScenario::OVERLOAD_LOW_PROMPT
+            + ServeScenario::OVERLOAD_HIGH_PROMPT;
+        let capacity = (ServeScenario::overload().policy.token_budget
+            * ServeScenario::OVERLOAD_WINDOW_TICKS as usize) as usize;
+        assert!(demand >= 2 * capacity, "{demand} vs {capacity}");
     }
 
     #[test]

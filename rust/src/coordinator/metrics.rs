@@ -19,6 +19,11 @@ use crate::runtime::engine::TrafficCounters;
 /// `1`, `2`, `3..=4`, `5..=8`, `9..=16`, `17..=32`, `33..=64`, `65+`.
 pub const DWELL_BUCKETS: usize = 8;
 
+/// Number of serving priority classes (`frontend::Priority` indexes
+/// into the per-class arrays below; defined here so the coordinator's
+/// counter layer never depends on the front-end that sits above it).
+pub const PRIORITY_CLASSES: usize = 3;
+
 /// Histogram bucket for a dwell length.
 fn dwell_bucket(dwell: u64) -> usize {
     match dwell {
@@ -42,6 +47,16 @@ pub struct TrafficSnapshot {
     /// trace's `Completed` events must reconcile against exactly
     /// ([`crate::obs::reconcile`]).
     pub requests_completed: u64,
+    /// Requests refused by the serving front-end's admission layer.
+    /// Recorded at the router (workers never see a shed request), and
+    /// folded into the server-wide totals like dead-worker counters.
+    pub requests_shed: u64,
+    /// Shed requests per priority class ([`PRIORITY_CLASSES`]).
+    pub shed_by_class: [u64; PRIORITY_CLASSES],
+    /// Admitted requests per priority class, recorded at the router
+    /// when the front-end's admission layer is in play (all-zero for
+    /// in-process callers that bypass admission).
+    pub admitted_by_class: [u64; PRIORITY_CLASSES],
     /// State bytes copied out of resident storage / between staging.
     pub bytes_gathered: u64,
     /// State bytes copied into resident storage.
@@ -112,6 +127,13 @@ impl TrafficSnapshot {
     /// double count.
     pub fn accumulate(&mut self, t: &TrafficSnapshot) {
         self.requests_completed += t.requests_completed;
+        self.requests_shed += t.requests_shed;
+        for (a, b) in self.shed_by_class.iter_mut().zip(&t.shed_by_class) {
+            *a += b;
+        }
+        for (a, b) in self.admitted_by_class.iter_mut().zip(&t.admitted_by_class) {
+            *a += b;
+        }
         self.bytes_gathered += t.bytes_gathered;
         self.bytes_scattered += t.bytes_scattered;
         self.state_bytes_resident += t.state_bytes_resident;
@@ -472,6 +494,11 @@ impl Metrics {
     pub fn traffic_snapshot(&self) -> TrafficSnapshot {
         TrafficSnapshot {
             requests_completed: self.requests_completed,
+            // Admission lives in the front-end above the workers: a
+            // worker-level snapshot never carries shed accounting.
+            requests_shed: 0,
+            shed_by_class: [0; PRIORITY_CLASSES],
+            admitted_by_class: [0; PRIORITY_CLASSES],
             bytes_gathered: self.bytes_gathered,
             bytes_scattered: self.bytes_scattered,
             state_bytes_resident: self.state_bytes_resident,

@@ -17,7 +17,7 @@ pub mod snapshot;
 pub mod state;
 
 pub use batcher::{Action, Batcher, BatchPolicy, ChunkPlan};
-pub use metrics::{LatencyReport, Metrics, TrafficSnapshot, DWELL_BUCKETS};
+pub use metrics::{LatencyReport, Metrics, TrafficSnapshot, DWELL_BUCKETS, PRIORITY_CLASSES};
 pub use request::{InFlight, Request, Response, WorkloadGen};
 pub use scheduler::{Scheduler, StatePath};
 pub use server::{serve_all, ResilienceStats, Server};

@@ -186,6 +186,11 @@ pub struct Server {
     /// Traffic counters recovered from dead workers, folded into
     /// [`Server::traffic`].
     dead_traffic: TrafficSnapshot,
+    /// Front-end admission accounting (shed + per-class counters).
+    /// Lives on the router — workers never see a shed request — and is
+    /// folded into [`Server::traffic`] exactly like dead-worker
+    /// counters, so the lifecycle trace still reconciles.
+    frontend_traffic: TrafficSnapshot,
 }
 
 impl Server {
@@ -289,6 +294,7 @@ impl Server {
             dead_trace: Vec::new(),
             dead_latency: LatencyReport::default(),
             dead_traffic: TrafficSnapshot::default(),
+            frontend_traffic: TrafficSnapshot::default(),
         }
     }
 
@@ -517,15 +523,56 @@ impl Server {
 
     /// Route a request to an explicit worker (benchmarks use this to
     /// create hot-shard skew; production callers want [`Server::submit`]).
+    ///
+    /// The pin is validated against the dead-shard mask, exactly like
+    /// a stale session pin in [`Server::submit_session`]: a request
+    /// pinned onto a retired shard would bounce off its tombstone and
+    /// burn an orphan round-trip through the supervisor, so it is
+    /// re-routed to a live shard up front instead.
     pub fn submit_to(&mut self, req: Request, shard: usize) -> Receiver<Response> {
         self.drain_completions();
         if let Some(rx) = self.reject_duplicate(&req) {
             return rx;
         }
         let shard = shard.min(self.workers.len().saturating_sub(1));
-        self.shards.assign(req.id, shard);
+        let shard = if self.shards.is_dead(shard) && self.shards.has_live() {
+            self.shards.place(req.id)
+        } else {
+            self.shards.assign(req.id, shard);
+            shard
+        };
         self.router_record(req.id, shard, TraceEvent::Routed { shard: shard as u32 });
         self.send_submit(req, shard)
+    }
+
+    /// Terminal admission rejection from the serving front-end: the
+    /// request never reaches a worker. Records a `Submit` + `Failed`
+    /// span at the router (tick 0 — the router is clockless) so the
+    /// lifecycle trace still accounts for the request with exactly one
+    /// terminal event, bumps the shed counters folded into
+    /// [`Server::traffic`], and returns the request's exactly-one
+    /// terminal error [`Response`] for the caller to deliver.
+    ///
+    /// `class` is the request's priority-class index
+    /// (`< `[`super::metrics::PRIORITY_CLASSES`]; out-of-range indexes
+    /// still count toward the total, just not a per-class bucket).
+    pub fn shed_request(&mut self, id: u64, class: usize, reason: impl Into<String>) -> Response {
+        self.frontend_traffic.requests_shed += 1;
+        if let Some(c) = self.frontend_traffic.shed_by_class.get_mut(class) {
+            *c += 1;
+        }
+        self.router_record(id, 0, TraceEvent::Submit);
+        self.router_record(id, 0, TraceEvent::Failed);
+        Response::failure(id, reason)
+    }
+
+    /// Record a front-end admission in the per-class counters (the
+    /// admitted request itself flows through the normal
+    /// [`Server::submit`] path).
+    pub fn record_admitted(&mut self, class: usize) {
+        if let Some(c) = self.frontend_traffic.admitted_by_class.get_mut(class) {
+            *c += 1;
+        }
     }
 
     /// Submit a request under a session: follow-up turns route to the
@@ -688,7 +735,13 @@ impl Server {
     pub fn force_migrate(&mut self, seq: u64, to: usize) -> bool {
         self.drain_completions();
         let Some(from) = self.shards.shard_of(seq) else { return false };
-        if from == to || to >= self.workers.len() {
+        // A retired target must be refused up front: its tombstone's
+        // channel is still open, so the Attach send would *succeed*,
+        // this method would report true, and `ShardMap::apply` would
+        // record the request (and its tracked load) on a dead shard —
+        // until the tombstone's Down echo unwinds it a supervision
+        // round later.
+        if from == to || to >= self.workers.len() || self.shards.is_dead(to) {
             return false;
         }
         if self.migrate_between(seq, from, to) {
@@ -770,6 +823,7 @@ impl Server {
     /// trace reconciles against them exactly ([`crate::obs::reconcile`]).
     pub fn traffic(&self) -> TrafficSnapshot {
         let mut total = self.dead_traffic;
+        total.accumulate(&self.frontend_traffic);
         for w in &self.workers {
             let (tx, rx) = channel();
             if w.tx.send(Msg::Traffic(tx)).is_err() {
@@ -1568,6 +1622,128 @@ mod tests {
         let snap = server.traffic();
         assert_eq!(snap.requests_completed, 5, "dead worker's completions preserved");
         obs::reconcile(&events, &snap).unwrap();
+        server.shutdown();
+    }
+
+    /// Spin (pumping supervision) until `shard` is retired; panics
+    /// instead of hanging if the death never lands.
+    fn wait_retired(server: &mut Server, shard: usize) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !server.shard_map().is_dead(shard) {
+            server.supervise();
+            assert!(std::time::Instant::now() < deadline, "shard {shard} never retired");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn submit_to_reroutes_off_a_retired_shard() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // Shard 0 can never construct its engine and respawn is
+        // disabled, so it retires permanently; shard 1 is healthy.
+        let mk = |plan: FaultPlan| {
+            let inj = FaultInjector::new(plan);
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(
+            vec![mk(FaultPlan::Construct(u64::MAX)), mk(FaultPlan::Construct(0))],
+            BatchPolicy::default(),
+        );
+        server.set_max_restarts(0);
+        wait_retired(&mut server, 0);
+        // A submit pinned onto the retired shard must be re-routed to a
+        // live shard *at placement time* — not after bouncing off the
+        // tombstone and burning an orphan round-trip.
+        let rx = server.submit_to(Request { id: 7, prompt: vec![1, 2, 3], max_new_tokens: 4 }, 0);
+        assert_eq!(
+            server.shard_map().shard_of(7),
+            Some(1),
+            "pinned submit validated against the dead-shard mask"
+        );
+        let resp = recv_supervised(&mut server, &rx);
+        assert!(resp.error.is_none(), "{resp:?}");
+        assert_eq!(resp.tokens.len(), 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn force_migrate_refuses_a_retired_target() {
+        use crate::runtime::fault::{FaultInjector, FaultPlan};
+        // Shard 1 dies at construction (tombstone keeps its mailbox
+        // open — the Attach send would still succeed); shard 0 serves.
+        let mk = |plan: FaultPlan| {
+            let inj = FaultInjector::new(plan);
+            move || inj.wrap(MockEngine::new())
+        };
+        let mut server = Server::start(
+            vec![mk(FaultPlan::Construct(0)), mk(FaultPlan::Construct(u64::MAX))],
+            BatchPolicy::default(),
+        );
+        server.set_max_restarts(0);
+        wait_retired(&mut server, 1);
+        // Long generation keeps the request migratable while we probe.
+        let rx =
+            server.submit(Request { id: 3, prompt: vec![5, 1, 2], max_new_tokens: 4000 });
+        assert_eq!(server.shard_map().shard_of(3), Some(0));
+        for _ in 0..64 {
+            assert!(
+                !server.force_migrate(3, 1),
+                "migration onto a retired shard must be refused up front"
+            );
+            assert_ne!(
+                server.shard_map().shard_of(3),
+                Some(1),
+                "placement must never land on a retired shard"
+            );
+            assert_eq!(
+                server.shard_map().loads()[1],
+                0,
+                "tracked load must never land on a retired shard"
+            );
+        }
+        let resp = recv_supervised(&mut server, &rx);
+        assert!(resp.error.is_none(), "{resp:?}");
+        assert_eq!(resp.tokens.len(), 4000);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shed_requests_reconcile_as_terminal_failed_spans() {
+        use crate::obs;
+        let mut server =
+            Server::start(vec![|| Ok(MockEngine::new())], BatchPolicy::default());
+        let rx1 = server.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 3 });
+        server.record_admitted(0);
+        let shed1 = server.shed_request(1, 2, "admission: batch share exhausted");
+        assert!(shed1.is_error(), "shed returns the terminal error response");
+        assert_eq!(shed1.id, 1);
+        let rx2 = server.submit(Request { id: 2, prompt: vec![3, 4], max_new_tokens: 2 });
+        server.record_admitted(0);
+        // An out-of-range class still counts toward the total.
+        let shed2 = server.shed_request(3, 9, "bogus class");
+        assert!(shed2.is_error());
+        assert!(recv_supervised(&mut server, &rx1).error.is_none());
+        assert!(recv_supervised(&mut server, &rx2).error.is_none());
+
+        let t = server.traffic();
+        assert_eq!(t.requests_shed, 2);
+        assert_eq!(t.shed_by_class, [0, 0, 1]);
+        assert_eq!(t.admitted_by_class, [2, 0, 0]);
+        assert_eq!(t.requests_completed, 2);
+        // Shed requests appear in the lifecycle trace as Submit+Failed
+        // spans and the whole window still reconciles exactly.
+        let events = server.trace();
+        obs::reconcile(&events, &t).unwrap();
+        let spans = obs::assemble_spans(&events);
+        assert_eq!(spans.len(), 4);
+        for sp in &spans {
+            let terminal = sp.terminal().map(|e| e.name());
+            if sp.seq == 1 || sp.seq == 3 {
+                assert_eq!(terminal, Some("failed"), "shed span {} terminal", sp.seq);
+            } else {
+                assert_eq!(terminal, Some("completed"));
+            }
+        }
         server.shutdown();
     }
 }

@@ -1,0 +1,456 @@
+//! SLO-aware admission control for the network front-end.
+//!
+//! Sits *above* the coordinator: before a request reaches
+//! [`crate::coordinator::Server::submit`] the controller decides
+//! admit-or-shed from three signals, mirroring the same
+//! `WorkloadFeatures` inputs the planner consumes:
+//!
+//! 1. **Per-class token-budget shares** over a fixed admission window:
+//!    each [`Priority`] class may spend at most `share × (token_budget
+//!    × window_ticks)` prompt tokens per window, so a flood of Batch
+//!    traffic cannot crowd Interactive requests out of the batcher's
+//!    chunk budget.
+//! 2. **Deadline tracking** on the scheduler's deterministic
+//!    tick histograms ([`crate::coordinator::LatencyReport`]): a
+//!    first-token estimate past the class deadline sheds up front
+//!    rather than admitting work that will miss its SLO anyway, and a
+//!    measured p99 past the Interactive deadline puts the controller
+//!    into SLO-pressure mode where non-Interactive traffic sheds.
+//! 3. **Queue-depth / load backstops** on queued prompt tokens and
+//!    resident state bytes, bounding memory under overload no matter
+//!    how shares are configured.
+//!
+//! Every shed is a *terminal error* to the caller — the front-end
+//! turns it into exactly one [`super::wire::Frame::Error`] on the
+//! socket, and [`crate::coordinator::Server::shed_request`] records a
+//! `[Submit, Failed]` span so traces still reconcile.
+//!
+//! The controller is clock-agnostic: `now_tick` is whatever monotone
+//! counter the caller has (scheduler work ticks in the bench gate,
+//! router-loop iterations in the TCP server). Determinism in the
+//! gates comes from feeding it the deterministic tick clock.
+
+use crate::coordinator::{LatencyReport, PRIORITY_CLASSES};
+use crate::obs::Histogram;
+
+/// Request priority class. `Interactive` is the protected class the
+/// SLO gate measures; `Batch` is the first to shed under pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Interactive = 0,
+    Standard = 1,
+    Batch = 2,
+}
+
+impl Priority {
+    /// Number of classes; must equal
+    /// [`crate::coordinator::PRIORITY_CLASSES`] (the coordinator-side
+    /// constant the per-class counters are sized by).
+    pub const COUNT: usize = PRIORITY_CLASSES;
+
+    /// All classes, highest priority first.
+    pub const ALL: [Priority; Priority::COUNT] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Index into per-class arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Class for a wire-level index, if in range.
+    pub fn from_index(i: usize) -> Option<Priority> {
+        Priority::ALL.get(i).copied()
+    }
+
+    /// Lower-case class name (CLI and report labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a CLI spelling (`interactive` / `standard` / `batch`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        Priority::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why a request was refused admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Queued prompt tokens would exceed `max_queued_tokens`.
+    QueueFull,
+    /// The class spent its token share for this admission window.
+    ClassBudgetExhausted,
+    /// First-token estimate (or observed p99 under SLO pressure)
+    /// exceeds the class deadline.
+    DeadlineUnmeetable,
+    /// Resident state bytes or budget utilization past the load
+    /// backstop.
+    Overloaded,
+}
+
+impl ShedReason {
+    /// Stable label (wire error messages, shed counters, reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::ClassBudgetExhausted => "class_budget_exhausted",
+            ShedReason::DeadlineUnmeetable => "deadline_unmeetable",
+            ShedReason::Overloaded => "overloaded",
+        }
+    }
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Admission policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Fixed admission-window length in caller ticks. Shares reset at
+    /// each window boundary (`now_tick / window_ticks`).
+    pub window_ticks: u64,
+    /// Scheduler token budget per tick (the batcher's
+    /// `BatchPolicy::token_budget`); window capacity is
+    /// `token_budget × window_ticks` prompt tokens.
+    pub token_budget: u64,
+    /// Per-class fraction of the window capacity, indexed by
+    /// [`Priority::index`]. `1.0` = may use the whole window,
+    /// `0.0` = always shed.
+    pub shares: [f64; PRIORITY_CLASSES],
+    /// Per-class TTFT deadline in caller ticks; `u64::MAX` disables
+    /// deadline shedding for that class.
+    pub ttft_deadline_ticks: [u64; PRIORITY_CLASSES],
+    /// Backstop: maximum queued (admitted, not yet first-token)
+    /// prompt tokens, any class.
+    pub max_queued_tokens: u64,
+    /// Backstop: maximum resident state bytes reported by the load
+    /// signal before everything sheds as `Overloaded`.
+    pub max_resident_bytes: u64,
+}
+
+impl Default for AdmissionConfig {
+    /// Permissive: admits everything (conformance tests exercise the
+    /// wire path without shedding).
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            window_ticks: 64,
+            token_budget: u64::MAX / (64 * 2), // capacity never overflows
+            shares: [1.0; PRIORITY_CLASSES],
+            ttft_deadline_ticks: [u64::MAX; PRIORITY_CLASSES],
+            max_queued_tokens: u64::MAX,
+            max_resident_bytes: u64::MAX,
+        }
+    }
+}
+
+/// Instantaneous load observed by the caller, mirroring the planner's
+/// `WorkloadFeatures` signals (resident bytes, budget use) so the
+/// shed policy and the plan policy read the same gauges.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadSignal {
+    /// Requests queued or mid-prefill (not yet at first token).
+    pub queue_depth: u64,
+    /// Prompt tokens admitted but not yet at first token.
+    pub queued_prompt_tokens: u64,
+    /// Requests in steady-state decode.
+    pub running: u64,
+    /// Bytes of recurrent state resident across shards.
+    pub resident_state_bytes: u64,
+    /// Fraction of the per-tick token budget recently used (0..=1).
+    pub budget_utilization: f64,
+}
+
+/// Per-class admission state over fixed windows.
+#[derive(Debug)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    window_id: u64,
+    /// Prompt tokens admitted per class in the current window.
+    spent: [u64; PRIORITY_CLASSES],
+    admitted: [u64; PRIORITY_CLASSES],
+    shed: [u64; PRIORITY_CLASSES],
+    /// Wall-clock TTFT per class, for reports (`note_ttft`).
+    ttft_wall: [Histogram; PRIORITY_CLASSES],
+    /// Last observed p99 TTFT in ticks (from `note_latency`);
+    /// `0` until a report arrives.
+    last_p99_ttft_ticks: u64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController {
+            cfg,
+            window_id: 0,
+            spent: [0; PRIORITY_CLASSES],
+            admitted: [0; PRIORITY_CLASSES],
+            shed: [0; PRIORITY_CLASSES],
+            ttft_wall: [Histogram::new(); PRIORITY_CLASSES],
+            last_p99_ttft_ticks: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Decide admit-or-shed for one request. On `Err` the class shed
+    /// counter has been bumped; on `Ok` the class spent/admitted
+    /// counters have.
+    pub fn admit(
+        &mut self,
+        class: Priority,
+        prompt_tokens: u64,
+        now_tick: u64,
+        load: &LoadSignal,
+    ) -> Result<(), ShedReason> {
+        self.roll_window(now_tick);
+        let i = class.index();
+        let verdict = self.check(class, prompt_tokens, load);
+        match verdict {
+            Ok(()) => {
+                self.spent[i] = self.spent[i].saturating_add(prompt_tokens);
+                self.admitted[i] += 1;
+            }
+            Err(_) => self.shed[i] += 1,
+        }
+        verdict
+    }
+
+    fn check(
+        &self,
+        class: Priority,
+        prompt_tokens: u64,
+        load: &LoadSignal,
+    ) -> Result<(), ShedReason> {
+        let cfg = &self.cfg;
+        let i = class.index();
+        // Backstops first: they bound memory regardless of shares.
+        if load.queued_prompt_tokens.saturating_add(prompt_tokens) > cfg.max_queued_tokens {
+            return Err(ShedReason::QueueFull);
+        }
+        if load.resident_state_bytes > cfg.max_resident_bytes {
+            return Err(ShedReason::Overloaded);
+        }
+        // Deadline estimate: the batcher drains at most `token_budget`
+        // tokens per tick, so everything already queued plus this
+        // prompt needs at least this many ticks to reach first token.
+        let deadline = cfg.ttft_deadline_ticks[i];
+        if deadline != u64::MAX {
+            let backlog = load.queued_prompt_tokens.saturating_add(prompt_tokens);
+            let est_ticks = backlog.div_ceil(cfg.token_budget.max(1));
+            if est_ticks > deadline {
+                return Err(ShedReason::DeadlineUnmeetable);
+            }
+        }
+        // SLO pressure: observed p99 past the Interactive deadline
+        // means the system is behind — shed non-Interactive traffic
+        // until the protected class recovers.
+        let interactive_deadline = cfg.ttft_deadline_ticks[Priority::Interactive.index()];
+        if class != Priority::Interactive
+            && interactive_deadline != u64::MAX
+            && self.last_p99_ttft_ticks > interactive_deadline
+        {
+            return Err(ShedReason::DeadlineUnmeetable);
+        }
+        // Per-class share of the window's token capacity.
+        let capacity = (cfg.token_budget as f64) * (cfg.window_ticks as f64);
+        let allowance = cfg.shares[i].clamp(0.0, 1.0) * capacity;
+        if (self.spent[i].saturating_add(prompt_tokens)) as f64 > allowance {
+            return Err(ShedReason::ClassBudgetExhausted);
+        }
+        Ok(())
+    }
+
+    fn roll_window(&mut self, now_tick: u64) {
+        let wid = now_tick / self.cfg.window_ticks.max(1);
+        if wid != self.window_id {
+            self.window_id = wid;
+            self.spent = [0; PRIORITY_CLASSES];
+        }
+    }
+
+    /// Feed the scheduler's deterministic latency distributions; the
+    /// observed p99 TTFT (ticks) drives SLO-pressure shedding.
+    pub fn note_latency(&mut self, report: &LatencyReport) {
+        if report.ttft_ticks.count() > 0 {
+            self.last_p99_ttft_ticks = report.ttft_ticks.percentile(0.99);
+        }
+    }
+
+    /// Record one wall-clock TTFT observation for a class (seconds).
+    pub fn note_ttft(&mut self, class: Priority, secs: f64) {
+        self.ttft_wall[class.index()].record_secs(secs);
+    }
+
+    /// Requests admitted per class (all windows).
+    pub fn admitted(&self) -> [u64; PRIORITY_CLASSES] {
+        self.admitted
+    }
+
+    /// Requests shed per class (all windows).
+    pub fn shed(&self) -> [u64; PRIORITY_CLASSES] {
+        self.shed
+    }
+
+    /// Wall-clock TTFT histogram for one class.
+    pub fn ttft_wall(&self, class: Priority) -> &Histogram {
+        &self.ttft_wall[class.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdmissionConfig {
+        AdmissionConfig {
+            window_ticks: 10,
+            token_budget: 16,
+            shares: [1.0, 0.5, 0.25],
+            ttft_deadline_ticks: [u64::MAX; PRIORITY_CLASSES],
+            max_queued_tokens: u64::MAX,
+            max_resident_bytes: u64::MAX,
+        }
+    }
+
+    #[test]
+    fn priority_round_trips_and_matches_coordinator_width() {
+        assert_eq!(Priority::COUNT, PRIORITY_CLASSES);
+        for (i, p) in Priority::ALL.into_iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(Priority::from_index(i), Some(p));
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::from_index(PRIORITY_CLASSES), None);
+        assert_eq!(Priority::parse("extreme"), None);
+    }
+
+    #[test]
+    fn class_share_caps_spend_and_resets_at_window() {
+        let mut ac = AdmissionController::new(cfg());
+        let load = LoadSignal::default();
+        // Batch share: 0.25 * 160 = 40 tokens per window.
+        assert!(ac.admit(Priority::Batch, 32, 0, &load).is_ok());
+        assert_eq!(
+            ac.admit(Priority::Batch, 32, 1, &load),
+            Err(ShedReason::ClassBudgetExhausted)
+        );
+        // Interactive is unaffected by Batch's exhaustion.
+        assert!(ac.admit(Priority::Interactive, 32, 1, &load).is_ok());
+        // Next window: Batch spend resets.
+        assert!(ac.admit(Priority::Batch, 32, 10, &load).is_ok());
+        assert_eq!(ac.admitted(), [1, 0, 2]);
+        assert_eq!(ac.shed(), [0, 0, 1]);
+    }
+
+    #[test]
+    fn zero_share_always_sheds() {
+        let mut c = cfg();
+        c.shares[Priority::Batch.index()] = 0.0;
+        let mut ac = AdmissionController::new(c);
+        let load = LoadSignal::default();
+        for tick in 0..25 {
+            assert_eq!(
+                ac.admit(Priority::Batch, 1, tick, &load),
+                Err(ShedReason::ClassBudgetExhausted)
+            );
+            assert!(ac.admit(Priority::Interactive, 1, tick, &load).is_ok());
+        }
+        assert_eq!(ac.shed()[Priority::Batch.index()], 25);
+    }
+
+    #[test]
+    fn queued_token_backstop_sheds_any_class() {
+        let mut c = cfg();
+        c.max_queued_tokens = 100;
+        let mut ac = AdmissionController::new(c);
+        let load = LoadSignal { queued_prompt_tokens: 90, ..LoadSignal::default() };
+        assert_eq!(
+            ac.admit(Priority::Interactive, 32, 0, &load),
+            Err(ShedReason::QueueFull)
+        );
+        assert!(ac.admit(Priority::Interactive, 10, 0, &load).is_ok());
+    }
+
+    #[test]
+    fn resident_bytes_backstop_sheds_as_overloaded() {
+        let mut c = cfg();
+        c.max_resident_bytes = 1 << 20;
+        let mut ac = AdmissionController::new(c);
+        let load = LoadSignal { resident_state_bytes: (1 << 20) + 1, ..LoadSignal::default() };
+        assert_eq!(ac.admit(Priority::Batch, 1, 0, &load), Err(ShedReason::Overloaded));
+    }
+
+    #[test]
+    fn deadline_estimate_sheds_when_backlog_is_too_deep() {
+        let mut c = cfg();
+        // 16 tokens/tick, deadline 4 ticks => at most 64 backlog tokens.
+        c.ttft_deadline_ticks[Priority::Interactive.index()] = 4;
+        let mut ac = AdmissionController::new(c);
+        let deep = LoadSignal { queued_prompt_tokens: 80, ..LoadSignal::default() };
+        assert_eq!(
+            ac.admit(Priority::Interactive, 16, 0, &deep),
+            Err(ShedReason::DeadlineUnmeetable)
+        );
+        let shallow = LoadSignal { queued_prompt_tokens: 16, ..LoadSignal::default() };
+        assert!(ac.admit(Priority::Interactive, 16, 0, &shallow).is_ok());
+    }
+
+    #[test]
+    fn slo_pressure_sheds_non_interactive_only() {
+        let mut c = cfg();
+        c.ttft_deadline_ticks[Priority::Interactive.index()] = 8;
+        let mut ac = AdmissionController::new(c);
+        let load = LoadSignal::default();
+        // Observed p99 TTFT of 20 ticks blows the 8-tick deadline.
+        let mut report = LatencyReport::default();
+        for _ in 0..10 {
+            report.ttft_ticks.record(20);
+        }
+        ac.note_latency(&report);
+        assert_eq!(
+            ac.admit(Priority::Batch, 1, 0, &load),
+            Err(ShedReason::DeadlineUnmeetable)
+        );
+        assert_eq!(
+            ac.admit(Priority::Standard, 1, 0, &load),
+            Err(ShedReason::DeadlineUnmeetable)
+        );
+        assert!(ac.admit(Priority::Interactive, 1, 0, &load).is_ok());
+        // Recovery: a healthy report lifts the pressure.
+        let mut healthy = LatencyReport::default();
+        for _ in 0..10 {
+            healthy.ttft_ticks.record(2);
+        }
+        ac.note_latency(&healthy);
+        assert!(ac.admit(Priority::Batch, 1, 1, &load).is_ok());
+    }
+
+    #[test]
+    fn default_config_admits_everything() {
+        let mut ac = AdmissionController::new(AdmissionConfig::default());
+        let load = LoadSignal {
+            queue_depth: 1_000,
+            queued_prompt_tokens: 1 << 30,
+            running: 1_000,
+            resident_state_bytes: 1 << 40,
+            budget_utilization: 1.0,
+        };
+        for (p, tick) in Priority::ALL.into_iter().zip(0u64..) {
+            assert!(ac.admit(p, 1 << 20, tick, &load).is_ok());
+        }
+    }
+}

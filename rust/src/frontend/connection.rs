@@ -1,0 +1,456 @@
+//! TCP accept loop, per-connection streaming, and the router loop
+//! that bridges sockets to the coordinator.
+//!
+//! Thread layout per [`serve`] call:
+//!
+//! ```text
+//!             accept thread ── one per listener
+//!            /      |
+//!      reader    writer      ── one pair per connection
+//!          \        ^
+//!   ConnEvent       | encoded frames (mpsc)
+//!            \      |
+//!          router loop        ── the calling thread; owns the Server
+//!                               and the AdmissionController
+//! ```
+//!
+//! * The **reader** validates the client's [`Frame::Hello`] (magic +
+//!   version), answers with the server's Hello, then forwards each
+//!   [`Frame::Submit`] to the router. Any wire error is answered with
+//!   a terminal [`Frame::Error`] and the connection closes — malformed
+//!   bytes never reach the coordinator.
+//! * The **writer** owns the socket's write half and drains an mpsc of
+//!   pre-encoded frames, so the router and the reader can both reply
+//!   without sharing a stream lock.
+//! * The **router loop** admits or sheds each submit, forwards
+//!   admitted requests to [`Server::submit`], and polls the per-request
+//!   response sinks — streaming each generated token as a
+//!   [`Frame::Token`] followed by exactly one terminal
+//!   ([`Frame::Done`] or [`Frame::Error`]) per submitted id. Shed
+//!   requests take the [`Server::shed_request`] path so their spans
+//!   still reconcile against the traffic counters.
+//!
+//! The exactly-one-terminal-message contract the coordinator upholds
+//! in-process therefore extends end to end over the socket: every
+//! submitted id receives exactly one Done or Error frame, including
+//! sheds, duplicates and supervision failures.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Duration;
+
+use crate::coordinator::{Request, Response, Server, PRIORITY_CLASSES};
+
+use super::admission::{AdmissionConfig, AdmissionController, LoadSignal, Priority};
+use super::wire::{encode_frame, read_frame, write_frame, Frame, WireError, PROTOCOL_VERSION};
+
+/// Front-end serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontendConfig {
+    /// Admission policy (shares, deadlines, backstops).
+    pub admission: AdmissionConfig,
+    /// Stop accepting after this many connections and return once all
+    /// of them have drained; `None` serves forever (daemon mode).
+    pub max_connections: Option<usize>,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> FrontendConfig {
+        FrontendConfig { admission: AdmissionConfig::default(), max_connections: None }
+    }
+}
+
+/// What the front-end did over one [`serve`] call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontendStats {
+    /// Connections accepted.
+    pub connections: u64,
+    /// Submit frames received (admitted or shed).
+    pub requests: u64,
+    /// Requests admitted per priority class.
+    pub admitted: [u64; PRIORITY_CLASSES],
+    /// Requests shed per priority class.
+    pub shed: [u64; PRIORITY_CLASSES],
+    /// Terminal Error frames written (sheds, duplicates, failures).
+    pub errors: u64,
+}
+
+/// Reader/accept → router messages.
+enum ConnEvent {
+    /// New connection; `out` feeds its writer thread.
+    Opened { conn: u64, out: Sender<Vec<u8>> },
+    /// A validated Submit frame from connection `conn`.
+    Submit { conn: u64, id: u64, priority: u32, max_new_tokens: u32, prompt: Vec<i32> },
+    /// Reader finished (EOF or wire error already answered).
+    Closed { conn: u64 },
+    /// Listener stopped accepting (socket error or max reached).
+    AcceptDone,
+}
+
+/// An admitted request awaiting its terminal response.
+struct Pending {
+    rx: Receiver<Response>,
+    class: Priority,
+    prompt_tokens: u64,
+    out: Sender<Vec<u8>>,
+}
+
+/// Serve connections from `listener`, bridging to `server`, until
+/// `cfg.max_connections` connections have fully drained (or forever if
+/// `None`). Returns the server (for trace/traffic inspection and
+/// shutdown) and the front-end's accounting.
+pub fn serve(
+    listener: TcpListener,
+    mut server: Server,
+    cfg: FrontendConfig,
+) -> std::io::Result<(Server, FrontendStats)> {
+    let (ev_tx, ev_rx) = channel::<ConnEvent>();
+    let max_conns = cfg.max_connections;
+    let accept_tx = ev_tx.clone();
+    let accept = std::thread::spawn(move || {
+        accept_loop(listener, max_conns, accept_tx);
+    });
+    // The router keeps no clone of ev_tx: once the accept loop and all
+    // readers finish, the channel disconnects and the drain loop can
+    // tell "no events now" from "no events ever again".
+    drop(ev_tx);
+
+    let mut admission = AdmissionController::new(cfg.admission);
+    let mut stats = FrontendStats::default();
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut conn_out: HashMap<u64, Sender<Vec<u8>>> = HashMap::new();
+    let mut queued_tokens: u64 = 0;
+    let mut opened: u64 = 0;
+    let mut closed: u64 = 0;
+    let mut accept_done = false;
+    let mut events_live = true;
+    let mut now_tick: u64 = 0;
+
+    loop {
+        // Drain control/submit events without blocking the poll loop.
+        while events_live {
+            match ev_rx.try_recv() {
+                Ok(ConnEvent::Opened { conn, out }) => {
+                    opened += 1;
+                    stats.connections += 1;
+                    conn_out.insert(conn, out);
+                }
+                Ok(ConnEvent::Submit { conn, id, priority, max_new_tokens, prompt }) => {
+                    let Some(out) = conn_out.get(&conn) else { continue };
+                    stats.requests += 1;
+                    // Decode validated `priority < PRIORITY_CLASSES`.
+                    let class = Priority::from_index(priority as usize)
+                        .unwrap_or(Priority::Batch);
+                    let load = load_signal(&server, &pending, queued_tokens, &cfg.admission);
+                    match admission.admit(class, prompt.len() as u64, now_tick, &load) {
+                        Ok(()) => {
+                            stats.admitted[class.index()] += 1;
+                            server.record_admitted(class.index());
+                            let prompt_tokens = prompt.len() as u64;
+                            queued_tokens += prompt_tokens;
+                            let rx = server.submit(Request {
+                                id,
+                                prompt,
+                                max_new_tokens: max_new_tokens as usize,
+                            });
+                            pending.insert(
+                                id,
+                                Pending { rx, class, prompt_tokens, out: out.clone() },
+                            );
+                        }
+                        Err(reason) => {
+                            stats.shed[class.index()] += 1;
+                            stats.errors += 1;
+                            let resp = server.shed_request(
+                                id,
+                                class.index(),
+                                format!("shed: {reason}"),
+                            );
+                            let frame = Frame::Error {
+                                id,
+                                reason: resp.error.unwrap_or_else(|| format!("shed: {reason}")),
+                            };
+                            let _ = out.send(encode_frame(&frame));
+                        }
+                    }
+                }
+                Ok(ConnEvent::Closed { conn }) => {
+                    closed += 1;
+                    // Pending entries hold their own sender clones, so
+                    // the writer stays alive until its responses drain.
+                    conn_out.remove(&conn);
+                }
+                Ok(ConnEvent::AcceptDone) => accept_done = true,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    events_live = false;
+                    accept_done = true;
+                }
+            }
+        }
+
+        // Pump fault supervision while requests are in flight.
+        server.supervise();
+
+        // Poll response sinks: stream tokens, then exactly one terminal.
+        let ready: Vec<(u64, Option<Response>)> = pending
+            .iter()
+            .filter_map(|(&id, p)| match p.rx.try_recv() {
+                Ok(resp) => Some((id, Some(resp))),
+                // Sink dropped without a response: duplicate submit
+                // (the server keeps the original's sink) or a hole in
+                // supervision; either way the client still gets its
+                // one terminal frame.
+                Err(TryRecvError::Disconnected) => Some((id, None)),
+                Err(TryRecvError::Empty) => None,
+            })
+            .collect();
+        for (id, resp) in ready {
+            let p = pending.remove(&id).expect("ready id is pending");
+            queued_tokens = queued_tokens.saturating_sub(p.prompt_tokens);
+            match resp {
+                Some(resp) if resp.error.is_none() => {
+                    admission.note_ttft(p.class, resp.ttft);
+                    for &t in &resp.tokens {
+                        let _ = p.out.send(encode_frame(&Frame::Token { id, token: t }));
+                    }
+                    let _ = p.out.send(encode_frame(&Frame::Done {
+                        id,
+                        n_tokens: resp.tokens.len() as u32,
+                        ttft_us: (resp.ttft * 1e6).round().max(0.0) as u32,
+                        total_us: (resp.total * 1e6).round().max(0.0) as u32,
+                    }));
+                }
+                Some(resp) => {
+                    stats.errors += 1;
+                    let reason =
+                        resp.error.unwrap_or_else(|| "request failed".to_string());
+                    let _ = p.out.send(encode_frame(&Frame::Error { id, reason }));
+                }
+                None => {
+                    stats.errors += 1;
+                    let _ = p.out.send(encode_frame(&Frame::Error {
+                        id,
+                        reason: "request dropped (duplicate id?)".into(),
+                    }));
+                }
+            }
+        }
+
+        now_tick += 1;
+        // Refresh the SLO-pressure signal from the scheduler's
+        // deterministic tick histograms once per admission window.
+        if now_tick % cfg.admission.window_ticks.max(1) == 0 {
+            admission.note_latency(&server.latency());
+        }
+
+        let drained = pending.is_empty();
+        if accept_done && opened == closed && drained && !events_live {
+            break;
+        }
+        if let Some(n) = cfg.max_connections {
+            if accept_done && opened == n as u64 && opened == closed && drained {
+                break;
+            }
+        }
+        if drained && !accept_done {
+            // Idle: nothing in flight, wait for the next event rather
+            // than spinning. Wake periodically to re-check liveness.
+            std::thread::sleep(Duration::from_micros(500));
+        } else if !drained {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+
+    drop(conn_out);
+    let _ = accept.join();
+    Ok((server, stats))
+}
+
+fn accept_loop(listener: TcpListener, max: Option<usize>, ev_tx: Sender<ConnEvent>) {
+    let mut accepted = 0usize;
+    loop {
+        if let Some(n) = max {
+            if accepted >= n {
+                break;
+            }
+        }
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => break,
+        };
+        accepted += 1;
+        let conn = accepted as u64;
+        let (out_tx, out_rx) = channel::<Vec<u8>>();
+        let write_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        std::thread::spawn(move || writer_loop(write_half, out_rx));
+        if ev_tx.send(ConnEvent::Opened { conn, out: out_tx.clone() }).is_err() {
+            break;
+        }
+        let reader_tx = ev_tx.clone();
+        std::thread::spawn(move || {
+            reader_loop(stream, conn, out_tx, reader_tx);
+        });
+    }
+    let _ = ev_tx.send(ConnEvent::AcceptDone);
+}
+
+/// Drain pre-encoded frames onto the socket. Exits when every sender
+/// (reader, router, pending entries) has dropped, or on write error.
+fn writer_loop(mut stream: TcpStream, out_rx: Receiver<Vec<u8>>) {
+    while let Ok(bytes) = out_rx.recv() {
+        if stream.write_all(&bytes).is_err() {
+            break;
+        }
+    }
+    let _ = stream.flush();
+}
+
+/// Per-connection read half: handshake, then forward Submits.
+fn reader_loop(
+    mut stream: TcpStream,
+    conn: u64,
+    out: Sender<Vec<u8>>,
+    ev_tx: Sender<ConnEvent>,
+) {
+    match read_frame(&mut stream) {
+        Ok(Frame::Hello { .. }) => {
+            // decode already enforced magic + version; answer in kind.
+            let _ = out.send(encode_frame(&Frame::Hello { version: PROTOCOL_VERSION }));
+            loop {
+                match read_frame(&mut stream) {
+                    Ok(Frame::Submit { id, priority, max_new_tokens, prompt }) => {
+                        if ev_tx
+                            .send(ConnEvent::Submit { conn, id, priority, max_new_tokens, prompt })
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Ok(_) => {
+                        let _ = out.send(encode_frame(&Frame::Error {
+                            id: 0,
+                            reason: "protocol error: expected Submit".into(),
+                        }));
+                        break;
+                    }
+                    Err(WireError::Truncated) => break, // clean EOF
+                    Err(e) => {
+                        let _ = out.send(encode_frame(&Frame::Error {
+                            id: 0,
+                            reason: format!("protocol error: {e}"),
+                        }));
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(_) => {
+            let _ = out.send(encode_frame(&Frame::Error {
+                id: 0,
+                reason: "protocol error: expected Hello".into(),
+            }));
+        }
+        Err(WireError::Truncated) => {} // connected then closed
+        Err(e) => {
+            let _ = out.send(encode_frame(&Frame::Error {
+                id: 0,
+                reason: format!("protocol error: {e}"),
+            }));
+        }
+    }
+    let _ = ev_tx.send(ConnEvent::Closed { conn });
+}
+
+fn load_signal(
+    server: &Server,
+    pending: &HashMap<u64, Pending>,
+    queued_tokens: u64,
+    cfg: &AdmissionConfig,
+) -> LoadSignal {
+    let loads = server.loads();
+    let running: u64 = loads.iter().map(|l| l.running as u64).sum();
+    let waiting: u64 = loads.iter().map(|l| l.waiting as u64).sum();
+    let resident: u64 = loads.iter().map(|l| l.resident_bytes).sum();
+    LoadSignal {
+        queue_depth: waiting.max(pending.len() as u64),
+        queued_prompt_tokens: queued_tokens,
+        running,
+        resident_state_bytes: resident,
+        budget_utilization: (running as f64 / cfg.token_budget.max(1) as f64).min(1.0),
+    }
+}
+
+/// One client-side request outcome.
+#[derive(Debug, Clone)]
+pub struct ClientReply {
+    pub id: u64,
+    /// Tokens streamed before the terminal frame.
+    pub tokens: Vec<i32>,
+    /// `None` on [`Frame::Done`]; the error reason on [`Frame::Error`].
+    pub error: Option<String>,
+    /// Server-reported microseconds to first token (0 on error).
+    pub ttft_us: u32,
+}
+
+/// Connect to a front-end, handshake, pipeline every request, and
+/// collect one terminal reply per id. Verifies the streamed token
+/// count matches each Done frame's `n_tokens`. Replies come back in
+/// submission order.
+pub fn run_client(
+    addr: &str,
+    reqs: &[(Request, Priority)],
+    timeout: Option<Duration>,
+) -> Result<Vec<ClientReply>, WireError> {
+    let mut stream = TcpStream::connect(addr).map_err(WireError::from)?;
+    stream.set_read_timeout(timeout).map_err(WireError::from)?;
+    write_frame(&mut stream, &Frame::Hello { version: PROTOCOL_VERSION })?;
+    match read_frame(&mut stream)? {
+        Frame::Hello { .. } => {}
+        _ => return Err(WireError::BadPayload("server did not answer Hello")),
+    }
+    for (req, prio) in reqs {
+        write_frame(
+            &mut stream,
+            &Frame::Submit {
+                id: req.id,
+                priority: prio.index() as u32,
+                max_new_tokens: req.max_new_tokens as u32,
+                prompt: req.prompt.clone(),
+            },
+        )?;
+    }
+    let mut tokens: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut done: HashMap<u64, ClientReply> = HashMap::new();
+    while done.len() < reqs.len() {
+        match read_frame(&mut stream)? {
+            Frame::Token { id, token } => tokens.entry(id).or_default().push(token),
+            Frame::Done { id, n_tokens, ttft_us, .. } => {
+                let toks = tokens.remove(&id).unwrap_or_default();
+                if toks.len() as u32 != n_tokens {
+                    return Err(WireError::BadPayload("Done n_tokens != streamed tokens"));
+                }
+                done.insert(id, ClientReply { id, tokens: toks, error: None, ttft_us });
+            }
+            Frame::Error { id, reason } => {
+                let toks = tokens.remove(&id).unwrap_or_default();
+                done.insert(
+                    id,
+                    ClientReply { id, tokens: toks, error: Some(reason), ttft_us: 0 },
+                );
+            }
+            Frame::Hello { .. } | Frame::Submit { .. } => {
+                return Err(WireError::BadPayload("unexpected frame from server"));
+            }
+        }
+    }
+    Ok(reqs
+        .iter()
+        .map(|(r, _)| done.remove(&r.id).expect("one terminal per submitted id"))
+        .collect())
+}

@@ -1,0 +1,33 @@
+//! The network serving front-end: framed wire protocol, TCP accept
+//! loop with per-connection streaming, and SLO-aware admission
+//! control.
+//!
+//! This layer sits strictly *above* the coordinator — it speaks
+//! [`crate::coordinator::Server`]'s `submit`/sink API and never
+//! reaches into worker internals. Three pieces:
+//!
+//! * [`wire`] — a std-only length-prefixed frame protocol with a
+//!   version-carrying Hello header; decoding is total (typed
+//!   [`WireError`]s, never panics).
+//! * [`admission`] — priority classes with per-class token-budget
+//!   shares over fixed windows, deadline tracking on the scheduler's
+//!   deterministic tick histograms, and queue-depth/resident-bytes
+//!   load backstops mirroring the planner's `WorkloadFeatures`
+//!   signals.
+//! * [`connection`] — the accept loop, per-connection reader/writer
+//!   threads, and the router loop bridging sockets to the server
+//!   while preserving the exactly-one-terminal-message contract end
+//!   to end over the wire (shed requests included).
+
+pub mod admission;
+pub mod connection;
+pub mod wire;
+
+pub use admission::{
+    AdmissionConfig, AdmissionController, LoadSignal, Priority, ShedReason,
+};
+pub use connection::{run_client, serve, ClientReply, FrontendConfig, FrontendStats};
+pub use wire::{
+    decode_frame, encode_frame, read_frame, write_frame, Frame, WireError, HELLO_MAGIC,
+    MAX_FRAME_LEN, PROTOCOL_VERSION,
+};

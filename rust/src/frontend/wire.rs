@@ -1,0 +1,404 @@
+//! Length-prefixed framed wire protocol for the network front-end.
+//!
+//! Every frame is `[len: u32 LE][kind: u32 LE][payload...]` where
+//! `len` counts the kind word plus the payload (so `len >= 4`), is a
+//! multiple of 4 (frames are 4-byte aligned end to end — variable
+//! fields carry explicit byte lengths and pad with zeros), and is
+//! bounded by [`MAX_FRAME_LEN`]. The first frame in each direction is
+//! a version-carrying [`Frame::Hello`] header: magic + protocol
+//! version, rejected with [`WireError::VersionMismatch`] on skew so a
+//! stale client fails loudly at the handshake instead of mis-parsing
+//! mid-stream.
+//!
+//! Decoding is **total**: truncated, oversized, misaligned,
+//! unknown-kind, bad-magic and version-mismatch inputs all return a
+//! typed [`WireError`] — never a panic — which the property suite
+//! (`rust/tests/frontend_wire.rs`) drives with adversarial bytes.
+
+use std::io::{Read, Write};
+
+/// Protocol version carried by the [`Frame::Hello`] header frame.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Magic word in the Hello frame (`"MBLY"` little-endian) — catches a
+/// client speaking a different protocol entirely before any state is
+/// allocated for it.
+pub const HELLO_MAGIC: u32 = 0x594c_424d;
+
+/// Upper bound on `len` (kind + payload bytes). Generous for prompts
+/// (a quarter-million tokens) while bounding what a hostile
+/// length-prefix can make the server allocate.
+pub const MAX_FRAME_LEN: u32 = 1 << 20;
+
+/// Frame kind discriminants on the wire.
+const KIND_HELLO: u32 = 1;
+const KIND_SUBMIT: u32 = 2;
+const KIND_TOKEN: u32 = 3;
+const KIND_DONE: u32 = 4;
+const KIND_ERROR: u32 = 5;
+
+/// One protocol frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    /// Version-carrying header; first frame in each direction.
+    Hello { version: u32 },
+    /// Client → server: one generation request.
+    Submit {
+        id: u64,
+        /// Priority-class index (see [`super::Priority`]); validated
+        /// against [`crate::coordinator::PRIORITY_CLASSES`] at decode.
+        priority: u32,
+        max_new_tokens: u32,
+        prompt: Vec<i32>,
+    },
+    /// Server → client: one generated token of request `id`.
+    Token { id: u64, token: i32 },
+    /// Server → client: terminal success. `n_tokens` must equal the
+    /// Token frames streamed before it (the client checks).
+    Done { id: u64, n_tokens: u32, ttft_us: u32, total_us: u32 },
+    /// Server → client: terminal failure (admission shed, fault-path
+    /// exhaustion, duplicate id, ...). Exactly one of Done/Error per
+    /// submitted id — the wire form of the exactly-one-terminal-message
+    /// contract.
+    Error { id: u64, reason: String },
+}
+
+/// Typed decode/IO failure. Every malformed input maps here; decoding
+/// never panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the declared frame length.
+    Truncated,
+    /// Declared length exceeds [`MAX_FRAME_LEN`].
+    Oversized { len: u32 },
+    /// Declared length below the 4-byte kind word or not 4-byte
+    /// aligned.
+    Misaligned { len: u32 },
+    /// Unknown frame-kind discriminant.
+    UnknownKind(u32),
+    /// Hello carried a different protocol version.
+    VersionMismatch { got: u32, want: u32 },
+    /// Hello magic word mismatch (not this protocol at all).
+    BadMagic(u32),
+    /// Structurally invalid payload for the declared kind.
+    BadPayload(&'static str),
+    /// Underlying socket error (kind only — keeps the error `Eq` and
+    /// cheap to match in tests).
+    Io(std::io::ErrorKind),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "frame truncated"),
+            WireError::Oversized { len } => {
+                write!(f, "frame length {len} exceeds max {MAX_FRAME_LEN}")
+            }
+            WireError::Misaligned { len } => {
+                write!(f, "frame length {len} not 4-byte aligned (or below the kind word)")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::VersionMismatch { got, want } => {
+                write!(f, "protocol version mismatch: got {got}, want {want}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad hello magic {m:#010x}"),
+            WireError::BadPayload(what) => write!(f, "bad frame payload: {what}"),
+            WireError::Io(kind) => write!(f, "io error: {kind:?}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => WireError::Truncated,
+            kind => WireError::Io(kind),
+        }
+    }
+}
+
+/// Little-endian scratch writer over a byte vec.
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Little-endian cursor over a payload slice; every read is
+/// bounds-checked and fails as [`WireError::Truncated`].
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+}
+
+/// Round up to the next multiple of 4 (frame alignment).
+fn pad4(n: usize) -> usize {
+    (n + 3) & !3
+}
+
+impl Frame {
+    fn kind(&self) -> u32 {
+        match self {
+            Frame::Hello { .. } => KIND_HELLO,
+            Frame::Submit { .. } => KIND_SUBMIT,
+            Frame::Token { .. } => KIND_TOKEN,
+            Frame::Done { .. } => KIND_DONE,
+            Frame::Error { .. } => KIND_ERROR,
+        }
+    }
+}
+
+/// Encode one frame, length prefix included.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut body = Enc(Vec::new());
+    body.u32(frame.kind());
+    match frame {
+        Frame::Hello { version } => {
+            body.u32(HELLO_MAGIC);
+            body.u32(*version);
+        }
+        Frame::Submit { id, priority, max_new_tokens, prompt } => {
+            body.u64(*id);
+            body.u32(*priority);
+            body.u32(*max_new_tokens);
+            body.u32(prompt.len() as u32);
+            for &t in prompt {
+                body.i32(t);
+            }
+        }
+        Frame::Token { id, token } => {
+            body.u64(*id);
+            body.i32(*token);
+        }
+        Frame::Done { id, n_tokens, ttft_us, total_us } => {
+            body.u64(*id);
+            body.u32(*n_tokens);
+            body.u32(*ttft_us);
+            body.u32(*total_us);
+        }
+        Frame::Error { id, reason } => {
+            body.u64(*id);
+            let bytes = reason.as_bytes();
+            body.u32(bytes.len() as u32);
+            body.0.extend_from_slice(bytes);
+            // Zero-pad the variable tail to keep the frame 4-aligned.
+            body.0.resize(pad4(body.0.len()), 0);
+        }
+    }
+    let mut out = Enc(Vec::with_capacity(4 + body.0.len()));
+    out.u32(body.0.len() as u32);
+    out.0.extend_from_slice(&body.0);
+    out.0
+}
+
+/// Decode one frame from the front of `buf`. Returns the frame and the
+/// total bytes consumed (prefix included) so a caller over a byte
+/// stream can advance. All malformed input returns a [`WireError`].
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+    let mut d = Dec { buf, pos: 0 };
+    let len = d.u32()?;
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversized { len });
+    }
+    if len < 4 || len % 4 != 0 {
+        return Err(WireError::Misaligned { len });
+    }
+    let body = d.take(len as usize)?;
+    let frame = decode_body(body)?;
+    Ok((frame, 4 + len as usize))
+}
+
+/// Decode a frame body (kind word + payload, no length prefix).
+fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
+    let mut d = Dec { buf: body, pos: 0 };
+    let kind = d.u32()?;
+    match kind {
+        KIND_HELLO => {
+            let magic = d.u32()?;
+            if magic != HELLO_MAGIC {
+                return Err(WireError::BadMagic(magic));
+            }
+            let version = d.u32()?;
+            if version != PROTOCOL_VERSION {
+                return Err(WireError::VersionMismatch { got: version, want: PROTOCOL_VERSION });
+            }
+            Ok(Frame::Hello { version })
+        }
+        KIND_SUBMIT => {
+            let id = d.u64()?;
+            let priority = d.u32()?;
+            if priority >= crate::coordinator::PRIORITY_CLASSES as u32 {
+                return Err(WireError::BadPayload("priority class out of range"));
+            }
+            let max_new_tokens = d.u32()?;
+            if max_new_tokens > MAX_FRAME_LEN {
+                return Err(WireError::BadPayload("max_new_tokens implausibly large"));
+            }
+            let n = d.u32()? as usize;
+            let raw = d.take(n.checked_mul(4).ok_or(WireError::Truncated)?)?;
+            let prompt = raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect();
+            Ok(Frame::Submit { id, priority, max_new_tokens, prompt })
+        }
+        KIND_TOKEN => {
+            let id = d.u64()?;
+            let token = d.i32()?;
+            Ok(Frame::Token { id, token })
+        }
+        KIND_DONE => {
+            let id = d.u64()?;
+            let n_tokens = d.u32()?;
+            let ttft_us = d.u32()?;
+            let total_us = d.u32()?;
+            Ok(Frame::Done { id, n_tokens, ttft_us, total_us })
+        }
+        KIND_ERROR => {
+            let id = d.u64()?;
+            let n = d.u32()? as usize;
+            if n > body.len() {
+                return Err(WireError::Truncated);
+            }
+            let raw = d.take(n)?;
+            let reason = std::str::from_utf8(raw)
+                .map_err(|_| WireError::BadPayload("error reason not utf-8"))?
+                .to_string();
+            Ok(Frame::Error { id, reason })
+        }
+        other => Err(WireError::UnknownKind(other)),
+    }
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> {
+    w.write_all(&encode_frame(frame))?;
+    Ok(())
+}
+
+/// Read one frame from a stream. Length-prefix validation happens
+/// *before* the body allocation, so a hostile prefix cannot make the
+/// reader allocate more than [`MAX_FRAME_LEN`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix)?;
+    let len = u32::from_le_bytes(prefix);
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversized { len });
+    }
+    if len < 4 || len % 4 != 0 {
+        return Err(WireError::Misaligned { len });
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    decode_body(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: Frame) {
+        let bytes = encode_frame(&f);
+        assert_eq!(bytes.len() % 4, 0, "frames are 4-byte aligned: {f:?}");
+        let (got, used) = decode_frame(&bytes).expect("round trip");
+        assert_eq!(got, f);
+        assert_eq!(used, bytes.len(), "decode consumes the whole frame");
+        // Stream form agrees with the buffer form.
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert_eq!(read_frame(&mut cursor).expect("stream round trip"), f);
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        round_trip(Frame::Hello { version: PROTOCOL_VERSION });
+        round_trip(Frame::Submit {
+            id: 42,
+            priority: 2,
+            max_new_tokens: 17,
+            prompt: vec![-1, 0, 1, i32::MAX, i32::MIN],
+        });
+        round_trip(Frame::Submit { id: 0, priority: 0, max_new_tokens: 0, prompt: vec![] });
+        round_trip(Frame::Token { id: u64::MAX, token: -7 });
+        round_trip(Frame::Done { id: 9, n_tokens: 3, ttft_us: 120, total_us: 950 });
+        round_trip(Frame::Error { id: 5, reason: "shed: batch share exhausted".into() });
+        round_trip(Frame::Error { id: 5, reason: String::new() });
+        // Reason lengths around the padding boundary.
+        for n in 0..9 {
+            round_trip(Frame::Error { id: 1, reason: "x".repeat(n) });
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut bytes = encode_frame(&Frame::Hello { version: PROTOCOL_VERSION });
+        // Patch the version word (last 4 bytes of the hello payload).
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&(PROTOCOL_VERSION + 1).to_le_bytes());
+        assert_eq!(
+            decode_frame(&bytes).unwrap_err(),
+            WireError::VersionMismatch { got: PROTOCOL_VERSION + 1, want: PROTOCOL_VERSION }
+        );
+    }
+
+    #[test]
+    fn corrupt_length_prefixes_are_rejected() {
+        let good = encode_frame(&Frame::Token { id: 1, token: 2 });
+        // Oversized declared length.
+        let mut b = good.clone();
+        b[..4].copy_from_slice(&(MAX_FRAME_LEN + 4).to_le_bytes());
+        assert!(matches!(decode_frame(&b), Err(WireError::Oversized { .. })));
+        // Misaligned declared length.
+        let mut b = good.clone();
+        b[..4].copy_from_slice(&10u32.to_le_bytes());
+        assert!(matches!(decode_frame(&b), Err(WireError::Misaligned { len: 10 })));
+        // Below the kind word.
+        let mut b = good.clone();
+        b[..4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(decode_frame(&b), Err(WireError::Misaligned { len: 0 })));
+        // Truncated mid-body.
+        let b = &good[..good.len() - 2];
+        assert_eq!(decode_frame(b).unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn oversized_submit_is_refused_before_allocation() {
+        // A hostile prefix claiming a giant body must fail on the
+        // prefix check, not allocate.
+        let mut b = Vec::new();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&KIND_SUBMIT.to_le_bytes());
+        assert!(matches!(decode_frame(&b), Err(WireError::Oversized { .. })));
+    }
+}

@@ -57,6 +57,19 @@
 //!   live-migrates in-flight requests between worker shards by moving
 //!   their resident rows (one counted `bytes_migrated` transfer, never
 //!   a re-prefill);
+//! * [`frontend`] — the network serving front-end above the
+//!   coordinator: a std-only length-prefixed wire protocol with a
+//!   version-carrying Hello handshake ([`frontend::wire`]), a TCP
+//!   accept loop with per-connection streaming token responses
+//!   ([`frontend::serve`] / [`frontend::run_client`]), and SLO-aware
+//!   admission control ([`frontend::AdmissionController`]): priority
+//!   classes with per-class token-budget shares, deadline tracking on
+//!   the deterministic tick histograms, and queue-depth/load shedding
+//!   from the same signals the planner's `WorkloadFeatures` read. A
+//!   shed is a terminal [`frontend::Frame::Error`] on the socket and a
+//!   reconciled `[Submit, Failed]` span in the trace — the
+//!   exactly-one-terminal-message contract holds end to end over the
+//!   wire;
 //! * [`obs`] — deterministic observability over the serving stack:
 //!   typed [`obs::TraceEvent`] request-lifecycle records stamped with
 //!   the scheduler's tick clock in bounded pre-allocated
@@ -78,6 +91,7 @@ pub mod bench_util;
 pub mod cascade;
 pub mod coordinator;
 pub mod einsum;
+pub mod frontend;
 pub mod fusion;
 pub mod model;
 pub mod obs;

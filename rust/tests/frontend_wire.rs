@@ -1,0 +1,195 @@
+//! Adversarial property coverage for the front-end wire protocol:
+//! round-trip equality over randomized frames, and totality of the
+//! decoder — truncation at every prefix length, corrupt/oversized/
+//! misaligned length prefixes, unknown kinds, version skew, bad magic
+//! and raw random bytes must all return a typed [`WireError`], never
+//! panic and never mis-decode.
+
+use mambalaya::frontend::{
+    decode_frame, encode_frame, read_frame, Frame, WireError, MAX_FRAME_LEN, PROTOCOL_VERSION,
+};
+use mambalaya::util::XorShift;
+
+/// A randomized valid frame of every kind.
+fn random_frame(rng: &mut XorShift) -> Frame {
+    match rng.below(5) {
+        0 => Frame::Hello { version: PROTOCOL_VERSION },
+        1 => {
+            let n = rng.below(64) as usize;
+            Frame::Submit {
+                id: rng.next_u64(),
+                priority: rng.below(3) as u32,
+                max_new_tokens: rng.below(512) as u32,
+                prompt: (0..n).map(|_| rng.next_u64() as i32).collect(),
+            }
+        }
+        2 => Frame::Token { id: rng.next_u64(), token: rng.next_u64() as i32 },
+        3 => Frame::Done {
+            id: rng.next_u64(),
+            n_tokens: rng.below(1024) as u32,
+            ttft_us: rng.next_u64() as u32,
+            total_us: rng.next_u64() as u32,
+        },
+        _ => {
+            let n = rng.below(40) as usize;
+            let reason: String =
+                (0..n).map(|_| char::from(b'a' + rng.below(26) as u8)).collect();
+            Frame::Error { id: rng.next_u64(), reason }
+        }
+    }
+}
+
+#[test]
+fn randomized_frames_round_trip() {
+    let mut rng = XorShift::new(0xF0A7);
+    for _ in 0..500 {
+        let f = random_frame(&mut rng);
+        let bytes = encode_frame(&f);
+        assert_eq!(bytes.len() % 4, 0, "alignment invariant: {f:?}");
+        let (got, used) = decode_frame(&bytes).expect("valid frame decodes");
+        assert_eq!(got, f);
+        assert_eq!(used, bytes.len());
+        let mut cursor = std::io::Cursor::new(&bytes);
+        assert_eq!(read_frame(&mut cursor).expect("stream decode"), f);
+    }
+}
+
+#[test]
+fn concatenated_frames_decode_in_sequence() {
+    let mut rng = XorShift::new(0xBEEF);
+    let frames: Vec<Frame> = (0..32).map(|_| random_frame(&mut rng)).collect();
+    let mut stream = Vec::new();
+    for f in &frames {
+        stream.extend_from_slice(&encode_frame(f));
+    }
+    let mut pos = 0;
+    for f in &frames {
+        let (got, used) = decode_frame(&stream[pos..]).expect("frame at offset");
+        assert_eq!(&got, f);
+        pos += used;
+    }
+    assert_eq!(pos, stream.len(), "no trailing bytes");
+}
+
+#[test]
+fn truncation_at_every_prefix_length_errors_cleanly() {
+    let mut rng = XorShift::new(0x7A11);
+    for _ in 0..40 {
+        let f = random_frame(&mut rng);
+        let bytes = encode_frame(&f);
+        for cut in 0..bytes.len() {
+            match decode_frame(&bytes[..cut]) {
+                Err(_) => {}
+                Ok((got, used)) => {
+                    panic!("truncated {f:?} at {cut}/{} decoded as {got:?} ({used}B)", bytes.len())
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_length_prefixes_never_panic() {
+    let f = Frame::Submit { id: 1, priority: 0, max_new_tokens: 2, prompt: vec![1, 2, 3] };
+    let good = encode_frame(&f);
+    for len in [
+        0u32,
+        1,
+        2,
+        3,
+        5,
+        7,
+        10,
+        MAX_FRAME_LEN - 1,
+        MAX_FRAME_LEN + 1,
+        MAX_FRAME_LEN + 4,
+        u32::MAX,
+        u32::MAX - 3,
+    ] {
+        let mut b = good.clone();
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        let err = decode_frame(&b).expect_err("corrupt prefix must be rejected");
+        match err {
+            WireError::Oversized { .. }
+            | WireError::Misaligned { .. }
+            | WireError::Truncated => {}
+            other => panic!("prefix {len}: unexpected error class {other:?}"),
+        }
+    }
+    // A large-but-valid prefix over a short buffer truncates rather
+    // than allocating.
+    let mut b = good.clone();
+    b[..4].copy_from_slice(&(MAX_FRAME_LEN - (MAX_FRAME_LEN % 4)).to_le_bytes());
+    assert_eq!(decode_frame(&b).unwrap_err(), WireError::Truncated);
+}
+
+#[test]
+fn unknown_kind_and_version_skew_are_typed_errors() {
+    // Unknown kind word.
+    let mut b = Vec::new();
+    b.extend_from_slice(&8u32.to_le_bytes());
+    b.extend_from_slice(&99u32.to_le_bytes());
+    b.extend_from_slice(&0u32.to_le_bytes());
+    assert_eq!(decode_frame(&b).unwrap_err(), WireError::UnknownKind(99));
+
+    // Version skew in Hello.
+    let mut hello = encode_frame(&Frame::Hello { version: PROTOCOL_VERSION });
+    let n = hello.len();
+    hello[n - 4..].copy_from_slice(&(PROTOCOL_VERSION + 7).to_le_bytes());
+    assert_eq!(
+        decode_frame(&hello).unwrap_err(),
+        WireError::VersionMismatch { got: PROTOCOL_VERSION + 7, want: PROTOCOL_VERSION }
+    );
+
+    // Bad magic in Hello (kind says Hello, magic says otherwise).
+    let mut bad = encode_frame(&Frame::Hello { version: PROTOCOL_VERSION });
+    bad[8..12].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+    assert_eq!(decode_frame(&bad).unwrap_err(), WireError::BadMagic(0xDEAD_BEEF));
+}
+
+#[test]
+fn submit_payload_validation() {
+    // Out-of-range priority class.
+    let f = Frame::Submit { id: 3, priority: 0, max_new_tokens: 4, prompt: vec![1] };
+    let mut b = encode_frame(&f);
+    // Layout: [len][kind][id u64][priority][max_new][n][tokens...]
+    b[16..20].copy_from_slice(&9u32.to_le_bytes());
+    assert!(matches!(decode_frame(&b).unwrap_err(), WireError::BadPayload(_)));
+
+    // Prompt-count word claiming more tokens than the frame carries.
+    let mut b = encode_frame(&f);
+    b[24..28].copy_from_slice(&1_000u32.to_le_bytes());
+    assert_eq!(decode_frame(&b).unwrap_err(), WireError::Truncated);
+
+    // Error-reason length claiming more bytes than the frame carries.
+    let e = Frame::Error { id: 1, reason: "abc".into() };
+    let mut b = encode_frame(&e);
+    // Layout: [len][kind][id u64][reason_len][bytes...]
+    b[16..20].copy_from_slice(&10_000u32.to_le_bytes());
+    assert_eq!(decode_frame(&b).unwrap_err(), WireError::Truncated);
+}
+
+#[test]
+fn random_bytes_never_panic_the_decoder() {
+    let mut rng = XorShift::new(0xFACE);
+    for _ in 0..2_000 {
+        let n = rng.below(96) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        // Must return — any Ok must account for its consumed bytes.
+        if let Ok((_, used)) = decode_frame(&bytes) {
+            assert!(used <= bytes.len());
+            assert!(used >= 8, "a frame is at least prefix + kind");
+        }
+    }
+    // Bit-flip corruption of valid frames: decode must stay total.
+    for i in 0..400 {
+        let f = random_frame(&mut rng);
+        let mut bytes = encode_frame(&f);
+        let flips = 1 + (i % 4);
+        for _ in 0..flips {
+            let pos = rng.below(bytes.len() as u64) as usize;
+            bytes[pos] ^= 1 << rng.below(8);
+        }
+        let _ = decode_frame(&bytes); // Ok or Err both fine; no panic
+    }
+}
