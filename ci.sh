@@ -26,11 +26,25 @@ cargo test -q
 # blessed file gets committed.
 echo "== fusion golden: compare pass =="
 cargo test -q --test fusion_golden
+echo "== verify golden: compare pass =="
+cargo test -q --test verify_golden
 if [ -n "$(git status --porcelain -- rust/tests/golden 2>/dev/null)" ]; then
     echo "ERROR: rust/tests/golden changed/untracked — commit the blessed snapshot" >&2
     git status --short -- rust/tests/golden >&2
     exit 1
 fi
+
+# Static verifier: fusion legality, liveness-exact traffic cross-check,
+# donation safety, and the source lint (wall-clock allowlist, hot-path
+# unwrap ban, deprecated executor calls). Exits non-zero on any Error
+# finding; the machine-readable report must exist for downstream tooling.
+echo "== static verifier: mambalaya verify =="
+cargo run --release --bin mambalaya -- verify --out VERIFY_report.json
+if [ ! -s VERIFY_report.json ]; then
+    echo "ERROR: VERIFY_report.json missing or empty" >&2
+    exit 1
+fi
+echo "   VERIFY_report.json written"
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== smoke: benches + examples compile =="

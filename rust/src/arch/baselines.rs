@@ -110,6 +110,13 @@ pub fn baseline_plan(c: &Cascade, b: Baseline) -> FusionPlan {
             });
         }
     }
+    // A cascade holding only a prefix of the SSM-region ids (Mamba-2
+    // reuses id 16 but has no 21) never hits the flush above; push the
+    // pending group so no Einsum is dropped from the plan — the
+    // verifier's coverage check caught this.
+    if let Some(g) = ssm_group.take() {
+        groups.push(g);
+    }
     let mut plan = FusionPlan {
         cascade_name: c.name.clone(),
         variant_name: b.name().to_string(),

@@ -978,7 +978,7 @@ impl<E: Executor> Scheduler<E> {
             fl.last_token_tick = tick_now;
             self.metrics.record_inter_token_ticks(gap);
             if fl.done() {
-                let fl = self.running.remove(&id).unwrap();
+                let fl = self.running.remove(&id).expect("running entry present above");
                 if self.session_of.contains_key(&id) {
                     if let Some((conv, ssm)) = &ref_out {
                         self.states.install_from_batch(id, batch, b, conv, ssm);

@@ -4,6 +4,12 @@
 //! on-chip (paper §III-D). Each group records which tensors cross its
 //! boundary (must touch the backing store) and which stay internal, plus
 //! the stationarity constraint the group imposes on the mapper.
+//!
+//! [`FusionPlan::validate`] checks partition shape; the deeper legality
+//! properties — group convexity over the dataflow DAG, acyclicity of
+//! the condensed inter-group graph, join provenance, internal-tensor
+//! honesty — are proven per plan by [`crate::verify::legality`] and
+//! gated in CI via `mambalaya verify`.
 
 use std::collections::BTreeSet;
 use std::fmt;

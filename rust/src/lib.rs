@@ -80,6 +80,15 @@
 //!   units gateable, wall units reporting), and the
 //!   [`obs::reconcile`] property that forces trace sums to equal the
 //!   traffic counters bit-for-bit in every CI gate;
+//! * [`verify`] — the static verifier over the analytical layer
+//!   (`mambalaya verify`, CI-gated): rebuilds each cascade's dataflow
+//!   DAG and proves every [`planner::PlanChoice`] legal (convex groups,
+//!   acyclic condensed graph, honest join provenance), recomputes
+//!   per-group live-set traffic against [`model::evaluate`]'s byte
+//!   accounting (the cost-model drift detector), derives per-plan
+//!   `donation_safe` verdicts for [`runtime::EngineCaps`], and lints
+//!   the source tree for repo invariants (wall-clock allowlist, bare
+//!   hot-path unwraps, deprecated executor calls, unregistered tests);
 //! * [`util`] / [`prop`] / [`bench_util`] — offline-build stand-ins for
 //!   clap/serde/proptest/criterion (plus vendored `anyhow`/`xla` shims
 //!   under `rust/vendor/`).
@@ -102,4 +111,5 @@ pub mod roofline;
 pub mod runtime;
 pub mod traffic;
 pub mod util;
+pub mod verify;
 pub mod workload;

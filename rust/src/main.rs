@@ -7,6 +7,8 @@
 //!   autotune   sweep the (decode × prefill) grid into a PlanTable artifact
 //!   reproduce  regenerate a paper table/figure (--exp table1|...|fig15|all)
 //!   serve      run the serving coordinator on the AOT artifacts
+//!   verify     static verifier: plan legality + traffic audit + donation
+//!              safety + source lint, written to VERIFY_report.json
 //!   help       this text
 
 use std::io::Write as _;
@@ -31,6 +33,7 @@ fn main() {
         Some("autotune") => cmd_autotune(&args),
         Some("reproduce") => cmd_reproduce(&args),
         Some("serve") => cmd_serve(&args),
+        Some("verify") => cmd_verify(&args),
         _ => {
             print!("{}", HELP);
             0
@@ -57,6 +60,11 @@ USAGE: mambalaya <SUBCOMMAND> [OPTIONS]
             plan SPEC = static:<variant>|adaptive|table:<path>; --rebalance
             lets the slot-aware router migrate in-flight requests between
             worker shards by moving resident state, never re-prefilling)
+  verify    [--seq N] [--batch B] [--out VERIFY_report.json] [--src DIR] [--no-lint]
+            (static verification of every fusion plan on every cascade —
+            legality, liveness-exact traffic audit vs the cost model,
+            donation safety — plus the rust/src source lint; exits
+            non-zero on any Error finding)
 ";
 
 fn model(args: &Args) -> ModelConfig {
@@ -204,6 +212,52 @@ fn cmd_autotune(args: &Args) -> i32 {
     }
     println!("wrote {out} (serve with --plan table:{out})");
     0
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let seq = args.get_u64("seq", 512);
+    let batch = args.get_u64("batch", 1);
+    let out = args.get_or("out", "VERIFY_report.json");
+    // The lint walks the source tree; --src overrides for out-of-tree
+    // checkouts, CARGO_MANIFEST_DIR (the repo root) is the default.
+    let report = if args.flag("no-lint") {
+        mambalaya::verify::verify_cascades_with(seq, batch)
+    } else {
+        let root = args
+            .get("src")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+        mambalaya::verify::verify_all(&root, seq, batch)
+    };
+    println!(
+        "verified {} (cascade, plan) pairs; lint scanned {} files",
+        report.plans.len(),
+        report.lint_files
+    );
+    for f in report.findings.iter().chain(report.lint_findings.iter()) {
+        match f.severity {
+            mambalaya::verify::Severity::Error | mambalaya::verify::Severity::Warn => {
+                println!("{f}")
+            }
+            mambalaya::verify::Severity::Info => {}
+        }
+    }
+    println!(
+        "findings: {} error(s), {} warn(s), {} info(s)",
+        report.errors(),
+        report.warns(),
+        report.infos()
+    );
+    if let Err(e) = std::fs::write(out, format!("{}\n", report.to_json())) {
+        eprintln!("cannot write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {out}");
+    if report.errors() > 0 {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_reproduce(args: &Args) -> i32 {

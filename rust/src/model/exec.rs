@@ -13,6 +13,11 @@
 //! * group latency = max(compute, memory) — fused traversals overlap
 //!   compute with DRAM streaming; groups execute back-to-back unless
 //!   `pipelined` (then compute and memory overlap across groups too).
+//!
+//! The inter-group byte accounting in [`eval_group`] is cross-checked
+//! in CI by [`crate::verify::traffic`], which recomputes it from
+//! liveness first principles — a term added or dropped here without a
+//! matching update there fails `mambalaya verify` as traffic drift.
 
 use crate::arch::{bind_group, ArchSpec, Binding, Staging};
 use crate::einsum::cascade::CascadeIndex;

@@ -32,6 +32,12 @@
 //! *selectable* is negotiated up front: the engine declares per-plan
 //! availability in [`crate::runtime::EngineCaps`] and the scheduler
 //! seeds [`Planner::apply_caps`] from the report.
+//!
+//! Every [`PlanChoice`] the planner can pick is statically verified by
+//! [`crate::verify`] (legality against the Einsum dataflow DAG,
+//! liveness-exact traffic cross-check, per-plan `donation_safe`
+//! verdict) — a plan that reaches this subsystem has already been
+//! proven executable, so selection is purely a cost decision.
 
 pub mod autotune;
 pub mod cost;

@@ -555,7 +555,8 @@ pub(crate) fn decompose_launch<E: Executor + ?Sized>(
     //    position.
     if !ws.scan_rows.is_empty() {
         let k = ws.scan_rows.len();
-        let max_len = ws.scan_rows.iter().map(|&b| segs[b].len).max().unwrap();
+        let max_len =
+            ws.scan_rows.iter().map(|&b| segs[b].len).max().expect("scan_rows checked non-empty");
         let largest = m.decode_batches.iter().copied().max().unwrap_or(1);
         // Working states, packed [layers, k, per] in scan-row order,
         // staged out of the slab once (not per position).
@@ -689,9 +690,9 @@ impl MambaEngine {
             anyhow::bail!("expected 3 outputs, got {}", parts.len());
         }
         let mut it = parts.into_iter();
-        let logits = it.next().unwrap().to_vec::<f32>()?;
-        let conv_state = it.next().unwrap().to_vec::<f32>()?;
-        let ssm_state = it.next().unwrap().to_vec::<f32>()?;
+        let logits = it.next().expect("tuple length checked").to_vec::<f32>()?;
+        let conv_state = it.next().expect("tuple length checked").to_vec::<f32>()?;
+        let ssm_state = it.next().expect("tuple length checked").to_vec::<f32>()?;
         Ok(StepOutput { logits, conv_state, ssm_state })
     }
 }

@@ -304,6 +304,17 @@ impl EngineCaps {
         self.plans.iter().filter(|&&p| p).count()
     }
 
+    /// Is this capability report consistent with per-plan
+    /// donation-safety verdicts (indexed by [`PlanChoice::index`], as
+    /// computed by `verify::donation`)? An engine may only advertise
+    /// `donation` if every plan it declares executable is proven safe
+    /// to run over in-place-donated [`StateSlabs`] — otherwise a
+    /// planner pick could read pre-update state after the overwrite.
+    pub fn donation_sound(&self, donation_safe: &[bool; PlanChoice::COUNT]) -> bool {
+        !self.donation
+            || self.plans.iter().zip(donation_safe.iter()).all(|(&enabled, &safe)| !enabled || safe)
+    }
+
     /// One-line operator summary (`serve_mamba` prints this at startup
     /// so operators can see which fused paths a backend advertises).
     pub fn summary(&self) -> String {

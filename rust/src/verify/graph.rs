@@ -1,0 +1,114 @@
+//! The dataflow DAG of a cascade: Einsums as nodes, tensors as edges.
+//!
+//! Edges are split by generation semantics (the distinction every other
+//! verify pass leans on):
+//!
+//! * **Same-generation dependencies** (`deps`) — the consumer reads the
+//!   producer's value for the *current* generation `i`, so the producer
+//!   must execute first within one launch. `Current` accesses qualify,
+//!   and so do `Windowed{w}` accesses (the window `T[i-j], j in 0..w`
+//!   includes offset 0 — the conv reading `TX` needs the fresh column).
+//! * **Generational edges** (`generational`) — the consumer reads only
+//!   *previous* generations (`Lagged{o}`, e.g. `H[i-1]`). These are the
+//!   recurrence back-edges: they impose no same-generation ordering
+//!   (the old value already exists when the launch starts) but they are
+//!   exactly what the donation analysis must protect from in-place
+//!   overwrites.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::einsum::{Cascade, RankAccess};
+
+/// One tensor-carried edge between two Einsums.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DepEdge {
+    /// Producer Einsum id.
+    pub from: usize,
+    /// Consumer Einsum id.
+    pub to: usize,
+    /// The tensor flowing along the edge.
+    pub tensor: String,
+}
+
+/// Producer/consumer dataflow graph over a cascade's Einsums.
+#[derive(Debug)]
+pub struct DataflowGraph {
+    /// All Einsum ids, in cascade order.
+    pub nodes: Vec<usize>,
+    /// Same-generation dependency edges (must-order within a launch).
+    pub deps: Vec<DepEdge>,
+    /// Previous-generation (recurrence) edges: `from` produces the new
+    /// generation, `to` reads an older one. Includes self-loops
+    /// (`Hs = ABar·Hs[i-1] + BX`).
+    pub generational: Vec<DepEdge>,
+    succ: BTreeMap<usize, Vec<usize>>,
+    pred: BTreeMap<usize, Vec<usize>>,
+}
+
+impl DataflowGraph {
+    /// Rebuild the graph from the Einsums' operands (independently of
+    /// `Cascade::edges`, so the verifier does not trust the structure
+    /// it is checking).
+    pub fn build(c: &Cascade) -> DataflowGraph {
+        let producers = c.producers();
+        let mut deps: Vec<DepEdge> = Vec::new();
+        let mut generational: Vec<DepEdge> = Vec::new();
+        for e in c.einsums() {
+            for op in &e.inputs {
+                let name = op.tensor.name.as_str();
+                let Some(&pid) = producers.get(name) else {
+                    continue; // pure input / weight
+                };
+                // An operand with any lagged access reads only previous
+                // generations of the tensor; everything else (Current,
+                // Windowed) needs the current generation too.
+                let lagged =
+                    op.accesses.iter().any(|a| matches!(a, RankAccess::Lagged { .. }));
+                let edge =
+                    DepEdge { from: pid, to: e.id, tensor: name.to_string() };
+                let sink = if lagged || pid == e.id { &mut generational } else { &mut deps };
+                if !sink.contains(&edge) {
+                    sink.push(edge);
+                }
+            }
+        }
+        let mut succ: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        let mut pred: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for d in &deps {
+            succ.entry(d.from).or_default().push(d.to);
+            pred.entry(d.to).or_default().push(d.from);
+        }
+        DataflowGraph {
+            nodes: c.einsums().iter().map(|e| e.id).collect(),
+            deps,
+            generational,
+            succ,
+            pred,
+        }
+    }
+
+    fn bfs(adj: &BTreeMap<usize, Vec<usize>>, seeds: &[usize]) -> BTreeSet<usize> {
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        let mut queue: Vec<usize> = seeds.to_vec();
+        while let Some(n) = queue.pop() {
+            for &m in adj.get(&n).map(|v| v.as_slice()).unwrap_or(&[]) {
+                if seen.insert(m) {
+                    queue.push(m);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Every node reachable from any seed via same-generation
+    /// dependencies (seeds themselves only if re-reached).
+    pub fn reachable_from(&self, seeds: &[usize]) -> BTreeSet<usize> {
+        Self::bfs(&self.succ, seeds)
+    }
+
+    /// Every node from which some seed is reachable (reverse
+    /// reachability; seeds themselves only if re-reached).
+    pub fn reaching(&self, seeds: &[usize]) -> BTreeSet<usize> {
+        Self::bfs(&self.pred, seeds)
+    }
+}

@@ -1,0 +1,281 @@
+//! Fusion-plan legality: is a grouping a lawful schedule of the DAG?
+//!
+//! For every plan the verifier proves, independently of how the plan
+//! was constructed (greedy stitch, baseline builder, golden file):
+//!
+//! 1. **Coverage** — the groups partition the cascade
+//!    (`FusionPlan::validate`), each Einsum exactly once, in order.
+//! 2. **Convexity** — no dependency path leaves a group and re-enters
+//!    it through a non-member. A non-convex group cannot be executed as
+//!    one phase: the outside node needs group outputs *and* feeds group
+//!    inputs.
+//! 3. **Condensation acyclicity** — contracting each group to one node
+//!    leaves the inter-group dependency graph acyclic (the phase
+//!    schedule exists). Convexity violations usually imply a condensed
+//!    cycle; both are reported so a mutation is located either way.
+//! 4. **Execution order** — the plan's linearization (groups in order,
+//!    members in listed order) is a topological order of the
+//!    same-generation dependency edges.
+//! 5. **Join provenance** — every `JoinRecord` that claims a fusion
+//!    link (`via`) names an earlier member of the same group whose
+//!    output really is an operand of the joining Einsum (and the
+//!    recorded tensor matches). Rejects phantom fusions.
+//! 6. **Internal tensors** — a tensor marked internal must be produced
+//!    in-group with every consumer in-group (Error if it escapes), and
+//!    an actually-private tensor missing from the list is flagged Warn
+//!    (the cost model would over-charge it).
+
+use std::collections::BTreeMap;
+
+use crate::einsum::Cascade;
+use crate::fusion::FusionPlan;
+
+use super::graph::DataflowGraph;
+use super::{Finding, FindingCode};
+
+/// Run every legality check on one plan. `loc` prefixes finding
+/// locations (`cascade/mode/plan`).
+pub fn check_plan(
+    c: &Cascade,
+    g: &DataflowGraph,
+    plan: &FusionPlan,
+    loc: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // 1. Coverage (partition, ordering, internal-tensor escape).
+    if let Err(e) = plan.validate(c) {
+        findings.push(Finding::error(FindingCode::Coverage, loc, e.to_string()));
+    }
+
+    // Membership map (first occurrence wins; duplicates are already a
+    // coverage error).
+    let mut group_of: BTreeMap<usize, usize> = BTreeMap::new();
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        for &id in &grp.einsums {
+            group_of.entry(id).or_insert(gi);
+        }
+    }
+
+    // 2. Convexity.
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        if grp.einsums.len() < 2 {
+            continue;
+        }
+        let down = g.reachable_from(&grp.einsums);
+        let up = g.reaching(&grp.einsums);
+        for x in down.intersection(&up) {
+            if grp.einsums.contains(x) {
+                continue;
+            }
+            let name = c.by_id(*x).map(|e| e.name.as_str()).unwrap_or("?");
+            findings.push(Finding::error(
+                FindingCode::NonConvexGroup,
+                format!("{loc}/group {gi}"),
+                format!(
+                    "einsum #{x} ({name}) lies on a dependency path through the group \
+                     but is not a member — the group is not a convex subgraph"
+                ),
+            ));
+        }
+    }
+
+    // 3. Condensed inter-group graph must be acyclic.
+    let n_groups = plan.groups.len();
+    let mut cond: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+    for d in &g.deps {
+        if let (Some(&a), Some(&b)) = (group_of.get(&d.from), group_of.get(&d.to)) {
+            if a != b && !cond[a].contains(&b) {
+                cond[a].push(b);
+            }
+        }
+    }
+    if let Some(cycle) = find_cycle(&cond) {
+        findings.push(Finding::error(
+            FindingCode::GroupCycle,
+            loc.to_string(),
+            format!(
+                "condensed inter-group dependency graph has a cycle through groups {:?} — \
+                 no phase order can satisfy the dataflow",
+                cycle
+            ),
+        ));
+    }
+
+    // 4. Linearized execution order respects every dependency edge.
+    let mut pos: BTreeMap<usize, usize> = BTreeMap::new();
+    for (p, &id) in plan.groups.iter().flat_map(|grp| grp.einsums.iter()).enumerate() {
+        pos.entry(id).or_insert(p);
+    }
+    for d in &g.deps {
+        if let (Some(&pa), Some(&pb)) = (pos.get(&d.from), pos.get(&d.to)) {
+            if pa > pb {
+                findings.push(Finding::error(
+                    FindingCode::ExecOrder,
+                    loc.to_string(),
+                    format!(
+                        "tensor {} is produced by einsum #{} at position {} but consumed \
+                         by #{} at position {} — the plan runs the consumer first",
+                        d.tensor, d.from, pa, d.to, pb
+                    ),
+                ));
+            }
+        }
+    }
+
+    // 5. Join provenance.
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        for j in &grp.joins {
+            let Some(via) = j.via else { continue };
+            let jloc = format!("{loc}/group {gi}");
+            let member_pos = grp.einsums.iter().position(|&id| id == j.einsum);
+            let via_pos = grp.einsums.iter().position(|&id| id == via);
+            let (Some(mp), Some(vp)) = (member_pos, via_pos) else {
+                findings.push(Finding::error(
+                    FindingCode::PhantomJoin,
+                    jloc,
+                    format!(
+                        "join for einsum #{} claims link via #{via}, which is not a \
+                         member of the group",
+                        j.einsum
+                    ),
+                ));
+                continue;
+            };
+            if vp >= mp {
+                findings.push(Finding::error(
+                    FindingCode::PhantomJoin,
+                    jloc,
+                    format!(
+                        "join for einsum #{} claims link via #{via}, which does not \
+                         precede it in the group",
+                        j.einsum
+                    ),
+                ));
+                continue;
+            }
+            let (Some(p), Some(m)) = (c.by_id(via), c.by_id(j.einsum)) else { continue };
+            if m.operand(&p.output.name).is_none() {
+                findings.push(Finding::error(
+                    FindingCode::PhantomJoin,
+                    jloc,
+                    format!(
+                        "join for einsum #{} ({}) claims link via #{via} ({}), but no \
+                         tensor flows between them — a phantom fusion",
+                        j.einsum, m.name, p.name
+                    ),
+                ));
+                continue;
+            }
+            if let Some(t) = &j.tensor {
+                if *t != p.output.name {
+                    findings.push(Finding::error(
+                        FindingCode::PhantomJoin,
+                        jloc,
+                        format!(
+                            "join for einsum #{} records intermediate tensor {}, but \
+                             #{via} produces {}",
+                            j.einsum, t, p.output.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // 6. Internal-tensor honesty (mirrors `fill_internal_tensors`).
+    let consumers = c.consumers();
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        let gloc = format!("{loc}/group {gi}");
+        for t in &grp.internal_tensors {
+            let produced = grp
+                .einsums
+                .iter()
+                .any(|&id| c.by_id(id).map(|e| e.output.name == *t).unwrap_or(false));
+            let cs = consumers.get(t.as_str()).map(|v| v.as_slice()).unwrap_or(&[]);
+            let private = produced
+                && !cs.is_empty()
+                && cs.iter().all(|cid| grp.einsums.contains(cid));
+            if !private {
+                findings.push(Finding::error(
+                    FindingCode::InternalTensors,
+                    gloc.clone(),
+                    format!(
+                        "tensor {t} is marked internal but is not private to the group \
+                         (produced in-group: {produced}, consumers: {cs:?})"
+                    ),
+                ));
+            }
+        }
+        // Actually-private tensors the plan failed to mark: the cost
+        // model would charge off-chip traffic that never happens.
+        for &id in &grp.einsums {
+            let Some(e) = c.by_id(id) else { continue };
+            let out = e.output.name.as_str();
+            if grp.internal_tensors.iter().any(|t| t == out) {
+                continue;
+            }
+            let cs = consumers.get(out).map(|v| v.as_slice()).unwrap_or(&[]);
+            if !cs.is_empty() && cs.iter().all(|cid| grp.einsums.contains(cid)) {
+                findings.push(Finding::warn(
+                    FindingCode::InternalTensors,
+                    gloc.clone(),
+                    format!(
+                        "tensor {out} is private to the group but not marked internal — \
+                         the cost model over-charges its traffic"
+                    ),
+                ));
+            }
+        }
+    }
+
+    findings
+}
+
+/// First cycle in a small adjacency-list digraph (DFS, three colors),
+/// as the group-index path along the cycle.
+fn find_cycle(adj: &[Vec<usize>]) -> Option<Vec<usize>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Gray,
+        Black,
+    }
+    fn dfs(
+        u: usize,
+        adj: &[Vec<usize>],
+        color: &mut [Color],
+        stack: &mut Vec<usize>,
+    ) -> Option<Vec<usize>> {
+        color[u] = Color::Gray;
+        stack.push(u);
+        for &v in &adj[u] {
+            match color[v] {
+                Color::Gray => {
+                    let start = stack.iter().position(|&x| x == v).unwrap_or(0);
+                    let mut cycle = stack[start..].to_vec();
+                    cycle.push(v);
+                    return Some(cycle);
+                }
+                Color::White => {
+                    if let Some(c) = dfs(v, adj, color, stack) {
+                        return Some(c);
+                    }
+                }
+                Color::Black => {}
+            }
+        }
+        stack.pop();
+        color[u] = Color::Black;
+        None
+    }
+    let mut color = vec![Color::White; adj.len()];
+    for u in 0..adj.len() {
+        if color[u] == Color::White {
+            if let Some(c) = dfs(u, adj, &mut color, &mut Vec::new()) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}

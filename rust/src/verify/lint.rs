@@ -1,0 +1,251 @@
+//! Std-only source lint over `rust/src/` — repo invariants the type
+//! system cannot express.
+//!
+//! Rules (all skip `#[cfg(test)]` regions and comment lines):
+//!
+//! * **Wall clock** — `Instant` / `SystemTime` may only appear in the
+//!   files on [`WALLCLOCK_ALLOWLIST`] (each with a one-line
+//!   justification). Everything gated in CI is stamped with the
+//!   deterministic tick clock; wall time leaking into tick-stamped
+//!   trace or decision logic makes gates flaky. Error elsewhere.
+//! * **Hot-path `unwrap`** — bare `.unwrap()` in non-test
+//!   `coordinator/` / `runtime/` code is an Error; the sanctioned form
+//!   is `.expect("invariant ...")` documenting why the value exists.
+//!   `.expect(` itself is surfaced as one Warn per file (with a count)
+//!   so new ones get reviewed, not banned.
+//! * **Deprecated executor calls** — the four legacy step methods
+//!   (`step_mixed`, `step_mixed_into`, `step_planned_into`,
+//!   `register_variant`) are wrappers kept for the equivalence suite;
+//!   calling them from non-test code outside `runtime/engine.rs` is an
+//!   Error — new code goes through `launch(LaunchSpec)`.
+//! * **Test registration** — every `rust/tests/*.rs` file must appear
+//!   as a `[[test]]` path in `Cargo.toml`, else it silently never runs
+//!   (Warn).
+
+use std::path::Path;
+
+use super::{Finding, FindingCode};
+
+/// Files allowed to read the wall clock, with why. Suffix-matched
+/// against the path relative to `rust/src/`. To extend: add the file
+/// and a one-line justification here — the lint output quotes it.
+pub const WALLCLOCK_ALLOWLIST: &[(&str, &str)] = &[
+    (
+        "coordinator/request.rs",
+        "wall-clock submit/first-token stamps feed operator-facing latency reports; gates use tick clocks",
+    ),
+    (
+        "coordinator/metrics.rs",
+        "wall elapsed appears in human-readable report lines only; every gated metric is a counter",
+    ),
+    (
+        "coordinator/scheduler.rs",
+        "wall TTFT sampled at first token for reporting histograms; trace stamps use metrics.ticks",
+    ),
+    (
+        "bench_util.rs",
+        "bench harness wall timing for operator output; CI gates compare deterministic counters",
+    ),
+    (
+        "verify/lint.rs",
+        "names the banned tokens in its own rule table; contains no timing code",
+    ),
+];
+
+/// The deprecated legacy executor methods (lint matches `.name(` call
+/// syntax, so the wrapper *definitions* in `runtime/engine.rs` — which
+/// is exempt anyway — and doc mentions don't trip it).
+const DEPRECATED_CALLS: &[&str] =
+    &["step_mixed(", "step_mixed_into(", "step_planned_into(", "register_variant("];
+
+/// Result of a lint run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+/// Mark which lines of a source file are inside `#[cfg(test)]` items
+/// (brace-balance heuristic — good enough for rustfmt-shaped code).
+fn test_mask(lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].trim_start().starts_with("//") && lines[i].contains("#[cfg(test)]") {
+            let mut depth: i64 = 0;
+            let mut started = false;
+            let mut j = i;
+            while j < lines.len() {
+                mask[j] = true;
+                for ch in lines[j].chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            started = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if started && depth <= 0 {
+                    break;
+                }
+                // `#[cfg(test)]` on a braceless item (a `use`): stop at
+                // the statement end.
+                if !started && lines[j].trim_end().ends_with(';') {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Does `line` contain `token` as a standalone identifier?
+fn has_word(line: &str, token: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = line[from..].find(token) {
+        let at = from + p;
+        let before_ok = at == 0
+            || !line[..at].chars().next_back().map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false);
+        let after = at + token.len();
+        let after_ok = after >= line.len()
+            || !line[after..].chars().next().map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = after;
+    }
+    false
+}
+
+/// Lint one source file's content. `rel` is the path relative to
+/// `rust/src/` (forward slashes). Pure (unit-testable on synthetic
+/// sources).
+pub fn lint_file(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mask = test_mask(&lines);
+    let allowed_clock = WALLCLOCK_ALLOWLIST.iter().any(|(f, _)| rel.ends_with(f));
+    let hot_path = rel.starts_with("coordinator/") || rel.starts_with("runtime/");
+    let engine_file = rel.ends_with("runtime/engine.rs") || rel == "runtime/engine.rs";
+
+    let mut findings = Vec::new();
+    let mut expects = 0usize;
+    for (n, line) in lines.iter().enumerate() {
+        if mask[n] || line.trim_start().starts_with("//") {
+            continue;
+        }
+        let loc = format!("rust/src/{rel}:{}", n + 1);
+        if !allowed_clock && (has_word(line, "Instant") || has_word(line, "SystemTime")) {
+            findings.push(Finding::error(
+                FindingCode::LintWallClock,
+                loc.clone(),
+                "wall-clock use outside the allowlist — tick-stamped code must stay \
+                 deterministic (see verify::lint::WALLCLOCK_ALLOWLIST to annotate a \
+                 legitimate reporting site)"
+                    .to_string(),
+            ));
+        }
+        if hot_path {
+            if line.contains(".unwrap()") {
+                findings.push(Finding::error(
+                    FindingCode::LintHotPathUnwrap,
+                    loc.clone(),
+                    "bare .unwrap() in a coordinator/runtime hot path — use \
+                     .expect(\"invariant ...\") documenting why the value exists"
+                        .to_string(),
+                ));
+            }
+            expects += line.matches(".expect(").count();
+        }
+        if !engine_file {
+            for dep in DEPRECATED_CALLS {
+                if line.contains(&format!(".{dep}")) {
+                    findings.push(Finding::error(
+                        FindingCode::LintDeprecatedCall,
+                        loc.clone(),
+                        format!(
+                            "call to deprecated legacy executor method `{}` outside tests \
+                             — go through launch(LaunchSpec)",
+                            dep.trim_end_matches('(')
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    if expects > 0 {
+        findings.push(Finding::warn(
+            FindingCode::LintHotPathExpect,
+            format!("rust/src/{rel}"),
+            format!(
+                "{expects} .expect() call(s) in a hot path (documented-invariant style is \
+                 sanctioned; review when touching)"
+            ),
+        ));
+    }
+    findings
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Walk `repo_root/rust/src` applying [`lint_file`], then check that
+/// every `repo_root/rust/tests/*.rs` is registered in `Cargo.toml`.
+pub fn lint_tree(repo_root: &Path) -> LintReport {
+    let mut report = LintReport::default();
+    let src = repo_root.join("rust/src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(text) = std::fs::read_to_string(path) else { continue };
+        report.files_scanned += 1;
+        report.findings.extend(lint_file(&rel, &text));
+    }
+    // Unregistered integration tests never run — a silent coverage hole.
+    let manifest =
+        std::fs::read_to_string(repo_root.join("Cargo.toml")).unwrap_or_default();
+    let tests_dir = repo_root.join("rust/tests");
+    let mut tests = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&tests_dir) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_file() && path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                tests.push(path);
+            }
+        }
+    }
+    tests.sort();
+    for t in tests {
+        let name = t.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        if !manifest.contains(&format!("rust/tests/{name}")) {
+            report.findings.push(Finding::warn(
+                FindingCode::LintUnregisteredTest,
+                format!("rust/tests/{name}"),
+                "not registered as a [[test]] target in Cargo.toml — it never runs under \
+                 `cargo test`"
+                    .to_string(),
+            ));
+        }
+    }
+    report
+}

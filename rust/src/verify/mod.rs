@@ -1,0 +1,423 @@
+//! Static verification of the cascade-of-Einsums layer (offline, CI-wired).
+//!
+//! The paper's claim is that fusion mappings are *derived* from the
+//! Einsum dependency structure rather than asserted. This module makes
+//! that a machine-checked invariant, entirely over the analytical layer
+//! (no engine, no device):
+//!
+//! * [`graph`] — the producer/consumer dataflow DAG of a cascade
+//!   (Einsums as nodes, tensors as edges), with generational
+//!   (`H[i-1]`-style) edges separated from same-generation dependencies;
+//! * [`legality`] — proves every [`crate::planner::PlanChoice`]'s
+//!   grouping is a convex partition of that DAG with an acyclic
+//!   condensed inter-group graph, a dependency-respecting execution
+//!   order, and honest join provenance (no phantom fusions);
+//! * [`traffic`] — recomputes per-group live-in/live-out sets and the
+//!   minimal inter-group off-chip traffic, then cross-checks
+//!   [`crate::model::evaluate`]'s byte accounting per design point
+//!   (the cost-model drift detector);
+//! * [`donation`] — use-after-overwrite analysis for
+//!   [`crate::runtime::Donation::DonateInPlace`]: per plan, no Einsum
+//!   may consume pre-update conv/ssm state after the in-place update
+//!   writes it; emits per-plan `donation_safe` verdicts that
+//!   [`crate::runtime::EngineCaps::donation_sound`] consults;
+//! * [`lint`] — a std-only source walker over `rust/src/` enforcing
+//!   repo invariants (no wall clock in tick-stamped code outside an
+//!   allowlist, no bare `unwrap()` in coordinator/runtime hot paths, no
+//!   deprecated legacy executor calls outside tests, every
+//!   `rust/tests/*.rs` registered in `Cargo.toml`).
+//!
+//! Everything lands in a [`VerifyReport`] (`mambalaya verify` writes it
+//! as `VERIFY_report.json`); any Error-severity finding fails CI.
+
+pub mod donation;
+pub mod graph;
+pub mod legality;
+pub mod lint;
+pub mod traffic;
+
+pub use donation::{analyze_plan as analyze_donation, DonationVerdict};
+pub use graph::{DataflowGraph, DepEdge};
+pub use legality::check_plan;
+pub use lint::{lint_file, lint_tree, LintReport, WALLCLOCK_ALLOWLIST};
+pub use traffic::{audit_plan, TrafficAudit, TRAFFIC_TOLERANCE};
+
+use crate::arch::ArchSpec;
+use crate::cascade::{mamba1, mamba2, transformer, ModelConfig};
+use crate::einsum::Cascade;
+use crate::model::ExecOptions;
+use crate::planner::PlanChoice;
+use crate::runtime::EngineCaps;
+use crate::util::json::JsonValue;
+
+/// How bad a finding is. Any `Error` fails `mambalaya verify` (and CI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Invariant violated — the tree must not ship like this.
+    Error,
+    /// Suspicious but not provably wrong; surfaced for review.
+    Warn,
+    /// Deliberate, documented deviation worth recording.
+    Info,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// What kind of invariant a finding is about (stable, machine-readable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingCode {
+    /// Plan is not a partition of the cascade (missing/duplicated
+    /// Einsums, groups out of cascade order, internal tensor escaping).
+    Coverage,
+    /// A fusion group is not a convex subgraph: a dependency path leaves
+    /// the group and re-enters it through a non-member.
+    NonConvexGroup,
+    /// The condensed inter-group graph has a dependency cycle.
+    GroupCycle,
+    /// The plan's linearized execution order runs a consumer before its
+    /// producer.
+    ExecOrder,
+    /// A `JoinRecord` claims a fusion link with no real tensor flowing
+    /// between the two Einsums (a phantom fusion).
+    PhantomJoin,
+    /// A tensor marked internal to a group is not actually private to it
+    /// (or an actually-private tensor was not marked — Warn).
+    InternalTensors,
+    /// `model::evaluate` claims less inter-group traffic than the
+    /// liveness-exact minimum — an impossible cost.
+    TrafficUnderMin,
+    /// `model::evaluate` diverges from the independently recomputed
+    /// traffic beyond [`TRAFFIC_TOLERANCE`].
+    TrafficDrift,
+    /// In-place state donation would let an Einsum read pre-update state
+    /// after the update overwrote it, under this plan's execution order.
+    DonationUnsafe,
+    /// An `EngineCaps` advertises donation while enabling a plan whose
+    /// donation verdict is unsafe.
+    DonationCapsMismatch,
+    /// Wall-clock use (`Instant`/`SystemTime`) outside the allowlist.
+    LintWallClock,
+    /// Bare `.unwrap()` in a non-test coordinator/runtime hot path.
+    LintHotPathUnwrap,
+    /// `.expect(...)` count in a hot path (documented-invariant style;
+    /// surfaced as Warn so new ones get reviewed).
+    LintHotPathExpect,
+    /// Call to one of the four deprecated legacy executor methods
+    /// outside tests / the wrapper definitions.
+    LintDeprecatedCall,
+    /// A `rust/tests/*.rs` file not registered as a `[[test]]` target.
+    LintUnregisteredTest,
+}
+
+impl FindingCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FindingCode::Coverage => "coverage",
+            FindingCode::NonConvexGroup => "non-convex-group",
+            FindingCode::GroupCycle => "group-cycle",
+            FindingCode::ExecOrder => "exec-order",
+            FindingCode::PhantomJoin => "phantom-join",
+            FindingCode::InternalTensors => "internal-tensors",
+            FindingCode::TrafficUnderMin => "traffic-under-min",
+            FindingCode::TrafficDrift => "traffic-drift",
+            FindingCode::DonationUnsafe => "donation-unsafe",
+            FindingCode::DonationCapsMismatch => "donation-caps-mismatch",
+            FindingCode::LintWallClock => "lint-wall-clock",
+            FindingCode::LintHotPathUnwrap => "lint-hot-path-unwrap",
+            FindingCode::LintHotPathExpect => "lint-hot-path-expect",
+            FindingCode::LintDeprecatedCall => "lint-deprecated-call",
+            FindingCode::LintUnregisteredTest => "lint-unregistered-test",
+        }
+    }
+}
+
+/// One typed, located verification finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub severity: Severity,
+    pub code: FindingCode,
+    /// Where: `cascade/mode/plan[/group N]` for analytic findings,
+    /// `path:line` for lint findings.
+    pub location: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        severity: Severity,
+        code: FindingCode,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Finding { severity, code, location: location.into(), message: message.into() }
+    }
+
+    pub fn error(code: FindingCode, loc: impl Into<String>, msg: impl Into<String>) -> Self {
+        Finding::new(Severity::Error, code, loc, msg)
+    }
+
+    pub fn warn(code: FindingCode, loc: impl Into<String>, msg: impl Into<String>) -> Self {
+        Finding::new(Severity::Warn, code, loc, msg)
+    }
+
+    pub fn info(code: FindingCode, loc: impl Into<String>, msg: impl Into<String>) -> Self {
+        Finding::new(Severity::Info, code, loc, msg)
+    }
+
+    fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::obj();
+        o.set("severity", self.severity.as_str());
+        o.set("code", self.code.as_str());
+        o.set("location", self.location.as_str());
+        o.set("message", self.message.as_str());
+        o
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}] {} @ {}: {}",
+            self.severity.as_str(),
+            self.code.as_str(),
+            self.location,
+            self.message
+        )
+    }
+}
+
+/// Per-(scenario, plan) verification record — one row of the report.
+#[derive(Debug, Clone)]
+pub struct PlanRecord {
+    /// `cascade/mode`, e.g. `mamba1/prefill`.
+    pub scenario: String,
+    /// Plan name (`PlanChoice::name()`).
+    pub plan: String,
+    pub groups: usize,
+    pub donation_safe: bool,
+    /// Inter-group traffic cross-check numbers (bytes).
+    pub min_inter: u64,
+    pub expected_inter: u64,
+    pub evaluated_inter: u64,
+}
+
+impl PlanRecord {
+    fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::obj();
+        o.set("scenario", self.scenario.as_str());
+        o.set("plan", self.plan.as_str());
+        o.set("groups", self.groups as u64);
+        o.set("donation_safe", self.donation_safe);
+        o.set("min_inter_bytes", self.min_inter);
+        o.set("expected_inter_bytes", self.expected_inter);
+        o.set("evaluated_inter_bytes", self.evaluated_inter);
+        o
+    }
+}
+
+/// The full verifier output: analytic findings + per-plan records, plus
+/// (when the lint pass ran) lint findings kept separately so the golden
+/// snapshot of the analytic results does not churn with source edits.
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    pub plans: Vec<PlanRecord>,
+    /// Findings from the analytic passes (legality/traffic/donation).
+    pub findings: Vec<Finding>,
+    /// Findings from the source lint (empty when lint was not run).
+    pub lint_findings: Vec<Finding>,
+    /// Files scanned by the lint pass.
+    pub lint_files: usize,
+}
+
+impl VerifyReport {
+    fn count(&self, s: Severity) -> usize {
+        self.findings
+            .iter()
+            .chain(self.lint_findings.iter())
+            .filter(|f| f.severity == s)
+            .count()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warns(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    /// Deterministic text rendering of the *analytic* results — the
+    /// golden-snapshot surface (`rust/tests/golden/verify_report.txt`).
+    /// Lint findings are excluded on purpose: they track the source
+    /// tree, not the model, and would churn the golden on every edit.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let mut scenario = "";
+        for r in &self.plans {
+            if r.scenario != scenario {
+                if !scenario.is_empty() {
+                    out.push('\n');
+                }
+                out.push_str(&format!("== {} ==\n", r.scenario));
+                scenario = &r.scenario;
+            }
+            out.push_str(&format!(
+                "plan {}: groups={} donation={} inter bytes min={} expected={} evaluated={}\n",
+                r.plan,
+                r.groups,
+                if r.donation_safe { "safe" } else { "UNSAFE" },
+                r.min_inter,
+                r.expected_inter,
+                r.evaluated_inter,
+            ));
+        }
+        out.push_str("\n== findings ==\n");
+        if self.findings.is_empty() {
+            out.push_str("(none)\n");
+        } else {
+            for f in &self.findings {
+                out.push_str(&format!("{f}\n"));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable report (`VERIFY_report.json`).
+    pub fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::obj();
+        o.set("version", 1u64);
+        o.set("errors", self.errors() as u64);
+        o.set("warns", self.warns() as u64);
+        o.set("infos", self.infos() as u64);
+        o.set("lint_files_scanned", self.lint_files as u64);
+        let mut plans = Vec::new();
+        for r in &self.plans {
+            plans.push(r.to_json());
+        }
+        o.set("plans", JsonValue::Arr(plans));
+        let mut fs = Vec::new();
+        for f in self.findings.iter().chain(self.lint_findings.iter()) {
+            fs.push(f.to_json());
+        }
+        o.set("findings", JsonValue::Arr(fs));
+        o
+    }
+}
+
+/// One verification scenario: a concrete cascade instance plus the
+/// execution-option shape it is costed under.
+struct VerifyScenario {
+    label: String,
+    cascade: Cascade,
+    decode_state_io: bool,
+}
+
+fn scenarios(seq: u64, batch: u64) -> Vec<VerifyScenario> {
+    let cfg = ModelConfig::mamba_370m();
+    vec![
+        VerifyScenario {
+            label: format!("mamba1/prefill seq={seq} batch={batch}"),
+            cascade: mamba1::build(&cfg, seq, batch),
+            decode_state_io: false,
+        },
+        VerifyScenario {
+            label: "mamba1/decode seq=1 batch=64".to_string(),
+            cascade: mamba1::build(&cfg, 1, 64),
+            decode_state_io: true,
+        },
+        VerifyScenario {
+            label: format!("mamba2/prefill seq={seq} batch={batch}"),
+            cascade: mamba2::build(&cfg, seq, batch),
+            decode_state_io: false,
+        },
+        VerifyScenario {
+            label: "transformer/prefill seq=256 batch=1".to_string(),
+            cascade: transformer::build(&transformer::TransformerConfig::medium(256)),
+            decode_state_io: false,
+        },
+    ]
+}
+
+/// Run the analytic battery (legality + traffic + donation) over every
+/// [`PlanChoice`] on every scenario cascade, with `seq`/`batch` sizing
+/// the prefill instances. Deterministic; this is what the golden
+/// snapshot pins.
+pub fn verify_cascades_with(seq: u64, batch: u64) -> VerifyReport {
+    let arch = ArchSpec::mambalaya();
+    let mut report = VerifyReport::default();
+    for sc in scenarios(seq, batch) {
+        let g = DataflowGraph::build(&sc.cascade);
+        // Per-plan donation verdicts, indexed by `PlanChoice::index()`,
+        // in the layout `EngineCaps::donation_sound` consumes.
+        let mut verdicts = [true; PlanChoice::COUNT];
+        for point in PlanChoice::all() {
+            let plan = point.plan(&sc.cascade);
+            let loc = format!("{}/{}", sc.label, point.name());
+            report.findings.extend(check_plan(&sc.cascade, &g, &plan, &loc));
+            let verdict = analyze_donation(&sc.cascade, &plan, &loc);
+            verdicts[point.index()] = verdict.safe;
+            report.findings.extend(verdict.findings);
+            let opts = ExecOptions {
+                staging: point.staging(),
+                pipelined: false,
+                decode_state_io: sc.decode_state_io,
+            };
+            let audit = audit_plan(&sc.cascade, &plan, &arch, &opts, &loc);
+            report.findings.extend(audit.findings);
+            report.plans.push(PlanRecord {
+                scenario: sc.label.clone(),
+                plan: point.name(),
+                groups: plan.groups.len(),
+                donation_safe: verdict.safe,
+                min_inter: audit.min_inter,
+                expected_inter: audit.expected_inter,
+                evaluated_inter: audit.evaluated_inter,
+            });
+        }
+        // Capability consistency: every caps preset the runtime ships
+        // must only advertise donation over plans proven safe on this
+        // cascade (the gate for the PJRT buffer-donation ROADMAP item).
+        for (name, caps) in [("baseline", EngineCaps::baseline()), ("full", EngineCaps::full())] {
+            if !caps.donation_sound(&verdicts) {
+                report.findings.push(Finding::error(
+                    FindingCode::DonationCapsMismatch,
+                    format!("{}/EngineCaps::{name}", sc.label),
+                    format!(
+                        "caps advertise donation over a plan whose donation_safe verdict \
+                         is false (verdicts {:?})",
+                        verdicts
+                    ),
+                ));
+            }
+        }
+    }
+    report
+}
+
+/// [`verify_cascades_with`] at the default sizing (prefill 512×1).
+pub fn verify_cascades() -> VerifyReport {
+    verify_cascades_with(512, 1)
+}
+
+/// Full verification: the analytic battery plus the source lint rooted
+/// at `repo_root` (the directory holding `Cargo.toml` and `rust/`).
+pub fn verify_all(repo_root: &std::path::Path, seq: u64, batch: u64) -> VerifyReport {
+    let mut report = verify_cascades_with(seq, batch);
+    let lint = lint_tree(repo_root);
+    report.lint_files = lint.files_scanned;
+    report.lint_findings = lint.findings;
+    report
+}

@@ -1,0 +1,277 @@
+//! Liveness-exact inter-group traffic audit — the cost-model drift
+//! detector.
+//!
+//! For every plan the audit derives two numbers per design point and
+//! compares them against `model::evaluate`'s byte accounting:
+//!
+//! * **`min_inter`** — the liveness minimum: each group's live-in set
+//!   (shared tensors read by members but not produced in-group) enters
+//!   once, its live-out set (tensors produced in-group with consumers
+//!   outside it, or model outputs) leaves once. No pass reloads, no
+//!   spills, no state I/O. Any evaluation below this floor is an
+//!   impossible cost ([`super::FindingCode::TrafficUnderMin`]).
+//! * **`expected_inter`** — an independent recomputation of the
+//!   accounting `model::exec::eval_group` is *supposed* to perform:
+//!   singleton groups at best-unfused cost; fused groups charging each
+//!   non-internal tensor once per pass (FuseMax pass analysis), spilled
+//!   internal multi-pass outputs, MARCA-style full-extent staging
+//!   spills, fully-fused RD-bridge round-trips, and decode state I/O.
+//!   Divergence beyond [`TRAFFIC_TOLERANCE`] is a drift
+//!   ([`super::FindingCode::TrafficDrift`]).
+//!
+//! Deliberate spill costs (the FF RD-bridge round-trip, MARCA
+//! full-extent spills, X/LEX pass reloads) are exactly the gap between
+//! `min_inter` and `expected_inter` — the audit keeps them visible
+//! instead of hiding them in a fudge factor.
+
+use crate::arch::{ArchSpec, Staging};
+use crate::einsum::cascade::CascadeIndex;
+use crate::einsum::Cascade;
+use crate::fusion::{FusionClass, FusionGroup, FusionPlan};
+use crate::model::cost::weight_bytes;
+use crate::model::passes::analyze_scope_with;
+use crate::model::{evaluate, ExecOptions};
+
+use super::{Finding, FindingCode};
+
+/// Allowed fractional divergence between the recomputed accounting and
+/// `model::evaluate` before [`FindingCode::TrafficDrift`] fires. The
+/// recomputation mirrors the model's documented semantics, so the
+/// expected delta is zero; 2% is headroom for benign refactors (e.g.
+/// rounding a tile boundary) without letting a dropped term ship.
+pub const TRAFFIC_TOLERANCE: f64 = 0.02;
+
+/// Audit result for one (cascade, plan, options) triple. Byte counts
+/// are inter-group (off-chip) traffic only — intra-Einsum staging is
+/// the mapper's business, not the fusion plan's.
+#[derive(Debug)]
+pub struct TrafficAudit {
+    pub min_inter: u64,
+    pub expected_inter: u64,
+    pub evaluated_inter: u64,
+    pub findings: Vec<Finding>,
+}
+
+/// Cross-check one plan's traffic. `loc` prefixes finding locations.
+pub fn audit_plan(
+    c: &Cascade,
+    plan: &FusionPlan,
+    arch: &ArchSpec,
+    opts: &ExecOptions,
+    loc: &str,
+) -> TrafficAudit {
+    let idx = CascadeIndex::new(c);
+    let mut min_inter = 0u64;
+    let mut expected_inter = 0u64;
+    for g in &plan.groups {
+        min_inter += live_set_min(c, &idx, g);
+        expected_inter += expected_group(c, &idx, g, arch, opts);
+    }
+    let cost = evaluate(c, plan, arch, opts);
+    let evaluated_inter = cost.traffic.inter();
+
+    let mut findings = Vec::new();
+    if evaluated_inter < min_inter {
+        findings.push(Finding::error(
+            FindingCode::TrafficUnderMin,
+            loc.to_string(),
+            format!(
+                "model::evaluate claims {evaluated_inter} inter bytes, below the \
+                 liveness-exact minimum {min_inter} — an impossible cost"
+            ),
+        ));
+    }
+    let denom = expected_inter.max(1) as f64;
+    let drift = (evaluated_inter as f64 - expected_inter as f64).abs() / denom;
+    if drift > TRAFFIC_TOLERANCE {
+        findings.push(Finding::error(
+            FindingCode::TrafficDrift,
+            loc.to_string(),
+            format!(
+                "model::evaluate reports {evaluated_inter} inter bytes but the \
+                 recomputed accounting expects {expected_inter} ({:.2}% drift, \
+                 tolerance {:.0}%)",
+                drift * 100.0,
+                TRAFFIC_TOLERANCE * 100.0
+            ),
+        ));
+    }
+    TrafficAudit { min_inter, expected_inter, evaluated_inter, findings }
+}
+
+/// The liveness minimum for one group: live-ins enter once, live-outs
+/// leave once, nothing else moves off-chip.
+fn live_set_min(c: &Cascade, idx: &CascadeIndex, g: &FusionGroup) -> u64 {
+    let produced: Vec<&str> = g
+        .einsums
+        .iter()
+        .filter_map(|&id| c.by_id(id))
+        .map(|e| e.output.name.as_str())
+        .collect();
+    let mut bytes = 0u64;
+    // Live-in: shared tensors read by a member but produced elsewhere.
+    let mut seen: Vec<&str> = Vec::new();
+    for &id in &g.einsums {
+        let Some(e) = c.by_id(id) else { continue };
+        for op in &e.inputs {
+            let name = op.tensor.name.as_str();
+            if produced.contains(&name) || seen.contains(&name) || !idx.is_shared(name) {
+                continue;
+            }
+            seen.push(name);
+            bytes += op.tensor.bytes();
+        }
+        // Live-out: produced in-group, needed afterwards (an outside
+        // consumer, or a model output with no consumer at all).
+        let out = e.output.name.as_str();
+        let consumers = idx.consumers_of(out);
+        let escapes = consumers.iter().any(|cid| !g.einsums.contains(cid))
+            || (consumers.is_empty() && idx.is_shared(out));
+        if escapes {
+            bytes += e.output.bytes();
+        }
+    }
+    bytes
+}
+
+/// Recompute the inter-group bytes `eval_group` should charge for one
+/// group under `opts` (see module docs; this mirrors the *documented*
+/// semantics, so a dropped or double-counted term in the model shows up
+/// as drift).
+fn expected_group(
+    c: &Cascade,
+    idx: &CascadeIndex,
+    g: &FusionGroup,
+    arch: &ArchSpec,
+    opts: &ExecOptions,
+) -> u64 {
+    let mut inter = 0u64;
+    if g.einsums.len() == 1 {
+        // Best-unfused: every distinct input in, the output out; shared
+        // tensors are the off-chip ones.
+        let Some(e) = c.by_id(g.einsums[0]) else { return 0 };
+        let mut seen: Vec<&str> = Vec::new();
+        for op in &e.inputs {
+            let name = op.tensor.name.as_str();
+            if !seen.contains(&name) {
+                seen.push(name);
+                if idx.is_shared(name) {
+                    inter += op.tensor.bytes();
+                }
+            }
+        }
+        if idx.is_shared(&e.output.name) {
+            inter += e.output.bytes();
+        }
+    } else {
+        let passes = analyze_scope_with(c, idx, &g.einsums);
+        let internal: Vec<&str> = g.internal_tensors.iter().map(|s| s.as_str()).collect();
+        let mut charged: Vec<&str> = Vec::new();
+        for &id in &g.einsums {
+            let Some(e) = c.by_id(id) else { continue };
+            for op in &e.inputs {
+                let name = op.tensor.name.as_str();
+                if internal.contains(&name) || charged.contains(&name) {
+                    continue;
+                }
+                charged.push(name);
+                if idx.is_shared(name) {
+                    inter += op.tensor.bytes() * passes.passes_of(name) as u64;
+                }
+            }
+            let out = e.output.name.as_str();
+            if !internal.contains(&out) {
+                if idx.is_shared(out) {
+                    inter += e.output.bytes();
+                }
+            } else {
+                // A multi-pass internal tensor spills at the pass
+                // boundary and reloads once per later pass (§VI-C.1).
+                let n = passes.passes_of(out) as u64;
+                if n > 1 {
+                    inter += e.output.bytes() * n; // 1 write + (n-1) reads
+                }
+            }
+        }
+        inter += staging_spills(c, idx, g, arch, opts);
+        if g.rd_bridged {
+            // Each RD bridge round-trips the upstream intermediate
+            // through DRAM (partial products out, final values back).
+            for j in &g.joins {
+                if j.class == Some(FusionClass::RD) {
+                    if let Some(up) = j.via.and_then(|via| c.by_id(via)) {
+                        inter += 2 * up.output.bytes();
+                    }
+                }
+            }
+        }
+    }
+    if opts.decode_state_io {
+        inter += state_io(c, g);
+    }
+    inter
+}
+
+/// MARCA-style full-extent staging: walk members in order tracking live
+/// full-extent internal outputs; past the buffer budget (minus resident
+/// weights) the largest live tensor round-trips DRAM.
+fn staging_spills(
+    c: &Cascade,
+    idx: &CascadeIndex,
+    g: &FusionGroup,
+    arch: &ArchSpec,
+    opts: &ExecOptions,
+) -> u64 {
+    if opts.staging != Staging::FullExtent {
+        return 0;
+    }
+    let weights: u64 = g
+        .einsums
+        .iter()
+        .filter_map(|&id| c.by_id(id))
+        .map(weight_bytes)
+        .sum();
+    let budget = arch.buffer_bytes.saturating_sub(weights);
+    let mut inter = 0u64;
+    let mut live: Vec<(u64, usize)> = Vec::new(); // (bytes, last consumer)
+    for &id in &g.einsums {
+        let Some(e) = c.by_id(id) else { continue };
+        live.retain(|(_, last)| *last >= id);
+        if g.internal_tensors.iter().any(|t| t == &e.output.name) {
+            let last = idx.consumers_of(&e.output.name).iter().max().copied().unwrap_or(id);
+            live.push((e.output.bytes(), last));
+        }
+        if live.iter().map(|(b, _)| *b).sum::<u64>() > budget {
+            live.sort_by_key(|(b, _)| std::cmp::Reverse(*b));
+            while live.iter().map(|(b, _)| *b).sum::<u64>() > budget && !live.is_empty() {
+                let (bytes, _) = live.remove(0);
+                inter += 2 * bytes; // write now, read back at the consumer
+            }
+        }
+    }
+    inter
+}
+
+/// Decode-step state I/O: each distinct recurrent/windowed operand's
+/// live window loads at step start and stores at step end.
+fn state_io(c: &Cascade, g: &FusionGroup) -> u64 {
+    let mut inter = 0u64;
+    let mut seen: Vec<&str> = Vec::new();
+    for &id in &g.einsums {
+        let Some(e) = c.by_id(id) else { continue };
+        for op in &e.inputs {
+            if !op.is_recurrent() || seen.contains(&op.tensor.name.as_str()) {
+                continue;
+            }
+            seen.push(&op.tensor.name);
+            for (rank, acc) in op.tensor.ranks.iter().zip(&op.accesses) {
+                if acc.is_recurrent() && rank.is_generational() {
+                    let bytes =
+                        op.tensor.generation_bytes(&rank.name) * acc.lookback() * rank.extent;
+                    inter += 2 * bytes; // load + store
+                }
+            }
+        }
+    }
+    inter
+}

@@ -1,0 +1,57 @@
+//! Golden snapshot of the static verifier's analytic report — every
+//! (scenario cascade × `PlanChoice`) record: group counts, donation
+//! verdicts and the three inter-traffic figures (liveness minimum,
+//! recomputed expectation, `model::evaluate`), plus any findings.
+//!
+//! The text rendering deliberately excludes the source lint (its
+//! output depends on the working tree, not the analytical layer) so
+//! this snapshot only drifts when the cascades, fusion plans, cost
+//! model or verifier semantics change. On the first run (or with
+//! `UPDATE_GOLDEN=1`) the snapshot is (re)blessed; afterwards any
+//! change fails with a diff hint, same as `fusion_golden`.
+
+use std::path::PathBuf;
+
+use mambalaya::verify;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/verify_report.txt")
+}
+
+#[test]
+fn verify_report_is_byte_stable() {
+    let report = verify::verify_cascades();
+    // Teeth while blessing: the shipped tree must verify clean.
+    assert_eq!(report.errors(), 0, "shipped plans must verify clean: {:#?}", report.findings);
+    let rendered = report.render_text();
+    let path = golden_path();
+    let bless = std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden");
+        std::fs::write(&path, &rendered).expect("write golden");
+        eprintln!(
+            "blessed golden snapshot at {} — COMMIT this file; ci.sh re-runs this test \
+             and fails while it is untracked",
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    if rendered != want {
+        // Point at the first diverging line for a usable failure.
+        for (i, (a, b)) in rendered.lines().zip(want.lines()).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "verify report drifted at line {} of {} (rerun with UPDATE_GOLDEN=1 to rebless)",
+                i + 1,
+                path.display()
+            );
+        }
+        panic!(
+            "verify report length drifted: {} vs {} lines (rerun with UPDATE_GOLDEN=1 to rebless)",
+            rendered.lines().count(),
+            want.lines().count()
+        );
+    }
+}

@@ -1,0 +1,370 @@
+//! Property and mutation tests for the static verifier.
+//!
+//! Clean direction: every `PlanChoice` on every cascade verifies with
+//! zero Error findings, every plan is donation-safe, and the recomputed
+//! live-set traffic matches `model::evaluate` within the documented
+//! tolerance. Mutation direction: corrupt a plan in a specific way
+//! (non-convex split, back-edge, reordered execution, phantom join,
+//! escaping internal tensor, use-after-overwrite donation hazard) and
+//! assert the verifier reports exactly the planted kind of Finding.
+//! The source lint is unit-tested on synthetic sources.
+
+use mambalaya::arch::ArchSpec;
+use mambalaya::cascade::{mamba1, mamba2, ModelConfig};
+use mambalaya::einsum::Cascade;
+use mambalaya::fusion::{stitch, FusionPlan, FusionVariant};
+use mambalaya::model::ExecOptions;
+use mambalaya::planner::PlanChoice;
+use mambalaya::runtime::EngineCaps;
+use mambalaya::verify::{self, DataflowGraph, FindingCode, Severity};
+
+fn prefill() -> Cascade {
+    mamba1::build(&ModelConfig::mamba_370m(), 512, 1)
+}
+
+fn decode() -> Cascade {
+    mamba1::build(&ModelConfig::mamba_370m(), 1, 64)
+}
+
+/// The RI+RSb+RSp plan: three groups ([1..8], [9..13], [14..24]) — the
+/// richest structure to mutate.
+fn three_group_plan(c: &Cascade) -> FusionPlan {
+    let plan = stitch(c, FusionVariant::RIRSbRSp);
+    assert_eq!(plan.groups.len(), 3, "mutation tests assume the paper's 3-group plan");
+    plan
+}
+
+fn codes(findings: &[verify::Finding]) -> Vec<FindingCode> {
+    findings.iter().map(|f| f.code).collect()
+}
+
+// ---------------------------------------------------------------- clean
+
+#[test]
+fn all_plans_on_all_cascades_verify_clean() {
+    let report = verify::verify_cascades();
+    let errors: Vec<_> =
+        report.findings.iter().filter(|f| f.severity == Severity::Error).collect();
+    assert!(errors.is_empty(), "shipped plans must verify clean, got: {errors:#?}");
+    // 7 PlanChoices × 4 scenario cascades (mamba1 prefill+decode,
+    // mamba2, transformer).
+    assert_eq!(report.plans.len(), 4 * PlanChoice::COUNT);
+    assert!(
+        report.plans.iter().all(|p| p.donation_safe),
+        "every shipped plan must carry a donation_safe verdict of true"
+    );
+}
+
+#[test]
+fn traffic_audit_matches_model_for_all_mamba1_plans() {
+    let arch = ArchSpec::mambalaya();
+    for (c, decode_state_io) in [(prefill(), false), (decode(), true)] {
+        for point in PlanChoice::all() {
+            let plan = point.plan(&c);
+            let opts = ExecOptions {
+                staging: point.staging(),
+                pipelined: false,
+                decode_state_io,
+            };
+            let audit = verify::audit_plan(&c, &plan, &arch, &opts, "test");
+            assert!(
+                audit.findings.is_empty(),
+                "plan {} diverged: {:#?}",
+                point.name(),
+                audit.findings
+            );
+            assert!(
+                audit.evaluated_inter >= audit.min_inter,
+                "plan {}: evaluate ({}) below the liveness minimum ({})",
+                point.name(),
+                audit.evaluated_inter,
+                audit.min_inter
+            );
+            let drift = (audit.evaluated_inter as f64 - audit.expected_inter as f64).abs()
+                / audit.expected_inter.max(1) as f64;
+            assert!(
+                drift <= verify::TRAFFIC_TOLERANCE,
+                "plan {}: drift {drift} exceeds tolerance",
+                point.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dataflow_graph_separates_generational_edges() {
+    let c = prefill();
+    let g = DataflowGraph::build(&c);
+    // The H[i-1] recurrence is a generational edge, never a
+    // same-generation dependency for its lagged reader...
+    assert!(
+        g.generational.iter().any(|e| e.tensor == "H" && e.from != e.to),
+        "H recurrence should be a generational edge"
+    );
+    // ...while the conv's forward windowed access (TX window includes
+    // offset 0) is a real dependency.
+    assert!(
+        g.deps.iter().any(|e| e.tensor == "TX"),
+        "windowed TX access should be a same-generation dependency"
+    );
+    // Same-generation dependencies always point forward in id order.
+    assert!(g.deps.iter().all(|e| e.from < e.to));
+
+    // Mamba-2's Hs recurrence is a self-loop (read-modify-write).
+    let c2 = mamba2::build(&ModelConfig::mamba_370m(), 512, 1);
+    let g2 = DataflowGraph::build(&c2);
+    assert!(g2.generational.iter().any(|e| e.from == e.to), "Hs self-recurrence");
+}
+
+// ------------------------------------------------------------ mutations
+
+#[test]
+fn mutation_non_convex_split_is_caught() {
+    let c = prefill();
+    let g = DataflowGraph::build(&c);
+    let mut plan = three_group_plan(&c);
+    // Steal one middle member of group 1 into group 0: the path through
+    // the remaining group-1 members now leaves group 0 and re-enters.
+    let stolen = plan.groups[1].einsums[1];
+    plan.groups[1].einsums.retain(|&id| id != stolen);
+    plan.groups[1].joins.retain(|j| j.einsum != stolen);
+    plan.groups[0].einsums.push(stolen);
+    let findings = verify::check_plan(&c, &g, &plan, "mutation");
+    assert!(
+        codes(&findings).contains(&FindingCode::NonConvexGroup),
+        "expected NonConvexGroup, got {findings:#?}"
+    );
+}
+
+#[test]
+fn mutation_back_edge_creates_group_cycle() {
+    let c = prefill();
+    let g = DataflowGraph::build(&c);
+    let mut plan = three_group_plan(&c);
+    // Pull the last einsum of the cascade into the first group: its
+    // inputs come from the last group, whose inputs come from the
+    // first — a condensed-graph cycle.
+    let last = *plan.groups[2].einsums.last().expect("non-empty group");
+    plan.groups[2].einsums.retain(|&id| id != last);
+    plan.groups[2].joins.retain(|j| j.einsum != last);
+    plan.groups[0].einsums.push(last);
+    let findings = verify::check_plan(&c, &g, &plan, "mutation");
+    assert!(
+        codes(&findings).contains(&FindingCode::GroupCycle),
+        "expected GroupCycle, got {findings:#?}"
+    );
+}
+
+#[test]
+fn mutation_reordered_groups_violate_execution_order() {
+    let c = prefill();
+    let g = DataflowGraph::build(&c);
+    let mut plan = three_group_plan(&c);
+    plan.groups.swap(0, 1);
+    let findings = verify::check_plan(&c, &g, &plan, "mutation");
+    assert!(
+        codes(&findings).contains(&FindingCode::ExecOrder),
+        "expected ExecOrder, got {findings:#?}"
+    );
+    // Groups stay individually convex and the condensation stays
+    // acyclic — only the chosen order is unlawful.
+    assert!(!codes(&findings).contains(&FindingCode::NonConvexGroup));
+    assert!(!codes(&findings).contains(&FindingCode::GroupCycle));
+}
+
+#[test]
+fn mutation_phantom_join_is_caught() {
+    let c = prefill();
+    let g = DataflowGraph::build(&c);
+
+    // (a) Claimed link via an einsum outside the group.
+    let mut plan = three_group_plan(&c);
+    plan.groups[0].joins[1].via = Some(*plan.groups[2].einsums.last().expect("member"));
+    let findings = verify::check_plan(&c, &g, &plan, "mutation");
+    assert!(
+        codes(&findings).contains(&FindingCode::PhantomJoin),
+        "expected PhantomJoin (outside via), got {findings:#?}"
+    );
+
+    // (b) Claimed intermediate tensor that does not flow on the link.
+    let mut plan = three_group_plan(&c);
+    let j = plan.groups[0]
+        .joins
+        .iter_mut()
+        .find(|j| j.via.is_some())
+        .expect("a recorded fusion link");
+    j.tensor = Some("NotATensor".to_string());
+    let findings = verify::check_plan(&c, &g, &plan, "mutation");
+    assert!(
+        codes(&findings).contains(&FindingCode::PhantomJoin),
+        "expected PhantomJoin (wrong tensor), got {findings:#?}"
+    );
+}
+
+#[test]
+fn mutation_escaping_internal_tensor_is_caught() {
+    let c = prefill();
+    let g = DataflowGraph::build(&c);
+    let mut plan = three_group_plan(&c);
+    // LEX escapes group 1 (consumed by the SSM region downstream), so
+    // marking it internal is a lie the cost model would act on.
+    plan.groups[1].internal_tensors.push("LEX".to_string());
+    let findings = verify::check_plan(&c, &g, &plan, "mutation");
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.code == FindingCode::InternalTensors && f.severity == Severity::Error),
+        "expected InternalTensors error, got {findings:#?}"
+    );
+}
+
+#[test]
+fn mutation_state_reorder_is_donation_unsafe() {
+    let c = decode();
+    let mut plan = three_group_plan(&c);
+    // Clean plan: safe.
+    assert!(verify::analyze_donation(&c, &plan, "clean").safe);
+    // Swap the H[i-1] reader and the H writer inside the SSM group: the
+    // lagged reader now runs after the in-place update commits.
+    let (reader, writer) = {
+        let grp = &plan.groups[2];
+        let h_writer = c
+            .einsums()
+            .iter()
+            .find(|e| e.output.name == "H")
+            .expect("H producer")
+            .id;
+        let h_reader = c
+            .einsums()
+            .iter()
+            .find(|e| e.id != h_writer && e.operand("H").is_some())
+            .expect("H lagged reader")
+            .id;
+        assert!(grp.einsums.contains(&h_writer) && grp.einsums.contains(&h_reader));
+        (h_reader, h_writer)
+    };
+    let grp = &mut plan.groups[2];
+    let ri = grp.einsums.iter().position(|&id| id == reader).expect("reader pos");
+    let wi = grp.einsums.iter().position(|&id| id == writer).expect("writer pos");
+    grp.einsums.swap(ri, wi);
+    let verdict = verify::analyze_donation(&c, &plan, "mutation");
+    assert!(!verdict.safe, "reordered plan must be donation-unsafe");
+    assert!(
+        codes(&verdict.findings).contains(&FindingCode::DonationUnsafe),
+        "expected DonationUnsafe, got {:#?}",
+        verdict.findings
+    );
+}
+
+#[test]
+fn donation_caps_consistency() {
+    let all_safe = [true; PlanChoice::COUNT];
+    let mut one_unsafe = all_safe;
+    one_unsafe[0] = false;
+
+    // A donation-advertising caps is sound only over safe plans.
+    assert!(EngineCaps::full().donation_sound(&all_safe));
+    assert!(!EngineCaps::full().donation_sound(&one_unsafe));
+    // Masking the unsafe plan out restores soundness.
+    let mut masked = EngineCaps::full();
+    masked.plans[0] = false;
+    assert!(masked.donation_sound(&one_unsafe));
+    // Without donation there is nothing to be unsound about.
+    assert!(EngineCaps::baseline().donation_sound(&one_unsafe));
+}
+
+// ----------------------------------------------------------------- lint
+
+#[test]
+fn lint_flags_wall_clock_outside_allowlist_only() {
+    let src = "use std::time::Instant;\nfn f() -> Instant { Instant::now() }\n";
+    let findings = verify::lint_file("coordinator/admission.rs", src);
+    assert!(findings.iter().any(|f| f.code == FindingCode::LintWallClock));
+    // Allowlisted file: same content, no wall-clock finding.
+    let findings = verify::lint_file("coordinator/metrics.rs", src);
+    assert!(findings.iter().all(|f| f.code != FindingCode::LintWallClock));
+}
+
+#[test]
+fn lint_word_boundary_does_not_match_substrings() {
+    let src = "fn f() { let x = InstantaneousRate::default(); }\n";
+    assert!(verify::lint_file("coordinator/foo.rs", src).is_empty());
+}
+
+#[test]
+fn lint_skips_cfg_test_regions_and_comments() {
+    let src = "\
+fn shipped() {}
+// a comment mentioning Instant and .unwrap() is fine
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+    #[test]
+    fn t() {
+        let _ = Instant::now();
+        let _ = Some(1).unwrap();
+    }
+}
+";
+    assert!(verify::lint_file("coordinator/foo.rs", src).is_empty());
+}
+
+#[test]
+fn lint_flags_bare_unwrap_in_hot_paths_only() {
+    let src = "fn f() { Some(1).unwrap(); }\n";
+    assert!(verify::lint_file("runtime/foo.rs", src)
+        .iter()
+        .any(|f| f.code == FindingCode::LintHotPathUnwrap));
+    assert!(verify::lint_file("coordinator/foo.rs", src)
+        .iter()
+        .any(|f| f.code == FindingCode::LintHotPathUnwrap));
+    // Analytical-layer code is not a hot path.
+    assert!(verify::lint_file("model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn lint_counts_hot_path_expects_as_warn() {
+    let src = "fn f() { a.expect(\"x\"); b.expect(\"y\"); }\n";
+    let findings = verify::lint_file("runtime/foo.rs", src);
+    let warn = findings
+        .iter()
+        .find(|f| f.code == FindingCode::LintHotPathExpect)
+        .expect("expect() warn");
+    assert_eq!(warn.severity, Severity::Warn);
+    assert!(warn.message.starts_with("2 "), "counts both calls: {}", warn.message);
+}
+
+#[test]
+fn lint_flags_deprecated_executor_calls_outside_engine() {
+    let src = "fn f(e: &dyn Executor) { e.step_mixed(&a, &b, &c, &d).ok(); }\n";
+    assert!(verify::lint_file("coordinator/foo.rs", src)
+        .iter()
+        .any(|f| f.code == FindingCode::LintDeprecatedCall));
+    // The wrapper definitions live in runtime/engine.rs — exempt.
+    let findings = verify::lint_file("runtime/engine.rs", src);
+    assert!(findings.iter().all(|f| f.code != FindingCode::LintDeprecatedCall));
+}
+
+#[test]
+fn shipped_tree_lints_clean_of_errors() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let lint = verify::lint_tree(&root);
+    assert!(lint.files_scanned > 50, "walker should see the whole tree");
+    let errors: Vec<_> =
+        lint.findings.iter().filter(|f| f.severity == Severity::Error).collect();
+    assert!(errors.is_empty(), "shipped tree must lint clean: {errors:#?}");
+}
+
+#[test]
+fn baseline_plans_cover_every_cascade() {
+    // The verifier's coverage pass caught `baseline_plan` dropping a
+    // pending SSM group on cascades holding only a prefix of the
+    // region ids (Mamba-2 has einsum 16 but not 21) — pin the fix.
+    let c = mamba2::build(&ModelConfig::mamba_370m(), 512, 1);
+    for point in PlanChoice::all() {
+        let plan = point.plan(&c);
+        plan.validate(&c).unwrap_or_else(|e| {
+            panic!("plan {} must cover mamba2: {e}", point.name());
+        });
+    }
+}
